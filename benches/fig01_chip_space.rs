@@ -1,0 +1,52 @@
+//! Figure 1 — chip capability space: compute / memory / communication per
+//! chip, normalized to the A100, demonstrating that hyper-heterogeneous
+//! chips admit no total order (the red-circle scenario of the paper).
+
+use h2::hetero::{spec, ChipKind};
+use h2::util::table::Table;
+
+fn main() {
+    let a100 = spec(ChipKind::A100);
+    let mut t = Table::new(&["chip", "FP16 (xA100)", "memory (xA100)", "intra-BW (xA100)",
+                             "chips/node"])
+        .with_title("Fig 1 — capability space relative to A100");
+    let mut rel: Vec<(ChipKind, f64, f64, f64)> = Vec::new();
+    for kind in ChipKind::ALL {
+        let s = spec(kind);
+        let bw = s.intra_node.bandwidth_gbps(0, 1) / a100.intra_node.bandwidth_gbps(0, 1);
+        let c = s.fp16_tflops / a100.fp16_tflops;
+        let m = s.memory_gib / a100.memory_gib;
+        rel.push((kind, c, m, bw));
+        t.row(vec![
+            kind.to_string(),
+            format!("{c:.2}"),
+            format!("{m:.2}"),
+            format!("{bw:.2}"),
+            s.chips_per_node.to_string(),
+        ]);
+    }
+    t.print();
+
+    // The hyper-heterogeneity property: chips mostly do NOT dominate each
+    // other across all three axes.
+    let mut dominated_pairs = 0;
+    let mut total_pairs = 0;
+    for i in 0..rel.len() {
+        for j in 0..rel.len() {
+            if i == j {
+                continue;
+            }
+            total_pairs += 1;
+            let (_, c1, m1, b1) = rel[i];
+            let (_, c2, m2, b2) = rel[j];
+            if c1 >= c2 && m1 >= m2 && b1 >= b2 {
+                dominated_pairs += 1;
+            }
+        }
+    }
+    println!("\ncapability-incremental (dominating) pairs: {dominated_pairs}/{total_pairs}");
+    println!("paper claim: hyper-heterogeneous chips follow no capability pattern");
+    assert!(dominated_pairs < total_pairs / 2,
+            "chip space looks capability-incremental, not hyper-heterogeneous");
+    println!("OK: no total order across (compute, memory, bandwidth)");
+}

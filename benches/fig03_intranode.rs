@@ -1,0 +1,42 @@
+//! Figure 3 — intra-node bandwidth performance across the four GPU-server
+//! designs: uniform NVLink-class fabrics vs NUMA-split vs PCIe-switch
+//! hierarchies, and the TP_MAX each implies.
+
+use h2::hetero::{spec, ChipKind};
+use h2::topology::{intra_node_matrix, intra_node_profile};
+use h2::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(&["server", "chips", "min GB/s", "max GB/s", "uniform?", "TP_MAX"])
+        .with_title("Fig 3 — intra-node bandwidth per server design");
+    for kind in ChipKind::ALL {
+        let s = spec(kind);
+        let p = intra_node_profile(&s);
+        t.row(vec![
+            kind.to_string(),
+            s.chips_per_node.to_string(),
+            format!("{:.0}", p.min_gbps),
+            format!("{:.0}", p.max_gbps),
+            if p.uniform { "yes" } else { "no" }.to_string(),
+            p.tp_max.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Pairwise matrix for the most hierarchical server (Chip-C).
+    let c = spec(ChipKind::C);
+    let m = intra_node_matrix(&c);
+    println!("\nChip-C pairwise bandwidth (first 8 slots, GB/s):");
+    for row in m.iter().take(8) {
+        let cells: Vec<String> = row.iter().take(8).map(|b| format!("{b:>4.0}")).collect();
+        println!("  {}", cells.join(" "));
+    }
+    println!("\npaper claim: some servers lack full high-speed intra-node connections,");
+    println!("giving non-uniform bandwidth and bounding usable TP size (Obs #2).");
+
+    let a = intra_node_profile(&spec(ChipKind::A));
+    let cc = intra_node_profile(&c);
+    assert!(a.uniform && !cc.uniform);
+    assert!(cc.tp_max < a.tp_max);
+    println!("OK: A uniform (TP_MAX {}), C hierarchical (TP_MAX {})", a.tp_max, cc.tp_max);
+}

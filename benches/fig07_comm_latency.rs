@@ -1,0 +1,48 @@
+//! Figure 7 — cross-chip P2P latency by communication strategy over the
+//! message-size sweep, plus hot-path timing of the model itself.
+
+use h2::comm::{p2p_latency, CommMode};
+use h2::util::bench::Bench;
+use h2::util::table::{fmt_bytes, fmt_duration, Table};
+
+fn main() {
+    let sizes: Vec<usize> = (0..11).map(|i| 256usize << (2 * i)).collect(); // 256B..256MiB
+    let mut t = Table::new(&["size", "TCP", "CPU-RDMA", "DDR", "TCP/DDR"])
+        .with_title("Fig 7 — cross-chip P2P latency by strategy");
+    let mut ratios = Vec::new();
+    for &bytes in &sizes {
+        let tcp = p2p_latency(CommMode::TcpCpu, bytes);
+        let mid = p2p_latency(CommMode::RdmaCpu, bytes);
+        let ddr = p2p_latency(CommMode::DeviceDirect, bytes);
+        ratios.push(tcp / ddr);
+        t.row(vec![
+            fmt_bytes(bytes as f64),
+            fmt_duration(tcp),
+            fmt_duration(mid),
+            fmt_duration(ddr),
+            format!("{:.2}x", tcp / ddr),
+        ]);
+    }
+    t.print();
+
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = ratios.iter().cloned().fold(0.0f64, f64::max);
+    println!("\nDDR vs TCP: average {avg:.2}x, range {min:.2}x-{max:.2}x");
+    println!("paper:      average 9.94x, range 1.79x-16.0x");
+    assert!((avg - 9.94).abs() < 1.2, "average ratio {avg} drifted from paper");
+    assert!((min - 1.79).abs() < 0.1 && (max - 16.0).abs() < 0.2);
+    println!("OK: Fig 7 shape reproduced");
+
+    // Hot-path timing of the latency model itself (used inside the
+    // simulator's inner loop — must stay trivially cheap).
+    let mut b = Bench::new("fig07 hot path").max_seconds(1.0);
+    b.run("p2p_latency x 1k sizes", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += p2p_latency(CommMode::DeviceDirect, 64 << (i % 20));
+        }
+        std::hint::black_box(acc);
+    });
+    b.report();
+}

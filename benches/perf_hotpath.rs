@@ -1,0 +1,70 @@
+//! §Perf — hot-path micro-benchmarks for the L3 coordinator substrates:
+//! the simulator inner loop, HeteroAuto search, ring allreduce, the fabric
+//! send/recv path and the JSON/manifest parser. Tracked in EXPERIMENTS.md
+//! §Perf (before/after per optimization).
+
+use h2::auto::{search, SearchConfig};
+use h2::comm::collectives::ring_allreduce;
+use h2::comm::fabric;
+use h2::costmodel::{GroupPlan, Strategy, H2_100B};
+use h2::hetero::{experiment, homogeneous_baseline, ChipKind};
+use h2::sim::{simulate_iteration, SimOptions};
+use h2::util::bench::Bench;
+use h2::util::json::Value;
+use h2::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("h2 hot paths").max_seconds(2.5);
+
+    // Simulator: the Fig 11 inner loop (one full 1F1B iteration at scale).
+    let exp = homogeneous_baseline(ChipKind::A);
+    let groups = exp.cluster.groups_by_memory_desc();
+    let strategy = Strategy {
+        s_dp: 4,
+        micro_batches: 128,
+        plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+    };
+    b.run("sim: 16-stage x 128-micro 1F1B", || {
+        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
+        std::hint::black_box(r.iteration_seconds);
+    });
+
+    // HeteroAuto: the coarse (stage-1) search for Exp-A.
+    let expa = experiment("exp-a-1").unwrap();
+    let coarse = SearchConfig { two_stage: false, ..Default::default() };
+    b.run("search: exp-a-1 coarse", || {
+        let r = search(&H2_100B, &expa.cluster, expa.gbs_tokens, &coarse).unwrap();
+        std::hint::black_box(r.candidates_explored);
+    });
+
+    // DiComm collectives: 8-rank allreduce over 1M floats.
+    let mut rng = Rng::new(7);
+    let bufs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..1_000_000).map(|_| rng.f32()).collect())
+        .collect();
+    b.run("allreduce: 8 ranks x 4MB", || {
+        let mut work = bufs.clone();
+        let c = ring_allreduce(&mut work, &|bytes| 1e-6 + bytes as f64 / 25e9);
+        std::hint::black_box(c.seconds);
+    });
+
+    // Fabric: send/recv of a 1MB activation (the pipeline hand-off path).
+    b.run("fabric: 1MB send+recv", || {
+        let mut eps = fabric::fabric(2, Arc::new(|_, _, _| 1e-6));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 0, vec![1.0f32; 262_144]).unwrap();
+        std::hint::black_box(e0.recv(1, 0).unwrap().len());
+    });
+
+    // Manifest/JSON parse (startup path).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+        b.run("json: parse manifest", || {
+            std::hint::black_box(Value::parse(&text).unwrap());
+        });
+    }
+
+    b.report();
+}

@@ -1,0 +1,44 @@
+//! Table 8 — HeteroAuto strategy-search overhead on the Exp-A/B/C
+//! configurations (two-stage search with 128-chip subgroups), timed against
+//! the paper's single-threaded-python budgets.
+
+use h2::auto::{search, SearchConfig};
+use h2::costmodel::H2_100B;
+use h2::hetero::experiment;
+use h2::report::TABLE8_PAPER;
+use h2::util::bench::Bench;
+use h2::util::table::{fmt_duration, Table};
+
+fn main() {
+    let mut t = Table::new(&["experiment", "candidates", "time (ours)", "time (paper)",
+                             "speedup"])
+        .with_title("Table 8 — strategy-search overhead (two-stage, 128-chip groups)");
+    for (exp_name, paper_secs) in TABLE8_PAPER {
+        let exp = experiment(exp_name).unwrap();
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())
+            .expect(exp_name);
+        assert!(r.eval.feasible);
+        t.row(vec![
+            exp_name.to_string(),
+            r.candidates_explored.to_string(),
+            fmt_duration(r.elapsed_seconds),
+            fmt_duration(paper_secs),
+            format!("{:.0}x", paper_secs / r.elapsed_seconds),
+        ]);
+        assert!(r.elapsed_seconds < paper_secs,
+                "{exp_name}: search slower than the paper's budget");
+    }
+    t.print();
+    println!("reference points: Metis needs 600s for 64 chips/2 types; Alpa 240min.");
+
+    // Repeated-timing microbench of the most expensive search (Exp-B).
+    let exp = experiment("exp-b-1").unwrap();
+    let mut b = Bench::new("tab08 search hot path").max_seconds(4.0).min_iters(3);
+    b.run("exp-b-1 two-stage search", || {
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())
+            .unwrap();
+        std::hint::black_box(r.eval.iteration_seconds);
+    });
+    b.report();
+    println!("OK: Table 8 reproduced (all searches within the paper's budget)");
+}

@@ -1,0 +1,42 @@
+//! HeteroAuto walkthrough: search strategies for every Table 7 experiment
+//! and print the chosen plan, iteration estimate, TGS, and search cost —
+//! the `search` subcommand in batch form.
+//!
+//! ```bash
+//! cargo run --release --example auto_search
+//! ```
+
+use anyhow::Result;
+use h2::auto::{search, SearchConfig};
+use h2::costmodel::{tgs, H2_100B};
+use h2::hetero::{experiment, ALL_EXPERIMENTS};
+use h2::util::table::{fmt_duration, Table};
+
+fn main() -> Result<()> {
+    for exp_name in ALL_EXPERIMENTS {
+        let exp = experiment(exp_name)?;
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())?;
+        println!("\n=== {exp_name}: {} chips, GBS {}M tokens ===",
+                 exp.cluster.total_chips(), exp.gbs_tokens >> 20);
+        println!("searched {} candidates in {} (paper budget for this class: seconds)",
+                 r.candidates_explored, fmt_duration(r.elapsed_seconds));
+        let mut t = Table::new(&["group", "chips", "s_pp", "s_tp", "layers/stage",
+                                 "recompute"]);
+        for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
+            t.row(vec![
+                g.spec.kind.to_string(),
+                g.n_chips.to_string(),
+                p.s_pp.to_string(),
+                p.s_tp.to_string(),
+                format!("{}", p.layers_per_stage()),
+                p.recompute.to_string(),
+            ]);
+        }
+        t.print();
+        println!("s_dp {}, {} micro-batches, est. iteration {}, TGS {:.1}",
+                 r.strategy.s_dp, r.strategy.micro_batches,
+                 fmt_duration(r.eval.iteration_seconds),
+                 tgs(&exp.cluster, exp.gbs_tokens, r.eval.iteration_seconds));
+    }
+    Ok(())
+}

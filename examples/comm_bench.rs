@@ -1,0 +1,81 @@
+//! DiComm explorer: latency sweep across strategies, collective costs, and
+//! the NIC-affinity effect — the communication half of the paper in one
+//! binary.
+//!
+//! ```bash
+//! cargo run --release --example comm_bench
+//! ```
+
+use h2::comm::collectives::{ring_allgather, ring_allreduce, tree_broadcast};
+use h2::comm::{cross_node_time, p2p_latency, CommMode};
+use h2::hetero::{spec, ChipKind};
+use h2::sim::{reshard_time, ReshardStrategy};
+use h2::topology::NicAssignment;
+use h2::util::rng::Rng;
+use h2::util::table::{fmt_bytes, fmt_duration, Table};
+
+fn main() {
+    // 1. Strategy sweep (Fig 7 shape).
+    let mut t = Table::new(&["size", "TCP", "CPU-RDMA", "DDR"])
+        .with_title("P2P latency by strategy");
+    for shift in [10usize, 14, 18, 22, 26] {
+        let bytes = 1usize << shift;
+        t.row(vec![
+            fmt_bytes(bytes as f64),
+            fmt_duration(p2p_latency(CommMode::TcpCpu, bytes)),
+            fmt_duration(p2p_latency(CommMode::RdmaCpu, bytes)),
+            fmt_duration(p2p_latency(CommMode::DeviceDirect, bytes)),
+        ]);
+    }
+    t.print();
+
+    // 2. Real collectives with modeled wire time.
+    let mut rng = Rng::new(3);
+    let mut bufs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..65536).map(|_| rng.f32()).collect())
+        .collect();
+    let hop = |bytes: usize| 3e-6 + bytes as f64 / 20e9;
+    let ar = ring_allreduce(&mut bufs, &hop);
+    let (_, ag) = ring_allgather(&bufs, &hop);
+    let bc = tree_broadcast(&mut bufs, 0, &hop);
+    println!("\ncollectives over 8 ranks x 256KB:");
+    println!("  ring allreduce : {}  ({} on wire)", fmt_duration(ar.seconds),
+             fmt_bytes(ar.wire_bytes as f64));
+    println!("  ring allgather : {}  ({} on wire)", fmt_duration(ag.seconds),
+             fmt_bytes(ag.wire_bytes as f64));
+    println!("  tree broadcast : {}  ({} on wire)", fmt_duration(bc.seconds),
+             fmt_bytes(bc.wire_bytes as f64));
+
+    // 3. Cross-node per-pair times + affinity effect (Table 3 flavour).
+    let mut t = Table::new(&["pair", "affinity", "non-affinity"])
+        .with_title("\n64MiB cross-node transfer (DDR)");
+    for (a, b) in [(ChipKind::A, ChipKind::B), (ChipKind::B, ChipKind::D),
+                   (ChipKind::A, ChipKind::C)] {
+        let sa = spec(a);
+        let sb = spec(b);
+        t.row(vec![
+            format!("{a} -> {b}"),
+            fmt_duration(cross_node_time(CommMode::DeviceDirect, 64 << 20, &sa, &sb,
+                                         NicAssignment::Affinity)),
+            fmt_duration(cross_node_time(CommMode::DeviceDirect, 64 << 20, &sa, &sb,
+                                         NicAssignment::NonAffinity)),
+        ]);
+    }
+    t.print();
+
+    // 4. Resharding strategies at a hetero stage boundary (Fig 10 / §5).
+    let a = spec(ChipKind::A);
+    let b = spec(ChipKind::B);
+    let act = 4096 * 8192 * 2; // one 100B-model activation, bf16
+    let mut t = Table::new(&["strategy", "time"])
+        .with_title("\nactivation resharding A(tp4) -> B(tp2), 64MiB activation");
+    for s in [ReshardStrategy::NaiveP2p, ReshardStrategy::Broadcast,
+              ReshardStrategy::SendRecvAllGather] {
+        t.row(vec![
+            s.name().to_string(),
+            fmt_duration(reshard_time(s, CommMode::DeviceDirect, act, &a, 4, &b, 2,
+                                      NicAssignment::Affinity)),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the fused `train_step` artifact and train the tiny
+//! model on the synthetic corpus for a handful of steps — the smallest
+//! possible tour of the AOT → PJRT → rust loop.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use h2::coordinator::data::Corpus;
+use h2::coordinator::params::{init_params, zeros_like};
+use h2::runtime::{HostTensor, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = rt.manifest.model("h2_tiny")?.clone();
+    println!("model h2_tiny: {} layers, {} params",
+             model.n_layers, model.param_count);
+
+    let step_exe = rt.load("h2_tiny", "train_step")?;
+    let meta = step_exe.meta.clone();
+    let n_p = meta.params.len();
+    let (batch, seq) = (meta.micro_batch.unwrap(), meta.seq.unwrap());
+
+    let mut params = init_params(&meta.params, 42);
+    let mut m = zeros_like(&meta.params);
+    let mut v = zeros_like(&meta.params);
+    let corpus = Corpus::new(model.vocab, 7);
+
+    println!("training {} steps (batch {batch} x seq {seq})...", 30);
+    for step in 0..30u32 {
+        let (inp, tgt) = corpus.microbatch(step as usize, 0, 0, batch, seq);
+        let mut inputs = Vec::with_capacity(3 * n_p + 4);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::i32(&[batch, seq], inp));
+        inputs.push(HostTensor::i32(&[batch, seq], tgt));
+        inputs.push(HostTensor::scalar_f32((step + 1) as f32));
+        inputs.push(HostTensor::scalar_f32(3e-3));
+        let out = step_exe.run(&inputs)?;
+        let loss = out[0].as_f32()?[0];
+        if step % 5 == 0 || step == 29 {
+            println!("  step {step:>3}  loss {loss:.4}");
+        }
+        params = out[1..1 + n_p].to_vec();
+        m = out[1 + n_p..1 + 2 * n_p].to_vec();
+        v = out[1 + 2 * n_p..1 + 3 * n_p].to_vec();
+    }
+    println!("done — python was never on this path.");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! End-to-end validation (DESIGN.md §5): train the ~107M-parameter
+//! `h2_100m` transformer with the full H2 stack — HeteroAuto-style stage
+//! placement (big-memory Chip-A first, Chip-B later, non-uniform 10/6 layer
+//! split), real 1F1B pipeline over PJRT stage executables, DP gradient
+//! allreduce over DiComm — and log the loss curve.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_e2e -- [--steps 200] [--dp 1]
+//!     [--micros 2] [--uniform] [--csv loss.csv]
+//! ```
+//!
+//! The recorded 300-step run lives in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use h2::coordinator::{train, StagePlan, TrainConfig};
+use h2::hetero::ChipKind;
+use h2::runtime::Runtime;
+use h2::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 200)?;
+    let dp = args.usize_or("dp", 1)?;
+    let micros = args.usize_or("micros", 2)?;
+
+    // HeteroPP placement: Chip-A (96 GB) takes the deeper early stage with
+    // MORE layers (10/6 split, Observations #3+#4); `--uniform` falls back
+    // to the homogeneous-style 8/8 split for comparison.
+    let stages = if args.has("uniform") {
+        vec![
+            StagePlan { prefix: "first_l8".into(), chip: ChipKind::A },
+            StagePlan { prefix: "last_l8".into(), chip: ChipKind::B },
+        ]
+    } else {
+        vec![
+            StagePlan { prefix: "first_l10".into(), chip: ChipKind::A },
+            StagePlan { prefix: "last_l6".into(), chip: ChipKind::B },
+        ]
+    };
+
+    let mut cfg = TrainConfig::quick("h2_100m", stages, dp, micros, steps);
+    cfg.lr = args.f64_or("lr", 2e-3)? as f32;
+    cfg.log_every = args.usize_or("log-every", 5)?;
+    let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+    let entry = rt.manifest.model("h2_100m")?;
+    println!("[e2e] h2_100m: {:.1}M params, {} layers, split {}",
+             entry.param_count as f64 / 1e6, entry.n_layers,
+             if args.has("uniform") { "8/8 uniform" } else { "10/6 HeteroPP" });
+    println!("[e2e] pipeline: {} stages x dp {} x {} micros, {} steps",
+             cfg.stages.len(), dp, micros, steps);
+
+    let report = train(&rt, &cfg)?;
+
+    println!("[e2e] wall {:.1}s  ({:.2}s/step, {:.0} tokens/s real)",
+             report.wall_seconds, report.wall_seconds / steps as f64,
+             report.tokens_per_second);
+    println!("[e2e] modeled comm per step: {:.4}s",
+             report.virtual_comm_seconds / steps as f64);
+    println!("[e2e] loss: {:.4} -> {:.4}",
+             report.losses.first().unwrap(), report.losses.last().unwrap());
+
+    if let Some(path) = args.get("csv") {
+        let mut csv = String::from("step,loss\n");
+        for (i, l) in report.losses.iter().enumerate() {
+            csv.push_str(&format!("{i},{l:.6}\n"));
+        }
+        std::fs::write(path, csv)?;
+        println!("[e2e] loss curve written to {path}");
+    }
+
+    // The run is only a success if the model actually learned. Short runs
+    // validate composition with a modest threshold (at 512 tokens/step the
+    // early-phase LM descent is ~0.003 nats/step at lr 4e-4); the recorded
+    // EXPERIMENTS.md §E2E runs show the longer trajectories.
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    let expected_drop = (0.002 * steps as f64).min(1.0);
+    anyhow::ensure!(last < first - expected_drop,
+                    "loss did not fall enough: {first:.3} -> {last:.3}");
+    println!("[e2e] OK — all three layers compose (Pallas kernels -> JAX stages -> rust 1F1B)");
+    Ok(())
+}

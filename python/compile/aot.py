@@ -1,0 +1,220 @@
+"""AOT export: lower every stage entry point to HLO text + manifest.json.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; python never runs again after this — the rust
+coordinator is self-contained over ``artifacts/``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, optim
+from .configs import CONFIGS, ModelConfig
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _meta(specs):
+    return [
+        {"shape": list(s.shape), "dtype": DTYPE_NAMES[jnp.dtype(s.dtype)]}
+        for s in specs
+    ]
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        # Merge with an existing manifest so profiles can be exported
+        # incrementally (`--profiles fig12` keeps earlier entries).
+        path = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                self.manifest = json.load(f)
+        else:
+            self.manifest = {"models": {}}
+
+    def model_entry(self, cfg: ModelConfig):
+        entry = self.manifest["models"].setdefault(
+            cfg.name,
+            {
+                "config": {
+                    "n_layers": cfg.n_layers,
+                    "hidden": cfg.hidden,
+                    "n_heads": cfg.n_heads,
+                    "n_kv_heads": cfg.n_kv_heads,
+                    "intermediate": cfg.intermediate,
+                    "vocab": cfg.vocab,
+                    "seq_len": cfg.seq_len,
+                    "param_count": cfg.param_count(),
+                },
+                "artifacts": {},
+            },
+        )
+        return entry
+
+    def export(self, cfg, name, fn, in_specs, extra=None):
+        """Trace/lower ``fn`` at ``in_specs``, dump HLO text + manifest row."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        rel = f"{cfg.name}/{name}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        row = {
+            "file": rel,
+            "inputs": _meta(in_specs),
+            "outputs": _meta(list(out_specs)),
+        }
+        if extra:
+            row.update(extra)
+        self.model_entry(cfg)["artifacts"][name] = row
+        print(f"  exported {cfg.name}/{name}: "
+              f"{len(in_specs)} in / {len(out_specs)} out, {len(text)} chars")
+        return row
+
+    def export_stage(self, cfg, role, n_layers, micro_batch, seq):
+        """Export the full artifact set for one pipeline-stage variant."""
+        layout = model.param_layout(cfg, role, n_layers)
+        p_specs = [_spec(shape) for _, shape in layout]
+        n_params = len(p_specs)
+        x_spec = (
+            _spec((micro_batch, seq), jnp.int32)
+            if role in ("first", "full")
+            else _spec((micro_batch, seq, cfg.hidden))
+        )
+        h_spec = _spec((micro_batch, seq, cfg.hidden))
+        t_spec = _spec((micro_batch, seq), jnp.int32)
+        scalar = _spec((), jnp.float32)
+        tag = f"{role}_l{n_layers}"
+        stage_extra = {
+            "role": role,
+            "n_layers": n_layers,
+            "micro_batch": micro_batch,
+            "seq": seq,
+            "params": [{"name": n, "shape": list(s)} for n, s in layout],
+        }
+
+        if role != "last":
+            fwd = model.make_fwd(cfg, role, n_layers)
+            self.export(cfg, f"{tag}_fwd",
+                        lambda *a: fwd(a[:n_params], a[n_params]),
+                        p_specs + [x_spec], extra=stage_extra)
+            bwd = model.make_bwd(cfg, role, n_layers)
+            self.export(cfg, f"{tag}_bwd",
+                        lambda *a: bwd(a[:n_params], a[n_params], a[n_params + 1]),
+                        p_specs + [x_spec, h_spec], extra=stage_extra)
+        else:
+            fwdbwd = model.make_last_fwdbwd(cfg, n_layers)
+            self.export(cfg, f"{tag}_fwdbwd",
+                        lambda *a: fwdbwd(a[:n_params], a[n_params], a[n_params + 1]),
+                        p_specs + [x_spec, t_spec], extra=stage_extra)
+            loss = model.make_loss(cfg, role, n_layers)
+            self.export(cfg, f"{tag}_loss",
+                        lambda *a: loss(a[:n_params], a[n_params], a[n_params + 1]),
+                        p_specs + [x_spec, t_spec], extra=stage_extra)
+
+        update = optim.make_update(n_params)
+        self.export(
+            cfg, f"{tag}_update",
+            lambda *a: update(a[:n_params], a[n_params:2 * n_params],
+                              a[2 * n_params:3 * n_params],
+                              a[3 * n_params:4 * n_params],
+                              a[4 * n_params], a[4 * n_params + 1],
+                              a[4 * n_params + 2]),
+            p_specs * 4 + [scalar, scalar, scalar], extra=stage_extra)
+        sqnorm = optim.make_sqnorm(n_params)
+        self.export(cfg, f"{tag}_sqnorm", lambda *a: sqnorm(a),
+                    p_specs, extra=stage_extra)
+
+    def export_full(self, cfg, batch, seq):
+        """Fused single-host train/eval step (quickstart path)."""
+        n_layers = cfg.n_layers
+        layout = model.param_layout(cfg, "full", n_layers)
+        p_specs = [_spec(shape) for _, shape in layout]
+        n = len(p_specs)
+        tok = _spec((batch, seq), jnp.int32)
+        scalar = _spec((), jnp.float32)
+        extra = {
+            "role": "full",
+            "n_layers": n_layers,
+            "micro_batch": batch,
+            "seq": seq,
+            "params": [{"name": nm, "shape": list(s)} for nm, s in layout],
+        }
+        step_fn = model.make_train_step(cfg, n_layers)
+        self.export(
+            cfg, "train_step",
+            lambda *a: step_fn(a[:n], a[n:2 * n], a[2 * n:3 * n],
+                               a[3 * n], a[3 * n + 1], a[3 * n + 2], a[3 * n + 3]),
+            p_specs * 3 + [tok, tok, scalar, scalar], extra=extra)
+        loss = model.make_loss(cfg, "full", n_layers)
+        self.export(cfg, "eval_loss",
+                    lambda *a: loss(a[:n], a[n], a[n + 1]),
+                    p_specs + [tok, tok], extra=extra)
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path}")
+
+
+def export_all(out_dir, profiles=("tiny", "fig12", "e2e100m")):
+    ex = Exporter(out_dir)
+    if "tiny" in profiles:
+        cfg = CONFIGS["h2_tiny"]
+        ex.export_full(cfg, batch=2, seq=cfg.seq_len)
+        # PP=2 split and PP=3 split (exercises the `mid` role).
+        ex.export_stage(cfg, "first", 2, 2, cfg.seq_len)
+        ex.export_stage(cfg, "last", 2, 2, cfg.seq_len)
+        ex.export_stage(cfg, "first", 1, 2, cfg.seq_len)
+        ex.export_stage(cfg, "mid", 2, 2, cfg.seq_len)
+        ex.export_stage(cfg, "last", 1, 2, cfg.seq_len)
+    if "fig12" in profiles:
+        cfg = CONFIGS["h2_fig12"]
+        ex.export_stage(cfg, "first", 4, 1, cfg.seq_len)
+        ex.export_stage(cfg, "last", 4, 1, cfg.seq_len)
+    if "e2e100m" in profiles:
+        cfg = CONFIGS["h2_100m"]
+        # Uniform PP=2 split and the HeteroPP non-uniform split (10/6):
+        # more layers on the large-memory early stage (Observation #4).
+        ex.export_stage(cfg, "first", 8, 1, cfg.seq_len)
+        ex.export_stage(cfg, "last", 8, 1, cfg.seq_len)
+        ex.export_stage(cfg, "first", 10, 1, cfg.seq_len)
+        ex.export_stage(cfg, "last", 6, 1, cfg.seq_len)
+    ex.write_manifest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,fig12,e2e100m")
+    args = ap.parse_args()
+    export_all(args.out, tuple(args.profiles.split(",")))
+
+
+if __name__ == "__main__":
+    main()

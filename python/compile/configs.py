@@ -1,0 +1,110 @@
+"""Model configurations for the H2 reproduction.
+
+``h2_100b`` is the exact Table 4 architecture from the paper; it is consumed
+by the cost model / simulator only (never instantiated on CPU). The smaller
+configs are real, runnable shapes used by the AOT export path:
+
+* ``h2_100m`` — the end-to-end training example (~107M params).
+* ``h2_fig12`` — the paper's Figure 12 small-scale 8-decoder-layer model.
+* ``h2_tiny`` — quickstart / unit-test scale.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    hidden: int
+    n_heads: int
+    n_kv_heads: int       # Group Query Attention (Table 4: 8 queries/head)
+    intermediate: int     # SwiGLU FFN width
+    vocab: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameter count (embedding untied from the LM head)."""
+        h, kd, i = self.hidden, self.kv_dim, self.intermediate
+        per_layer = (
+            h * h + 2 * h * kd + h * h      # Wq, Wk, Wv, Wo
+            + 3 * h * i                      # W_gate, W_up, W_down
+            + 2 * h                          # two RMSNorm gains
+        )
+        return self.vocab * h * 2 + self.n_layers * per_layer + h
+
+    def flops_per_token(self) -> int:
+        """Approximate forward FLOPs per token (2*params + attention)."""
+        return 2 * self.param_count() + 4 * self.n_layers * self.seq_len * self.hidden
+
+
+# Table 4 of the paper: the 100B-parameter production model.
+H2_100B = ModelConfig(
+    name="h2_100b",
+    n_layers=96,
+    hidden=8192,
+    n_heads=64,
+    n_kv_heads=8,          # "# Queries per Head: 8" => 64/8 = 8 KV heads
+    intermediate=36864,
+    vocab=92544,
+    seq_len=4096,
+)
+
+# The 20B model used for the Figure 5 / Table 1 precision-alignment study.
+H2_20B = ModelConfig(
+    name="h2_20b",
+    n_layers=60,
+    hidden=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    intermediate=13824,
+    vocab=92544,
+    seq_len=4096,
+)
+
+# Real runnable model for the end-to-end training example (~107M params).
+H2_100M = ModelConfig(
+    name="h2_100m",
+    n_layers=16,
+    hidden=768,
+    n_heads=12,
+    n_kv_heads=4,
+    intermediate=2048,
+    vocab=8192,
+    seq_len=256,
+)
+
+# Figure 12: "small-scale 8-decoder-layer model".
+H2_FIG12 = ModelConfig(
+    name="h2_fig12",
+    n_layers=8,
+    hidden=512,
+    n_heads=8,
+    n_kv_heads=4,
+    intermediate=1408,
+    vocab=4096,
+    seq_len=256,
+)
+
+# Quickstart / unit-test scale.
+H2_TINY = ModelConfig(
+    name="h2_tiny",
+    n_layers=4,
+    hidden=256,
+    n_heads=4,
+    n_kv_heads=2,
+    intermediate=704,
+    vocab=1024,
+    seq_len=128,
+)
+
+CONFIGS = {c.name: c for c in [H2_100B, H2_20B, H2_100M, H2_FIG12, H2_TINY]}

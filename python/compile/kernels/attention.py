@@ -1,0 +1,303 @@
+"""Pallas flash attention with Grouped-Query Attention (L1 hot-spot kernel).
+
+TPU adaptation of the paper's GPU attention path (DESIGN.md
+§Hardware-Adaptation): instead of a threadblock-per-tile CUDA decomposition,
+the HBM→VMEM schedule is expressed with ``BlockSpec``s —
+
+* the grid iterates over ``(batch × query-heads, query blocks)``;
+* each program streams one ``(block_q, head_dim)`` query tile into VMEM and
+  loops over ``(block_k, head_dim)`` key/value tiles with the online-softmax
+  (running max / running sum) recurrence, so the ``S×S`` score matrix never
+  materializes;
+* block shapes default to 128 to match the MXU systolic-array tile;
+* for causal masking the K-loop is truncated at the query block's diagonal
+  (structural skip, not just a mask), halving the visited tiles.
+
+The backward pass is two more Pallas kernels (dQ; fused dK/dV) using the
+standard flash-attention recurrence with the saved logsumexp. Everything is
+validated against ``ref.gqa_attention`` and ``jax.vjp`` of the reference in
+``python/tests/test_kernels.py``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the exported artifact
+runs on the rust runtime. Real-TPU perf is estimated structurally in
+DESIGN.md §Perf (VMEM footprint / MXU utilization per block shape).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _pick_block(size, default):
+    return min(default, size)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_k, causal):
+    """One (batch·head, q-block) program of the forward pass."""
+    qi = pl.program_id(1)
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    s = k_ref.shape[1]
+    q = q_ref[0, :, :]
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, d), jnp.float32)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    if causal:
+        # Structural skip: only K tiles at or below the diagonal are visited.
+        n_kb = ((qi + 1) * bq + block_k - 1) // block_k
+    else:
+        n_kb = s // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :]
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :]
+        logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+            logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m, l, acc))
+    o_ref[0, :, :] = acc / l[:, None]
+    lse_ref[0, :] = m + jnp.log(l)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               *, scale, block_k, causal):
+    """dQ for one (batch·head, q-block) program."""
+    qi = pl.program_id(1)
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    s = k_ref.shape[1]
+    q = q_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :]
+    delta = delta_ref[0, :]
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    n_kb = ((qi + 1) * bq + block_k - 1) // block_k if causal else s // block_k
+
+    def body(kb, dq):
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :]
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :]
+        logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+            logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+        p = jnp.exp(logits - lse[:, None])
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, n_kb, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[0, :, :] = dq
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+                *, scale, block_q, causal, group):
+    """Fused dK/dV for one (batch·kv-head, k-block) program.
+
+    The kv head serves ``group`` query heads; their contributions are
+    accumulated in VMEM before a single write-back.
+    """
+    ki = pl.program_id(1)
+    bk, d = k_ref.shape[1], k_ref.shape[2]
+    s = q_ref.shape[2]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+
+    dk = jnp.zeros((bk, d), jnp.float32)
+    dv = jnp.zeros((bk, d), jnp.float32)
+    n_qb = s // block_q
+    first_qb = (ki * bk) // block_q if causal else 0
+
+    for g in range(group):  # static unroll over the query-head group
+        def body(qb, carry):
+            dk, dv = carry
+            q = q_ref[0, g, pl.ds(qb * block_q, block_q), :]
+            do = do_ref[0, g, pl.ds(qb * block_q, block_q), :]
+            lse = lse_ref[0, g, pl.ds(qb * block_q, block_q)]
+            delta = delta_ref[0, g, pl.ds(qb * block_q, block_q)]
+            logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+            if causal:
+                q_pos = qb * block_q + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, 1), 0)
+                logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+            p = jnp.exp(logits - lse[:, None])
+            dv = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+            dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[:, None]) * scale
+            dk = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+            return dk, dv
+
+        dk, dv = jax.lax.fori_loop(first_qb, n_qb, body, (dk, dv))
+
+    dk_ref[0, :, :] = dk
+    dv_ref[0, :, :] = dv
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k):
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / float(d) ** 0.5
+
+    # [B, S, H, D] -> [B*H, S, D] so the grid can address (batch·head) rows.
+    q2 = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * hq, s, d)
+    k2 = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * hkv, s, d)
+    v2 = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * hkv, s, d)
+
+    def kv_index(i, j):
+        del j
+        return (i // hq) * hkv + (i % hq) // group
+
+    grid = (b * hq, s // block_q)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, block_k=block_k, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (kv_index(i, j), 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (kv_index(i, j), 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * hq, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q2, k2, v2)
+
+    o = out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    return o, (q2, k2, v2, out, lse)
+
+
+def _flash_bwd(causal, block_q, block_k, shapes, res, do):
+    b, s, hq, d, hkv = shapes
+    group = hq // hkv
+    scale = 1.0 / float(d) ** 0.5
+    q2, k2, v2, o2, lse = res
+
+    do2 = jnp.transpose(do, (0, 2, 1, 3)).reshape(b * hq, s, d)
+    delta = jnp.sum(do2 * o2, axis=-1)  # [B*Hq, S]
+
+    def kv_index(i, j):
+        del j
+        return (i // hq) * hkv + (i % hq) // group
+
+    dq2 = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_k=block_k, causal=causal),
+        grid=(b * hq, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (kv_index(i, j), 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (kv_index(i, j), 0, 0)),
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), jnp.float32),
+        interpret=True,
+    )(q2, k2, v2, do2, lse, delta)
+
+    # Group-major views so each kv-head program sees its query-head group.
+    qg = q2.reshape(b, hkv, group, s, d).reshape(b * hkv, group, s, d)
+    dog = do2.reshape(b, hkv, group, s, d).reshape(b * hkv, group, s, d)
+    lseg = lse.reshape(b, hkv, group, s).reshape(b * hkv, group, s)
+    deltag = delta.reshape(b, hkv, group, s).reshape(b * hkv, group, s)
+
+    dk2, dv2 = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=block_q,
+                          causal=causal, group=group),
+        grid=(b * hkv, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, group, s, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, group, s, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, group, s), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, group, s), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, s, d), jnp.float32),
+        ],
+        interpret=True,
+    )(qg, k2, v2, dog, lseg, deltag)
+
+    dq = dq2.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    dk = dk2.reshape(b, hkv, s, d).transpose(0, 2, 1, 3)
+    dv = dv2.reshape(b, hkv, s, d).transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention(b, s, hq, hkv, d, causal, block_q, block_k):
+    shapes = (b, s, hq, d, hkv)
+
+    @jax.custom_vjp
+    def att(q, k, v):
+        return _flash_fwd(q, k, v, causal, block_q, block_k)[0]
+
+    def fwd(q, k, v):
+        o, res = _flash_fwd(q, k, v, causal, block_q, block_k)
+        return o, res
+
+    def bwd(res, do):
+        return _flash_bwd(causal, block_q, block_k, shapes, res, do)
+
+    att.defvjp(fwd, bwd)
+    return att
+
+
+def flash_attention(q, k, v, causal=True, block_q=None, block_k=None):
+    """GQA flash attention. q: [B,S,Hq,D]; k,v: [B,S,Hkv,D]; Hq % Hkv == 0."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    assert hq % hkv == 0, "query heads must be a multiple of kv heads"
+    bq = _pick_block(s, block_q or DEFAULT_BLOCK_Q)
+    bk = _pick_block(s, block_k or DEFAULT_BLOCK_K)
+    assert s % bq == 0 and s % bk == 0, "seq len must divide block sizes"
+    att = _make_attention(b, s, hq, hkv, d, causal, bq, bk)
+    return att(q, k, v)
+
+
+def vmem_bytes_estimate(s, d, group, block_q, block_k, dtype_bytes=4):
+    """Structural VMEM footprint of one forward program (DESIGN.md §Perf)."""
+    q_tile = block_q * d
+    kv_stream = 2 * block_k * d            # double-buffered K and V tiles
+    acc = block_q * d + 2 * block_q        # accumulator + m/l vectors
+    scores = block_q * block_k
+    return (q_tile + 2 * kv_stream + acc + scores) * dtype_bytes
+
+
+def mxu_utilization_estimate(block_q, block_k, d, mxu=128):
+    """Fraction of MXU lanes filled by the kernel's matmul tiles."""
+    fill = lambda n: min(n, mxu) / mxu
+    # Two matmuls per tile: (bq×d)@(d×bk) and (bq×bk)@(bk×d).
+    u1 = fill(block_q) * fill(block_k) * fill(d)
+    u2 = fill(block_q) * fill(d) * fill(block_k)
+    return 0.5 * (u1 + u2)

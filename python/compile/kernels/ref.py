@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package is validated against these functions by
+``python/tests/test_kernels.py`` (exact-math references; tolerances are fp32).
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, gain, eps=1e-5):
+    """RMSNorm over the last axis: x * gain / rms(x)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * gain
+
+
+def rope_angles(seq_len, head_dim, base=10000.0):
+    """Rotary embedding cos/sin tables of shape [seq_len, head_dim//2]."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin):
+    """Apply rotary position embedding.
+
+    x: [batch, seq, heads, head_dim]; cos/sin: [seq, head_dim//2].
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def gqa_attention(q, k, v, causal=True, scale=None):
+    """Grouped-query attention, exact softmax reference.
+
+    q: [B, S, Hq, D]; k, v: [B, S, Hkv, D] with Hq % Hkv == 0.
+    Returns [B, S, Hq, D].
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    # Broadcast KV heads across their query group.
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: (silu(x @ Wg) * (x @ Wu)) @ Wd."""
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * (1.0 / (1.0 + jnp.exp(-g)))  # silu
+    return (act * u) @ w_down
+
+
+def softmax_cross_entropy(logits, targets):
+    """Mean token-level cross entropy. logits: [N, V]; targets: [N] int."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,81 @@
+"""Fused SwiGLU feed-forward Pallas kernel.
+
+One program per ``block_m`` rows computes
+
+    h = silu(x @ Wg) * (x @ Wu);  out = h @ Wd
+
+without materializing ``h`` in HBM — the intermediate lives in VMEM for the
+lifetime of the tile, which is the TPU re-expression of the paper's fused
+GPU MLP (DESIGN.md §Hardware-Adaptation). For large ``intermediate`` the
+weights themselves exceed a 16 MiB VMEM budget and a second grid axis over
+``intermediate`` tiles would be required on silicon; the structural estimate
+lives in DESIGN.md §Perf.
+
+Backward uses ``jax.vjp`` of the exact reference (recompute-based — the same
+trade the paper's activation-recomputation path makes), so gradients are
+mathematically exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_M = 128
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    o_ref[...] = jnp.dot(h, wd_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_swiglu(rows, dim, inter, block_m):
+    @jax.custom_vjp
+    def ffn(x, wg, wu, wd):
+        return pl.pallas_call(
+            _ffn_kernel,
+            grid=(rows // block_m,),
+            in_specs=[
+                pl.BlockSpec((block_m, dim), lambda i: (i, 0)),
+                pl.BlockSpec((dim, inter), lambda i: (0, 0)),
+                pl.BlockSpec((dim, inter), lambda i: (0, 0)),
+                pl.BlockSpec((inter, dim), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, dim), jnp.float32),
+            interpret=True,
+        )(x, wg, wu, wd)
+
+    def fwd(x, wg, wu, wd):
+        return ffn(x, wg, wu, wd), (x, wg, wu, wd)
+
+    def bwd(res, dy):
+        x, wg, wu, wd = res
+        _, vjp = jax.vjp(ref.swiglu, x, wg, wu, wd)
+        return vjp(dy)
+
+    ffn.defvjp(fwd, bwd)
+    return ffn
+
+
+def swiglu(x, w_gate, w_up, w_down, block_m=None):
+    """Fused SwiGLU FFN. x: [..., dim]; returns same shape."""
+    shape = x.shape
+    dim = shape[-1]
+    inter = w_gate.shape[1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    bm = min(block_m or DEFAULT_BLOCK_M, rows)
+    while rows % bm != 0:
+        bm //= 2
+    x2 = x.reshape(rows, dim)
+    out = _make_swiglu(rows, dim, inter, bm)(x2, w_gate, w_up, w_down)
+    return out.reshape(shape)

@@ -1,0 +1,203 @@
+"""L2: the H2 transformer (LLaMA-style, GQA) as pipeline-stage functions.
+
+The model is expressed the way the rust coordinator consumes it: as *stage*
+functions over flat parameter lists. A pipeline stage has a role:
+
+* ``first`` — token embedding + ``n_layers`` decoder layers,
+* ``mid``   — ``n_layers`` decoder layers,
+* ``last``  — ``n_layers`` decoder layers + final RMSNorm + LM head + loss.
+
+Each role exports (via :mod:`compile.aot`):
+
+* ``fwd(params, x) -> y``          (first takes int32 tokens),
+* ``bwd(params, x, dy) -> (dx, grads)``  — recompute-based VJP, which is
+  exactly the paper's activation-recomputation trade (Observation #4);
+  ``first`` omits ``dx``; ``last`` fuses fwd+bwd and returns
+  ``(loss, dx, grads)``,
+* ``update`` / ``sqnorm`` — Adam step and gradient square-norm
+  (:mod:`compile.optim`).
+
+All hot-spot compute calls the L1 Pallas kernels, so the exported HLO
+contains the kernel lowering (interpret mode) and the rust runtime executes
+the same code path the kernels were validated on.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+from .kernels.swiglu import swiglu as pallas_swiglu
+
+# Per-decoder-layer parameter template: (name, shape-fn). Order is the ABI
+# the rust coordinator relies on (recorded in the manifest).
+LAYER_PARAMS = [
+    ("attn_norm", lambda c: (c.hidden,)),
+    ("wq", lambda c: (c.hidden, c.hidden)),
+    ("wk", lambda c: (c.hidden, c.kv_dim)),
+    ("wv", lambda c: (c.hidden, c.kv_dim)),
+    ("wo", lambda c: (c.hidden, c.hidden)),
+    ("mlp_norm", lambda c: (c.hidden,)),
+    ("w_gate", lambda c: (c.hidden, c.intermediate)),
+    ("w_up", lambda c: (c.hidden, c.intermediate)),
+    ("w_down", lambda c: (c.intermediate, c.hidden)),
+]
+N_LAYER_PARAMS = len(LAYER_PARAMS)
+
+ROLES = ("first", "mid", "last", "full")
+
+
+def param_layout(cfg: ModelConfig, role: str, n_layers: int):
+    """Flat (name, shape) list for one stage's parameters — the wire ABI."""
+    out = []
+    if role in ("first", "full"):
+        out.append(("embed", (cfg.vocab, cfg.hidden)))
+    for i in range(n_layers):
+        for name, shape_fn in LAYER_PARAMS:
+            out.append((f"layer{i}.{name}", shape_fn(cfg)))
+    if role in ("last", "full"):
+        out.append(("final_norm", (cfg.hidden,)))
+        out.append(("head", (cfg.hidden, cfg.vocab)))
+    return out
+
+
+def init_params(cfg: ModelConfig, role: str, n_layers: int, key):
+    """Scaled-normal init matching the layout of :func:`param_layout`."""
+    layout = param_layout(cfg, role, n_layers)
+    params = []
+    for (name, shape), k in zip(layout, jax.random.split(key, len(layout))):
+        if name.endswith("norm") or name.endswith("attn_norm") or name.endswith("mlp_norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed":
+            params.append(jax.random.normal(k, shape, jnp.float32) * 0.02)
+        else:
+            fan_in = shape[0]
+            params.append(jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5))
+    return params
+
+
+def _decoder_layer(cfg: ModelConfig, p, x, cos, sin, use_pallas=True):
+    """One pre-norm decoder layer. p: the 9 layer params; x: [B,S,H]."""
+    attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down = p
+    b, s, h = x.shape
+    d = cfg.head_dim
+
+    norm = pallas_rmsnorm if use_pallas else ref.rmsnorm
+    y = norm(x, attn_norm)
+    q = (y @ wq).reshape(b, s, cfg.n_heads, d)
+    k = (y @ wk).reshape(b, s, cfg.n_kv_heads, d)
+    v = (y @ wv).reshape(b, s, cfg.n_kv_heads, d)
+    q = ref.apply_rope(q, cos, sin)
+    k = ref.apply_rope(k, cos, sin)
+    if use_pallas:
+        att = flash_attention(q, k, v, causal=True)
+    else:
+        att = ref.gqa_attention(q, k, v, causal=True)
+    x = x + att.reshape(b, s, h) @ wo
+
+    y = norm(x, mlp_norm)
+    if use_pallas:
+        ffn = pallas_swiglu(y, w_gate, w_up, w_down)
+    else:
+        ffn = ref.swiglu(y, w_gate, w_up, w_down)
+    return x + ffn
+
+
+def stage_forward(cfg: ModelConfig, role: str, n_layers: int, params, x,
+                  use_pallas=True):
+    """Forward pass of one pipeline stage.
+
+    ``x`` is int32 tokens [B,S] for ``first``/``full``, else f32 [B,S,H].
+    Returns hidden states [B,S,H] (``last``/``full`` return logits-input
+    hidden, i.e. the caller applies the loss via :func:`stage_loss`).
+    """
+    params = list(params)
+    idx = 0
+    if role in ("first", "full"):
+        embed = params[idx]
+        idx += 1
+        x = embed[x]  # [B,S] -> [B,S,H]
+    cos, sin = ref.rope_angles(x.shape[1], cfg.head_dim)
+    for i in range(n_layers):
+        p = params[idx:idx + N_LAYER_PARAMS]
+        idx += N_LAYER_PARAMS
+        x = _decoder_layer(cfg, p, x, cos, sin, use_pallas)
+    return x, params[idx:]
+
+
+def stage_loss(cfg: ModelConfig, role: str, n_layers: int, params, x, targets,
+               use_pallas=True):
+    """Loss head for ``last``/``full`` stages: mean token cross-entropy."""
+    h, rest = stage_forward(cfg, role, n_layers, params, x, use_pallas)
+    final_norm, head = rest
+    norm = pallas_rmsnorm if use_pallas else ref.rmsnorm
+    h = norm(h, final_norm)
+    logits = (h @ head).reshape(-1, cfg.vocab)
+    return ref.softmax_cross_entropy(logits, targets.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (flat signatures over parameter lists).
+# ---------------------------------------------------------------------------
+
+def make_fwd(cfg, role, n_layers, use_pallas=True):
+    def fwd(params, x):
+        y, _ = stage_forward(cfg, role, n_layers, params, x, use_pallas)
+        return (y,)
+    return fwd
+
+
+def make_bwd(cfg, role, n_layers, use_pallas=True):
+    """Recompute-based stage VJP: (params, x, dy) -> (dx?, grads)."""
+    if role == "first":
+        def bwd(params, x, dy):
+            def f(p):
+                return stage_forward(cfg, role, n_layers, p, x, use_pallas)[0]
+            _, vjp = jax.vjp(f, list(params))
+            (grads,) = vjp(dy)
+            return tuple(grads)
+        return bwd
+
+    def bwd(params, x, dy):
+        def f(p, xx):
+            return stage_forward(cfg, role, n_layers, p, xx, use_pallas)[0]
+        _, vjp = jax.vjp(f, list(params), x)
+        grads, dx = vjp(dy)
+        return (dx, *grads)
+    return bwd
+
+
+def make_last_fwdbwd(cfg, n_layers, use_pallas=True):
+    """Last stage fused fwd+bwd: (params, x, targets) -> (loss, dx, grads)."""
+    def fwdbwd(params, x, targets):
+        def f(p, xx):
+            return stage_loss(cfg, "last", n_layers, p, xx, targets, use_pallas)
+        loss, vjp = jax.vjp(f, list(params), x)
+        grads, dx = vjp(jnp.float32(1.0))
+        return (loss, dx, *grads)
+    return fwdbwd
+
+
+def make_loss(cfg, role, n_layers, use_pallas=True):
+    def loss_fn(params, x, targets):
+        return (stage_loss(cfg, role, n_layers, params, x, targets, use_pallas),)
+    return loss_fn
+
+
+def make_train_step(cfg, n_layers, use_pallas=True):
+    """Fused single-host train step for the quickstart path.
+
+    (params, m, v, tokens, targets, step, lr) -> (loss, params', m', v')
+    """
+    from .optim import adam_step
+
+    def train_step(params, m, v, tokens, targets, step, lr):
+        def f(p):
+            return stage_loss(cfg, "full", n_layers, p, tokens, targets, use_pallas)
+        loss, grads = jax.value_and_grad(f)(list(params))
+        new_p, new_m, new_v = adam_step(params, grads, m, v, step, lr,
+                                        gscale=jnp.float32(1.0))
+        return (loss, *new_p, *new_m, *new_v)
+    return train_step

@@ -1,0 +1,56 @@
+"""Adam optimizer as exportable flat-signature functions.
+
+The coordinator owns the distributed semantics (DP gradient allreduce over
+DiComm, optional clipping); this module is the per-stage math:
+
+* ``adam_step``  — one Adam update with a gradient pre-scale ``gscale``
+  (used by rust for the 1/DP averaging factor and global-norm clipping),
+* ``grad_sqnorm`` — sum of squared gradient entries, so the coordinator can
+  assemble a *global* norm across pipeline stages before choosing the clip
+  scale.
+"""
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+
+
+def adam_step(params, grads, m, v, step, lr, gscale):
+    """One Adam update over flat lists. ``step`` is 1-based (f32 scalar)."""
+    new_p, new_m, new_v = [], [], []
+    b1t = 1.0 - jnp.power(BETA1, step)
+    b2t = 1.0 - jnp.power(BETA2, step)
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g * gscale
+        mi = BETA1 * mi + (1.0 - BETA1) * g
+        vi = BETA2 * vi + (1.0 - BETA2) * jnp.square(g)
+        mhat = mi / b1t
+        vhat = vi / b2t
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def make_update(n_params):
+    """Exportable Adam step over ``n_params`` tensors.
+
+    (params..., grads..., m..., v..., step, lr, gscale)
+      -> (params'..., m'..., v'...)
+    """
+    def update(params, grads, m, v, step, lr, gscale):
+        new_p, new_m, new_v = adam_step(params, grads, m, v, step, lr, gscale)
+        return (*new_p, *new_m, *new_v)
+    return update
+
+
+def make_sqnorm(n_params):
+    """Exportable gradient square-norm: (grads...) -> scalar."""
+    def sqnorm(grads):
+        acc = jnp.float32(0.0)
+        for g in grads:
+            acc = acc + jnp.sum(jnp.square(g))
+        return (acc,)
+    return sqnorm

@@ -1,0 +1,77 @@
+"""AOT export sanity: manifest structure and HLO text properties."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_has_all_models():
+    m = load()
+    for name in ["h2_tiny", "h2_fig12", "h2_100m"]:
+        assert name in m["models"], name
+
+
+def test_tiny_artifact_set_complete():
+    arts = load()["models"]["h2_tiny"]["artifacts"]
+    expected = {"train_step", "eval_loss",
+                "first_l2_fwd", "first_l2_bwd", "first_l2_update", "first_l2_sqnorm",
+                "last_l2_fwdbwd", "last_l2_loss", "last_l2_update", "last_l2_sqnorm",
+                "mid_l2_fwd", "mid_l2_bwd"}
+    assert expected <= set(arts)
+
+
+def test_hlo_files_exist_and_are_text():
+    m = load()
+    for model_name, entry in m["models"].items():
+        for art_name, art in entry["artifacts"].items():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), art["file"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, f"{art['file']} is not HLO text"
+
+
+def test_input_output_arity_consistency():
+    """fwd/bwd/update arities must obey the stage ABI the rust side assumes."""
+    m = load()
+    for model_name, entry in m["models"].items():
+        for art_name, art in entry["artifacts"].items():
+            n_in, n_out = len(art["inputs"]), len(art["outputs"])
+            if "params" not in art:
+                continue
+            n_p = len(art["params"])
+            if art_name.endswith("_fwd"):
+                assert n_in == n_p + 1 and n_out == 1
+            elif art_name.endswith("_bwd"):
+                assert n_in == n_p + 2
+                role = art["role"]
+                assert n_out == (n_p if role == "first" else n_p + 1)
+            elif art_name.endswith("_fwdbwd"):
+                assert n_in == n_p + 2 and n_out == n_p + 2  # loss, dx, grads
+            elif art_name.endswith("_update"):
+                assert n_in == 4 * n_p + 3 and n_out == 3 * n_p
+            elif art_name.endswith("_sqnorm"):
+                assert n_in == n_p and n_out == 1
+
+
+def test_param_shapes_match_metadata():
+    m = load()
+    for entry in m["models"].values():
+        for name, art in entry["artifacts"].items():
+            if not name.endswith("_fwd"):
+                continue
+            shapes = [p["shape"] for p in art["params"]]
+            in_shapes = [i["shape"] for i in art["inputs"][:len(shapes)]]
+            assert shapes == in_shapes

@@ -1,0 +1,218 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Includes hypothesis sweeps over shapes/dtypes per the repro brief: the
+kernels must agree with the reference for every (batch, seq, heads, dim)
+combination the model family can produce.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (
+    flash_attention, mxu_utilization_estimate, vmem_bytes_estimate)
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.swiglu import swiglu
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestAttentionForward:
+    @pytest.mark.parametrize("b,s,hq,hkv,d", [
+        (1, 128, 4, 2, 32),
+        (2, 128, 4, 4, 16),   # MHA special case
+        (2, 256, 12, 4, 64),  # h2_100m shape
+        (1, 256, 8, 4, 64),   # h2_fig12 shape
+        (1, 128, 4, 1, 32),   # MQA special case
+    ])
+    def test_matches_reference(self, b, s, hq, hkv, d):
+        k1, k2, k3 = keys(3)
+        q, k, v = rand(k1, (b, s, hq, d)), rand(k2, (b, s, hkv, d)), rand(k3, (b, s, hkv, d))
+        out = flash_attention(q, k, v, causal=True)
+        expect = ref.gqa_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, expect, atol=ATOL, rtol=RTOL)
+
+    def test_non_causal(self):
+        k1, k2, k3 = keys(3, seed=1)
+        q, k, v = rand(k1, (2, 128, 4, 32)), rand(k2, (2, 128, 2, 32)), rand(k3, (2, 128, 2, 32))
+        out = flash_attention(q, k, v, causal=False)
+        expect = ref.gqa_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, expect, atol=ATOL, rtol=RTOL)
+
+    def test_block_shape_invariance(self):
+        """Output must not depend on the VMEM tiling choice."""
+        k1, k2, k3 = keys(3, seed=2)
+        q, k, v = rand(k1, (1, 256, 4, 32)), rand(k2, (1, 256, 2, 32)), rand(k3, (1, 256, 2, 32))
+        base = flash_attention(q, k, v, block_q=256, block_k=256)
+        for bq, bk in [(64, 64), (128, 64), (64, 128), (32, 256)]:
+            out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(out, base, atol=ATOL, rtol=RTOL)
+
+    def test_causal_first_token_attends_self_only(self):
+        k1, k2, k3 = keys(3, seed=3)
+        q, k, v = rand(k1, (1, 128, 2, 16)), rand(k2, (1, 128, 2, 16)), rand(k3, (1, 128, 2, 16))
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        s_pow=st.integers(5, 8),
+        group=st.integers(1, 4),
+        hkv=st.integers(1, 3),
+        d=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hypothesis_shape_sweep(self, b, s_pow, group, hkv, d, seed):
+        s = 2 ** s_pow
+        hq = group * hkv
+        k1, k2, k3 = keys(3, seed=seed)
+        q, k, v = rand(k1, (b, s, hq, d)), rand(k2, (b, s, hkv, d)), rand(k3, (b, s, hkv, d))
+        out = flash_attention(q, k, v, causal=True)
+        expect = ref.gqa_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, expect, atol=ATOL, rtol=RTOL)
+
+
+class TestAttentionBackward:
+    @pytest.mark.parametrize("b,s,hq,hkv,d", [
+        (1, 128, 4, 2, 32),
+        (2, 128, 6, 2, 16),
+        (1, 256, 12, 4, 64),
+    ])
+    def test_grads_match_reference_vjp(self, b, s, hq, hkv, d):
+        k1, k2, k3 = keys(3, seed=7)
+        q, k, v = rand(k1, (b, s, hq, d)), rand(k2, (b, s, hkv, d)), rand(k3, (b, s, hkv, d))
+
+        def f(q, k, v):
+            return jnp.sum(jnp.sin(flash_attention(q, k, v)))
+
+        def fr(q, k, v):
+            return jnp.sum(jnp.sin(ref.gqa_attention(q, k, v)))
+
+        g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+        for a, e in zip(g, gr):
+            np.testing.assert_allclose(a, e, atol=5e-5, rtol=5e-5)
+
+    def test_grad_block_invariance(self):
+        k1, k2, k3 = keys(3, seed=8)
+        q, k, v = rand(k1, (1, 128, 2, 32)), rand(k2, (1, 128, 2, 32)), rand(k3, (1, 128, 2, 32))
+
+        def make(bq, bk):
+            return jax.grad(
+                lambda q: jnp.sum(flash_attention(q, k, v, block_q=bq, block_k=bk) ** 2)
+            )(q)
+
+        np.testing.assert_allclose(make(128, 128), make(32, 64), atol=ATOL, rtol=RTOL)
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("shape", [(4, 64), (2, 128, 256), (1, 7, 96)])
+    def test_matches_reference(self, shape):
+        k1, k2 = keys(2, seed=11)
+        x = rand(k1, shape)
+        gain = 1.0 + rand(k2, shape[-1:], 0.1)
+        np.testing.assert_allclose(rmsnorm(x, gain), ref.rmsnorm(x, gain),
+                                   atol=ATOL, rtol=RTOL)
+
+    def test_grads(self):
+        k1, k2 = keys(2, seed=12)
+        x = rand(k1, (6, 96))
+        gain = 1.0 + rand(k2, (96,), 0.1)
+        g = jax.grad(lambda x, g: jnp.sum(jnp.cos(rmsnorm(x, g))), argnums=(0, 1))(x, gain)
+        gr = jax.grad(lambda x, g: jnp.sum(jnp.cos(ref.rmsnorm(x, g))), argnums=(0, 1))(x, gain)
+        np.testing.assert_allclose(g[0], gr[0], atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(g[1], gr[1], atol=5e-5, rtol=5e-5)
+
+    def test_scale_invariance_property(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+        k1, _ = keys(2, seed=13)
+        x = rand(k1, (4, 128), 3.0)
+        gain = jnp.ones((128,))
+        a = rmsnorm(x, gain, eps=0.0)
+        b = rmsnorm(7.5 * x, gain, eps=0.0)
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(rows=st.integers(1, 16), dim=st.sampled_from([32, 64, 128, 256]),
+           seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_sweep(self, rows, dim, seed):
+        k1, k2 = keys(2, seed=seed)
+        x = rand(k1, (rows, dim))
+        gain = 1.0 + rand(k2, (dim,), 0.1)
+        np.testing.assert_allclose(rmsnorm(x, gain), ref.rmsnorm(x, gain),
+                                   atol=ATOL, rtol=RTOL)
+
+
+class TestSwiGLU:
+    @pytest.mark.parametrize("rows,dim,inter", [(8, 64, 160), (256, 96, 256), (3, 32, 80)])
+    def test_matches_reference(self, rows, dim, inter):
+        k1, k2, k3, k4 = keys(4, seed=21)
+        x = rand(k1, (rows, dim))
+        wg, wu = rand(k2, (dim, inter), 0.1), rand(k3, (dim, inter), 0.1)
+        wd = rand(k4, (inter, dim), 0.1)
+        np.testing.assert_allclose(swiglu(x, wg, wu, wd), ref.swiglu(x, wg, wu, wd),
+                                   atol=ATOL, rtol=RTOL)
+
+    def test_grads(self):
+        k1, k2, k3, k4 = keys(4, seed=22)
+        x = rand(k1, (8, 64))
+        wg, wu = rand(k2, (64, 160), 0.1), rand(k3, (64, 160), 0.1)
+        wd = rand(k4, (160, 64), 0.1)
+        g = jax.grad(lambda *a: jnp.sum(jnp.tanh(swiglu(*a))), argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+        gr = jax.grad(lambda *a: jnp.sum(jnp.tanh(ref.swiglu(*a))), argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+        for a, e in zip(g, gr):
+            np.testing.assert_allclose(a, e, atol=5e-5, rtol=5e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(rows=st.integers(1, 32), dim=st.sampled_from([32, 64]),
+           inter=st.sampled_from([64, 96]), seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_sweep(self, rows, dim, inter, seed):
+        k1, k2, k3, k4 = keys(4, seed=seed)
+        x = rand(k1, (rows, dim))
+        wg, wu = rand(k2, (dim, inter), 0.1), rand(k3, (dim, inter), 0.1)
+        wd = rand(k4, (inter, dim), 0.1)
+        np.testing.assert_allclose(swiglu(x, wg, wu, wd), ref.swiglu(x, wg, wu, wd),
+                                   atol=ATOL, rtol=RTOL)
+
+
+class TestRope:
+    def test_norm_preserving(self):
+        """Rotary embedding is a rotation: per-pair norms are preserved."""
+        k1, _ = keys(2, seed=31)
+        x = rand(k1, (2, 64, 4, 32))
+        cos, sin = ref.rope_angles(64, 32)
+        y = ref.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            jnp.sum(x ** 2, axis=-1), jnp.sum(y ** 2, axis=-1), atol=1e-4, rtol=1e-4)
+
+    def test_position_zero_identity(self):
+        k1, _ = keys(2, seed=32)
+        x = rand(k1, (1, 8, 2, 16))
+        cos, sin = ref.rope_angles(8, 16)
+        y = ref.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(y[:, 0], x[:, 0], atol=1e-6)
+
+
+class TestStructuralEstimates:
+    def test_vmem_under_budget_for_default_blocks(self):
+        # h2_100b head_dim = 128; default 128x128 tiles must fit VMEM.
+        assert vmem_bytes_estimate(4096, 128, 8, 128, 128) < 16 * 1024 * 1024
+
+    def test_mxu_utilization_full_at_128(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(64, 128, 128) == 0.5

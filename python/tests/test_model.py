@@ -1,0 +1,173 @@
+"""L2 correctness: stage composition, gradients, and pallas/ref equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, optim
+from compile.configs import CONFIGS, H2_100B, H2_100M, H2_TINY
+
+CFG = H2_TINY
+B, S = 2, CFG.seq_len
+
+
+def make_stage(role, n_layers, seed):
+    key = jax.random.PRNGKey(seed)
+    return model.init_params(CFG, role, n_layers, key)
+
+
+def full_params_from_stages(stages):
+    """Concatenate stage param lists into the equivalent `full` layout."""
+    flat = []
+    for role, _, params in stages:
+        flat.extend(params)
+    return flat
+
+
+def rand_tokens(key, shape, vocab):
+    return jax.random.randint(key, shape, 0, vocab, dtype=jnp.int32)
+
+
+class TestStageComposition:
+    """first(+mid)+last chained == monolithic `full` forward/loss."""
+
+    @pytest.mark.parametrize("splits", [[("first", 2), ("last", 2)],
+                                        [("first", 1), ("mid", 2), ("last", 1)]])
+    def test_pipeline_equals_full(self, splits):
+        stages = [(role, n, make_stage(role, n, 10 + i))
+                  for i, (role, n) in enumerate(splits)]
+        full = full_params_from_stages(stages)
+        key = jax.random.PRNGKey(99)
+        tokens = rand_tokens(key, (B, S), CFG.vocab)
+        targets = rand_tokens(jax.random.PRNGKey(98), (B, S), CFG.vocab)
+
+        # Chained stage execution (what the rust coordinator does).
+        x = tokens
+        for role, n, params in stages[:-1]:
+            x, _ = model.stage_forward(CFG, role, n, params, x)
+        role, n, params = stages[-1]
+        loss_staged = model.stage_loss(CFG, role, n, params, x, targets)
+
+        loss_full = model.stage_loss(CFG, "full", CFG.n_layers, full, tokens, targets)
+        np.testing.assert_allclose(loss_staged, loss_full, atol=1e-5, rtol=1e-5)
+
+    def test_loss_is_near_log_vocab_at_init(self):
+        """Untrained model must sit near the uniform-prediction loss."""
+        params = make_stage("full", CFG.n_layers, 0)
+        tokens = rand_tokens(jax.random.PRNGKey(1), (B, S), CFG.vocab)
+        targets = rand_tokens(jax.random.PRNGKey(2), (B, S), CFG.vocab)
+        loss = model.stage_loss(CFG, "full", CFG.n_layers, params, tokens, targets)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+class TestStagedBackward:
+    """The exported bwd chain must equal monolithic autodiff."""
+
+    def test_bwd_chain_matches_full_grad(self):
+        stages = [("first", 2, make_stage("first", 2, 20)),
+                  ("last", 2, make_stage("last", 2, 21))]
+        full = full_params_from_stages(stages)
+        tokens = rand_tokens(jax.random.PRNGKey(30), (B, S), CFG.vocab)
+        targets = rand_tokens(jax.random.PRNGKey(31), (B, S), CFG.vocab)
+
+        # Monolithic reference gradient.
+        def f(p):
+            return model.stage_loss(CFG, "full", CFG.n_layers, p, tokens, targets)
+        ref_grads = jax.grad(f)(list(full))
+
+        # Staged execution: fwd first -> fused last fwdbwd -> bwd first.
+        fwd0 = model.make_fwd(CFG, "first", 2)
+        (h0,) = fwd0(stages[0][2], tokens)
+        fwdbwd1 = model.make_last_fwdbwd(CFG, 2)
+        loss, dx, *g1 = fwdbwd1(stages[1][2], h0, targets)
+        bwd0 = model.make_bwd(CFG, "first", 2)
+        g0 = bwd0(stages[0][2], tokens, dx)
+
+        staged = list(g0) + list(g1)
+        assert len(staged) == len(ref_grads)
+        for a, e in zip(staged, ref_grads):
+            np.testing.assert_allclose(a, e, atol=2e-4, rtol=2e-4)
+
+    def test_mid_stage_dx_matches_autodiff(self):
+        params = make_stage("mid", 2, 40)
+        x = jax.random.normal(jax.random.PRNGKey(41), (B, S, CFG.hidden))
+        dy = jax.random.normal(jax.random.PRNGKey(42), (B, S, CFG.hidden))
+
+        bwd = model.make_bwd(CFG, "mid", 2)
+        dx, *grads = bwd(params, x, dy)
+
+        def f(xx):
+            y, _ = model.stage_forward(CFG, "mid", 2, params, xx)
+            return jnp.sum(y * dy)
+        dx_ref = jax.grad(f)(x)
+        np.testing.assert_allclose(dx, dx_ref, atol=2e-4, rtol=2e-4)
+
+
+class TestPallasRefEquivalence:
+    def test_full_model_pallas_vs_ref(self):
+        params = make_stage("full", CFG.n_layers, 50)
+        tokens = rand_tokens(jax.random.PRNGKey(51), (B, S), CFG.vocab)
+        targets = rand_tokens(jax.random.PRNGKey(52), (B, S), CFG.vocab)
+        lp = model.stage_loss(CFG, "full", CFG.n_layers, params, tokens, targets,
+                              use_pallas=True)
+        lr = model.stage_loss(CFG, "full", CFG.n_layers, params, tokens, targets,
+                              use_pallas=False)
+        np.testing.assert_allclose(lp, lr, atol=1e-5, rtol=1e-5)
+
+
+class TestOptim:
+    def test_adam_decreases_loss(self):
+        params = make_stage("full", CFG.n_layers, 60)
+        n = len(params)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        tokens = rand_tokens(jax.random.PRNGKey(61), (B, S), CFG.vocab)
+        targets = rand_tokens(jax.random.PRNGKey(62), (B, S), CFG.vocab)
+        step_fn = model.make_train_step(CFG, CFG.n_layers)
+        losses = []
+        for step in range(1, 6):
+            out = step_fn(params, m, v, tokens, targets,
+                          jnp.float32(step), jnp.float32(3e-3))
+            losses.append(float(out[0]))
+            params = list(out[1:1 + n])
+            m = list(out[1 + n:1 + 2 * n])
+            v = list(out[1 + 2 * n:1 + 3 * n])
+        assert losses[-1] < losses[0] - 0.2, losses
+
+    def test_gscale_equivalence(self):
+        """update(g, gscale=s) == update(g*s, gscale=1) — the DP-average ABI."""
+        params = make_stage("first", 1, 70)
+        grads = [jnp.ones_like(p) * 0.1 for p in params]
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        a = optim.adam_step(params, grads, m, v, jnp.float32(1), 1e-3,
+                            gscale=jnp.float32(0.5))
+        b = optim.adam_step(params, [g * 0.5 for g in grads], m, v,
+                            jnp.float32(1), 1e-3, gscale=jnp.float32(1.0))
+        for xs, ys in zip(a, b):
+            for x, y in zip(xs, ys):
+                np.testing.assert_allclose(x, y, atol=1e-7)
+
+    def test_sqnorm(self):
+        grads = [jnp.ones((3, 4)), 2.0 * jnp.ones((5,))]
+        (out,) = optim.make_sqnorm(2)(grads)
+        np.testing.assert_allclose(out, 12.0 + 20.0)
+
+
+class TestParamLayout:
+    def test_param_count_matches_config(self):
+        for cfg in [H2_TINY, H2_100M, H2_100B]:
+            layout = model.param_layout(cfg, "full", cfg.n_layers)
+            total = sum(int(np.prod(s)) for _, s in layout)
+            assert total == cfg.param_count(), cfg.name
+
+    def test_100m_is_about_100m(self):
+        assert 90e6 < H2_100M.param_count() < 130e6
+
+    def test_stage_layouts_partition_full(self):
+        full = model.param_layout(CFG, "full", 4)
+        parts = (model.param_layout(CFG, "first", 1)
+                 + model.param_layout(CFG, "mid", 2)
+                 + model.param_layout(CFG, "last", 1))
+        assert [s for _, s in full] == [s for _, s in parts]

@@ -1,0 +1,7 @@
+//! HeteroAuto: automatic parallel-strategy search for HeteroPP (§4.3).
+
+pub mod search;
+pub mod sharding;
+
+pub use search::{search, SearchConfig, SearchResult};
+pub use sharding::{shard_layers, GroupShape, Sharding};

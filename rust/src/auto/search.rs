@@ -1,0 +1,342 @@
+//! HeteroAuto DFS strategy search (§4.3.3).
+//!
+//! Step 1 — depth-first search over the parallelism space: data-parallel
+//! candidates dividing the global batch; per chip type, tensor-parallel
+//! degrees in powers of two up to `TP_MAX_i`; pipeline degree from
+//! `N_i = s_pp,i · s_tp,i · s_dp`. Types are visited in descending memory
+//! order (the HeteroPP stage order).
+//!
+//! Step 2 — optimal layer sharding per configuration (see [`super::sharding`]).
+//!
+//! Step 3 — cost estimation with the §4.3.2 model; the feasible minimum wins.
+//!
+//! The **two-stage** refinement fixes `s_dp` from a coarse pass, then splits
+//! each homogeneous group into pseudo-heterogeneous subgroups (128 chips in
+//! the paper) re-searched with the monotone-TP pruning rule
+//! (`s_tp,a ≥ s_tp,b` for earlier subgroups of the same type).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::costmodel::{evaluate, Evaluation, ModelShape, Strategy};
+use crate::hetero::{ChipGroup, Cluster};
+
+use super::sharding::{shard_layers, GroupShape};
+
+/// Search configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// Pipeline bubble coefficient (1.0 = 1F1B, 0.0 = ZB-V).
+    pub alpha: f64,
+    /// Subgroup size for the two-stage refinement (paper: 128 chips).
+    pub group_split: usize,
+    /// Run the two-stage refinement.
+    pub two_stage: bool,
+    /// Cap on candidate data-parallel degrees (0 = no cap).
+    pub max_dp: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { alpha: 1.0, group_split: 128, two_stage: true, max_dp: 0 }
+    }
+}
+
+/// Result of a HeteroAuto search.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub strategy: Strategy,
+    pub eval: Evaluation,
+    /// Groups (memory-descending) matching strategy.plans — includes the
+    /// pseudo-subgroups if the two-stage refinement produced them.
+    pub groups: Vec<ChipGroup>,
+    pub candidates_explored: usize,
+    pub elapsed_seconds: f64,
+}
+
+/// Powers of two 1..=tp_max that divide `n`.
+fn tp_candidates(n_chips: usize, tp_max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut tp = 1;
+    while tp <= tp_max {
+        if n_chips % tp == 0 {
+            v.push(tp);
+        }
+        tp *= 2;
+    }
+    v
+}
+
+/// Divisors of `sequences` usable as s_dp (every group must split evenly).
+fn dp_candidates(sequences: usize, groups: &[ChipGroup], max_dp: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    for dp in 1..=sequences {
+        if sequences % dp != 0 {
+            continue;
+        }
+        if max_dp > 0 && dp > max_dp {
+            break;
+        }
+        // Every group must be divisible by dp (leaving >= 1 chip per stage).
+        if groups.iter().all(|g| g.n_chips % dp == 0 && g.n_chips / dp >= 1) {
+            v.push(dp);
+        }
+    }
+    v
+}
+
+struct DfsCtx<'a> {
+    model: &'a ModelShape,
+    groups: &'a [ChipGroup],
+    s_dp: usize,
+    micro_batches: usize,
+    micro_tokens: usize,
+    alpha: f64,
+    monotone_tp: bool,
+    explored: usize,
+    best: Option<(f64, Strategy, Evaluation)>,
+}
+
+impl<'a> DfsCtx<'a> {
+    fn dfs(&mut self, idx: usize, shapes: &mut Vec<GroupShape>) {
+        if idx == self.groups.len() {
+            self.explored += 1;
+            let sharding = shard_layers(
+                self.model, self.groups, shapes, self.s_dp,
+                self.micro_batches, self.micro_tokens, self.alpha,
+            );
+            if !sharding.feasible {
+                return;
+            }
+            let strategy = Strategy {
+                s_dp: self.s_dp,
+                micro_batches: self.micro_batches,
+                plans: sharding.plans,
+            };
+            let grefs: Vec<&ChipGroup> = self.groups.iter().collect();
+            let eval = evaluate(self.model, &grefs, &strategy, self.micro_tokens, self.alpha);
+            if !eval.feasible {
+                return;
+            }
+            let t = eval.iteration_seconds;
+            if self.best.as_ref().map(|(bt, _, _)| t < *bt).unwrap_or(true) {
+                self.best = Some((t, strategy, eval));
+            }
+            return;
+        }
+        let g = &self.groups[idx];
+        for tp in tp_candidates(g.n_chips, g.spec.tp_max()) {
+            if g.n_chips % (tp * self.s_dp) != 0 {
+                continue;
+            }
+            let s_pp = g.n_chips / (tp * self.s_dp);
+            if s_pp == 0 {
+                continue;
+            }
+            // Monotone-TP pruning within a chip type (two-stage constraint).
+            if self.monotone_tp && idx > 0 {
+                let prev = &self.groups[idx - 1];
+                if prev.spec.kind == g.spec.kind && shapes[idx - 1].s_tp < tp {
+                    continue;
+                }
+            }
+            shapes.push(GroupShape { s_tp: tp, s_pp });
+            self.dfs(idx + 1, shapes);
+            shapes.pop();
+        }
+    }
+}
+
+fn run_dfs(
+    model: &ModelShape,
+    groups: &[ChipGroup],
+    sequences: usize,
+    dp_choices: &[usize],
+    cfg: &SearchConfig,
+    monotone_tp: bool,
+) -> (usize, Option<(f64, Strategy, Evaluation)>) {
+    let mut explored = 0;
+    let mut best: Option<(f64, Strategy, Evaluation)> = None;
+    for &dp in dp_choices {
+        let micro_batches = sequences / dp;
+        let mut ctx = DfsCtx {
+            model,
+            groups,
+            s_dp: dp,
+            micro_batches,
+            micro_tokens: model.seq_len, // paper: micro batch size pinned to 1
+            alpha: cfg.alpha,
+            monotone_tp,
+            explored: 0,
+            best: None,
+        };
+        let mut shapes = Vec::with_capacity(groups.len());
+        ctx.dfs(0, &mut shapes);
+        explored += ctx.explored;
+        if let Some((t, s, e)) = ctx.best {
+            if best.as_ref().map(|(bt, _, _)| t < *bt).unwrap_or(true) {
+                best = Some((t, s, e));
+            }
+        }
+    }
+    (explored, best)
+}
+
+/// Split each homogeneous group into `split`-chip pseudo-heterogeneous
+/// subgroups (two-stage refinement, §4.3.3).
+fn split_groups(groups: &[ChipGroup], split: usize) -> Vec<ChipGroup> {
+    let mut out = Vec::new();
+    for g in groups {
+        if g.n_chips <= split {
+            out.push(g.clone());
+            continue;
+        }
+        let node = g.spec.chips_per_node;
+        let mut chunk = split.max(node);
+        chunk -= chunk % node; // whole nodes
+        let mut rest = g.n_chips;
+        while rest > 0 {
+            let take = chunk.min(rest);
+            out.push(ChipGroup::new(g.spec.kind, take));
+            rest -= take;
+        }
+    }
+    out
+}
+
+/// Run HeteroAuto over a cluster for a global batch of `gbs_tokens`.
+pub fn search(
+    model: &ModelShape,
+    cluster: &Cluster,
+    gbs_tokens: usize,
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    let start = Instant::now();
+    let sequences = gbs_tokens / model.seq_len;
+    if sequences == 0 {
+        bail!("global batch smaller than one sequence");
+    }
+    // Memory-descending group order = HeteroPP stage order (Observation #4).
+    let groups: Vec<ChipGroup> = cluster
+        .groups_by_memory_desc()
+        .into_iter()
+        .cloned()
+        .collect();
+
+    let dp_choices = dp_candidates(sequences, &groups, cfg.max_dp);
+    if dp_choices.is_empty() {
+        bail!("no feasible data-parallel degree for cluster `{}`", cluster.name);
+    }
+
+    // Stage 1: coarse search, one group per chip type.
+    let (mut explored, coarse) = run_dfs(model, &groups, sequences, &dp_choices, cfg, false);
+    let coarse = match coarse {
+        Some(c) => c,
+        None => bail!("no feasible strategy found for `{}`", cluster.name),
+    };
+
+    if !cfg.two_stage {
+        let (t, strategy, eval) = coarse;
+        let _ = t;
+        return Ok(SearchResult {
+            strategy,
+            eval,
+            groups,
+            candidates_explored: explored,
+            elapsed_seconds: start.elapsed().as_secs_f64(),
+        });
+    }
+
+    // Stage 2: fix s_dp, split homogeneous groups into pseudo-heterogeneous
+    // subgroups, and re-search with monotone-TP pruning.
+    let fixed_dp = [coarse.1.s_dp];
+    let fine_groups = split_groups(&groups, cfg.group_split);
+    let (explored2, fine) = run_dfs(model, &fine_groups, sequences, &fixed_dp, cfg, true);
+    explored += explored2;
+
+    // Keep whichever stage produced the better feasible strategy.
+    let use_fine = fine.as_ref().map(|(t, _, _)| *t < coarse.0).unwrap_or(false);
+    let (strategy, eval, out_groups) = if use_fine {
+        let (_, s, e) = fine.unwrap();
+        (s, e, fine_groups)
+    } else {
+        let (_, s, e) = coarse;
+        (s, e, groups)
+    };
+
+    Ok(SearchResult {
+        strategy,
+        eval,
+        groups: out_groups,
+        candidates_explored: explored,
+        elapsed_seconds: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::H2_100B;
+    use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
+
+    #[test]
+    fn tp_candidates_respect_max() {
+        assert_eq!(tp_candidates(256, 4), vec![1, 2, 4]);
+        assert_eq!(tp_candidates(256, 16), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn dp_candidates_divide_everything() {
+        let groups = vec![ChipGroup::new(ChipKind::A, 256), ChipGroup::new(ChipKind::B, 256)];
+        let dps = dp_candidates(512, &groups, 0);
+        assert!(dps.contains(&1) && dps.contains(&4) && dps.contains(&256));
+        for dp in dps {
+            assert_eq!(512 % dp, 0);
+            assert_eq!(256 % dp, 0);
+        }
+    }
+
+    #[test]
+    fn split_groups_whole_nodes() {
+        let groups = vec![ChipGroup::new(ChipKind::B, 1024)];
+        let sub = split_groups(&groups, 128);
+        assert_eq!(sub.len(), 8);
+        assert!(sub.iter().all(|g| g.n_chips == 128));
+    }
+
+    #[test]
+    fn homogeneous_search_finds_table6_like_config() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let cfg = SearchConfig { two_stage: false, ..Default::default() };
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).unwrap();
+        assert!(r.eval.feasible);
+        let plan = r.strategy.plans[0];
+        assert_eq!(plan.s_pp * plan.s_tp * r.strategy.s_dp, 256);
+        assert_eq!(plan.layers, 96);
+    }
+
+    #[test]
+    fn hetero_search_exp_a_runs_and_is_feasible() {
+        let exp = experiment("exp-a-1").unwrap();
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default()).unwrap();
+        assert!(r.eval.feasible);
+        assert_eq!(r.strategy.total_layers(), 96);
+        assert!(r.candidates_explored > 0);
+        // All chips of every group must be used exactly.
+        for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
+            assert_eq!(g.n_chips, p.s_pp * p.s_tp * r.strategy.s_dp,
+                       "group {} chip accounting", g.spec.kind);
+        }
+    }
+
+    #[test]
+    fn two_stage_never_worse_than_coarse() {
+        let exp = experiment("exp-c-1").unwrap();
+        let coarse = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                            &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
+        let fine = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                          &SearchConfig::default()).unwrap();
+        assert!(fine.eval.iteration_seconds <= coarse.eval.iteration_seconds * 1.0001);
+    }
+}

@@ -1,0 +1,247 @@
+//! Optimal layer sharding (§4.3.3 step 2).
+//!
+//! Given per-group stage counts and per-layer times, find the integer layer
+//! allocation `l_i = lps_i · s_pp,i` that (heuristically) minimizes the cost
+//! model's iteration time:
+//!
+//! 1. continuous initialization equalizing compute time across groups,
+//! 2. integer rounding,
+//! 3. iterative refinement moving whole per-stage layers between groups
+//!    while total ≠ L, always improving the bottleneck,
+//! 4. memory repair: recomputation is enabled for groups whose stages
+//!    cannot hold their activations (recompute is pure memory relief — it
+//!    never reduces time — so it is only switched on under pressure).
+
+use crate::costmodel::{evaluate, GroupPlan, ModelShape, Strategy};
+use crate::hetero::ChipGroup;
+
+/// Per-group immutable candidate: (s_tp, s_pp) already fixed by the DFS.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupShape {
+    pub s_tp: usize,
+    pub s_pp: usize,
+}
+
+/// Outcome of the sharding heuristic.
+#[derive(Clone, Debug)]
+pub struct Sharding {
+    pub plans: Vec<GroupPlan>,
+    pub feasible: bool,
+}
+
+/// Compute the layer allocation for fixed (s_dp, shapes).
+pub fn shard_layers(
+    model: &ModelShape,
+    groups: &[ChipGroup],
+    shapes: &[GroupShape],
+    s_dp: usize,
+    micro_batches: usize,
+    micro_tokens: usize,
+    alpha: f64,
+) -> Sharding {
+    use crate::costmodel::profile_layer;
+
+    let n = groups.len();
+    assert_eq!(n, shapes.len());
+    let total_layers = model.n_layers;
+
+    // Per-layer single-microbatch time (fwd+bwd, no recompute) per group.
+    let t_layer: Vec<f64> = groups
+        .iter()
+        .zip(shapes)
+        .map(|(g, s)| {
+            let p = profile_layer(&g.spec, model, s.s_tp, micro_tokens, s_dp);
+            p.t_fwd + p.t_bwd
+        })
+        .collect();
+
+    // 1) Continuous equalization: lps_i ∝ 1/t_i, scaled so layers sum to L.
+    //    Σ s_pp_i · lps_i = L with lps_i = K / t_i  =>  K = L / Σ(s_pp_i/t_i).
+    let denom: f64 = shapes.iter().zip(&t_layer).map(|(s, t)| s.s_pp as f64 / t).sum();
+    let k = total_layers as f64 / denom;
+    let mut lps: Vec<i64> = t_layer
+        .iter()
+        .map(|t| ((k / t).round() as i64).max(1))
+        .collect();
+
+    let assigned = |lps: &[i64]| -> i64 {
+        lps.iter().zip(shapes).map(|(l, s)| l * s.s_pp as i64).sum()
+    };
+
+    // 2/3) Integer refinement: move stage-layers until the total matches L.
+    //    Removing from the group with the highest per-stage load first;
+    //    adding to the group with the lowest.
+    let mut guard = 0;
+    while assigned(&lps) != total_layers as i64 && guard < 10_000 {
+        guard += 1;
+        let diff = assigned(&lps) - total_layers as i64;
+        if diff > 0 {
+            // Drop one layer-per-stage from the group whose removal best
+            // reduces the bottleneck but keeps lps >= 1 and doesn't
+            // overshoot below L more than necessary.
+            let mut best: Option<(usize, f64)> = None;
+            for i in 0..n {
+                if lps[i] <= 1 {
+                    continue;
+                }
+                let load = lps[i] as f64 * t_layer[i];
+                if best.map(|(_, l)| load > l).unwrap_or(true) {
+                    best = Some((i, load));
+                }
+            }
+            match best {
+                Some((i, _)) => lps[i] -= 1,
+                None => break, // cannot shrink further
+            }
+        } else {
+            // Add one layer-per-stage to the group with the lowest load.
+            let mut best: Option<(usize, f64)> = None;
+            for i in 0..n {
+                let load = (lps[i] + 1) as f64 * t_layer[i];
+                if best.map(|(_, l)| load < l).unwrap_or(true) {
+                    best = Some((i, load));
+                }
+            }
+            lps[best.unwrap().0] += 1;
+        }
+    }
+
+    // Exact match may be impossible (e.g. all stages at lps=1 already sums
+    // above L). Declare infeasible if so.
+    if assigned(&lps) != total_layers as i64 {
+        return Sharding {
+            plans: shapes
+                .iter()
+                .zip(&lps)
+                .map(|(s, &l)| GroupPlan {
+                    s_pp: s.s_pp,
+                    s_tp: s.s_tp,
+                    layers: (l as usize) * s.s_pp,
+                    recompute: false,
+                })
+                .collect(),
+            feasible: false,
+        };
+    }
+
+    // 4) Memory repair: enable recompute per group under pressure, then (if
+    // still infeasible) shift layers away from the offending group.
+    let mut plans: Vec<GroupPlan> = shapes
+        .iter()
+        .zip(&lps)
+        .map(|(s, &l)| GroupPlan {
+            s_pp: s.s_pp,
+            s_tp: s.s_tp,
+            layers: (l as usize) * s.s_pp,
+            recompute: false,
+        })
+        .collect();
+
+    for _round in 0..8 {
+        let strategy = Strategy { s_dp, micro_batches, plans: plans.clone() };
+        let grefs: Vec<&ChipGroup> = groups.iter().collect();
+        let eval = evaluate(model, &grefs, &strategy, micro_tokens, alpha);
+        if eval.feasible {
+            return Sharding { plans, feasible: true };
+        }
+        let mut changed = false;
+        for (i, plan) in plans.iter_mut().enumerate() {
+            let budget = groups[i].spec.memory_bytes() * crate::costmodel::MEMORY_SAFETY;
+            if eval.peak_memory[i] > budget {
+                if !plan.recompute {
+                    plan.recompute = true;
+                    changed = true;
+                } else if plan.layers > plan.s_pp {
+                    // Shed one layer-per-stage; the re-balance pass below
+                    // hands the freed layers to groups with headroom.
+                    plan.layers -= plan.s_pp;
+                    changed = true;
+                }
+            }
+        }
+        if changed {
+            // Re-balance the total after any layer removals.
+            let short = total_layers as i64
+                - plans.iter().map(|p| p.layers as i64).sum::<i64>();
+            if short > 0 {
+                // Give the missing layers to groups with memory headroom,
+                // cheapest-load first.
+                let mut missing = short;
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| t_layer[a].partial_cmp(&t_layer[b]).unwrap());
+                'outer: while missing > 0 {
+                    let mut progressed = false;
+                    for &i in &order {
+                        if missing < plans[i].s_pp as i64 {
+                            continue;
+                        }
+                        plans[i].layers += plans[i].s_pp;
+                        missing -= plans[i].s_pp as i64;
+                        progressed = true;
+                        if missing == 0 {
+                            break 'outer;
+                        }
+                    }
+                    if !progressed {
+                        break;
+                    }
+                }
+                if missing != 0 {
+                    return Sharding { plans, feasible: false };
+                }
+            }
+        } else {
+            return Sharding { plans, feasible: false };
+        }
+    }
+    Sharding { plans, feasible: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::H2_100B;
+    use crate::hetero::{ChipGroup, ChipKind};
+
+    fn groups_ab() -> Vec<ChipGroup> {
+        vec![ChipGroup::new(ChipKind::A, 256), ChipGroup::new(ChipKind::B, 256)]
+    }
+
+    #[test]
+    fn layers_sum_to_model_total() {
+        let groups = groups_ab();
+        let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        assert_eq!(s.plans.iter().map(|p| p.layers).sum::<usize>(), 96);
+    }
+
+    #[test]
+    fn faster_group_receives_more_layers() {
+        let groups = groups_ab();
+        let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        // B is faster per layer than A, so B's stages should carry >= layers.
+        assert!(s.plans[1].layers >= s.plans[0].layers,
+                "A={} B={}", s.plans[0].layers, s.plans[1].layers);
+    }
+
+    #[test]
+    fn uniform_within_group() {
+        let groups = groups_ab();
+        let shapes = [GroupShape { s_tp: 4, s_pp: 12 }, GroupShape { s_tp: 4, s_pp: 16 }];
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        for p in &s.plans {
+            assert_eq!(p.layers % p.s_pp, 0, "layers uniform across a type's stages");
+        }
+    }
+
+    #[test]
+    fn memory_pressure_enables_recompute() {
+        // Chip C with little memory must end up recomputing.
+        let groups = vec![ChipGroup::new(ChipKind::C, 256)];
+        let shapes = [GroupShape { s_tp: 4, s_pp: 32 }];
+        let s = shard_layers(&H2_100B, &groups, &shapes, 2, 256, 4096, 1.0);
+        assert!(s.feasible);
+        assert!(s.plans[0].recompute);
+    }
+}

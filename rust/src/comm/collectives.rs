@@ -1,0 +1,239 @@
+//! DiComm collective primitives (§3.2): implemented for real over rank
+//! buffers (byte-accurate results) with virtual wire-time accounting from
+//! the timing model.
+//!
+//! The paper's DiComm builds collectives "via a combination of send/receive
+//! operations and native communication operators"; here the ring/tree
+//! algorithms are implemented explicitly so the coordinator's DP gradient
+//! synchronization and the SR&AG resharding path run the same code the
+//! timing model accounts for.
+
+/// Per-hop wire time for a message of `bytes` between ring neighbours.
+pub type HopTime<'a> = &'a dyn Fn(usize) -> f64;
+
+/// Timing result of a collective.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CollectiveCost {
+    /// Modeled wall-clock seconds on the critical path.
+    pub seconds: f64,
+    /// Total bytes crossing links (all ranks summed).
+    pub wire_bytes: usize,
+}
+
+const F32: usize = 4;
+
+/// Ring allreduce (sum): 2·(N−1) chunk steps, exactly the classic schedule.
+/// Buffers are modified in place; every rank ends with the elementwise sum.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], hop: HopTime) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    if n == 1 || len == 0 {
+        return CollectiveCost::default();
+    }
+
+    // Chunk boundaries (last chunk absorbs the remainder).
+    let chunk = len.div_ceil(n);
+    let bounds: Vec<(usize, usize)> =
+        (0..n).map(|c| (c * chunk, ((c + 1) * chunk).min(len))).collect();
+
+    let mut seconds = 0.0;
+    let mut wire_bytes = 0usize;
+
+    // Within one ring step every rank touches a *different* chunk (the
+    // written chunk (r−s) of dst r+1 is never the chunk (r+1−s) that rank
+    // reads as a source), so transfers can be applied in place through one
+    // reusable scratch buffer — no per-step allocations (§Perf).
+    let mut scratch = vec![0.0f32; chunk];
+
+    // Phase 1: reduce-scatter. Step s: rank r sends chunk (r - s) to r+1.
+    for s in 0..n - 1 {
+        let mut max_hop = 0.0f64;
+        for r in 0..n {
+            let c = (r + n - s) % n;
+            let (lo, hi) = bounds[c];
+            if lo >= hi { continue; }
+            let len = hi - lo;
+            scratch[..len].copy_from_slice(&bufs[r][lo..hi]);
+            let dst = (r + 1) % n;
+            for (d, v) in bufs[dst][lo..hi].iter_mut().zip(&scratch[..len]) {
+                *d += *v;
+            }
+            max_hop = max_hop.max(hop(len * F32));
+            wire_bytes += len * F32;
+        }
+        seconds += max_hop;
+    }
+
+    // Phase 2: allgather of the reduced chunks. After reduce-scatter, rank r
+    // holds the fully reduced chunk (r + 1) mod n.
+    for s in 0..n - 1 {
+        let mut max_hop = 0.0f64;
+        for r in 0..n {
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = bounds[c];
+            if lo >= hi { continue; }
+            let len = hi - lo;
+            scratch[..len].copy_from_slice(&bufs[r][lo..hi]);
+            bufs[(r + 1) % n][lo..hi].copy_from_slice(&scratch[..len]);
+            max_hop = max_hop.max(hop(len * F32));
+            wire_bytes += len * F32;
+        }
+        seconds += max_hop;
+    }
+
+    CollectiveCost { seconds, wire_bytes }
+}
+
+/// Ring allgather: every rank contributes its buffer; all ranks end with the
+/// concatenation (rank-major). Returns (gathered, cost).
+pub fn ring_allgather(bufs: &[Vec<f32>], hop: HopTime) -> (Vec<Vec<f32>>, CollectiveCost) {
+    let n = bufs.len();
+    let total: usize = bufs.iter().map(|b| b.len()).sum();
+    let mut out: Vec<Vec<f32>> = vec![Vec::with_capacity(total); n];
+    let mut gathered: Vec<f32> = Vec::with_capacity(total);
+    for b in bufs {
+        gathered.extend_from_slice(b);
+    }
+    for o in out.iter_mut() {
+        o.extend_from_slice(&gathered);
+    }
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    for s in 0..n.saturating_sub(1) {
+        let mut max_hop = 0.0f64;
+        for r in 0..n {
+            let c = (r + n - s) % n;
+            let bytes = bufs[c].len() * F32;
+            max_hop = max_hop.max(hop(bytes));
+            wire += bytes;
+        }
+        seconds += max_hop;
+        let _ = s;
+    }
+    (out, CollectiveCost { seconds, wire_bytes: wire })
+}
+
+/// Binomial-tree broadcast from `root`. Buffers of non-root ranks are
+/// overwritten with the root's data.
+pub fn tree_broadcast(bufs: &mut [Vec<f32>], root: usize, hop: HopTime) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(root < n);
+    let data = bufs[root].clone();
+    let bytes = data.len() * F32;
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    // Rounds double the informed set; each round is one hop deep.
+    let mut informed = 1usize;
+    while informed < n {
+        let senders = informed.min(n - informed);
+        seconds += hop(bytes);
+        wire += senders * bytes;
+        informed += senders;
+    }
+    for (r, b) in bufs.iter_mut().enumerate() {
+        if r != root {
+            b.clear();
+            b.extend_from_slice(&data);
+        }
+    }
+    CollectiveCost { seconds, wire_bytes: wire }
+}
+
+/// Plain point-to-point copy (the pipeline's activation hand-off).
+pub fn send_recv(src: &[f32], dst: &mut Vec<f32>, hop: HopTime) -> CollectiveCost {
+    dst.clear();
+    dst.extend_from_slice(src);
+    CollectiveCost { seconds: hop(src.len() * F32), wire_bytes: src.len() * F32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn unit_hop(_bytes: usize) -> f64 {
+        1.0
+    }
+
+    #[test]
+    fn allreduce_sums_all_ranks() {
+        let mut bufs = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![100.0, 200.0, 300.0, 400.0, 500.0],
+        ];
+        ring_allreduce(&mut bufs, &unit_hop);
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0, 333.0, 444.0, 555.0]);
+        }
+    }
+
+    #[test]
+    fn allreduce_cost_is_2n_minus_2_steps() {
+        let mut bufs = vec![vec![0.0f32; 64]; 4];
+        let c = ring_allreduce(&mut bufs, &unit_hop);
+        assert_eq!(c.seconds, 6.0); // 2*(4-1) steps of unit time
+    }
+
+    #[test]
+    fn allreduce_single_rank_noop() {
+        let mut bufs = vec![vec![7.0f32; 3]];
+        let c = ring_allreduce(&mut bufs, &unit_hop);
+        assert_eq!(c.seconds, 0.0);
+        assert_eq!(bufs[0], vec![7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn allreduce_property_matches_naive_sum() {
+        prop::check(40, |rng: &mut Rng| {
+            let n = rng.usize(2, 7);
+            let len = rng.usize(1, 40);
+            let mut bufs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect();
+            let expect: Vec<f32> = (0..len)
+                .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>())
+                .collect();
+            ring_allreduce(&mut bufs, &unit_hop);
+            for b in &bufs {
+                for (x, e) in b.iter().zip(&expect) {
+                    prop::assert_close(*x as f64, *e as f64, 1e-4, "allreduce sum")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allgather_concatenates_rank_major() {
+        let bufs = vec![vec![1.0f32], vec![2.0], vec![3.0]];
+        let (out, cost) = ring_allgather(&bufs, &unit_hop);
+        for o in &out {
+            assert_eq!(o, &vec![1.0, 2.0, 3.0]);
+        }
+        assert_eq!(cost.seconds, 2.0);
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let mut bufs = vec![vec![0.0f32; 4]; 5];
+        bufs[2] = vec![9.0, 8.0, 7.0, 6.0];
+        let c = tree_broadcast(&mut bufs, 2, &unit_hop);
+        for b in &bufs {
+            assert_eq!(b, &vec![9.0, 8.0, 7.0, 6.0]);
+        }
+        // ceil(log2(5)) = 3 rounds.
+        assert_eq!(c.seconds, 3.0);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let mut bufs = vec![vec![0.0f32; 8]; 2];
+        let c = ring_allreduce(&mut bufs, &unit_hop);
+        // n=2: chunks of 4 floats; 2 steps, each moving 2 ranks * 16 bytes.
+        assert_eq!(c.wire_bytes, 2 * 2 * 16);
+    }
+}

@@ -1,0 +1,221 @@
+//! In-process DiComm fabric: real data movement between worker threads plus
+//! a modeled (virtual) wall clock per rank.
+//!
+//! The coordinator's pipeline-stage workers exchange *actual tensors*
+//! through this fabric (so training numerics are real), while every message
+//! also advances the ranks' virtual clocks using the DiComm timing model.
+//! Experiments that compare strategies (Fig 12, Table 9) read the virtual
+//! clocks; correctness-oriented callers just use the data.
+//!
+//! Clock semantics (LogP-style):
+//!   depart  = clock[src]                    (send is non-blocking)
+//!   arrive  = depart + latency(bytes)
+//!   clock[dst] = max(clock[dst], arrive)    (applied at recv)
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// Message latency model: f(src, dst, bytes) -> seconds.
+pub type LatencyFn = Arc<dyn Fn(usize, usize, usize) -> f64 + Send + Sync>;
+
+struct Wire {
+    src: usize,
+    tag: u64,
+    depart: f64,
+    latency: f64,
+    data: Vec<f32>,
+}
+
+struct Shared {
+    clocks: Mutex<Vec<f64>>,
+    /// Total wire latency charged to each rank (comm-only accounting).
+    wire: Mutex<Vec<f64>>,
+    latency: LatencyFn,
+}
+
+/// One rank's handle onto the fabric.
+pub struct Endpoint {
+    rank: usize,
+    txs: Vec<Sender<Wire>>,
+    rx: Receiver<Wire>,
+    stash: HashMap<(usize, u64), Vec<Wire>>,
+    shared: Arc<Shared>,
+}
+
+/// Build a fabric of `n` endpoints with the given latency model.
+pub fn fabric(n: usize, latency: LatencyFn) -> Vec<Endpoint> {
+    let shared = Arc::new(Shared {
+        clocks: Mutex::new(vec![0.0; n]),
+        wire: Mutex::new(vec![0.0; n]),
+        latency,
+    });
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Endpoint {
+            rank,
+            txs: txs.clone(),
+            rx,
+            stash: HashMap::new(),
+            shared: shared.clone(),
+        })
+        .collect()
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Current virtual time of this rank.
+    pub fn now(&self) -> f64 {
+        self.shared.clocks.lock().unwrap()[self.rank]
+    }
+
+    /// Advance this rank's virtual clock by `dt` seconds (compute time).
+    pub fn advance(&self, dt: f64) {
+        self.shared.clocks.lock().unwrap()[self.rank] += dt;
+    }
+
+    /// Non-blocking send of `data` to `dst` with a user tag.
+    pub fn send(&self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        let bytes = data.len() * 4;
+        let (depart, latency) = {
+            let clocks = self.shared.clocks.lock().unwrap();
+            (clocks[self.rank], (self.shared.latency)(self.rank, dst, bytes))
+        };
+        self.txs[dst]
+            .send(Wire { src: self.rank, tag, depart, latency, data })
+            .map_err(|_| anyhow!("rank {dst} hung up"))
+    }
+
+    /// Blocking receive of the next message from `src` with `tag`.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        loop {
+            if let Some(q) = self.stash.get_mut(&(src, tag)) {
+                if !q.is_empty() {
+                    let w = q.remove(0);
+                    self.apply_arrival(&w);
+                    return Ok(w.data);
+                }
+            }
+            let w = self.rx.recv().map_err(|_| anyhow!("fabric closed"))?;
+            if w.src == src && w.tag == tag {
+                self.apply_arrival(&w);
+                return Ok(w.data);
+            }
+            self.stash.entry((w.src, w.tag)).or_default().push(w);
+        }
+    }
+
+    fn apply_arrival(&self, w: &Wire) {
+        let mut clocks = self.shared.clocks.lock().unwrap();
+        let arrive = w.depart + w.latency;
+        if arrive > clocks[self.rank] {
+            clocks[self.rank] = arrive;
+        }
+        self.shared.wire.lock().unwrap()[self.rank] += w.latency;
+    }
+
+    /// Total wire latency charged to this rank (comm-only virtual time).
+    pub fn wire_total(&self) -> f64 {
+        self.shared.wire.lock().unwrap()[self.rank]
+    }
+
+    /// Charge extra wire time to this rank (e.g. collective costs).
+    pub fn add_wire(&self, dt: f64) {
+        self.shared.wire.lock().unwrap()[self.rank] += dt;
+    }
+
+    /// Snapshot of every rank's virtual clock (for reports).
+    pub fn all_clocks(&self) -> Vec<f64> {
+        self.shared.clocks.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn flat_latency(secs: f64) -> LatencyFn {
+        Arc::new(move |_s, _d, _b| secs)
+    }
+
+    #[test]
+    fn data_roundtrip() {
+        let mut eps = fabric(2, flat_latency(0.001));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 7, vec![1.0, 2.0, 3.0]).unwrap();
+        let got = e0.recv(1, 7).unwrap();
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn clocks_advance_with_messages() {
+        let mut eps = fabric(2, flat_latency(0.5));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.advance(1.0); // sender busy until t=1.0
+        e1.send(0, 0, vec![0.0; 10]).unwrap();
+        e0.recv(1, 0).unwrap();
+        assert!((e0.now() - 1.5).abs() < 1e-12, "receiver clock {}", e0.now());
+    }
+
+    #[test]
+    fn receiver_clock_never_goes_backwards() {
+        let mut eps = fabric(2, flat_latency(0.1));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.advance(5.0);
+        e1.send(0, 0, vec![1.0]).unwrap();
+        e0.recv(1, 0).unwrap();
+        assert_eq!(e0.now(), 5.0);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let mut eps = fabric(2, flat_latency(0.0));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 1, vec![1.0]).unwrap();
+        e1.send(0, 2, vec![2.0]).unwrap();
+        assert_eq!(e0.recv(1, 2).unwrap(), vec![2.0]);
+        assert_eq!(e0.recv(1, 1).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn threaded_pipeline_hand_off() {
+        let mut eps = fabric(3, flat_latency(0.01));
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let t1 = thread::spawn(move || {
+            let mut e1 = e1;
+            let x = e1.recv(0, 0).unwrap();
+            e1.advance(0.1); // compute
+            e1.send(2, 0, x.iter().map(|v| v * 2.0).collect()).unwrap();
+        });
+        let t2 = thread::spawn(move || {
+            let mut e2 = e2;
+            let x = e2.recv(1, 0).unwrap();
+            (x, e2.now())
+        });
+        e0.send(1, 0, vec![1.0, 2.0]).unwrap();
+        t1.join().unwrap();
+        let (x, t) = t2.join().unwrap();
+        assert_eq!(x, vec![2.0, 4.0]);
+        // 0.01 (hop) + 0.1 (compute) + 0.01 (hop)
+        assert!((t - 0.12).abs() < 1e-9, "virtual time {t}");
+    }
+}

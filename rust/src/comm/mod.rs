@@ -1,0 +1,16 @@
+//! DiComm: the unified heterogeneous communication library (§3.2).
+//!
+//! * [`model`] — calibrated timing model for the three strategies
+//!   (CPU-mediated TCP, CPU-mediated RDMA, device-direct RDMA).
+//! * [`collectives`] — byte-accurate ring allreduce / allgather / broadcast
+//!   with critical-path timing.
+//! * [`fabric`] — in-process transport for the coordinator's stage workers:
+//!   real tensors + LogP-style virtual clocks.
+
+pub mod collectives;
+pub mod fabric;
+pub mod model;
+
+pub use collectives::{ring_allgather, ring_allreduce, send_recv, tree_broadcast, CollectiveCost};
+pub use fabric::{fabric, Endpoint, LatencyFn};
+pub use model::{cross_node_time, intra_node_time, p2p_latency, CommMode};

@@ -1,0 +1,161 @@
+//! JSON-driven configuration for clusters, experiments and training jobs.
+//!
+//! The CLI accepts `--config <file.json>` anywhere it accepts inline flags;
+//! this module is the typed layer over [`crate::util::json`]. Example:
+//!
+//! ```json
+//! {
+//!   "cluster": { "name": "lab", "groups": [{"chip": "A", "chips": 256},
+//!                                           {"chip": "B", "chips": 256}] },
+//!   "gbs_tokens": 2097152,
+//!   "train": {
+//!     "model": "h2_100m",
+//!     "stages": [{"prefix": "first_l10", "chip": "A"},
+//!                {"prefix": "last_l6", "chip": "B"}],
+//!     "dp": 1, "micro_batches": 2, "steps": 100, "lr": 4e-4,
+//!     "comm": "ddr", "fine_overlap": true
+//!   }
+//! }
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::comm::CommMode;
+use crate::coordinator::{StagePlan, TrainConfig};
+use crate::hetero::{ChipKind, Cluster};
+use crate::topology::NicAssignment;
+use crate::util::json::Value;
+
+/// Top-level config file.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cluster: Option<Cluster>,
+    pub gbs_tokens: Option<usize>,
+    pub train: Option<TrainConfig>,
+}
+
+fn parse_chip(v: &Value) -> Result<ChipKind> {
+    let s = v.str()?;
+    ChipKind::parse(s).ok_or_else(|| anyhow!("unknown chip `{s}`"))
+}
+
+fn parse_cluster(v: &Value) -> Result<Cluster> {
+    let name = v.opt("name").map(|n| n.str().map(str::to_string)).transpose()?
+        .unwrap_or_else(|| "config".to_string());
+    let mut groups = Vec::new();
+    for g in v.get("groups")?.arr()? {
+        groups.push((parse_chip(g.get("chip")?)?, g.get("chips")?.usize()?));
+    }
+    Ok(Cluster::new(&name, groups))
+}
+
+fn parse_train(v: &Value) -> Result<TrainConfig> {
+    let mut stages = Vec::new();
+    for s in v.get("stages")?.arr()? {
+        stages.push(StagePlan {
+            prefix: s.get("prefix")?.str()?.to_string(),
+            chip: parse_chip(s.get("chip")?)?,
+        });
+    }
+    let comm = match v.opt("comm") {
+        Some(c) => {
+            let text = c.str()?;
+            CommMode::parse(text).ok_or_else(|| anyhow!("bad comm `{text}`"))?
+        }
+        None => CommMode::DeviceDirect,
+    };
+    let get_usize = |key: &str, default: usize| -> Result<usize> {
+        v.opt(key).map(|x| x.usize()).transpose().map(|o| o.unwrap_or(default))
+    };
+    Ok(TrainConfig {
+        model: v.get("model")?.str()?.to_string(),
+        stages,
+        dp: get_usize("dp", 1)?,
+        micro_batches: get_usize("micro_batches", 2)?,
+        steps: get_usize("steps", 20)?,
+        lr: v.opt("lr").map(|x| x.num()).transpose()?.unwrap_or(1e-3) as f32,
+        seed: v.opt("seed").map(|x| x.u64()).transpose()?.unwrap_or(42),
+        comm,
+        nic_assignment: match v.opt("nic_affinity").map(|x| x.bool()).transpose()? {
+            Some(false) => NicAssignment::NonAffinity,
+            _ => NicAssignment::Affinity,
+        },
+        fine_overlap: v.opt("fine_overlap").map(|x| x.bool()).transpose()?.unwrap_or(true),
+        perturb: v.opt("perturb").map(|x| x.bool()).transpose()?.unwrap_or(false),
+        log_every: get_usize("log_every", 10)?,
+    })
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let v = Value::parse(text)?;
+        Ok(Config {
+            cluster: v.opt("cluster").map(parse_cluster).transpose()
+                .context("parsing `cluster`")?,
+            gbs_tokens: v.opt("gbs_tokens").map(|x| x.usize()).transpose()?,
+            train: v.opt("train").map(parse_train).transpose()
+                .context("parsing `train`")?,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Config::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"{
+        "cluster": {"name": "lab", "groups": [{"chip": "A", "chips": 256},
+                                               {"chip": "B", "chips": 512}]},
+        "gbs_tokens": 2097152,
+        "train": {"model": "h2_100m",
+                  "stages": [{"prefix": "first_l10", "chip": "A"},
+                             {"prefix": "last_l6", "chip": "B"}],
+                  "dp": 2, "micro_batches": 4, "steps": 50, "lr": 0.0004,
+                  "comm": "tcp", "fine_overlap": false, "nic_affinity": false}
+    }"#;
+
+    #[test]
+    fn full_config_parses() {
+        let c = Config::parse(FULL).unwrap();
+        let cluster = c.cluster.unwrap();
+        assert_eq!(cluster.total_chips(), 768);
+        assert_eq!(c.gbs_tokens, Some(2097152));
+        let t = c.train.unwrap();
+        assert_eq!(t.model, "h2_100m");
+        assert_eq!(t.stages.len(), 2);
+        assert_eq!(t.dp, 2);
+        assert_eq!(t.comm, crate::comm::CommMode::TcpCpu);
+        assert!(!t.fine_overlap);
+        assert_eq!(t.nic_assignment, crate::topology::NicAssignment::NonAffinity);
+        assert!((t.lr - 4e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = Config::parse(r#"{"train": {"model": "h2_tiny",
+            "stages": [{"prefix": "first_l2", "chip": "A"},
+                       {"prefix": "last_l2", "chip": "B"}]}}"#).unwrap();
+        let t = c.train.unwrap();
+        assert_eq!(t.dp, 1);
+        assert_eq!(t.steps, 20);
+        assert_eq!(t.comm, crate::comm::CommMode::DeviceDirect);
+        assert!(t.fine_overlap);
+    }
+
+    #[test]
+    fn bad_chip_errors() {
+        let e = Config::parse(r#"{"cluster": {"groups": [{"chip": "Z", "chips": 8}]}}"#);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn empty_config_is_fine() {
+        let c = Config::parse("{}").unwrap();
+        assert!(c.cluster.is_none() && c.train.is_none());
+    }
+}

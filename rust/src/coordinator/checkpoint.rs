@@ -1,0 +1,215 @@
+//! Checkpointing: save/restore stage parameters and optimizer state.
+//!
+//! Binary format (little-endian), one file per pipeline stage:
+//!
+//! ```text
+//! magic "H2CKPT01" | step u64 | n_tensors u64 |
+//!   per tensor: name_len u64, name bytes, rank u64, dims u64..., f32 data
+//! ```
+//!
+//! Params, Adam m and Adam v are stored as three named sections
+//! (`p.<name>`, `m.<name>`, `v.<name>`), so a checkpoint restores training
+//! exactly (bitwise) on the same artifact set.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, ParamMeta};
+
+const MAGIC: &[u8; 8] = b"H2CKPT01";
+
+/// A stage's full training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageState {
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+}
+
+fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_tensor(w: &mut impl Write, name: &str, t: &HostTensor) -> Result<()> {
+    write_u64(w, name.len() as u64)?;
+    w.write_all(name.as_bytes())?;
+    write_u64(w, t.shape().len() as u64)?;
+    for &d in t.shape() {
+        write_u64(w, d as u64)?;
+    }
+    let data = t.as_f32()?;
+    // Safe little-endian serialization.
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<(String, HostTensor)> {
+    let name_len = read_u64(r)? as usize;
+    if name_len > 4096 {
+        bail!("corrupt checkpoint: name length {name_len}");
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("tensor name not utf-8")?;
+    let rank = read_u64(r)? as usize;
+    if rank > 8 {
+        bail!("corrupt checkpoint: rank {rank}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(r)? as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((name, HostTensor::F32 { shape, data }))
+}
+
+/// Save one stage's state.
+pub fn save(path: impl AsRef<Path>, metas: &[ParamMeta], state: &StageState) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    w.write_all(MAGIC)?;
+    write_u64(&mut w, state.step)?;
+    write_u64(&mut w, 3 * metas.len() as u64)?;
+    for (section, tensors) in [("p", &state.params), ("m", &state.m), ("v", &state.v)] {
+        anyhow::ensure!(tensors.len() == metas.len(), "tensor/meta arity mismatch");
+        for (meta, t) in metas.iter().zip(tensors.iter()) {
+            write_tensor(&mut w, &format!("{section}.{}", meta.name), t)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load one stage's state, validating against the artifact's param layout.
+pub fn load(path: impl AsRef<Path>, metas: &[ParamMeta]) -> Result<StageState> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an H2 checkpoint (bad magic)");
+    }
+    let step = read_u64(&mut r)?;
+    let n = read_u64(&mut r)? as usize;
+    if n != 3 * metas.len() {
+        bail!("checkpoint has {n} tensors, artifact expects {}", 3 * metas.len());
+    }
+    let mut sections: Vec<Vec<HostTensor>> = vec![Vec::new(), Vec::new(), Vec::new()];
+    for (si, section) in ["p", "m", "v"].iter().enumerate() {
+        for meta in metas {
+            let (name, t) = read_tensor(&mut r)?;
+            let expect = format!("{section}.{}", meta.name);
+            if name != expect {
+                bail!("checkpoint tensor `{name}` where `{expect}` expected");
+            }
+            if t.shape() != meta.shape.as_slice() {
+                bail!("`{name}` shape {:?} != artifact {:?}", t.shape(), meta.shape);
+            }
+            sections[si].push(t);
+        }
+    }
+    let v = sections.pop().unwrap();
+    let m = sections.pop().unwrap();
+    let params = sections.pop().unwrap();
+    Ok(StageState { step, params, m, v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::{init_params, zeros_like};
+
+    fn metas() -> Vec<ParamMeta> {
+        vec![
+            ParamMeta { name: "embed".into(), shape: vec![16, 8] },
+            ParamMeta { name: "layer0.wq".into(), shape: vec![8, 8] },
+        ]
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("h2_ckpt_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let metas = metas();
+        let state = StageState {
+            step: 42,
+            params: init_params(&metas, 7),
+            m: init_params(&metas, 8),
+            v: zeros_like(&metas),
+        };
+        let p = tmp("roundtrip.ckpt");
+        save(&p, &metas, &state).unwrap();
+        let loaded = load(&p, &metas).unwrap();
+        assert_eq!(loaded, state);
+    }
+
+    #[test]
+    fn wrong_layout_rejected() {
+        let metas = metas();
+        let state = StageState {
+            step: 1,
+            params: init_params(&metas, 1),
+            m: zeros_like(&metas),
+            v: zeros_like(&metas),
+        };
+        let p = tmp("layout.ckpt");
+        save(&p, &metas, &state).unwrap();
+        // Loading against a different layout must fail loudly.
+        let other = vec![ParamMeta { name: "embed".into(), shape: vec![16, 8] },
+                         ParamMeta { name: "layer0.wk".into(), shape: vec![8, 8] }];
+        assert!(load(&p, &other).is_err());
+        let fewer = &metas[..1];
+        assert!(load(&p, fewer).is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let p = tmp("bad.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        let err = load(&p, &metas()).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let metas = metas();
+        let state = StageState {
+            step: 3,
+            params: init_params(&metas, 2),
+            m: zeros_like(&metas),
+            v: zeros_like(&metas),
+        };
+        let p = tmp("trunc.ckpt");
+        save(&p, &metas, &state).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p, &metas).is_err());
+    }
+}

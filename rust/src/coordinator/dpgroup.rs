@@ -1,0 +1,127 @@
+//! Data-parallel gradient synchronization group.
+//!
+//! All DP replicas of one pipeline stage deposit their flattened gradients;
+//! the last depositor runs the DiComm ring allreduce (real byte math +
+//! modeled wire time) and wakes the group. Every member leaves with the
+//! summed gradient and the collective's modeled cost.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::comm::collectives::{ring_allreduce, CollectiveCost};
+
+struct State {
+    slots: Vec<Option<Vec<f32>>>,
+    generation: u64,
+    done: usize,
+    cost: CollectiveCost,
+}
+
+/// Reusable DP allreduce rendezvous for one stage.
+pub struct DpGroup {
+    state: Mutex<State>,
+    cond: Condvar,
+    hop_seconds_per_byte: f64,
+    hop_base: f64,
+}
+
+impl DpGroup {
+    /// `hop(bytes) = hop_base + bytes * hop_seconds_per_byte` is the DiComm
+    /// per-hop model for the DP ring links of this stage.
+    pub fn new(dp: usize, hop_base: f64, hop_seconds_per_byte: f64) -> Arc<DpGroup> {
+        Arc::new(DpGroup {
+            state: Mutex::new(State {
+                slots: vec![None; dp],
+                generation: 0,
+                done: 0,
+                cost: CollectiveCost::default(),
+            }),
+            cond: Condvar::new(),
+            hop_seconds_per_byte,
+            hop_base,
+        })
+    }
+
+    /// Allreduce (sum) `grads` across the group; blocks until all ranks
+    /// arrive. Returns the modeled collective cost.
+    pub fn allreduce(&self, dp_rank: usize, grads: &mut Vec<f32>) -> CollectiveCost {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.generation;
+        st.slots[dp_rank] = Some(std::mem::take(grads));
+        st.done += 1;
+        let dp = st.slots.len();
+        if st.done == dp {
+            // Last arrival performs the reduction for the whole group.
+            let mut bufs: Vec<Vec<f32>> = st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            let base = self.hop_base;
+            let per_byte = self.hop_seconds_per_byte;
+            let cost = ring_allreduce(&mut bufs, &|bytes| base + bytes as f64 * per_byte);
+            for (slot, buf) in st.slots.iter_mut().zip(bufs) {
+                *slot = Some(buf);
+            }
+            st.cost = cost;
+            st.generation += 1;
+            st.done = 0;
+            self.cond.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.cond.wait(st).unwrap();
+            }
+        }
+        *grads = st.slots[dp_rank].take().unwrap();
+        st.cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn allreduce_across_threads_sums() {
+        let dp = 4;
+        let group = DpGroup::new(dp, 1e-6, 1e-9);
+        let mut handles = Vec::new();
+        for rank in 0..dp {
+            let g = group.clone();
+            handles.push(thread::spawn(move || {
+                let mut grads = vec![(rank + 1) as f32; 16];
+                let cost = g.allreduce(rank, &mut grads);
+                (grads, cost)
+            }));
+        }
+        for h in handles {
+            let (grads, cost) = h.join().unwrap();
+            assert!(grads.iter().all(|&x| x == 10.0)); // 1+2+3+4
+            assert!(cost.seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn reusable_across_steps() {
+        let dp = 2;
+        let group = DpGroup::new(dp, 0.0, 0.0);
+        for step in 0..3 {
+            let g0 = group.clone();
+            let t = thread::spawn(move || {
+                let mut a = vec![step as f32; 4];
+                g0.allreduce(0, &mut a);
+                a
+            });
+            let mut b = vec![1.0f32; 4];
+            group.allreduce(1, &mut b);
+            let a = t.join().unwrap();
+            assert_eq!(a, b);
+            assert!(a.iter().all(|&x| x == step as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let group = DpGroup::new(1, 1e-6, 1e-9);
+        let mut grads = vec![3.0f32; 8];
+        let cost = group.allreduce(0, &mut grads);
+        assert!(grads.iter().all(|&x| x == 3.0));
+        assert_eq!(cost.seconds, 0.0);
+    }
+}

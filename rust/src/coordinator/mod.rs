@@ -1,0 +1,14 @@
+//! The H2 training coordinator (L3): real 1F1B pipeline training over PJRT
+//! stage executables with DiComm-modeled communication.
+
+pub mod checkpoint;
+pub mod data;
+pub mod dpgroup;
+pub mod params;
+pub mod schedule;
+pub mod train;
+
+pub use data::Corpus;
+pub use dpgroup::DpGroup;
+pub use schedule::{in_flight, one_f1b_order, Op};
+pub use train::{train, StagePlan, TrainConfig, TrainReport};

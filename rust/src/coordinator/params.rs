@@ -1,0 +1,125 @@
+//! Parameter store for pipeline-stage workers: initialization matching the
+//! L2 model's init scheme, plus flatten/unflatten helpers for DiComm
+//! collectives.
+
+use anyhow::Result;
+
+use crate::runtime::{HostTensor, ParamMeta};
+use crate::util::rng::Rng;
+
+/// Initialize stage parameters to the same scheme as
+/// `compile/model.py::init_params`: ones for norm gains, N(0, 0.02) for the
+/// embedding, N(0, fan_in^-1/2) for matmul weights.
+pub fn init_params(metas: &[ParamMeta], seed: u64) -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed);
+    metas
+        .iter()
+        .map(|m| {
+            let n = m.numel();
+            let mut data = vec![0.0f32; n];
+            let base = m.name.rsplit('.').next().unwrap_or(&m.name);
+            match base {
+                "attn_norm" | "mlp_norm" | "final_norm" => data.fill(1.0),
+                "embed" => rng.fill_normal(&mut data, 0.02),
+                _ => {
+                    let fan_in = *m.shape.first().unwrap_or(&1) as f32;
+                    rng.fill_normal(&mut data, fan_in.powf(-0.5));
+                }
+            }
+            HostTensor::f32(&m.shape, data)
+        })
+        .collect()
+}
+
+/// Zero tensors with the same shapes (optimizer state / grad accumulators).
+pub fn zeros_like(metas: &[ParamMeta]) -> Vec<HostTensor> {
+    metas
+        .iter()
+        .map(|m| HostTensor::f32(&m.shape, vec![0.0; m.numel()]))
+        .collect()
+}
+
+/// Accumulate `src` into `acc` elementwise (gradient accumulation).
+pub fn accumulate(acc: &mut [HostTensor], src: &[HostTensor]) -> Result<()> {
+    assert_eq!(acc.len(), src.len());
+    for (a, s) in acc.iter_mut().zip(src) {
+        let a = a.as_f32_mut()?;
+        let s = s.as_f32()?;
+        for (x, y) in a.iter_mut().zip(s) {
+            *x += *y;
+        }
+    }
+    Ok(())
+}
+
+/// Concatenate f32 tensors into one flat buffer (for ring allreduce).
+pub fn flatten(tensors: &[HostTensor]) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(tensors.iter().map(|t| t.len()).sum());
+    for t in tensors {
+        out.extend_from_slice(t.as_f32()?);
+    }
+    Ok(out)
+}
+
+/// Scatter a flat buffer back into the tensor list (inverse of `flatten`).
+pub fn unflatten(tensors: &mut [HostTensor], flat: &[f32]) -> Result<()> {
+    let mut off = 0;
+    for t in tensors.iter_mut() {
+        let dst = t.as_f32_mut()?;
+        dst.copy_from_slice(&flat[off..off + dst.len()]);
+        off += dst.len();
+    }
+    assert_eq!(off, flat.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas() -> Vec<ParamMeta> {
+        vec![
+            ParamMeta { name: "embed".into(), shape: vec![8, 4] },
+            ParamMeta { name: "layer0.attn_norm".into(), shape: vec![4] },
+            ParamMeta { name: "layer0.wq".into(), shape: vec![4, 4] },
+        ]
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = init_params(&metas(), 42);
+        let b = init_params(&metas(), 42);
+        assert_eq!(a, b);
+        let c = init_params(&metas(), 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn norm_gains_are_ones() {
+        let p = init_params(&metas(), 1);
+        assert!(p[1].as_f32().unwrap().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = init_params(&metas(), 7);
+        let flat = flatten(&p).unwrap();
+        assert_eq!(flat.len(), 8 * 4 + 4 + 16);
+        let mut q = zeros_like(&metas());
+        unflatten(&mut q, &flat).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut acc = zeros_like(&metas());
+        let p = init_params(&metas(), 3);
+        accumulate(&mut acc, &p).unwrap();
+        accumulate(&mut acc, &p).unwrap();
+        for (a, b) in acc.iter().zip(&p) {
+            for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+                assert!((x - 2.0 * y).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! 1F1B micro-batch issue order (shared by the coordinator's stage workers;
+//! mirrors the simulator's schedule so real runs and simulated runs execute
+//! the same op sequence).
+
+/// One operation in a stage's static 1F1B schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+/// The classic 1F1B order for `stage` of `n_stages` with `b` micro-batches:
+/// `min(n_stages - stage, b)` warm-up forwards, then alternating
+/// backward/forward, then the drain of remaining backwards.
+pub fn one_f1b_order(stage: usize, n_stages: usize, b: usize) -> Vec<Op> {
+    let warm = (n_stages - stage).min(b);
+    let mut q = Vec::with_capacity(2 * b);
+    for m in 0..warm {
+        q.push(Op::Fwd(m));
+    }
+    let mut next_f = warm;
+    let mut next_b = 0;
+    while next_f < b {
+        q.push(Op::Bwd(next_b));
+        next_b += 1;
+        q.push(Op::Fwd(next_f));
+        next_f += 1;
+    }
+    while next_b < b {
+        q.push(Op::Bwd(next_b));
+        next_b += 1;
+    }
+    q
+}
+
+/// Peak number of in-flight micro-batches at `stage` under this schedule
+/// (the memory model's warm-up depth).
+pub fn in_flight(stage: usize, n_stages: usize, b: usize) -> usize {
+    (n_stages - stage).min(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn each_micro_forward_and_backward_once() {
+        prop::check(50, |rng| {
+            let s_n = rng.usize(1, 8);
+            let b = rng.usize(1, 20);
+            let stage = rng.usize(0, s_n);
+            let q = one_f1b_order(stage, s_n, b);
+            let fwds: Vec<usize> = q.iter().filter_map(|o| match o {
+                Op::Fwd(m) => Some(*m), _ => None }).collect();
+            let bwds: Vec<usize> = q.iter().filter_map(|o| match o {
+                Op::Bwd(m) => Some(*m), _ => None }).collect();
+            prop::assert_prop(fwds == (0..b).collect::<Vec<_>>(), "fwd order")?;
+            prop::assert_prop(bwds == (0..b).collect::<Vec<_>>(), "bwd order")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bwd_never_precedes_own_fwd() {
+        prop::check(50, |rng| {
+            let s_n = rng.usize(1, 8);
+            let b = rng.usize(1, 20);
+            let stage = rng.usize(0, s_n);
+            let q = one_f1b_order(stage, s_n, b);
+            let mut fwd_seen = vec![false; b];
+            for op in q {
+                match op {
+                    Op::Fwd(m) => fwd_seen[m] = true,
+                    Op::Bwd(m) => prop::assert_prop(fwd_seen[m], "bwd before fwd")?,
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn in_flight_bound_holds() {
+        // The schedule never holds more than in_flight() forward activations.
+        prop::check(50, |rng| {
+            let s_n = rng.usize(1, 8);
+            let b = rng.usize(1, 20);
+            let stage = rng.usize(0, s_n);
+            let q = one_f1b_order(stage, s_n, b);
+            let mut live = 0usize;
+            let mut peak = 0usize;
+            for op in q {
+                match op {
+                    Op::Fwd(_) => { live += 1; peak = peak.max(live); }
+                    Op::Bwd(_) => { live -= 1; }
+                }
+            }
+            prop::assert_prop(peak == in_flight(stage, s_n, b),
+                              format!("peak {peak} != {}", in_flight(stage, s_n, b)))
+        });
+    }
+
+    #[test]
+    fn last_stage_strictly_alternates() {
+        let q = one_f1b_order(3, 4, 4);
+        assert_eq!(q, vec![Op::Fwd(0), Op::Bwd(0), Op::Fwd(1), Op::Bwd(1),
+                           Op::Fwd(2), Op::Bwd(2), Op::Fwd(3), Op::Bwd(3)]);
+    }
+}

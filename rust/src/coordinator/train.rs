@@ -1,0 +1,470 @@
+//! The HeteroPP training coordinator: leader + per-stage worker threads.
+//!
+//! Each (pipeline stage × DP replica) runs as a worker thread executing the
+//! real 1F1B schedule over AOT-compiled PJRT stage executables: forward
+//! activations and backward gradients are real tensors moving through the
+//! DiComm fabric (real bytes + modeled wire time), DP gradients are summed
+//! with the real ring allreduce, and Adam updates run through the exported
+//! `*_update` executables. Python is never on this path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::{cross_node_time, fabric, CommMode, Endpoint};
+use crate::hetero::{spec, ChipKind};
+use crate::precision::Perturbation;
+use crate::runtime::{Executable, HostTensor, Runtime};
+use crate::sim::FINE_OVERLAP_HIDDEN;
+use crate::topology::NicAssignment;
+
+use super::data::Corpus;
+use super::dpgroup::DpGroup;
+use super::params::{accumulate, flatten, init_params, unflatten, zeros_like};
+use super::schedule::{one_f1b_order, Op};
+
+/// PJRT executables are thread-safe for concurrent execution (the TFRT CPU
+/// client serializes internally as needed); the raw pointers inside the
+/// `xla` crate types make them `!Send` by default, so the coordinator wraps
+/// them. See DESIGN.md §Runtime.
+struct SharedExe(Arc<Executable>);
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
+/// One pipeline stage of the training plan.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    /// Artifact prefix, e.g. `first_l8` (expects `{prefix}_fwd` etc.).
+    pub prefix: String,
+    /// Chip type this stage is mapped to (drives comm modeling + precision).
+    pub chip: ChipKind,
+}
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub stages: Vec<StagePlan>,
+    pub dp: usize,
+    pub micro_batches: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub comm: CommMode,
+    pub nic_assignment: NicAssignment,
+    /// Fine-grained P2P/compute overlap (§5) enabled.
+    pub fine_overlap: bool,
+    /// Inject per-chip operator noise (the Fig 5 vendor-stack model).
+    pub perturb: bool,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn quick(model: &str, stages: Vec<StagePlan>, dp: usize, micros: usize,
+                 steps: usize) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            stages,
+            dp,
+            micro_batches: micros,
+            steps,
+            lr: 1e-3,
+            seed: 42,
+            comm: CommMode::DeviceDirect,
+            nic_assignment: NicAssignment::Affinity,
+            fine_overlap: true,
+            perturb: false,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Mean loss per step (averaged over micro-batches and DP replicas).
+    pub losses: Vec<f64>,
+    /// Wall-clock seconds for the whole run.
+    pub wall_seconds: f64,
+    /// Modeled (virtual) seconds accumulated on the slowest rank.
+    pub virtual_seconds: f64,
+    /// Modeled communication-only seconds on the most-charged rank.
+    pub virtual_comm_seconds: f64,
+    /// Tokens processed per step.
+    pub tokens_per_step: usize,
+    /// Tokens per second (wall clock).
+    pub tokens_per_second: f64,
+}
+
+struct WorkerShared {
+    losses: Mutex<Vec<f64>>,
+    virtual_ns: AtomicU64,
+    comm_ns: AtomicU64,
+}
+
+/// Run a full training job; blocks until all steps finish.
+pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
+    let n_stages = cfg.stages.len();
+    if n_stages == 0 {
+        bail!("no stages configured");
+    }
+    let entry = rt.manifest.model(&cfg.model)?.clone();
+
+    // Load all executables up front (compile once, share across DP ranks).
+    let mut stage_exes: Vec<Vec<SharedExe>> = Vec::new();
+    let mut stage_meta = Vec::new();
+    for (si, sp) in cfg.stages.iter().enumerate() {
+        let is_first = si == 0;
+        let is_last = si == n_stages - 1;
+        let role = if is_first { "first" } else if is_last { "last" } else { "mid" };
+        if !sp.prefix.starts_with(role) {
+            bail!("stage {si} prefix `{}` does not match role `{role}`", sp.prefix);
+        }
+        let mut exes = Vec::new();
+        if is_last {
+            exes.push(SharedExe(rt.load(&cfg.model, &format!("{}_fwdbwd", sp.prefix))?));
+        } else {
+            exes.push(SharedExe(rt.load(&cfg.model, &format!("{}_fwd", sp.prefix))?));
+            exes.push(SharedExe(rt.load(&cfg.model, &format!("{}_bwd", sp.prefix))?));
+        }
+        exes.push(SharedExe(rt.load(&cfg.model, &format!("{}_update", sp.prefix))?));
+        let meta = exes[0].0.meta.clone();
+        stage_exes.push(exes);
+        stage_meta.push(meta);
+    }
+
+    // Fabric: rank = dp_rank * n_stages + stage.
+    let chips: Vec<ChipKind> = (0..cfg.dp * n_stages)
+        .map(|r| cfg.stages[r % n_stages].chip)
+        .collect();
+    let mode = cfg.comm;
+    let assign = cfg.nic_assignment;
+    let hidden_frac = if cfg.fine_overlap { 1.0 - FINE_OVERLAP_HIDDEN } else { 1.0 };
+    let lat_chips = chips.clone();
+    let latency: crate::comm::LatencyFn = Arc::new(move |s, d, bytes| {
+        cross_node_time(mode, bytes, &spec(lat_chips[s]), &spec(lat_chips[d]), assign)
+            * hidden_frac
+    });
+    let endpoints = fabric(cfg.dp * n_stages, latency);
+
+    // One DP rendezvous per stage; ring hops between same-kind nodes.
+    let dp_groups: Vec<Arc<DpGroup>> = (0..n_stages)
+        .map(|si| {
+            let sp = spec(cfg.stages[si].chip);
+            let nic_share = sp.nic_gbps * 1e9 * crate::topology::RDMA_EFFICIENCY
+                * sp.nics_per_node as f64 / sp.chips_per_node as f64;
+            DpGroup::new(cfg.dp, 3e-6, 1.0 / nic_share)
+        })
+        .collect();
+
+    let shared = Arc::new(WorkerShared {
+        losses: Mutex::new(vec![0.0; cfg.steps]),
+        virtual_ns: AtomicU64::new(0),
+        comm_ns: AtomicU64::new(0),
+    });
+    let corpus = Arc::new(Corpus::new(entry.vocab, cfg.seed));
+
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    let mut endpoints = endpoints;
+    // Spawn in reverse so we can pop endpoints by rank.
+    for dp_rank in (0..cfg.dp).rev() {
+        for si in (0..n_stages).rev() {
+            let ep = endpoints.pop().expect("endpoint per rank");
+            debug_assert_eq!(ep.rank(), dp_rank * n_stages + si);
+            let ctx = WorkerCtx {
+                stage: si,
+                n_stages,
+                dp_rank,
+                dp: cfg.dp,
+                cfg: cfg.clone(),
+                exes: stage_exes[si]
+                    .iter()
+                    .map(|e| SharedExe(e.0.clone()))
+                    .collect(),
+                meta_params: stage_meta[si].params.clone(),
+                micro_batch: stage_meta[si].micro_batch.unwrap_or(1),
+                seq: stage_meta[si].seq.unwrap_or(entry.seq_len),
+                hidden: entry.hidden,
+                dp_group: dp_groups[si].clone(),
+                shared: shared.clone(),
+                corpus: corpus.clone(),
+            };
+            handles.push(std::thread::spawn(move || worker(ctx, ep)));
+        }
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let losses = shared.losses.lock().unwrap().clone();
+    let tokens_per_step = cfg.micro_batches * cfg.dp
+        * stage_meta[0].micro_batch.unwrap_or(1) * stage_meta[0].seq.unwrap_or(entry.seq_len);
+    Ok(TrainReport {
+        losses,
+        wall_seconds: wall,
+        virtual_seconds: shared.virtual_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        virtual_comm_seconds: shared.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        tokens_per_step,
+        tokens_per_second: tokens_per_step as f64 * cfg.steps as f64 / wall,
+    })
+}
+
+struct WorkerCtx {
+    stage: usize,
+    n_stages: usize,
+    dp_rank: usize,
+    dp: usize,
+    cfg: TrainConfig,
+    exes: Vec<SharedExe>,
+    meta_params: Vec<crate::runtime::ParamMeta>,
+    micro_batch: usize,
+    seq: usize,
+    hidden: usize,
+    dp_group: Arc<DpGroup>,
+    shared: Arc<WorkerShared>,
+    corpus: Arc<Corpus>,
+}
+
+const DIR_FWD: u64 = 0;
+const DIR_BWD: u64 = 1;
+
+fn tag(step: usize, micro: usize, dir: u64) -> u64 {
+    (step as u64) << 24 | (micro as u64) << 1 | dir
+}
+
+fn worker(ctx: WorkerCtx, mut ep: Endpoint) -> Result<()> {
+    let is_first = ctx.stage == 0;
+    let is_last = ctx.stage == ctx.n_stages - 1;
+    let prev = ctx.dp_rank * ctx.n_stages + ctx.stage - (!is_first as usize);
+    let next = ctx.dp_rank * ctx.n_stages + ctx.stage + (!is_last as usize);
+
+    // Identical seed across DP ranks => identical initial replicas.
+    let mut params = init_params(&ctx.meta_params, ctx.cfg.seed ^ (ctx.stage as u64) << 8);
+    let mut m = zeros_like(&ctx.meta_params);
+    let mut v = zeros_like(&ctx.meta_params);
+    let mut perturb = ctx.cfg.perturb.then(|| {
+        Perturbation::new(ctx.cfg.stages[ctx.stage].chip,
+                          ctx.cfg.seed ^ ((ctx.stage * 31 + ctx.dp_rank) as u64))
+    });
+
+    let n_p = ctx.meta_params.len();
+    let order = one_f1b_order(ctx.stage, ctx.n_stages, ctx.cfg.micro_batches);
+    let act_shape = [ctx.micro_batch, ctx.seq, ctx.hidden];
+    let h_elems: usize = act_shape.iter().product();
+
+    for step in 0..ctx.cfg.steps {
+        let mut grad_acc = zeros_like(&ctx.meta_params);
+        let mut stash: Vec<Option<HostTensor>> = vec![None; ctx.cfg.micro_batches];
+        let mut dx_stash: Vec<Option<HostTensor>> = vec![None; ctx.cfg.micro_batches];
+        let mut step_loss = 0.0f64;
+
+        for &op in &order {
+            match op {
+                Op::Fwd(micro) => {
+                    // Input: tokens (first stage) or upstream activations.
+                    let x = if is_first {
+                        let (inp, _) = ctx.corpus.microbatch(step, micro, ctx.dp_rank,
+                                                             ctx.micro_batch, ctx.seq);
+                        HostTensor::i32(&[ctx.micro_batch, ctx.seq], inp)
+                    } else {
+                        let data = ep.recv(prev, tag(step, micro, DIR_FWD))?;
+                        anyhow::ensure!(data.len() == h_elems, "activation size mismatch");
+                        HostTensor::f32(&act_shape, data)
+                    };
+
+                    if is_last {
+                        // Fused fwd+bwd on the last stage.
+                        let (_, tgt) = ctx.corpus.microbatch(step, micro, ctx.dp_rank,
+                                                             ctx.micro_batch, ctx.seq);
+                        let targets = HostTensor::i32(&[ctx.micro_batch, ctx.seq], tgt);
+                        let mut inputs = params.clone();
+                        inputs.push(x);
+                        inputs.push(targets);
+                        let t0 = Instant::now();
+                        let out = ctx.exes[0].0.run(&inputs)
+                            .context("last-stage fwdbwd")?;
+                        ep.advance(t0.elapsed().as_secs_f64());
+                        step_loss += out[0].as_f32()?[0] as f64;
+                        dx_stash[micro] = Some(out[1].clone());
+                        accumulate(&mut grad_acc, &out[2..2 + n_p])?;
+                    } else {
+                        let mut inputs = params.clone();
+                        inputs.push(x.clone());
+                        let t0 = Instant::now();
+                        let out = ctx.exes[0].0.run(&inputs).context("stage fwd")?;
+                        ep.advance(t0.elapsed().as_secs_f64());
+                        stash[micro] = Some(x);
+                        ep.send(next, tag(step, micro, DIR_FWD),
+                                out[0].as_f32()?.to_vec())?;
+                    }
+                }
+                Op::Bwd(micro) => {
+                    if is_last {
+                        let dx = dx_stash[micro].take()
+                            .ok_or_else(|| anyhow!("missing dx for micro {micro}"))?;
+                        if ctx.n_stages > 1 {
+                            ep.send(prev, tag(step, micro, DIR_BWD), dx.as_f32()?.to_vec())?;
+                        }
+                    } else {
+                        let dy_data = ep.recv(next, tag(step, micro, DIR_BWD))?;
+                        let dy = HostTensor::f32(&act_shape, dy_data);
+                        let x = stash[micro].take()
+                            .ok_or_else(|| anyhow!("missing stash for micro {micro}"))?;
+                        let mut inputs = params.clone();
+                        inputs.push(x);
+                        inputs.push(dy);
+                        let t0 = Instant::now();
+                        let out = ctx.exes[1].0.run(&inputs).context("stage bwd")?;
+                        ep.advance(t0.elapsed().as_secs_f64());
+                        if is_first {
+                            accumulate(&mut grad_acc, &out[..n_p])?;
+                        } else {
+                            ep.send(prev, tag(step, micro, DIR_BWD),
+                                    out[0].as_f32()?.to_vec())?;
+                            accumulate(&mut grad_acc, &out[1..1 + n_p])?;
+                        }
+                    }
+                }
+            }
+        }
+
+        // DP gradient synchronization (real ring allreduce over DiComm).
+        let mut flat = flatten(&grad_acc)?;
+        let cost = ctx.dp_group.allreduce(ctx.dp_rank, &mut flat);
+        ep.advance(cost.seconds);
+        ep.add_wire(cost.seconds);
+        unflatten(&mut grad_acc, &flat)?;
+        if let Some(p) = perturb.as_mut() {
+            // Vendor-stack numerics model: correlated per-tensor noise.
+            p.apply_tensors(&mut grad_acc);
+        }
+
+        // Adam update through the exported executable.
+        let gscale = 1.0 / (ctx.cfg.micro_batches * ctx.dp) as f32;
+        let mut inputs = Vec::with_capacity(4 * n_p + 3);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(grad_acc.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32((step + 1) as f32));
+        inputs.push(HostTensor::scalar_f32(ctx.cfg.lr));
+        inputs.push(HostTensor::scalar_f32(gscale));
+        let t0 = Instant::now();
+        let update_exe = &ctx.exes[ctx.exes.len() - 1].0;
+        let out = update_exe.run(&inputs).context("update")?;
+        ep.advance(t0.elapsed().as_secs_f64());
+        params = out[..n_p].to_vec();
+        m = out[n_p..2 * n_p].to_vec();
+        v = out[2 * n_p..3 * n_p].to_vec();
+
+        if is_last {
+            let mut mean_loss = step_loss / ctx.cfg.micro_batches as f64 / ctx.dp as f64;
+            if let Some(p) = perturb.as_mut() {
+                // The chip's own forward numerics perturb the metric it
+                // reports (DiTorch §3.1.2: op-level noise surfaces in the
+                // observed loss before any trajectory divergence).
+                mean_loss = p.perturb_scalar(mean_loss);
+            }
+            let mut losses = ctx.shared.losses.lock().unwrap();
+            losses[step] += mean_loss;
+            if ctx.dp_rank == 0 && ctx.cfg.log_every > 0
+                && (step % ctx.cfg.log_every == 0 || step + 1 == ctx.cfg.steps)
+            {
+                eprintln!("[h2] step {:>4}  loss {:.4}", step, losses[step] * ctx.dp as f64
+                          / (ctx.dp_rank + 1) as f64);
+            }
+        }
+    }
+
+    // Record the slowest rank's virtual clock + comm-only time.
+    let ns = (ep.now() * 1e9) as u64;
+    ctx.shared.virtual_ns.fetch_max(ns, Ordering::Relaxed);
+    let cns = (ep.wire_total() * 1e9) as u64;
+    ctx.shared.comm_ns.fetch_max(cns, Ordering::Relaxed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Runtime::open("artifacts").unwrap())
+        } else {
+            None
+        }
+    }
+
+    fn tiny_stages_pp2() -> Vec<StagePlan> {
+        vec![
+            StagePlan { prefix: "first_l2".into(), chip: ChipKind::A },
+            StagePlan { prefix: "last_l2".into(), chip: ChipKind::B },
+        ]
+    }
+
+    #[test]
+    fn tiny_pp2_training_decreases_loss() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 1, 2, 12);
+        cfg.lr = 3e-3;
+        cfg.log_every = 0;
+        let report = train(&rt, &cfg).unwrap();
+        let first = report.losses[0];
+        let last = *report.losses.last().unwrap();
+        assert!(first > 6.5 && first < 7.5, "init loss ~ln(1024): {first}");
+        assert!(last < first - 0.3, "loss should fall: {first} -> {last}");
+        assert!(report.virtual_seconds > 0.0);
+    }
+
+    #[test]
+    fn tiny_pp3_with_mid_stage_runs() {
+        let Some(rt) = runtime() else { return };
+        let stages = vec![
+            StagePlan { prefix: "first_l1".into(), chip: ChipKind::A },
+            StagePlan { prefix: "mid_l2".into(), chip: ChipKind::B },
+            StagePlan { prefix: "last_l1".into(), chip: ChipKind::C },
+        ];
+        let mut cfg = TrainConfig::quick("h2_tiny", stages, 1, 3, 4);
+        cfg.log_every = 0;
+        let report = train(&rt, &cfg).unwrap();
+        assert_eq!(report.losses.len(), 4);
+        assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0));
+    }
+
+    #[test]
+    fn dp2_matches_dp1_with_double_micros() {
+        // DP=2 with b micro-batches must produce the same loss trajectory
+        // as DP=1 with 2b micro-batches (same global batch, same data up to
+        // dp_rank seeding) — here we just check DP=2 runs and losses fall.
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 2, 2, 8);
+        cfg.lr = 3e-3;
+        cfg.log_every = 0;
+        let report = train(&rt, &cfg).unwrap();
+        assert!(report.losses.last().unwrap() < &report.losses[0]);
+    }
+
+    #[test]
+    fn tcp_has_higher_virtual_time_than_ddr() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 1, 4, 2);
+        cfg.log_every = 0;
+        cfg.fine_overlap = false;
+        let ddr = train(&rt, &cfg).unwrap();
+        cfg.comm = CommMode::TcpCpu;
+        let tcp = train(&rt, &cfg).unwrap();
+        // Same real numerics...
+        for (a, b) in ddr.losses.iter().zip(&tcp.losses) {
+            assert!((a - b).abs() < 1e-9, "losses must be identical");
+        }
+        // ...but more modeled wire time (compute advances are measured
+        // wall time and noisy, so compare the comm-only accounting).
+        assert!(tcp.virtual_comm_seconds > ddr.virtual_comm_seconds,
+                "tcp {} vs ddr {}", tcp.virtual_comm_seconds, ddr.virtual_comm_seconds);
+    }
+}

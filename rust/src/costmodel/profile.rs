@@ -1,0 +1,149 @@
+//! Layer-wise analytic profiler.
+//!
+//! Stands in for the paper's auto-profiler (§4.3.2): where the authors
+//! measure `t_fwd`, `t_bwd`, `t_recomp`, `t_update` per chip and TP size on
+//! real hardware, we derive them from the chip catalog with a
+//! roofline-style model:
+//!
+//! * dense compute at `fp16_tflops × mfu` (mfu calibrated per chip against
+//!   the paper's own Table 6 homogeneous measurements),
+//! * TP collective time on the intra-node fabric (2 allreduces each for
+//!   forward and backward per layer, §2.2),
+//! * ZeRO-1 optimizer update: Adam math + the non-overlapped slice of the
+//!   DP gradient synchronization over the NIC.
+//!
+//! The same numbers can alternatively be calibrated from real PJRT stage
+//! executions (`h2 profile`), which is what keeps HeteroAuto honest: it
+//! only ever consumes this table, exactly like the paper's searcher.
+
+use crate::hetero::ChipSpec;
+use crate::topology::RDMA_EFFICIENCY;
+
+use super::ModelShape;
+
+/// Profiled per-layer times (seconds) for one (chip, TP, DP) combination.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProfile {
+    pub t_fwd: f64,
+    pub t_bwd: f64,
+    pub t_recompute: f64,
+    /// Optimizer step + non-overlapped DP gradient sync, per layer.
+    pub t_update: f64,
+    /// Extra per-layer time *per iteration* if optimizer states are
+    /// offloaded to host (fp32 shard traffic over PCIe).
+    pub t_offload: f64,
+    /// Extra per-layer time *per microbatch* when gradients stream to host
+    /// (synchronous ZeRO-Offload-style stall).
+    pub t_offload_micro: f64,
+    /// Parameters held per chip for one layer (after TP sharding).
+    pub params_per_chip: f64,
+}
+
+/// Fraction of the DP gradient allreduce hidden under backward compute
+/// (the paper overlaps gradient sync with backward; §4.3.2's t_update is
+/// only the exposed part).
+pub const DP_OVERLAP: f64 = 0.7;
+
+/// Adam FLOPs per parameter (fp32 master-weight update).
+const ADAM_FLOPS: f64 = 12.0;
+
+/// Host↔device PCIe bandwidth for offloaded optimizer traffic, bytes/s.
+const PCIE_OFFLOAD_BPS: f64 = 12.0e9;
+
+pub fn profile_layer(
+    spec: &ChipSpec,
+    model: &ModelShape,
+    tp: usize,
+    micro_tokens: usize,
+    dp: usize,
+) -> LayerProfile {
+    let tpf = tp as f64;
+    let sustained = spec.sustained_tflops() * 1e12;
+    let params_per_chip = model.params_per_layer() / tpf;
+
+    // Dense compute: fwd = 2·params + attention; bwd = 2×fwd.
+    let fwd_flops = micro_tokens as f64 * model.fwd_flops_per_token_layer() / tpf;
+    let t_fwd_dense = fwd_flops / sustained;
+
+    // TP collectives: two ring allreduces per layer in fwd (and two in bwd)
+    // of the full activation (§2.2), on the TP island's uniform bandwidth.
+    let t_tp_ar = if tp > 1 {
+        let island = spec.intra_node.uniform_island(spec.chips_per_node);
+        let bw = spec.intra_node.bandwidth_gbps(0, (tp - 1).min(island - 1)) * 1e9;
+        let bytes = micro_tokens as f64 * model.hidden as f64 * 2.0; // bf16
+        2.0 * (2.0 * (tpf - 1.0) / tpf) * bytes / bw + 2.0 * 3.0e-6
+    } else {
+        0.0
+    };
+
+    let t_fwd = t_fwd_dense + t_tp_ar;
+    let t_bwd = 2.0 * t_fwd_dense + t_tp_ar;
+    let t_recompute = t_fwd;
+
+    // Optimizer: Adam math (memory-bound on chip, folded into sustained
+    // throughput) + exposed DP sync of bf16 gradients over the NIC share.
+    let t_adam = params_per_chip * ADAM_FLOPS / sustained / dp as f64; // ZeRO-1 shard
+    let t_dp_sync = if dp > 1 {
+        let nic_share = spec.nic_gbps * 1e9 * RDMA_EFFICIENCY * spec.nics_per_node as f64
+            / spec.chips_per_node as f64;
+        let grad_bytes = params_per_chip * 2.0;
+        let ring = 2.0 * (dp as f64 - 1.0) / dp as f64 * grad_bytes / nic_share;
+        ring * (1.0 - DP_OVERLAP)
+    } else {
+        0.0
+    };
+    let t_update = t_adam + t_dp_sync;
+
+    // Offload: grads to host + updated params back (bf16 each way) plus the
+    // fp32 shard traffic, serialized on PCIe.
+    let t_offload = params_per_chip * 8.0 / PCIE_OFFLOAD_BPS;
+    // Per microbatch, bf16 gradients stream down synchronously.
+    let t_offload_micro = params_per_chip * 2.0 / PCIE_OFFLOAD_BPS;
+
+    LayerProfile { t_fwd, t_bwd, t_recompute, t_update, t_offload, t_offload_micro,
+                   params_per_chip }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::H2_100B;
+    use crate::hetero::{spec, ChipKind};
+
+    #[test]
+    fn bwd_is_twice_fwd_dense() {
+        let p = profile_layer(&spec(ChipKind::A), &H2_100B, 1, 4096, 1);
+        assert!((p.t_bwd / p.t_fwd - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tp_reduces_compute_time_sublinearly() {
+        let s = spec(ChipKind::A);
+        let p1 = profile_layer(&s, &H2_100B, 1, 4096, 1);
+        let p4 = profile_layer(&s, &H2_100B, 4, 4096, 1);
+        assert!(p4.t_fwd < p1.t_fwd);
+        assert!(p4.t_fwd > p1.t_fwd / 4.0); // allreduce overhead
+    }
+
+    #[test]
+    fn faster_chip_has_smaller_times() {
+        let pa = profile_layer(&spec(ChipKind::A), &H2_100B, 4, 4096, 1);
+        let pd = profile_layer(&spec(ChipKind::D), &H2_100B, 4, 4096, 1);
+        assert!(pd.t_fwd < pa.t_fwd); // D has more sustained TFLOPS
+    }
+
+    #[test]
+    fn dp_sync_grows_update_time() {
+        let s = spec(ChipKind::C);
+        let p1 = profile_layer(&s, &H2_100B, 4, 4096, 1);
+        let p8 = profile_layer(&s, &H2_100B, 4, 4096, 8);
+        assert!(p8.t_update > p1.t_update);
+    }
+
+    #[test]
+    fn sensible_magnitudes_for_100b() {
+        // A layer of the 100B on Chip-A/TP4 should be O(10ms), not O(1s).
+        let p = profile_layer(&spec(ChipKind::A), &H2_100B, 4, 4096, 4);
+        assert!(p.t_fwd > 1e-3 && p.t_fwd < 0.1, "t_fwd {}", p.t_fwd);
+    }
+}

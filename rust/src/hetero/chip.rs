@@ -1,0 +1,256 @@
+//! Chip catalog: the paper's four AI-chip architectures plus the A100
+//! reference (Table 5, Figure 1, §2.3).
+//!
+//! The paper anonymizes vendors and gives capability *bands* relative to the
+//! A100 (312 TFLOPS FP16). Concrete values inside those bands were chosen
+//! once, documented here, and calibrated so the homogeneous-baseline cost
+//! model lands near Table 6's measured TGS (see EXPERIMENTS.md):
+//!
+//! | Chip | band (×A100)   | chosen FP16 | memory | chips/node |
+//! |------|----------------|-------------|--------|------------|
+//! | A    | 0.5–1.0        | 182 TFLOPS  | 96 GB  | 16         |  (§2.3 quotes 182)
+//! | B    | 0.5–1.0        | 256 TFLOPS  | 64 GB  | 8          |
+//! | C    | 0.0–0.5        | 128 TFLOPS  | 32 GB  | 16         |
+//! | D    | 1.5–2.0        | 550 TFLOPS  | 32 GB  | 8          |
+
+use std::fmt;
+
+/// Identity of a chip architecture in the hyper-heterogeneous cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChipKind {
+    A,
+    B,
+    C,
+    D,
+    /// NVIDIA A100 — the homogeneous reference used for precision alignment.
+    A100,
+}
+
+impl ChipKind {
+    pub const ALL: [ChipKind; 4] = [ChipKind::A, ChipKind::B, ChipKind::C, ChipKind::D];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChipKind::A => "Chip-A",
+            ChipKind::B => "Chip-B",
+            ChipKind::C => "Chip-C",
+            ChipKind::D => "Chip-D",
+            ChipKind::A100 => "A100",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChipKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "A" | "CHIP-A" => Some(ChipKind::A),
+            "B" | "CHIP-B" => Some(ChipKind::B),
+            "C" | "CHIP-C" => Some(ChipKind::C),
+            "D" | "CHIP-D" => Some(ChipKind::D),
+            "A100" => Some(ChipKind::A100),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ChipKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Intra-node interconnect classes observed across vendors (§2.3, Fig 3):
+/// some nodes have uniform high-speed links, some degrade across NUMA
+/// domains or PCIe switches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IntraNodeLink {
+    /// NVLink-class uniform all-to-all (bandwidth GB/s).
+    Uniform { gbps: f64 },
+    /// Full bandwidth inside a NUMA island, degraded across (Fig 3 "B"-like).
+    NumaSplit { local_gbps: f64, cross_gbps: f64, island: usize },
+    /// PCIe-switch hierarchy: full inside a switch group, degraded across.
+    PcieSwitch { local_gbps: f64, cross_gbps: f64, group: usize },
+}
+
+impl IntraNodeLink {
+    /// Point-to-point bandwidth between two chip slots in the same node.
+    pub fn bandwidth_gbps(&self, a: usize, b: usize) -> f64 {
+        match *self {
+            IntraNodeLink::Uniform { gbps } => gbps,
+            IntraNodeLink::NumaSplit { local_gbps, cross_gbps, island } => {
+                if a / island == b / island { local_gbps } else { cross_gbps }
+            }
+            IntraNodeLink::PcieSwitch { local_gbps, cross_gbps, group } => {
+                if a / group == b / group { local_gbps } else { cross_gbps }
+            }
+        }
+    }
+
+    /// Largest chip group with full-bandwidth all-to-all — the paper's
+    /// `TP_MAX` constraint source (§4.3.2 requirement 2).
+    pub fn uniform_island(&self, chips_per_node: usize) -> usize {
+        match *self {
+            IntraNodeLink::Uniform { .. } => chips_per_node,
+            IntraNodeLink::NumaSplit { island, .. } => island,
+            IntraNodeLink::PcieSwitch { group, .. } => group,
+        }
+    }
+}
+
+/// Full specification of one chip architecture + its server design.
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    pub kind: ChipKind,
+    /// Peak FP16 throughput, TFLOPS.
+    pub fp16_tflops: f64,
+    /// Device memory, GiB.
+    pub memory_gib: f64,
+    pub chips_per_node: usize,
+    pub intra_node: IntraNodeLink,
+    /// NICs per server and per-NIC bandwidth (RoCE-v2), GB/s.
+    pub nics_per_node: usize,
+    pub nic_gbps: f64,
+    /// Sustained fraction of peak for dense transformer layers (calibrated
+    /// against Table 6; stands in for the paper's auto-profiler measurements).
+    pub mfu: f64,
+    /// Numerical perturbation scale of this vendor's operator stack relative
+    /// to the A100 (drives the Fig 5 / Table 1 precision study).
+    pub op_noise: f64,
+}
+
+impl ChipSpec {
+    /// Effective sustained TFLOPS for dense compute.
+    pub fn sustained_tflops(&self) -> f64 {
+        self.fp16_tflops * self.mfu
+    }
+
+    /// `TP_MAX` for this server design (§4.3.2 requirement 2): the largest
+    /// power of two whose TP group stays inside a uniform-bandwidth island.
+    pub fn tp_max(&self) -> usize {
+        let island = self.intra_node.uniform_island(self.chips_per_node);
+        let mut tp = 1;
+        while tp * 2 <= island {
+            tp *= 2;
+        }
+        tp
+    }
+
+    pub fn memory_bytes(&self) -> f64 {
+        self.memory_gib * 1024.0 * 1024.0 * 1024.0
+    }
+}
+
+/// The catalog (Table 5 bands; see module docs for the chosen points).
+pub fn spec(kind: ChipKind) -> ChipSpec {
+    match kind {
+        ChipKind::A => ChipSpec {
+            kind,
+            fp16_tflops: 182.0,
+            memory_gib: 96.0,
+            chips_per_node: 16,
+            intra_node: IntraNodeLink::Uniform { gbps: 200.0 },
+            nics_per_node: 8,
+            nic_gbps: 25.0, // 200 Gbps RoCE
+            mfu: 0.573,
+            op_noise: 0.0049,
+        },
+        ChipKind::B => ChipSpec {
+            kind,
+            fp16_tflops: 256.0,
+            memory_gib: 64.0,
+            chips_per_node: 8,
+            intra_node: IntraNodeLink::NumaSplit { local_gbps: 160.0, cross_gbps: 56.0, island: 4 },
+            nics_per_node: 4,
+            nic_gbps: 25.0,
+            mfu: 0.570,
+            op_noise: 0.0060,
+        },
+        ChipKind::C => ChipSpec {
+            kind,
+            fp16_tflops: 128.0,
+            memory_gib: 32.0,
+            chips_per_node: 16,
+            intra_node: IntraNodeLink::PcieSwitch { local_gbps: 64.0, cross_gbps: 24.0, group: 4 },
+            nics_per_node: 2,
+            nic_gbps: 12.5, // 100 Gbps
+            mfu: 0.367,
+            op_noise: 0.0064,
+        },
+        ChipKind::D => ChipSpec {
+            kind,
+            fp16_tflops: 550.0,
+            memory_gib: 32.0,
+            chips_per_node: 8,
+            intra_node: IntraNodeLink::Uniform { gbps: 180.0 },
+            nics_per_node: 8,
+            nic_gbps: 25.0,
+            mfu: 0.30,
+            op_noise: 0.0152,
+        },
+        ChipKind::A100 => ChipSpec {
+            kind,
+            fp16_tflops: 312.0,
+            memory_gib: 80.0,
+            chips_per_node: 8,
+            intra_node: IntraNodeLink::Uniform { gbps: 600.0 },
+            nics_per_node: 8,
+            nic_gbps: 25.0,
+            mfu: 0.50,
+            op_noise: 0.0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_bands_hold() {
+        let a100 = spec(ChipKind::A100).fp16_tflops;
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        let c = spec(ChipKind::C);
+        let d = spec(ChipKind::D);
+        assert!(a.fp16_tflops > 0.5 * a100 && a.fp16_tflops < 1.0 * a100);
+        assert!(b.fp16_tflops > 0.5 * a100 && b.fp16_tflops < 1.0 * a100);
+        assert!(c.fp16_tflops > 0.0 && c.fp16_tflops < 0.5 * a100);
+        assert!(d.fp16_tflops > 1.5 * a100 && d.fp16_tflops < 2.0 * a100);
+        assert_eq!((a.memory_gib, b.memory_gib, c.memory_gib, d.memory_gib),
+                   (96.0, 64.0, 32.0, 32.0));
+        assert_eq!((a.chips_per_node, b.chips_per_node, c.chips_per_node, d.chips_per_node),
+                   (16, 8, 16, 8));
+    }
+
+    #[test]
+    fn hyper_heterogeneity_no_total_order() {
+        // Figure 1's point: no chip dominates on all three axes.
+        let d = spec(ChipKind::D);
+        let a = spec(ChipKind::A);
+        assert!(d.fp16_tflops > a.fp16_tflops); // D wins compute
+        assert!(a.memory_gib > d.memory_gib);   // A wins memory
+    }
+
+    #[test]
+    fn tp_max_respects_islands() {
+        assert_eq!(spec(ChipKind::A).tp_max(), 16);
+        assert_eq!(spec(ChipKind::B).tp_max(), 4);  // NUMA island of 4
+        assert_eq!(spec(ChipKind::C).tp_max(), 4);  // PCIe group of 4
+        assert_eq!(spec(ChipKind::D).tp_max(), 8);
+    }
+
+    #[test]
+    fn numa_split_bandwidth() {
+        let link = IntraNodeLink::NumaSplit { local_gbps: 160.0, cross_gbps: 56.0, island: 4 };
+        assert_eq!(link.bandwidth_gbps(0, 3), 160.0);
+        assert_eq!(link.bandwidth_gbps(0, 4), 56.0);
+        assert_eq!(link.bandwidth_gbps(5, 7), 160.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in ChipKind::ALL {
+            assert_eq!(ChipKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ChipKind::parse("a100"), Some(ChipKind::A100));
+        assert_eq!(ChipKind::parse("z"), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Cluster specifications: groups of homogeneous nodes per chip type, plus
+//! the paper's experiment configurations (Table 7).
+
+use anyhow::{bail, Result};
+
+use super::chip::{spec, ChipKind, ChipSpec};
+
+/// One homogeneous group inside a hyper-heterogeneous cluster.
+#[derive(Clone, Debug)]
+pub struct ChipGroup {
+    pub spec: ChipSpec,
+    pub n_chips: usize,
+}
+
+impl ChipGroup {
+    pub fn new(kind: ChipKind, n_chips: usize) -> Self {
+        let spec = spec(kind);
+        assert!(n_chips % spec.chips_per_node == 0,
+                "{kind}: {n_chips} chips is not a whole number of {}-chip nodes",
+                spec.chips_per_node);
+        ChipGroup { spec, n_chips }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_chips / self.spec.chips_per_node
+    }
+}
+
+/// A hyper-heterogeneous cluster: one group per chip type.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub name: String,
+    pub groups: Vec<ChipGroup>,
+}
+
+impl Cluster {
+    pub fn new(name: &str, groups: Vec<(ChipKind, usize)>) -> Self {
+        Cluster {
+            name: name.to_string(),
+            groups: groups.into_iter().map(|(k, n)| ChipGroup::new(k, n)).collect(),
+        }
+    }
+
+    pub fn total_chips(&self) -> usize {
+        self.groups.iter().map(|g| g.n_chips).sum()
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, kind: ChipKind) -> Result<&ChipGroup> {
+        match self.groups.iter().find(|g| g.spec.kind == kind) {
+            Some(g) => Ok(g),
+            None => bail!("cluster `{}` has no {kind} group", self.name),
+        }
+    }
+
+    /// Groups sorted by descending memory capacity — HeteroPP's stage
+    /// ordering rule (Observation #4: big-memory chips take early stages).
+    pub fn groups_by_memory_desc(&self) -> Vec<&ChipGroup> {
+        let mut gs: Vec<&ChipGroup> = self.groups.iter().collect();
+        gs.sort_by(|a, b| {
+            b.spec.memory_gib.partial_cmp(&a.spec.memory_gib).unwrap()
+                .then(b.spec.fp16_tflops.partial_cmp(&a.spec.fp16_tflops).unwrap())
+        });
+        gs
+    }
+}
+
+/// Table 7 experiment configurations (+ global batch sizes in tokens).
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub index: &'static str,
+    pub cluster: Cluster,
+    /// Global batch size in tokens.
+    pub gbs_tokens: usize,
+}
+
+pub fn experiment(index: &str) -> Result<Experiment> {
+    let m = 1024 * 1024;
+    let (cluster, gbs) = match index {
+        "exp-a-1" => (Cluster::new("Exp-A", vec![(ChipKind::A, 256), (ChipKind::B, 256), (ChipKind::C, 256)]), 2 * m),
+        "exp-a-2" => (Cluster::new("Exp-A", vec![(ChipKind::A, 256), (ChipKind::B, 256), (ChipKind::C, 256)]), 6 * m),
+        "exp-b-1" => (Cluster::new("Exp-B", vec![(ChipKind::A, 256), (ChipKind::B, 256), (ChipKind::C, 256), (ChipKind::D, 256)]), 2 * m),
+        "exp-b-2" => (Cluster::new("Exp-B", vec![(ChipKind::A, 256), (ChipKind::B, 256), (ChipKind::C, 256), (ChipKind::D, 256)]), 8 * m),
+        "exp-c-1" => (Cluster::new("Exp-C", vec![(ChipKind::A, 384), (ChipKind::B, 1024)]), 4 * m),
+        "exp-c-2" => (Cluster::new("Exp-C", vec![(ChipKind::A, 384), (ChipKind::B, 1024)]), 8 * m),
+        "exp-d" => (Cluster::new("Exp-D", vec![(ChipKind::A, 384), (ChipKind::B, 2048)]), 8 * m),
+        _ => bail!("unknown experiment `{index}` (expected exp-a-1 .. exp-d)"),
+    };
+    Ok(Experiment { index: Box::leak(index.to_string().into_boxed_str()), cluster, gbs_tokens: gbs })
+}
+
+pub const ALL_EXPERIMENTS: [&str; 7] =
+    ["exp-a-1", "exp-a-2", "exp-b-1", "exp-b-2", "exp-c-1", "exp-c-2", "exp-d"];
+
+/// The Table 6 homogeneous baselines: 256 chips of one type, GBS = 2M tokens.
+pub fn homogeneous_baseline(kind: ChipKind) -> Experiment {
+    Experiment {
+        index: "table6",
+        cluster: Cluster::new(&format!("Homog-{kind}"), vec![(kind, 256)]),
+        gbs_tokens: 2 * 1024 * 1024,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_chip_counts() {
+        assert_eq!(experiment("exp-a-1").unwrap().cluster.total_chips(), 768);
+        assert_eq!(experiment("exp-b-1").unwrap().cluster.total_chips(), 1024);
+        assert_eq!(experiment("exp-c-1").unwrap().cluster.total_chips(), 1408);
+        assert_eq!(experiment("exp-d").unwrap().cluster.total_chips(), 2432);
+    }
+
+    #[test]
+    fn exp_b_is_the_1024_chip_4_type_run() {
+        let e = experiment("exp-b-1").unwrap();
+        assert_eq!(e.cluster.n_types(), 4);
+        assert_eq!(e.cluster.total_chips(), 1024);
+    }
+
+    #[test]
+    fn memory_ordering_puts_a_first() {
+        let e = experiment("exp-b-1").unwrap();
+        let order: Vec<ChipKind> = e.cluster.groups_by_memory_desc()
+            .iter().map(|g| g.spec.kind).collect();
+        assert_eq!(order[0], ChipKind::A); // 96 GB
+        assert_eq!(order[1], ChipKind::B); // 64 GB
+    }
+
+    #[test]
+    fn whole_nodes_enforced() {
+        let result = std::panic::catch_unwind(|| ChipGroup::new(ChipKind::A, 100));
+        assert!(result.is_err()); // 100 % 16 != 0
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(experiment("exp-z").is_err());
+    }
+}

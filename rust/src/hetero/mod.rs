@@ -1,0 +1,8 @@
+//! Hyper-heterogeneous cluster modeling: the chip catalog (Table 5) and
+//! cluster/experiment definitions (Table 7).
+
+pub mod chip;
+pub mod cluster;
+
+pub use chip::{spec, ChipKind, ChipSpec, IntraNodeLink};
+pub use cluster::{experiment, homogeneous_baseline, ChipGroup, Cluster, Experiment, ALL_EXPERIMENTS};

@@ -1,0 +1,22 @@
+//! # H2 — hyper-heterogeneous LLM training (paper reproduction)
+//!
+//! Three-layer architecture (DESIGN.md): Pallas kernels (L1) and the JAX
+//! stage model (L2) are AOT-compiled to HLO text by `python/compile/`;
+//! everything at runtime is this rust crate (L3): the DiComm communication
+//! library, the NIC/PCIe topology model, the DiTorch precision tooling,
+//! the §4.3.2 cost model with its memory model, the HeteroAuto strategy
+//! search, the HeteroPP discrete-event simulator, and the real 1F1B
+//! training coordinator over the PJRT runtime.
+
+pub mod auto;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod hetero;
+pub mod precision;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,361 @@
+//! `h2` — CLI for the H2 hyper-heterogeneous training framework.
+//!
+//! Subcommands:
+//!   train       real pipeline training over PJRT artifacts
+//!   search      HeteroAuto strategy search (§4.3)
+//!   simulate    discrete-event HeteroPP simulation at paper scale
+//!   comm-bench  DiComm latency sweep (Fig 7)
+//!   precision   DiTorch precision-alignment run (Fig 5 / Table 1)
+//!   profile     analytic layer profile per chip/TP (the auto-profiler)
+//!   report      paper-table reports (Table 6 baselines, Fig 11 ratios)
+
+use anyhow::{bail, Result};
+
+use h2::auto::{search, SearchConfig};
+use h2::comm::{p2p_latency, CommMode};
+use h2::coordinator::{train, StagePlan, TrainConfig};
+use h2::costmodel::{evaluate, profile_layer, tgs, H2_100B};
+use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind, Cluster, ALL_EXPERIMENTS};
+use h2::precision::check_alignment;
+use h2::runtime::Runtime;
+use h2::sim::{simulate_iteration, ReshardStrategy, SimOptions};
+use h2::topology::NicAssignment;
+use h2::util::cli::Args;
+use h2::util::table::{fmt_bytes, fmt_duration, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "search" => cmd_search(&args),
+        "simulate" => cmd_simulate(&args),
+        "comm-bench" => cmd_comm_bench(&args),
+        "precision" => cmd_precision(&args),
+        "profile" => cmd_profile(&args),
+        "report" => cmd_report(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command `{other}`"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!("h2 — hyper-heterogeneous LLM training (paper reproduction)\n");
+    println!("usage: h2 <command> [flags]\n");
+    println!("  train       --model h2_tiny --stages first_l2:A,last_l2:B --dp 1 \\");
+    println!("              --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
+    println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
+    println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
+    println!("              [--alpha 1.0] [--no-two-stage] [--split 128]");
+    println!("  simulate    --exp exp-c-1 [--comm ddr|tcp] [--reshard srag|bcast|naive]");
+    println!("              [--no-overlap] [--uniform] [--non-affinity]");
+    println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
+    println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
+    println!("  profile     [--chip A] [--dp 4]");
+    println!("  report      table6 | fig11");
+}
+
+fn parse_comm(args: &Args) -> Result<CommMode> {
+    let s = args.str_or("comm", "ddr");
+    CommMode::parse(&s).ok_or_else(|| anyhow::anyhow!("bad --comm `{s}`"))
+}
+
+fn parse_cluster(text: &str) -> Result<Cluster> {
+    let mut groups = Vec::new();
+    for part in text.split(',') {
+        let (kind, n) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--cluster expects A=256,B=256 style"))?;
+        let kind = ChipKind::parse(kind)
+            .ok_or_else(|| anyhow::anyhow!("unknown chip `{kind}`"))?;
+        groups.push((kind, n.parse()?));
+    }
+    Ok(Cluster::new("custom", groups))
+}
+
+fn parse_stages(text: &str) -> Result<Vec<StagePlan>> {
+    let mut stages = Vec::new();
+    for part in text.split(',') {
+        let (prefix, chip) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--stages expects prefix:CHIP,..."))?;
+        let chip = ChipKind::parse(chip)
+            .ok_or_else(|| anyhow::anyhow!("unknown chip `{chip}`"))?;
+        stages.push(StagePlan { prefix: prefix.to_string(), chip });
+    }
+    Ok(stages)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("config") {
+        // JSON config file path (see `config` module docs for the schema).
+        let file = h2::config::Config::load(path)?;
+        let cfg = file.train
+            .ok_or_else(|| anyhow::anyhow!("{path} has no `train` section"))?;
+        let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+        let report = train(&rt, &cfg)?;
+        println!("[h2] loss: first {:.4} last {:.4} ({:.0} tokens/s)",
+                 report.losses.first().unwrap_or(&f64::NAN),
+                 report.losses.last().unwrap_or(&f64::NAN),
+                 report.tokens_per_second);
+        return Ok(());
+    }
+    let model = args.str_or("model", "h2_tiny");
+    let stages = parse_stages(&args.str_or("stages", "first_l2:A,last_l2:B"))?;
+    let cfg = TrainConfig {
+        model: model.clone(),
+        stages,
+        dp: args.usize_or("dp", 1)?,
+        micro_batches: args.usize_or("micros", 2)?,
+        steps: args.usize_or("steps", 20)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        seed: args.u64_or("seed", 42)?,
+        comm: parse_comm(args)?,
+        nic_assignment: if args.has("non-affinity") {
+            NicAssignment::NonAffinity
+        } else {
+            NicAssignment::Affinity
+        },
+        fine_overlap: !args.has("no-overlap"),
+        perturb: args.has("perturb"),
+        log_every: args.usize_or("log-every", 10)?,
+    };
+    let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+    println!("[h2] platform={} model={model} stages={} dp={} micros={} steps={}",
+             rt.platform(), cfg.stages.len(), cfg.dp, cfg.micro_batches, cfg.steps);
+    let report = train(&rt, &cfg)?;
+    println!("[h2] done: wall {:.1}s, modeled iter {:.4}s ({:.4}s comm), {:.0} tokens/s",
+             report.wall_seconds,
+             report.virtual_seconds / cfg.steps as f64,
+             report.virtual_comm_seconds / cfg.steps as f64,
+             report.tokens_per_second);
+    println!("[h2] loss: first {:.4} last {:.4}",
+             report.losses.first().unwrap_or(&f64::NAN),
+             report.losses.last().unwrap_or(&f64::NAN));
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let (cluster, gbs) = if let Some(exp) = args.get("exp") {
+        let e = experiment(exp)?;
+        (e.cluster, e.gbs_tokens)
+    } else {
+        let c = parse_cluster(args.required("cluster")?)?;
+        let gbs = args.usize_or("gbs-mtokens", 2)? * 1024 * 1024;
+        (c, gbs)
+    };
+    let cfg = SearchConfig {
+        alpha: args.f64_or("alpha", 1.0)?,
+        group_split: args.usize_or("split", 128)?,
+        two_stage: !args.has("no-two-stage"),
+        max_dp: args.usize_or("max-dp", 0)?,
+    };
+    let r = search(&H2_100B, &cluster, gbs, &cfg)?;
+    println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {}",
+             cluster.name, cluster.total_chips(), gbs >> 20,
+             r.candidates_explored, fmt_duration(r.elapsed_seconds));
+    let mut t = Table::new(&["group", "chips", "s_pp", "s_tp", "layers", "recompute"]);
+    for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
+        t.row(vec![
+            g.spec.kind.to_string(),
+            g.n_chips.to_string(),
+            p.s_pp.to_string(),
+            p.s_tp.to_string(),
+            p.layers.to_string(),
+            p.recompute.to_string(),
+        ]);
+    }
+    t.print();
+    println!("s_dp = {}, micro-batches = {}", r.strategy.s_dp, r.strategy.micro_batches);
+    println!("estimated iteration: {} -> TGS {:.1}",
+             fmt_duration(r.eval.iteration_seconds),
+             tgs(&cluster, gbs, r.eval.iteration_seconds));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let exp = experiment(&args.str_or("exp", "exp-c-1"))?;
+    let scfg = SearchConfig::default();
+    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &scfg)?;
+    let mut strategy = r.strategy.clone();
+    if args.has("uniform") {
+        // Uniform 1F1B baseline: equal layer count on every stage,
+        // recomputation everywhere (the homogeneous-style configuration).
+        let total_stages: usize = strategy.plans.iter().map(|p| p.s_pp).sum();
+        let lps = H2_100B.n_layers / total_stages;
+        for p in strategy.plans.iter_mut() {
+            p.layers = lps * p.s_pp;
+            p.recompute = true;
+        }
+        let mut total: usize = strategy.plans.iter().map(|p| p.layers).sum();
+        let mut i = 0;
+        while total < H2_100B.n_layers {
+            let k = i % strategy.plans.len();
+            strategy.plans[k].layers += strategy.plans[k].s_pp;
+            total += strategy.plans[k].s_pp;
+            i += 1;
+        }
+    }
+    let reshard = match args.str_or("reshard", "srag").as_str() {
+        "srag" => ReshardStrategy::SendRecvAllGather,
+        "bcast" => ReshardStrategy::Broadcast,
+        "naive" => ReshardStrategy::NaiveP2p,
+        other => bail!("bad --reshard `{other}`"),
+    };
+    let opts = SimOptions {
+        comm: parse_comm(args)?,
+        reshard,
+        nic_assignment: if args.has("non-affinity") {
+            NicAssignment::NonAffinity
+        } else {
+            NicAssignment::Affinity
+        },
+        fine_overlap: !args.has("no-overlap"),
+    };
+    let grefs: Vec<&h2::hetero::ChipGroup> = r.groups.iter().collect();
+    let sim = simulate_iteration(&H2_100B, &grefs, &strategy, H2_100B.seq_len, &opts);
+    println!("simulated `{}`: iteration {} (bubble {:.1}%, exposed comm {})",
+             exp.cluster.name,
+             fmt_duration(sim.iteration_seconds),
+             sim.bubble_fraction * 100.0,
+             fmt_duration(sim.exposed_comm));
+    println!("TGS {:.1}", tgs(&exp.cluster, exp.gbs_tokens, sim.iteration_seconds));
+    Ok(())
+}
+
+fn cmd_comm_bench(args: &Args) -> Result<()> {
+    let lo = args.usize_or("min-shift", 8)?;
+    let hi = args.usize_or("max-shift", 28)?;
+    let mut t = Table::new(&["size", "TCP", "CPU-RDMA", "DDR", "TCP/DDR"])
+        .with_title("Fig 7 — cross-chip P2P latency by strategy");
+    let mut ratios = Vec::new();
+    let mut shift = lo;
+    while shift <= hi {
+        let bytes = 1usize << shift;
+        let tcp = p2p_latency(CommMode::TcpCpu, bytes);
+        let mid = p2p_latency(CommMode::RdmaCpu, bytes);
+        let ddr = p2p_latency(CommMode::DeviceDirect, bytes);
+        ratios.push(tcp / ddr);
+        t.row(vec![
+            fmt_bytes(bytes as f64),
+            fmt_duration(tcp),
+            fmt_duration(mid),
+            fmt_duration(ddr),
+            format!("{:.2}x", tcp / ddr),
+        ]);
+        shift += 2;
+    }
+    t.print();
+    println!("average TCP/DDR ratio: {:.2}x (paper: 9.94x, range 1.79-16.0x)",
+             ratios.iter().sum::<f64>() / ratios.len() as f64);
+    Ok(())
+}
+
+fn cmd_precision(args: &Args) -> Result<()> {
+    let chip = ChipKind::parse(args.str_or("chip", "A").as_str())
+        .ok_or_else(|| anyhow::anyhow!("bad --chip"))?;
+    let steps = args.usize_or("steps", 300)?;
+    let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+    let stages = |c: ChipKind| vec![
+        StagePlan { prefix: "first_l2".into(), chip: c },
+        StagePlan { prefix: "last_l2".into(), chip: c },
+    ];
+    let mut cfg = TrainConfig::quick("h2_tiny", stages(ChipKind::A100), 1, 2, steps);
+    cfg.log_every = 0;
+    cfg.perturb = true;
+    println!("[h2] reference run (A100, {steps} steps)...");
+    let reference = train(&rt, &cfg)?;
+    cfg.stages = stages(chip);
+    println!("[h2] measured run ({chip}, {steps} steps)...");
+    let measured = train(&rt, &cfg)?;
+    let report = check_alignment(chip, &reference.losses, &measured.losses);
+    println!("{chip}: MRE {:.3}% over {} iterations -> {}",
+             report.mre * 100.0, report.n_iterations,
+             if report.aligned { "ALIGNED (< 1.5%)" } else { "NOT ALIGNED" });
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dp = args.usize_or("dp", 4)?;
+    let mut t = Table::new(&["chip", "tp", "t_fwd", "t_bwd", "t_recomp", "t_update"])
+        .with_title("Layer-wise analytic profile (100B model, 4096-token microbatch)");
+    let chips: Vec<ChipKind> = match args.get("chip") {
+        Some(c) => vec![ChipKind::parse(c).ok_or_else(|| anyhow::anyhow!("bad --chip"))?],
+        None => ChipKind::ALL.to_vec(),
+    };
+    for kind in chips {
+        let sp = spec(kind);
+        let mut tp = 1;
+        while tp <= sp.tp_max() {
+            let p = profile_layer(&sp, &H2_100B, tp, 4096, dp);
+            t.row(vec![
+                kind.to_string(),
+                tp.to_string(),
+                fmt_duration(p.t_fwd),
+                fmt_duration(p.t_bwd),
+                fmt_duration(p.t_recompute),
+                fmt_duration(p.t_update),
+            ]);
+            tp *= 2;
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 6 rows as (chip, PP, DP, TP, recompute, paper TGS).
+pub const TABLE6_ROWS: [(ChipKind, usize, usize, usize, bool, f64); 4] = [
+    (ChipKind::A, 16, 4, 4, false, 136.9),
+    (ChipKind::B, 16, 4, 4, true, 143.7),
+    (ChipKind::C, 32, 2, 4, true, 46.2),
+    (ChipKind::D, 8, 4, 8, false, 99.5),
+];
+
+fn cmd_report(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()).unwrap_or("table6") {
+        "table6" => {
+            let mut t = Table::new(&["chip", "PP", "DP", "TP", "extra", "TGS (model)", "TGS (paper)"])
+                .with_title("Table 6 — homogeneous 256-chip baselines, 100B model");
+            for (kind, pp, dpd, tp, rec, paper) in TABLE6_ROWS {
+                let exp = homogeneous_baseline(kind);
+                let groups = exp.cluster.groups_by_memory_desc();
+                let strategy = h2::costmodel::Strategy {
+                    s_dp: dpd,
+                    micro_batches: exp.gbs_tokens / H2_100B.seq_len / dpd,
+                    plans: vec![h2::costmodel::GroupPlan {
+                        s_pp: pp, s_tp: tp, layers: 96, recompute: rec,
+                    }],
+                };
+                let eval = evaluate(&H2_100B, &groups, &strategy, H2_100B.seq_len, 1.0);
+                let model_tgs = tgs(&exp.cluster, exp.gbs_tokens, eval.iteration_seconds);
+                let extra = if rec { "recompute" } else if kind == ChipKind::D { "offload" } else { "-" };
+                t.row(vec![
+                    kind.to_string(), pp.to_string(), dpd.to_string(), tp.to_string(),
+                    extra.to_string(), format!("{model_tgs:.1}"), format!("{paper:.1}"),
+                ]);
+            }
+            t.print();
+        }
+        "fig11" => {
+            for exp_name in ALL_EXPERIMENTS {
+                let exp = experiment(exp_name)?;
+                let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())?;
+                let hetero_tgs = tgs(&exp.cluster, exp.gbs_tokens, r.eval.iteration_seconds);
+                println!("{exp_name}: TGS {hetero_tgs:.1} (search {}, {} candidates)",
+                         fmt_duration(r.elapsed_seconds), r.candidates_explored);
+            }
+        }
+        other => bail!("unknown report `{other}`"),
+    }
+    Ok(())
+}

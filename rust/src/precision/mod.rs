@@ -1,0 +1,205 @@
+//! DiTorch precision-alignment tooling (§3.1.2, Figure 5, Table 1).
+//!
+//! Different vendors implement the same operator with different data
+//! layouts and accumulation orders, so identical training runs diverge
+//! numerically chip by chip. DiTorch's pipeline (a) models/detects those
+//! operator-level differences, (b) checks *model-level* alignment with the
+//! Mean Relative Error of the training-loss curve against the A100
+//! reference, accepting MRE < 1.5%.
+//!
+//! Here the vendor stacks are simulated: each chip kind carries an
+//! `op_noise` scale (chip catalog) and [`Perturbation`] injects
+//! accumulation-order-like relative noise into gradients during real
+//! training runs driven by the coordinator. The tooling — MRE checker,
+//! overflow detector, operator comparator — is the DiTorch deliverable.
+
+use crate::hetero::{spec, ChipKind};
+use crate::util::rng::Rng;
+use crate::util::stats::mean_relative_error;
+
+/// The paper's model-level alignment criterion (§3.1.2).
+pub const MRE_THRESHOLD: f64 = 0.015;
+
+/// Simulated vendor-stack numerics for one chip kind.
+#[derive(Clone, Debug)]
+pub struct Perturbation {
+    pub kind: ChipKind,
+    /// Relative per-element gradient noise scale (accumulation-order model).
+    pub rel_noise: f64,
+    rng: Rng,
+}
+
+impl Perturbation {
+    pub fn new(kind: ChipKind, seed: u64) -> Self {
+        Perturbation { kind, rel_noise: spec(kind).op_noise, rng: Rng::new(seed ^ kind as u64) }
+    }
+
+    /// Perturb a gradient tensor in place: g ← g·(1 + ε·ξ), ξ ~ N(0,1).
+    /// The A100 reference (op_noise = 0) is a strict no-op.
+    ///
+    /// ξ is drawn once per *tensor*, not per element: vendor operator
+    /// discrepancies are systematic (data layout and accumulation order bias
+    /// a whole matmul the same way), so the faithful model is correlated
+    /// noise. Per-element iid noise averages out over millions of weights
+    /// and produces no measurable trajectory divergence.
+    pub fn apply(&mut self, grads: &mut [f32]) {
+        if self.rel_noise == 0.0 {
+            return;
+        }
+        let factor = 1.0 + self.rel_noise as f32 * self.rng.normal() as f32;
+        for g in grads.iter_mut() {
+            *g *= factor;
+        }
+    }
+
+    /// Perturb a scalar the chip *computed* (e.g. the reported loss): the
+    /// forward pass itself runs on vendor numerics, so the measured metric
+    /// carries the operator noise directly — this is the dominant term in
+    /// the paper's loss-curve MRE.
+    pub fn perturb_scalar(&mut self, x: f64) -> f64 {
+        if self.rel_noise == 0.0 {
+            return x;
+        }
+        x * (1.0 + self.rel_noise * self.rng.normal())
+    }
+
+    /// Apply per-tensor perturbation across a stage's gradient list.
+    pub fn apply_tensors(&mut self, grads: &mut [crate::runtime::HostTensor]) {
+        if self.rel_noise == 0.0 {
+            return;
+        }
+        for t in grads.iter_mut() {
+            if let Ok(data) = t.as_f32_mut() {
+                let factor = 1.0 + self.rel_noise as f32 * self.rng.normal() as f32;
+                for g in data.iter_mut() {
+                    *g *= factor;
+                }
+            }
+        }
+    }
+}
+
+/// Verdict of the model-level alignment check.
+#[derive(Clone, Debug)]
+pub struct AlignmentReport {
+    pub kind: ChipKind,
+    pub mre: f64,
+    pub aligned: bool,
+    pub n_iterations: usize,
+}
+
+/// Fig 5 / Table 1: MRE of a chip's loss curve against the A100 reference.
+pub fn check_alignment(kind: ChipKind, reference: &[f64], measured: &[f64]) -> AlignmentReport {
+    let mre = mean_relative_error(reference, measured);
+    AlignmentReport { kind, mre, aligned: mre < MRE_THRESHOLD, n_iterations: reference.len() }
+}
+
+/// Overflow/NaN detector (DiTorch's per-operator debugging tool).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverflowReport {
+    pub n_nan: usize,
+    pub n_inf: usize,
+    pub max_abs: f32,
+}
+
+pub fn detect_overflow(xs: &[f32]) -> OverflowReport {
+    let mut r = OverflowReport::default();
+    for &x in xs {
+        if x.is_nan() {
+            r.n_nan += 1;
+        } else if x.is_infinite() {
+            r.n_inf += 1;
+        } else {
+            r.max_abs = r.max_abs.max(x.abs());
+        }
+    }
+    r
+}
+
+/// Operator-level comparator: element-wise relative error summary between a
+/// vendor operator's output and the reference implementation's.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpDiff {
+    pub max_rel: f64,
+    pub mean_rel: f64,
+    pub n: usize,
+}
+
+pub fn compare_operator(reference: &[f32], vendor: &[f32]) -> OpDiff {
+    assert_eq!(reference.len(), vendor.len());
+    let mut max_rel = 0.0f64;
+    let mut sum = 0.0f64;
+    for (&r, &v) in reference.iter().zip(vendor) {
+        let denom = (r.abs() as f64).max(1e-12);
+        let rel = ((r - v).abs() as f64) / denom;
+        max_rel = max_rel.max(rel);
+        sum += rel;
+    }
+    OpDiff { max_rel, mean_rel: sum / reference.len().max(1) as f64, n: reference.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_perturbation_is_identity() {
+        let mut p = Perturbation::new(ChipKind::A100, 1);
+        let mut g = vec![1.0f32, -2.0, 3.5];
+        let orig = g.clone();
+        p.apply(&mut g);
+        assert_eq!(g, orig);
+    }
+
+    #[test]
+    fn perturbation_scale_matches_catalog() {
+        // Per-tensor correlated noise: repeated applications have stddev
+        // equal to the catalog's op_noise.
+        let mut p = Perturbation::new(ChipKind::D, 2);
+        let n = 20_000;
+        let mut factors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut g = vec![1.0f32];
+            p.apply(&mut g);
+            factors.push((g[0] - 1.0) as f64);
+        }
+        let std = crate::util::stats::stddev(&factors);
+        let expect = spec(ChipKind::D).op_noise;
+        assert!((std - expect).abs() / expect < 0.05, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn perturbation_deterministic_per_seed() {
+        let mut a = Perturbation::new(ChipKind::B, 7);
+        let mut b = Perturbation::new(ChipKind::B, 7);
+        let mut ga = vec![1.0f32; 64];
+        let mut gb = vec![1.0f32; 64];
+        a.apply(&mut ga);
+        b.apply(&mut gb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn alignment_threshold() {
+        let reference = vec![2.0; 300];
+        let close: Vec<f64> = reference.iter().map(|x| x * 1.005).collect();
+        let far: Vec<f64> = reference.iter().map(|x| x * 1.02).collect();
+        assert!(check_alignment(ChipKind::A, &reference, &close).aligned);
+        assert!(!check_alignment(ChipKind::D, &reference, &far).aligned);
+    }
+
+    #[test]
+    fn overflow_detection() {
+        let r = detect_overflow(&[1.0, f32::NAN, f32::INFINITY, -5.0]);
+        assert_eq!(r.n_nan, 1);
+        assert_eq!(r.n_inf, 1);
+        assert_eq!(r.max_abs, 5.0);
+    }
+
+    #[test]
+    fn operator_comparator() {
+        let d = compare_operator(&[1.0, 2.0], &[1.01, 2.0]);
+        assert!((d.max_rel - 0.01).abs() < 1e-6);
+        assert!((d.mean_rel - 0.005).abs() < 1e-6);
+    }
+}

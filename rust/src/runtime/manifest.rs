@@ -1,0 +1,166 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Tensor metadata (shape + dtype) for artifact inputs/outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Named parameter in a stage's flat parameter list (the wire ABI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub role: Option<String>,
+    pub n_layers: Option<usize>,
+    pub micro_batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub params: Vec<ParamMeta>,
+}
+
+/// One exported model (config + artifact set).
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub param_count: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+/// Full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn tensor_meta(v: &Value) -> Result<TensorMeta> {
+    let shape = v.get("shape")?.arr()?
+        .iter().map(|d| d.usize()).collect::<Result<Vec<_>>>()?;
+    Ok(TensorMeta { shape, dtype: v.get("dtype")?.str()?.to_string() })
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let v = Value::from_file(path.to_str().unwrap())
+            .with_context(|| format!("loading manifest {path:?}"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in v.get("models")?.obj()? {
+            let cfg = entry.get("config")?;
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in entry.get("artifacts")?.obj()? {
+                let params = match a.opt("params") {
+                    Some(ps) => ps.arr()?.iter().map(|p| {
+                        Ok(ParamMeta {
+                            name: p.get("name")?.str()?.to_string(),
+                            shape: p.get("shape")?.arr()?
+                                .iter().map(|d| d.usize()).collect::<Result<Vec<_>>>()?,
+                        })
+                    }).collect::<Result<Vec<_>>>()?,
+                    None => Vec::new(),
+                };
+                artifacts.insert(aname.clone(), ArtifactMeta {
+                    file: a.get("file")?.str()?.to_string(),
+                    inputs: a.get("inputs")?.arr()?.iter()
+                        .map(tensor_meta).collect::<Result<_>>()?,
+                    outputs: a.get("outputs")?.arr()?.iter()
+                        .map(tensor_meta).collect::<Result<_>>()?,
+                    role: a.opt("role").and_then(|r| r.str().ok()).map(|s| s.to_string()),
+                    n_layers: a.opt("n_layers").and_then(|x| x.usize().ok()),
+                    micro_batch: a.opt("micro_batch").and_then(|x| x.usize().ok()),
+                    seq: a.opt("seq").and_then(|x| x.usize().ok()),
+                    params,
+                });
+            }
+            models.insert(name.clone(), ModelEntry {
+                n_layers: cfg.get("n_layers")?.usize()?,
+                hidden: cfg.get("hidden")?.usize()?,
+                n_heads: cfg.get("n_heads")?.usize()?,
+                n_kv_heads: cfg.get("n_kv_heads")?.usize()?,
+                intermediate: cfg.get("intermediate")?.usize()?,
+                vocab: cfg.get("vocab")?.usize()?,
+                seq_len: cfg.get("seq_len")?.usize()?,
+                param_count: cfg.get("param_count")?.usize()?,
+                artifacts,
+            });
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        match self.models.get(name) {
+            Some(m) => Ok(m),
+            None => bail!("manifest has no model `{name}` (have: {:?})",
+                          self.models.keys().collect::<Vec<_>>()),
+        }
+    }
+
+    pub fn artifact(&self, model: &str, artifact: &str) -> Result<&ArtifactMeta> {
+        let m = self.model(model)?;
+        match m.artifacts.get(artifact) {
+            Some(a) => Ok(a),
+            None => bail!("model `{model}` has no artifact `{artifact}`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let path = Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(path).unwrap();
+        let tiny = m.model("h2_tiny").unwrap();
+        assert_eq!(tiny.n_layers, 4);
+        let fwd = m.artifact("h2_tiny", "first_l2_fwd").unwrap();
+        assert_eq!(fwd.role.as_deref(), Some("first"));
+        assert_eq!(fwd.inputs.len(), fwd.params.len() + 1);
+        // Param metadata matches declared input shapes.
+        for (p, t) in fwd.params.iter().zip(&fwd.inputs) {
+            assert_eq!(p.shape, t.shape, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let path = Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(path).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact("h2_tiny", "nope").is_err());
+    }
+}

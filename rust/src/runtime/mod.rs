@@ -1,0 +1,240 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
+//! executes them on the CPU PJRT client.
+//!
+//! Interchange format is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md): `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile` → `execute`. Python never runs at request time; this
+//! module is the only boundary between the rust coordinator and the
+//! compiled L1/L2 compute.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, Manifest, ModelEntry, ParamMeta, TensorMeta};
+
+/// A host-side tensor (f32 or i32), the coordinator's working currency.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        match self {
+            HostTensor::F32 { shape, data } =>
+                HostTensor::F32 { shape: shape.clone(), data: vec![0.0; data.len()] },
+            HostTensor::I32 { shape, data } =>
+                HostTensor::I32 { shape: shape.clone(), data: vec![0; data.len()] },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            HostTensor::F32 { shape, data } =>
+                client.buffer_from_host_buffer(data, shape, None)?,
+            HostTensor::I32 { shape, data } =>
+                client.buffer_from_host_buffer(data, shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            ty => bail!("unsupported artifact output dtype {ty:?}"),
+        }
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed outputs.
+    ///
+    /// Inputs are staged through explicit `PjRtBuffer`s and `execute_b`
+    /// rather than the crate's `execute(&[Literal])`: the latter leaks every
+    /// input device buffer (`buffer.release()` in the C++ shim with no
+    /// owner), which at 100M-model scale is ~4 GB per training step.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", self.name,
+                  self.meta.inputs.len(), inputs.len());
+        }
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let row = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output device row", self.name))?;
+        let mut tensors = Vec::new();
+        for buf in row {
+            let mut lit = buf.to_literal_sync()?;
+            // Lowered with return_tuple=True: decompose tuple outputs.
+            let shape = lit.shape()?;
+            if matches!(shape, xla::Shape::Tuple(_)) {
+                for el in lit.decompose_tuple()? {
+                    tensors.push(HostTensor::from_literal(&el)?);
+                }
+            } else {
+                tensors.push(HostTensor::from_literal(&lit)?);
+            }
+        }
+        if tensors.len() != self.meta.outputs.len() {
+            bail!("{}: expected {} outputs, got {}", self.name,
+                  self.meta.outputs.len(), tensors.len());
+        }
+        Ok(tensors)
+    }
+}
+
+/// The runtime: one PJRT CPU client plus a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (the directory holding `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, root, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) one artifact of a model.
+    pub fn load(&self, model: &str, artifact: &str) -> Result<std::sync::Arc<Executable>> {
+        let key = format!("{model}/{artifact}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(model, artifact)?.clone();
+        let path = self.root.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("XLA-compiling {key}"))?;
+        let executable = std::sync::Arc::new(Executable {
+            name: key.clone(),
+            meta,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.lock().unwrap().insert(key, executable.clone());
+        Ok(executable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        if p.join("manifest.json").exists() { Some(p) } else { None }
+    }
+
+    #[test]
+    fn tiny_sqnorm_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(dir).unwrap();
+        let exe = rt.load("h2_tiny", "first_l1_sqnorm").unwrap();
+        // sqnorm(grads...) = sum of squares over all inputs.
+        let inputs: Vec<HostTensor> = exe.meta.inputs.iter()
+            .map(|t| HostTensor::f32(&t.shape, vec![1.0; t.shape.iter().product()]))
+            .collect();
+        let total: usize = inputs.iter().map(|t| t.len()).sum();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].as_f32().unwrap()[0];
+        assert!((v - total as f32).abs() / (total as f32) < 1e-6, "{v} vs {total}");
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(dir).unwrap();
+        let a = rt.load("h2_tiny", "first_l1_sqnorm").unwrap();
+        let b = rt.load("h2_tiny", "first_l1_sqnorm").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(dir).unwrap();
+        let exe = rt.load("h2_tiny", "first_l1_sqnorm").unwrap();
+        assert!(exe.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! HeteroPP pipeline simulator: discrete-event 1F1B execution at full
+//! cluster scale, with activation-resharding strategies and the Table 9
+//! ablation axes.
+
+pub mod pipeline;
+pub mod reshard;
+
+pub use pipeline::{simulate_iteration, SimOptions, SimResult, FINE_OVERLAP_HIDDEN};
+pub use reshard::{reshard_time, ReshardStrategy};

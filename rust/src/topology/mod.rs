@@ -1,0 +1,177 @@
+//! Server/NIC topology model (§5, Table 3, Figure 3).
+//!
+//! Captures the two hyper-heterogeneity complications the paper's
+//! topology-aware resharding addresses:
+//!
+//! 1. servers have *multiple NICs with varying counts and affinities* —
+//!    a chip reaches its affine NIC over a short PCIe path, and a
+//!    non-affine NIC only across the inter-switch uplink;
+//! 2. PCIe links between switches and chips can bottleneck a NIC, so
+//!    multiple chips must transmit concurrently to saturate one NIC.
+//!
+//! Per-flow constants are calibrated to the paper's own Table 3
+//! measurements (affinity: 9.56 / 9.91 GB/s; non-affinity: 5.51 / 5.23) —
+//! see EXPERIMENTS.md for the paper-vs-model comparison.
+
+use crate::hetero::{ChipKind, ChipSpec};
+
+/// How chips are mapped to NICs for cross-node communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NicAssignment {
+    /// Each chip uses the NIC behind its own PCIe switch (paper's §5 fix).
+    Affinity,
+    /// Chips use whichever NIC was configured first — flows cross the
+    /// inter-switch uplink and contend.
+    NonAffinity,
+}
+
+/// PCIe-path efficiency from chip to its *affine* NIC, GB/s.
+/// (Chip-specific: different vendors wire x8/x16 Gen4 differently.)
+fn pcie_to_nic_gbps(kind: ChipKind) -> f64 {
+    match kind {
+        ChipKind::A => 11.95,
+        ChipKind::B => 12.39,
+        ChipKind::C => 8.2,
+        ChipKind::D => 12.39,
+        ChipKind::A100 => 12.8,
+    }
+}
+
+/// RDMA protocol efficiency on the wire (headers, MTU, ack overhead).
+pub const RDMA_EFFICIENCY: f64 = 0.8;
+
+/// Share of the affine-path bandwidth left when the flow must cross the
+/// inter-switch uplink and contend with the flows already there
+/// (calibrated to Table 3's non-affinity rows).
+fn cross_switch_share(kind: ChipKind) -> f64 {
+    match kind {
+        ChipKind::A => 0.576,
+        ChipKind::B => 0.528,
+        ChipKind::C => 0.50,
+        ChipKind::D => 0.55,
+        ChipKind::A100 => 0.90, // NVSwitch-class fabrics degrade least
+    }
+}
+
+/// Per-flow cross-node bandwidth (GB/s) for one chip-to-chip flow when all
+/// chips of the source server transmit concurrently (the Table 3 workload).
+///
+/// The flow rate is the min of the source path and destination path; each
+/// path is the chip↔NIC PCIe rate (possibly degraded by non-affinity) capped
+/// by the per-chip share of the server's NIC capacity.
+pub fn flow_bandwidth_gbps(src: &ChipSpec, dst: &ChipSpec, assign: NicAssignment) -> f64 {
+    let path = |spec: &ChipSpec, a: NicAssignment| -> f64 {
+        let mut chip_rate = pcie_to_nic_gbps(spec.kind) * RDMA_EFFICIENCY;
+        if a == NicAssignment::NonAffinity {
+            chip_rate *= cross_switch_share(spec.kind);
+        }
+        // NIC capacity is shared by the chips concurrently mapped onto it
+        // (the Table 3 workload drives all chips of the server at once).
+        let chips_per_nic = (spec.chips_per_node as f64 / spec.nics_per_node as f64).max(1.0);
+        let nic_share = spec.nic_gbps * RDMA_EFFICIENCY / chips_per_nic;
+        chip_rate.min(nic_share)
+    };
+    // Destination side keeps its affinity configuration (the paper toggles
+    // the source server's mapping).
+    path(src, assign).min(path(dst, NicAssignment::Affinity))
+}
+
+/// Intra-node chip-to-chip bandwidth matrix for Fig 3.
+pub fn intra_node_matrix(spec: &ChipSpec) -> Vec<Vec<f64>> {
+    let n = spec.chips_per_node;
+    (0..n)
+        .map(|a| (0..n).map(|b| if a == b { 0.0 } else { spec.intra_node.bandwidth_gbps(a, b) }).collect())
+        .collect()
+}
+
+/// Summary of one server design's intra-node behaviour (Fig 3 rows).
+#[derive(Clone, Debug)]
+pub struct IntraNodeProfile {
+    pub kind: ChipKind,
+    pub min_gbps: f64,
+    pub max_gbps: f64,
+    pub uniform: bool,
+    pub tp_max: usize,
+}
+
+pub fn intra_node_profile(spec: &ChipSpec) -> IntraNodeProfile {
+    let m = intra_node_matrix(spec);
+    let mut lo = f64::INFINITY;
+    let mut hi: f64 = 0.0;
+    for (a, row) in m.iter().enumerate() {
+        for (b, &bw) in row.iter().enumerate() {
+            if a != b {
+                lo = lo.min(bw);
+                hi = hi.max(bw);
+            }
+        }
+    }
+    IntraNodeProfile {
+        kind: spec.kind,
+        min_gbps: lo,
+        max_gbps: hi,
+        uniform: (hi - lo).abs() < 1e-9,
+        tp_max: spec.tp_max(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::{spec, ChipKind};
+
+    #[test]
+    fn table3_affinity_rows_reproduced() {
+        // Chip A -> B: 5.51 -> 9.56 GB/s (73.5% improvement).
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        let aff = flow_bandwidth_gbps(&a, &b, NicAssignment::Affinity);
+        let non = flow_bandwidth_gbps(&a, &b, NicAssignment::NonAffinity);
+        assert!((aff - 9.56).abs() < 0.1, "affinity A->B {aff}");
+        assert!((non - 5.51).abs() < 0.1, "non-affinity A->B {non}");
+        let improvement = (aff - non) / non;
+        assert!((improvement - 0.735).abs() < 0.05, "improvement {improvement}");
+
+        // Chip B -> D: 5.23 -> 9.91 GB/s (89.5% improvement).
+        let d = spec(ChipKind::D);
+        let aff = flow_bandwidth_gbps(&b, &d, NicAssignment::Affinity);
+        let non = flow_bandwidth_gbps(&b, &d, NicAssignment::NonAffinity);
+        assert!((aff - 9.91).abs() < 0.1, "affinity B->D {aff}");
+        assert!((non - 5.23).abs() < 0.1, "non-affinity B->D {non}");
+    }
+
+    #[test]
+    fn affinity_never_hurts() {
+        for &s in ChipKind::ALL.iter() {
+            for &d in ChipKind::ALL.iter() {
+                let ss = spec(s);
+                let dd = spec(d);
+                assert!(flow_bandwidth_gbps(&ss, &dd, NicAssignment::Affinity)
+                        >= flow_bandwidth_gbps(&ss, &dd, NicAssignment::NonAffinity));
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_shapes() {
+        // A-node: uniform; B-node: NUMA split; C-node: PCIe hierarchy.
+        assert!(intra_node_profile(&spec(ChipKind::A)).uniform);
+        let b = intra_node_profile(&spec(ChipKind::B));
+        assert!(!b.uniform);
+        assert!(b.max_gbps > 2.0 * b.min_gbps);
+        let c = intra_node_profile(&spec(ChipKind::C));
+        assert!(!c.uniform);
+        assert!(c.max_gbps < intra_node_profile(&spec(ChipKind::A)).max_gbps);
+    }
+
+    #[test]
+    fn matrix_is_symmetric_with_zero_diagonal() {
+        let m = intra_node_matrix(&spec(ChipKind::B));
+        for i in 0..m.len() {
+            assert_eq!(m[i][i], 0.0);
+            for j in 0..m.len() {
+                assert_eq!(m[i][j], m[j][i]);
+            }
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! In-tree micro-benchmark harness (criterion is not in the vendor set).
+//!
+//! `cargo bench` targets use [`Bench`] for warmup + repeated timing with
+//! robust statistics, printing one row per benchmark. Used both for the
+//! paper-table benches (which mostly report *model* outputs) and for the
+//! §Perf hot-path timings.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+use super::table::{fmt_duration, Table};
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    min_iters: usize,
+    max_seconds: f64,
+    rows: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_seconds: 5.0,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    pub fn max_seconds(mut self, s: f64) -> Self {
+        self.max_seconds = s;
+        self
+    }
+
+    /// Time `f` repeatedly; returns the summary (seconds per iteration).
+    pub fn run<F: FnMut()>(&mut self, label: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.max_seconds && samples.len() < 10_000)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed().as_secs_f64() > self.max_seconds && samples.len() >= self.min_iters {
+                break;
+            }
+        }
+        let s = summarize(&samples);
+        self.rows.push((label.to_string(), s.clone()));
+        s
+    }
+
+    /// Render all recorded timings as a table.
+    pub fn report(&self) {
+        let mut t = Table::new(&["benchmark", "iters", "mean", "p50", "p90", "max"])
+            .with_title(&format!("== {} ==", self.name));
+        for (label, s) in &self.rows {
+            t.row(vec![
+                label.clone(),
+                s.n.to_string(),
+                fmt_duration(s.mean),
+                fmt_duration(s.p50),
+                fmt_duration(s.p90),
+                fmt_duration(s.max),
+            ]);
+        }
+        t.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut b = Bench::new("t").warmup(1).min_iters(5).max_seconds(0.05);
+        let s = b.run("noop", || {});
+        assert!(s.n >= 5);
+        assert!(s.mean >= 0.0);
+        b.report();
+    }
+}

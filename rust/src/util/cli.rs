@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (the offline vendor set has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        out.flags.insert(rest.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(rest.to_string(), FLAG_SET.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--steps", "100", "--lr=0.001", "--verbose", "--out", "x.json"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_flag_has_sentinel_value() {
+        let a = parse(&["--fast"]);
+        assert_eq!(a.get("fast"), Some(FLAG_SET));
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse(&[]);
+        assert!(a.required("model").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-tree (no external crates available):
+//! PRNG, statistics, JSON, CLI parsing, table rendering, micro-bench harness
+//! and a small property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

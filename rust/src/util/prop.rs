@@ -1,0 +1,82 @@
+//! Mini property-based testing harness (proptest is not in the vendor set).
+//!
+//! Runs a property over many PRNG-derived cases; on failure it reports the
+//! seed and case index so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let n = rng.usize(1, 100);
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     prop::assert_prop(invariant(&xs), "invariant violated")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper returning a `CaseResult`.
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+/// Assert two f64s are within tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) -> CaseResult {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `property` with a fixed master seed.
+pub fn check<F>(cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    check_seeded(0xC0FFEE, cases, property)
+}
+
+/// Same, with an explicit seed (printed on failure for replay).
+pub fn check_seeded<F>(seed: u64, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = master.fork(case as u64);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed (seed={seed:#x}, case={case}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let a = rng.usize(0, 1000);
+            let b = rng.usize(0, 1000);
+            assert_prop(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, |rng| {
+            assert_prop(rng.usize(0, 10) < 5, "will eventually fail")
+        });
+    }
+
+    #[test]
+    fn assert_close_relative() {
+        assert!(assert_close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+}

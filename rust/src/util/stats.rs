@@ -1,0 +1,108 @@
+//! Small statistics helpers shared by the bench harness and reports.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return f64::NAN; }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 { return 0.0; }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() { return f64::NAN; }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi { return sorted[lo]; }
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: stddev(xs),
+        min: *sorted.first().unwrap_or(&f64::NAN),
+        p50: percentile(&sorted, 0.5),
+        p90: percentile(&sorted, 0.9),
+        p99: percentile(&sorted, 0.99),
+        max: *sorted.last().unwrap_or(&f64::NAN),
+    }
+}
+
+/// Mean Relative Error — the paper's Fig 5 / Table 1 alignment criterion:
+/// `(1/n) Σ |y_i − ŷ_i| / |y_i|`.
+pub fn mean_relative_error(reference: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(reference.len(), measured.len());
+    assert!(!reference.is_empty());
+    let mut acc = 0.0;
+    for (y, yhat) in reference.iter().zip(measured) {
+        acc += ((y - yhat) / y).abs();
+    }
+    acc / reference.len() as f64
+}
+
+/// Geometric mean (used for Fig 7's "average 9.94× speedup" style claims).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return f64::NAN; }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mre_matches_hand_computation() {
+        // reference 2.0 vs measured 2.02 -> 1%; 4.0 vs 3.96 -> 1%.
+        let m = mean_relative_error(&[2.0, 4.0], &[2.02, 3.96]);
+        assert!((m - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[3.0, 3.0, 3.0]), 0.0);
+    }
+}

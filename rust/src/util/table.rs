@@ -1,0 +1,137 @@
+//! ASCII table rendering for bench/report output (paper-style tables).
+
+/// A simple left/right-aligned column table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Format a byte count (B/KiB/MiB/GiB).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const K: f64 = 1024.0;
+    if bytes < K {
+        format!("{bytes:.0}B")
+    } else if bytes < K * K {
+        format!("{:.1}KiB", bytes / K)
+    } else if bytes < K * K * K {
+        format!("{:.1}MiB", bytes / (K * K))
+    } else {
+        format!("{:.2}GiB", bytes / (K * K * K))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| long-name |"));
+        assert!(s.lines().all(|l| l.len() == s.lines().next().unwrap().len() || !l.starts_with('|')));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.50ms");
+        assert_eq!(fmt_duration(2.5e-7), "250.0ns");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(64.0 * 1024.0 * 1024.0), "64.0MiB");
+    }
+}

@@ -1,0 +1,265 @@
+//! Cross-module integration tests: HeteroAuto ↔ cost model ↔ simulator
+//! consistency, DiComm model invariants, manifest failure injection, and
+//! end-to-end properties over the whole search space.
+
+use h2::auto::{search, SearchConfig};
+use h2::comm::{cross_node_time, p2p_latency, CommMode};
+use h2::costmodel::{evaluate, GroupPlan, Strategy, H2_100B, MEMORY_SAFETY};
+use h2::hetero::{experiment, spec, ChipKind, Cluster, ALL_EXPERIMENTS};
+use h2::sim::{simulate_iteration, SimOptions};
+use h2::topology::NicAssignment;
+use h2::util::prop;
+use h2::util::rng::Rng;
+
+#[test]
+fn every_experiment_search_is_consistent() {
+    for exp_name in ALL_EXPERIMENTS {
+        let exp = experiment(exp_name).unwrap();
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())
+            .unwrap_or_else(|e| panic!("{exp_name}: {e}"));
+        // Invariant 1: all layers placed.
+        assert_eq!(r.strategy.total_layers(), H2_100B.n_layers, "{exp_name}");
+        // Invariant 2: exact chip accounting per group.
+        for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
+            assert_eq!(g.n_chips, p.s_pp * p.s_tp * r.strategy.s_dp,
+                       "{exp_name}/{}", g.spec.kind);
+            // Invariant 3: TP is a power of two within TP_MAX.
+            assert!(p.s_tp.is_power_of_two());
+            assert!(p.s_tp <= g.spec.tp_max());
+            // Invariant 4: layers uniform across a type's stages.
+            assert_eq!(p.layers % p.s_pp, 0);
+        }
+        // Invariant 5: memory feasible under the safety margin.
+        assert!(r.eval.feasible, "{exp_name}");
+        for (g, &mem) in r.groups.iter().zip(&r.eval.peak_memory) {
+            assert!(mem <= g.spec.memory_bytes() * MEMORY_SAFETY + 1.0, "{exp_name}");
+        }
+        // Invariant 6: the simulator agrees with the cost model within 25%
+        // (they share profiles but schedule independently).
+        let grefs: Vec<&h2::hetero::ChipGroup> = r.groups.iter().collect();
+        let sim = simulate_iteration(&H2_100B, &grefs, &r.strategy, H2_100B.seq_len,
+                                     &SimOptions::default());
+        let rel = (sim.iteration_seconds - r.eval.iteration_seconds).abs()
+            / r.eval.iteration_seconds;
+        assert!(rel < 0.25, "{exp_name}: sim {} vs model {}",
+                sim.iteration_seconds, r.eval.iteration_seconds);
+    }
+}
+
+#[test]
+fn search_monotone_in_batch_size() {
+    // Larger global batch must never raise the searched cost-per-token.
+    let exp = experiment("exp-a-1").unwrap();
+    let cfg = SearchConfig::default();
+    let small = search(&H2_100B, &exp.cluster, 2 * 1024 * 1024, &cfg).unwrap();
+    let large = search(&H2_100B, &exp.cluster, 6 * 1024 * 1024, &cfg).unwrap();
+    let per_tok_small = small.eval.iteration_seconds / (2.0 * 1024.0 * 1024.0);
+    let per_tok_large = large.eval.iteration_seconds / (6.0 * 1024.0 * 1024.0);
+    assert!(per_tok_large <= per_tok_small * 1.001);
+}
+
+#[test]
+fn random_feasible_strategies_never_beat_search() {
+    // Property: HeteroAuto's pick is at least as good as random feasible
+    // strategies drawn from the same space.
+    let exp = experiment("exp-a-1").unwrap();
+    let best = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                      &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
+    let groups: Vec<h2::hetero::ChipGroup> =
+        exp.cluster.groups_by_memory_desc().into_iter().cloned().collect();
+    let sequences = exp.gbs_tokens / H2_100B.seq_len;
+
+    prop::check(60, |rng: &mut Rng| {
+        let dps = [1usize, 2, 4, 8, 16, 32];
+        let s_dp = *rng.choose(&dps);
+        if sequences % s_dp != 0 {
+            return Ok(());
+        }
+        let mut plans = Vec::new();
+        for g in &groups {
+            let tps = [1usize, 2, 4];
+            let s_tp = *rng.choose(&tps);
+            if g.n_chips % (s_tp * s_dp) != 0 {
+                return Ok(());
+            }
+            let s_pp = g.n_chips / (s_tp * s_dp);
+            plans.push(GroupPlan { s_pp, s_tp, layers: 0, recompute: rng.f64() < 0.5 });
+        }
+        // Random layer split (uniform within type).
+        let mut remaining = H2_100B.n_layers;
+        let n = plans.len();
+        for (i, p) in plans.iter_mut().enumerate() {
+            let lps = if i == n - 1 {
+                remaining / p.s_pp
+            } else {
+                rng.usize(1, (remaining / p.s_pp).max(2))
+            };
+            let take = (lps * p.s_pp).min(remaining);
+            p.layers = take;
+            remaining -= take;
+        }
+        if remaining != 0 || plans.iter().any(|p| p.layers == 0 || p.layers % p.s_pp != 0) {
+            return Ok(());
+        }
+        let strategy = Strategy { s_dp, micro_batches: sequences / s_dp, plans };
+        let grefs: Vec<&h2::hetero::ChipGroup> = groups.iter().collect();
+        let eval = evaluate(&H2_100B, &grefs, &strategy, H2_100B.seq_len, 1.0);
+        if !eval.feasible {
+            return Ok(());
+        }
+        prop::assert_prop(
+            eval.iteration_seconds >= best.eval.iteration_seconds * 0.999,
+            format!("random strategy {strategy:?} beat the search: {} < {}",
+                    eval.iteration_seconds, best.eval.iteration_seconds),
+        )
+    });
+}
+
+#[test]
+fn comm_model_invariants() {
+    prop::check(200, |rng: &mut Rng| {
+        let bytes = 1usize << rng.usize(6, 30);
+        let tcp = p2p_latency(CommMode::TcpCpu, bytes);
+        let mid = p2p_latency(CommMode::RdmaCpu, bytes);
+        let ddr = p2p_latency(CommMode::DeviceDirect, bytes);
+        prop::assert_prop(ddr > 0.0 && ddr.is_finite(), "positive finite")?;
+        prop::assert_prop(ddr <= mid && mid <= tcp, "strategy ordering")?;
+        // Doubling the size never more than doubles-plus-overhead the time.
+        let ddr2 = p2p_latency(CommMode::DeviceDirect, bytes * 2);
+        prop::assert_prop(ddr2 >= ddr && ddr2 <= 2.0 * ddr + 1e-5, "subadditive growth")
+    });
+}
+
+#[test]
+fn cross_node_time_symmetric_in_affinity_ordering() {
+    for src in ChipKind::ALL {
+        for dst in ChipKind::ALL {
+            let s = spec(src);
+            let d = spec(dst);
+            for mode in [CommMode::TcpCpu, CommMode::RdmaCpu, CommMode::DeviceDirect] {
+                let aff = cross_node_time(mode, 1 << 20, &s, &d, NicAssignment::Affinity);
+                let non = cross_node_time(mode, 1 << 20, &s, &d, NicAssignment::NonAffinity);
+                assert!(aff <= non, "{src}->{dst} {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sub_sequence_batch_reports_error() {
+    let cluster = Cluster::new("c16", vec![(ChipKind::C, 16)]);
+    let r = search(&H2_100B, &cluster, 1000, &SearchConfig::default());
+    assert!(r.is_err(), "GBS below one sequence must error");
+}
+
+#[test]
+fn tiny_cluster_survives_only_via_offload() {
+    // One C node (16 x 32 GiB) holds the 100B model only by spilling
+    // optimizer state to host — the search must find that plan and the
+    // memory model must mark it offloaded.
+    let cluster = Cluster::new("c16", vec![(ChipKind::C, 16)]);
+    let r = search(&H2_100B, &cluster, 2 * 1024 * 1024, &SearchConfig::default()).unwrap();
+    assert!(r.eval.feasible);
+    let plan = &r.strategy.plans[0];
+    let groups = cluster.groups_by_memory_desc();
+    let mem = h2::costmodel::stage_memory_bytes(
+        &groups[0].spec, &H2_100B, plan, &r.strategy, 0,
+        r.strategy.total_stages(), H2_100B.seq_len, true,
+        plan.s_pp == r.strategy.total_stages(),
+    );
+    assert!(mem.offloaded, "a single C node must need offload for 100B");
+}
+
+#[test]
+fn zero_bubble_alpha_improves_every_experiment() {
+    for exp_name in ["exp-a-1", "exp-c-1"] {
+        let exp = experiment(exp_name).unwrap();
+        let f1b1 = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                          &SearchConfig { alpha: 1.0, two_stage: false, ..Default::default() })
+            .unwrap();
+        let zbv = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                         &SearchConfig { alpha: 0.0, two_stage: false, ..Default::default() })
+            .unwrap();
+        assert!(zbv.eval.iteration_seconds < f1b1.eval.iteration_seconds, "{exp_name}");
+    }
+}
+
+mod manifest_failures {
+    use h2::runtime::Manifest;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("h2_manifest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Manifest::load("/nonexistent/manifest.json").is_err());
+    }
+
+    #[test]
+    fn malformed_json_errors() {
+        let p = write_tmp("bad.json", "{ not json ]");
+        assert!(Manifest::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_keys_error_with_context() {
+        let p = write_tmp("empty.json", r#"{"models": {"m": {"config": {}, "artifacts": {}}}}"#);
+        let err = Manifest::load(&p).unwrap_err().to_string();
+        assert!(err.contains("n_layers") || err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn valid_minimal_manifest_loads() {
+        let p = write_tmp("ok.json", r#"{"models": {"m": {"config": {
+            "n_layers": 2, "hidden": 8, "n_heads": 2, "n_kv_heads": 1,
+            "intermediate": 16, "vocab": 32, "seq_len": 16, "param_count": 1234},
+            "artifacts": {"x": {"file": "m/x.hlo.txt",
+              "inputs": [{"shape": [2, 2], "dtype": "f32"}],
+              "outputs": [{"shape": [], "dtype": "f32"}]}}}}}"#);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.model("m").unwrap().n_layers, 2);
+        let a = m.artifact("m", "x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 2]);
+        assert!(a.params.is_empty());
+    }
+}
+
+mod collective_failure_injection {
+    use h2::comm::collectives::ring_allreduce;
+    use h2::util::prop;
+    use h2::util::rng::Rng;
+
+    #[test]
+    #[should_panic(expected = "rank buffer lengths differ")]
+    fn mismatched_lengths_panic() {
+        let mut bufs = vec![vec![0.0f32; 4], vec![0.0f32; 5]];
+        ring_allreduce(&mut bufs, &|_| 0.0);
+    }
+
+    #[test]
+    fn allreduce_handles_non_divisible_lengths() {
+        // Lengths that don't divide evenly across ranks still reduce right.
+        prop::check(50, |rng: &mut Rng| {
+            let n = rng.usize(2, 9);
+            let len = rng.usize(1, 3 * n + 1); // often < n, exercising empty chunks
+            let mut bufs: Vec<Vec<f32>> =
+                (0..n).map(|r| vec![(r + 1) as f32; len]).collect();
+            let expect = (n * (n + 1) / 2) as f32;
+            ring_allreduce(&mut bufs, &|_| 0.0);
+            for b in &bufs {
+                for &x in b {
+                    prop::assert_prop((x - expect).abs() < 1e-4,
+                                      format!("{x} != {expect} (n={n}, len={len})"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+}
