@@ -55,6 +55,47 @@ pub struct SearchResult {
     pub elapsed_seconds: f64,
 }
 
+impl SearchResult {
+    /// Package the searched strategy as a serializable
+    /// [`crate::plan::ExecutionPlan`] — the HeteroAuto → HeteroPP handoff.
+    /// Communication options take the plan defaults (device-direct RDMA,
+    /// SR&AG, NIC affinity, overlap on); callers adjust the returned plan's
+    /// fields for ablations.
+    pub fn to_plan(
+        &self,
+        model: &ModelShape,
+        cluster: &Cluster,
+        gbs_tokens: usize,
+        cfg: &SearchConfig,
+    ) -> crate::plan::ExecutionPlan {
+        // The search floors the batch to whole sequences; the plan records
+        // the tokens actually scheduled so its TGS matches the modeled work.
+        let whole = (gbs_tokens / model.seq_len) * model.seq_len;
+        crate::plan::PlanBuilder::new(&format!("{}-heteroauto", cluster.name))
+            .model(*model)
+            .cluster(cluster.clone())
+            .stage_groups(self.groups.clone())
+            .strategy(self.strategy.clone())
+            .gbs_tokens(whole)
+            .micro_tokens(model.seq_len)
+            .alpha(cfg.alpha)
+            .build()
+            .expect("HeteroAuto produced a structurally invalid strategy")
+    }
+
+    /// Consuming form of [`SearchResult::to_plan`] for callers done with
+    /// the search result.
+    pub fn into_plan(
+        self,
+        model: &ModelShape,
+        cluster: &Cluster,
+        gbs_tokens: usize,
+        cfg: &SearchConfig,
+    ) -> crate::plan::ExecutionPlan {
+        self.to_plan(model, cluster, gbs_tokens, cfg)
+    }
+}
+
 /// Powers of two 1..=tp_max that divide `n`.
 fn tp_candidates(n_chips: usize, tp_max: usize) -> Vec<usize> {
     let mut v = Vec::new();
@@ -69,20 +110,33 @@ fn tp_candidates(n_chips: usize, tp_max: usize) -> Vec<usize> {
 }
 
 /// Divisors of `sequences` usable as s_dp (every group must split evenly).
+///
+/// Divisors come in pairs `(d, sequences/d)`, so scanning `d` up to
+/// `sqrt(sequences)` finds them all — O(sqrt n) instead of the O(n) scan
+/// that dominated large-GBS searches (sequences is GBS/seq_len, easily
+/// in the thousands).
 fn dp_candidates(sequences: usize, groups: &[ChipGroup], max_dp: usize) -> Vec<usize> {
     let mut v = Vec::new();
-    for dp in 1..=sequences {
-        if sequences % dp != 0 {
-            continue;
-        }
+    let mut accept = |dp: usize| {
         if max_dp > 0 && dp > max_dp {
-            break;
+            return;
         }
         // Every group must be divisible by dp (leaving >= 1 chip per stage).
         if groups.iter().all(|g| g.n_chips % dp == 0 && g.n_chips / dp >= 1) {
             v.push(dp);
         }
+    };
+    let mut d = 1;
+    while d * d <= sequences {
+        if sequences % d == 0 {
+            accept(d);
+            if d != sequences / d {
+                accept(sequences / d);
+            }
+        }
+        d += 1;
     }
+    v.sort_unstable();
     v
 }
 
@@ -295,6 +349,46 @@ mod tests {
             assert_eq!(512 % dp, 0);
             assert_eq!(256 % dp, 0);
         }
+    }
+
+    #[test]
+    fn dp_candidates_match_naive_scan() {
+        // The sqrt divisor-pair walk must agree exactly with the O(n)
+        // reference on sequences both square and not, with and without caps.
+        let naive = |sequences: usize, groups: &[ChipGroup], max_dp: usize| -> Vec<usize> {
+            (1..=sequences)
+                .filter(|dp| {
+                    sequences % dp == 0
+                        && (max_dp == 0 || *dp <= max_dp)
+                        && groups.iter().all(|g| g.n_chips % dp == 0)
+                })
+                .collect()
+        };
+        let groups = vec![ChipGroup::new(ChipKind::A, 256), ChipGroup::new(ChipKind::B, 512)];
+        for sequences in [1usize, 2, 12, 256, 511, 512, 1024, 1536, 4096] {
+            for max_dp in [0usize, 1, 3, 16, 10_000] {
+                assert_eq!(
+                    dp_candidates(sequences, &groups, max_dp),
+                    naive(sequences, &groups, max_dp),
+                    "sequences={sequences} max_dp={max_dp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_plan_roundtrips_the_search() {
+        let exp = experiment("exp-a-1").unwrap();
+        let cfg = SearchConfig::default();
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).unwrap();
+        let strategy = r.strategy.clone();
+        let eval_iter = r.eval.iteration_seconds;
+        let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+        assert_eq!(plan.strategy, strategy);
+        assert_eq!(plan.gbs_tokens, exp.gbs_tokens);
+        assert!(plan.validate().is_ok());
+        // The plan's cost-model view is bit-identical to the search's.
+        assert_eq!(plan.evaluate().iteration_seconds, eval_iter);
     }
 
     #[test]

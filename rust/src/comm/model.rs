@@ -42,6 +42,16 @@ impl CommMode {
             _ => None,
         }
     }
+
+    /// Canonical short token, accepted back by [`CommMode::parse`] — the
+    /// serialization currency of config and plan files.
+    pub fn token(self) -> &'static str {
+        match self {
+            CommMode::TcpCpu => "tcp",
+            CommMode::RdmaCpu => "rdma-cpu",
+            CommMode::DeviceDirect => "ddr",
+        }
+    }
 }
 
 const GB: f64 = 1e9;

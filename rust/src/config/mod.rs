@@ -1,13 +1,26 @@
-//! JSON-driven configuration for clusters, experiments and training jobs.
+//! JSON-driven configuration: the front-end that lowers into the
+//! plan-centric API.
 //!
-//! The CLI accepts `--config <file.json>` anywhere it accepts inline flags;
-//! this module is the typed layer over [`crate::util::json`]. Example:
+//! Every CLI subcommand accepts `--config <file.json>`; this module is the
+//! typed layer over [`crate::util::json`]. A config can declare **custom
+//! chips** (registered into the [`crate::hetero`] catalog at parse time, so
+//! new cluster scenarios need no recompilation), a cluster, a global batch,
+//! search and simulation options, and a train section. [`Config::plan_builder`]
+//! lowers all of it into a [`crate::plan::PlanBuilder`]; the search CLI adds
+//! the strategy and persists the resulting [`crate::plan::ExecutionPlan`].
 //!
 //! ```json
 //! {
-//!   "cluster": { "name": "lab", "groups": [{"chip": "A", "chips": 256},
+//!   "chips": [ { "name": "H9", "fp16_tflops": 300, "memory_gib": 80,
+//!                "chips_per_node": 8,
+//!                "intra_node": {"type": "uniform", "gbps": 300},
+//!                "nics_per_node": 8, "nic_gbps": 25, "mfu": 0.5 } ],
+//!   "cluster": { "name": "lab", "groups": [{"chip": "H9", "chips": 256},
 //!                                           {"chip": "B", "chips": 256}] },
 //!   "gbs_tokens": 2097152,
+//!   "search": { "alpha": 1.0, "group_split": 128, "two_stage": true },
+//!   "sim": { "comm": "ddr", "reshard": "srag", "nic_affinity": true,
+//!            "fine_overlap": true },
 //!   "train": {
 //!     "model": "h2_100m",
 //!     "stages": [{"prefix": "first_l10", "chip": "A"},
@@ -20,23 +33,56 @@
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::auto::SearchConfig;
 use crate::comm::CommMode;
 use crate::coordinator::{StagePlan, TrainConfig};
-use crate::hetero::{ChipKind, Cluster};
+use crate::hetero::{register_custom, Cluster, CustomChipDef};
+use crate::plan::{
+    chip_def_from_json, parse_kind, parse_token, PlanBuilder, PrecisionPolicy, TrainSpec,
+};
+use crate::sim::{ReshardStrategy, SimOptions};
 use crate::topology::NicAssignment;
 use crate::util::json::Value;
 
 /// Top-level config file.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Custom chips declared by this config (already registered).
+    pub chips: Vec<CustomChipDef>,
     pub cluster: Option<Cluster>,
     pub gbs_tokens: Option<usize>,
+    pub search: Option<SearchConfig>,
+    pub sim: Option<SimOverrides>,
     pub train: Option<TrainConfig>,
 }
 
-fn parse_chip(v: &Value) -> Result<ChipKind> {
-    let s = v.str()?;
-    ChipKind::parse(s).ok_or_else(|| anyhow!("unknown chip `{s}`"))
+/// Partial overrides for [`SimOptions`]: only keys actually present in the
+/// config's `sim` section are applied, so overlaying a config onto a loaded
+/// plan never silently resets fields the section doesn't mention.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimOverrides {
+    pub comm: Option<CommMode>,
+    pub reshard: Option<ReshardStrategy>,
+    pub nic_affinity: Option<bool>,
+    pub fine_overlap: Option<bool>,
+}
+
+impl SimOverrides {
+    pub fn apply(&self, opts: &mut SimOptions) {
+        if let Some(c) = self.comm {
+            opts.comm = c;
+        }
+        if let Some(r) = self.reshard {
+            opts.reshard = r;
+        }
+        if let Some(a) = self.nic_affinity {
+            opts.nic_assignment =
+                if a { NicAssignment::Affinity } else { NicAssignment::NonAffinity };
+        }
+        if let Some(f) = self.fine_overlap {
+            opts.fine_overlap = f;
+        }
+    }
 }
 
 fn parse_cluster(v: &Value) -> Result<Cluster> {
@@ -44,9 +90,32 @@ fn parse_cluster(v: &Value) -> Result<Cluster> {
         .unwrap_or_else(|| "config".to_string());
     let mut groups = Vec::new();
     for g in v.get("groups")?.arr()? {
-        groups.push((parse_chip(g.get("chip")?)?, g.get("chips")?.usize()?));
+        groups.push((parse_kind(g.get("chip")?)?, g.get("chips")?.usize()?));
     }
-    Ok(Cluster::new(&name, groups))
+    Cluster::try_build(&name, groups)
+}
+
+fn parse_search(v: &Value) -> Result<SearchConfig> {
+    let d = SearchConfig::default();
+    Ok(SearchConfig {
+        alpha: v.opt("alpha").map(|x| x.num()).transpose()?.unwrap_or(d.alpha),
+        group_split: v.opt("group_split").map(|x| x.usize()).transpose()?
+            .unwrap_or(d.group_split),
+        two_stage: v.opt("two_stage").map(|x| x.bool()).transpose()?.unwrap_or(d.two_stage),
+        max_dp: v.opt("max_dp").map(|x| x.usize()).transpose()?.unwrap_or(d.max_dp),
+    })
+}
+
+fn parse_sim(v: &Value) -> Result<SimOverrides> {
+    Ok(SimOverrides {
+        comm: v.opt("comm").map(|c| parse_token(c, "comm", CommMode::parse)).transpose()?,
+        reshard: v
+            .opt("reshard")
+            .map(|r| parse_token(r, "reshard", ReshardStrategy::parse))
+            .transpose()?,
+        nic_affinity: v.opt("nic_affinity").map(|x| x.bool()).transpose()?,
+        fine_overlap: v.opt("fine_overlap").map(|x| x.bool()).transpose()?,
+    })
 }
 
 fn parse_train(v: &Value) -> Result<TrainConfig> {
@@ -54,14 +123,11 @@ fn parse_train(v: &Value) -> Result<TrainConfig> {
     for s in v.get("stages")?.arr()? {
         stages.push(StagePlan {
             prefix: s.get("prefix")?.str()?.to_string(),
-            chip: parse_chip(s.get("chip")?)?,
+            chip: parse_kind(s.get("chip")?)?,
         });
     }
     let comm = match v.opt("comm") {
-        Some(c) => {
-            let text = c.str()?;
-            CommMode::parse(text).ok_or_else(|| anyhow!("bad comm `{text}`"))?
-        }
+        Some(c) => parse_token(c, "comm", CommMode::parse)?,
         None => CommMode::DeviceDirect,
     };
     let get_usize = |key: &str, default: usize| -> Result<usize> {
@@ -87,12 +153,31 @@ fn parse_train(v: &Value) -> Result<TrainConfig> {
 }
 
 impl Config {
+    /// Parse a config. Custom chips are registered into the process-wide
+    /// registry *before* the other sections are parsed (the cluster/train
+    /// sections may reference them by name), so a config whose later
+    /// sections fail to parse still leaves its chip definitions registered
+    /// — re-parsing a corrected config re-registers them idempotently.
     pub fn parse(text: &str) -> Result<Config> {
         let v = Value::parse(text)?;
+        // Chips first: the cluster/train sections may reference them.
+        let mut chips = Vec::new();
+        if let Some(list) = v.opt("chips") {
+            for c in list.arr().context("parsing `chips`")? {
+                let def = chip_def_from_json(c).context("parsing `chips`")?;
+                register_custom(&def)?;
+                chips.push(def);
+            }
+        }
         Ok(Config {
+            chips,
             cluster: v.opt("cluster").map(parse_cluster).transpose()
                 .context("parsing `cluster`")?,
             gbs_tokens: v.opt("gbs_tokens").map(|x| x.usize()).transpose()?,
+            search: v.opt("search").map(parse_search).transpose()
+                .context("parsing `search`")?,
+            sim: v.opt("sim").map(parse_sim).transpose()
+                .context("parsing `sim`")?,
             train: v.opt("train").map(parse_train).transpose()
                 .context("parsing `train`")?,
         })
@@ -101,6 +186,65 @@ impl Config {
     pub fn load(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         Config::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    /// Search options declared by the config, or the defaults.
+    pub fn search_config(&self) -> SearchConfig {
+        self.search.unwrap_or_default()
+    }
+
+    /// Simulation options: the defaults with the config's `sim` keys applied.
+    pub fn sim_options(&self) -> SimOptions {
+        let mut opts = SimOptions::default();
+        if let Some(s) = self.sim {
+            s.apply(&mut opts);
+        }
+        opts
+    }
+
+    /// The `train` section lowered to a plan [`TrainSpec`] — the run shape
+    /// only; the section's comm/NIC/overlap/perturb fields live on the plan
+    /// itself (comm fields via the `sim` section, perturb via precision).
+    pub fn train_spec(&self) -> Option<TrainSpec> {
+        self.train.as_ref().map(|t| TrainSpec {
+            model: t.model.clone(),
+            stages: t.stages.clone(),
+            dp: t.dp,
+            micro_batches: t.micro_batches,
+            steps: t.steps,
+            lr: t.lr,
+            seed: t.seed,
+            log_every: t.log_every,
+        })
+    }
+
+    /// Lower the config into a [`PlanBuilder`]: cluster, global batch,
+    /// search alpha, simulation options, and the train section (run shape +
+    /// perturb flag) are applied; the caller supplies the strategy (usually
+    /// from `HeteroAuto`) and builds.
+    pub fn plan_builder(&self, name: &str) -> Result<PlanBuilder> {
+        let cluster = self
+            .cluster
+            .clone()
+            .ok_or_else(|| anyhow!("config has no `cluster` section"))?;
+        let sim = self.sim_options();
+        let mut b = PlanBuilder::new(name)
+            .cluster(cluster)
+            .alpha(self.search_config().alpha)
+            .comm(sim.comm)
+            .reshard(sim.reshard)
+            .nic_assignment(sim.nic_assignment)
+            .fine_overlap(sim.fine_overlap);
+        if let Some(gbs) = self.gbs_tokens {
+            b = b.gbs_tokens(gbs);
+        }
+        if let Some(spec) = self.train_spec() {
+            b = b.train(spec);
+        }
+        if self.train.as_ref().map(|t| t.perturb).unwrap_or(false) {
+            b = b.precision(PrecisionPolicy { perturb: true, ..PrecisionPolicy::default() });
+        }
+        Ok(b)
     }
 }
 
@@ -157,5 +301,94 @@ mod tests {
     fn empty_config_is_fine() {
         let c = Config::parse("{}").unwrap();
         assert!(c.cluster.is_none() && c.train.is_none());
+        assert!(c.search.is_none() && c.sim.is_none() && c.chips.is_empty());
+    }
+
+    #[test]
+    fn custom_chips_register_and_are_usable_in_cluster() {
+        let c = Config::parse(r#"{
+            "chips": [{"name": "CfgTest-X1", "fp16_tflops": 220, "memory_gib": 96,
+                       "chips_per_node": 16,
+                       "intra_node": {"type": "numa", "local_gbps": 150,
+                                      "cross_gbps": 50, "island": 8},
+                       "mfu": 0.5}],
+            "cluster": {"name": "xlab", "groups": [{"chip": "CfgTest-X1", "chips": 32}]}
+        }"#).unwrap();
+        assert_eq!(c.chips.len(), 1);
+        let cluster = c.cluster.unwrap();
+        assert_eq!(cluster.total_chips(), 32);
+        let spec = &cluster.groups[0].spec;
+        assert!(spec.kind.is_custom());
+        assert_eq!(spec.fp16_tflops, 220.0);
+        assert_eq!(spec.chips_per_node, 16);
+        assert_eq!(spec.tp_max(), 8); // NUMA island of 8
+    }
+
+    #[test]
+    fn search_and_sim_sections_parse() {
+        let c = Config::parse(r#"{
+            "search": {"alpha": 0.0, "max_dp": 8, "two_stage": false},
+            "sim": {"comm": "tcp", "reshard": "naive", "fine_overlap": false}
+        }"#).unwrap();
+        let s = c.search_config();
+        assert_eq!(s.alpha, 0.0);
+        assert_eq!(s.max_dp, 8);
+        assert!(!s.two_stage);
+        assert_eq!(s.group_split, 128); // default fills in
+        let o = c.sim_options();
+        assert_eq!(o.comm, crate::comm::CommMode::TcpCpu);
+        assert_eq!(o.reshard, crate::sim::ReshardStrategy::NaiveP2p);
+        assert!(!o.fine_overlap);
+    }
+
+    #[test]
+    fn config_lowers_into_plan_builder() {
+        use crate::costmodel::{GroupPlan, Strategy};
+        let c = Config::parse(r#"{
+            "cluster": {"name": "lab", "groups": [{"chip": "A", "chips": 256}]},
+            "gbs_tokens": 2097152,
+            "sim": {"comm": "tcp"}
+        }"#).unwrap();
+        let plan = c.plan_builder("from-config").unwrap()
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+            })
+            .build()
+            .unwrap();
+        assert_eq!(plan.gbs_tokens, 2097152);
+        assert_eq!(plan.comm, crate::comm::CommMode::TcpCpu);
+        assert_eq!(plan.cluster.name, "lab");
+    }
+
+    #[test]
+    fn plan_builder_carries_train_section() {
+        use crate::costmodel::{GroupPlan, Strategy};
+        let c = Config::parse(FULL).unwrap();
+        let plan = c
+            .plan_builder("with-train")
+            .unwrap()
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                plans: vec![
+                    GroupPlan { s_pp: 16, s_tp: 4, layers: 32, recompute: false },
+                    GroupPlan { s_pp: 32, s_tp: 4, layers: 64, recompute: true },
+                ],
+            })
+            .build()
+            .unwrap();
+        let t = plan.train.as_ref().expect("train section must ride along");
+        assert_eq!(t.model, "h2_100m");
+        assert_eq!(t.dp, 2);
+        assert!(!plan.precision.perturb);
+        assert!(plan.train_config().is_ok());
+    }
+
+    #[test]
+    fn plan_builder_without_cluster_errors() {
+        let c = Config::parse("{}").unwrap();
+        assert!(c.plan_builder("x").is_err());
     }
 }

@@ -11,4 +11,4 @@ pub mod train;
 pub use data::Corpus;
 pub use dpgroup::DpGroup;
 pub use schedule::{in_flight, one_f1b_order, Op};
-pub use train::{train, StagePlan, TrainConfig, TrainReport};
+pub use train::{train, train_plan, StagePlan, TrainConfig, TrainReport};

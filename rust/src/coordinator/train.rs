@@ -34,7 +34,7 @@ unsafe impl Send for SharedExe {}
 unsafe impl Sync for SharedExe {}
 
 /// One pipeline stage of the training plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StagePlan {
     /// Artifact prefix, e.g. `first_l8` (expects `{prefix}_fwd` etc.).
     pub prefix: String,
@@ -102,6 +102,13 @@ struct WorkerShared {
     losses: Mutex<Vec<f64>>,
     virtual_ns: AtomicU64,
     comm_ns: AtomicU64,
+}
+
+/// Run a serialized [`crate::plan::ExecutionPlan`]'s train section — the
+/// plan-centric entry point. The plan's comm mode, NIC assignment, overlap
+/// and precision policy apply; errors if the plan has no train section.
+pub fn train_plan(rt: &Runtime, plan: &crate::plan::ExecutionPlan) -> Result<TrainReport> {
+    train(rt, &plan.train_config()?)
 }
 
 /// Run a full training job; blocks until all steps finish.

@@ -16,7 +16,7 @@ pub use memory::{stage_memory_bytes, MemoryBreakdown};
 pub use profile::{profile_layer, LayerProfile};
 
 /// Transformer shape consumed by the analytic model (Table 4 for the 100B).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelShape {
     pub n_layers: usize,
     pub hidden: usize,
@@ -211,15 +211,97 @@ pub fn evaluate(
     }
 }
 
+/// Evaluate the cost model on a serialized [`crate::plan::ExecutionPlan`]
+/// — the plan-centric entry point; a free-function alias for
+/// [`crate::plan::ExecutionPlan::evaluate`].
+pub fn evaluate_plan(plan: &crate::plan::ExecutionPlan) -> Evaluation {
+    plan.evaluate()
+}
+
 /// Tokens/chip/second (the paper's TGS metric) for an evaluated strategy.
 pub fn tgs(cluster: &Cluster, gbs_tokens: usize, iteration_seconds: f64) -> f64 {
     gbs_tokens as f64 / iteration_seconds / cluster.total_chips() as f64
+}
+
+/// Rewrite a strategy in place into the uniform-1F1B baseline: equal layer
+/// count per stage, recomputation everywhere (the homogeneous-style
+/// configuration the Table 9 ablation and `h2 simulate --uniform` compare
+/// against).
+///
+/// Leftover layers are topped up in whole layers-per-stage increments,
+/// always stepping *toward* the exact total (largest step that still fits
+/// first), so the baseline never silently simulates more layers than the
+/// model has. With wildly mismatched per-group stage counts an exact match
+/// can be unreachable (every stage keeps >= 1 layer); the result then stops
+/// at the closest reachable total.
+pub fn uniform_1f1b(strategy: &mut Strategy, n_layers: usize) {
+    let total_stages = strategy.total_stages();
+    if total_stages == 0 {
+        return;
+    }
+    let lps = (n_layers / total_stages).max(1);
+    for p in strategy.plans.iter_mut() {
+        p.layers = lps * p.s_pp;
+        p.recompute = true;
+    }
+    let mut total = strategy.total_layers();
+    while total != n_layers {
+        let step = if total < n_layers {
+            // Add the largest per-group step that doesn't overshoot.
+            strategy
+                .plans
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.s_pp <= n_layers - total)
+                .max_by_key(|(_, p)| p.s_pp)
+                .map(|(i, p)| (i, p.s_pp as i64))
+        } else {
+            // Remove the largest step that doesn't undershoot or empty a group.
+            strategy
+                .plans
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.layers > p.s_pp && p.s_pp <= total - n_layers)
+                .max_by_key(|(_, p)| p.s_pp)
+                .map(|(i, p)| (i, -(p.s_pp as i64)))
+        };
+        let Some((i, delta)) = step else { break };
+        let p = &mut strategy.plans[i];
+        p.layers = (p.layers as i64 + delta) as usize;
+        total = (total as i64 + delta) as usize;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hetero::{homogeneous_baseline, ChipKind};
+
+    #[test]
+    fn uniform_1f1b_hits_exact_layer_totals() {
+        // Mismatched stage counts that the naive round-robin overshot:
+        // s_pp [24, 16] needs lps [2, 3] to land exactly on 96.
+        let mut s = Strategy {
+            s_dp: 1,
+            micro_batches: 8,
+            plans: vec![
+                GroupPlan { s_pp: 24, s_tp: 1, layers: 0, recompute: false },
+                GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false },
+            ],
+        };
+        uniform_1f1b(&mut s, 96);
+        assert_eq!(s.total_layers(), 96, "plans {:?}", s.plans);
+        assert!(s.plans.iter().all(|p| p.recompute && p.layers % p.s_pp == 0));
+
+        // The easy homogeneous case stays exactly uniform.
+        let mut s = Strategy {
+            s_dp: 1,
+            micro_batches: 8,
+            plans: vec![GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false }],
+        };
+        uniform_1f1b(&mut s, 96);
+        assert_eq!(s.plans[0].layers, 96);
+    }
 
     #[test]
     fn table4_shape_is_100b() {

@@ -14,8 +14,16 @@
 //! | D    | 1.5–2.0        | 550 TFLOPS  | 32 GB  | 8          |
 
 use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{bail, Result};
 
 /// Identity of a chip architecture in the hyper-heterogeneous cluster.
+///
+/// The four paper chips plus the A100 reference are built in; `Custom`
+/// kinds are declared at runtime through [`register_custom`] (typically
+/// from a config file's `chips` section), so new heterogeneous-cluster
+/// scenarios need no recompilation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ChipKind {
     A,
@@ -24,6 +32,8 @@ pub enum ChipKind {
     D,
     /// NVIDIA A100 — the homogeneous reference used for precision alignment.
     A100,
+    /// A user-declared chip; the index points into the process-wide registry.
+    Custom(u16),
 }
 
 impl ChipKind {
@@ -36,6 +46,10 @@ impl ChipKind {
             ChipKind::C => "Chip-C",
             ChipKind::D => "Chip-D",
             ChipKind::A100 => "A100",
+            ChipKind::Custom(i) => {
+                let reg = registry().read().unwrap();
+                reg.get(i as usize).map(|e| e.name).unwrap_or("Custom-?")
+            }
         }
     }
 
@@ -46,8 +60,44 @@ impl ChipKind {
             "C" | "CHIP-C" => Some(ChipKind::C),
             "D" | "CHIP-D" => Some(ChipKind::D),
             "A100" => Some(ChipKind::A100),
-            _ => None,
+            _ => {
+                let reg = registry().read().unwrap();
+                reg.iter()
+                    .position(|e| e.name.eq_ignore_ascii_case(s))
+                    .map(|i| ChipKind::Custom(i as u16))
+            }
         }
+    }
+
+    /// Stable integer distinguishing kinds — used for RNG seeding
+    /// (`ChipKind` carries data, so it cannot be cast with `as`).
+    ///
+    /// Custom kinds hash their *name* rather than their registry index, so
+    /// perturbation streams are reproducible across processes regardless of
+    /// the order chips were declared in.
+    pub fn seed_tag(self) -> u64 {
+        match self {
+            ChipKind::A => 0,
+            ChipKind::B => 1,
+            ChipKind::C => 2,
+            ChipKind::D => 3,
+            ChipKind::A100 => 4,
+            ChipKind::Custom(_) => {
+                // FNV-1a over the lower-cased name (parse is case-insensitive).
+                let mut h: u64 = 0xcbf29ce484222325;
+                for b in self.name().bytes() {
+                    h ^= b.to_ascii_lowercase() as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+                // Setting a high bit keeps custom tags clear of the
+                // built-in 0..=4 range (and avoids overflow).
+                h | (1 << 32)
+            }
+        }
+    }
+
+    pub fn is_custom(self) -> bool {
+        matches!(self, ChipKind::Custom(_))
     }
 }
 
@@ -96,7 +146,7 @@ impl IntraNodeLink {
 }
 
 /// Full specification of one chip architecture + its server design.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChipSpec {
     pub kind: ChipKind,
     /// Peak FP16 throughput, TFLOPS.
@@ -114,6 +164,12 @@ pub struct ChipSpec {
     /// Numerical perturbation scale of this vendor's operator stack relative
     /// to the A100 (drives the Fig 5 / Table 1 precision study).
     pub op_noise: f64,
+    /// PCIe-path bandwidth from a chip to its *affine* NIC, GB/s
+    /// (chip-specific: vendors wire x8/x16 Gen4 differently; Table 3 model).
+    pub pcie_to_nic_gbps: f64,
+    /// Share of the affine-path bandwidth left when a flow must cross the
+    /// inter-switch uplink (calibrated to Table 3's non-affinity rows).
+    pub cross_switch_share: f64,
 }
 
 impl ChipSpec {
@@ -138,8 +194,164 @@ impl ChipSpec {
     }
 }
 
+/// A user-declared chip architecture: everything [`ChipSpec`] carries plus
+/// the NIC-path constants the topology model needs. Declared in config JSON
+/// (`"chips": [...]`) and registered with [`register_custom`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CustomChipDef {
+    pub name: String,
+    pub fp16_tflops: f64,
+    pub memory_gib: f64,
+    pub chips_per_node: usize,
+    pub intra_node: IntraNodeLink,
+    pub nics_per_node: usize,
+    pub nic_gbps: f64,
+    pub mfu: f64,
+    pub op_noise: f64,
+    /// PCIe-path bandwidth from a chip to its affine NIC, GB/s (Table 3 model).
+    pub pcie_to_nic_gbps: f64,
+    /// Bandwidth share left when a flow crosses the inter-switch uplink.
+    pub cross_switch_share: f64,
+}
+
+impl CustomChipDef {
+    /// A mid-range starting point (A100-class server, modest fabric);
+    /// callers override the fields they care about.
+    pub fn new(name: &str) -> CustomChipDef {
+        CustomChipDef {
+            name: name.to_string(),
+            fp16_tflops: 200.0,
+            memory_gib: 64.0,
+            chips_per_node: 8,
+            intra_node: IntraNodeLink::Uniform { gbps: 200.0 },
+            nics_per_node: 8,
+            nic_gbps: 25.0,
+            mfu: 0.45,
+            op_noise: 0.005,
+            pcie_to_nic_gbps: 12.0,
+            cross_switch_share: 0.55,
+        }
+    }
+}
+
+struct RegistryEntry {
+    name: &'static str,
+    spec: ChipSpec,
+}
+
+fn registry() -> &'static RwLock<Vec<RegistryEntry>> {
+    static REGISTRY: OnceLock<RwLock<Vec<RegistryEntry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+const BUILTIN_NAMES: [&str; 10] = [
+    "A", "B", "C", "D", "A100", "CHIP-A", "CHIP-B", "CHIP-C", "CHIP-D", "Custom-?",
+];
+
+/// Register (or update) a user-declared chip and return its kind.
+///
+/// Re-registering an existing name updates the stored definition in place
+/// and returns the same `ChipKind`, so reloading a config or a plan file is
+/// idempotent. Names shadowing the built-in catalog are rejected.
+pub fn register_custom(def: &CustomChipDef) -> Result<ChipKind> {
+    if def.name.is_empty() {
+        bail!("custom chip needs a non-empty name");
+    }
+    if BUILTIN_NAMES.iter().any(|b| b.eq_ignore_ascii_case(&def.name)) {
+        bail!("custom chip name `{}` shadows a built-in chip", def.name);
+    }
+    if def.chips_per_node == 0 || def.nics_per_node == 0 {
+        bail!("custom chip `{}`: chips_per_node and nics_per_node must be > 0", def.name);
+    }
+    if !(def.fp16_tflops > 0.0 && def.memory_gib > 0.0 && def.mfu > 0.0 && def.nic_gbps > 0.0) {
+        bail!("custom chip `{}`: tflops/memory/mfu/nic_gbps must be > 0", def.name);
+    }
+    if !(def.pcie_to_nic_gbps > 0.0
+        && def.cross_switch_share > 0.0
+        && def.cross_switch_share <= 1.0)
+    {
+        bail!("custom chip `{}`: pcie_to_nic_gbps must be > 0 and \
+               cross_switch_share in (0, 1]", def.name);
+    }
+    let mut reg = registry().write().unwrap();
+    if let Some(i) = reg.iter().position(|e| e.name.eq_ignore_ascii_case(&def.name)) {
+        let kind = ChipKind::Custom(i as u16);
+        reg[i].spec = spec_from_def(kind, def);
+        return Ok(kind);
+    }
+    if reg.len() >= u16::MAX as usize {
+        bail!("custom chip registry full");
+    }
+    let kind = ChipKind::Custom(reg.len() as u16);
+    reg.push(RegistryEntry {
+        name: Box::leak(def.name.clone().into_boxed_str()),
+        spec: spec_from_def(kind, def),
+    });
+    Ok(kind)
+}
+
+fn spec_from_def(kind: ChipKind, def: &CustomChipDef) -> ChipSpec {
+    ChipSpec {
+        kind,
+        fp16_tflops: def.fp16_tflops,
+        memory_gib: def.memory_gib,
+        chips_per_node: def.chips_per_node,
+        intra_node: def.intra_node,
+        nics_per_node: def.nics_per_node,
+        nic_gbps: def.nic_gbps,
+        mfu: def.mfu,
+        op_noise: def.op_noise,
+        pcie_to_nic_gbps: def.pcie_to_nic_gbps,
+        cross_switch_share: def.cross_switch_share,
+    }
+}
+
+/// Rebuild the declaration from a (possibly snapshotted) spec — the inverse
+/// of [`spec_from_def`], used to embed self-contained chip definitions in
+/// plan files without consulting the live registry's current state.
+pub fn def_from_spec(name: &str, spec: &ChipSpec) -> CustomChipDef {
+    CustomChipDef {
+        name: name.to_string(),
+        fp16_tflops: spec.fp16_tflops,
+        memory_gib: spec.memory_gib,
+        chips_per_node: spec.chips_per_node,
+        intra_node: spec.intra_node,
+        nics_per_node: spec.nics_per_node,
+        nic_gbps: spec.nic_gbps,
+        mfu: spec.mfu,
+        op_noise: spec.op_noise,
+        pcie_to_nic_gbps: spec.pcie_to_nic_gbps,
+        cross_switch_share: spec.cross_switch_share,
+    }
+}
+
+/// The full definition of a custom kind (None for built-ins / stale indices).
+pub fn custom_def(kind: ChipKind) -> Option<CustomChipDef> {
+    match kind {
+        ChipKind::Custom(i) => registry()
+            .read()
+            .unwrap()
+            .get(i as usize)
+            .map(|e| def_from_spec(e.name, &e.spec)),
+        _ => None,
+    }
+}
+
 /// The catalog (Table 5 bands; see module docs for the chosen points).
+/// Custom kinds resolve through the registry.
+///
+/// Panics on a `Custom` kind that was never registered in this process —
+/// plans and configs always register their chips before building kinds, so
+/// that indicates a caller bug.
 pub fn spec(kind: ChipKind) -> ChipSpec {
+    if let ChipKind::Custom(i) = kind {
+        let reg = registry().read().unwrap();
+        return reg
+            .get(i as usize)
+            .unwrap_or_else(|| panic!("unregistered custom chip index {i}"))
+            .spec
+            .clone();
+    }
     match kind {
         ChipKind::A => ChipSpec {
             kind,
@@ -151,6 +363,8 @@ pub fn spec(kind: ChipKind) -> ChipSpec {
             nic_gbps: 25.0, // 200 Gbps RoCE
             mfu: 0.573,
             op_noise: 0.0049,
+            pcie_to_nic_gbps: 11.95,
+            cross_switch_share: 0.576,
         },
         ChipKind::B => ChipSpec {
             kind,
@@ -162,6 +376,8 @@ pub fn spec(kind: ChipKind) -> ChipSpec {
             nic_gbps: 25.0,
             mfu: 0.570,
             op_noise: 0.0060,
+            pcie_to_nic_gbps: 12.39,
+            cross_switch_share: 0.528,
         },
         ChipKind::C => ChipSpec {
             kind,
@@ -173,6 +389,8 @@ pub fn spec(kind: ChipKind) -> ChipSpec {
             nic_gbps: 12.5, // 100 Gbps
             mfu: 0.367,
             op_noise: 0.0064,
+            pcie_to_nic_gbps: 8.2,
+            cross_switch_share: 0.50,
         },
         ChipKind::D => ChipSpec {
             kind,
@@ -184,6 +402,8 @@ pub fn spec(kind: ChipKind) -> ChipSpec {
             nic_gbps: 25.0,
             mfu: 0.30,
             op_noise: 0.0152,
+            pcie_to_nic_gbps: 12.39,
+            cross_switch_share: 0.55,
         },
         ChipKind::A100 => ChipSpec {
             kind,
@@ -195,7 +415,10 @@ pub fn spec(kind: ChipKind) -> ChipSpec {
             nic_gbps: 25.0,
             mfu: 0.50,
             op_noise: 0.0,
+            pcie_to_nic_gbps: 12.8,
+            cross_switch_share: 0.90, // NVSwitch-class fabrics degrade least
         },
+        ChipKind::Custom(_) => unreachable!("handled above"),
     }
 }
 
@@ -252,5 +475,53 @@ mod tests {
         }
         assert_eq!(ChipKind::parse("a100"), Some(ChipKind::A100));
         assert_eq!(ChipKind::parse("z"), None);
+    }
+
+    #[test]
+    fn custom_chip_registers_and_resolves() {
+        let mut def = CustomChipDef::new("UnitTest-H9");
+        def.fp16_tflops = 400.0;
+        def.memory_gib = 48.0;
+        let kind = register_custom(&def).unwrap();
+        assert!(kind.is_custom());
+        assert_eq!(kind.name(), "UnitTest-H9");
+        assert_eq!(ChipKind::parse("unittest-h9"), Some(kind));
+        let s = spec(kind);
+        assert_eq!(s.kind, kind);
+        assert_eq!(s.fp16_tflops, 400.0);
+        assert_eq!(s.memory_gib, 48.0);
+        // Re-registration with new numbers updates in place, same kind.
+        def.fp16_tflops = 410.0;
+        assert_eq!(register_custom(&def).unwrap(), kind);
+        assert_eq!(spec(kind).fp16_tflops, 410.0);
+        assert_eq!(custom_def(kind).unwrap().fp16_tflops, 410.0);
+    }
+
+    #[test]
+    fn custom_chip_rejects_builtin_names() {
+        assert!(register_custom(&CustomChipDef::new("A")).is_err());
+        assert!(register_custom(&CustomChipDef::new("chip-c")).is_err());
+        assert!(register_custom(&CustomChipDef::new("a100")).is_err());
+        assert!(register_custom(&CustomChipDef::new("")).is_err());
+        let mut bad = CustomChipDef::new("UnitTest-BadChip");
+        bad.mfu = 0.0;
+        assert!(register_custom(&bad).is_err());
+        let mut bad = CustomChipDef::new("UnitTest-BadNic");
+        bad.pcie_to_nic_gbps = 0.0;
+        assert!(register_custom(&bad).is_err());
+        let mut bad = CustomChipDef::new("UnitTest-BadShare");
+        bad.cross_switch_share = 1.5;
+        assert!(register_custom(&bad).is_err());
+    }
+
+    #[test]
+    fn seed_tags_are_distinct() {
+        let kind = register_custom(&CustomChipDef::new("UnitTest-SeedTag")).unwrap();
+        let mut tags: Vec<u64> = ChipKind::ALL.iter().map(|k| k.seed_tag()).collect();
+        tags.push(ChipKind::A100.seed_tag());
+        tags.push(kind.seed_tag());
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), 6);
     }
 }

@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 use super::chip::{spec, ChipKind, ChipSpec};
 
 /// One homogeneous group inside a hyper-heterogeneous cluster.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChipGroup {
     pub spec: ChipSpec,
     pub n_chips: usize,
@@ -14,11 +14,20 @@ pub struct ChipGroup {
 
 impl ChipGroup {
     pub fn new(kind: ChipKind, n_chips: usize) -> Self {
+        ChipGroup::try_new(kind, n_chips).unwrap()
+    }
+
+    /// Fallible constructor for data-driven paths (config / plan files).
+    pub fn try_new(kind: ChipKind, n_chips: usize) -> Result<Self> {
         let spec = spec(kind);
-        assert!(n_chips % spec.chips_per_node == 0,
-                "{kind}: {n_chips} chips is not a whole number of {}-chip nodes",
-                spec.chips_per_node);
-        ChipGroup { spec, n_chips }
+        if n_chips == 0 {
+            bail!("{kind}: a chip group needs at least one node");
+        }
+        if n_chips % spec.chips_per_node != 0 {
+            bail!("{kind}: {n_chips} chips is not a whole number of {}-chip nodes",
+                  spec.chips_per_node);
+        }
+        Ok(ChipGroup { spec, n_chips })
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -27,7 +36,7 @@ impl ChipGroup {
 }
 
 /// A hyper-heterogeneous cluster: one group per chip type.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Cluster {
     pub name: String,
     pub groups: Vec<ChipGroup>,
@@ -35,10 +44,16 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(name: &str, groups: Vec<(ChipKind, usize)>) -> Self {
-        Cluster {
-            name: name.to_string(),
-            groups: groups.into_iter().map(|(k, n)| ChipGroup::new(k, n)).collect(),
-        }
+        Cluster::try_build(name, groups).unwrap()
+    }
+
+    /// Fallible constructor for data-driven paths (config / plan files).
+    pub fn try_build(name: &str, groups: Vec<(ChipKind, usize)>) -> Result<Self> {
+        let groups = groups
+            .into_iter()
+            .map(|(k, n)| ChipGroup::try_new(k, n))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Cluster { name: name.to_string(), groups })
     }
 
     pub fn total_chips(&self) -> usize {

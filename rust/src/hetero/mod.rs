@@ -4,5 +4,8 @@
 pub mod chip;
 pub mod cluster;
 
-pub use chip::{spec, ChipKind, ChipSpec, IntraNodeLink};
+pub use chip::{
+    custom_def, def_from_spec, register_custom, spec, ChipKind, ChipSpec, CustomChipDef,
+    IntraNodeLink,
+};
 pub use cluster::{experiment, homogeneous_baseline, ChipGroup, Cluster, Experiment, ALL_EXPERIMENTS};

@@ -2,11 +2,56 @@
 //!
 //! Three-layer architecture (DESIGN.md): Pallas kernels (L1) and the JAX
 //! stage model (L2) are AOT-compiled to HLO text by `python/compile/`;
-//! everything at runtime is this rust crate (L3): the DiComm communication
-//! library, the NIC/PCIe topology model, the DiTorch precision tooling,
-//! the §4.3.2 cost model with its memory model, the HeteroAuto strategy
-//! search, the HeteroPP discrete-event simulator, and the real 1F1B
-//! training coordinator over the PJRT runtime.
+//! everything at runtime is this rust crate (L3).
+//!
+//! ## The plan-centric workflow
+//!
+//! The crate's public API revolves around one serializable artifact, the
+//! [`plan::ExecutionPlan`]: cluster + model shape + parallel strategy +
+//! per-stage chip/TP/layer assignment + communication mode + NIC topology +
+//! precision policy. The H2 loop is *search once, execute many times*:
+//!
+//! ```text
+//!   auto::search ──► SearchResult::into_plan ──► plan.json
+//!                                                  │
+//!                    sim::simulate_plan ◄──────────┤  (HeteroPP simulator)
+//!                    coordinator::train_plan ◄─────┤  (real 1F1B over PJRT)
+//!                    costmodel::evaluate_plan ◄────┘  (§4.3.2 closed form)
+//! ```
+//!
+//! Plans are built with the validating [`plan::PlanBuilder`] (structured
+//! [`plan::PlanError`]s, all violations at once), round-trip losslessly
+//! through JSON (`to_json`/`from_json` over [`util::json`]), and embed any
+//! custom chips they reference, so a plan file is self-contained. The
+//! [`config`] module is the JSON front-end that lowers into the builder;
+//! its `chips` section feeds the data-driven chip registry
+//! ([`hetero::register_custom`]) so user-defined accelerators are
+//! searchable and simulatable without recompiling.
+//!
+//! In-process, the same flow is three calls:
+//!
+//! ```ignore
+//! let r = auto::search(&H2_100B, &cluster, gbs_tokens, &cfg)?;
+//! let plan = r.into_plan(&H2_100B, &cluster, gbs_tokens, &cfg);
+//! let sim = sim::simulate_plan(&plan);            // or plan.simulate()
+//! plan.save("plan.json")?;                        // `h2 simulate --plan plan.json`
+//! ```
+//!
+//! ## Subsystems
+//!
+//! * [`hetero`] — the chip catalog (Table 5) + runtime chip registry and
+//!   cluster/experiment definitions (Table 7).
+//! * [`comm`] — DiComm: the unified heterogeneous communication library
+//!   (§3.2) with calibrated TCP / CPU-RDMA / device-direct RDMA models.
+//! * [`topology`] — server/NIC topology and the affinity model (§5, Table 3).
+//! * [`precision`] — DiTorch precision-alignment tooling (§3.1.2, Fig 5).
+//! * [`costmodel`] — the §4.3.2 iteration-time + memory cost model.
+//! * [`auto`] — HeteroAuto strategy search (§4.3.3).
+//! * [`sim`] — the HeteroPP discrete-event 1F1B simulator (§4.2).
+//! * [`coordinator`] — the real 1F1B training coordinator over PJRT.
+//! * [`plan`] — the serializable `ExecutionPlan` tying them together.
+//! * [`config`] — JSON config front-end lowering into the plan builder.
+//! * [`report`] — paper-table drivers (Table 6/9, Fig 11) over plans.
 
 pub mod auto;
 pub mod comm;
@@ -14,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod hetero;
+pub mod plan;
 pub mod precision;
 pub mod report;
 pub mod runtime;

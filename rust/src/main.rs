@@ -1,5 +1,11 @@
 //! `h2` — CLI for the H2 hyper-heterogeneous training framework.
 //!
+//! The subcommands share one artifact: the serializable `ExecutionPlan`.
+//! `search` produces one (`--emit-plan plan.json`), `simulate` and `train`
+//! consume one (`--plan plan.json`), and every subcommand accepts
+//! `--config file.json` for cluster/chip/search/sim defaults — including
+//! user-defined chips that exist only in the config.
+//!
 //! Subcommands:
 //!   train       real pipeline training over PJRT artifacts
 //!   search      HeteroAuto strategy search (§4.3)
@@ -13,12 +19,14 @@ use anyhow::{bail, Result};
 
 use h2::auto::{search, SearchConfig};
 use h2::comm::{p2p_latency, CommMode};
-use h2::coordinator::{train, StagePlan, TrainConfig};
-use h2::costmodel::{evaluate, profile_layer, tgs, H2_100B};
-use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind, Cluster, ALL_EXPERIMENTS};
+use h2::config::Config;
+use h2::coordinator::{train, train_plan, StagePlan, TrainConfig, TrainReport};
+use h2::costmodel::{profile_layer, tgs, uniform_1f1b, H2_100B};
+use h2::hetero::{experiment, spec, ChipKind, Cluster};
+use h2::plan::{render_errors, ExecutionPlan};
 use h2::precision::check_alignment;
 use h2::runtime::Runtime;
-use h2::sim::{simulate_iteration, ReshardStrategy, SimOptions};
+use h2::sim::{simulate_plan, ReshardStrategy};
 use h2::topology::NicAssignment;
 use h2::util::cli::Args;
 use h2::util::table::{fmt_bytes, fmt_duration, Table};
@@ -51,18 +59,100 @@ fn main() {
 
 fn print_help() {
     println!("h2 — hyper-heterogeneous LLM training (paper reproduction)\n");
-    println!("usage: h2 <command> [flags]\n");
-    println!("  train       --model h2_tiny --stages first_l2:A,last_l2:B --dp 1 \\");
-    println!("              --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
+    println!("usage: h2 <command> [flags]   (every command accepts --config file.json)\n");
+    println!("  train       --plan plan.json | --model h2_tiny --stages first_l2:A,last_l2:B");
+    println!("              --dp 1 --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
     println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
     println!("              [--alpha 1.0] [--no-two-stage] [--split 128]");
-    println!("  simulate    --exp exp-c-1 [--comm ddr|tcp] [--reshard srag|bcast|naive]");
-    println!("              [--no-overlap] [--uniform] [--non-affinity]");
+    println!("              [--emit-plan plan.json]");
+    println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
+    println!("              [--reshard srag|bcast|naive] [--no-overlap] [--uniform]");
+    println!("              [--non-affinity]");
     println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
     println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
     println!("  profile     [--chip A] [--dp 4]");
     println!("  report      table6 | fig11");
+}
+
+/// Load `--config` if given (side effect: registers any custom chips).
+fn load_config(args: &Args) -> Result<Option<Config>> {
+    args.get("config").map(Config::load).transpose()
+}
+
+/// Resolve (cluster, gbs_tokens): `--exp` > `--cluster` flag > config
+/// cluster > `default_exp` (if any).
+fn resolve_cluster(
+    args: &Args,
+    config: Option<&Config>,
+    default_exp: Option<&str>,
+) -> Result<(Cluster, usize)> {
+    // Flags > config > paper default, independently for cluster and GBS.
+    // An experiment (explicit --exp or the default fallback) supplies its
+    // own GBS, but an explicit user GBS still wins over it.
+    let gbs_override = match args.get("gbs-mtokens") {
+        Some(_) => Some(args.usize_or("gbs-mtokens", 2)? * 1024 * 1024),
+        None => config.and_then(|c| c.gbs_tokens),
+    };
+    if let Some(exp) = args.get("exp") {
+        let e = experiment(exp)?;
+        return Ok((e.cluster, gbs_override.unwrap_or(e.gbs_tokens)));
+    }
+    let gbs = gbs_override.unwrap_or(2 * 1024 * 1024);
+    if let Some(text) = args.get("cluster") {
+        return Ok((parse_cluster(text)?, gbs));
+    }
+    if let Some(cluster) = config.and_then(|c| c.cluster.as_ref()) {
+        return Ok((cluster.clone(), gbs));
+    }
+    if let Some(exp) = default_exp {
+        let e = experiment(exp)?;
+        return Ok((e.cluster, gbs_override.unwrap_or(e.gbs_tokens)));
+    }
+    bail!("no cluster: pass --exp, --cluster, or a --config with a `cluster` section")
+}
+
+/// Search options: config `search` section as the base, flags override.
+fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchConfig> {
+    let base = config.map(|c| c.search_config()).unwrap_or_default();
+    Ok(SearchConfig {
+        alpha: args.f64_or("alpha", base.alpha)?,
+        group_split: args.usize_or("split", base.group_split)?,
+        two_stage: if args.has("no-two-stage") { false } else { base.two_stage },
+        max_dp: args.usize_or("max-dp", base.max_dp)?,
+    })
+}
+
+/// Overlay the config's `sim` section and then any explicit flags onto a
+/// plan's communication fields.
+fn apply_sim_overrides(
+    plan: &mut ExecutionPlan,
+    args: &Args,
+    config: Option<&Config>,
+) -> Result<()> {
+    if let Some(overrides) = config.and_then(|c| c.sim) {
+        // Only the keys the config's `sim` section actually sets.
+        let mut opts = plan.sim_options();
+        overrides.apply(&mut opts);
+        plan.comm = opts.comm;
+        plan.reshard = opts.reshard;
+        plan.nic_assignment = opts.nic_assignment;
+        plan.fine_overlap = opts.fine_overlap;
+    }
+    if let Some(s) = args.get("comm") {
+        plan.comm = CommMode::parse(s).ok_or_else(|| anyhow::anyhow!("bad --comm `{s}`"))?;
+    }
+    if let Some(s) = args.get("reshard") {
+        plan.reshard =
+            ReshardStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("bad --reshard `{s}`"))?;
+    }
+    if args.has("non-affinity") {
+        plan.nic_assignment = NicAssignment::NonAffinity;
+    }
+    if args.has("no-overlap") {
+        plan.fine_overlap = false;
+    }
+    Ok(())
 }
 
 fn parse_comm(args: &Args) -> Result<CommMode> {
@@ -80,7 +170,7 @@ fn parse_cluster(text: &str) -> Result<Cluster> {
             .ok_or_else(|| anyhow::anyhow!("unknown chip `{kind}`"))?;
         groups.push((kind, n.parse()?));
     }
-    Ok(Cluster::new("custom", groups))
+    Cluster::try_build("custom", groups)
 }
 
 fn parse_stages(text: &str) -> Result<Vec<StagePlan>> {
@@ -96,19 +186,63 @@ fn parse_stages(text: &str) -> Result<Vec<StagePlan>> {
     Ok(stages)
 }
 
+fn print_train_report(report: &TrainReport, steps: usize) {
+    println!("[h2] done: wall {:.1}s, modeled iter {:.4}s ({:.4}s comm), {:.0} tokens/s",
+             report.wall_seconds,
+             report.virtual_seconds / steps.max(1) as f64,
+             report.virtual_comm_seconds / steps.max(1) as f64,
+             report.tokens_per_second);
+    println!("[h2] loss: first {:.4} last {:.4}",
+             report.losses.first().unwrap_or(&f64::NAN),
+             report.losses.last().unwrap_or(&f64::NAN));
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    if let Some(path) = args.get("config") {
-        // JSON config file path (see `config` module docs for the schema).
-        let file = h2::config::Config::load(path)?;
-        let cfg = file.train
-            .ok_or_else(|| anyhow::anyhow!("{path} has no `train` section"))?;
+    let config = load_config(args)?;
+    if let Some(path) = args.get("plan") {
+        if args.has("model") || args.has("stages") {
+            bail!("--model/--stages conflict with --plan; edit the plan's \
+                   `train` section instead");
+        }
+        let mut plan = ExecutionPlan::load(path)?;
+        // The same config/flag overrides `simulate --plan` honors apply to
+        // the real run too (comm, NIC affinity, overlap), plus --perturb
+        // and the cheap run-shape scalars.
+        apply_sim_overrides(&mut plan, args, config.as_ref())?;
+        if args.has("perturb") {
+            plan.precision.perturb = true;
+        }
+        if let Some(t) = plan.train.as_mut() {
+            t.steps = args.usize_or("steps", t.steps)?;
+            t.micro_batches = args.usize_or("micros", t.micro_batches)?;
+            t.dp = args.usize_or("dp", t.dp)?;
+            t.seed = args.u64_or("seed", t.seed)?;
+            t.lr = args.f64_or("lr", t.lr as f64)? as f32;
+            t.log_every = args.usize_or("log-every", t.log_every)?;
+        }
         let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
-        let report = train(&rt, &cfg)?;
-        println!("[h2] loss: first {:.4} last {:.4} ({:.0} tokens/s)",
-                 report.losses.first().unwrap_or(&f64::NAN),
-                 report.losses.last().unwrap_or(&f64::NAN),
-                 report.tokens_per_second);
+        println!("[h2] platform={} plan=`{}` ({} train stages)",
+                 rt.platform(), plan.name,
+                 plan.train.as_ref().map(|t| t.stages.len()).unwrap_or(0));
+        let steps = plan.train.as_ref().map(|t| t.steps).unwrap_or(0);
+        let report = train_plan(&rt, &plan)?;
+        print_train_report(&report, steps);
         return Ok(());
+    }
+    if let Some(c) = config.as_ref() {
+        if let Some(cfg) = c.train.clone() {
+            let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+            let report = train(&rt, &cfg)?;
+            print_train_report(&report, cfg.steps);
+            return Ok(());
+        }
+        // A config without `train` only makes sense here if the job itself
+        // comes from flags; otherwise it's almost certainly a typo'd
+        // section name — fail loudly rather than train a default job.
+        if !args.has("model") && !args.has("stages") {
+            bail!("config `{}` has no `train` section (pass --model/--stages \
+                   to train from flags)", args.str_or("config", "?"));
+        }
     }
     let model = args.str_or("model", "h2_tiny");
     let stages = parse_stages(&args.str_or("stages", "first_l2:A,last_l2:B"))?;
@@ -134,32 +268,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("[h2] platform={} model={model} stages={} dp={} micros={} steps={}",
              rt.platform(), cfg.stages.len(), cfg.dp, cfg.micro_batches, cfg.steps);
     let report = train(&rt, &cfg)?;
-    println!("[h2] done: wall {:.1}s, modeled iter {:.4}s ({:.4}s comm), {:.0} tokens/s",
-             report.wall_seconds,
-             report.virtual_seconds / cfg.steps as f64,
-             report.virtual_comm_seconds / cfg.steps as f64,
-             report.tokens_per_second);
-    println!("[h2] loss: first {:.4} last {:.4}",
-             report.losses.first().unwrap_or(&f64::NAN),
-             report.losses.last().unwrap_or(&f64::NAN));
+    print_train_report(&report, cfg.steps);
     Ok(())
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
-    let (cluster, gbs) = if let Some(exp) = args.get("exp") {
-        let e = experiment(exp)?;
-        (e.cluster, e.gbs_tokens)
-    } else {
-        let c = parse_cluster(args.required("cluster")?)?;
-        let gbs = args.usize_or("gbs-mtokens", 2)? * 1024 * 1024;
-        (c, gbs)
-    };
-    let cfg = SearchConfig {
-        alpha: args.f64_or("alpha", 1.0)?,
-        group_split: args.usize_or("split", 128)?,
-        two_stage: !args.has("no-two-stage"),
-        max_dp: args.usize_or("max-dp", 0)?,
-    };
+    let config = load_config(args)?;
+    let (cluster, gbs) = resolve_cluster(args, config.as_ref(), None)?;
+    let cfg = resolve_search_config(args, config.as_ref())?;
     let r = search(&H2_100B, &cluster, gbs, &cfg)?;
     println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {}",
              cluster.name, cluster.total_chips(), gbs >> 20,
@@ -180,60 +296,63 @@ fn cmd_search(args: &Args) -> Result<()> {
     println!("estimated iteration: {} -> TGS {:.1}",
              fmt_duration(r.eval.iteration_seconds),
              tgs(&cluster, gbs, r.eval.iteration_seconds));
+    if let Some(path) = args.get("emit-plan") {
+        let mut plan = r.into_plan(&H2_100B, &cluster, gbs, &cfg);
+        apply_sim_overrides(&mut plan, args, config.as_ref())?;
+        // The config's train section rides along so `h2 train --plan` works
+        // from the emitted file alone.
+        if let Some(c) = config.as_ref() {
+            if let Some(spec) = c.train_spec() {
+                plan.precision.perturb = c.train.as_ref().map(|t| t.perturb).unwrap_or(false);
+                plan.train = Some(spec);
+            }
+        }
+        if let Err(errs) = plan.validate() {
+            bail!("emitted plan would be invalid:\n{}", render_errors(&errs));
+        }
+        plan.save(path)?;
+        println!("[h2] wrote plan `{}` to {path}", plan.name);
+    }
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let exp = experiment(&args.str_or("exp", "exp-c-1"))?;
-    let scfg = SearchConfig::default();
-    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &scfg)?;
-    let mut strategy = r.strategy.clone();
+    let config = load_config(args)?;
+    let mut plan = if let Some(path) = args.get("plan") {
+        ExecutionPlan::load(path)?
+    } else {
+        let (cluster, gbs) = resolve_cluster(args, config.as_ref(), Some("exp-c-1"))?;
+        let scfg = resolve_search_config(args, config.as_ref())?;
+        let r = search(&H2_100B, &cluster, gbs, &scfg)?;
+        r.into_plan(&H2_100B, &cluster, gbs, &scfg)
+    };
+    apply_sim_overrides(&mut plan, args, config.as_ref())?;
     if args.has("uniform") {
         // Uniform 1F1B baseline: equal layer count on every stage,
         // recomputation everywhere (the homogeneous-style configuration).
-        let total_stages: usize = strategy.plans.iter().map(|p| p.s_pp).sum();
-        let lps = H2_100B.n_layers / total_stages;
-        for p in strategy.plans.iter_mut() {
-            p.layers = lps * p.s_pp;
-            p.recompute = true;
-        }
-        let mut total: usize = strategy.plans.iter().map(|p| p.layers).sum();
-        let mut i = 0;
-        while total < H2_100B.n_layers {
-            let k = i % strategy.plans.len();
-            strategy.plans[k].layers += strategy.plans[k].s_pp;
-            total += strategy.plans[k].s_pp;
-            i += 1;
+        uniform_1f1b(&mut plan.strategy, plan.model.n_layers);
+        let total = plan.strategy.total_layers();
+        if total != plan.model.n_layers {
+            bail!("uniform 1F1B baseline unreachable for this stage layout: \
+                   closest layer total is {total} of {} — the reported time \
+                   would correspond to the wrong amount of work",
+                  plan.model.n_layers);
         }
     }
-    let reshard = match args.str_or("reshard", "srag").as_str() {
-        "srag" => ReshardStrategy::SendRecvAllGather,
-        "bcast" => ReshardStrategy::Broadcast,
-        "naive" => ReshardStrategy::NaiveP2p,
-        other => bail!("bad --reshard `{other}`"),
-    };
-    let opts = SimOptions {
-        comm: parse_comm(args)?,
-        reshard,
-        nic_assignment: if args.has("non-affinity") {
-            NicAssignment::NonAffinity
-        } else {
-            NicAssignment::Affinity
-        },
-        fine_overlap: !args.has("no-overlap"),
-    };
-    let grefs: Vec<&h2::hetero::ChipGroup> = r.groups.iter().collect();
-    let sim = simulate_iteration(&H2_100B, &grefs, &strategy, H2_100B.seq_len, &opts);
+    let sim = simulate_plan(&plan);
     println!("simulated `{}`: iteration {} (bubble {:.1}%, exposed comm {})",
-             exp.cluster.name,
+             plan.cluster.name,
              fmt_duration(sim.iteration_seconds),
              sim.bubble_fraction * 100.0,
              fmt_duration(sim.exposed_comm));
-    println!("TGS {:.1}", tgs(&exp.cluster, exp.gbs_tokens, sim.iteration_seconds));
+    println!("TGS {:.1}", plan.tgs(sim.iteration_seconds));
+    // Full-precision value for scripts (and the search->plan parity test).
+    println!("iteration_seconds {:.17e}", sim.iteration_seconds);
     Ok(())
 }
 
 fn cmd_comm_bench(args: &Args) -> Result<()> {
+    let _config = load_config(args)?; // registers custom chips for parity
     let lo = args.usize_or("min-shift", 8)?;
     let hi = args.usize_or("max-shift", 28)?;
     let mut t = Table::new(&["size", "TCP", "CPU-RDMA", "DDR", "TCP/DDR"])
@@ -262,6 +381,7 @@ fn cmd_comm_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_precision(args: &Args) -> Result<()> {
+    let _config = load_config(args)?; // may declare the chip under test
     let chip = ChipKind::parse(args.str_or("chip", "A").as_str())
         .ok_or_else(|| anyhow::anyhow!("bad --chip"))?;
     let steps = args.usize_or("steps", 300)?;
@@ -286,12 +406,24 @@ fn cmd_precision(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
     let dp = args.usize_or("dp", 4)?;
     let mut t = Table::new(&["chip", "tp", "t_fwd", "t_bwd", "t_recomp", "t_update"])
         .with_title("Layer-wise analytic profile (100B model, 4096-token microbatch)");
     let chips: Vec<ChipKind> = match args.get("chip") {
         Some(c) => vec![ChipKind::parse(c).ok_or_else(|| anyhow::anyhow!("bad --chip"))?],
-        None => ChipKind::ALL.to_vec(),
+        None => {
+            // Built-ins plus any chips the config declared.
+            let mut all = ChipKind::ALL.to_vec();
+            if let Some(c) = &config {
+                for def in &c.chips {
+                    if let Some(k) = ChipKind::parse(&def.name) {
+                        all.push(k);
+                    }
+                }
+            }
+            all
+        }
     };
     for kind in chips {
         let sp = spec(kind);
@@ -313,46 +445,41 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Table 6 rows as (chip, PP, DP, TP, recompute, paper TGS).
-pub const TABLE6_ROWS: [(ChipKind, usize, usize, usize, bool, f64); 4] = [
-    (ChipKind::A, 16, 4, 4, false, 136.9),
-    (ChipKind::B, 16, 4, 4, true, 143.7),
-    (ChipKind::C, 32, 2, 4, true, 46.2),
-    (ChipKind::D, 8, 4, 8, false, 99.5),
-];
-
 fn cmd_report(args: &Args) -> Result<()> {
+    let _config = load_config(args)?; // registers custom chips for parity
     match args.positional.get(1).map(|s| s.as_str()).unwrap_or("table6") {
         "table6" => {
-            let mut t = Table::new(&["chip", "PP", "DP", "TP", "extra", "TGS (model)", "TGS (paper)"])
+            let mut t = Table::new(&["chip", "PP", "DP", "TP", "extra", "TGS (model)",
+                                     "TGS (sim)", "TGS (paper)"])
                 .with_title("Table 6 — homogeneous 256-chip baselines, 100B model");
-            for (kind, pp, dpd, tp, rec, paper) in TABLE6_ROWS {
-                let exp = homogeneous_baseline(kind);
-                let groups = exp.cluster.groups_by_memory_desc();
-                let strategy = h2::costmodel::Strategy {
-                    s_dp: dpd,
-                    micro_batches: exp.gbs_tokens / H2_100B.seq_len / dpd,
-                    plans: vec![h2::costmodel::GroupPlan {
-                        s_pp: pp, s_tp: tp, layers: 96, recompute: rec,
-                    }],
+            for (row, &(_, pp, dpd, tp, rec, _)) in
+                h2::report::table6_all().iter().zip(&h2::report::TABLE6)
+            {
+                let extra = if rec {
+                    "recompute"
+                } else if row.kind == ChipKind::D {
+                    "offload"
+                } else {
+                    "-"
                 };
-                let eval = evaluate(&H2_100B, &groups, &strategy, H2_100B.seq_len, 1.0);
-                let model_tgs = tgs(&exp.cluster, exp.gbs_tokens, eval.iteration_seconds);
-                let extra = if rec { "recompute" } else if kind == ChipKind::D { "offload" } else { "-" };
                 t.row(vec![
-                    kind.to_string(), pp.to_string(), dpd.to_string(), tp.to_string(),
-                    extra.to_string(), format!("{model_tgs:.1}"), format!("{paper:.1}"),
+                    row.kind.to_string(), pp.to_string(), dpd.to_string(), tp.to_string(),
+                    extra.to_string(),
+                    format!("{:.1}", row.model_tgs),
+                    format!("{:.1}", row.sim_tgs),
+                    format!("{:.1}", row.paper_tgs),
                 ]);
             }
             t.print();
         }
         "fig11" => {
-            for exp_name in ALL_EXPERIMENTS {
-                let exp = experiment(exp_name)?;
-                let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())?;
-                let hetero_tgs = tgs(&exp.cluster, exp.gbs_tokens, r.eval.iteration_seconds);
-                println!("{exp_name}: TGS {hetero_tgs:.1} (search {}, {} candidates)",
-                         fmt_duration(r.elapsed_seconds), r.candidates_explored);
+            let baselines = h2::report::table6_all();
+            for exp_name in h2::hetero::ALL_EXPERIMENTS {
+                let row = h2::report::hetero_row(exp_name, &baselines)?;
+                println!("{exp_name}: TGS {:.1}, HeteroSpeedupRatio {:.2}% (search {}, {} candidates)",
+                         row.sim_tgs, row.speedup_ratio,
+                         fmt_duration(row.search.elapsed_seconds),
+                         row.search.candidates_explored);
             }
         }
         other => bail!("unknown report `{other}`"),

@@ -1,0 +1,199 @@
+//! Typed construction of [`ExecutionPlan`]s with up-front validation.
+
+use crate::comm::CommMode;
+use crate::costmodel::{ModelShape, Strategy, H2_100B};
+use crate::hetero::{ChipGroup, Cluster};
+use crate::sim::ReshardStrategy;
+use crate::topology::NicAssignment;
+
+use super::{ExecutionPlan, PlanError, PrecisionPolicy, TrainSpec, PLAN_VERSION};
+
+/// Builder for [`ExecutionPlan`]: set the cluster and strategy, override
+/// whatever else differs from the paper defaults, then [`PlanBuilder::build`].
+///
+/// Defaults: 100B model, GBS 2M tokens, micro-batch of one sequence,
+/// 1F1B (alpha 1.0), device-direct RDMA, SR&AG resharding, NIC affinity,
+/// fine-grained overlap on.
+#[derive(Clone, Debug)]
+pub struct PlanBuilder {
+    name: String,
+    model: ModelShape,
+    cluster: Option<Cluster>,
+    stage_groups: Option<Vec<ChipGroup>>,
+    strategy: Option<Strategy>,
+    gbs_tokens: usize,
+    micro_tokens: Option<usize>,
+    alpha: f64,
+    comm: CommMode,
+    reshard: ReshardStrategy,
+    nic_assignment: NicAssignment,
+    fine_overlap: bool,
+    precision: PrecisionPolicy,
+    train: Option<TrainSpec>,
+}
+
+impl PlanBuilder {
+    pub fn new(name: &str) -> PlanBuilder {
+        PlanBuilder {
+            name: name.to_string(),
+            model: H2_100B,
+            cluster: None,
+            stage_groups: None,
+            strategy: None,
+            gbs_tokens: 2 * 1024 * 1024,
+            micro_tokens: None,
+            alpha: 1.0,
+            comm: CommMode::DeviceDirect,
+            reshard: ReshardStrategy::SendRecvAllGather,
+            nic_assignment: NicAssignment::Affinity,
+            fine_overlap: true,
+            precision: PrecisionPolicy::default(),
+            train: None,
+        }
+    }
+
+    pub fn model(mut self, model: ModelShape) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// The physical cluster. Unless [`PlanBuilder::stage_groups`] is also
+    /// called, stage groups default to the cluster's groups in
+    /// memory-descending HeteroPP order.
+    pub fn cluster(mut self, cluster: Cluster) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Explicit stage-ordered groups (e.g. the two-stage search's
+    /// pseudo-subgroups), positionally matched with `strategy.plans`.
+    pub fn stage_groups(mut self, groups: Vec<ChipGroup>) -> Self {
+        self.stage_groups = Some(groups);
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    pub fn gbs_tokens(mut self, gbs_tokens: usize) -> Self {
+        self.gbs_tokens = gbs_tokens;
+        self
+    }
+
+    /// Tokens per micro-batch; defaults to the model's sequence length.
+    pub fn micro_tokens(mut self, micro_tokens: usize) -> Self {
+        self.micro_tokens = Some(micro_tokens);
+        self
+    }
+
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn comm(mut self, comm: CommMode) -> Self {
+        self.comm = comm;
+        self
+    }
+
+    pub fn reshard(mut self, reshard: ReshardStrategy) -> Self {
+        self.reshard = reshard;
+        self
+    }
+
+    pub fn nic_assignment(mut self, nic_assignment: NicAssignment) -> Self {
+        self.nic_assignment = nic_assignment;
+        self
+    }
+
+    pub fn fine_overlap(mut self, fine_overlap: bool) -> Self {
+        self.fine_overlap = fine_overlap;
+        self
+    }
+
+    pub fn precision(mut self, precision: PrecisionPolicy) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    pub fn train(mut self, train: TrainSpec) -> Self {
+        self.train = Some(train);
+        self
+    }
+
+    /// Assemble and validate. Returns every violation, not just the first.
+    pub fn build(self) -> Result<ExecutionPlan, Vec<PlanError>> {
+        let mut errs = Vec::new();
+        if self.cluster.is_none() {
+            errs.push(PlanError::MissingCluster);
+        }
+        if self.strategy.is_none() {
+            errs.push(PlanError::MissingStrategy);
+        }
+        if !errs.is_empty() {
+            return Err(errs);
+        }
+        let cluster = self.cluster.unwrap();
+        let stage_groups = self.stage_groups.unwrap_or_else(|| {
+            cluster.groups_by_memory_desc().into_iter().cloned().collect()
+        });
+        let plan = ExecutionPlan {
+            version: PLAN_VERSION,
+            name: self.name,
+            model: self.model,
+            cluster,
+            stage_groups,
+            strategy: self.strategy.unwrap(),
+            gbs_tokens: self.gbs_tokens,
+            micro_tokens: self.micro_tokens.unwrap_or(self.model.seq_len),
+            alpha: self.alpha,
+            comm: self.comm,
+            reshard: self.reshard,
+            nic_assignment: self.nic_assignment,
+            fine_overlap: self.fine_overlap,
+            precision: self.precision,
+            train: self.train,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::GroupPlan;
+    use crate::hetero::ChipKind;
+
+    #[test]
+    fn missing_parts_are_reported_together() {
+        let errs = PlanBuilder::new("empty").build().unwrap_err();
+        assert!(errs.contains(&PlanError::MissingCluster));
+        assert!(errs.contains(&PlanError::MissingStrategy));
+    }
+
+    #[test]
+    fn stage_groups_default_to_memory_order() {
+        let cluster = Cluster::new(
+            "ba",
+            vec![(ChipKind::B, 256), (ChipKind::A, 256)],
+        );
+        let plan = PlanBuilder::new("order")
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                plans: vec![
+                    GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: false },
+                    GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: true },
+                ],
+            })
+            .build()
+            .unwrap();
+        // A (96 GiB) must come before B (64 GiB) regardless of input order.
+        assert_eq!(plan.stage_groups[0].spec.kind, ChipKind::A);
+        assert_eq!(plan.stage_groups[1].spec.kind, ChipKind::B);
+    }
+}

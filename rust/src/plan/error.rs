@@ -1,0 +1,129 @@
+//! Structured validation errors for [`super::ExecutionPlan`].
+//!
+//! Every way a plan can be malformed gets its own variant, so callers
+//! (the CLI, the builder, tests) can match on the failure instead of
+//! string-scraping `anyhow` messages. [`super::ExecutionPlan::validate`]
+//! collects *all* violations, not just the first.
+
+use std::fmt;
+
+/// One structural violation in an [`super::ExecutionPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The builder was never given a cluster.
+    MissingCluster,
+    /// The builder was never given a strategy.
+    MissingStrategy,
+    /// No chip groups at all.
+    EmptyGroups,
+    /// `groups.len() != strategy.plans.len()` — the positional pairing the
+    /// whole cost model relies on is broken.
+    GroupsMismatch { groups: usize, plans: usize },
+    /// Per-chip-kind totals of `stage_groups` don't repartition the cluster
+    /// (TGS divides by the cluster's chips; simulation runs the stage groups).
+    ClusterMismatch { chip: String, cluster: usize, stages: usize },
+    /// Assigned layers don't sum to the model's layer count.
+    LayersMismatch { assigned: usize, model: usize },
+    /// A group was assigned zero layers.
+    ZeroLayers { group: usize },
+    /// A group's layers don't split evenly over its pipeline stages.
+    LayersNotUniform { group: usize, layers: usize, s_pp: usize },
+    /// `s_pp * s_tp * s_dp` doesn't account for every chip of the group.
+    ChipAccounting { group: usize, chips: usize, s_pp: usize, s_tp: usize, s_dp: usize },
+    /// Tensor-parallel degree is not a power of two.
+    TpNotPowerOfTwo { group: usize, s_tp: usize },
+    /// Tensor-parallel degree exceeds the chip's uniform-bandwidth island.
+    TpExceedsMax { group: usize, s_tp: usize, tp_max: usize },
+    /// A group's chip count is not a whole number of nodes.
+    PartialNode { group: usize, chips: usize, chips_per_node: usize },
+    /// Data-parallel degree of zero.
+    ZeroDp,
+    /// No micro-batches per pipeline.
+    ZeroMicroBatches,
+    /// The global batch's sequences don't split over `s_dp` replicas into
+    /// the declared micro-batch count.
+    BatchMismatch { sequences: usize, s_dp: usize, micro_batches: usize },
+    /// Global batch smaller than one sequence.
+    BatchBelowOneSequence { gbs_tokens: usize, micro_tokens: usize },
+    /// Global batch is not a whole number of micro-batches — the remainder
+    /// tokens would be silently dropped by every consumer.
+    TokensNotWholeSequences { gbs_tokens: usize, micro_tokens: usize },
+    /// Zero-token micro-batches.
+    ZeroMicroTokens,
+    /// Pipeline-bubble coefficient outside [0, inf).
+    AlphaOutOfRange { alpha: f64 },
+    /// A train-section stage prefix doesn't match its pipeline role.
+    TrainStageRole { index: usize, prefix: String, expected: &'static str },
+    /// The train section is structurally empty.
+    TrainEmpty,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::MissingCluster => write!(f, "plan has no cluster"),
+            PlanError::MissingStrategy => write!(f, "plan has no strategy"),
+            PlanError::EmptyGroups => write!(f, "plan has no chip groups"),
+            PlanError::GroupsMismatch { groups, plans } => {
+                write!(f, "{groups} chip groups but {plans} group plans")
+            }
+            PlanError::ClusterMismatch { chip, cluster, stages } => {
+                write!(f, "{chip}: stage groups hold {stages} chips but the \
+                           cluster has {cluster}")
+            }
+            PlanError::LayersMismatch { assigned, model } => {
+                write!(f, "assigned {assigned} layers but the model has {model}")
+            }
+            PlanError::ZeroLayers { group } => write!(f, "group {group} has zero layers"),
+            PlanError::LayersNotUniform { group, layers, s_pp } => {
+                write!(f, "group {group}: {layers} layers do not split over {s_pp} stages")
+            }
+            PlanError::ChipAccounting { group, chips, s_pp, s_tp, s_dp } => {
+                write!(f, "group {group}: {s_pp}(pp) x {s_tp}(tp) x {s_dp}(dp) != {chips} chips")
+            }
+            PlanError::TpNotPowerOfTwo { group, s_tp } => {
+                write!(f, "group {group}: s_tp {s_tp} is not a power of two")
+            }
+            PlanError::TpExceedsMax { group, s_tp, tp_max } => {
+                write!(f, "group {group}: s_tp {s_tp} exceeds TP_MAX {tp_max}")
+            }
+            PlanError::PartialNode { group, chips, chips_per_node } => {
+                write!(f, "group {group}: {chips} chips is not a whole number of \
+                           {chips_per_node}-chip nodes")
+            }
+            PlanError::ZeroDp => write!(f, "s_dp must be >= 1"),
+            PlanError::ZeroMicroBatches => write!(f, "micro_batches must be >= 1"),
+            PlanError::BatchMismatch { sequences, s_dp, micro_batches } => {
+                write!(f, "{sequences} sequences != {s_dp}(dp) x {micro_batches}(micro-batches)")
+            }
+            PlanError::BatchBelowOneSequence { gbs_tokens, micro_tokens } => {
+                write!(f, "global batch of {gbs_tokens} tokens is below one \
+                           {micro_tokens}-token sequence")
+            }
+            PlanError::TokensNotWholeSequences { gbs_tokens, micro_tokens } => {
+                write!(f, "global batch of {gbs_tokens} tokens is not a whole \
+                           number of {micro_tokens}-token micro-batches")
+            }
+            PlanError::ZeroMicroTokens => write!(f, "micro_tokens must be >= 1"),
+            PlanError::AlphaOutOfRange { alpha } => {
+                write!(f, "alpha {alpha} outside [0, inf)")
+            }
+            PlanError::TrainStageRole { index, prefix, expected } => {
+                write!(f, "train stage {index}: prefix `{prefix}` does not match \
+                           role `{expected}`")
+            }
+            PlanError::TrainEmpty => write!(f, "train section has no stages"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Render a violation list as a one-per-line report (CLI error output).
+pub fn render_errors(errors: &[PlanError]) -> String {
+    errors
+        .iter()
+        .map(|e| format!("  - {e}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}

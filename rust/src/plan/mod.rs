@@ -1,0 +1,861 @@
+//! The plan-centric API: a serializable [`ExecutionPlan`] is the single
+//! artifact flowing through search → simulate → train.
+//!
+//! `HeteroAuto` emits one ([`crate::auto::SearchResult::into_plan`]), the
+//! HeteroPP simulator and the real training coordinator consume one
+//! ([`ExecutionPlan::simulate`], [`crate::coordinator::train_plan`]), and
+//! the CLI persists one (`h2 search --emit-plan plan.json`, then
+//! `h2 simulate|train --plan plan.json`). The JSON form is self-contained:
+//! custom chips referenced by the plan are embedded and re-registered on
+//! load, so a plan file moves between processes and machines.
+//!
+//! Construction goes through [`PlanBuilder`]; every structural invariant
+//! the cost model, simulator and coordinator rely on is checked by
+//! [`ExecutionPlan::validate`], which reports *all* violations as typed
+//! [`PlanError`]s.
+
+mod builder;
+mod error;
+
+pub use builder::PlanBuilder;
+pub use error::{render_errors, PlanError};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::CommMode;
+use crate::coordinator::{StagePlan, TrainConfig};
+use crate::costmodel::{evaluate, tgs, Evaluation, GroupPlan, ModelShape, Strategy};
+use crate::hetero::{self, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
+use crate::precision::MRE_THRESHOLD;
+use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions, SimResult};
+use crate::topology::NicAssignment;
+use crate::util::json::{self, Value};
+
+/// Plan-file schema version.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Numeric-precision policy carried by a plan into real training runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Inject per-chip vendor-stack operator noise (the Fig 5 model).
+    pub perturb: bool,
+    /// Model-level alignment criterion (MRE of the loss curve).
+    pub mre_threshold: f64,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy { perturb: false, mre_threshold: MRE_THRESHOLD }
+    }
+}
+
+/// The real-training section of a plan: which AOT artifact set to run and
+/// how to shard it. Comm mode, NIC assignment, overlap and precision come
+/// from the owning plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSpec {
+    /// Artifact model name (e.g. `h2_tiny`), resolved via the manifest.
+    pub model: String,
+    pub stages: Vec<StagePlan>,
+    pub dp: usize,
+    pub micro_batches: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+/// A complete, serializable description of one training execution:
+/// cluster + model shape + parallel strategy + communication configuration.
+///
+/// `stage_groups` are in memory-descending HeteroPP stage order and are
+/// positionally matched with `strategy.plans` (they may be the two-stage
+/// search's pseudo-subgroups, hence kept separate from `cluster.groups`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutionPlan {
+    pub version: u64,
+    pub name: String,
+    pub model: ModelShape,
+    /// The physical cluster the plan was built for.
+    pub cluster: Cluster,
+    /// Stage-ordered groups matched 1:1 with `strategy.plans`.
+    pub stage_groups: Vec<ChipGroup>,
+    pub strategy: Strategy,
+    /// Global batch size in tokens.
+    pub gbs_tokens: usize,
+    /// Tokens per micro-batch (the paper pins micro batch size to 1 sequence).
+    pub micro_tokens: usize,
+    /// Pipeline bubble coefficient (1.0 = 1F1B, 0.0 = ZB-V).
+    pub alpha: f64,
+    pub comm: CommMode,
+    pub reshard: ReshardStrategy,
+    pub nic_assignment: NicAssignment,
+    pub fine_overlap: bool,
+    pub precision: PrecisionPolicy,
+    pub train: Option<TrainSpec>,
+}
+
+impl ExecutionPlan {
+    /// Stage-ordered group references, the shape the cost model/simulator eat.
+    pub fn group_refs(&self) -> Vec<&ChipGroup> {
+        self.stage_groups.iter().collect()
+    }
+
+    /// Simulation options implied by the plan's communication section.
+    pub fn sim_options(&self) -> SimOptions {
+        SimOptions {
+            comm: self.comm,
+            reshard: self.reshard,
+            nic_assignment: self.nic_assignment,
+            fine_overlap: self.fine_overlap,
+        }
+    }
+
+    /// Evaluate the §4.3.2 closed-form cost model on this plan.
+    pub fn evaluate(&self) -> Evaluation {
+        evaluate(&self.model, &self.group_refs(), &self.strategy, self.micro_tokens, self.alpha)
+    }
+
+    /// Run the discrete-event HeteroPP simulator on this plan.
+    pub fn simulate(&self) -> SimResult {
+        simulate_iteration(
+            &self.model,
+            &self.group_refs(),
+            &self.strategy,
+            self.micro_tokens,
+            &self.sim_options(),
+        )
+    }
+
+    /// Tokens/chip/second over this plan's cluster for a given iteration time.
+    pub fn tgs(&self, iteration_seconds: f64) -> f64 {
+        tgs(&self.cluster, self.gbs_tokens, iteration_seconds)
+    }
+
+    /// Lower the plan into a [`TrainConfig`] for the real coordinator.
+    /// Errors if the plan has no `train` section.
+    pub fn train_config(&self) -> Result<TrainConfig> {
+        let t = self
+            .train
+            .as_ref()
+            .ok_or_else(|| anyhow!("plan `{}` has no train section", self.name))?;
+        Ok(TrainConfig {
+            model: t.model.clone(),
+            stages: t.stages.clone(),
+            dp: t.dp,
+            micro_batches: t.micro_batches,
+            steps: t.steps,
+            lr: t.lr,
+            seed: t.seed,
+            comm: self.comm,
+            nic_assignment: self.nic_assignment,
+            fine_overlap: self.fine_overlap,
+            perturb: self.precision.perturb,
+            log_every: t.log_every,
+        })
+    }
+
+    // -- validation --------------------------------------------------------
+
+    /// Check every structural invariant; collects all violations.
+    pub fn validate(&self) -> std::result::Result<(), Vec<PlanError>> {
+        let mut errs = Vec::new();
+        if self.stage_groups.is_empty() {
+            errs.push(PlanError::EmptyGroups);
+        }
+        if self.stage_groups.len() != self.strategy.plans.len() {
+            errs.push(PlanError::GroupsMismatch {
+                groups: self.stage_groups.len(),
+                plans: self.strategy.plans.len(),
+            });
+        }
+        if self.micro_tokens == 0 {
+            errs.push(PlanError::ZeroMicroTokens);
+        }
+        if !(self.alpha >= 0.0 && self.alpha.is_finite()) {
+            errs.push(PlanError::AlphaOutOfRange { alpha: self.alpha });
+        }
+        if self.strategy.s_dp == 0 {
+            errs.push(PlanError::ZeroDp);
+        }
+        if self.strategy.micro_batches == 0 {
+            errs.push(PlanError::ZeroMicroBatches);
+        }
+        if self.micro_tokens > 0 {
+            let sequences = self.gbs_tokens / self.micro_tokens;
+            if self.gbs_tokens % self.micro_tokens != 0 {
+                errs.push(PlanError::TokensNotWholeSequences {
+                    gbs_tokens: self.gbs_tokens,
+                    micro_tokens: self.micro_tokens,
+                });
+            }
+            if sequences == 0 {
+                errs.push(PlanError::BatchBelowOneSequence {
+                    gbs_tokens: self.gbs_tokens,
+                    micro_tokens: self.micro_tokens,
+                });
+            } else if self.strategy.s_dp > 0
+                && self.strategy.s_dp * self.strategy.micro_batches != sequences
+            {
+                errs.push(PlanError::BatchMismatch {
+                    sequences,
+                    s_dp: self.strategy.s_dp,
+                    micro_batches: self.strategy.micro_batches,
+                });
+            }
+        }
+        // stage_groups must repartition the physical cluster: per chip kind
+        // the stage-ordered groups account for exactly the cluster's chips
+        // (they may be pseudo-subgroups, so totals are compared per kind).
+        let mut tally: std::collections::BTreeMap<ChipKind, (usize, usize)> =
+            std::collections::BTreeMap::new();
+        for g in &self.cluster.groups {
+            tally.entry(g.spec.kind).or_insert((0, 0)).0 += g.n_chips;
+        }
+        for g in &self.stage_groups {
+            tally.entry(g.spec.kind).or_insert((0, 0)).1 += g.n_chips;
+        }
+        for (kind, (cluster, stages)) in tally {
+            if cluster != stages {
+                errs.push(PlanError::ClusterMismatch {
+                    chip: kind.name().to_string(),
+                    cluster,
+                    stages,
+                });
+            }
+        }
+        for (i, (g, p)) in self.stage_groups.iter().zip(&self.strategy.plans).enumerate() {
+            if g.n_chips % g.spec.chips_per_node != 0 {
+                errs.push(PlanError::PartialNode {
+                    group: i,
+                    chips: g.n_chips,
+                    chips_per_node: g.spec.chips_per_node,
+                });
+            }
+            if !p.s_tp.is_power_of_two() {
+                errs.push(PlanError::TpNotPowerOfTwo { group: i, s_tp: p.s_tp });
+            }
+            if p.s_tp > g.spec.tp_max() {
+                errs.push(PlanError::TpExceedsMax {
+                    group: i,
+                    s_tp: p.s_tp,
+                    tp_max: g.spec.tp_max(),
+                });
+            }
+            if self.strategy.s_dp > 0 && p.s_pp * p.s_tp * self.strategy.s_dp != g.n_chips {
+                errs.push(PlanError::ChipAccounting {
+                    group: i,
+                    chips: g.n_chips,
+                    s_pp: p.s_pp,
+                    s_tp: p.s_tp,
+                    s_dp: self.strategy.s_dp,
+                });
+            }
+            if p.layers == 0 {
+                errs.push(PlanError::ZeroLayers { group: i });
+            } else if p.s_pp == 0 || p.layers % p.s_pp != 0 {
+                errs.push(PlanError::LayersNotUniform {
+                    group: i,
+                    layers: p.layers,
+                    s_pp: p.s_pp,
+                });
+            }
+        }
+        let assigned = self.strategy.total_layers();
+        if assigned != self.model.n_layers {
+            errs.push(PlanError::LayersMismatch { assigned, model: self.model.n_layers });
+        }
+        if let Some(t) = &self.train {
+            if t.stages.is_empty() || t.dp == 0 || t.micro_batches == 0 {
+                errs.push(PlanError::TrainEmpty);
+            }
+            let n = t.stages.len();
+            for (i, sp) in t.stages.iter().enumerate() {
+                let expected =
+                    if i == 0 { "first" } else if i == n - 1 { "last" } else { "mid" };
+                if !sp.prefix.starts_with(expected) {
+                    errs.push(PlanError::TrainStageRole {
+                        index: i,
+                        prefix: sp.prefix.clone(),
+                        expected,
+                    });
+                }
+            }
+        }
+        if errs.is_empty() { Ok(()) } else { Err(errs) }
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    /// Serialize to a self-contained JSON value (embeds custom chip defs).
+    pub fn to_json(&self) -> Value {
+        let mut custom: Vec<CustomChipDef> = Vec::new();
+        let mut note = |def: Option<CustomChipDef>| {
+            if let Some(def) = def {
+                if !custom.iter().any(|d| d.name == def.name) {
+                    custom.push(def);
+                }
+            }
+        };
+        // Groups carry a snapshotted ChipSpec — embed *that*, not the live
+        // registry state, so the file reflects what the plan computes with.
+        // Train stages hold only a ChipKind; for a chip that appears in no
+        // group there is no snapshot anywhere in the plan, so those fall
+        // back to the registry's current definition (groups win the dedup).
+        for g in self.cluster.groups.iter().chain(&self.stage_groups) {
+            if g.spec.kind.is_custom() {
+                note(Some(hetero::def_from_spec(g.spec.kind.name(), &g.spec)));
+            }
+        }
+        if let Some(t) = &self.train {
+            for s in &t.stages {
+                note(hetero::custom_def(s.chip));
+            }
+        }
+
+        let mut fields = vec![
+            ("version", json::num(self.version as f64)),
+            ("name", json::s(&self.name)),
+            ("model", model_to_json(&self.model)),
+            ("cluster", cluster_to_json(&self.cluster)),
+            ("stage_groups", json::arr(self.stage_groups.iter().map(group_to_json).collect())),
+            ("strategy", strategy_to_json(&self.strategy)),
+            ("gbs_tokens", json::num(self.gbs_tokens as f64)),
+            ("micro_tokens", json::num(self.micro_tokens as f64)),
+            ("alpha", json::num(self.alpha)),
+            ("comm", json::s(self.comm.token())),
+            ("reshard", json::s(self.reshard.token())),
+            ("nic_assignment", json::s(self.nic_assignment.token())),
+            ("fine_overlap", Value::Bool(self.fine_overlap)),
+            (
+                "precision",
+                json::obj(vec![
+                    ("perturb", Value::Bool(self.precision.perturb)),
+                    ("mre_threshold", json::num(self.precision.mre_threshold)),
+                ]),
+            ),
+        ];
+        if !custom.is_empty() {
+            fields.push(("chips", json::arr(custom.iter().map(chip_def_to_json).collect())));
+        }
+        if let Some(t) = &self.train {
+            fields.push(("train", train_to_json(t)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Deserialize from a JSON value, registering any embedded custom chips
+    /// first so the plan file is self-contained.
+    pub fn from_json(v: &Value) -> Result<ExecutionPlan> {
+        // Reject unsupported versions *before* touching the process-wide
+        // chip registry, so a version-rejected file leaves no side effects.
+        // (Embedded chips must register before groups parse — group parsing
+        // resolves chip names through the registry — so a file that fails on
+        // a *later* field does leave its chips registered; re-loading a
+        // corrected file re-registers them idempotently.)
+        let version = v.get("version")?.u64()?;
+        if version > PLAN_VERSION {
+            bail!("plan version {version} is newer than supported {PLAN_VERSION}");
+        }
+        if let Some(chips) = v.opt("chips") {
+            for c in chips.arr().context("parsing `chips`")? {
+                let def = chip_def_from_json(c)?;
+                hetero::register_custom(&def)?;
+            }
+        }
+        let precision = match v.opt("precision") {
+            Some(p) => PrecisionPolicy {
+                perturb: p.get("perturb")?.bool()?,
+                mre_threshold: p.get("mre_threshold")?.num()?,
+            },
+            None => PrecisionPolicy::default(),
+        };
+        Ok(ExecutionPlan {
+            version,
+            name: v.get("name")?.str()?.to_string(),
+            model: model_from_json(v.get("model")?).context("parsing `model`")?,
+            cluster: cluster_from_json(v.get("cluster")?).context("parsing `cluster`")?,
+            stage_groups: v
+                .get("stage_groups")?
+                .arr()?
+                .iter()
+                .map(group_from_json)
+                .collect::<Result<Vec<_>>>()
+                .context("parsing `stage_groups`")?,
+            strategy: strategy_from_json(v.get("strategy")?).context("parsing `strategy`")?,
+            gbs_tokens: v.get("gbs_tokens")?.usize()?,
+            micro_tokens: v.get("micro_tokens")?.usize()?,
+            alpha: v.get("alpha")?.num()?,
+            comm: parse_token(v.get("comm")?, "comm", CommMode::parse)?,
+            reshard: parse_token(v.get("reshard")?, "reshard", ReshardStrategy::parse)?,
+            nic_assignment: parse_token(
+                v.get("nic_assignment")?,
+                "nic_assignment",
+                NicAssignment::parse,
+            )?,
+            fine_overlap: v.get("fine_overlap")?.bool()?,
+            precision,
+            train: v.opt("train").map(train_from_json).transpose().context("parsing `train`")?,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<ExecutionPlan> {
+        ExecutionPlan::from_json(&Value::parse(text)?)
+    }
+
+    /// Write the plan to a JSON file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing plan to {path}"))
+    }
+
+    /// Load and validate a plan from a JSON file.
+    pub fn load(path: &str) -> Result<ExecutionPlan> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let plan = ExecutionPlan::from_json_str(&text)
+            .with_context(|| format!("parsing plan {path}"))?;
+        if let Err(errs) = plan.validate() {
+            bail!("plan {path} is invalid:\n{}", render_errors(&errs));
+        }
+        Ok(plan)
+    }
+}
+
+/// Parse a canonical token (comm mode, reshard strategy, NIC assignment)
+/// with a path-aware error — shared with the config front-end.
+pub(crate) fn parse_token<T>(
+    v: &Value,
+    key: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<T> {
+    let s = v.str()?;
+    parse(s).ok_or_else(|| anyhow!("bad `{key}` token `{s}`"))
+}
+
+/// Parse a chip name (built-in or registered custom) — shared with the
+/// config front-end.
+pub(crate) fn parse_kind(v: &Value) -> Result<ChipKind> {
+    let s = v.str()?;
+    ChipKind::parse(s).ok_or_else(|| anyhow!("unknown chip `{s}`"))
+}
+
+fn model_to_json(m: &ModelShape) -> Value {
+    json::obj(vec![
+        ("n_layers", json::num(m.n_layers as f64)),
+        ("hidden", json::num(m.hidden as f64)),
+        ("n_heads", json::num(m.n_heads as f64)),
+        ("n_kv_heads", json::num(m.n_kv_heads as f64)),
+        ("intermediate", json::num(m.intermediate as f64)),
+        ("vocab", json::num(m.vocab as f64)),
+        ("seq_len", json::num(m.seq_len as f64)),
+    ])
+}
+
+fn model_from_json(v: &Value) -> Result<ModelShape> {
+    Ok(ModelShape {
+        n_layers: v.get("n_layers")?.usize()?,
+        hidden: v.get("hidden")?.usize()?,
+        n_heads: v.get("n_heads")?.usize()?,
+        n_kv_heads: v.get("n_kv_heads")?.usize()?,
+        intermediate: v.get("intermediate")?.usize()?,
+        vocab: v.get("vocab")?.usize()?,
+        seq_len: v.get("seq_len")?.usize()?,
+    })
+}
+
+fn group_to_json(g: &ChipGroup) -> Value {
+    json::obj(vec![
+        ("chip", json::s(g.spec.kind.name())),
+        ("chips", json::num(g.n_chips as f64)),
+    ])
+}
+
+fn group_from_json(v: &Value) -> Result<ChipGroup> {
+    ChipGroup::try_new(parse_kind(v.get("chip")?)?, v.get("chips")?.usize()?)
+}
+
+fn cluster_to_json(c: &Cluster) -> Value {
+    json::obj(vec![
+        ("name", json::s(&c.name)),
+        ("groups", json::arr(c.groups.iter().map(group_to_json).collect())),
+    ])
+}
+
+fn cluster_from_json(v: &Value) -> Result<Cluster> {
+    Ok(Cluster {
+        name: v.get("name")?.str()?.to_string(),
+        groups: v
+            .get("groups")?
+            .arr()?
+            .iter()
+            .map(group_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn strategy_to_json(s: &Strategy) -> Value {
+    json::obj(vec![
+        ("s_dp", json::num(s.s_dp as f64)),
+        ("micro_batches", json::num(s.micro_batches as f64)),
+        (
+            "plans",
+            json::arr(
+                s.plans
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("s_pp", json::num(p.s_pp as f64)),
+                            ("s_tp", json::num(p.s_tp as f64)),
+                            ("layers", json::num(p.layers as f64)),
+                            ("recompute", Value::Bool(p.recompute)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn strategy_from_json(v: &Value) -> Result<Strategy> {
+    let mut plans = Vec::new();
+    for p in v.get("plans")?.arr()? {
+        plans.push(GroupPlan {
+            s_pp: p.get("s_pp")?.usize()?,
+            s_tp: p.get("s_tp")?.usize()?,
+            layers: p.get("layers")?.usize()?,
+            recompute: p.get("recompute")?.bool()?,
+        });
+    }
+    Ok(Strategy {
+        s_dp: v.get("s_dp")?.usize()?,
+        micro_batches: v.get("micro_batches")?.usize()?,
+        plans,
+    })
+}
+
+fn link_to_json(link: &IntraNodeLink) -> Value {
+    match *link {
+        IntraNodeLink::Uniform { gbps } => json::obj(vec![
+            ("type", json::s("uniform")),
+            ("gbps", json::num(gbps)),
+        ]),
+        IntraNodeLink::NumaSplit { local_gbps, cross_gbps, island } => json::obj(vec![
+            ("type", json::s("numa")),
+            ("local_gbps", json::num(local_gbps)),
+            ("cross_gbps", json::num(cross_gbps)),
+            ("island", json::num(island as f64)),
+        ]),
+        IntraNodeLink::PcieSwitch { local_gbps, cross_gbps, group } => json::obj(vec![
+            ("type", json::s("pcie")),
+            ("local_gbps", json::num(local_gbps)),
+            ("cross_gbps", json::num(cross_gbps)),
+            ("group", json::num(group as f64)),
+        ]),
+    }
+}
+
+fn link_from_json(v: &Value) -> Result<IntraNodeLink> {
+    match v.get("type")?.str()? {
+        "uniform" => Ok(IntraNodeLink::Uniform { gbps: v.get("gbps")?.num()? }),
+        "numa" => Ok(IntraNodeLink::NumaSplit {
+            local_gbps: v.get("local_gbps")?.num()?,
+            cross_gbps: v.get("cross_gbps")?.num()?,
+            island: v.get("island")?.usize()?,
+        }),
+        "pcie" => Ok(IntraNodeLink::PcieSwitch {
+            local_gbps: v.get("local_gbps")?.num()?,
+            cross_gbps: v.get("cross_gbps")?.num()?,
+            group: v.get("group")?.usize()?,
+        }),
+        other => bail!("unknown intra-node link type `{other}`"),
+    }
+}
+
+/// Serialize a custom chip definition (the config-file `chips` entry shape).
+pub fn chip_def_to_json(def: &CustomChipDef) -> Value {
+    json::obj(vec![
+        ("name", json::s(&def.name)),
+        ("fp16_tflops", json::num(def.fp16_tflops)),
+        ("memory_gib", json::num(def.memory_gib)),
+        ("chips_per_node", json::num(def.chips_per_node as f64)),
+        ("intra_node", link_to_json(&def.intra_node)),
+        ("nics_per_node", json::num(def.nics_per_node as f64)),
+        ("nic_gbps", json::num(def.nic_gbps)),
+        ("mfu", json::num(def.mfu)),
+        ("op_noise", json::num(def.op_noise)),
+        ("pcie_to_nic_gbps", json::num(def.pcie_to_nic_gbps)),
+        ("cross_switch_share", json::num(def.cross_switch_share)),
+    ])
+}
+
+const CHIP_DEF_KEYS: [&str; 11] = [
+    "name", "fp16_tflops", "memory_gib", "chips_per_node", "intra_node",
+    "nics_per_node", "nic_gbps", "mfu", "op_noise", "pcie_to_nic_gbps",
+    "cross_switch_share",
+];
+
+/// Parse a custom chip definition; absent fields keep the
+/// [`CustomChipDef::new`] defaults. Unknown keys are rejected — a typo'd
+/// field would otherwise silently fall back to the default.
+pub fn chip_def_from_json(v: &Value) -> Result<CustomChipDef> {
+    for key in v.obj()?.keys() {
+        if !CHIP_DEF_KEYS.contains(&key.as_str()) {
+            bail!("unknown chip field `{key}` (expected one of {CHIP_DEF_KEYS:?})");
+        }
+    }
+    let mut def = CustomChipDef::new(v.get("name")?.str()?);
+    if let Some(x) = v.opt("fp16_tflops") {
+        def.fp16_tflops = x.num()?;
+    }
+    if let Some(x) = v.opt("memory_gib") {
+        def.memory_gib = x.num()?;
+    }
+    if let Some(x) = v.opt("chips_per_node") {
+        def.chips_per_node = x.usize()?;
+    }
+    if let Some(x) = v.opt("intra_node") {
+        def.intra_node = link_from_json(x)?;
+    }
+    if let Some(x) = v.opt("nics_per_node") {
+        def.nics_per_node = x.usize()?;
+    }
+    if let Some(x) = v.opt("nic_gbps") {
+        def.nic_gbps = x.num()?;
+    }
+    if let Some(x) = v.opt("mfu") {
+        def.mfu = x.num()?;
+    }
+    if let Some(x) = v.opt("op_noise") {
+        def.op_noise = x.num()?;
+    }
+    if let Some(x) = v.opt("pcie_to_nic_gbps") {
+        def.pcie_to_nic_gbps = x.num()?;
+    }
+    if let Some(x) = v.opt("cross_switch_share") {
+        def.cross_switch_share = x.num()?;
+    }
+    Ok(def)
+}
+
+fn train_to_json(t: &TrainSpec) -> Value {
+    json::obj(vec![
+        ("model", json::s(&t.model)),
+        (
+            "stages",
+            json::arr(
+                t.stages
+                    .iter()
+                    .map(|s| {
+                        json::obj(vec![
+                            ("prefix", json::s(&s.prefix)),
+                            ("chip", json::s(s.chip.name())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("dp", json::num(t.dp as f64)),
+        ("micro_batches", json::num(t.micro_batches as f64)),
+        ("steps", json::num(t.steps as f64)),
+        ("lr", json::num(t.lr as f64)),
+        // JSON numbers are f64: a full-range u64 seed would silently lose
+        // low bits above 2^53, so seeds travel as decimal strings.
+        ("seed", json::s(&t.seed.to_string())),
+        ("log_every", json::num(t.log_every as f64)),
+    ])
+}
+
+/// Seeds are written as decimal strings (see [`train_to_json`]) but a
+/// small integer is accepted for hand-written files.
+fn seed_from_json(v: &Value) -> Result<u64> {
+    match v {
+        Value::Str(s) => s.parse::<u64>().map_err(|e| anyhow!("bad seed `{s}`: {e}")),
+        _ => v.u64(),
+    }
+}
+
+fn train_from_json(v: &Value) -> Result<TrainSpec> {
+    let mut stages = Vec::new();
+    for s in v.get("stages")?.arr()? {
+        stages.push(StagePlan {
+            prefix: s.get("prefix")?.str()?.to_string(),
+            chip: parse_kind(s.get("chip")?)?,
+        });
+    }
+    Ok(TrainSpec {
+        model: v.get("model")?.str()?.to_string(),
+        stages,
+        dp: v.get("dp")?.usize()?,
+        micro_batches: v.get("micro_batches")?.usize()?,
+        steps: v.get("steps")?.usize()?,
+        lr: v.get("lr")?.num()? as f32,
+        seed: seed_from_json(v.get("seed")?)?,
+        log_every: v.get("log_every")?.usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::H2_100B;
+    use crate::hetero::homogeneous_baseline;
+
+    fn table6_a_plan() -> ExecutionPlan {
+        let exp = homogeneous_baseline(ChipKind::A);
+        PlanBuilder::new("table6-a")
+            .model(H2_100B)
+            .cluster(exp.cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+            })
+            .gbs_tokens(exp.gbs_tokens)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_produces_valid_plan() {
+        let plan = table6_a_plan();
+        assert_eq!(plan.version, PLAN_VERSION);
+        assert_eq!(plan.micro_tokens, H2_100B.seq_len);
+        assert_eq!(plan.stage_groups.len(), 1);
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn plan_matches_direct_cost_model_calls() {
+        let plan = table6_a_plan();
+        let exp = homogeneous_baseline(ChipKind::A);
+        let groups = exp.cluster.groups_by_memory_desc();
+        let direct = evaluate(&H2_100B, &groups, &plan.strategy, H2_100B.seq_len, 1.0);
+        let via_plan = plan.evaluate();
+        assert_eq!(direct.iteration_seconds, via_plan.iteration_seconds);
+        let sim_direct = simulate_iteration(
+            &H2_100B, &groups, &plan.strategy, H2_100B.seq_len, &SimOptions::default(),
+        );
+        assert_eq!(sim_direct.iteration_seconds, plan.simulate().iteration_seconds);
+    }
+
+    #[test]
+    fn json_roundtrip_identity() {
+        let mut plan = table6_a_plan();
+        plan.train = Some(TrainSpec {
+            model: "h2_tiny".into(),
+            stages: vec![
+                StagePlan { prefix: "first_l2".into(), chip: ChipKind::A },
+                StagePlan { prefix: "last_l2".into(), chip: ChipKind::B },
+            ],
+            dp: 1,
+            micro_batches: 2,
+            steps: 20,
+            lr: 1e-3,
+            seed: 42,
+            log_every: 10,
+        });
+        let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        let back2 = ExecutionPlan::from_json_str(&plan.to_json_string()).unwrap();
+        assert_eq!(plan, back2);
+    }
+
+    #[test]
+    fn custom_chip_plan_is_self_contained() {
+        let mut def = CustomChipDef::new("PlanTest-Z7");
+        def.fp16_tflops = 300.0;
+        def.memory_gib = 80.0;
+        def.chips_per_node = 8;
+        let kind = hetero::register_custom(&def).unwrap();
+        let cluster = Cluster::try_build("z7-lab", vec![(kind, 16)]).unwrap();
+        let plan = PlanBuilder::new("custom-chip")
+            .model(H2_100B)
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 1,
+                micro_batches: 512,
+                plans: vec![GroupPlan { s_pp: 8, s_tp: 2, layers: 96, recompute: true }],
+            })
+            .gbs_tokens(512 * H2_100B.seq_len)
+            .build()
+            .unwrap();
+        let text = plan.to_json_string();
+        assert!(text.contains("PlanTest-Z7"), "custom chip must be embedded:\n{text}");
+        let back = ExecutionPlan::from_json_str(&text).unwrap();
+        assert_eq!(plan, back);
+        assert!(back.simulate().iteration_seconds.is_finite());
+    }
+
+    #[test]
+    fn validation_catches_broken_plans() {
+        let mut plan = table6_a_plan();
+        plan.strategy.plans[0].layers = 95; // not divisible by 16, wrong sum
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::LayersNotUniform { group: 0, layers: 95, s_pp: 16 }));
+        assert!(errs.contains(&PlanError::LayersMismatch { assigned: 95, model: 96 }));
+
+        let mut plan = table6_a_plan();
+        plan.strategy.s_dp = 3;
+        let errs = plan.validate().unwrap_err();
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, PlanError::ChipAccounting { .. })));
+        assert!(errs.iter().any(|e| matches!(e, PlanError::BatchMismatch { .. })));
+
+        let mut plan = table6_a_plan();
+        plan.strategy.plans[0].s_tp = 3;
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::TpNotPowerOfTwo { group: 0, s_tp: 3 }));
+    }
+
+    #[test]
+    fn stage_groups_must_repartition_cluster() {
+        let mut plan = table6_a_plan();
+        plan.cluster = Cluster::new("bigger", vec![(ChipKind::A, 512)]);
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::ClusterMismatch {
+            chip: "Chip-A".into(),
+            cluster: 512,
+            stages: 256,
+        }));
+    }
+
+    #[test]
+    fn train_role_mismatch_is_reported() {
+        let mut plan = table6_a_plan();
+        plan.train = Some(TrainSpec {
+            model: "h2_tiny".into(),
+            stages: vec![
+                StagePlan { prefix: "mid_l2".into(), chip: ChipKind::A },
+                StagePlan { prefix: "last_l2".into(), chip: ChipKind::B },
+            ],
+            dp: 1,
+            micro_batches: 2,
+            steps: 20,
+            lr: 1e-3,
+            seed: 42,
+            log_every: 10,
+        });
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.iter().any(|e| matches!(
+            e,
+            PlanError::TrainStageRole { index: 0, expected: "first", .. }
+        )));
+    }
+
+    #[test]
+    fn load_save_roundtrip() {
+        let dir = std::env::temp_dir().join("h2_plan_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        let path = path.to_str().unwrap();
+        let plan = table6_a_plan();
+        plan.save(path).unwrap();
+        let back = ExecutionPlan::load(path).unwrap();
+        assert_eq!(plan, back);
+    }
+}

@@ -31,7 +31,7 @@ pub struct Perturbation {
 
 impl Perturbation {
     pub fn new(kind: ChipKind, seed: u64) -> Self {
-        Perturbation { kind, rel_noise: spec(kind).op_noise, rng: Rng::new(seed ^ kind as u64) }
+        Perturbation { kind, rel_noise: spec(kind).op_noise, rng: Rng::new(seed ^ kind.seed_tag()) }
     }
 
     /// Perturb a gradient tensor in place: g ← g·(1 + ε·ξ), ξ ~ N(0,1).

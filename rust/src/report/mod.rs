@@ -6,9 +6,10 @@ use anyhow::Result;
 
 use crate::auto::{search, SearchConfig, SearchResult};
 use crate::comm::CommMode;
-use crate::costmodel::{evaluate, tgs, GroupPlan, Strategy, H2_100B};
-use crate::hetero::{experiment, homogeneous_baseline, ChipGroup, ChipKind};
-use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions};
+use crate::costmodel::{uniform_1f1b, GroupPlan, Strategy, H2_100B};
+use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
+use crate::plan::{ExecutionPlan, PlanBuilder};
+use crate::sim::{simulate_plan, ReshardStrategy};
 
 /// Table 6 rows: (chip, PP, DP, TP, recompute, paper TGS).
 pub const TABLE6: [(ChipKind, usize, usize, usize, bool, f64); 4] = [
@@ -40,25 +41,35 @@ pub struct BaselineRow {
     pub paper_tgs: f64,
 }
 
-/// Evaluate one Table 6 row with both the cost model and the simulator.
-pub fn table6_row(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool,
-                  paper: f64) -> BaselineRow {
+/// The homogeneous-baseline plan behind one Table 6 row.
+pub fn table6_plan(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool) -> ExecutionPlan {
     let exp = homogeneous_baseline(kind);
-    let groups = exp.cluster.groups_by_memory_desc();
     let strategy = Strategy {
         s_dp: dp,
         micro_batches: exp.gbs_tokens / H2_100B.seq_len / dp,
         plans: vec![GroupPlan { s_pp: pp, s_tp: tp, layers: 96, recompute: rec }],
     };
-    let eval = evaluate(&H2_100B, &groups, &strategy, H2_100B.seq_len, 1.0);
-    let sim = simulate_iteration(&H2_100B, &groups, &strategy, H2_100B.seq_len,
-                                 &SimOptions::default());
+    PlanBuilder::new(&format!("table6-{kind}"))
+        .model(H2_100B)
+        .cluster(exp.cluster)
+        .strategy(strategy)
+        .gbs_tokens(exp.gbs_tokens)
+        .build()
+        .expect("Table 6 configurations are valid")
+}
+
+/// Evaluate one Table 6 row with both the cost model and the simulator.
+pub fn table6_row(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool,
+                  paper: f64) -> BaselineRow {
+    let plan = table6_plan(kind, pp, dp, tp, rec);
+    let eval = plan.evaluate();
+    let sim = plan.simulate();
     BaselineRow {
         kind,
-        model_tgs: tgs(&exp.cluster, exp.gbs_tokens, eval.iteration_seconds),
-        sim_tgs: tgs(&exp.cluster, exp.gbs_tokens, sim.iteration_seconds),
+        model_tgs: plan.tgs(eval.iteration_seconds),
+        sim_tgs: plan.tgs(sim.iteration_seconds),
         paper_tgs: paper,
-        strategy,
+        strategy: plan.strategy,
     }
 }
 
@@ -82,14 +93,16 @@ pub struct HeteroRow {
 }
 
 /// Run HeteroAuto + the simulator for one Table 7 experiment and compute
-/// the HeteroSpeedupRatio against the Table 6 baselines.
+/// the HeteroSpeedupRatio against the Table 6 baselines. The searched
+/// strategy flows to the simulator as an [`ExecutionPlan`] — the same
+/// artifact `h2 search --emit-plan` persists.
 pub fn hetero_row(exp_name: &str, baselines: &[BaselineRow]) -> Result<HeteroRow> {
     let exp = experiment(exp_name)?;
-    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())?;
-    let grefs: Vec<&ChipGroup> = r.groups.iter().collect();
-    let sim = simulate_iteration(&H2_100B, &grefs, &r.strategy, H2_100B.seq_len,
-                                 &SimOptions::default());
-    let hetero_tgs = tgs(&exp.cluster, exp.gbs_tokens, sim.iteration_seconds);
+    let cfg = SearchConfig::default();
+    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
+    let plan = r.to_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+    let sim = simulate_plan(&plan);
+    let hetero_tgs = plan.tgs(sim.iteration_seconds);
 
     let mut denom = 0.0;
     for g in &exp.cluster.groups {
@@ -124,58 +137,44 @@ pub struct AblationRow {
 
 pub fn table9_ablation() -> Result<Vec<AblationRow>> {
     let exp = experiment("exp-c-1")?;
-    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default())?;
-    let grefs: Vec<&ChipGroup> = r.groups.iter().collect();
-    let run = |opts: &SimOptions, strategy: &Strategy| {
-        simulate_iteration(&H2_100B, &grefs, strategy, H2_100B.seq_len, opts)
-            .iteration_seconds
-    };
-    let full = run(&SimOptions::default(), &r.strategy);
+    let cfg = SearchConfig::default();
+    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
+    let base = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+    let run = |plan: &ExecutionPlan| simulate_plan(plan).iteration_seconds;
+    let full = run(&base);
 
-    // Uniform 1F1B: equal layers per stage, recompute everywhere.
-    let mut uniform = r.strategy.clone();
-    let total_stages: usize = uniform.plans.iter().map(|p| p.s_pp).sum();
-    let lps = H2_100B.n_layers / total_stages;
-    for p in uniform.plans.iter_mut() {
-        p.layers = lps * p.s_pp;
-        p.recompute = true;
-    }
-    let mut assigned: usize = uniform.plans.iter().map(|p| p.layers).sum();
-    let mut i = 0;
-    while assigned < H2_100B.n_layers {
-        let k = i % uniform.plans.len();
-        uniform.plans[k].layers += uniform.plans[k].s_pp;
-        assigned += uniform.plans[k].s_pp;
-        i += 1;
-    }
+    // Each ablation is the base plan with one field flipped — exactly what
+    // a user does to a persisted plan.json.
+    let mut tcp = base.clone();
+    tcp.comm = CommMode::TcpCpu;
+    let mut uniform = base.clone();
+    uniform_1f1b(&mut uniform.strategy, H2_100B.n_layers);
+    let mut naive = base.clone();
+    naive.reshard = ReshardStrategy::NaiveP2p;
+    let mut no_overlap = base.clone();
+    no_overlap.fine_overlap = false;
 
     let rows = vec![
         AblationRow { label: "DDR + HeteroAuto + HeteroPP 1F1B (full)",
                       relative_percent: 100.0, paper_percent: 100.0 },
         AblationRow {
             label: "TCP instead of DDR",
-            relative_percent: run(&SimOptions { comm: CommMode::TcpCpu,
-                                                ..Default::default() }, &r.strategy)
-                / full * 100.0,
+            relative_percent: run(&tcp) / full * 100.0,
             paper_percent: 110.1,
         },
         AblationRow {
             label: "Uniform 1F1B instead of HeteroPP",
-            relative_percent: run(&SimOptions::default(), &uniform) / full * 100.0,
+            relative_percent: run(&uniform) / full * 100.0,
             paper_percent: 126.4,
         },
         AblationRow {
             label: "w/o SR&AG resharding (naive P2P)",
-            relative_percent: run(&SimOptions { reshard: ReshardStrategy::NaiveP2p,
-                                                ..Default::default() }, &r.strategy)
-                / full * 100.0,
+            relative_percent: run(&naive) / full * 100.0,
             paper_percent: 104.8,
         },
         AblationRow {
             label: "w/o fine-grained overlap",
-            relative_percent: run(&SimOptions { fine_overlap: false,
-                                                ..Default::default() }, &r.strategy)
-                / full * 100.0,
+            relative_percent: run(&no_overlap) / full * 100.0,
             paper_percent: 101.8,
         },
     ];

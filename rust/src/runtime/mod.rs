@@ -6,14 +6,26 @@
 //! `client.compile` → `execute`. Python never runs at request time; this
 //! module is the only boundary between the rust coordinator and the
 //! compiled L1/L2 compute.
+//!
+//! The real backend needs the `xla` crate (xla-rs) and its native XLA
+//! libraries, which offline/CI builds don't have, so it is gated behind
+//! the off-by-default `pjrt` cargo feature (enabling it requires adding
+//! `xla` to `[dependencies]`). Without the feature, manifests, tensors
+//! and metadata all still work; only [`Runtime::load`] / [`Executable::run`]
+//! report that execution is unavailable. Search, simulation, cost model
+//! and plan tooling never touch this path.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Context, Result};
 
 pub use manifest::{ArtifactMeta, Manifest, ModelEntry, ParamMeta, TensorMeta};
 
@@ -79,6 +91,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
         let buf = match self {
             HostTensor::F32 { shape, data } =>
@@ -89,6 +102,7 @@ impl HostTensor {
         Ok(buf)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -101,6 +115,7 @@ impl HostTensor {
 }
 
 /// One compiled artifact, ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     pub name: String,
     pub meta: ArtifactMeta,
@@ -108,6 +123,24 @@ pub struct Executable {
     client: xla::PjRtClient,
 }
 
+/// Stub executable (crate built without the `pjrt` feature): carries the
+/// artifact metadata so planning/arity code works, but cannot run.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("{}: built without the `pjrt` feature — real execution needs \
+               the xla-backed runtime (add the `xla` crate and build with \
+               --features pjrt)", self.name)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with host tensors; returns the decomposed outputs.
     ///
@@ -152,6 +185,7 @@ impl Executable {
 }
 
 /// The runtime: one PJRT CPU client plus a compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     root: PathBuf,
@@ -159,6 +193,39 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
+/// Stub runtime (crate built without the `pjrt` feature): opens and
+/// validates the artifact manifest, but cannot compile or execute.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    #[allow(dead_code)]
+    root: PathBuf,
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Open `artifacts/` (the directory holding `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root.join("manifest.json"))
+            .with_context(|| format!("opening artifact set {root:?}"))?;
+        Ok(Runtime { root, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".to_string()
+    }
+
+    /// Always errors: execution needs the xla-backed build.
+    pub fn load(&self, model: &str, artifact: &str) -> Result<std::sync::Arc<Executable>> {
+        let _ = self.manifest.artifact(model, artifact)?;
+        bail!("{model}/{artifact}: built without the `pjrt` feature — real \
+               execution needs the xla-backed runtime (add the `xla` crate \
+               and build with --features pjrt)")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open `artifacts/` (the directory holding `manifest.json`).
     pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -196,7 +263,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -5,5 +5,5 @@
 pub mod pipeline;
 pub mod reshard;
 
-pub use pipeline::{simulate_iteration, SimOptions, SimResult, FINE_OVERLAP_HIDDEN};
+pub use pipeline::{simulate_iteration, simulate_plan, SimOptions, SimResult, FINE_OVERLAP_HIDDEN};
 pub use reshard::{reshard_time, ReshardStrategy};

@@ -129,6 +129,13 @@ pub fn simulate_iteration(
     simulate_1f1b(&stages, &link, strategy.micro_batches, &exposed)
 }
 
+/// Simulate a serialized [`crate::plan::ExecutionPlan`] — the plan-centric
+/// entry point; a free-function alias for
+/// [`crate::plan::ExecutionPlan::simulate`].
+pub fn simulate_plan(plan: &crate::plan::ExecutionPlan) -> SimResult {
+    plan.simulate()
+}
+
 /// Core 1F1B list scheduler over explicit per-stage op queues.
 fn simulate_1f1b(
     stages: &[StageSim],

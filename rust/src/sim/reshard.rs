@@ -33,6 +33,24 @@ impl ReshardStrategy {
             ReshardStrategy::SendRecvAllGather => "SR&AG (topology-aware)",
         }
     }
+
+    pub fn parse(s: &str) -> Option<ReshardStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" | "naive-p2p" => Some(ReshardStrategy::NaiveP2p),
+            "bcast" | "broadcast" => Some(ReshardStrategy::Broadcast),
+            "srag" | "sr-ag" | "sendrecv-allgather" => Some(ReshardStrategy::SendRecvAllGather),
+            _ => None,
+        }
+    }
+
+    /// Canonical short token, accepted back by [`ReshardStrategy::parse`].
+    pub fn token(self) -> &'static str {
+        match self {
+            ReshardStrategy::NaiveP2p => "naive",
+            ReshardStrategy::Broadcast => "bcast",
+            ReshardStrategy::SendRecvAllGather => "srag",
+        }
+    }
 }
 
 /// Cost of one resharding step: total wire time plus the slice of it the

@@ -25,45 +25,41 @@ pub enum NicAssignment {
     NonAffinity,
 }
 
-/// PCIe-path efficiency from chip to its *affine* NIC, GB/s.
-/// (Chip-specific: different vendors wire x8/x16 Gen4 differently.)
-fn pcie_to_nic_gbps(kind: ChipKind) -> f64 {
-    match kind {
-        ChipKind::A => 11.95,
-        ChipKind::B => 12.39,
-        ChipKind::C => 8.2,
-        ChipKind::D => 12.39,
-        ChipKind::A100 => 12.8,
+impl NicAssignment {
+    pub fn parse(s: &str) -> Option<NicAssignment> {
+        match s.to_ascii_lowercase().as_str() {
+            "affinity" => Some(NicAssignment::Affinity),
+            "non-affinity" => Some(NicAssignment::NonAffinity),
+            _ => None,
+        }
+    }
+
+    /// Canonical token, accepted back by [`NicAssignment::parse`].
+    pub fn token(self) -> &'static str {
+        match self {
+            NicAssignment::Affinity => "affinity",
+            NicAssignment::NonAffinity => "non-affinity",
+        }
     }
 }
 
 /// RDMA protocol efficiency on the wire (headers, MTU, ack overhead).
 pub const RDMA_EFFICIENCY: f64 = 0.8;
 
-/// Share of the affine-path bandwidth left when the flow must cross the
-/// inter-switch uplink and contend with the flows already there
-/// (calibrated to Table 3's non-affinity rows).
-fn cross_switch_share(kind: ChipKind) -> f64 {
-    match kind {
-        ChipKind::A => 0.576,
-        ChipKind::B => 0.528,
-        ChipKind::C => 0.50,
-        ChipKind::D => 0.55,
-        ChipKind::A100 => 0.90, // NVSwitch-class fabrics degrade least
-    }
-}
-
 /// Per-flow cross-node bandwidth (GB/s) for one chip-to-chip flow when all
 /// chips of the source server transmit concurrently (the Table 3 workload).
 ///
 /// The flow rate is the min of the source path and destination path; each
 /// path is the chip↔NIC PCIe rate (possibly degraded by non-affinity) capped
-/// by the per-chip share of the server's NIC capacity.
+/// by the per-chip share of the server's NIC capacity. The NIC-path
+/// constants live on [`ChipSpec`] (chip-specific, Table 3 calibration), so
+/// a snapshotted spec — e.g. inside a loaded plan's chip groups — stays
+/// self-consistent even if the chip registry is later re-registered.
 pub fn flow_bandwidth_gbps(src: &ChipSpec, dst: &ChipSpec, assign: NicAssignment) -> f64 {
     let path = |spec: &ChipSpec, a: NicAssignment| -> f64 {
-        let mut chip_rate = pcie_to_nic_gbps(spec.kind) * RDMA_EFFICIENCY;
+        let mut chip_rate = spec.pcie_to_nic_gbps * RDMA_EFFICIENCY;
         if a == NicAssignment::NonAffinity {
-            chip_rate *= cross_switch_share(spec.kind);
+            chip_rate *= spec.cross_switch_share;
         }
         // NIC capacity is shared by the chips concurrently mapped onto it
         // (the Table 3 workload drives all chips of the server at once).

@@ -1,0 +1,170 @@
+//! CLI-level plan workflow tests: `h2 search --emit-plan` →
+//! `h2 simulate --plan` must reproduce the in-process
+//! `SearchResult → simulate` path bit-for-bit, and `--config` must work
+//! uniformly across subcommands — including clusters made of chips that
+//! exist only in the config JSON.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use h2::auto::{search, SearchConfig};
+use h2::costmodel::H2_100B;
+use h2::hetero::{ChipKind, Cluster};
+use h2::plan::ExecutionPlan;
+use h2::sim::simulate_plan;
+
+fn h2_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_h2"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("h2_cli_plan_tests").join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawning h2");
+    assert!(
+        out.status.success(),
+        "h2 {:?} failed:\nstdout: {}\nstderr: {}",
+        cmd.get_args().collect::<Vec<_>>(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+/// The machine-readable last line `simulate` prints.
+fn parse_iteration_seconds(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("iteration_seconds "))
+        .unwrap_or_else(|| panic!("no iteration_seconds line in:\n{stdout}"))
+        .to_string()
+}
+
+#[test]
+fn search_emit_plan_then_simulate_matches_in_process_bit_for_bit() {
+    let dir = tmp_dir("parity");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+
+    run_ok(h2_bin().args([
+        "search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1", "--emit-plan", plan_path,
+    ]));
+    let stdout = run_ok(h2_bin().args(["simulate", "--plan", plan_path]));
+    let cli_iter = parse_iteration_seconds(&stdout);
+
+    // The same pipeline in-process, no file in between.
+    let cluster = Cluster::new("custom", vec![(ChipKind::A, 16), (ChipKind::B, 16)]);
+    let gbs = 1024 * 1024;
+    let cfg = SearchConfig::default();
+    let r = search(&H2_100B, &cluster, gbs, &cfg).unwrap();
+    let plan = r.into_plan(&H2_100B, &cluster, gbs, &cfg);
+    let in_process = format!("{:.17e}", simulate_plan(&plan).iteration_seconds);
+
+    assert_eq!(cli_iter, in_process, "plan file round-trip changed the simulation");
+
+    // The persisted plan deserializes to exactly the in-process plan.
+    let loaded = ExecutionPlan::load(plan_path).unwrap();
+    assert_eq!(loaded, plan);
+}
+
+const CUSTOM_CHIP_CONFIG: &str = r#"{
+    "chips": [{"name": "CliTest-Q1", "fp16_tflops": 250, "memory_gib": 96,
+               "chips_per_node": 8,
+               "intra_node": {"type": "uniform", "gbps": 250},
+               "nics_per_node": 8, "nic_gbps": 25, "mfu": 0.5}],
+    "cluster": {"name": "q1-lab", "groups": [{"chip": "CliTest-Q1", "chips": 16}]},
+    "gbs_tokens": 1048576
+}"#;
+
+#[test]
+fn custom_chip_cluster_is_searchable_and_simulatable_from_config_only() {
+    let dir = tmp_dir("custom_chip");
+    let cfg_path = dir.join("cfg.json");
+    std::fs::write(&cfg_path, CUSTOM_CHIP_CONFIG).unwrap();
+    let cfg_path = cfg_path.to_str().unwrap();
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+
+    // search reads the cluster (and the chip!) from the config alone.
+    let stdout = run_ok(h2_bin().args(["search", "--config", cfg_path, "--emit-plan", plan_path]));
+    assert!(stdout.contains("CliTest-Q1"), "search output should name the chip:\n{stdout}");
+
+    // The emitted plan is self-contained: simulate needs no --config.
+    let stdout = run_ok(h2_bin().args(["simulate", "--plan", plan_path]));
+    assert!(stdout.contains("TGS"), "simulate output:\n{stdout}");
+    parse_iteration_seconds(&stdout);
+
+    let text = std::fs::read_to_string(plan_path).unwrap();
+    assert!(text.contains("CliTest-Q1"), "plan must embed the custom chip:\n{text}");
+}
+
+#[test]
+fn config_flag_works_across_subcommands() {
+    let dir = tmp_dir("config_everywhere");
+    let cfg_path = dir.join("cfg.json");
+    std::fs::write(&cfg_path, CUSTOM_CHIP_CONFIG).unwrap();
+    let cfg_path = cfg_path.to_str().unwrap();
+
+    // profile resolves the config-declared chip by name...
+    let stdout = run_ok(h2_bin().args(["profile", "--config", cfg_path, "--chip", "CliTest-Q1"]));
+    assert!(stdout.contains("CliTest-Q1"), "profile output:\n{stdout}");
+    // ...and lists it alongside the built-ins without --chip.
+    let stdout = run_ok(h2_bin().args(["profile", "--config", cfg_path]));
+    assert!(stdout.contains("CliTest-Q1") && stdout.contains("Chip-A"));
+
+    // simulate takes its cluster from the config.
+    let stdout = run_ok(h2_bin().args(["simulate", "--config", cfg_path]));
+    assert!(stdout.contains("q1-lab"), "simulate output:\n{stdout}");
+
+    // comm-bench accepts the same flag (chips register, sweep unaffected).
+    let stdout =
+        run_ok(h2_bin().args(["comm-bench", "--config", cfg_path, "--max-shift", "10"]));
+    assert!(stdout.contains("TCP/DDR"));
+
+    // A missing config file fails loudly everywhere.
+    for sub in ["search", "simulate", "profile", "comm-bench", "report"] {
+        let out = h2_bin().args([sub, "--config", "/nonexistent/h2.json"]).output().unwrap();
+        assert!(!out.status.success(), "{sub} should fail on a missing config");
+    }
+}
+
+#[test]
+fn simulate_plan_flag_overrides_still_apply() {
+    let dir = tmp_dir("overrides");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+    run_ok(h2_bin().args([
+        "search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1", "--emit-plan", plan_path,
+    ]));
+    let ddr = parse_iteration_seconds(&run_ok(h2_bin().args(["simulate", "--plan", plan_path])));
+    let tcp = parse_iteration_seconds(&run_ok(h2_bin().args([
+        "simulate", "--plan", plan_path, "--comm", "tcp", "--no-overlap",
+    ])));
+    let ddr: f64 = ddr.parse().unwrap();
+    let tcp: f64 = tcp.parse().unwrap();
+    assert!(tcp > ddr, "tcp {tcp} should be slower than ddr {ddr}");
+}
+
+#[test]
+fn invalid_plan_file_is_rejected_with_structured_errors() {
+    let dir = tmp_dir("invalid");
+    let plan_path = dir.join("plan.json");
+    let plan_path_s = plan_path.to_str().unwrap();
+    run_ok(h2_bin().args([
+        "search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1", "--emit-plan", plan_path_s,
+    ]));
+    // Corrupt the layer assignment so validation must fire.
+    let text = std::fs::read_to_string(&plan_path).unwrap();
+    let mut plan = ExecutionPlan::from_json_str(&text).unwrap();
+    plan.strategy.plans[0].layers += 1;
+    std::fs::write(&plan_path, plan.to_json_string()).unwrap();
+
+    let out = h2_bin().args(["simulate", "--plan", plan_path_s]).output().unwrap();
+    assert!(!out.status.success(), "corrupted plan must be rejected");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("layers"), "error should mention layers:\n{stderr}");
+}

@@ -1,0 +1,179 @@
+//! Property test: `ExecutionPlan::from_json(plan.to_json())` is the
+//! identity over randomized plans — arbitrary models, clusters (including
+//! a runtime-registered custom chip), strategies, communication options and
+//! train sections. Serialization must be lossless even for plans that
+//! would fail validation, so plans are assembled directly rather than
+//! through the builder.
+
+use h2::comm::CommMode;
+use h2::coordinator::StagePlan;
+use h2::costmodel::{GroupPlan, ModelShape, Strategy};
+use h2::hetero::{register_custom, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
+use h2::plan::{ExecutionPlan, PlanBuilder, PrecisionPolicy, TrainSpec, PLAN_VERSION};
+use h2::sim::ReshardStrategy;
+use h2::topology::NicAssignment;
+use h2::util::prop;
+use h2::util::rng::Rng;
+
+fn random_model(rng: &mut Rng) -> ModelShape {
+    let n_heads = 1 << rng.usize(2, 7);
+    let head_dim = 1 << rng.usize(5, 8);
+    ModelShape {
+        n_layers: rng.usize(1, 129),
+        hidden: n_heads * head_dim,
+        n_heads,
+        n_kv_heads: 1 << rng.usize(0, 4),
+        intermediate: rng.usize(1024, 40_000),
+        vocab: rng.usize(1000, 100_000),
+        seq_len: 1 << rng.usize(8, 14),
+    }
+}
+
+fn random_link(rng: &mut Rng) -> IntraNodeLink {
+    match rng.usize(0, 3) {
+        0 => IntraNodeLink::Uniform { gbps: rng.f64() * 500.0 + 1.0 },
+        1 => IntraNodeLink::NumaSplit {
+            local_gbps: rng.f64() * 300.0 + 1.0,
+            cross_gbps: rng.f64() * 100.0 + 1.0,
+            island: 1 << rng.usize(1, 4),
+        },
+        _ => IntraNodeLink::PcieSwitch {
+            local_gbps: rng.f64() * 100.0 + 1.0,
+            cross_gbps: rng.f64() * 50.0 + 1.0,
+            group: 1 << rng.usize(1, 4),
+        },
+    }
+}
+
+fn random_custom_kind(rng: &mut Rng) -> ChipKind {
+    let mut def = CustomChipDef::new("PropRT-X");
+    def.fp16_tflops = rng.f64() * 900.0 + 10.0;
+    def.memory_gib = rng.f64() * 120.0 + 8.0;
+    def.chips_per_node = 1 << rng.usize(0, 5);
+    def.intra_node = random_link(rng);
+    def.nics_per_node = rng.usize(1, 9);
+    def.nic_gbps = rng.f64() * 40.0 + 1.0;
+    def.mfu = rng.f64() * 0.6 + 0.2;
+    def.op_noise = rng.f64() * 0.02;
+    def.pcie_to_nic_gbps = rng.f64() * 20.0 + 1.0;
+    def.cross_switch_share = rng.f64() * 0.5 + 0.3;
+    register_custom(&def).unwrap()
+}
+
+fn random_groups(rng: &mut Rng, custom: ChipKind) -> Vec<ChipGroup> {
+    let n = rng.usize(1, 4);
+    (0..n)
+        .map(|_| {
+            let kind = match rng.usize(0, 6) {
+                0 => ChipKind::A,
+                1 => ChipKind::B,
+                2 => ChipKind::C,
+                3 => ChipKind::D,
+                4 => ChipKind::A100,
+                _ => custom,
+            };
+            let node = h2::hetero::spec(kind).chips_per_node;
+            ChipGroup::try_new(kind, node * rng.usize(1, 9)).unwrap()
+        })
+        .collect()
+}
+
+fn random_strategy(rng: &mut Rng, n_groups: usize) -> Strategy {
+    Strategy {
+        s_dp: rng.usize(1, 65),
+        micro_batches: rng.usize(1, 1025),
+        plans: (0..n_groups)
+            .map(|_| GroupPlan {
+                s_pp: rng.usize(1, 65),
+                s_tp: 1 << rng.usize(0, 5),
+                layers: rng.usize(1, 129),
+                recompute: rng.f64() < 0.5,
+            })
+            .collect(),
+    }
+}
+
+fn random_plan(rng: &mut Rng) -> ExecutionPlan {
+    let custom = random_custom_kind(rng);
+    let groups = random_groups(rng, custom);
+    let strategy = random_strategy(rng, groups.len());
+    let comms = [CommMode::TcpCpu, CommMode::RdmaCpu, CommMode::DeviceDirect];
+    let reshards = [
+        ReshardStrategy::NaiveP2p,
+        ReshardStrategy::Broadcast,
+        ReshardStrategy::SendRecvAllGather,
+    ];
+    let train = (rng.f64() < 0.5).then(|| TrainSpec {
+        model: format!("model_{}", rng.usize(0, 100)),
+        stages: vec![
+            StagePlan { prefix: "first_l2".into(), chip: *rng.choose(&[ChipKind::A, custom]) },
+            StagePlan { prefix: "last_l2".into(), chip: *rng.choose(&[ChipKind::B, custom]) },
+        ],
+        dp: rng.usize(1, 9),
+        micro_batches: rng.usize(1, 17),
+        steps: rng.usize(1, 1000),
+        lr: rng.f32(),
+        seed: rng.next_u64(),
+        log_every: rng.usize(0, 100),
+    });
+    ExecutionPlan {
+        version: PLAN_VERSION,
+        name: format!("prop-{}", rng.usize(0, 1_000_000)),
+        model: random_model(rng),
+        cluster: Cluster { name: "prop-cluster".into(), groups: groups.clone() },
+        stage_groups: groups,
+        strategy,
+        gbs_tokens: rng.usize(1, 1 << 24),
+        micro_tokens: rng.usize(1, 1 << 14),
+        alpha: if rng.f64() < 0.5 { 1.0 } else { rng.f64() },
+        comm: *rng.choose(&comms),
+        reshard: *rng.choose(&reshards),
+        nic_assignment: if rng.f64() < 0.5 {
+            NicAssignment::Affinity
+        } else {
+            NicAssignment::NonAffinity
+        },
+        fine_overlap: rng.f64() < 0.5,
+        precision: PrecisionPolicy { perturb: rng.f64() < 0.5, mre_threshold: rng.f64() * 0.1 },
+        train,
+    }
+}
+
+#[test]
+fn from_json_to_json_is_identity() {
+    prop::check(300, |rng: &mut Rng| {
+        let plan = random_plan(rng);
+        let value = plan.to_json();
+        let back = ExecutionPlan::from_json(&value)
+            .map_err(|e| format!("from_json failed: {e:#}"))?;
+        prop::assert_prop(back == plan, format!("round-trip drift:\n{plan:?}\nvs\n{back:?}"))?;
+        // And through the textual form (what plan files actually hold).
+        let back2 = ExecutionPlan::from_json_str(&plan.to_json_string())
+            .map_err(|e| format!("from_json_str failed: {e:#}"))?;
+        prop::assert_prop(back2 == plan, "textual round-trip drift")
+    });
+}
+
+#[test]
+fn valid_plans_stay_valid_across_roundtrip() {
+    // Builder-validated plans must still validate after save/load.
+    let exp = h2::hetero::homogeneous_baseline(ChipKind::B);
+    let plan = PlanBuilder::new("rt-valid")
+        .cluster(exp.cluster)
+        .strategy(Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
+        })
+        .gbs_tokens(exp.gbs_tokens)
+        .build()
+        .unwrap();
+    let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+    assert!(back.validate().is_ok());
+    assert_eq!(back, plan);
+    // The deserialized plan drives the simulator to the same result.
+    assert_eq!(
+        plan.simulate().iteration_seconds,
+        back.simulate().iteration_seconds
+    );
+}
