@@ -6,7 +6,7 @@
 use h2::auto::{search, SearchConfig};
 use h2::comm::collectives::ring_allreduce;
 use h2::comm::fabric;
-use h2::costmodel::{GroupPlan, Strategy, H2_100B};
+use h2::costmodel::{GroupPlan, Schedule, Strategy, H2_100B};
 use h2::hetero::{experiment, homogeneous_baseline, ChipKind};
 use h2::sim::{simulate_iteration, SimOptions};
 use h2::util::bench::Bench;
@@ -20,12 +20,26 @@ fn main() {
     // Simulator: the Fig 11 inner loop (one full 1F1B iteration at scale).
     let exp = homogeneous_baseline(ChipKind::A);
     let groups = exp.cluster.groups_by_memory_desc();
-    let strategy = Strategy {
+    let mut strategy = Strategy {
         s_dp: 4,
         micro_batches: 128,
+        schedule: Schedule::OneF1B,
         plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
     };
     b.run("sim: 16-stage x 128-micro 1F1B", || {
+        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
+        std::hint::black_box(r.iteration_seconds);
+    });
+
+    // The schedule-aware issue orders (interleaved chunking, zero-bubble
+    // greedy fill) are costlier inner loops — track them next to 1F1B.
+    strategy.schedule = Schedule::Interleaved { virtual_stages: 2 };
+    b.run("sim: 16-stage x 128-micro interleaved:2", || {
+        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
+        std::hint::black_box(r.iteration_seconds);
+    });
+    strategy.schedule = Schedule::ZeroBubbleV;
+    b.run("sim: 16-stage x 128-micro zero-bubble", || {
         let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
         std::hint::black_box(r.iteration_seconds);
     });

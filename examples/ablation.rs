@@ -1,12 +1,15 @@
 //! Table 9 ablation driver: quantify each H2 component's contribution on
-//! the Exp-C-1 configuration (and optionally any other experiment).
+//! the Exp-C-1 configuration, plus the pipeline-schedule axis (1F1B vs
+//! interleaved vs zero-bubble) the paper's single-α model could not
+//! measure — each schedule here runs a real issue order in the simulator
+//! (see the `Schedule` API in `h2::costmodel`).
 //!
 //! ```bash
 //! cargo run --release --example ablation
 //! ```
 
 use anyhow::Result;
-use h2::report::table9_ablation;
+use h2::report::{schedule_axis, table9_ablation};
 use h2::util::table::Table;
 
 fn main() -> Result<()> {
@@ -24,5 +27,17 @@ fn main() -> Result<()> {
     println!("\nreading: >100% = slower than the full H2 system. The paper's");
     println!("dominant factor is HeteroPP's non-uniform sharding (126.4%),");
     println!("followed by DDR (110.1%), SR&AG (104.8%) and overlap (101.8%).");
+
+    let axis = schedule_axis("exp-c-1")?;
+    let mut t = Table::new(&["schedule", "iteration", "TGS"])
+        .with_title("Schedule axis — HeteroAuto pinned per schedule on Exp-C-1");
+    for r in &axis {
+        t.row(vec![
+            r.schedule.to_string(),
+            r.iteration_seconds.map(|s| format!("{s:.3}s")).unwrap_or("infeasible".into()),
+            r.tgs.map(|x| format!("{x:.1}")).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
     Ok(())
 }

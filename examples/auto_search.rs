@@ -1,6 +1,8 @@
 //! HeteroAuto walkthrough: search strategies for every Table 7 experiment
-//! and print the chosen plan, iteration estimate, TGS, and search cost —
-//! the `search` subcommand in batch form.
+//! — across 1F1B / interleaved / zero-bubble pipeline schedules, in
+//! parallel with branch-and-bound pruning — and print the chosen plan,
+//! schedule, iteration estimate, TGS, and search cost: the `search`
+//! subcommand in batch form.
 //!
 //! ```bash
 //! cargo run --release --example auto_search
@@ -33,8 +35,8 @@ fn main() -> Result<()> {
             ]);
         }
         t.print();
-        println!("s_dp {}, {} micro-batches, est. iteration {}, TGS {:.1}",
-                 r.strategy.s_dp, r.strategy.micro_batches,
+        println!("s_dp {}, {} micro-batches, schedule {}, est. iteration {}, TGS {:.1}",
+                 r.strategy.s_dp, r.strategy.micro_batches, r.strategy.schedule,
                  fmt_duration(r.eval.iteration_seconds),
                  tgs(&exp.cluster, exp.gbs_tokens, r.eval.iteration_seconds));
     }

@@ -2,6 +2,11 @@
 //! model on the synthetic corpus for a handful of steps — the smallest
 //! possible tour of the AOT → PJRT → rust loop.
 //!
+//! For the search → plan → simulate loop (including the `Schedule` API:
+//! 1F1B / interleaved / zero-bubble pipelines), see
+//! `examples/auto_search.rs`, `examples/ablation.rs`, and the compiled
+//! doctests in `rust/src/lib.rs`.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```

@@ -1,4 +1,10 @@
 //! HeteroAuto: automatic parallel-strategy search for HeteroPP (§4.3).
+//!
+//! Searches data parallelism, per-group tensor/pipeline shapes, layer
+//! sharding, recomputation, *and* the pipeline schedule
+//! ([`crate::costmodel::Schedule`]); the outer candidate loop runs on
+//! worker threads with branch-and-bound pruning and a deterministic
+//! reduction ([`SearchConfig::parallel`]).
 
 pub mod search;
 pub mod sharding;

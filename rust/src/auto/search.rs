@@ -1,57 +1,96 @@
-//! HeteroAuto DFS strategy search (§4.3.3).
+//! HeteroAuto DFS strategy search (§4.3.3), schedule-aware and parallel.
 //!
 //! Step 1 — depth-first search over the parallelism space: data-parallel
 //! candidates dividing the global batch; per chip type, tensor-parallel
 //! degrees in powers of two up to `TP_MAX_i`; pipeline degree from
-//! `N_i = s_pp,i · s_tp,i · s_dp`. Types are visited in descending memory
-//! order (the HeteroPP stage order).
+//! `N_i = s_pp,i · s_tp,i · s_dp`; and the pipeline [`Schedule`] as an
+//! extra search dimension. Types are visited in descending memory order
+//! (the HeteroPP stage order).
 //!
 //! Step 2 — optimal layer sharding per configuration (see [`super::sharding`]).
 //!
 //! Step 3 — cost estimation with the §4.3.2 model; the feasible minimum wins.
+//!
+//! The outer (s_dp × schedule) candidate loop runs on scoped worker
+//! threads (the offline vendor set has no rayon; `std::thread::scope` plays
+//! its role) with incumbent-cost branch-and-bound pruning: a shared atomic
+//! incumbent tracks the best feasible iteration time, and any DFS subtree
+//! whose compute lower bound already exceeds it is cut. Pruning is
+//! *strict* (only subtrees provably worse than the incumbent are cut) and
+//! the final reduction takes the minimum in deterministic candidate order
+//! (s_dp ascending, schedules in configured order, DFS order within), so
+//! the parallel search returns bit-identically the same strategy as the
+//! sequential one regardless of thread timing.
 //!
 //! The **two-stage** refinement fixes `s_dp` from a coarse pass, then splits
 //! each homogeneous group into pseudo-heterogeneous subgroups (128 chips in
 //! the paper) re-searched with the monotone-TP pruning rule
 //! (`s_tp,a ≥ s_tp,b` for earlier subgroups of the same type).
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::costmodel::{evaluate, Evaluation, ModelShape, Strategy};
+use crate::costmodel::{evaluate, profile_layer, Evaluation, ModelShape, Schedule, Strategy};
 use crate::hetero::{ChipGroup, Cluster};
 
-use super::sharding::{shard_layers, GroupShape};
+use super::sharding::shard_layers;
+pub use super::sharding::GroupShape;
 
 /// Search configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SearchConfig {
-    /// Pipeline bubble coefficient (1.0 = 1F1B, 0.0 = ZB-V).
-    pub alpha: f64,
+    /// Pipeline schedules to search over (default: 1F1B, interleaved:2 and
+    /// the zero-bubble schedule). Pin a single entry to fix the schedule.
+    pub schedules: Vec<Schedule>,
     /// Subgroup size for the two-stage refinement (paper: 128 chips).
     pub group_split: usize,
     /// Run the two-stage refinement.
     pub two_stage: bool,
     /// Cap on candidate data-parallel degrees (0 = no cap).
     pub max_dp: usize,
+    /// Run the outer (s_dp × schedule) loop on worker threads. The result
+    /// is bit-identical to the sequential path either way.
+    pub parallel: bool,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
-        SearchConfig { alpha: 1.0, group_split: 128, two_stage: true, max_dp: 0 }
+        SearchConfig {
+            schedules: Schedule::SEARCH_SPACE.to_vec(),
+            group_split: 128,
+            two_stage: true,
+            max_dp: 0,
+            parallel: true,
+        }
+    }
+}
+
+impl SearchConfig {
+    /// A config pinned to one schedule (other knobs at their defaults) —
+    /// what `--schedule` lowers to and what the paper-table drivers use to
+    /// stay on the paper's 1F1B baseline.
+    pub fn pinned(schedule: Schedule) -> SearchConfig {
+        SearchConfig { schedules: vec![schedule], ..SearchConfig::default() }
     }
 }
 
 /// Result of a HeteroAuto search.
 #[derive(Clone, Debug)]
 pub struct SearchResult {
+    /// The winning strategy (its `schedule` field records the winning
+    /// pipeline schedule).
     pub strategy: Strategy,
+    /// Cost-model evaluation of the winning strategy.
     pub eval: Evaluation,
     /// Groups (memory-descending) matching strategy.plans — includes the
     /// pseudo-subgroups if the two-stage refinement produced them.
     pub groups: Vec<ChipGroup>,
+    /// Leaf configurations evaluated. With branch-and-bound pruning this
+    /// varies with thread timing; the winning strategy does not.
     pub candidates_explored: usize,
+    /// Wall-clock search time.
     pub elapsed_seconds: f64,
 }
 
@@ -60,13 +99,13 @@ impl SearchResult {
     /// [`crate::plan::ExecutionPlan`] — the HeteroAuto → HeteroPP handoff.
     /// Communication options take the plan defaults (device-direct RDMA,
     /// SR&AG, NIC affinity, overlap on); callers adjust the returned plan's
-    /// fields for ablations.
+    /// fields for ablations. The winning schedule travels inside the
+    /// strategy, so the search config is not needed here.
     pub fn to_plan(
         &self,
         model: &ModelShape,
         cluster: &Cluster,
         gbs_tokens: usize,
-        cfg: &SearchConfig,
     ) -> crate::plan::ExecutionPlan {
         // The search floors the batch to whole sequences; the plan records
         // the tokens actually scheduled so its TGS matches the modeled work.
@@ -78,7 +117,6 @@ impl SearchResult {
             .strategy(self.strategy.clone())
             .gbs_tokens(whole)
             .micro_tokens(model.seq_len)
-            .alpha(cfg.alpha)
             .build()
             .expect("HeteroAuto produced a structurally invalid strategy")
     }
@@ -90,9 +128,8 @@ impl SearchResult {
         model: &ModelShape,
         cluster: &Cluster,
         gbs_tokens: usize,
-        cfg: &SearchConfig,
     ) -> crate::plan::ExecutionPlan {
-        self.to_plan(model, cluster, gbs_tokens, cfg)
+        self.to_plan(model, cluster, gbs_tokens)
     }
 }
 
@@ -140,36 +177,106 @@ fn dp_candidates(sequences: usize, groups: &[ChipGroup], max_dp: usize) -> Vec<u
     v
 }
 
+/// Shared branch-and-bound incumbent: the best feasible iteration time
+/// seen by any worker, as f64 bits in an atomic (all values are positive
+/// finite, so float order and the CAS loop agree).
+struct Incumbent(AtomicU64);
+
+impl Incumbent {
+    fn new(seed: f64) -> Incumbent {
+        Incumbent(AtomicU64::new(seed.to_bits()))
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    fn observe(&self, t: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while t < f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                t.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// One (tp, s_pp) option for a group at a fixed s_dp, with its per-layer
+/// fwd+bwd time and its best-case `s_pp/t` packing ratio contribution.
+#[derive(Clone, Copy, Debug)]
+struct TpOption {
+    s_tp: usize,
+    s_pp: usize,
+    t_layer: f64,
+}
+
 struct DfsCtx<'a> {
     model: &'a ModelShape,
     groups: &'a [ChipGroup],
+    /// Per group: the usable (tp, s_pp, t_layer) options at this s_dp.
+    options: &'a [Vec<TpOption>],
+    /// Per group: suffix sums of the maximal `s_pp/t_layer` ratio over the
+    /// group's options — the optimistic packing capacity of the not-yet
+    /// assigned groups, used in the compute lower bound.
+    ratio_suffix: &'a [f64],
     s_dp: usize,
     micro_batches: usize,
     micro_tokens: usize,
-    alpha: f64,
+    schedule: Schedule,
     monotone_tp: bool,
+    incumbent: &'a Incumbent,
     explored: usize,
     best: Option<(f64, Strategy, Evaluation)>,
 }
 
 impl<'a> DfsCtx<'a> {
-    fn dfs(&mut self, idx: usize, shapes: &mut Vec<GroupShape>) {
+    /// Lower bound on any completion of the current partial assignment:
+    /// every layer must run somewhere, so the bottleneck stage computes at
+    /// least `L / Σ_g (s_pp_g / t_g)` per microbatch — assigned groups
+    /// contribute their actual ratio, open groups their best case — and
+    /// the iteration costs at least `b ×` that, whatever the schedule
+    /// (bubble, update, recompute and offload terms only add).
+    fn lower_bound(&self, idx: usize, ratio_sum: f64) -> f64 {
+        let denom = ratio_sum + self.ratio_suffix[idx];
+        if denom <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.micro_batches as f64 * self.model.n_layers as f64 / denom
+    }
+
+    fn dfs(&mut self, idx: usize, shapes: &mut Vec<GroupShape>, ratio_sum: f64) {
+        if self.lower_bound(idx, ratio_sum) > self.incumbent.get() {
+            return; // provably worse than the incumbent — prune
+        }
         if idx == self.groups.len() {
             self.explored += 1;
             let sharding = shard_layers(
                 self.model, self.groups, shapes, self.s_dp,
-                self.micro_batches, self.micro_tokens, self.alpha,
+                self.micro_batches, self.micro_tokens, self.schedule,
             );
             if !sharding.feasible {
+                return;
+            }
+            // Interleaving chunks every stage's layers: reject allocations
+            // the virtual-stage count does not divide.
+            let v = self.schedule.virtual_stages();
+            if v > 1 && sharding.plans.iter().any(|p| p.layers_per_stage() % v != 0) {
                 return;
             }
             let strategy = Strategy {
                 s_dp: self.s_dp,
                 micro_batches: self.micro_batches,
+                schedule: self.schedule,
                 plans: sharding.plans,
             };
             let grefs: Vec<&ChipGroup> = self.groups.iter().collect();
-            let eval = evaluate(self.model, &grefs, &strategy, self.micro_tokens, self.alpha);
+            let eval = evaluate(self.model, &grefs, &strategy, self.micro_tokens);
             if !eval.feasible {
                 return;
             }
@@ -177,58 +284,184 @@ impl<'a> DfsCtx<'a> {
             if self.best.as_ref().map(|(bt, _, _)| t < *bt).unwrap_or(true) {
                 self.best = Some((t, strategy, eval));
             }
+            self.incumbent.observe(t);
             return;
         }
-        let g = &self.groups[idx];
-        for tp in tp_candidates(g.n_chips, g.spec.tp_max()) {
-            if g.n_chips % (tp * self.s_dp) != 0 {
-                continue;
-            }
-            let s_pp = g.n_chips / (tp * self.s_dp);
-            if s_pp == 0 {
-                continue;
-            }
+        for opt in &self.options[idx] {
             // Monotone-TP pruning within a chip type (two-stage constraint).
             if self.monotone_tp && idx > 0 {
                 let prev = &self.groups[idx - 1];
-                if prev.spec.kind == g.spec.kind && shapes[idx - 1].s_tp < tp {
+                if prev.spec.kind == self.groups[idx].spec.kind
+                    && shapes[idx - 1].s_tp < opt.s_tp
+                {
                     continue;
                 }
             }
-            shapes.push(GroupShape { s_tp: tp, s_pp });
-            self.dfs(idx + 1, shapes);
+            shapes.push(GroupShape { s_tp: opt.s_tp, s_pp: opt.s_pp });
+            self.dfs(idx + 1, shapes, ratio_sum + opt.s_pp as f64 / opt.t_layer);
             shapes.pop();
         }
     }
 }
 
-fn run_dfs(
+/// One outer-loop candidate: a data-parallel degree and a schedule.
+type Job = (usize, Schedule);
+
+/// Schedule-independent search tables for one s_dp: per-group TP options
+/// plus the optimistic ratio suffix for the branch-and-bound lower bound —
+/// built once per distinct s_dp and shared across that dp's schedule jobs.
+struct DpTable {
+    s_dp: usize,
+    options: Vec<Vec<TpOption>>,
+    ratio_suffix: Vec<f64>,
+}
+
+fn dp_table(model: &ModelShape, groups: &[ChipGroup], s_dp: usize) -> DpTable {
+    let micro_tokens = model.seq_len; // paper: micro batch size pinned to 1
+    let options: Vec<Vec<TpOption>> = groups
+        .iter()
+        .map(|g| {
+            tp_candidates(g.n_chips, g.spec.tp_max())
+                .into_iter()
+                .filter(|tp| g.n_chips % (tp * s_dp) == 0 && g.n_chips / (tp * s_dp) >= 1)
+                .map(|tp| {
+                    let p = profile_layer(&g.spec, model, tp, micro_tokens, s_dp);
+                    TpOption {
+                        s_tp: tp,
+                        s_pp: g.n_chips / (tp * s_dp),
+                        t_layer: p.t_fwd + p.t_bwd,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let mut ratio_suffix = vec![0.0f64; groups.len() + 1];
+    for idx in (0..groups.len()).rev() {
+        let best_ratio = options[idx]
+            .iter()
+            .map(|o| o.s_pp as f64 / o.t_layer)
+            .fold(0.0f64, f64::max);
+        ratio_suffix[idx] = ratio_suffix[idx + 1] + best_ratio;
+    }
+    DpTable { s_dp, options, ratio_suffix }
+}
+
+/// Run the DFS for one (s_dp, schedule) job over its dp's shared tables.
+fn run_one_job(
     model: &ModelShape,
     groups: &[ChipGroup],
     sequences: usize,
-    dp_choices: &[usize],
-    cfg: &SearchConfig,
+    job: Job,
+    table: &DpTable,
     monotone_tp: bool,
+    incumbent: &Incumbent,
 ) -> (usize, Option<(f64, Strategy, Evaluation)>) {
+    let (s_dp, schedule) = job;
+    debug_assert_eq!(s_dp, table.s_dp);
+    let mut ctx = DfsCtx {
+        model,
+        groups,
+        options: &table.options,
+        ratio_suffix: &table.ratio_suffix,
+        s_dp,
+        micro_batches: sequences / s_dp,
+        micro_tokens: model.seq_len,
+        schedule,
+        monotone_tp,
+        incumbent,
+        explored: 0,
+        best: None,
+    };
+    let mut shapes = Vec::with_capacity(groups.len());
+    ctx.dfs(0, &mut shapes, 0.0);
+    (ctx.explored, ctx.best)
+}
+
+/// Run every (s_dp × schedule) job — on scoped worker threads when
+/// `parallel` — and reduce to the minimum in deterministic job order.
+///
+/// `seed_incumbent` primes the branch-and-bound bound (`f64::INFINITY` for
+/// a fresh search; the coarse best for the two-stage refinement, whose
+/// results are only accepted when strictly better anyway, so seeding
+/// cannot change the outcome — only skip provably useless work).
+fn run_jobs(
+    model: &ModelShape,
+    groups: &[ChipGroup],
+    sequences: usize,
+    jobs: &[Job],
+    monotone_tp: bool,
+    parallel: bool,
+    seed_incumbent: f64,
+) -> (usize, Option<(f64, Strategy, Evaluation)>) {
+    let incumbent = Incumbent::new(seed_incumbent);
+    // The TP-option tables are schedule-independent: one per distinct dp,
+    // shared by every schedule job at that dp.
+    let mut tables: Vec<DpTable> = Vec::new();
+    for &(dp, _) in jobs {
+        if !tables.iter().any(|t| t.s_dp == dp) {
+            tables.push(dp_table(model, groups, dp));
+        }
+    }
+    fn table_for(tables: &[DpTable], dp: usize) -> &DpTable {
+        tables.iter().find(|t| t.s_dp == dp).expect("table built for every job dp")
+    }
+    let workers = if parallel {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(jobs.len())
+    } else {
+        1
+    };
+
+    let mut slots: Vec<Option<(usize, Option<(f64, Strategy, Evaluation)>)>> =
+        vec![None; jobs.len()];
+    if workers <= 1 {
+        for (i, job) in jobs.iter().enumerate() {
+            slots[i] = Some(run_one_job(model, groups, sequences, *job,
+                                        table_for(&tables, job.0), monotone_tp, &incumbent));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let finished = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let next = &next;
+                let incumbent = &incumbent;
+                let tables = &tables;
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        out.push((
+                            i,
+                            run_one_job(model, groups, sequences, jobs[i],
+                                        table_for(tables, jobs[i].0), monotone_tp,
+                                        incumbent),
+                        ));
+                    }
+                    out
+                }));
+            }
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("search worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for (i, result) in finished {
+            slots[i] = Some(result);
+        }
+    }
+
+    // Deterministic reduction: min by cost with ties broken by job order
+    // (s_dp ascending, schedules in configured order) — identical to the
+    // sequential scan whatever the thread interleaving was.
     let mut explored = 0;
     let mut best: Option<(f64, Strategy, Evaluation)> = None;
-    for &dp in dp_choices {
-        let micro_batches = sequences / dp;
-        let mut ctx = DfsCtx {
-            model,
-            groups,
-            s_dp: dp,
-            micro_batches,
-            micro_tokens: model.seq_len, // paper: micro batch size pinned to 1
-            alpha: cfg.alpha,
-            monotone_tp,
-            explored: 0,
-            best: None,
-        };
-        let mut shapes = Vec::with_capacity(groups.len());
-        ctx.dfs(0, &mut shapes);
-        explored += ctx.explored;
-        if let Some((t, s, e)) = ctx.best {
+    for slot in slots {
+        let (n, job_best) = slot.expect("every job produces a result");
+        explored += n;
+        if let Some((t, s, e)) = job_best {
             if best.as_ref().map(|(bt, _, _)| t < *bt).unwrap_or(true) {
                 best = Some((t, s, e));
             }
@@ -271,6 +504,9 @@ pub fn search(
     if sequences == 0 {
         bail!("global batch smaller than one sequence");
     }
+    if cfg.schedules.is_empty() {
+        bail!("search config has no pipeline schedules to explore");
+    }
     // Memory-descending group order = HeteroPP stage order (Observation #4).
     let groups: Vec<ChipGroup> = cluster
         .groups_by_memory_desc()
@@ -282,17 +518,21 @@ pub fn search(
     if dp_choices.is_empty() {
         bail!("no feasible data-parallel degree for cluster `{}`", cluster.name);
     }
+    let jobs: Vec<Job> = dp_choices
+        .iter()
+        .flat_map(|&dp| cfg.schedules.iter().map(move |&s| (dp, s)))
+        .collect();
 
     // Stage 1: coarse search, one group per chip type.
-    let (mut explored, coarse) = run_dfs(model, &groups, sequences, &dp_choices, cfg, false);
+    let (mut explored, coarse) =
+        run_jobs(model, &groups, sequences, &jobs, false, cfg.parallel, f64::INFINITY);
     let coarse = match coarse {
         Some(c) => c,
         None => bail!("no feasible strategy found for `{}`", cluster.name),
     };
 
     if !cfg.two_stage {
-        let (t, strategy, eval) = coarse;
-        let _ = t;
+        let (_, strategy, eval) = coarse;
         return Ok(SearchResult {
             strategy,
             eval,
@@ -303,10 +543,13 @@ pub fn search(
     }
 
     // Stage 2: fix s_dp, split homogeneous groups into pseudo-heterogeneous
-    // subgroups, and re-search with monotone-TP pruning.
-    let fixed_dp = [coarse.1.s_dp];
+    // subgroups, and re-search (still over every schedule) with monotone-TP
+    // pruning.
+    let fine_jobs: Vec<Job> =
+        cfg.schedules.iter().map(|&s| (coarse.1.s_dp, s)).collect();
     let fine_groups = split_groups(&groups, cfg.group_split);
-    let (explored2, fine) = run_dfs(model, &fine_groups, sequences, &fixed_dp, cfg, true);
+    let (explored2, fine) =
+        run_jobs(model, &fine_groups, sequences, &fine_jobs, true, cfg.parallel, coarse.0);
     explored += explored2;
 
     // Keep whichever stage produced the better feasible strategy.
@@ -383,7 +626,7 @@ mod tests {
         let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).unwrap();
         let strategy = r.strategy.clone();
         let eval_iter = r.eval.iteration_seconds;
-        let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+        let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
         assert_eq!(plan.strategy, strategy);
         assert_eq!(plan.gbs_tokens, exp.gbs_tokens);
         assert!(plan.validate().is_ok());
@@ -422,6 +665,52 @@ mod tests {
             assert_eq!(g.n_chips, p.s_pp * p.s_tp * r.strategy.s_dp,
                        "group {} chip accounting", g.spec.kind);
         }
+    }
+
+    #[test]
+    fn parallel_search_matches_sequential_bit_for_bit() {
+        // The Table 8 fixture: the worker-thread path with shared-incumbent
+        // pruning must return the identical strategy and cost as the
+        // sequential scan.
+        let exp = experiment("exp-a-1").unwrap();
+        let par = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                         &SearchConfig { parallel: true, ..Default::default() }).unwrap();
+        let seq = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                         &SearchConfig { parallel: false, ..Default::default() }).unwrap();
+        assert_eq!(par.strategy, seq.strategy);
+        assert_eq!(par.eval.iteration_seconds, seq.eval.iteration_seconds);
+    }
+
+    #[test]
+    fn search_over_schedules_never_loses_to_any_pinned_schedule() {
+        // The full search min over schedules equals the min of the pinned
+        // searches — i.e. the schedule dimension is genuinely explored.
+        let exp = homogeneous_baseline(ChipKind::A);
+        let full = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                          &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
+        let mut pinned_best = f64::INFINITY;
+        for schedule in Schedule::SEARCH_SPACE {
+            let cfg = SearchConfig {
+                two_stage: false,
+                ..SearchConfig::pinned(schedule)
+            };
+            if let Ok(r) = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
+                pinned_best = pinned_best.min(r.eval.iteration_seconds);
+            }
+        }
+        assert!(pinned_best.is_finite());
+        assert_eq!(full.eval.iteration_seconds, pinned_best);
+    }
+
+    #[test]
+    fn zero_bubble_schedule_wins_on_the_homogeneous_fixture() {
+        // With identical chips and no memory cliff between schedules, the
+        // zero-bubble variant's missing bubble term must win the search.
+        let exp = homogeneous_baseline(ChipKind::A);
+        let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                       &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
+        assert_eq!(r.strategy.schedule, Schedule::ZeroBubbleV,
+                   "winner {:?}", r.strategy.schedule);
     }
 
     #[test]

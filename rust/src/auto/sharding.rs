@@ -12,24 +12,30 @@
 //!    cannot hold their activations (recompute is pure memory relief — it
 //!    never reduces time — so it is only switched on under pressure).
 
-use crate::costmodel::{evaluate, GroupPlan, ModelShape, Strategy};
+use crate::costmodel::{evaluate, GroupPlan, ModelShape, Schedule, Strategy};
 use crate::hetero::ChipGroup;
 
 /// Per-group immutable candidate: (s_tp, s_pp) already fixed by the DFS.
 #[derive(Clone, Copy, Debug)]
 pub struct GroupShape {
+    /// Tensor-parallel degree fixed by the DFS.
     pub s_tp: usize,
+    /// Pipeline-stage count fixed by the DFS.
     pub s_pp: usize,
 }
 
 /// Outcome of the sharding heuristic.
 #[derive(Clone, Debug)]
 pub struct Sharding {
+    /// Per-group layer allocation (positionally matched with the groups).
     pub plans: Vec<GroupPlan>,
+    /// Whether a memory-feasible allocation summing to the model was found.
     pub feasible: bool,
 }
 
-/// Compute the layer allocation for fixed (s_dp, shapes).
+/// Compute the layer allocation for fixed (s_dp, shapes) under `schedule`
+/// (whose bubble coefficient and activation residency shape both the cost
+/// evaluation and the memory-repair loop).
 pub fn shard_layers(
     model: &ModelShape,
     groups: &[ChipGroup],
@@ -37,7 +43,7 @@ pub fn shard_layers(
     s_dp: usize,
     micro_batches: usize,
     micro_tokens: usize,
-    alpha: f64,
+    schedule: Schedule,
 ) -> Sharding {
     use crate::costmodel::profile_layer;
 
@@ -138,9 +144,9 @@ pub fn shard_layers(
         .collect();
 
     for _round in 0..8 {
-        let strategy = Strategy { s_dp, micro_batches, plans: plans.clone() };
+        let strategy = Strategy { s_dp, micro_batches, schedule, plans: plans.clone() };
         let grefs: Vec<&ChipGroup> = groups.iter().collect();
-        let eval = evaluate(model, &grefs, &strategy, micro_tokens, alpha);
+        let eval = evaluate(model, &grefs, &strategy, micro_tokens);
         if eval.feasible {
             return Sharding { plans, feasible: true };
         }
@@ -211,7 +217,7 @@ mod tests {
     fn layers_sum_to_model_total() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
         assert_eq!(s.plans.iter().map(|p| p.layers).sum::<usize>(), 96);
     }
 
@@ -219,7 +225,7 @@ mod tests {
     fn faster_group_receives_more_layers() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
         // B is faster per layer than A, so B's stages should carry >= layers.
         assert!(s.plans[1].layers >= s.plans[0].layers,
                 "A={} B={}", s.plans[0].layers, s.plans[1].layers);
@@ -229,7 +235,7 @@ mod tests {
     fn uniform_within_group() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 12 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, 1.0);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
         for p in &s.plans {
             assert_eq!(p.layers % p.s_pp, 0, "layers uniform across a type's stages");
         }
@@ -240,7 +246,7 @@ mod tests {
         // Chip C with little memory must end up recomputing.
         let groups = vec![ChipGroup::new(ChipKind::C, 256)];
         let shapes = [GroupShape { s_tp: 4, s_pp: 32 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 2, 256, 4096, 1.0);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 2, 256, 4096, Schedule::OneF1B);
         assert!(s.feasible);
         assert!(s.plans[0].recompute);
     }

@@ -72,6 +72,7 @@ pub fn fabric(n: usize, latency: LatencyFn) -> Vec<Endpoint> {
 }
 
 impl Endpoint {
+    /// This endpoint's rank in the fabric.
     pub fn rank(&self) -> usize {
         self.rank
     }

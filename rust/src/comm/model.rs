@@ -20,12 +20,16 @@ use crate::topology::{flow_bandwidth_gbps, NicAssignment, RDMA_EFFICIENCY};
 /// Cross-chip communication strategy (Fig 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CommMode {
+    /// CPU-mediated TCP: staging copies + kernel network stack.
     TcpCpu,
+    /// CPU-mediated RDMA: staging copies, verbs on the wire.
     RdmaCpu,
+    /// Device-direct RDMA: the NIC DMAs straight from device memory.
     DeviceDirect,
 }
 
 impl CommMode {
+    /// Human-readable strategy name.
     pub fn name(self) -> &'static str {
         match self {
             CommMode::TcpCpu => "CPU-mediated TCP",
@@ -34,6 +38,7 @@ impl CommMode {
         }
     }
 
+    /// Parse a mode token (`tcp`, `rdma-cpu`/`gloo`, `ddr`/`rdma`).
     pub fn parse(s: &str) -> Option<CommMode> {
         match s.to_ascii_lowercase().as_str() {
             "tcp" => Some(CommMode::TcpCpu),

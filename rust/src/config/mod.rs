@@ -18,7 +18,8 @@
 //!   "cluster": { "name": "lab", "groups": [{"chip": "H9", "chips": 256},
 //!                                           {"chip": "B", "chips": 256}] },
 //!   "gbs_tokens": 2097152,
-//!   "search": { "alpha": 1.0, "group_split": 128, "two_stage": true },
+//!   "search": { "schedules": ["1f1b", "interleaved:2", "zbv"],
+//!               "group_split": 128, "two_stage": true },
 //!   "sim": { "comm": "ddr", "reshard": "srag", "nic_affinity": true,
 //!            "fine_overlap": true },
 //!   "train": {
@@ -36,6 +37,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::auto::SearchConfig;
 use crate::comm::CommMode;
 use crate::coordinator::{StagePlan, TrainConfig};
+use crate::costmodel::Schedule;
 use crate::hetero::{register_custom, Cluster, CustomChipDef};
 use crate::plan::{
     chip_def_from_json, parse_kind, parse_token, PlanBuilder, PrecisionPolicy, TrainSpec,
@@ -49,10 +51,15 @@ use crate::util::json::Value;
 pub struct Config {
     /// Custom chips declared by this config (already registered).
     pub chips: Vec<CustomChipDef>,
+    /// Cluster composition, if declared.
     pub cluster: Option<Cluster>,
+    /// Global batch size in tokens, if declared.
     pub gbs_tokens: Option<usize>,
+    /// HeteroAuto options, if declared.
     pub search: Option<SearchConfig>,
+    /// Simulation overrides, if declared.
     pub sim: Option<SimOverrides>,
+    /// Real-training job, if declared.
     pub train: Option<TrainConfig>,
 }
 
@@ -61,13 +68,18 @@ pub struct Config {
 /// plan never silently resets fields the section doesn't mention.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimOverrides {
+    /// Communication strategy override.
     pub comm: Option<CommMode>,
+    /// Resharding strategy override.
     pub reshard: Option<ReshardStrategy>,
+    /// NIC affinity on/off override.
     pub nic_affinity: Option<bool>,
+    /// Fine-grained overlap override.
     pub fine_overlap: Option<bool>,
 }
 
 impl SimOverrides {
+    /// Apply only the keys this override set actually carries.
     pub fn apply(&self, opts: &mut SimOptions) {
         if let Some(c) = self.comm {
             opts.comm = c;
@@ -97,12 +109,32 @@ fn parse_cluster(v: &Value) -> Result<Cluster> {
 
 fn parse_search(v: &Value) -> Result<SearchConfig> {
     let d = SearchConfig::default();
+    // Schedule selection, most specific key wins: `schedules` (list of
+    // tokens) > `schedule` (single token) > legacy `alpha` (mapped through
+    // `Schedule::from_alpha`) > the full default search space.
+    let schedules = if let Some(list) = v.opt("schedules") {
+        let mut out = Vec::new();
+        for s in list.arr()? {
+            out.push(parse_token(s, "schedules", Schedule::parse)?);
+        }
+        if out.is_empty() {
+            anyhow::bail!("`schedules` must name at least one schedule");
+        }
+        out
+    } else if let Some(tok) = v.opt("schedule") {
+        vec![parse_token(tok, "schedule", Schedule::parse)?]
+    } else if let Some(alpha) = v.opt("alpha") {
+        vec![Schedule::from_alpha(alpha.num()?)]
+    } else {
+        d.schedules.clone()
+    };
     Ok(SearchConfig {
-        alpha: v.opt("alpha").map(|x| x.num()).transpose()?.unwrap_or(d.alpha),
+        schedules,
         group_split: v.opt("group_split").map(|x| x.usize()).transpose()?
             .unwrap_or(d.group_split),
         two_stage: v.opt("two_stage").map(|x| x.bool()).transpose()?.unwrap_or(d.two_stage),
         max_dp: v.opt("max_dp").map(|x| x.usize()).transpose()?.unwrap_or(d.max_dp),
+        parallel: v.opt("parallel").map(|x| x.bool()).transpose()?.unwrap_or(d.parallel),
     })
 }
 
@@ -183,6 +215,7 @@ impl Config {
         })
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         Config::parse(&text).with_context(|| format!("parsing {path}"))
@@ -190,7 +223,7 @@ impl Config {
 
     /// Search options declared by the config, or the defaults.
     pub fn search_config(&self) -> SearchConfig {
-        self.search.unwrap_or_default()
+        self.search.clone().unwrap_or_default()
     }
 
     /// Simulation options: the defaults with the config's `sim` keys applied.
@@ -219,9 +252,10 @@ impl Config {
     }
 
     /// Lower the config into a [`PlanBuilder`]: cluster, global batch,
-    /// search alpha, simulation options, and the train section (run shape +
-    /// perturb flag) are applied; the caller supplies the strategy (usually
-    /// from `HeteroAuto`) and builds.
+    /// simulation options, and the train section (run shape + perturb
+    /// flag) are applied; when the search section pins exactly one
+    /// schedule, that schedule overrides the strategy's. The caller
+    /// supplies the strategy (usually from `HeteroAuto`) and builds.
     pub fn plan_builder(&self, name: &str) -> Result<PlanBuilder> {
         let cluster = self
             .cluster
@@ -230,11 +264,14 @@ impl Config {
         let sim = self.sim_options();
         let mut b = PlanBuilder::new(name)
             .cluster(cluster)
-            .alpha(self.search_config().alpha)
             .comm(sim.comm)
             .reshard(sim.reshard)
             .nic_assignment(sim.nic_assignment)
             .fine_overlap(sim.fine_overlap);
+        let search = self.search_config();
+        if search.schedules.len() == 1 {
+            b = b.schedule(search.schedules[0]);
+        }
         if let Some(gbs) = self.gbs_tokens {
             b = b.gbs_tokens(gbs);
         }
@@ -327,11 +364,11 @@ mod tests {
     #[test]
     fn search_and_sim_sections_parse() {
         let c = Config::parse(r#"{
-            "search": {"alpha": 0.0, "max_dp": 8, "two_stage": false},
+            "search": {"schedule": "zbv", "max_dp": 8, "two_stage": false},
             "sim": {"comm": "tcp", "reshard": "naive", "fine_overlap": false}
         }"#).unwrap();
         let s = c.search_config();
-        assert_eq!(s.alpha, 0.0);
+        assert_eq!(s.schedules, vec![Schedule::ZeroBubbleV]);
         assert_eq!(s.max_dp, 8);
         assert!(!s.two_stage);
         assert_eq!(s.group_split, 128); // default fills in
@@ -342,17 +379,38 @@ mod tests {
     }
 
     #[test]
+    fn schedule_keys_parse_with_legacy_alpha_fallback() {
+        let c = Config::parse(r#"{"search": {"schedules": ["1f1b", "interleaved:4"]}}"#)
+            .unwrap();
+        assert_eq!(c.search_config().schedules,
+                   vec![Schedule::OneF1B, Schedule::Interleaved { virtual_stages: 4 }]);
+        // Legacy alpha maps through Schedule::from_alpha.
+        let c = Config::parse(r#"{"search": {"alpha": 0.0}}"#).unwrap();
+        assert_eq!(c.search_config().schedules, vec![Schedule::ZeroBubbleV]);
+        let c = Config::parse(r#"{"search": {"alpha": 1.0}}"#).unwrap();
+        assert_eq!(c.search_config().schedules, vec![Schedule::OneF1B]);
+        // No key at all: the full default search space.
+        let c = Config::parse(r#"{"search": {}}"#).unwrap();
+        assert_eq!(c.search_config().schedules, Schedule::SEARCH_SPACE.to_vec());
+        // Bad tokens fail loudly.
+        assert!(Config::parse(r#"{"search": {"schedule": "bogus"}}"#).is_err());
+        assert!(Config::parse(r#"{"search": {"schedules": []}}"#).is_err());
+    }
+
+    #[test]
     fn config_lowers_into_plan_builder() {
         use crate::costmodel::{GroupPlan, Strategy};
         let c = Config::parse(r#"{
             "cluster": {"name": "lab", "groups": [{"chip": "A", "chips": 256}]},
             "gbs_tokens": 2097152,
+            "search": {"schedule": "zbv"},
             "sim": {"comm": "tcp"}
         }"#).unwrap();
         let plan = c.plan_builder("from-config").unwrap()
             .strategy(Strategy {
                 s_dp: 4,
                 micro_batches: 128,
+                schedule: Schedule::OneF1B,
                 plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
             })
             .build()
@@ -360,6 +418,8 @@ mod tests {
         assert_eq!(plan.gbs_tokens, 2097152);
         assert_eq!(plan.comm, crate::comm::CommMode::TcpCpu);
         assert_eq!(plan.cluster.name, "lab");
+        // The pinned search schedule overrides the strategy's.
+        assert_eq!(plan.strategy.schedule, Schedule::ZeroBubbleV);
     }
 
     #[test]
@@ -372,6 +432,7 @@ mod tests {
             .strategy(Strategy {
                 s_dp: 4,
                 micro_batches: 128,
+                schedule: Schedule::OneF1B,
                 plans: vec![
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 32, recompute: false },
                     GroupPlan { s_pp: 32, s_tp: 4, layers: 64, recompute: true },

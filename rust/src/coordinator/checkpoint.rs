@@ -23,9 +23,13 @@ const MAGIC: &[u8; 8] = b"H2CKPT01";
 /// A stage's full training state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageState {
+    /// Training step the state was captured at.
     pub step: u64,
+    /// Model parameters.
     pub params: Vec<HostTensor>,
+    /// Adam first-moment state.
     pub m: Vec<HostTensor>,
+    /// Adam second-moment state.
     pub v: Vec<HostTensor>,
 }
 

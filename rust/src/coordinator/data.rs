@@ -21,6 +21,7 @@ pub struct Corpus {
 const BRANCHING: usize = 8;
 
 impl Corpus {
+    /// A synthetic corpus over `vocab` tokens, deterministic in `seed`.
     pub fn new(vocab: usize, seed: u64) -> Corpus {
         let mut rng = Rng::new(seed ^ 0xB1647A);
         let vocab = vocab as u32;

@@ -5,7 +5,9 @@
 /// One operation in a stage's static 1F1B schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
+    /// Forward of micro-batch `m`.
     Fwd(usize),
+    /// Backward of micro-batch `m`.
     Bwd(usize),
 }
 

@@ -45,23 +45,34 @@ pub struct StagePlan {
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Artifact model name (resolved via the manifest).
     pub model: String,
+    /// Pipeline stages in order (first → last).
     pub stages: Vec<StagePlan>,
+    /// Data-parallel replica count.
     pub dp: usize,
+    /// Micro-batches per pipeline per step.
     pub micro_batches: usize,
+    /// Training steps to run.
     pub steps: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Parameter-init and data seed.
     pub seed: u64,
+    /// Cross-node communication strategy for the modeled wire time.
     pub comm: CommMode,
+    /// NIC selection policy.
     pub nic_assignment: NicAssignment,
     /// Fine-grained P2P/compute overlap (§5) enabled.
     pub fine_overlap: bool,
     /// Inject per-chip operator noise (the Fig 5 vendor-stack model).
     pub perturb: bool,
+    /// Print a loss line every N steps (0 = silent).
     pub log_every: usize,
 }
 
 impl TrainConfig {
+    /// A short smoke-test run with sensible defaults.
     pub fn quick(model: &str, stages: Vec<StagePlan>, dp: usize, micros: usize,
                  steps: usize) -> TrainConfig {
         TrainConfig {

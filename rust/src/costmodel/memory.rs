@@ -3,9 +3,12 @@
 //! Accounts, per chip, for:
 //! * bf16 weights + gradients (TP-sharded),
 //! * fp32 optimizer states, ZeRO-1-sharded across DP (or offloaded),
-//! * activations of the 1F1B warm-up queue: a stage at position `p` keeps
-//!   `min(b, s_pp − p)` micro-batches in flight — the reason HeteroPP maps
-//!   large-memory chips to early stages,
+//! * activations of the pipeline warm-up queue, schedule-dependent
+//!   ([`crate::costmodel::Schedule::activation_residency`]): under 1F1B a
+//!   stage at position `p` keeps `min(b, s_pp − p)` micro-batches in
+//!   flight — the reason HeteroPP maps large-memory chips to early stages
+//!   — interleaving multiplies the residency of later stages, and the
+//!   zero-bubble schedule stays within the 1F1B envelope,
 //! * embedding/LM-head extras on the first/last stages.
 //!
 //! The per-layer activation constant (68·tokens·hidden/tp bytes without
@@ -26,16 +29,22 @@ const WEIGHT_GRAD_BYTES: f64 = 4.0;
 const OPTIMIZER_BYTES: f64 = 12.0;
 
 #[derive(Clone, Copy, Debug, Default)]
+/// Per-stage memory accounting, bytes per chip.
 pub struct MemoryBreakdown {
+    /// bf16 weights + gradients, bytes.
     pub weights_grads: f64,
+    /// fp32 optimizer states (ZeRO-1 sharded), bytes.
     pub optimizer: f64,
+    /// Warm-up-queue activation residency, bytes.
     pub activations: f64,
+    /// Embedding / LM-head extras on the first/last stages, bytes.
     pub embed_head: f64,
     /// True if optimizer states had to be offloaded to host memory to fit.
     pub offloaded: bool,
 }
 
 impl MemoryBreakdown {
+    /// Total bytes per chip across every component.
     pub fn total(&self) -> f64 {
         self.weights_grads + self.optimizer + self.activations + self.embed_head
     }
@@ -60,8 +69,10 @@ pub fn stage_memory_bytes(
     let weights_grads = params_stage * WEIGHT_GRAD_BYTES;
     let mut optimizer = params_stage * OPTIMIZER_BYTES / strategy.s_dp as f64;
 
-    // 1F1B warm-up queue depth at this stage position.
-    let in_flight = strategy.micro_batches.min(total_stages - stage_position) as f64;
+    // Schedule-dependent warm-up queue depth at this stage position.
+    let in_flight = strategy
+        .schedule
+        .activation_residency(strategy.micro_batches, total_stages, stage_position);
     let tokens = micro_tokens as f64;
     let act_per_layer = if plan.recompute {
         2.0 * tokens * model.hidden as f64 // stashed stage inputs only
@@ -115,6 +126,7 @@ mod tests {
         let strategy = Strategy {
             s_dp: dp,
             micro_batches: 2 * 1024 * 1024 / 4096 / dp,
+            schedule: crate::costmodel::Schedule::OneF1B,
             plans: vec![plan],
         };
         stage_memory_bytes(&spec(kind), &H2_100B, &plan, &strategy, 0, pp, 4096, true, false)
@@ -160,12 +172,36 @@ mod tests {
     #[test]
     fn later_stages_use_less_activation_memory() {
         let plan = GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false };
-        let strategy = Strategy { s_dp: 4, micro_batches: 128, plans: vec![plan] };
+        let strategy = Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            schedule: crate::costmodel::Schedule::OneF1B,
+            plans: vec![plan],
+        };
         let early = stage_memory_bytes(&spec(ChipKind::A), &H2_100B, &plan, &strategy,
                                        0, 16, 4096, false, false);
         let late = stage_memory_bytes(&spec(ChipKind::A), &H2_100B, &plan, &strategy,
                                       15, 16, 4096, false, false);
         assert!(late.activations < early.activations / 4.0);
+    }
+
+    #[test]
+    fn interleaving_multiplies_late_stage_activation_residency() {
+        let plan = GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false };
+        let mk = |schedule| Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            schedule,
+            plans: vec![plan],
+        };
+        let s1 = mk(crate::costmodel::Schedule::OneF1B);
+        let si = mk(crate::costmodel::Schedule::Interleaved { virtual_stages: 2 });
+        let late_1f1b = stage_memory_bytes(&spec(ChipKind::A), &H2_100B, &plan, &s1,
+                                           12, 16, 4096, false, false);
+        let late_il = stage_memory_bytes(&spec(ChipKind::A), &H2_100B, &plan, &si,
+                                         12, 16, 4096, false, false);
+        assert!(late_il.activations > late_1f1b.activations,
+                "interleaved {} <= 1f1b {}", late_il.activations, late_1f1b.activations);
     }
 
     #[test]

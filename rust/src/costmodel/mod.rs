@@ -4,26 +4,39 @@
 //! `T = max_i ( b·T_comp,i + T_update,i + α·Σ_{j≠i} T_comp,j )`
 //!
 //! with `T_comp,i = ceil(l_i/s_pp,i)·(t_fwd + t_bwd + r_i·t_recomp)` and
-//! `T_update,i = ceil(l_i/s_pp,i)·t_update(s_dp, s_tp,i)`. α is the bubble
-//! coefficient of the pipeline schedule (1 for 1F1B, 0 for ZB-V).
+//! `T_update,i = ceil(l_i/s_pp,i)·t_update(s_dp, s_tp,i)`. The paper folds
+//! the pipeline schedule into the single bubble coefficient `α`; here the
+//! schedule is first-class ([`Schedule`], carried by [`Strategy`]) and
+//! supplies both `α` ([`Schedule::bubble_coefficient`]) and the
+//! activation-residency term of the memory model
+//! ([`Schedule::activation_residency`]).
 
 pub mod memory;
 pub mod profile;
+pub mod schedule;
 
 use crate::hetero::{ChipGroup, Cluster};
 
 pub use memory::{stage_memory_bytes, MemoryBreakdown};
 pub use profile::{profile_layer, LayerProfile};
+pub use schedule::Schedule;
 
 /// Transformer shape consumed by the analytic model (Table 4 for the 100B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelShape {
+    /// Decoder layer count.
     pub n_layers: usize,
+    /// Model (residual stream) width.
     pub hidden: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Key/value heads (GQA).
     pub n_kv_heads: usize,
+    /// MLP intermediate width.
     pub intermediate: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Training sequence length in tokens.
     pub seq_len: usize,
 }
 
@@ -50,10 +63,12 @@ pub const H2_20B: ModelShape = ModelShape {
 };
 
 impl ModelShape {
+    /// Attention head dimension (`hidden / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.hidden / self.n_heads
     }
 
+    /// Total key/value projection width (GQA-aware).
     pub fn kv_dim(&self) -> usize {
         self.n_kv_heads * self.head_dim()
     }
@@ -66,6 +81,7 @@ impl ModelShape {
         2.0 * h * h + 2.0 * h * kd + 3.0 * h * i + 2.0 * h
     }
 
+    /// Total parameter count (embeddings + layers + final norm).
     pub fn total_params(&self) -> f64 {
         self.vocab as f64 * self.hidden as f64 * 2.0
             + self.n_layers as f64 * self.params_per_layer()
@@ -93,27 +109,35 @@ pub struct GroupPlan {
 }
 
 impl GroupPlan {
+    /// Layers each of this group's pipeline stages holds.
     pub fn layers_per_stage(&self) -> usize {
         self.layers.div_ceil(self.s_pp)
     }
 }
 
 /// A full strategy for a cluster: one plan per chip group (cluster order)
-/// plus the shared data-parallel degree.
+/// plus the shared data-parallel degree and pipeline schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Strategy {
+    /// Data-parallel degree shared by every chip group.
     pub s_dp: usize,
     /// Micro-batches per pipeline per iteration (b = B / s_dp).
     pub micro_batches: usize,
+    /// Pipeline schedule executed by every stage (1F1B / interleaved /
+    /// zero-bubble) — drives the cost model's bubble and memory terms and
+    /// the simulator's issue order.
+    pub schedule: Schedule,
     /// Plans in *memory-descending group order* (HeteroPP stage order).
     pub plans: Vec<GroupPlan>,
 }
 
 impl Strategy {
+    /// Pipeline depth: stages summed over every chip group.
     pub fn total_stages(&self) -> usize {
         self.plans.iter().map(|p| p.s_pp).sum()
     }
 
+    /// Layers assigned across every chip group.
     pub fn total_layers(&self) -> usize {
         self.plans.iter().map(|p| p.layers).sum()
     }
@@ -138,15 +162,16 @@ pub struct Evaluation {
 pub const MEMORY_SAFETY: f64 = 0.92;
 
 /// Evaluate the §4.3.2 cost model. `groups` must be in memory-descending
-/// order and positionally matched with `strategy.plans`.
+/// order and positionally matched with `strategy.plans`. The bubble
+/// coefficient and activation residency come from `strategy.schedule`.
 pub fn evaluate(
     model: &ModelShape,
     groups: &[&ChipGroup],
     strategy: &Strategy,
     micro_tokens: usize,
-    alpha: f64,
 ) -> Evaluation {
     assert_eq!(groups.len(), strategy.plans.len());
+    let alpha = strategy.schedule.bubble_coefficient();
     let b = strategy.micro_batches as f64;
     let total_stages = strategy.total_stages();
 
@@ -224,9 +249,9 @@ pub fn tgs(cluster: &Cluster, gbs_tokens: usize, iteration_seconds: f64) -> f64 
 }
 
 /// Rewrite a strategy in place into the uniform-1F1B baseline: equal layer
-/// count per stage, recomputation everywhere (the homogeneous-style
-/// configuration the Table 9 ablation and `h2 simulate --uniform` compare
-/// against).
+/// count per stage, recomputation everywhere, and the plain 1F1B schedule
+/// (the homogeneous-style configuration the Table 9 ablation and
+/// `h2 simulate --uniform` compare against).
 ///
 /// Leftover layers are topped up in whole layers-per-stage increments,
 /// always stepping *toward* the exact total (largest step that still fits
@@ -235,6 +260,7 @@ pub fn tgs(cluster: &Cluster, gbs_tokens: usize, iteration_seconds: f64) -> f64 
 /// can be unreachable (every stage keeps >= 1 layer); the result then stops
 /// at the closest reachable total.
 pub fn uniform_1f1b(strategy: &mut Strategy, n_layers: usize) {
+    strategy.schedule = Schedule::OneF1B;
     let total_stages = strategy.total_stages();
     if total_stages == 0 {
         return;
@@ -284,6 +310,7 @@ mod tests {
         let mut s = Strategy {
             s_dp: 1,
             micro_batches: 8,
+            schedule: Schedule::ZeroBubbleV,
             plans: vec![
                 GroupPlan { s_pp: 24, s_tp: 1, layers: 0, recompute: false },
                 GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false },
@@ -292,11 +319,14 @@ mod tests {
         uniform_1f1b(&mut s, 96);
         assert_eq!(s.total_layers(), 96, "plans {:?}", s.plans);
         assert!(s.plans.iter().all(|p| p.recompute && p.layers % p.s_pp == 0));
+        // The baseline is *1F1B* by definition, whatever the input ran.
+        assert_eq!(s.schedule, Schedule::OneF1B);
 
         // The easy homogeneous case stays exactly uniform.
         let mut s = Strategy {
             s_dp: 1,
             micro_batches: 8,
+            schedule: Schedule::OneF1B,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false }],
         };
         uniform_1f1b(&mut s, 96);
@@ -317,9 +347,10 @@ mod tests {
         let strategy = Strategy {
             s_dp: 4,
             micro_batches: 128, // 2M tokens / 4096 seq / 4 dp
+            schedule: Schedule::OneF1B,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
         };
-        let eval = evaluate(&H2_100B, &groups, &strategy, 4096, 1.0);
+        let eval = evaluate(&H2_100B, &groups, &strategy, 4096);
         assert!(eval.feasible, "peak mem {:?}", eval.peak_memory);
         let tgs = tgs(&exp.cluster, exp.gbs_tokens, eval.iteration_seconds);
         // Table 6: 136.9 TGS. The analytic model should land within ~15%.
@@ -333,26 +364,35 @@ mod tests {
         let mk = |mb| Strategy {
             s_dp: 4,
             micro_batches: mb,
+            schedule: Schedule::OneF1B,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
         };
-        let t_small = evaluate(&H2_100B, &groups, &mk(16), 4096, 1.0);
-        let t_big = evaluate(&H2_100B, &groups, &mk(128), 4096, 1.0);
+        let t_small = evaluate(&H2_100B, &groups, &mk(16), 4096);
+        let t_big = evaluate(&H2_100B, &groups, &mk(128), 4096);
         // Throughput per microbatch must improve with more microbatches.
         assert!(t_big.iteration_seconds / 128.0 < t_small.iteration_seconds / 16.0);
     }
 
     #[test]
-    fn zb_alpha_zero_is_faster() {
+    fn schedule_ordering_holds_in_closed_form() {
+        // Zero-bubble < interleaved < 1F1B on the same strategy: the bubble
+        // term shrinks with the schedule's coefficient.
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
-        let strategy = Strategy {
+        let mk = |schedule| Strategy {
             s_dp: 4,
             micro_batches: 128,
+            schedule,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
         };
-        let t1 = evaluate(&H2_100B, &groups, &strategy, 4096, 1.0);
-        let t0 = evaluate(&H2_100B, &groups, &strategy, 4096, 0.0);
-        assert!(t0.iteration_seconds < t1.iteration_seconds);
+        let t1 = evaluate(&H2_100B, &groups, &mk(Schedule::OneF1B), 4096);
+        let ti = evaluate(&H2_100B, &groups,
+                          &mk(Schedule::Interleaved { virtual_stages: 2 }), 4096);
+        let t0 = evaluate(&H2_100B, &groups, &mk(Schedule::ZeroBubbleV), 4096);
+        assert!(t0.iteration_seconds < ti.iteration_seconds,
+                "zbv {} vs interleaved {}", t0.iteration_seconds, ti.iteration_seconds);
+        assert!(ti.iteration_seconds < t1.iteration_seconds,
+                "interleaved {} vs 1f1b {}", ti.iteration_seconds, t1.iteration_seconds);
     }
 
     #[test]
@@ -362,10 +402,11 @@ mod tests {
         let mk = |rec| Strategy {
             s_dp: 4,
             micro_batches: 128,
+            schedule: Schedule::OneF1B,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: rec }],
         };
-        let with = evaluate(&H2_100B, &groups, &mk(true), 4096, 1.0);
-        let without = evaluate(&H2_100B, &groups, &mk(false), 4096, 1.0);
+        let with = evaluate(&H2_100B, &groups, &mk(true), 4096);
+        let without = evaluate(&H2_100B, &groups, &mk(false), 4096);
         // Recompute saves memory...
         assert!(with.peak_memory[0] < without.peak_memory[0]);
         // ...and B-without-recompute is forced into costly gradient offload

@@ -24,8 +24,11 @@ use super::ModelShape;
 /// Profiled per-layer times (seconds) for one (chip, TP, DP) combination.
 #[derive(Clone, Copy, Debug)]
 pub struct LayerProfile {
+    /// Forward seconds per layer per microbatch.
     pub t_fwd: f64,
+    /// Backward seconds per layer per microbatch.
     pub t_bwd: f64,
+    /// Activation-recompute seconds per layer (= forward).
     pub t_recompute: f64,
     /// Optimizer step + non-overlapped DP gradient sync, per layer.
     pub t_update: f64,
@@ -50,6 +53,8 @@ const ADAM_FLOPS: f64 = 12.0;
 /// Host↔device PCIe bandwidth for offloaded optimizer traffic, bytes/s.
 const PCIE_OFFLOAD_BPS: f64 = 12.0e9;
 
+/// Analytic per-layer profile for one (chip, TP, DP) combination —
+/// the roofline stand-in for the paper's measured auto-profiler table.
 pub fn profile_layer(
     spec: &ChipSpec,
     model: &ModelShape,

@@ -1,0 +1,225 @@
+//! First-class pipeline schedules (§4.3.2's bubble coefficient made real).
+//!
+//! The paper folds the schedule into a single coefficient `α` (1.0 = 1F1B,
+//! 0.0 = ZB-V). [`Schedule`] replaces that scalar throughout the crate so
+//! both evaluation paths can distinguish schedules properly:
+//!
+//! * the closed-form cost model scales its bubble term by
+//!   [`Schedule::bubble_coefficient`] and its activation-residency term by
+//!   [`Schedule::activation_residency`],
+//! * the discrete-event simulator executes a real issue order per variant
+//!   (see [`crate::sim::pipeline`]),
+//! * HeteroAuto searches over schedules as an extra DFS dimension
+//!   ([`crate::auto::SearchConfig::schedules`]).
+//!
+//! Schedules serialize as compact tokens (`1f1b`, `interleaved:V`, `zbv`)
+//! in plan files, configs and on the CLI (`--schedule`).
+
+use std::fmt;
+
+/// A pipeline-parallel execution schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Classic one-forward-one-backward: bubble fraction
+    /// `(pp − 1) / (b + pp − 1)`, the paper's `α = 1` reference point.
+    OneF1B,
+    /// Interleaved 1F1B (Megatron-style virtual pipeline): each physical
+    /// stage hosts `virtual_stages` layer chunks, shrinking the bubble by
+    /// that factor at the price of higher activation residency and extra
+    /// inter-stage traffic. `virtual_stages` must be ≥ 2 and divide every
+    /// stage's layer count.
+    Interleaved {
+        /// Virtual chunks per physical stage (Megatron's `v`).
+        virtual_stages: usize,
+    },
+    /// Zero-bubble schedule (ZB family): backward is split into an
+    /// input-gradient phase on the critical path and a weight-gradient
+    /// phase that fills what would otherwise be bubble, approaching the
+    /// paper's `α = 0` limit while keeping 1F1B-level activation memory.
+    ZeroBubbleV,
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Schedule::OneF1B
+    }
+}
+
+impl Schedule {
+    /// The three variants HeteroAuto searches by default (interleaving at
+    /// the common `v = 2`).
+    pub const SEARCH_SPACE: [Schedule; 3] = [
+        Schedule::OneF1B,
+        Schedule::Interleaved { virtual_stages: 2 },
+        Schedule::ZeroBubbleV,
+    ];
+
+    /// The §4.3.2 bubble coefficient `α`: the fraction of one full
+    /// pipeline sweep (`Σ_{j≠i} T_comp,j`) the critical stage spends idle.
+    /// 1F1B pays it in full, interleaving divides it by the virtual-stage
+    /// count, and the zero-bubble schedule fills it with weight-gradient
+    /// work.
+    pub fn bubble_coefficient(&self) -> f64 {
+        match *self {
+            Schedule::OneF1B => 1.0,
+            Schedule::Interleaved { virtual_stages } => 1.0 / virtual_stages.max(1) as f64,
+            Schedule::ZeroBubbleV => 0.0,
+        }
+    }
+
+    /// Virtual chunks per physical stage (1 for non-interleaved schedules).
+    pub fn virtual_stages(&self) -> usize {
+        match *self {
+            Schedule::Interleaved { virtual_stages } => virtual_stages.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Equivalent number of *full-stage* micro-batch activations resident
+    /// at pipeline position `pos` (0-based) of `total_stages`.
+    ///
+    /// 1F1B keeps `min(b, pp − pos)` micro-batches queued during warm-up;
+    /// the zero-bubble schedule is bounded by the same peak by design.
+    /// Interleaving keeps `min(b·v, (v−1)·pp + pp − pos)` chunk
+    /// activations of `1/v` stage depth each — equal at the first stage
+    /// but strictly more on every later one, which is why interleaving
+    /// multiplies activation residency in the memory model.
+    pub fn activation_residency(
+        &self,
+        micro_batches: usize,
+        total_stages: usize,
+        pos: usize,
+    ) -> f64 {
+        let queue = total_stages.saturating_sub(pos).max(1);
+        match *self {
+            Schedule::OneF1B | Schedule::ZeroBubbleV => micro_batches.min(queue) as f64,
+            Schedule::Interleaved { virtual_stages } => {
+                let v = virtual_stages.max(1);
+                let chunks = (micro_batches * v).min((v - 1) * total_stages + queue);
+                chunks as f64 / v as f64
+            }
+        }
+    }
+
+    /// Canonical serialization token (`1f1b`, `interleaved:V`, `zbv`) —
+    /// what plan files, configs and `--schedule` use.
+    pub fn token(&self) -> String {
+        match *self {
+            Schedule::OneF1B => "1f1b".to_string(),
+            Schedule::Interleaved { virtual_stages } => format!("interleaved:{virtual_stages}"),
+            Schedule::ZeroBubbleV => "zbv".to_string(),
+        }
+    }
+
+    /// Parse a canonical token. `interleaved` without a suffix means
+    /// `interleaved:2`; interleaving below 2 virtual stages is rejected
+    /// (that is just 1F1B).
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "1f1b" => Some(Schedule::OneF1B),
+            "zbv" | "zb-v" => Some(Schedule::ZeroBubbleV),
+            _ => {
+                let rest = s.strip_prefix("interleaved")?;
+                if rest.is_empty() {
+                    return Some(Schedule::Interleaved { virtual_stages: 2 });
+                }
+                let v: usize = rest.strip_prefix(':')?.parse().ok()?;
+                if v >= 2 {
+                    Some(Schedule::Interleaved { virtual_stages: v })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Migration shim for pre-`Schedule` artifacts (plan files of version
+    /// 1, legacy `alpha` config keys): map a scalar bubble coefficient to
+    /// the nearest schedule. `α ≥ 0.75` reads as 1F1B, `α ≤ 0.25` as the
+    /// zero-bubble schedule, anything between as interleaving with
+    /// `round(1/α)` virtual stages.
+    pub fn from_alpha(alpha: f64) -> Schedule {
+        if !alpha.is_finite() || alpha >= 0.75 {
+            Schedule::OneF1B
+        } else if alpha <= 0.25 {
+            Schedule::ZeroBubbleV
+        } else {
+            let v = (1.0 / alpha).round().clamp(2.0, 64.0) as usize;
+            Schedule::Interleaved { virtual_stages: v }
+        }
+    }
+}
+
+impl fmt::Display for Schedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.token())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_roundtrip() {
+        for s in [
+            Schedule::OneF1B,
+            Schedule::ZeroBubbleV,
+            Schedule::Interleaved { virtual_stages: 2 },
+            Schedule::Interleaved { virtual_stages: 7 },
+        ] {
+            assert_eq!(Schedule::parse(&s.token()), Some(s), "{s}");
+        }
+        assert_eq!(Schedule::parse("interleaved"),
+                   Some(Schedule::Interleaved { virtual_stages: 2 }));
+        assert_eq!(Schedule::parse("interleaved:1"), None);
+        assert_eq!(Schedule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn bubble_coefficients_match_the_paper() {
+        assert_eq!(Schedule::OneF1B.bubble_coefficient(), 1.0);
+        assert_eq!(Schedule::ZeroBubbleV.bubble_coefficient(), 0.0);
+        assert_eq!(Schedule::Interleaved { virtual_stages: 2 }.bubble_coefficient(), 0.5);
+        assert_eq!(Schedule::Interleaved { virtual_stages: 4 }.bubble_coefficient(), 0.25);
+    }
+
+    #[test]
+    fn alpha_migration_picks_nearest_schedule() {
+        assert_eq!(Schedule::from_alpha(1.0), Schedule::OneF1B);
+        assert_eq!(Schedule::from_alpha(0.0), Schedule::ZeroBubbleV);
+        assert_eq!(Schedule::from_alpha(0.5),
+                   Schedule::Interleaved { virtual_stages: 2 });
+        assert_eq!(Schedule::from_alpha(f64::NAN), Schedule::OneF1B);
+    }
+
+    #[test]
+    fn interleaving_keeps_first_stage_memory_but_raises_later_stages() {
+        let il = Schedule::Interleaved { virtual_stages: 2 };
+        let b = 128;
+        let pp = 16;
+        // First stage: residency matches 1F1B's full warm-up queue.
+        let first_1f1b = Schedule::OneF1B.activation_residency(b, pp, 0);
+        let first_il = il.activation_residency(b, pp, 0);
+        assert!((first_il - first_1f1b).abs() < 1e-9, "{first_il} vs {first_1f1b}");
+        // Later stages: interleaving holds strictly more.
+        for pos in 1..pp {
+            let r1 = Schedule::OneF1B.activation_residency(b, pp, pos);
+            let ri = il.activation_residency(b, pp, pos);
+            assert!(ri > r1, "pos {pos}: interleaved {ri} <= 1f1b {r1}");
+        }
+        // Zero-bubble stays within the 1F1B envelope.
+        for pos in 0..pp {
+            assert_eq!(Schedule::ZeroBubbleV.activation_residency(b, pp, pos),
+                       Schedule::OneF1B.activation_residency(b, pp, pos));
+        }
+    }
+
+    #[test]
+    fn few_microbatches_cap_residency() {
+        let il = Schedule::Interleaved { virtual_stages: 4 };
+        // With b < pp the cap is b·v chunks = b full-stage equivalents.
+        assert_eq!(il.activation_residency(3, 16, 0), 3.0);
+        assert_eq!(Schedule::OneF1B.activation_residency(3, 16, 0), 3.0);
+    }
+}

@@ -26,9 +26,13 @@ use anyhow::{bail, Result};
 /// scenarios need no recompilation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ChipKind {
+    /// Paper Chip-A: large memory (96 GiB), mid compute, 16-chip nodes.
     A,
+    /// Paper Chip-B: 64 GiB, mid compute, NUMA-split 8-chip nodes.
     B,
+    /// Paper Chip-C: small memory (32 GiB), low compute, PCIe-switch nodes.
     C,
+    /// Paper Chip-D: fastest compute, small memory (32 GiB).
     D,
     /// NVIDIA A100 — the homogeneous reference used for precision alignment.
     A100,
@@ -37,8 +41,10 @@ pub enum ChipKind {
 }
 
 impl ChipKind {
+    /// The four anonymized paper chips (A100 excluded).
     pub const ALL: [ChipKind; 4] = [ChipKind::A, ChipKind::B, ChipKind::C, ChipKind::D];
 
+    /// Canonical display/parse name (`Chip-A`, `A100`, or the custom name).
     pub fn name(self) -> &'static str {
         match self {
             ChipKind::A => "Chip-A",
@@ -53,6 +59,7 @@ impl ChipKind {
         }
     }
 
+    /// Parse a chip name, case-insensitively; customs resolve via the registry.
     pub fn parse(s: &str) -> Option<ChipKind> {
         match s.to_ascii_uppercase().as_str() {
             "A" | "CHIP-A" => Some(ChipKind::A),
@@ -96,6 +103,7 @@ impl ChipKind {
         }
     }
 
+    /// Whether this kind lives in the runtime registry rather than the catalog.
     pub fn is_custom(self) -> bool {
         matches!(self, ChipKind::Custom(_))
     }
@@ -148,15 +156,19 @@ impl IntraNodeLink {
 /// Full specification of one chip architecture + its server design.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ChipSpec {
+    /// Which chip architecture this spec describes.
     pub kind: ChipKind,
     /// Peak FP16 throughput, TFLOPS.
     pub fp16_tflops: f64,
     /// Device memory, GiB.
     pub memory_gib: f64,
+    /// Accelerators per server.
     pub chips_per_node: usize,
+    /// Intra-node interconnect class and bandwidths.
     pub intra_node: IntraNodeLink,
     /// NICs per server and per-NIC bandwidth (RoCE-v2), GB/s.
     pub nics_per_node: usize,
+    /// Per-NIC bandwidth, GB/s.
     pub nic_gbps: f64,
     /// Sustained fraction of peak for dense transformer layers (calibrated
     /// against Table 6; stands in for the paper's auto-profiler measurements).
@@ -189,6 +201,7 @@ impl ChipSpec {
         tp
     }
 
+    /// Device memory in bytes.
     pub fn memory_bytes(&self) -> f64 {
         self.memory_gib * 1024.0 * 1024.0 * 1024.0
     }
@@ -199,14 +212,23 @@ impl ChipSpec {
 /// (`"chips": [...]`) and registered with [`register_custom`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct CustomChipDef {
+    /// Unique chip name (rejects built-in names).
     pub name: String,
+    /// Peak FP16 throughput, TFLOPS.
     pub fp16_tflops: f64,
+    /// Device memory, GiB.
     pub memory_gib: f64,
+    /// Accelerators per server.
     pub chips_per_node: usize,
+    /// Intra-node interconnect class and bandwidths.
     pub intra_node: IntraNodeLink,
+    /// NICs per server.
     pub nics_per_node: usize,
+    /// Per-NIC bandwidth, GB/s.
     pub nic_gbps: f64,
+    /// Sustained fraction of peak for dense transformer layers.
     pub mfu: f64,
+    /// Numerical perturbation scale of the vendor operator stack.
     pub op_noise: f64,
     /// PCIe-path bandwidth from a chip to its affine NIC, GB/s (Table 3 model).
     pub pcie_to_nic_gbps: f64,

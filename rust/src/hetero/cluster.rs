@@ -8,11 +8,14 @@ use super::chip::{spec, ChipKind, ChipSpec};
 /// One homogeneous group inside a hyper-heterogeneous cluster.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ChipGroup {
+    /// Chip architecture shared by every chip in the group.
     pub spec: ChipSpec,
+    /// Total chips in the group (a whole number of nodes).
     pub n_chips: usize,
 }
 
 impl ChipGroup {
+    /// Infallible constructor for known-good literals; panics on partial nodes.
     pub fn new(kind: ChipKind, n_chips: usize) -> Self {
         ChipGroup::try_new(kind, n_chips).unwrap()
     }
@@ -30,6 +33,7 @@ impl ChipGroup {
         Ok(ChipGroup { spec, n_chips })
     }
 
+    /// Servers in the group.
     pub fn n_nodes(&self) -> usize {
         self.n_chips / self.spec.chips_per_node
     }
@@ -38,11 +42,14 @@ impl ChipGroup {
 /// A hyper-heterogeneous cluster: one group per chip type.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Cluster {
+    /// Cluster name (shows up in CLI output and plan files).
     pub name: String,
+    /// One homogeneous group per chip type.
     pub groups: Vec<ChipGroup>,
 }
 
 impl Cluster {
+    /// Infallible constructor for known-good literals; panics on partial nodes.
     pub fn new(name: &str, groups: Vec<(ChipKind, usize)>) -> Self {
         Cluster::try_build(name, groups).unwrap()
     }
@@ -56,14 +63,17 @@ impl Cluster {
         Ok(Cluster { name: name.to_string(), groups })
     }
 
+    /// Total accelerators across every group.
     pub fn total_chips(&self) -> usize {
         self.groups.iter().map(|g| g.n_chips).sum()
     }
 
+    /// Number of distinct chip groups.
     pub fn n_types(&self) -> usize {
         self.groups.len()
     }
 
+    /// The group of a given chip kind, or an error naming the cluster.
     pub fn group(&self, kind: ChipKind) -> Result<&ChipGroup> {
         match self.groups.iter().find(|g| g.spec.kind == kind) {
             Some(g) => Ok(g),
@@ -86,12 +96,15 @@ impl Cluster {
 /// Table 7 experiment configurations (+ global batch sizes in tokens).
 #[derive(Clone, Debug)]
 pub struct Experiment {
+    /// Experiment identifier (`exp-a-1` .. `exp-d`).
     pub index: &'static str,
+    /// The Table 7 cluster composition.
     pub cluster: Cluster,
     /// Global batch size in tokens.
     pub gbs_tokens: usize,
 }
 
+/// Look up a Table 7 experiment by its index string.
 pub fn experiment(index: &str) -> Result<Experiment> {
     let m = 1024 * 1024;
     let (cluster, gbs) = match index {
@@ -107,6 +120,7 @@ pub fn experiment(index: &str) -> Result<Experiment> {
     Ok(Experiment { index: Box::leak(index.to_string().into_boxed_str()), cluster, gbs_tokens: gbs })
 }
 
+/// Every Table 7 experiment index, in paper order.
 pub const ALL_EXPERIMENTS: [&str; 7] =
     ["exp-a-1", "exp-a-2", "exp-b-1", "exp-b-2", "exp-c-1", "exp-c-2", "exp-d"];
 

@@ -2,13 +2,17 @@
 //!
 //! Three-layer architecture (DESIGN.md): Pallas kernels (L1) and the JAX
 //! stage model (L2) are AOT-compiled to HLO text by `python/compile/`;
-//! everything at runtime is this rust crate (L3).
+//! everything at runtime is this rust crate (L3). The narrative guide to
+//! the module layout and data flow lives in `docs/architecture.md`; the
+//! plan-file wire format is specified field by field in
+//! `docs/plan-format.md`.
 //!
 //! ## The plan-centric workflow
 //!
 //! The crate's public API revolves around one serializable artifact, the
-//! [`plan::ExecutionPlan`]: cluster + model shape + parallel strategy +
-//! per-stage chip/TP/layer assignment + communication mode + NIC topology +
+//! [`plan::ExecutionPlan`]: cluster + model shape + parallel strategy
+//! (including the pipeline [`costmodel::Schedule`]) + per-stage
+//! chip/TP/layer assignment + communication mode + NIC topology +
 //! precision policy. The H2 loop is *search once, execute many times*:
 //!
 //! ```text
@@ -28,13 +32,43 @@
 //! ([`hetero::register_custom`]) so user-defined accelerators are
 //! searchable and simulatable without recompiling.
 //!
-//! In-process, the same flow is three calls:
+//! In-process, the same flow is three calls (this is the README quickstart,
+//! compiled as a doctest so it cannot rot):
 //!
-//! ```ignore
-//! let r = auto::search(&H2_100B, &cluster, gbs_tokens, &cfg)?;
-//! let plan = r.into_plan(&H2_100B, &cluster, gbs_tokens, &cfg);
-//! let sim = sim::simulate_plan(&plan);            // or plan.simulate()
-//! plan.save("plan.json")?;                        // `h2 simulate --plan plan.json`
+//! ```no_run
+//! use h2::auto::{search, SearchConfig};
+//! use h2::costmodel::H2_100B;
+//! use h2::hetero::experiment;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let exp = experiment("exp-a-1")?;
+//!     let cfg = SearchConfig::default();       // searches 1f1b, interleaved:2, zbv
+//!     let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
+//!     let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+//!
+//!     let eval = plan.evaluate();              // §4.3.2 closed-form cost model
+//!     let sim = plan.simulate();               // HeteroPP discrete-event simulator
+//!     println!("schedule {} -> TGS {:.1}", plan.schedule(),
+//!              plan.tgs(sim.iteration_seconds));
+//!     assert!(eval.feasible);
+//!     plan.save("plan.json")?;                 // `h2 simulate --plan plan.json`
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Pinning a schedule and re-scheduling a loaded plan are one-liners:
+//!
+//! ```no_run
+//! use h2::costmodel::Schedule;
+//! use h2::plan::ExecutionPlan;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let mut plan = ExecutionPlan::load("plan.json")?;
+//!     plan.strategy.schedule = Schedule::ZeroBubbleV; // or Interleaved { .. }
+//!     plan.validate().map_err(|e| anyhow::anyhow!(h2::plan::render_errors(&e)))?;
+//!     println!("{}", plan.simulate().iteration_seconds);
+//!     Ok(())
+//! }
 //! ```
 //!
 //! ## Subsystems
@@ -45,13 +79,18 @@
 //!   (§3.2) with calibrated TCP / CPU-RDMA / device-direct RDMA models.
 //! * [`topology`] — server/NIC topology and the affinity model (§5, Table 3).
 //! * [`precision`] — DiTorch precision-alignment tooling (§3.1.2, Fig 5).
-//! * [`costmodel`] — the §4.3.2 iteration-time + memory cost model.
-//! * [`auto`] — HeteroAuto strategy search (§4.3.3).
-//! * [`sim`] — the HeteroPP discrete-event 1F1B simulator (§4.2).
+//! * [`costmodel`] — the §4.3.2 iteration-time + memory cost model, with
+//!   the pipeline [`costmodel::Schedule`] as a first-class dimension.
+//! * [`auto`] — HeteroAuto strategy search (§4.3.3), parallel over
+//!   (data-parallel × schedule) candidates with branch-and-bound pruning.
+//! * [`sim`] — the HeteroPP discrete-event simulator (§4.2) with a real
+//!   issue order per schedule.
 //! * [`coordinator`] — the real 1F1B training coordinator over PJRT.
 //! * [`plan`] — the serializable `ExecutionPlan` tying them together.
 //! * [`config`] — JSON config front-end lowering into the plan builder.
 //! * [`report`] — paper-table drivers (Table 6/9, Fig 11) over plans.
+
+#![warn(missing_docs)]
 
 pub mod auto;
 pub mod comm;

@@ -21,7 +21,7 @@ use h2::auto::{search, SearchConfig};
 use h2::comm::{p2p_latency, CommMode};
 use h2::config::Config;
 use h2::coordinator::{train, train_plan, StagePlan, TrainConfig, TrainReport};
-use h2::costmodel::{profile_layer, tgs, uniform_1f1b, H2_100B};
+use h2::costmodel::{profile_layer, tgs, uniform_1f1b, Schedule, H2_100B};
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
 use h2::plan::{render_errors, ExecutionPlan};
 use h2::precision::check_alignment;
@@ -64,11 +64,11 @@ fn print_help() {
     println!("              --dp 1 --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
     println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
-    println!("              [--alpha 1.0] [--no-two-stage] [--split 128]");
-    println!("              [--emit-plan plan.json]");
+    println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
+    println!("              [--split 128] [--sequential] [--emit-plan plan.json]");
     println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
-    println!("              [--reshard srag|bcast|naive] [--no-overlap] [--uniform]");
-    println!("              [--non-affinity]");
+    println!("              [--schedule 1f1b|interleaved:V|zbv] [--reshard srag|bcast|naive]");
+    println!("              [--no-overlap] [--uniform] [--non-affinity]");
     println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
     println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
     println!("  profile     [--chip A] [--dp 4]");
@@ -112,14 +112,32 @@ fn resolve_cluster(
     bail!("no cluster: pass --exp, --cluster, or a --config with a `cluster` section")
 }
 
+/// Parse a `--schedule` token with a helpful error.
+fn parse_schedule(s: &str) -> Result<Schedule> {
+    Schedule::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("bad --schedule `{s}` (expected 1f1b, interleaved[:V] or zbv)")
+    })
+}
+
 /// Search options: config `search` section as the base, flags override.
+/// `--schedule` pins the search to one schedule; the hidden legacy
+/// `--alpha` maps through `Schedule::from_alpha`; the default explores
+/// 1F1B, interleaved:2 and zbv.
 fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchConfig> {
     let base = config.map(|c| c.search_config()).unwrap_or_default();
+    let schedules = if let Some(tok) = args.get("schedule") {
+        vec![parse_schedule(tok)?]
+    } else if args.has("alpha") {
+        vec![Schedule::from_alpha(args.f64_or("alpha", 1.0)?)]
+    } else {
+        base.schedules.clone()
+    };
     Ok(SearchConfig {
-        alpha: args.f64_or("alpha", base.alpha)?,
+        schedules,
         group_split: args.usize_or("split", base.group_split)?,
         two_stage: if args.has("no-two-stage") { false } else { base.two_stage },
         max_dp: args.usize_or("max-dp", base.max_dp)?,
+        parallel: if args.has("sequential") { false } else { base.parallel },
     })
 }
 
@@ -292,12 +310,13 @@ fn cmd_search(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
-    println!("s_dp = {}, micro-batches = {}", r.strategy.s_dp, r.strategy.micro_batches);
+    println!("s_dp = {}, micro-batches = {}, schedule = {}",
+             r.strategy.s_dp, r.strategy.micro_batches, r.strategy.schedule);
     println!("estimated iteration: {} -> TGS {:.1}",
              fmt_duration(r.eval.iteration_seconds),
              tgs(&cluster, gbs, r.eval.iteration_seconds));
     if let Some(path) = args.get("emit-plan") {
-        let mut plan = r.into_plan(&H2_100B, &cluster, gbs, &cfg);
+        let mut plan = r.into_plan(&H2_100B, &cluster, gbs);
         apply_sim_overrides(&mut plan, args, config.as_ref())?;
         // The config's train section rides along so `h2 train --plan` works
         // from the emitted file alone.
@@ -324,9 +343,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let (cluster, gbs) = resolve_cluster(args, config.as_ref(), Some("exp-c-1"))?;
         let scfg = resolve_search_config(args, config.as_ref())?;
         let r = search(&H2_100B, &cluster, gbs, &scfg)?;
-        r.into_plan(&H2_100B, &cluster, gbs, &scfg)
+        r.into_plan(&H2_100B, &cluster, gbs)
     };
     apply_sim_overrides(&mut plan, args, config.as_ref())?;
+    if let Some(tok) = args.get("schedule") {
+        // `--uniform` *defines* its baseline as plain 1F1B (and rewrites
+        // the layer layout the schedule would validate against), so an
+        // explicit schedule override cannot compose with it.
+        if args.has("uniform") {
+            bail!("--schedule conflicts with --uniform (the uniform baseline \
+                   is 1F1B by definition)");
+        }
+        // Re-schedule a persisted plan without re-searching; the plan must
+        // still validate (e.g. interleaving has to chunk every stage).
+        plan.strategy.schedule = parse_schedule(tok)?;
+        if let Err(errs) = plan.validate() {
+            bail!("plan cannot run under --schedule {}:\n{}",
+                  plan.strategy.schedule, render_errors(&errs));
+        }
+    }
     if args.has("uniform") {
         // Uniform 1F1B baseline: equal layer count on every stage,
         // recomputation everywhere (the homogeneous-style configuration).
@@ -340,8 +375,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     let sim = simulate_plan(&plan);
-    println!("simulated `{}`: iteration {} (bubble {:.1}%, exposed comm {})",
+    println!("simulated `{}` under {}: iteration {} (bubble {:.1}%, exposed comm {})",
              plan.cluster.name,
+             plan.schedule(),
              fmt_duration(sim.iteration_seconds),
              sim.bubble_fraction * 100.0,
              fmt_duration(sim.exposed_comm));

@@ -1,7 +1,7 @@
 //! Typed construction of [`ExecutionPlan`]s with up-front validation.
 
 use crate::comm::CommMode;
-use crate::costmodel::{ModelShape, Strategy, H2_100B};
+use crate::costmodel::{ModelShape, Schedule, Strategy, H2_100B};
 use crate::hetero::{ChipGroup, Cluster};
 use crate::sim::ReshardStrategy;
 use crate::topology::NicAssignment;
@@ -12,8 +12,9 @@ use super::{ExecutionPlan, PlanError, PrecisionPolicy, TrainSpec, PLAN_VERSION};
 /// whatever else differs from the paper defaults, then [`PlanBuilder::build`].
 ///
 /// Defaults: 100B model, GBS 2M tokens, micro-batch of one sequence,
-/// 1F1B (alpha 1.0), device-direct RDMA, SR&AG resharding, NIC affinity,
-/// fine-grained overlap on.
+/// device-direct RDMA, SR&AG resharding, NIC affinity, fine-grained
+/// overlap on. The pipeline schedule travels inside the strategy;
+/// [`PlanBuilder::schedule`] overrides it.
 #[derive(Clone, Debug)]
 pub struct PlanBuilder {
     name: String,
@@ -23,7 +24,7 @@ pub struct PlanBuilder {
     strategy: Option<Strategy>,
     gbs_tokens: usize,
     micro_tokens: Option<usize>,
-    alpha: f64,
+    schedule: Option<Schedule>,
     comm: CommMode,
     reshard: ReshardStrategy,
     nic_assignment: NicAssignment,
@@ -33,6 +34,7 @@ pub struct PlanBuilder {
 }
 
 impl PlanBuilder {
+    /// Start a builder with the paper defaults under the given plan name.
     pub fn new(name: &str) -> PlanBuilder {
         PlanBuilder {
             name: name.to_string(),
@@ -42,7 +44,7 @@ impl PlanBuilder {
             strategy: None,
             gbs_tokens: 2 * 1024 * 1024,
             micro_tokens: None,
-            alpha: 1.0,
+            schedule: None,
             comm: CommMode::DeviceDirect,
             reshard: ReshardStrategy::SendRecvAllGather,
             nic_assignment: NicAssignment::Affinity,
@@ -52,6 +54,7 @@ impl PlanBuilder {
         }
     }
 
+    /// Override the model shape (default: the 100B of Table 4).
     pub fn model(mut self, model: ModelShape) -> Self {
         self.model = model;
         self
@@ -72,11 +75,14 @@ impl PlanBuilder {
         self
     }
 
+    /// The parallel strategy (its `schedule` field is kept unless
+    /// [`PlanBuilder::schedule`] overrides it).
     pub fn strategy(mut self, strategy: Strategy) -> Self {
         self.strategy = Some(strategy);
         self
     }
 
+    /// Global batch size in tokens (default: the paper's 2M).
     pub fn gbs_tokens(mut self, gbs_tokens: usize) -> Self {
         self.gbs_tokens = gbs_tokens;
         self
@@ -88,36 +94,44 @@ impl PlanBuilder {
         self
     }
 
-    pub fn alpha(mut self, alpha: f64) -> Self {
-        self.alpha = alpha;
+    /// Override the strategy's pipeline schedule (e.g. a config or CLI
+    /// `--schedule` layered over a searched strategy).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
         self
     }
 
+    /// Cross-chip communication strategy.
     pub fn comm(mut self, comm: CommMode) -> Self {
         self.comm = comm;
         self
     }
 
+    /// Inter-stage activation resharding strategy.
     pub fn reshard(mut self, reshard: ReshardStrategy) -> Self {
         self.reshard = reshard;
         self
     }
 
+    /// NIC selection policy.
     pub fn nic_assignment(mut self, nic_assignment: NicAssignment) -> Self {
         self.nic_assignment = nic_assignment;
         self
     }
 
+    /// Toggle fine-grained P2P/compute overlap.
     pub fn fine_overlap(mut self, fine_overlap: bool) -> Self {
         self.fine_overlap = fine_overlap;
         self
     }
 
+    /// Numeric-precision policy for real training runs.
     pub fn precision(mut self, precision: PrecisionPolicy) -> Self {
         self.precision = precision;
         self
     }
 
+    /// Attach a real-training section (`h2 train --plan`).
     pub fn train(mut self, train: TrainSpec) -> Self {
         self.train = Some(train);
         self
@@ -139,16 +153,19 @@ impl PlanBuilder {
         let stage_groups = self.stage_groups.unwrap_or_else(|| {
             cluster.groups_by_memory_desc().into_iter().cloned().collect()
         });
+        let mut strategy = self.strategy.unwrap();
+        if let Some(schedule) = self.schedule {
+            strategy.schedule = schedule;
+        }
         let plan = ExecutionPlan {
             version: PLAN_VERSION,
             name: self.name,
             model: self.model,
             cluster,
             stage_groups,
-            strategy: self.strategy.unwrap(),
+            strategy,
             gbs_tokens: self.gbs_tokens,
             micro_tokens: self.micro_tokens.unwrap_or(self.model.seq_len),
-            alpha: self.alpha,
             comm: self.comm,
             reshard: self.reshard,
             nic_assignment: self.nic_assignment,
@@ -185,6 +202,7 @@ mod tests {
             .strategy(Strategy {
                 s_dp: 4,
                 micro_batches: 128,
+                schedule: Schedule::OneF1B,
                 plans: vec![
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: false },
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: true },
@@ -195,5 +213,22 @@ mod tests {
         // A (96 GiB) must come before B (64 GiB) regardless of input order.
         assert_eq!(plan.stage_groups[0].spec.kind, ChipKind::A);
         assert_eq!(plan.stage_groups[1].spec.kind, ChipKind::B);
+    }
+
+    #[test]
+    fn schedule_override_wins_over_the_strategy() {
+        let cluster = Cluster::new("a", vec![(ChipKind::A, 256)]);
+        let plan = PlanBuilder::new("override")
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                schedule: Schedule::OneF1B,
+                plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+            })
+            .schedule(Schedule::ZeroBubbleV)
+            .build()
+            .unwrap();
+        assert_eq!(plan.strategy.schedule, Schedule::ZeroBubbleV);
     }
 }

@@ -50,8 +50,12 @@ pub enum PlanError {
     TokensNotWholeSequences { gbs_tokens: usize, micro_tokens: usize },
     /// Zero-token micro-batches.
     ZeroMicroTokens,
-    /// Pipeline-bubble coefficient outside [0, inf).
-    AlphaOutOfRange { alpha: f64 },
+    /// Interleaved schedule with fewer than two virtual stages (that is
+    /// just 1F1B and the chunk math degenerates).
+    VirtualStagesInvalid { virtual_stages: usize },
+    /// A group's per-stage layer count is not divisible by the interleaved
+    /// schedule's virtual-stage count, so the stage cannot be chunked.
+    LayersNotVirtualizable { group: usize, layers_per_stage: usize, virtual_stages: usize },
     /// A train-section stage prefix doesn't match its pipeline role.
     TrainStageRole { index: usize, prefix: String, expected: &'static str },
     /// The train section is structurally empty.
@@ -105,8 +109,13 @@ impl fmt::Display for PlanError {
                            number of {micro_tokens}-token micro-batches")
             }
             PlanError::ZeroMicroTokens => write!(f, "micro_tokens must be >= 1"),
-            PlanError::AlphaOutOfRange { alpha } => {
-                write!(f, "alpha {alpha} outside [0, inf)")
+            PlanError::VirtualStagesInvalid { virtual_stages } => {
+                write!(f, "interleaved schedule needs >= 2 virtual stages, got \
+                           {virtual_stages}")
+            }
+            PlanError::LayersNotVirtualizable { group, layers_per_stage, virtual_stages } => {
+                write!(f, "group {group}: {layers_per_stage} layers/stage do not chunk \
+                           into {virtual_stages} virtual stages")
             }
             PlanError::TrainStageRole { index, prefix, expected } => {
                 write!(f, "train stage {index}: prefix `{prefix}` does not match \

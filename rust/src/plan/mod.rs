@@ -24,15 +24,19 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::CommMode;
 use crate::coordinator::{StagePlan, TrainConfig};
-use crate::costmodel::{evaluate, tgs, Evaluation, GroupPlan, ModelShape, Strategy};
+use crate::costmodel::{evaluate, tgs, Evaluation, GroupPlan, ModelShape, Schedule, Strategy};
 use crate::hetero::{self, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
 use crate::precision::MRE_THRESHOLD;
 use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions, SimResult};
 use crate::topology::NicAssignment;
 use crate::util::json::{self, Value};
 
-/// Plan-file schema version.
-pub const PLAN_VERSION: u64 = 1;
+/// Plan-file schema version. Version 2 replaced the top-level `alpha`
+/// bubble coefficient with a `schedule` token inside `strategy`; version-1
+/// files still load, their `alpha` mapped through
+/// [`Schedule::from_alpha`] (see `docs/plan-format.md` for the full
+/// compatibility rules).
+pub const PLAN_VERSION: u64 = 2;
 
 /// Numeric-precision policy carried by a plan into real training runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -56,12 +60,19 @@ impl Default for PrecisionPolicy {
 pub struct TrainSpec {
     /// Artifact model name (e.g. `h2_tiny`), resolved via the manifest.
     pub model: String,
+    /// Pipeline stages in order (first → last).
     pub stages: Vec<StagePlan>,
+    /// Data-parallel replica count.
     pub dp: usize,
+    /// Micro-batches per pipeline per step.
     pub micro_batches: usize,
+    /// Training steps to run.
     pub steps: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Parameter-init and data seed.
     pub seed: u64,
+    /// Print a loss line every N steps (0 = silent).
     pub log_every: usize,
 }
 
@@ -73,25 +84,34 @@ pub struct TrainSpec {
 /// search's pseudo-subgroups, hence kept separate from `cluster.groups`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutionPlan {
+    /// Schema version of the serialized form ([`PLAN_VERSION`] after load,
+    /// whatever the file carried — loading migrates in memory).
     pub version: u64,
+    /// Human-readable plan name (shows up in CLI output).
     pub name: String,
+    /// Transformer shape the strategy was searched for.
     pub model: ModelShape,
     /// The physical cluster the plan was built for.
     pub cluster: Cluster,
     /// Stage-ordered groups matched 1:1 with `strategy.plans`.
     pub stage_groups: Vec<ChipGroup>,
+    /// The parallel strategy, including the pipeline [`Schedule`].
     pub strategy: Strategy,
     /// Global batch size in tokens.
     pub gbs_tokens: usize,
     /// Tokens per micro-batch (the paper pins micro batch size to 1 sequence).
     pub micro_tokens: usize,
-    /// Pipeline bubble coefficient (1.0 = 1F1B, 0.0 = ZB-V).
-    pub alpha: f64,
+    /// Cross-chip communication strategy.
     pub comm: CommMode,
+    /// Inter-stage activation resharding strategy.
     pub reshard: ReshardStrategy,
+    /// NIC selection policy (§5 affinity model).
     pub nic_assignment: NicAssignment,
+    /// Fine-grained P2P/compute overlap enabled.
     pub fine_overlap: bool,
+    /// Numeric-precision policy for real training runs.
     pub precision: PrecisionPolicy,
+    /// Optional real-training section (`h2 train --plan`).
     pub train: Option<TrainSpec>,
 }
 
@@ -99,6 +119,11 @@ impl ExecutionPlan {
     /// Stage-ordered group references, the shape the cost model/simulator eat.
     pub fn group_refs(&self) -> Vec<&ChipGroup> {
         self.stage_groups.iter().collect()
+    }
+
+    /// The pipeline schedule this plan executes (carried by the strategy).
+    pub fn schedule(&self) -> Schedule {
+        self.strategy.schedule
     }
 
     /// Simulation options implied by the plan's communication section.
@@ -113,7 +138,7 @@ impl ExecutionPlan {
 
     /// Evaluate the §4.3.2 closed-form cost model on this plan.
     pub fn evaluate(&self) -> Evaluation {
-        evaluate(&self.model, &self.group_refs(), &self.strategy, self.micro_tokens, self.alpha)
+        evaluate(&self.model, &self.group_refs(), &self.strategy, self.micro_tokens)
     }
 
     /// Run the discrete-event HeteroPP simulator on this plan.
@@ -133,8 +158,18 @@ impl ExecutionPlan {
     }
 
     /// Lower the plan into a [`TrainConfig`] for the real coordinator.
-    /// Errors if the plan has no `train` section.
+    /// Errors if the plan has no `train` section, or if its schedule is
+    /// not 1F1B — the real coordinator only executes the classic 1F1B
+    /// order, and silently running a zbv/interleaved plan as 1F1B would
+    /// divorce the real run from the plan's searched and simulated claims.
     pub fn train_config(&self) -> Result<TrainConfig> {
+        if self.strategy.schedule != Schedule::OneF1B {
+            bail!("plan `{}` uses the {} schedule, but the real training \
+                   coordinator only executes 1f1b — re-schedule the plan \
+                   (e.g. `h2 simulate --plan ... --schedule 1f1b` validates \
+                   the swap) before `h2 train`",
+                  self.name, self.strategy.schedule);
+        }
         let t = self
             .train
             .as_ref()
@@ -172,8 +207,25 @@ impl ExecutionPlan {
         if self.micro_tokens == 0 {
             errs.push(PlanError::ZeroMicroTokens);
         }
-        if !(self.alpha >= 0.0 && self.alpha.is_finite()) {
-            errs.push(PlanError::AlphaOutOfRange { alpha: self.alpha });
+        if let Schedule::Interleaved { virtual_stages } = self.strategy.schedule {
+            if virtual_stages < 2 {
+                errs.push(PlanError::VirtualStagesInvalid { virtual_stages });
+            } else {
+                for (i, p) in self.strategy.plans.iter().enumerate() {
+                    // Only meaningful once the layers split over the stages
+                    // at all (LayersNotUniform covers the rest).
+                    if p.s_pp > 0
+                        && p.layers % p.s_pp == 0
+                        && p.layers_per_stage() % virtual_stages != 0
+                    {
+                        errs.push(PlanError::LayersNotVirtualizable {
+                            group: i,
+                            layers_per_stage: p.layers_per_stage(),
+                            virtual_stages,
+                        });
+                    }
+                }
+            }
         }
         if self.strategy.s_dp == 0 {
             errs.push(PlanError::ZeroDp);
@@ -322,7 +374,6 @@ impl ExecutionPlan {
             ("strategy", strategy_to_json(&self.strategy)),
             ("gbs_tokens", json::num(self.gbs_tokens as f64)),
             ("micro_tokens", json::num(self.micro_tokens as f64)),
-            ("alpha", json::num(self.alpha)),
             ("comm", json::s(self.comm.token())),
             ("reshard", json::s(self.reshard.token())),
             ("nic_assignment", json::s(self.nic_assignment.token())),
@@ -344,12 +395,16 @@ impl ExecutionPlan {
         json::obj(fields)
     }
 
+    /// Pretty-printed JSON text (what plan files hold on disk).
     pub fn to_json_string(&self) -> String {
         self.to_json().to_string_pretty()
     }
 
     /// Deserialize from a JSON value, registering any embedded custom chips
-    /// first so the plan file is self-contained.
+    /// first so the plan file is self-contained. Version-1 files (scalar
+    /// `alpha` instead of a `schedule` token) are migrated in memory via
+    /// [`Schedule::from_alpha`]; the returned plan always carries
+    /// [`PLAN_VERSION`].
     pub fn from_json(v: &Value) -> Result<ExecutionPlan> {
         // Reject unsupported versions *before* touching the process-wide
         // chip registry, so a version-rejected file leaves no side effects.
@@ -374,8 +429,39 @@ impl ExecutionPlan {
             },
             None => PrecisionPolicy::default(),
         };
+        // Version 1 carried the schedule as a top-level scalar `alpha`;
+        // keep v1's validation (alpha in [0, inf)) so a corrupt file is
+        // still rejected rather than silently mapped to some schedule.
+        let legacy_schedule = if version < 2 {
+            let alpha = v.get("alpha")?.num()?;
+            if !(alpha >= 0.0 && alpha.is_finite()) {
+                bail!("version-1 plan has alpha {alpha} outside [0, inf)");
+            }
+            Some(Schedule::from_alpha(alpha))
+        } else {
+            None
+        };
+        let mut strategy = strategy_from_json(v.get("strategy")?, legacy_schedule)
+            .context("parsing `strategy`")?;
+        // A v1 alpha in (0.25, 0.75) maps to interleaving, which carries a
+        // structural constraint v1 never had (virtual stages must chunk
+        // every stage's layers). A v1 file whose layer layout cannot chunk
+        // was nevertheless valid under v1 — fall back to 1F1B (what v1's
+        // simulator actually executed) instead of rejecting it.
+        if legacy_schedule.is_some() {
+            if let Schedule::Interleaved { virtual_stages } = strategy.schedule {
+                let chunks = strategy.plans.iter().all(|p| {
+                    p.s_pp > 0
+                        && p.layers % p.s_pp == 0
+                        && p.layers_per_stage() % virtual_stages == 0
+                });
+                if !chunks {
+                    strategy.schedule = Schedule::OneF1B;
+                }
+            }
+        }
         Ok(ExecutionPlan {
-            version,
+            version: PLAN_VERSION,
             name: v.get("name")?.str()?.to_string(),
             model: model_from_json(v.get("model")?).context("parsing `model`")?,
             cluster: cluster_from_json(v.get("cluster")?).context("parsing `cluster`")?,
@@ -386,10 +472,9 @@ impl ExecutionPlan {
                 .map(group_from_json)
                 .collect::<Result<Vec<_>>>()
                 .context("parsing `stage_groups`")?,
-            strategy: strategy_from_json(v.get("strategy")?).context("parsing `strategy`")?,
+            strategy,
             gbs_tokens: v.get("gbs_tokens")?.usize()?,
             micro_tokens: v.get("micro_tokens")?.usize()?,
-            alpha: v.get("alpha")?.num()?,
             comm: parse_token(v.get("comm")?, "comm", CommMode::parse)?,
             reshard: parse_token(v.get("reshard")?, "reshard", ReshardStrategy::parse)?,
             nic_assignment: parse_token(
@@ -403,6 +488,7 @@ impl ExecutionPlan {
         })
     }
 
+    /// Parse a plan from JSON text (see [`ExecutionPlan::from_json`]).
     pub fn from_json_str(text: &str) -> Result<ExecutionPlan> {
         ExecutionPlan::from_json(&Value::parse(text)?)
     }
@@ -501,6 +587,7 @@ fn strategy_to_json(s: &Strategy) -> Value {
     json::obj(vec![
         ("s_dp", json::num(s.s_dp as f64)),
         ("micro_batches", json::num(s.micro_batches as f64)),
+        ("schedule", json::s(&s.schedule.token())),
         (
             "plans",
             json::arr(
@@ -520,7 +607,10 @@ fn strategy_to_json(s: &Strategy) -> Value {
     ])
 }
 
-fn strategy_from_json(v: &Value) -> Result<Strategy> {
+/// Parse a strategy object. `legacy_schedule` is the version-1 migration
+/// path (schedule derived from the file's top-level `alpha`); version-2
+/// strategies carry their own `schedule` token.
+fn strategy_from_json(v: &Value, legacy_schedule: Option<Schedule>) -> Result<Strategy> {
     let mut plans = Vec::new();
     for p in v.get("plans")?.arr()? {
         plans.push(GroupPlan {
@@ -530,9 +620,14 @@ fn strategy_from_json(v: &Value) -> Result<Strategy> {
             recompute: p.get("recompute")?.bool()?,
         });
     }
+    let schedule = match legacy_schedule {
+        Some(s) => s,
+        None => parse_token(v.get("schedule")?, "schedule", Schedule::parse)?,
+    };
     Ok(Strategy {
         s_dp: v.get("s_dp")?.usize()?,
         micro_batches: v.get("micro_batches")?.usize()?,
+        schedule,
         plans,
     })
 }
@@ -712,6 +807,7 @@ mod tests {
             .strategy(Strategy {
                 s_dp: 4,
                 micro_batches: 128,
+                schedule: Schedule::OneF1B,
                 plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
             })
             .gbs_tokens(exp.gbs_tokens)
@@ -733,7 +829,7 @@ mod tests {
         let plan = table6_a_plan();
         let exp = homogeneous_baseline(ChipKind::A);
         let groups = exp.cluster.groups_by_memory_desc();
-        let direct = evaluate(&H2_100B, &groups, &plan.strategy, H2_100B.seq_len, 1.0);
+        let direct = evaluate(&H2_100B, &groups, &plan.strategy, H2_100B.seq_len);
         let via_plan = plan.evaluate();
         assert_eq!(direct.iteration_seconds, via_plan.iteration_seconds);
         let sim_direct = simulate_iteration(
@@ -778,6 +874,7 @@ mod tests {
             .strategy(Strategy {
                 s_dp: 1,
                 micro_batches: 512,
+                schedule: Schedule::ZeroBubbleV,
                 plans: vec![GroupPlan { s_pp: 8, s_tp: 2, layers: 96, recompute: true }],
             })
             .gbs_tokens(512 * H2_100B.seq_len)
@@ -813,6 +910,80 @@ mod tests {
     }
 
     #[test]
+    fn interleaving_must_chunk_every_stage() {
+        // 96 layers over 16 stages = 6 layers/stage: v=2 and v=3 chunk it,
+        // v=4 does not.
+        let mut plan = table6_a_plan();
+        plan.strategy.schedule = Schedule::Interleaved { virtual_stages: 2 };
+        assert!(plan.validate().is_ok());
+        plan.strategy.schedule = Schedule::Interleaved { virtual_stages: 4 };
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::LayersNotVirtualizable {
+            group: 0,
+            layers_per_stage: 6,
+            virtual_stages: 4,
+        }));
+        plan.strategy.schedule = Schedule::Interleaved { virtual_stages: 1 };
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::VirtualStagesInvalid { virtual_stages: 1 }));
+    }
+
+    #[test]
+    fn version1_alpha_files_still_load() {
+        // A version-1 plan carries `alpha` at the top level and no
+        // `schedule` token in the strategy; loading migrates it.
+        let plan = table6_a_plan();
+        let mut v = plan.to_json();
+        match &mut v {
+            Value::Obj(m) => {
+                m.insert("version".to_string(), json::num(1.0));
+                m.insert("alpha".to_string(), json::num(0.0));
+                match m.get_mut("strategy") {
+                    Some(Value::Obj(s)) => {
+                        s.remove("schedule");
+                    }
+                    other => panic!("strategy must be an object, got {other:?}"),
+                }
+            }
+            other => panic!("plan must serialize to an object, got {other:?}"),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.version, PLAN_VERSION);
+        assert_eq!(back.strategy.schedule, Schedule::ZeroBubbleV);
+        assert_eq!(back.strategy.plans, plan.strategy.plans);
+        assert!(back.validate().is_ok());
+        // Re-serializing writes the current schema.
+        let roundtrip = ExecutionPlan::from_json(&back.to_json()).unwrap();
+        assert_eq!(roundtrip, back);
+
+        // Mid-range alphas map to interleaving — but only when the layer
+        // layout chunks; this one does (6 layers/stage, v=2)...
+        match &mut v {
+            Value::Obj(m) => {
+                m.insert("alpha".to_string(), json::num(0.5));
+            }
+            _ => unreachable!(),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.strategy.schedule,
+                   Schedule::Interleaved { virtual_stages: 2 });
+        assert!(back.validate().is_ok());
+        // ...and a layout that cannot chunk falls back to 1F1B (what v1
+        // actually executed) instead of rejecting a formerly-valid file.
+        match &mut v {
+            Value::Obj(m) => {
+                // alpha 0.26 -> round(1/0.26) = 4 virtual stages; 6
+                // layers/stage % 4 != 0, so interleaving cannot apply.
+                m.insert("alpha".to_string(), json::num(0.26));
+            }
+            _ => unreachable!(),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.strategy.schedule, Schedule::OneF1B);
+        assert!(back.validate().is_ok());
+    }
+
+    #[test]
     fn stage_groups_must_repartition_cluster() {
         let mut plan = table6_a_plan();
         plan.cluster = Cluster::new("bigger", vec![(ChipKind::A, 512)]);
@@ -822,6 +993,31 @@ mod tests {
             cluster: 512,
             stages: 256,
         }));
+    }
+
+    #[test]
+    fn train_rejects_non_1f1b_schedules() {
+        // The real coordinator executes 1F1B only; lowering a zbv plan
+        // into it must fail loudly rather than silently run 1F1B.
+        let mut plan = table6_a_plan();
+        plan.train = Some(TrainSpec {
+            model: "h2_tiny".into(),
+            stages: vec![
+                StagePlan { prefix: "first_l2".into(), chip: ChipKind::A },
+                StagePlan { prefix: "last_l2".into(), chip: ChipKind::B },
+            ],
+            dp: 1,
+            micro_batches: 2,
+            steps: 20,
+            lr: 1e-3,
+            seed: 42,
+            log_every: 10,
+        });
+        plan.strategy.schedule = Schedule::ZeroBubbleV;
+        let err = plan.train_config().unwrap_err().to_string();
+        assert!(err.contains("zbv"), "{err}");
+        plan.strategy.schedule = Schedule::OneF1B;
+        assert!(plan.train_config().is_ok());
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub const MRE_THRESHOLD: f64 = 0.015;
 /// Simulated vendor-stack numerics for one chip kind.
 #[derive(Clone, Debug)]
 pub struct Perturbation {
+    /// The chip kind whose vendor stack is being simulated.
     pub kind: ChipKind,
     /// Relative per-element gradient noise scale (accumulation-order model).
     pub rel_noise: f64,
@@ -30,6 +31,7 @@ pub struct Perturbation {
 }
 
 impl Perturbation {
+    /// Vendor-stack noise for `kind`, deterministic in `seed`.
     pub fn new(kind: ChipKind, seed: u64) -> Self {
         Perturbation { kind, rel_noise: spec(kind).op_noise, rng: Rng::new(seed ^ kind.seed_tag()) }
     }
@@ -82,9 +84,13 @@ impl Perturbation {
 /// Verdict of the model-level alignment check.
 #[derive(Clone, Debug)]
 pub struct AlignmentReport {
+    /// The chip whose alignment was checked.
     pub kind: ChipKind,
+    /// Mean relative error of the loss curve.
     pub mre: f64,
+    /// Whether the MRE is under the 1.5% criterion.
     pub aligned: bool,
+    /// Loss-curve length compared.
     pub n_iterations: usize,
 }
 
@@ -97,11 +103,15 @@ pub fn check_alignment(kind: ChipKind, reference: &[f64], measured: &[f64]) -> A
 /// Overflow/NaN detector (DiTorch's per-operator debugging tool).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct OverflowReport {
+    /// NaN elements seen.
     pub n_nan: usize,
+    /// Infinite elements seen.
     pub n_inf: usize,
+    /// Largest finite magnitude seen.
     pub max_abs: f32,
 }
 
+/// Scan a tensor for NaN/Inf and the largest finite magnitude.
 pub fn detect_overflow(xs: &[f32]) -> OverflowReport {
     let mut r = OverflowReport::default();
     for &x in xs {
@@ -120,11 +130,15 @@ pub fn detect_overflow(xs: &[f32]) -> OverflowReport {
 /// vendor operator's output and the reference implementation's.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OpDiff {
+    /// Worst element-wise relative error.
     pub max_rel: f64,
+    /// Mean element-wise relative error.
     pub mean_rel: f64,
+    /// Elements compared.
     pub n: usize,
 }
 
+/// Element-wise relative-error summary of a vendor op against the reference.
 pub fn compare_operator(reference: &[f32], vendor: &[f32]) -> OpDiff {
     assert_eq!(reference.len(), vendor.len());
     let mut max_rel = 0.0f64;

@@ -6,10 +6,17 @@ use anyhow::Result;
 
 use crate::auto::{search, SearchConfig, SearchResult};
 use crate::comm::CommMode;
-use crate::costmodel::{uniform_1f1b, GroupPlan, Strategy, H2_100B};
+use crate::costmodel::{uniform_1f1b, GroupPlan, Schedule, Strategy, H2_100B};
 use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
 use crate::plan::{ExecutionPlan, PlanBuilder};
 use crate::sim::{simulate_plan, ReshardStrategy};
+
+/// The paper ran everything on 1F1B; its tables are reproduced under a
+/// search pinned to that schedule so the comparisons stay like-for-like.
+/// The schedule axis itself is measured by [`schedule_axis`].
+fn paper_search_config() -> SearchConfig {
+    SearchConfig::pinned(Schedule::OneF1B)
+}
 
 /// Table 6 rows: (chip, PP, DP, TP, recompute, paper TGS).
 pub const TABLE6: [(ChipKind, usize, usize, usize, bool, f64); 4] = [
@@ -34,10 +41,15 @@ pub const TABLE8_PAPER: [(&str, f64); 3] =
 /// One Table 6 evaluation (homogeneous baseline).
 #[derive(Clone, Debug)]
 pub struct BaselineRow {
+    /// Which homogeneous chip this row measures.
     pub kind: ChipKind,
+    /// The Table 6 strategy behind the row.
     pub strategy: Strategy,
+    /// Closed-form cost-model TGS.
     pub model_tgs: f64,
+    /// Discrete-event simulator TGS.
     pub sim_tgs: f64,
+    /// The paper's measured TGS.
     pub paper_tgs: f64,
 }
 
@@ -47,6 +59,7 @@ pub fn table6_plan(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool) -
     let strategy = Strategy {
         s_dp: dp,
         micro_batches: exp.gbs_tokens / H2_100B.seq_len / dp,
+        schedule: Schedule::OneF1B,
         plans: vec![GroupPlan { s_pp: pp, s_tp: tp, layers: 96, recompute: rec }],
     };
     PlanBuilder::new(&format!("table6-{kind}"))
@@ -73,6 +86,7 @@ pub fn table6_row(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool,
     }
 }
 
+/// Evaluate every Table 6 homogeneous baseline.
 pub fn table6_all() -> Vec<BaselineRow> {
     TABLE6
         .iter()
@@ -83,12 +97,16 @@ pub fn table6_all() -> Vec<BaselineRow> {
 /// A Fig 11 heterogeneous result.
 #[derive(Clone, Debug)]
 pub struct HeteroRow {
+    /// Experiment index (Table 7).
     pub exp: String,
+    /// The HeteroAuto result behind the row.
     pub search: SearchResult,
+    /// Simulated TGS of the searched heterogeneous plan.
     pub sim_tgs: f64,
     /// HeteroSpeedupRatio against *our* simulated baselines (the paper's
     /// definition: N·TGS / Σ N_i·TGS_i).
     pub speedup_ratio: f64,
+    /// The paper's Fig 11 ratio, when reported.
     pub paper_ratio: Option<f64>,
 }
 
@@ -98,9 +116,9 @@ pub struct HeteroRow {
 /// artifact `h2 search --emit-plan` persists.
 pub fn hetero_row(exp_name: &str, baselines: &[BaselineRow]) -> Result<HeteroRow> {
     let exp = experiment(exp_name)?;
-    let cfg = SearchConfig::default();
+    let cfg = paper_search_config();
     let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
-    let plan = r.to_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+    let plan = r.to_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
     let sim = simulate_plan(&plan);
     let hetero_tgs = plan.tgs(sim.iteration_seconds);
 
@@ -130,16 +148,21 @@ pub fn hetero_row(exp_name: &str, baselines: &[BaselineRow]) -> Result<HeteroRow
 /// Table 9 ablation variants on Exp-C-1 (relative iteration time, % of full).
 #[derive(Clone, Debug)]
 pub struct AblationRow {
+    /// Human-readable ablation label.
     pub label: &'static str,
+    /// Iteration time relative to the full system, percent.
     pub relative_percent: f64,
+    /// The paper's Table 9 number, percent.
     pub paper_percent: f64,
 }
 
+/// The Table 9 component ablations on Exp-C-1 (1F1B baseline, as in the
+/// paper; the schedule axis is measured by [`schedule_axis`]).
 pub fn table9_ablation() -> Result<Vec<AblationRow>> {
     let exp = experiment("exp-c-1")?;
-    let cfg = SearchConfig::default();
+    let cfg = paper_search_config();
     let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
-    let base = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg);
+    let base = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
     let run = |plan: &ExecutionPlan| simulate_plan(plan).iteration_seconds;
     let full = run(&base);
 
@@ -181,6 +204,46 @@ pub fn table9_ablation() -> Result<Vec<AblationRow>> {
     Ok(rows)
 }
 
+/// One point on the pipeline-schedule axis of the Table 9 cluster.
+#[derive(Clone, Debug)]
+pub struct ScheduleAxisRow {
+    /// The schedule the search was pinned to.
+    pub schedule: Schedule,
+    /// Simulated iteration seconds of the best plan under that pin, or
+    /// `None` when no feasible strategy exists (interleaving can fail when
+    /// no layer allocation chunks evenly).
+    pub iteration_seconds: Option<f64>,
+    /// Simulated TGS for the same plan.
+    pub tgs: Option<f64>,
+}
+
+/// The schedule axis on the Table 9 cluster (Exp-C-1): HeteroAuto pinned
+/// to each schedule in turn, winner simulated by the discrete-event
+/// executor. This is the measurement the paper's single-`α` ablation could
+/// not make — the schedules now differ in issue order, not just a
+/// coefficient.
+pub fn schedule_axis(exp_name: &str) -> Result<Vec<ScheduleAxisRow>> {
+    let exp = experiment(exp_name)?;
+    let mut rows = Vec::new();
+    for schedule in Schedule::SEARCH_SPACE {
+        let cfg = SearchConfig::pinned(schedule);
+        let row = match search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
+            Ok(r) => {
+                let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+                let sim = simulate_plan(&plan);
+                ScheduleAxisRow {
+                    schedule,
+                    iteration_seconds: Some(sim.iteration_seconds),
+                    tgs: Some(plan.tgs(sim.iteration_seconds)),
+                }
+            }
+            Err(_) => ScheduleAxisRow { schedule, iteration_seconds: None, tgs: None },
+        };
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +266,18 @@ mod tests {
         let a2 = hetero_row("exp-a-2", &baselines).unwrap();
         assert!(a2.speedup_ratio > 100.0, "exp-a-2 ratio {}", a2.speedup_ratio);
         assert!(a1.speedup_ratio < a2.speedup_ratio);
+    }
+
+    #[test]
+    fn schedule_axis_covers_every_variant() {
+        let rows = schedule_axis("exp-a-1").unwrap();
+        assert_eq!(rows.len(), Schedule::SEARCH_SPACE.len());
+        // The paper's 1F1B baseline always exists on the Table 7 clusters.
+        let f1b1 = rows[0].iteration_seconds.expect("1F1B must be feasible");
+        assert!(f1b1.is_finite() && f1b1 > 0.0);
+        // The zero-bubble schedule shares 1F1B's memory envelope, so it is
+        // feasible whenever 1F1B is.
+        assert!(rows[2].iteration_seconds.is_some());
     }
 
     #[test]

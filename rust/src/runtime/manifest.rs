@@ -10,18 +10,23 @@ use crate::util::json::Value;
 /// Tensor metadata (shape + dtype) for artifact inputs/outputs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorMeta {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element type (`f32`, `i32`, ...).
     pub dtype: String,
 }
 
 /// Named parameter in a stage's flat parameter list (the wire ABI).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamMeta {
+    /// Parameter name (artifact input order).
     pub name: String,
+    /// Parameter dimensions.
     pub shape: Vec<usize>,
 }
 
 impl ParamMeta {
+    /// Total element count of the parameter.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -30,33 +35,51 @@ impl ParamMeta {
 /// One exported artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// HLO text file, relative to the artifact root.
     pub file: String,
+    /// Input signature in call order.
     pub inputs: Vec<TensorMeta>,
+    /// Output signature in return order.
     pub outputs: Vec<TensorMeta>,
+    /// Pipeline role hint (`first`/`mid`/`last`), when exported.
     pub role: Option<String>,
+    /// Layer count of the stage, when exported.
     pub n_layers: Option<usize>,
+    /// Micro-batch rows baked into the artifact, when exported.
     pub micro_batch: Option<usize>,
+    /// Sequence length baked into the artifact, when exported.
     pub seq: Option<usize>,
+    /// Trainable parameters in artifact input order.
     pub params: Vec<ParamMeta>,
 }
 
 /// One exported model (config + artifact set).
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Decoder layer count.
     pub n_layers: usize,
+    /// Model width.
     pub hidden: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Key/value heads (GQA).
     pub n_kv_heads: usize,
+    /// MLP intermediate width.
     pub intermediate: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length the artifacts were compiled for.
     pub seq_len: usize,
+    /// Total trainable parameters.
     pub param_count: usize,
+    /// Every compiled artifact of the model, by name.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
 /// Full manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Every model in the artifact set, by name.
     pub models: BTreeMap<String, ModelEntry>,
 }
 
@@ -67,6 +90,7 @@ fn tensor_meta(v: &Value) -> Result<TensorMeta> {
 }
 
 impl Manifest {
+    /// Read and validate `manifest.json`.
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let path = path.as_ref();
         let v = Value::from_file(path.to_str().unwrap())
@@ -114,6 +138,7 @@ impl Manifest {
         Ok(Manifest { models })
     }
 
+    /// Look up a model entry by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         match self.models.get(name) {
             Some(m) => Ok(m),
@@ -122,6 +147,7 @@ impl Manifest {
         }
     }
 
+    /// Look up one artifact of a model.
     pub fn artifact(&self, model: &str, artifact: &str) -> Result<&ArtifactMeta> {
         let m = self.model(model)?;
         match m.artifacts.get(artifact) {

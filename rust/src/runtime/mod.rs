@@ -32,25 +32,31 @@ pub use manifest::{ArtifactMeta, Manifest, ModelEntry, ParamMeta, TensorMeta};
 /// A host-side tensor (f32 or i32), the coordinator's working currency.
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {
+    /// Dense f32 tensor (row-major).
     F32 { shape: Vec<usize>, data: Vec<f32> },
+    /// Dense i32 tensor (row-major, token ids).
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
 impl HostTensor {
+    /// Build an f32 tensor; panics if `data` does not fill `shape`.
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor::F32 { shape: shape.to_vec(), data }
     }
 
+    /// Build an i32 tensor; panics if `data` does not fill `shape`.
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor::I32 { shape: shape.to_vec(), data }
     }
 
+    /// A rank-0 f32 scalar.
     pub fn scalar_f32(x: f32) -> Self {
         HostTensor::F32 { shape: vec![], data: vec![x] }
     }
 
+    /// Same shape and dtype, zero-filled.
     pub fn zeros_like(&self) -> Self {
         match self {
             HostTensor::F32 { shape, data } =>
@@ -60,12 +66,14 @@ impl HostTensor {
         }
     }
 
+    /// Tensor dimensions.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32 { data, .. } => data.len(),
@@ -73,10 +81,12 @@ impl HostTensor {
         }
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow the f32 payload, or error for i32 tensors.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
@@ -84,6 +94,7 @@ impl HostTensor {
         }
     }
 
+    /// Mutably borrow the f32 payload, or error for i32 tensors.
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
@@ -117,7 +128,9 @@ impl HostTensor {
 /// One compiled artifact, ready to execute.
 #[cfg(feature = "pjrt")]
 pub struct Executable {
+    /// `model/artifact` identifier.
     pub name: String,
+    /// Input/output signature and parameter list.
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
@@ -127,12 +140,15 @@ pub struct Executable {
 /// artifact metadata so planning/arity code works, but cannot run.
 #[cfg(not(feature = "pjrt"))]
 pub struct Executable {
+    /// `model/artifact` identifier.
     pub name: String,
+    /// Input/output signature and parameter list.
     pub meta: ArtifactMeta,
 }
 
 #[cfg(not(feature = "pjrt"))]
 impl Executable {
+    /// Always errors: execution needs the xla-backed build.
     pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         bail!("{}: built without the `pjrt` feature — real execution needs \
                the xla-backed runtime (add the `xla` crate and build with \
@@ -189,6 +205,7 @@ impl Executable {
 pub struct Runtime {
     client: xla::PjRtClient,
     root: PathBuf,
+    /// The validated artifact manifest.
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
@@ -199,6 +216,7 @@ pub struct Runtime {
 pub struct Runtime {
     #[allow(dead_code)]
     root: PathBuf,
+    /// The validated artifact manifest.
     pub manifest: Manifest,
 }
 
@@ -212,6 +230,7 @@ impl Runtime {
         Ok(Runtime { root, manifest })
     }
 
+    /// PJRT platform name (the stub reports itself as such).
     pub fn platform(&self) -> String {
         "stub (no pjrt feature)".to_string()
     }
@@ -235,6 +254,7 @@ impl Runtime {
         Ok(Runtime { client, root, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// PJRT platform name.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

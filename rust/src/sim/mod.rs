@@ -1,6 +1,7 @@
-//! HeteroPP pipeline simulator: discrete-event 1F1B execution at full
-//! cluster scale, with activation-resharding strategies and the Table 9
-//! ablation axes.
+//! HeteroPP pipeline simulator: discrete-event execution at full cluster
+//! scale with a real issue order per pipeline schedule (1F1B, interleaved,
+//! zero-bubble — see [`crate::costmodel::Schedule`]), activation-resharding
+//! strategies, and the Table 9 ablation axes.
 
 pub mod pipeline;
 pub mod reshard;

@@ -20,12 +20,16 @@ use crate::topology::NicAssignment;
 /// Resharding strategy at pipeline-stage boundaries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReshardStrategy {
+    /// Naive sequential P2P between mismatched TP groups.
     NaiveP2p,
+    /// Root-gather + tree broadcast to the destination group.
     Broadcast,
+    /// The paper's SR&AG: sliced send/recv then all-gather (§4.2).
     SendRecvAllGather,
 }
 
 impl ReshardStrategy {
+    /// Canonical token (`naive`, `bcast`, `srag`).
     pub fn name(self) -> &'static str {
         match self {
             ReshardStrategy::NaiveP2p => "naive P2P",
@@ -34,6 +38,7 @@ impl ReshardStrategy {
         }
     }
 
+    /// Parse a canonical token.
     pub fn parse(s: &str) -> Option<ReshardStrategy> {
         match s.to_ascii_lowercase().as_str() {
             "naive" | "naive-p2p" => Some(ReshardStrategy::NaiveP2p),
@@ -59,7 +64,9 @@ impl ReshardStrategy {
 /// collective tail are bursty and stay exposed).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ReshardCost {
+    /// Total reshard seconds for one hop.
     pub total: f64,
+    /// Portion of the total hideable under compute by fine-grained overlap.
     pub overlappable: f64,
 }
 

@@ -26,6 +26,7 @@ pub enum NicAssignment {
 }
 
 impl NicAssignment {
+    /// Parse a policy token (`affinity`, `non-affinity`).
     pub fn parse(s: &str) -> Option<NicAssignment> {
         match s.to_ascii_lowercase().as_str() {
             "affinity" => Some(NicAssignment::Affinity),
@@ -83,13 +84,19 @@ pub fn intra_node_matrix(spec: &ChipSpec) -> Vec<Vec<f64>> {
 /// Summary of one server design's intra-node behaviour (Fig 3 rows).
 #[derive(Clone, Debug)]
 pub struct IntraNodeProfile {
+    /// The chip/server design profiled.
     pub kind: ChipKind,
+    /// Slowest chip-to-chip bandwidth in the node.
     pub min_gbps: f64,
+    /// Fastest chip-to-chip bandwidth in the node.
     pub max_gbps: f64,
+    /// Whether every pair communicates at the same rate.
     pub uniform: bool,
+    /// Largest uniform-bandwidth TP group.
     pub tp_max: usize,
 }
 
+/// Summarize one server design's intra-node bandwidth shape (Fig 3 row).
 pub fn intra_node_profile(spec: &ChipSpec) -> IntraNodeProfile {
     let m = intra_node_matrix(spec);
     let mut lo = f64::INFINITY;

@@ -10,6 +10,7 @@ use std::time::Instant;
 use super::stats::{summarize, Summary};
 use super::table::{fmt_duration, Table};
 
+/// A named set of repeated-timing micro-benchmarks.
 pub struct Bench {
     name: String,
     warmup_iters: usize,
@@ -19,6 +20,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// A bench set with default warmup/iteration budgets.
     pub fn new(name: &str) -> Self {
         Bench {
             name: name.to_string(),
@@ -29,16 +31,19 @@ impl Bench {
         }
     }
 
+    /// Set warmup iterations per case.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup_iters = n;
         self
     }
 
+    /// Set the minimum timed iterations per case.
     pub fn min_iters(mut self, n: usize) -> Self {
         self.min_iters = n;
         self
     }
 
+    /// Set the wall-clock budget per case, seconds.
     pub fn max_seconds(mut self, s: f64) -> Self {
         self.max_seconds = s;
         self

@@ -7,11 +7,15 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 #[derive(Debug, Default, Clone)]
+/// Parsed command line: positionals plus `--key[=value]` flags.
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key` flags and their values.
     pub flags: BTreeMap<String, String>,
 }
 
+/// Sentinel value stored for value-less `--flag` switches.
 pub const FLAG_SET: &str = "true";
 
 impl Args {
@@ -39,22 +43,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether a flag was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// A flag's raw value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer flag with a default; errors on non-numeric input.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -62,6 +71,7 @@ impl Args {
         }
     }
 
+    /// u64 flag with a default; errors on non-numeric input.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -69,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Float flag with a default; errors on non-numeric input.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -76,6 +87,7 @@ impl Args {
         }
     }
 
+    /// A flag that must be present, with a helpful error.
     pub fn required(&self, key: &str) -> Result<&str> {
         match self.get(key) {
             Some(v) => Ok(v),

@@ -11,16 +11,24 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
+/// A dynamically-typed JSON value.
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64, like the grammar).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -32,6 +40,7 @@ impl Value {
         Ok(v)
     }
 
+    /// Read and parse a JSON file with path context.
     pub fn from_file(path: &str) -> Result<Value> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path}"))?;
@@ -40,6 +49,7 @@ impl Value {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Required object key, with a `missing key` error.
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
             Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key `{key}`")),
@@ -47,6 +57,7 @@ impl Value {
         }
     }
 
+    /// Optional object key.
     pub fn opt(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -54,6 +65,7 @@ impl Value {
         }
     }
 
+    /// The string payload, or a type error.
     pub fn str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -61,6 +73,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, or a type error.
     pub fn num(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -68,6 +81,7 @@ impl Value {
         }
     }
 
+    /// The payload as a non-negative integer, or an error.
     pub fn u64(&self) -> Result<u64> {
         let n = self.num()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -76,10 +90,12 @@ impl Value {
         Ok(n as u64)
     }
 
+    /// The payload as a usize, or an error.
     pub fn usize(&self) -> Result<usize> {
         Ok(self.u64()? as usize)
     }
 
+    /// The boolean payload, or a type error.
     pub fn bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -87,6 +103,7 @@ impl Value {
         }
     }
 
+    /// The array payload, or a type error.
     pub fn arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -94,6 +111,7 @@ impl Value {
         }
     }
 
+    /// The object payload, or a type error.
     pub fn obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -103,6 +121,7 @@ impl Value {
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -178,14 +197,17 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// An array value from items.
 pub fn arr(items: Vec<Value>) -> Value {
     Value::Arr(items)
 }
 
+/// A numeric value.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// A string value.
 pub fn s(text: &str) -> Value {
     Value::Str(text.to_string())
 }

@@ -31,6 +31,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -48,6 +49,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -58,6 +60,7 @@ impl Rng {
         lo + self.next_u64() % (hi - lo)
     }
 
+    /// Uniform usize in [lo, hi).
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range(lo as u64, hi as u64) as usize
     }
@@ -69,6 +72,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Normal f32 with the given mean and standard deviation.
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32
     }

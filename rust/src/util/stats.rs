@@ -3,21 +3,31 @@
 /// Summary statistics over a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
+/// Arithmetic mean (NaN for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { return f64::NAN; }
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Sample standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 { return 0.0; }
     let m = mean(xs);
@@ -35,6 +45,7 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Five-number summary of a sample.
 pub fn summarize(xs: &[f64]) -> Summary {
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -8,6 +8,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -16,17 +17,20 @@ impl Table {
         }
     }
 
+    /// Add a title line above the table.
     pub fn with_title(mut self, title: &str) -> Self {
         self.title = Some(title.to_string());
         self
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Render to a string with padded columns.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -69,6 +73,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

@@ -8,7 +8,7 @@ use std::path::PathBuf;
 use std::process::Command;
 
 use h2::auto::{search, SearchConfig};
-use h2::costmodel::H2_100B;
+use h2::costmodel::{Schedule, H2_100B};
 use h2::hetero::{ChipKind, Cluster};
 use h2::plan::ExecutionPlan;
 use h2::sim::simulate_plan;
@@ -61,7 +61,7 @@ fn search_emit_plan_then_simulate_matches_in_process_bit_for_bit() {
     let gbs = 1024 * 1024;
     let cfg = SearchConfig::default();
     let r = search(&H2_100B, &cluster, gbs, &cfg).unwrap();
-    let plan = r.into_plan(&H2_100B, &cluster, gbs, &cfg);
+    let plan = r.into_plan(&H2_100B, &cluster, gbs);
     let in_process = format!("{:.17e}", simulate_plan(&plan).iteration_seconds);
 
     assert_eq!(cli_iter, in_process, "plan file round-trip changed the simulation");
@@ -130,6 +130,46 @@ fn config_flag_works_across_subcommands() {
         let out = h2_bin().args([sub, "--config", "/nonexistent/h2.json"]).output().unwrap();
         assert!(!out.status.success(), "{sub} should fail on a missing config");
     }
+}
+
+#[test]
+fn schedule_flag_pins_search_and_reschedules_plans() {
+    let dir = tmp_dir("schedule");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+
+    // Pin the search to the zero-bubble schedule; the emitted plan must
+    // carry it.
+    run_ok(h2_bin().args([
+        "search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1",
+        "--schedule", "zbv", "--emit-plan", plan_path,
+    ]));
+    let plan = ExecutionPlan::load(plan_path).unwrap();
+    assert_eq!(plan.strategy.schedule, Schedule::ZeroBubbleV);
+
+    // Simulating the plan reports the schedule it runs under...
+    let stdout = run_ok(h2_bin().args(["simulate", "--plan", plan_path]));
+    assert!(stdout.contains("zbv"), "simulate output should name the schedule:\n{stdout}");
+
+    // ...and --schedule re-schedules a persisted plan without re-searching.
+    let stdout = run_ok(h2_bin().args([
+        "simulate", "--plan", plan_path, "--schedule", "1f1b",
+    ]));
+    assert!(stdout.contains("1f1b"), "override output:\n{stdout}");
+    let zbv: f64 = parse_iteration_seconds(
+        &run_ok(h2_bin().args(["simulate", "--plan", plan_path])),
+    ).parse().unwrap();
+    let f1b1: f64 = parse_iteration_seconds(&stdout).parse().unwrap();
+    assert!(zbv <= f1b1 * 1.05,
+            "zero-bubble {zbv} should not be materially slower than 1F1B {f1b1} \
+             on the same plan");
+
+    // A bogus schedule token fails loudly.
+    let out = h2_bin()
+        .args(["simulate", "--plan", plan_path, "--schedule", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bad --schedule must be rejected");
 }
 
 #[test]

@@ -4,7 +4,7 @@
 
 use h2::auto::{search, SearchConfig};
 use h2::comm::{cross_node_time, p2p_latency, CommMode};
-use h2::costmodel::{evaluate, GroupPlan, Strategy, H2_100B, MEMORY_SAFETY};
+use h2::costmodel::{evaluate, GroupPlan, Schedule, Strategy, H2_100B, MEMORY_SAFETY};
 use h2::hetero::{experiment, spec, ChipKind, Cluster, ALL_EXPERIMENTS};
 use h2::sim::{simulate_iteration, SimOptions};
 use h2::topology::NicAssignment;
@@ -34,15 +34,54 @@ fn every_experiment_search_is_consistent() {
         for (g, &mem) in r.groups.iter().zip(&r.eval.peak_memory) {
             assert!(mem <= g.spec.memory_bytes() * MEMORY_SAFETY + 1.0, "{exp_name}");
         }
-        // Invariant 6: the simulator agrees with the cost model within 25%
-        // (they share profiles but schedule independently).
+        // Invariant 6: the simulator agrees with the cost model (they share
+        // profiles but schedule independently). 1F1B matches within 25%;
+        // the other schedules carry discrete-event effects the closed
+        // form's single coefficient cannot see (the zero-bubble warm-up
+        // residual, interleaving's wrap-around hops), so their band is
+        // wider.
         let grefs: Vec<&h2::hetero::ChipGroup> = r.groups.iter().collect();
         let sim = simulate_iteration(&H2_100B, &grefs, &r.strategy, H2_100B.seq_len,
                                      &SimOptions::default());
         let rel = (sim.iteration_seconds - r.eval.iteration_seconds).abs()
             / r.eval.iteration_seconds;
-        assert!(rel < 0.25, "{exp_name}: sim {} vs model {}",
-                sim.iteration_seconds, r.eval.iteration_seconds);
+        let tol = match r.strategy.schedule {
+            Schedule::OneF1B => 0.25,
+            _ => 0.5,
+        };
+        assert!(rel < tol, "{exp_name} ({}): sim {} vs model {}",
+                r.strategy.schedule, sim.iteration_seconds, r.eval.iteration_seconds);
+    }
+}
+
+#[test]
+fn per_schedule_parity_on_searched_plans() {
+    // For each schedule variant: pin the search, package the winner as a
+    // plan, and check the discrete-event simulator against the closed-form
+    // view of the *same* strategy. 1F1B is the calibrated pair; the other
+    // schedules stay within a wider band (their issue-order effects are
+    // folded into one coefficient in the closed form).
+    let exp = experiment("exp-a-1").unwrap();
+    for (schedule, tol) in [
+        (Schedule::OneF1B, 0.25),
+        (Schedule::Interleaved { virtual_stages: 2 }, 0.5),
+        (Schedule::ZeroBubbleV, 0.5),
+    ] {
+        let cfg = SearchConfig::pinned(schedule);
+        let r = match search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
+            Ok(r) => r,
+            // Interleaving may be infeasible on a heterogeneous cluster
+            // when no layer split chunks evenly — nothing to compare then.
+            Err(_) => continue,
+        };
+        assert_eq!(r.strategy.schedule, schedule);
+        let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+        let sim = plan.simulate();
+        let cm = plan.evaluate();
+        let rel = (sim.iteration_seconds - cm.iteration_seconds).abs()
+            / cm.iteration_seconds;
+        assert!(rel < tol, "{schedule}: sim {} vs model {} (rel {rel})",
+                sim.iteration_seconds, cm.iteration_seconds);
     }
 }
 
@@ -61,10 +100,14 @@ fn search_monotone_in_batch_size() {
 #[test]
 fn random_feasible_strategies_never_beat_search() {
     // Property: HeteroAuto's pick is at least as good as random feasible
-    // strategies drawn from the same space.
+    // strategies drawn from the same space (both sides pinned to 1F1B so
+    // the comparison is schedule-for-schedule).
     let exp = experiment("exp-a-1").unwrap();
     let best = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
-                      &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
+                      &SearchConfig {
+                          two_stage: false,
+                          ..SearchConfig::pinned(Schedule::OneF1B)
+                      }).unwrap();
     let groups: Vec<h2::hetero::ChipGroup> =
         exp.cluster.groups_by_memory_desc().into_iter().cloned().collect();
     let sequences = exp.gbs_tokens / H2_100B.seq_len;
@@ -101,9 +144,14 @@ fn random_feasible_strategies_never_beat_search() {
         if remaining != 0 || plans.iter().any(|p| p.layers == 0 || p.layers % p.s_pp != 0) {
             return Ok(());
         }
-        let strategy = Strategy { s_dp, micro_batches: sequences / s_dp, plans };
+        let strategy = Strategy {
+            s_dp,
+            micro_batches: sequences / s_dp,
+            schedule: Schedule::OneF1B,
+            plans,
+        };
         let grefs: Vec<&h2::hetero::ChipGroup> = groups.iter().collect();
-        let eval = evaluate(&H2_100B, &grefs, &strategy, H2_100B.seq_len, 1.0);
+        let eval = evaluate(&H2_100B, &grefs, &strategy, H2_100B.seq_len);
         if !eval.feasible {
             return Ok(());
         }
@@ -171,14 +219,20 @@ fn tiny_cluster_survives_only_via_offload() {
 }
 
 #[test]
-fn zero_bubble_alpha_improves_every_experiment() {
+fn zero_bubble_schedule_improves_every_experiment() {
     for exp_name in ["exp-a-1", "exp-c-1"] {
         let exp = experiment(exp_name).unwrap();
         let f1b1 = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
-                          &SearchConfig { alpha: 1.0, two_stage: false, ..Default::default() })
+                          &SearchConfig {
+                              two_stage: false,
+                              ..SearchConfig::pinned(Schedule::OneF1B)
+                          })
             .unwrap();
         let zbv = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
-                         &SearchConfig { alpha: 0.0, two_stage: false, ..Default::default() })
+                         &SearchConfig {
+                             two_stage: false,
+                             ..SearchConfig::pinned(Schedule::ZeroBubbleV)
+                         })
             .unwrap();
         assert!(zbv.eval.iteration_seconds < f1b1.eval.iteration_seconds, "{exp_name}");
     }

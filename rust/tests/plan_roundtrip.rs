@@ -7,7 +7,7 @@
 
 use h2::comm::CommMode;
 use h2::coordinator::StagePlan;
-use h2::costmodel::{GroupPlan, ModelShape, Strategy};
+use h2::costmodel::{GroupPlan, ModelShape, Schedule, Strategy};
 use h2::hetero::{register_custom, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
 use h2::plan::{ExecutionPlan, PlanBuilder, PrecisionPolicy, TrainSpec, PLAN_VERSION};
 use h2::sim::ReshardStrategy;
@@ -78,10 +78,19 @@ fn random_groups(rng: &mut Rng, custom: ChipKind) -> Vec<ChipGroup> {
         .collect()
 }
 
+fn random_schedule(rng: &mut Rng) -> Schedule {
+    match rng.usize(0, 3) {
+        0 => Schedule::OneF1B,
+        1 => Schedule::Interleaved { virtual_stages: rng.usize(2, 9) },
+        _ => Schedule::ZeroBubbleV,
+    }
+}
+
 fn random_strategy(rng: &mut Rng, n_groups: usize) -> Strategy {
     Strategy {
         s_dp: rng.usize(1, 65),
         micro_batches: rng.usize(1, 1025),
+        schedule: random_schedule(rng),
         plans: (0..n_groups)
             .map(|_| GroupPlan {
                 s_pp: rng.usize(1, 65),
@@ -125,7 +134,6 @@ fn random_plan(rng: &mut Rng) -> ExecutionPlan {
         strategy,
         gbs_tokens: rng.usize(1, 1 << 24),
         micro_tokens: rng.usize(1, 1 << 14),
-        alpha: if rng.f64() < 0.5 { 1.0 } else { rng.f64() },
         comm: *rng.choose(&comms),
         reshard: *rng.choose(&reshards),
         nic_assignment: if rng.f64() < 0.5 {
@@ -146,6 +154,13 @@ fn from_json_to_json_is_identity() {
         let value = plan.to_json();
         let back = ExecutionPlan::from_json(&value)
             .map_err(|e| format!("from_json failed: {e:#}"))?;
+        // The schedule is the newest field — call out its drift explicitly
+        // before the whole-plan comparison.
+        prop::assert_prop(
+            back.strategy.schedule == plan.strategy.schedule,
+            format!("schedule drift: {} vs {}", plan.strategy.schedule,
+                    back.strategy.schedule),
+        )?;
         prop::assert_prop(back == plan, format!("round-trip drift:\n{plan:?}\nvs\n{back:?}"))?;
         // And through the textual form (what plan files actually hold).
         let back2 = ExecutionPlan::from_json_str(&plan.to_json_string())
@@ -163,6 +178,7 @@ fn valid_plans_stay_valid_across_roundtrip() {
         .strategy(Strategy {
             s_dp: 4,
             micro_batches: 128,
+            schedule: Schedule::Interleaved { virtual_stages: 2 },
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
         })
         .gbs_tokens(exp.gbs_tokens)
