@@ -1,7 +1,8 @@
 //! Figure 7 — cross-chip P2P latency by communication strategy over the
-//! message-size sweep, plus hot-path timing of the model itself.
+//! message-size sweep, the collective-algorithm axis of the DiComm engine
+//! on a two-node fabric, plus hot-path timing of the model itself.
 
-use h2::comm::{p2p_latency, CommMode};
+use h2::comm::{allreduce_cost, p2p_latency, CommAlgo, CommMode, CommTopology, LinkTime};
 use h2::util::bench::Bench;
 use h2::util::table::{fmt_bytes, fmt_duration, Table};
 
@@ -33,6 +34,46 @@ fn main() {
     assert!((avg - 9.94).abs() < 1.2, "average ratio {avg} drifted from paper");
     assert!((min - 1.79).abs() < 0.1 && (max - 16.0).abs() < 0.2);
     println!("OK: Fig 7 shape reproduced");
+
+    // Collective-algorithm axis: one allreduce over 2 nodes x 8 ranks,
+    // NVLink-class intra fabric (200 GB/s) vs a ~10 GB/s NIC flow —
+    // closed-form engine costs per algorithm and the auto selection.
+    let topo = CommTopology {
+        n_ranks: 16,
+        ranks_per_node: 8,
+        intra: LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 },
+        inter: LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 },
+    };
+    let mut t = Table::new(&["size", "ring", "tree", "rhd", "hierarchical", "auto picks"])
+        .with_title("Comm-algo axis — allreduce on 2 nodes x 8 ranks (intra 20x NIC)");
+    for &bytes in &sizes {
+        let cost = |a| allreduce_cost(a, bytes, &topo).seconds;
+        let pick = CommAlgo::Auto.resolve(bytes, &topo);
+        t.row(vec![
+            fmt_bytes(bytes as f64),
+            fmt_duration(cost(CommAlgo::Ring)),
+            fmt_duration(cost(CommAlgo::Tree)),
+            fmt_duration(cost(CommAlgo::RecursiveHalvingDoubling)),
+            fmt_duration(cost(CommAlgo::Hierarchical)),
+            pick.token().to_string(),
+        ]);
+        // Shape checks: with the intra fabric 20x the NIC path, the
+        // two-level schedule never loses to the flat ring, halving-
+        // doubling never loses to the tree, and auto is the pointwise
+        // minimum over the concrete algorithms.
+        assert!(cost(CommAlgo::Hierarchical) <= cost(CommAlgo::Ring), "{bytes}");
+        assert!(cost(CommAlgo::RecursiveHalvingDoubling) <= cost(CommAlgo::Tree), "{bytes}");
+        let auto = allreduce_cost(CommAlgo::Auto, bytes, &topo).seconds;
+        let best = CommAlgo::CONCRETE
+            .iter()
+            .map(|&a| cost(a))
+            .fold(f64::INFINITY, f64::min);
+        assert!(auto == best, "auto {auto} vs best {best} at {bytes}");
+    }
+    t.print();
+    assert_eq!(CommAlgo::Auto.resolve(64 << 20, &topo), CommAlgo::Hierarchical,
+               "large messages on this fabric must go hierarchical");
+    println!("OK: comm-algo axis measured (hierarchical <= flat ring throughout)");
 
     // Hot-path timing of the latency model itself (used inside the
     // simulator's inner loop — must stay trivially cheap).

@@ -1,20 +1,37 @@
 //! §Perf — hot-path micro-benchmarks for the L3 coordinator substrates:
-//! the simulator inner loop, HeteroAuto search, ring allreduce, the fabric
-//! send/recv path and the JSON/manifest parser. Tracked in EXPERIMENTS.md
-//! §Perf (before/after per optimization).
+//! the simulator inner loop, HeteroAuto search, the DiComm collective
+//! library (ring and hierarchical allreduces, closed-form pricing), the
+//! fabric send/recv path and the JSON/manifest parser. Tracked in
+//! EXPERIMENTS.md §Perf (before/after per optimization).
+//!
+//! Doubles as the CI perf-regression guard:
+//!
+//! ```bash
+//! cargo bench --bench perf_hotpath -- --baseline BENCH_baseline.json
+//! cargo bench --bench perf_hotpath -- --write-baseline BENCH_baseline.json
+//! ```
+//!
+//! `--baseline` compares each benchmark's p50 against the checked-in
+//! per-bench budget and exits non-zero when one exceeds `threshold x`
+//! budget (the file's `threshold` key, a deliberately generous 2x by
+//! default — the budgets are ceilings for slow CI runners, not measured
+//! laptop numbers). `--write-baseline` snapshots the current p50s
+//! instead, for regenerating the file on a reference machine.
 
 use h2::auto::{search, SearchConfig};
-use h2::comm::collectives::ring_allreduce;
-use h2::comm::fabric;
+use h2::comm::collectives::{hierarchical_allreduce, ring_allreduce};
+use h2::comm::{allreduce_cost, fabric, CommAlgo, CommTopology, LinkTime};
 use h2::costmodel::{GroupPlan, Schedule, Strategy, H2_100B};
 use h2::hetero::{experiment, homogeneous_baseline, ChipKind};
 use h2::sim::{simulate_iteration, SimOptions};
 use h2::util::bench::Bench;
-use h2::util::json::Value;
+use h2::util::cli::Args;
+use h2::util::json::{self, Value};
 use h2::util::rng::Rng;
 use std::sync::Arc;
 
 fn main() {
+    let args = Args::from_env();
     let mut b = Bench::new("h2 hot paths").max_seconds(2.5);
 
     // Simulator: the Fig 11 inner loop (one full 1F1B iteration at scale).
@@ -24,6 +41,7 @@ fn main() {
         s_dp: 4,
         micro_batches: 128,
         schedule: Schedule::OneF1B,
+        comm_algo: CommAlgo::Ring,
         plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
     };
     b.run("sim: 16-stage x 128-micro 1F1B", || {
@@ -52,7 +70,8 @@ fn main() {
         std::hint::black_box(r.candidates_explored);
     });
 
-    // DiComm collectives: 8-rank allreduce over 1M floats.
+    // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs
+    // the two-level hierarchical schedule (2 nodes x 4 ranks).
     let mut rng = Rng::new(7);
     let bufs: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..1_000_000).map(|_| rng.f32()).collect())
@@ -61,6 +80,32 @@ fn main() {
         let mut work = bufs.clone();
         let c = ring_allreduce(&mut work, &|bytes| 1e-6 + bytes as f64 / 25e9);
         std::hint::black_box(c.seconds);
+    });
+    b.run("allreduce: hierarchical 2x4 ranks x 4MB", || {
+        let mut work = bufs.clone();
+        let c = hierarchical_allreduce(
+            &mut work,
+            4,
+            &|bytes| 0.8e-6 + bytes as f64 / 200e9,
+            &|bytes| 3e-6 + bytes as f64 / 10e9,
+        );
+        std::hint::black_box(c.seconds);
+    });
+
+    // Closed-form collective pricing + auto selection (the cost-model and
+    // search inner loop — must stay trivially cheap).
+    let topo = CommTopology {
+        n_ranks: 16,
+        ranks_per_node: 8,
+        intra: LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 },
+        inter: LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 },
+    };
+    b.run("comm: auto allreduce cost x 1k", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += allreduce_cost(CommAlgo::Auto, 1 << (10 + i % 16), &topo).seconds;
+        }
+        std::hint::black_box(acc);
     });
 
     // Fabric: send/recv of a 1MB activation (the pipeline hand-off path).
@@ -81,4 +126,72 @@ fn main() {
     }
 
     b.report();
+
+    if let Some(path) = args.get("write-baseline") {
+        write_baseline(&b, path);
+    }
+    if let Some(path) = args.get("baseline") {
+        check_baseline(&b, path);
+    }
+}
+
+/// Snapshot the current p50s as a budget file (regeneration path).
+fn write_baseline(b: &Bench, path: &str) {
+    let mut marks = Vec::new();
+    for (label, s) in b.rows() {
+        marks.push((label.as_str(), json::num(s.p50)));
+    }
+    let v = json::obj(vec![
+        (
+            "_comment",
+            json::s(
+                "Per-bench p50 budgets (seconds/iter) for the CI perf guard; \
+                 regenerate with: cargo bench --bench perf_hotpath -- \
+                 --write-baseline BENCH_baseline.json",
+            ),
+        ),
+        ("threshold", json::num(2.0)),
+        ("benchmarks", json::obj(marks)),
+    ]);
+    std::fs::write(path, v.to_string_pretty()).expect("writing baseline");
+    println!("wrote baseline with {} benchmarks to {path}", b.rows().len());
+}
+
+/// Compare the run against the checked-in budgets; exit 1 on regression.
+fn check_baseline(b: &Bench, path: &str) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+    let v = Value::parse(&text).expect("parsing baseline JSON");
+    let threshold = v.opt("threshold").map(|t| t.num().unwrap()).unwrap_or(2.0);
+    let marks = v.get("benchmarks").and_then(|m| m.obj().cloned()).expect("`benchmarks` object");
+    let mut failures = Vec::new();
+    for (label, budget) in &marks {
+        let budget = budget.num().expect("budget seconds");
+        match b.rows().iter().find(|(l, _)| l == label) {
+            Some((_, s)) if s.p50 > threshold * budget => {
+                failures.push(format!(
+                    "  {label}: p50 {:.6}s > {threshold}x budget {budget:.6}s",
+                    s.p50
+                ));
+            }
+            Some(_) => {}
+            // A renamed/removed bench is a warning, not a failure — update
+            // the baseline in the same change that renames it.
+            None => eprintln!("warning: baseline entry `{label}` did not run"),
+        }
+    }
+    for (label, _) in b.rows() {
+        if !marks.contains_key(label) {
+            eprintln!("warning: benchmark `{label}` has no baseline budget");
+        }
+    }
+    if failures.is_empty() {
+        println!("perf guard OK: {} benchmarks within {threshold}x budgets", marks.len());
+    } else {
+        eprintln!("perf regressions against {path}:");
+        for f in &failures {
+            eprintln!("{f}");
+        }
+        std::process::exit(1);
+    }
 }

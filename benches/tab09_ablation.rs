@@ -1,12 +1,14 @@
 //! Table 9 — ablation variants for large-scale heterogeneous training on
 //! the Exp-C-1 configuration: relative iteration time of removing each H2
 //! component (DDR, HeteroPP non-uniform sharding, SR&AG resharding,
-//! fine-grained overlap), plus the pipeline-schedule axis (1F1B vs
-//! interleaved vs zero-bubble) that the paper's single-α cost model could
-//! not measure — each schedule runs its own issue order in the simulator.
+//! fine-grained overlap), plus two axes the paper's tables could not
+//! measure — the pipeline schedule (each variant runs its own issue order
+//! in the simulator) and the DiComm collective algorithm (flat ring vs
+//! tree vs halving-doubling vs hierarchical vs the auto selector).
 
+use h2::comm::CommAlgo;
 use h2::costmodel::Schedule;
-use h2::report::{schedule_axis, table9_ablation};
+use h2::report::{comm_algo_axis, schedule_axis, table9_ablation};
 use h2::util::table::Table;
 
 fn main() {
@@ -50,10 +52,11 @@ fn main() {
     for r in &axis {
         t.row(vec![
             r.schedule.to_string(),
-            r.iteration_seconds.map(|s| format!("{s:.3}s")).unwrap_or("infeasible".into()),
+            r.iteration_seconds.map(|s| format!("{s:.3}s"))
+                .unwrap_or_else(|| "infeasible".into()),
             r.iteration_seconds.map(|s| format!("{:.1}%", s / f1b1 * 100.0))
-                .unwrap_or("-".into()),
-            r.tgs.map(|x| format!("{x:.1}")).unwrap_or("-".into()),
+                .unwrap_or_else(|| "-".into()),
+            r.tgs.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into()),
         ]);
     }
     t.print();
@@ -67,4 +70,44 @@ fn main() {
         .expect("zbv must be feasible wherever 1F1B is");
     assert!(zbv <= f1b1 * 1.05, "zbv {zbv} vs 1f1b {f1b1}");
     println!("OK: schedule axis measured (zbv within/below the 1F1B time)");
+
+    // Comm-algo axis on the same cluster: HeteroAuto pinned to 1F1B and to
+    // each DiComm collective in turn, winner simulated with its real issue
+    // order. Relative iteration time against the flat-ring winner.
+    let axis = comm_algo_axis("exp-c-1").expect("comm-algo axis");
+    let ring = axis
+        .iter()
+        .find(|r| r.algo == CommAlgo::Ring)
+        .and_then(|r| r.iteration_seconds)
+        .expect("flat ring must be feasible on Exp-C-1");
+    let mut t = Table::new(&["comm algo", "iteration", "vs ring", "TGS"])
+        .with_title("Comm-algo axis — Exp-C-1 (simulated, searched per algorithm)");
+    for r in &axis {
+        t.row(vec![
+            r.algo.to_string(),
+            r.iteration_seconds.map(|s| format!("{s:.3}s"))
+                .unwrap_or_else(|| "infeasible".into()),
+            r.iteration_seconds.map(|s| format!("{:.1}%", s / ring * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            r.tgs.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    // The hierarchical collective and the auto selector must not lose to
+    // the flat ring (small slack: each pin may search a slightly
+    // different strategy shape).
+    let hier = axis
+        .iter()
+        .find(|r| r.algo == CommAlgo::Hierarchical)
+        .and_then(|r| r.iteration_seconds)
+        .expect("hierarchical must be feasible wherever ring is");
+    let auto = axis
+        .iter()
+        .find(|r| r.algo == CommAlgo::Auto)
+        .and_then(|r| r.iteration_seconds)
+        .expect("auto must be feasible wherever ring is");
+    assert!(hier <= ring * 1.02, "hier {hier} vs ring {ring}");
+    assert!(auto <= ring * 1.02, "auto {auto} vs ring {ring}");
+    println!("OK: comm-algo axis measured (hierarchical/auto within the ring time)");
 }

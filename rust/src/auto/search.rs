@@ -1,26 +1,28 @@
-//! HeteroAuto DFS strategy search (§4.3.3), schedule-aware and parallel.
+//! HeteroAuto DFS strategy search (§4.3.3), schedule- and comm-algo-aware
+//! and parallel.
 //!
 //! Step 1 — depth-first search over the parallelism space: data-parallel
 //! candidates dividing the global batch; per chip type, tensor-parallel
 //! degrees in powers of two up to `TP_MAX_i`; pipeline degree from
-//! `N_i = s_pp,i · s_tp,i · s_dp`; and the pipeline [`Schedule`] as an
-//! extra search dimension. Types are visited in descending memory order
-//! (the HeteroPP stage order).
+//! `N_i = s_pp,i · s_tp,i · s_dp`; and the pipeline [`Schedule`] plus the
+//! DP-collective [`CommAlgo`] as extra search dimensions. Types are
+//! visited in descending memory order (the HeteroPP stage order).
 //!
 //! Step 2 — optimal layer sharding per configuration (see [`super::sharding`]).
 //!
 //! Step 3 — cost estimation with the §4.3.2 model; the feasible minimum wins.
 //!
-//! The outer (s_dp × schedule) candidate loop runs on scoped worker
-//! threads (the offline vendor set has no rayon; `std::thread::scope` plays
-//! its role) with incumbent-cost branch-and-bound pruning: a shared atomic
-//! incumbent tracks the best feasible iteration time, and any DFS subtree
-//! whose compute lower bound already exceeds it is cut. Pruning is
-//! *strict* (only subtrees provably worse than the incumbent are cut) and
+//! The outer (s_dp × schedule × comm-algo) candidate loop runs on scoped
+//! worker threads (the offline vendor set has no rayon; `std::thread::scope`
+//! plays its role) with incumbent-cost branch-and-bound pruning: a shared
+//! atomic incumbent tracks the best feasible iteration time, and any DFS
+//! subtree whose compute lower bound already exceeds it is cut. Pruning is
+//! *strict* (only subtrees provably worse than the incumbent are cut — the
+//! bound is compute-only, which comm and update terms only add to) and
 //! the final reduction takes the minimum in deterministic candidate order
-//! (s_dp ascending, schedules in configured order, DFS order within), so
-//! the parallel search returns bit-identically the same strategy as the
-//! sequential one regardless of thread timing.
+//! (s_dp ascending, schedules then comm algos in configured order, DFS
+//! order within), so the parallel search returns bit-identically the same
+//! strategy as the sequential one regardless of thread timing.
 //!
 //! The **two-stage** refinement fixes `s_dp` from a coarse pass, then splits
 //! each homogeneous group into pseudo-heterogeneous subgroups (128 chips in
@@ -32,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::comm::CommAlgo;
 use crate::costmodel::{evaluate, profile_layer, Evaluation, ModelShape, Schedule, Strategy};
 use crate::hetero::{ChipGroup, Cluster};
 
@@ -44,6 +47,11 @@ pub struct SearchConfig {
     /// Pipeline schedules to search over (default: 1F1B, interleaved:2 and
     /// the zero-bubble schedule). Pin a single entry to fix the schedule.
     pub schedules: Vec<Schedule>,
+    /// DP-collective algorithms to search over (default: the topology-aware
+    /// [`CommAlgo::Auto`] selector alone, which prices every candidate with
+    /// its best algorithm without growing the job count). List concrete
+    /// algorithms to measure the axis explicitly, or pin one to fix it.
+    pub comm_algos: Vec<CommAlgo>,
     /// Subgroup size for the two-stage refinement (paper: 128 chips).
     pub group_split: usize,
     /// Run the two-stage refinement.
@@ -59,6 +67,7 @@ impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig {
             schedules: Schedule::SEARCH_SPACE.to_vec(),
+            comm_algos: vec![CommAlgo::Auto],
             group_split: 128,
             two_stage: true,
             max_dp: 0,
@@ -99,8 +108,9 @@ impl SearchResult {
     /// [`crate::plan::ExecutionPlan`] — the HeteroAuto → HeteroPP handoff.
     /// Communication options take the plan defaults (device-direct RDMA,
     /// SR&AG, NIC affinity, overlap on); callers adjust the returned plan's
-    /// fields for ablations. The winning schedule travels inside the
-    /// strategy, so the search config is not needed here.
+    /// fields for ablations. The winning schedule and DP-collective
+    /// algorithm travel inside the strategy, so the search config is not
+    /// needed here.
     pub fn to_plan(
         &self,
         model: &ModelShape,
@@ -229,6 +239,7 @@ struct DfsCtx<'a> {
     micro_batches: usize,
     micro_tokens: usize,
     schedule: Schedule,
+    comm_algo: CommAlgo,
     monotone_tp: bool,
     incumbent: &'a Incumbent,
     explored: usize,
@@ -258,7 +269,7 @@ impl<'a> DfsCtx<'a> {
             self.explored += 1;
             let sharding = shard_layers(
                 self.model, self.groups, shapes, self.s_dp,
-                self.micro_batches, self.micro_tokens, self.schedule,
+                self.micro_batches, self.micro_tokens, self.schedule, self.comm_algo,
             );
             if !sharding.feasible {
                 return;
@@ -273,6 +284,7 @@ impl<'a> DfsCtx<'a> {
                 s_dp: self.s_dp,
                 micro_batches: self.micro_batches,
                 schedule: self.schedule,
+                comm_algo: self.comm_algo,
                 plans: sharding.plans,
             };
             let grefs: Vec<&ChipGroup> = self.groups.iter().collect();
@@ -304,8 +316,13 @@ impl<'a> DfsCtx<'a> {
     }
 }
 
-/// One outer-loop candidate: a data-parallel degree and a schedule.
-type Job = (usize, Schedule);
+/// One outer-loop candidate: a data-parallel degree, a schedule and a
+/// DP-collective algorithm.
+type Job = (usize, Schedule, CommAlgo);
+
+/// What one job reports back: leaves explored plus its best feasible
+/// (cost, strategy, evaluation), if any.
+type JobOutcome = (usize, Option<(f64, Strategy, Evaluation)>);
 
 /// Schedule-independent search tables for one s_dp: per-group TP options
 /// plus the optimistic ratio suffix for the branch-and-bound lower bound —
@@ -346,7 +363,8 @@ fn dp_table(model: &ModelShape, groups: &[ChipGroup], s_dp: usize) -> DpTable {
     DpTable { s_dp, options, ratio_suffix }
 }
 
-/// Run the DFS for one (s_dp, schedule) job over its dp's shared tables.
+/// Run the DFS for one (s_dp, schedule, comm-algo) job over its dp's
+/// shared tables.
 fn run_one_job(
     model: &ModelShape,
     groups: &[ChipGroup],
@@ -355,8 +373,8 @@ fn run_one_job(
     table: &DpTable,
     monotone_tp: bool,
     incumbent: &Incumbent,
-) -> (usize, Option<(f64, Strategy, Evaluation)>) {
-    let (s_dp, schedule) = job;
+) -> JobOutcome {
+    let (s_dp, schedule, comm_algo) = job;
     debug_assert_eq!(s_dp, table.s_dp);
     let mut ctx = DfsCtx {
         model,
@@ -367,6 +385,7 @@ fn run_one_job(
         micro_batches: sequences / s_dp,
         micro_tokens: model.seq_len,
         schedule,
+        comm_algo,
         monotone_tp,
         incumbent,
         explored: 0,
@@ -377,8 +396,8 @@ fn run_one_job(
     (ctx.explored, ctx.best)
 }
 
-/// Run every (s_dp × schedule) job — on scoped worker threads when
-/// `parallel` — and reduce to the minimum in deterministic job order.
+/// Run every (s_dp × schedule × comm-algo) job — on scoped worker threads
+/// when `parallel` — and reduce to the minimum in deterministic job order.
 ///
 /// `seed_incumbent` primes the branch-and-bound bound (`f64::INFINITY` for
 /// a fresh search; the coarse best for the two-stage refinement, whose
@@ -397,7 +416,7 @@ fn run_jobs(
     // The TP-option tables are schedule-independent: one per distinct dp,
     // shared by every schedule job at that dp.
     let mut tables: Vec<DpTable> = Vec::new();
-    for &(dp, _) in jobs {
+    for &(dp, _, _) in jobs {
         if !tables.iter().any(|t| t.s_dp == dp) {
             tables.push(dp_table(model, groups, dp));
         }
@@ -411,8 +430,7 @@ fn run_jobs(
         1
     };
 
-    let mut slots: Vec<Option<(usize, Option<(f64, Strategy, Evaluation)>)>> =
-        vec![None; jobs.len()];
+    let mut slots: Vec<Option<JobOutcome>> = vec![None; jobs.len()];
     if workers <= 1 {
         for (i, job) in jobs.iter().enumerate() {
             slots[i] = Some(run_one_job(model, groups, sequences, *job,
@@ -454,8 +472,9 @@ fn run_jobs(
     }
 
     // Deterministic reduction: min by cost with ties broken by job order
-    // (s_dp ascending, schedules in configured order) — identical to the
-    // sequential scan whatever the thread interleaving was.
+    // (s_dp ascending, schedules then comm algos in configured order) —
+    // identical to the sequential scan whatever the thread interleaving
+    // was.
     let mut explored = 0;
     let mut best: Option<(f64, Strategy, Evaluation)> = None;
     for slot in slots {
@@ -507,6 +526,9 @@ pub fn search(
     if cfg.schedules.is_empty() {
         bail!("search config has no pipeline schedules to explore");
     }
+    if cfg.comm_algos.is_empty() {
+        bail!("search config has no collective algorithms to explore");
+    }
     // Memory-descending group order = HeteroPP stage order (Observation #4).
     let groups: Vec<ChipGroup> = cluster
         .groups_by_memory_desc()
@@ -518,10 +540,14 @@ pub fn search(
     if dp_choices.is_empty() {
         bail!("no feasible data-parallel degree for cluster `{}`", cluster.name);
     }
-    let jobs: Vec<Job> = dp_choices
-        .iter()
-        .flat_map(|&dp| cfg.schedules.iter().map(move |&s| (dp, s)))
-        .collect();
+    let mut jobs: Vec<Job> = Vec::new();
+    for &dp in &dp_choices {
+        for &schedule in &cfg.schedules {
+            for &algo in &cfg.comm_algos {
+                jobs.push((dp, schedule, algo));
+            }
+        }
+    }
 
     // Stage 1: coarse search, one group per chip type.
     let (mut explored, coarse) =
@@ -545,8 +571,12 @@ pub fn search(
     // Stage 2: fix s_dp, split homogeneous groups into pseudo-heterogeneous
     // subgroups, and re-search (still over every schedule) with monotone-TP
     // pruning.
-    let fine_jobs: Vec<Job> =
-        cfg.schedules.iter().map(|&s| (coarse.1.s_dp, s)).collect();
+    let mut fine_jobs: Vec<Job> = Vec::new();
+    for &schedule in &cfg.schedules {
+        for &algo in &cfg.comm_algos {
+            fine_jobs.push((coarse.1.s_dp, schedule, algo));
+        }
+    }
     let fine_groups = split_groups(&groups, cfg.group_split);
     let (explored2, fine) =
         run_jobs(model, &fine_groups, sequences, &fine_jobs, true, cfg.parallel, coarse.0);
@@ -711,6 +741,56 @@ mod tests {
                        &SearchConfig { two_stage: false, ..Default::default() }).unwrap();
         assert_eq!(r.strategy.schedule, Schedule::ZeroBubbleV,
                    "winner {:?}", r.strategy.schedule);
+    }
+
+    #[test]
+    fn parallel_comm_algo_search_matches_sequential_bit_for_bit() {
+        // The comm-algo axis rides the same worker-thread machinery: with
+        // every algorithm (and the auto selector) in the job list, the
+        // parallel reduction must return exactly the sequential winner.
+        let exp = experiment("exp-a-1").unwrap();
+        let base = SearchConfig {
+            comm_algos: CommAlgo::ALL.to_vec(),
+            two_stage: false,
+            ..SearchConfig::default()
+        };
+        let par = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                         &SearchConfig { parallel: true, ..base.clone() }).unwrap();
+        let seq = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                         &SearchConfig { parallel: false, ..base }).unwrap();
+        assert_eq!(par.strategy, seq.strategy);
+        assert_eq!(par.eval.iteration_seconds, seq.eval.iteration_seconds);
+    }
+
+    #[test]
+    fn auto_selector_never_loses_to_any_pinned_algorithm() {
+        // Auto resolves per collective group, so its winner is at least as
+        // good as the best whole-strategy pin of a concrete algorithm.
+        let exp = homogeneous_baseline(ChipKind::B);
+        let auto = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
+                          &SearchConfig { two_stage: false, ..SearchConfig::default() })
+            .unwrap();
+        let mut pinned_best = f64::INFINITY;
+        for algo in CommAlgo::CONCRETE {
+            let cfg = SearchConfig {
+                comm_algos: vec![algo],
+                two_stage: false,
+                ..SearchConfig::default()
+            };
+            if let Ok(r) = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
+                pinned_best = pinned_best.min(r.eval.iteration_seconds);
+            }
+        }
+        assert!(pinned_best.is_finite());
+        assert!(auto.eval.iteration_seconds <= pinned_best * (1.0 + 1e-12),
+                "auto {} vs best pin {pinned_best}", auto.eval.iteration_seconds);
+    }
+
+    #[test]
+    fn empty_comm_algo_space_is_rejected() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let cfg = SearchConfig { comm_algos: vec![], ..SearchConfig::default() };
+        assert!(search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!    cannot hold their activations (recompute is pure memory relief — it
 //!    never reduces time — so it is only switched on under pressure).
 
+use crate::comm::CommAlgo;
 use crate::costmodel::{evaluate, GroupPlan, ModelShape, Schedule, Strategy};
 use crate::hetero::ChipGroup;
 
@@ -35,7 +36,9 @@ pub struct Sharding {
 
 /// Compute the layer allocation for fixed (s_dp, shapes) under `schedule`
 /// (whose bubble coefficient and activation residency shape both the cost
-/// evaluation and the memory-repair loop).
+/// evaluation and the memory-repair loop) and `comm_algo` (which prices
+/// the DP-sync term of the evaluations).
+#[allow(clippy::too_many_arguments)]
 pub fn shard_layers(
     model: &ModelShape,
     groups: &[ChipGroup],
@@ -44,6 +47,7 @@ pub fn shard_layers(
     micro_batches: usize,
     micro_tokens: usize,
     schedule: Schedule,
+    comm_algo: CommAlgo,
 ) -> Sharding {
     use crate::costmodel::profile_layer;
 
@@ -144,7 +148,7 @@ pub fn shard_layers(
         .collect();
 
     for _round in 0..8 {
-        let strategy = Strategy { s_dp, micro_batches, schedule, plans: plans.clone() };
+        let strategy = Strategy { s_dp, micro_batches, schedule, comm_algo, plans: plans.clone() };
         let grefs: Vec<&ChipGroup> = groups.iter().collect();
         let eval = evaluate(model, &grefs, &strategy, micro_tokens);
         if eval.feasible {
@@ -217,7 +221,8 @@ mod tests {
     fn layers_sum_to_model_total() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B,
+                             CommAlgo::Ring);
         assert_eq!(s.plans.iter().map(|p| p.layers).sum::<usize>(), 96);
     }
 
@@ -225,7 +230,8 @@ mod tests {
     fn faster_group_receives_more_layers() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 16 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B,
+                             CommAlgo::Ring);
         // B is faster per layer than A, so B's stages should carry >= layers.
         assert!(s.plans[1].layers >= s.plans[0].layers,
                 "A={} B={}", s.plans[0].layers, s.plans[1].layers);
@@ -235,7 +241,8 @@ mod tests {
     fn uniform_within_group() {
         let groups = groups_ab();
         let shapes = [GroupShape { s_tp: 4, s_pp: 12 }, GroupShape { s_tp: 4, s_pp: 16 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 4, 128, 4096, Schedule::OneF1B,
+                             CommAlgo::Ring);
         for p in &s.plans {
             assert_eq!(p.layers % p.s_pp, 0, "layers uniform across a type's stages");
         }
@@ -246,7 +253,8 @@ mod tests {
         // Chip C with little memory must end up recomputing.
         let groups = vec![ChipGroup::new(ChipKind::C, 256)];
         let shapes = [GroupShape { s_tp: 4, s_pp: 32 }];
-        let s = shard_layers(&H2_100B, &groups, &shapes, 2, 256, 4096, Schedule::OneF1B);
+        let s = shard_layers(&H2_100B, &groups, &shapes, 2, 256, 4096, Schedule::OneF1B,
+                             CommAlgo::Ring);
         assert!(s.feasible);
         assert!(s.plans[0].recompute);
     }

@@ -1,0 +1,474 @@
+//! DiComm collective-algorithm engine (§3): a library of allreduce
+//! algorithms — flat ring, binomial tree, recursive halving-doubling and
+//! the two-level hierarchical scheme — each priced by a closed-form
+//! latency/bandwidth model over a [`CommTopology`], plus a message-size-
+//! and topology-aware selector ([`CommAlgo::Auto`]).
+//!
+//! The closed forms are the planning-side twins of the executable
+//! collectives in [`super::collectives`]: [`allreduce_cost`] walks exactly
+//! the hop sequence the data-moving implementations execute (bit-exact
+//! whenever the payload splits evenly over the group; parity-tested), so
+//! the §4.3.2 cost model, the HeteroPP simulator and the HeteroAuto
+//! search all price a [`crate::costmodel::Strategy`]'s `comm_algo` the
+//! same way.
+//!
+//! The decisive case on hyper-heterogeneous fabrics is the hierarchical
+//! algorithm (HetCCL, Holmes): a flat ring pays the slow NIC path on
+//! every one of its `2(N−1)` steps, while the two-level schedule keeps
+//! `2(k−1)` steps on the intra-node fabric and crosses nodes only
+//! `2(m−1)` times per chunk — with intra-node bandwidth several times the
+//! per-flow NIC rate (Fig 3 vs Table 3), that is a structural win the
+//! cost model and simulator can now both measure.
+
+use std::fmt;
+
+use crate::hetero::ChipSpec;
+use crate::topology::{co_located_replicas, flow_bandwidth_gbps, whole_node_group, NicAssignment};
+
+use super::collectives::{CollectiveCost, HopTime};
+use super::model::{base_latency, CommMode, INTRA_NODE_LATENCY};
+
+/// Collective algorithm run by a communication group (the DP gradient
+/// allreduce axis of the Table 9 ablation). Carried by
+/// [`crate::costmodel::Strategy`], searched by HeteroAuto, serialized as a
+/// plan-file token (`ring`, `tree`, `rhd`, `hierarchical`, `auto`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum CommAlgo {
+    /// Flat ring over the whole group — the classic bandwidth-optimal
+    /// schedule, but every hop pays the slowest link once the group spans
+    /// nodes. The pre-engine hardwired behaviour and the v2-plan default.
+    #[default]
+    Ring,
+    /// Binomial tree reduce + broadcast: `2·⌈log₂ N⌉` full-payload hops —
+    /// latency-optimal step count, bandwidth-poor for large payloads.
+    Tree,
+    /// Recursive halving-doubling: `⌈log₂ N⌉` steps each way with halving
+    /// payloads (non-power-of-two groups fold the extras into partners
+    /// first) — the small-message sweet spot between ring and tree.
+    RecursiveHalvingDoubling,
+    /// Two-level (HetCCL/Holmes-style): intra-node ring reduce-scatter on
+    /// the fast fabric, leader-based inter-node exchange per chunk over
+    /// the NIC path, intra-node allgather to re-assemble.
+    Hierarchical,
+    /// Resolve per collective to the concrete algorithm with the lowest
+    /// closed-form cost for the payload and topology at hand.
+    Auto,
+}
+
+impl CommAlgo {
+    /// The four concrete (executable) algorithms, in the deterministic
+    /// order [`CommAlgo::resolve`] breaks cost ties by.
+    pub const CONCRETE: [CommAlgo; 4] = [
+        CommAlgo::Ring,
+        CommAlgo::Tree,
+        CommAlgo::RecursiveHalvingDoubling,
+        CommAlgo::Hierarchical,
+    ];
+
+    /// Every algorithm token a plan/config can carry: the concrete four
+    /// plus the `auto` selector.
+    pub const ALL: [CommAlgo; 5] = [
+        CommAlgo::Ring,
+        CommAlgo::Tree,
+        CommAlgo::RecursiveHalvingDoubling,
+        CommAlgo::Hierarchical,
+        CommAlgo::Auto,
+    ];
+
+    /// Human-readable algorithm name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CommAlgo::Ring => "flat ring",
+            CommAlgo::Tree => "binomial tree",
+            CommAlgo::RecursiveHalvingDoubling => "recursive halving-doubling",
+            CommAlgo::Hierarchical => "hierarchical (two-level)",
+            CommAlgo::Auto => "auto (topology-selected)",
+        }
+    }
+
+    /// Canonical short token, accepted back by [`CommAlgo::parse`] — the
+    /// serialization currency of plan files, configs and `--comm-algo`.
+    pub fn token(self) -> &'static str {
+        match self {
+            CommAlgo::Ring => "ring",
+            CommAlgo::Tree => "tree",
+            CommAlgo::RecursiveHalvingDoubling => "rhd",
+            CommAlgo::Hierarchical => "hierarchical",
+            CommAlgo::Auto => "auto",
+        }
+    }
+
+    /// Parse an algorithm token (`ring`, `tree`, `rhd`/`halving-doubling`,
+    /// `hierarchical`/`hier`, `auto`).
+    pub fn parse(s: &str) -> Option<CommAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(CommAlgo::Ring),
+            "tree" => Some(CommAlgo::Tree),
+            "rhd" | "halving-doubling" | "recursive-halving-doubling" => {
+                Some(CommAlgo::RecursiveHalvingDoubling)
+            }
+            "hierarchical" | "hier" | "two-level" => Some(CommAlgo::Hierarchical),
+            "auto" => Some(CommAlgo::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve [`CommAlgo::Auto`] to the concrete algorithm with the
+    /// lowest closed-form cost for this payload and topology (ties broken
+    /// deterministically in [`CommAlgo::CONCRETE`] order). Concrete
+    /// algorithms return themselves.
+    pub fn resolve(self, bytes: usize, topo: &CommTopology) -> CommAlgo {
+        if self != CommAlgo::Auto {
+            return self;
+        }
+        let mut best = CommAlgo::Ring;
+        let mut best_seconds = f64::INFINITY;
+        for algo in CommAlgo::CONCRETE {
+            let t = allreduce_cost(algo, bytes, topo).seconds;
+            if t < best_seconds {
+                best = algo;
+                best_seconds = t;
+            }
+        }
+        best
+    }
+}
+
+impl fmt::Display for CommAlgo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// Affine timing of one link class: `time(bytes) = latency + bytes/bw`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkTime {
+    /// Per-hop base latency, seconds.
+    pub latency: f64,
+    /// Streaming bandwidth, bytes/second.
+    pub bytes_per_sec: f64,
+}
+
+impl LinkTime {
+    /// Seconds to move `bytes` across the link once.
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bytes_per_sec
+    }
+
+    /// Recover an affine link model from an opaque hop function by probing
+    /// it at zero and at 1 MiB — exact for the affine hops the simulator,
+    /// fabric and timing model use.
+    pub fn probe(hop: HopTime) -> LinkTime {
+        const PROBE: usize = 1 << 20;
+        let latency = hop(0).max(0.0);
+        let slope = (hop(PROBE) - latency).max(1e-30);
+        LinkTime { latency, bytes_per_sec: PROBE as f64 / slope }
+    }
+}
+
+/// Shape of one collective group over the cluster fabric: `n_ranks` ranks
+/// laid out node-major with `ranks_per_node` of them sharing each server,
+/// and the two link classes a hop can take.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommTopology {
+    /// Ranks participating in the collective.
+    pub n_ranks: usize,
+    /// Co-located ranks per server (1 = fully scattered across nodes).
+    pub ranks_per_node: usize,
+    /// Intra-node link (the fast fabric, Fig 3).
+    pub intra: LinkTime,
+    /// Inter-node link (the per-flow NIC path, Table 3).
+    pub inter: LinkTime,
+}
+
+impl CommTopology {
+    /// Co-located ranks rounded down to a divisor of the group size, so
+    /// the group always fills whole nodes ([`whole_node_group`]).
+    pub fn node_group(&self) -> usize {
+        whole_node_group(self.n_ranks, self.ranks_per_node)
+    }
+
+    /// Whole nodes the group spans.
+    pub fn nodes(&self) -> usize {
+        self.n_ranks.max(1) / self.node_group()
+    }
+
+    /// The DP gradient-sync group of one pipeline stage on `spec` chips:
+    /// `dp` replicas whose ring neighbours sit `s_tp` chip slots apart
+    /// inside a server, with [`co_located_replicas`] of them per node.
+    /// Inter-node hops run device-direct on the Table 3 per-flow NIC
+    /// bandwidth under `assign`.
+    pub fn dp_group(
+        spec: &ChipSpec,
+        dp: usize,
+        s_tp: usize,
+        assign: NicAssignment,
+    ) -> CommTopology {
+        let slot = s_tp.clamp(1, spec.chips_per_node.saturating_sub(1).max(1));
+        let intra_bw = spec.intra_node.bandwidth_gbps(0, slot.min(spec.chips_per_node - 1));
+        CommTopology {
+            n_ranks: dp.max(1),
+            ranks_per_node: co_located_replicas(spec, s_tp, dp),
+            intra: LinkTime { latency: INTRA_NODE_LATENCY, bytes_per_sec: intra_bw * 1e9 },
+            inter: LinkTime {
+                latency: base_latency(CommMode::DeviceDirect),
+                bytes_per_sec: flow_bandwidth_gbps(spec, spec, assign) * 1e9,
+            },
+        }
+    }
+}
+
+/// Closed-form cost of one allreduce of `bytes` under `algo` on `topo` —
+/// the planning twin of [`super::collectives::allreduce`], walking the
+/// same hop sequence (`Auto` resolves first, see [`CommAlgo::resolve`]).
+pub fn allreduce_cost(algo: CommAlgo, bytes: usize, topo: &CommTopology) -> CollectiveCost {
+    let n = topo.n_ranks;
+    if n <= 1 || bytes == 0 {
+        return CollectiveCost::default();
+    }
+    let k = topo.node_group();
+    let m = n / k;
+    let flat = if m > 1 { topo.inter } else { topo.intra };
+    match algo {
+        CommAlgo::Ring => ring_cost(bytes, n, flat),
+        CommAlgo::Tree => tree_cost(bytes, n, flat),
+        CommAlgo::RecursiveHalvingDoubling => rhd_cost(bytes, n, flat),
+        CommAlgo::Hierarchical => {
+            if m == 1 {
+                ring_cost(bytes, n, topo.intra)
+            } else if k == 1 {
+                ring_cost(bytes, n, topo.inter)
+            } else {
+                let chunk = bytes.div_ceil(k);
+                // Intra-node reduce-scatter and allgather: k−1 chunk-size
+                // steps each on the fast fabric.
+                let intra_steps = 2.0 * (k - 1) as f64 * topo.intra.time(chunk);
+                // Leader-based inter-node exchange: k concurrent per-chunk
+                // rings across the m nodes; wall clock pays one ring.
+                let inter_ring = ring_cost(chunk, m, topo.inter);
+                CollectiveCost {
+                    seconds: intra_steps + inter_ring.seconds,
+                    // Both intra phases circulate the payload once per step
+                    // on every node; the inter rings together move the
+                    // whole payload like one ring over m ranks.
+                    wire_bytes: 2 * m * (k - 1) * bytes + 2 * (m - 1) * bytes,
+                }
+            }
+        }
+        CommAlgo::Auto => allreduce_cost(algo.resolve(bytes, topo), bytes, topo),
+    }
+}
+
+/// Flat ring allreduce: `2(n−1)` steps of one `bytes/n` chunk each.
+fn ring_cost(bytes: usize, n: usize, link: LinkTime) -> CollectiveCost {
+    if n <= 1 || bytes == 0 {
+        return CollectiveCost::default();
+    }
+    let steps = 2 * (n - 1);
+    CollectiveCost {
+        seconds: steps as f64 * link.time(bytes.div_ceil(n)),
+        wire_bytes: steps * bytes,
+    }
+}
+
+/// Binomial tree reduce + broadcast: `2·⌈log₂ n⌉` full-payload rounds.
+fn tree_cost(bytes: usize, n: usize, link: LinkTime) -> CollectiveCost {
+    if n <= 1 || bytes == 0 {
+        return CollectiveCost::default();
+    }
+    let rounds = n.next_power_of_two().trailing_zeros() as f64;
+    CollectiveCost {
+        seconds: 2.0 * rounds * link.time(bytes),
+        wire_bytes: 2 * (n - 1) * bytes,
+    }
+}
+
+/// Recursive halving-doubling: mirrors the executable collective's hop
+/// sequence — extras fold in/out at full payload, then `log₂ p` halving
+/// steps and their reversed doubling twins.
+fn rhd_cost(bytes: usize, n: usize, link: LinkTime) -> CollectiveCost {
+    if n <= 1 || bytes == 0 {
+        return CollectiveCost::default();
+    }
+    let p = if n.is_power_of_two() { n } else { n.next_power_of_two() / 2 };
+    let extras = n - p;
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    if extras > 0 {
+        seconds += 2.0 * link.time(bytes);
+        wire += 2 * extras * bytes;
+    }
+    // Worst-rank block sizes per halving step (the upper half keeps the
+    // ceil on odd splits, exactly as the executable splits blocks). Fixed
+    // buffer: this runs in the search's leaf evaluation (no allocations).
+    let mut sizes = [0usize; 64];
+    let steps = p.trailing_zeros() as usize;
+    let mut block = bytes;
+    for s in sizes.iter_mut().take(steps) {
+        let upper = block - block / 2;
+        *s = upper;
+        block = upper;
+    }
+    for &s in sizes.iter().take(steps) {
+        seconds += link.time(s);
+    }
+    for &s in sizes.iter().take(steps).rev() {
+        seconds += link.time(s);
+    }
+    wire += 2 * (p - 1) * bytes;
+    CollectiveCost { seconds, wire_bytes: wire }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::{spec, ChipKind};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn two_node_topology() -> CommTopology {
+        // 2 nodes x 8 ranks, NVLink-class fabric vs a ~10 GB/s NIC flow.
+        CommTopology {
+            n_ranks: 16,
+            ranks_per_node: 8,
+            intra: LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 },
+            inter: LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 },
+        }
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        for algo in CommAlgo::CONCRETE {
+            assert_eq!(CommAlgo::parse(algo.token()), Some(algo), "{algo}");
+        }
+        assert_eq!(CommAlgo::parse("auto"), Some(CommAlgo::Auto));
+        assert_eq!(CommAlgo::parse("HIER"), Some(CommAlgo::Hierarchical));
+        assert_eq!(CommAlgo::parse("bogus"), None);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_on_fast_intra_fabrics() {
+        // Whenever the intra-node fabric is >= 4x the NIC flow (and not
+        // higher-latency), the two-level schedule must win for any
+        // multi-node group and bandwidth-relevant payload.
+        prop::check(200, |rng: &mut Rng| {
+            let k = 1 << rng.usize(1, 5); // 2..16 ranks per node
+            let m = rng.usize(2, 9); // 2..8 nodes
+            let inter_bw = rng.f64() * 20e9 + 1e9;
+            let ratio = 4.0 + rng.f64() * 60.0;
+            let topo = CommTopology {
+                n_ranks: k * m,
+                ranks_per_node: k,
+                intra: LinkTime { latency: 0.8e-6, bytes_per_sec: inter_bw * ratio },
+                inter: LinkTime { latency: 3.0e-6, bytes_per_sec: inter_bw },
+            };
+            let bytes = 1 << rng.usize(20, 31); // 1 MiB .. 1 GiB
+            let ring = allreduce_cost(CommAlgo::Ring, bytes, &topo).seconds;
+            let hier = allreduce_cost(CommAlgo::Hierarchical, bytes, &topo).seconds;
+            prop::assert_prop(
+                hier < ring,
+                format!("hier {hier} !< ring {ring} (k={k}, m={m}, bytes={bytes})"),
+            )
+        });
+    }
+
+    #[test]
+    fn auto_is_the_concrete_minimum() {
+        let topo = two_node_topology();
+        for shift in [6, 10, 14, 18, 22, 26, 30] {
+            let bytes = 1usize << shift;
+            let auto = allreduce_cost(CommAlgo::Auto, bytes, &topo).seconds;
+            let min = CommAlgo::CONCRETE
+                .iter()
+                .map(|&a| allreduce_cost(a, bytes, &topo).seconds)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(auto, min, "bytes {bytes}");
+        }
+    }
+
+    #[test]
+    fn selector_is_message_size_aware() {
+        // On a deep group (8 nodes x 16 ranks) tiny payloads are
+        // latency-bound: the log-step algorithms beat both the
+        // 2(n-1)-step flat ring and the hierarchical schedule's 2(k-1)
+        // intra hops. Large payloads go hierarchical.
+        let topo = CommTopology {
+            n_ranks: 128,
+            ranks_per_node: 16,
+            intra: LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 },
+            inter: LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 },
+        };
+        let small = CommAlgo::Auto.resolve(64, &topo);
+        assert!(
+            small == CommAlgo::RecursiveHalvingDoubling || small == CommAlgo::Tree,
+            "64 B resolved to {small}"
+        );
+        assert_eq!(CommAlgo::Auto.resolve(64 << 20, &topo), CommAlgo::Hierarchical);
+    }
+
+    #[test]
+    fn rhd_never_loses_to_tree() {
+        // Same step count, halving vs full payloads.
+        let topo = two_node_topology();
+        for shift in [6, 12, 18, 24, 30] {
+            let bytes = 1usize << shift;
+            let rhd = allreduce_cost(CommAlgo::RecursiveHalvingDoubling, bytes, &topo);
+            let tree = allreduce_cost(CommAlgo::Tree, bytes, &topo);
+            assert!(rhd.seconds <= tree.seconds, "bytes {bytes}");
+        }
+    }
+
+    #[test]
+    fn single_node_groups_collapse_to_the_intra_fabric() {
+        let topo = CommTopology { n_ranks: 8, ranks_per_node: 8, ..two_node_topology() };
+        let ring = allreduce_cost(CommAlgo::Ring, 1 << 20, &topo);
+        let hier = allreduce_cost(CommAlgo::Hierarchical, 1 << 20, &topo);
+        assert_eq!(ring, hier, "m=1 hierarchical degenerates to the intra ring");
+        // And the flat ring must price intra-node hops, not the NIC.
+        let scattered = CommTopology { ranks_per_node: 1, ..topo };
+        assert!(allreduce_cost(CommAlgo::Ring, 1 << 20, &scattered).seconds > ring.seconds);
+    }
+
+    #[test]
+    fn dp_group_reflects_the_chip_topology() {
+        // Chip A: 16 chips/node; a TP-4 stage co-locates 4 DP replicas.
+        let a = spec(ChipKind::A);
+        let t = CommTopology::dp_group(&a, 4, 4, NicAssignment::Affinity);
+        assert_eq!(t.node_group(), 4);
+        assert_eq!(t.nodes(), 1);
+        // Chip B: 8 chips/node; TP-4 leaves room for 2 replicas per node.
+        let b = spec(ChipKind::B);
+        let t = CommTopology::dp_group(&b, 4, 4, NicAssignment::Affinity);
+        assert_eq!(t.node_group(), 2);
+        assert_eq!(t.nodes(), 2);
+        // Non-affinity NIC mapping degrades only the inter link.
+        let non = CommTopology::dp_group(&b, 4, 4, NicAssignment::NonAffinity);
+        assert!(non.inter.bytes_per_sec < t.inter.bytes_per_sec);
+        assert_eq!(non.intra, t.intra);
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_group_size() {
+        let topo = two_node_topology();
+        let bytes = 1 << 20;
+        assert_eq!(allreduce_cost(CommAlgo::Ring, bytes, &topo).wire_bytes, 30 * bytes);
+        assert_eq!(allreduce_cost(CommAlgo::Tree, bytes, &topo).wire_bytes, 30 * bytes);
+        assert_eq!(
+            allreduce_cost(CommAlgo::RecursiveHalvingDoubling, bytes, &topo).wire_bytes,
+            30 * bytes
+        );
+        // Hierarchical: 2·m·(k−1)·B intra + 2·(m−1)·B inter.
+        assert_eq!(
+            allreduce_cost(CommAlgo::Hierarchical, bytes, &topo).wire_bytes,
+            (2 * 2 * 7 + 2) * bytes
+        );
+    }
+
+    #[test]
+    fn probe_recovers_affine_links() {
+        let link = LinkTime { latency: 2.5e-6, bytes_per_sec: 12.5e9 };
+        let probed = LinkTime::probe(&|b| link.time(b));
+        assert!((probed.latency - link.latency).abs() < 1e-12);
+        assert!((probed.bytes_per_sec - link.bytes_per_sec).abs() / link.bytes_per_sec < 1e-9);
+    }
+}

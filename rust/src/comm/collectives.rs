@@ -3,10 +3,17 @@
 //! the timing model.
 //!
 //! The paper's DiComm builds collectives "via a combination of send/receive
-//! operations and native communication operators"; here the ring/tree
-//! algorithms are implemented explicitly so the coordinator's DP gradient
+//! operations and native communication operators"; here the ring, binomial
+//! tree, recursive halving-doubling and two-level hierarchical algorithms
+//! are implemented explicitly so the coordinator's DP gradient
 //! synchronization and the SR&AG resharding path run the same code the
-//! timing model accounts for.
+//! timing model accounts for. Each executable collective has a closed-form
+//! twin in [`super::algo`] (see `allreduce_cost`), kept honest by parity
+//! tests; [`allreduce`] dispatches on [`CommAlgo`].
+
+use crate::topology::whole_node_group;
+
+use super::algo::{CommAlgo, LinkTime};
 
 /// Per-hop wire time for a message of `bytes` between ring neighbours.
 pub type HopTime<'a> = &'a dyn Fn(usize) -> f64;
@@ -25,6 +32,13 @@ const F32: usize = 4;
 /// Ring allreduce (sum): 2·(N−1) chunk steps, exactly the classic schedule.
 /// Buffers are modified in place; every rank ends with the elementwise sum.
 pub fn ring_allreduce(bufs: &mut [Vec<f32>], hop: HopTime) -> CollectiveCost {
+    let mut slices: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+    ring_allreduce_slices(&mut slices, hop)
+}
+
+/// [`ring_allreduce`] over borrowed rank slices — the form the hierarchical
+/// collective's concurrent per-chunk inter-node rings run on.
+fn ring_allreduce_slices(bufs: &mut [&mut [f32]], hop: HopTime) -> CollectiveCost {
     let n = bufs.len();
     assert!(n > 0);
     let len = bufs[0].len();
@@ -86,6 +100,302 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>], hop: HopTime) -> CollectiveCost {
     CollectiveCost { seconds, wire_bytes }
 }
 
+/// Binomial-tree allreduce: reduce toward rank 0 along a binomial tree,
+/// then [`tree_broadcast`] the sum back — 2·⌈log₂ N⌉ full-size hops.
+/// Latency-optimal step count, bandwidth-poor for large payloads.
+pub fn tree_allreduce(bufs: &mut [Vec<f32>], hop: HopTime) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    if n == 1 || len == 0 {
+        return CollectiveCost::default();
+    }
+    let bytes = len * F32;
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    // Round d: every live rank r ≡ d (mod 2d) folds into r − d. One hop
+    // deep per round, pairs transfer concurrently.
+    let mut d = 1;
+    while d < n {
+        let mut senders = 0usize;
+        let mut r = 0;
+        while r + d < n {
+            let (head, tail) = bufs.split_at_mut(r + d);
+            for (x, y) in head[r].iter_mut().zip(tail[0].iter()) {
+                *x += *y;
+            }
+            senders += 1;
+            r += 2 * d;
+        }
+        seconds += hop(bytes);
+        wire += senders * bytes;
+        d *= 2;
+    }
+    let bcast = tree_broadcast(bufs, 0, hop);
+    CollectiveCost { seconds: seconds + bcast.seconds, wire_bytes: wire + bcast.wire_bytes }
+}
+
+/// Recursive halving-doubling allreduce: ⌈log₂ P⌉ reduce-scatter steps with
+/// halving payloads, then the mirror-image allgather — over the largest
+/// power-of-two subgroup `P`, with the `N − P` extra ranks folding their
+/// buffer into a partner first and receiving the result back afterwards.
+pub fn rhd_allreduce(bufs: &mut [Vec<f32>], hop: HopTime) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    if n == 1 || len == 0 {
+        return CollectiveCost::default();
+    }
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    let p = if n.is_power_of_two() { n } else { n.next_power_of_two() / 2 };
+    let extras = n - p;
+    if extras > 0 {
+        // Pre-step: rank p+i folds its whole buffer into rank i.
+        for i in p..n {
+            let (head, tail) = bufs.split_at_mut(i);
+            for (x, y) in head[i - p].iter_mut().zip(tail[0].iter()) {
+                *x += *y;
+            }
+        }
+        seconds += hop(len * F32);
+        wire += extras * len * F32;
+    }
+
+    // Recursive halving (reduce-scatter) among ranks 0..p: at each step the
+    // partners i and i^mask share one block [lo, hi); the lower rank keeps
+    // (and accumulates) the lower half, the upper rank the upper half.
+    let mut lo = vec![0usize; p];
+    let mut hi = vec![len; p];
+    let mut mask = p / 2;
+    while mask >= 1 {
+        let mut step_max = 0usize;
+        for i in 0..p {
+            let partner = i | mask;
+            if i == partner {
+                continue; // i has the mask bit set; its partner visits it
+            }
+            debug_assert_eq!((lo[i], hi[i]), (lo[partner], hi[partner]));
+            let (l, h) = (lo[i], hi[i]);
+            let mid = l + (h - l) / 2;
+            let (head, tail) = bufs.split_at_mut(partner);
+            let a = &mut head[i];
+            let b = &mut tail[0];
+            for (x, y) in a[l..mid].iter_mut().zip(b[l..mid].iter()) {
+                *x += *y;
+            }
+            for (y, x) in b[mid..h].iter_mut().zip(a[mid..h].iter()) {
+                *y += *x;
+            }
+            wire += (h - l) * F32; // both directions of the pair
+            step_max = step_max.max((mid - l).max(h - mid) * F32);
+            hi[i] = mid;
+            lo[partner] = mid;
+        }
+        seconds += hop(step_max);
+        mask /= 2;
+    }
+
+    // Recursive doubling (allgather): reverse the halving steps, partners
+    // exchanging their owned blocks and merging.
+    let mut mask = 1;
+    while mask < p {
+        let mut step_max = 0usize;
+        for i in 0..p {
+            let partner = i | mask;
+            if i == partner {
+                continue;
+            }
+            let (head, tail) = bufs.split_at_mut(partner);
+            let a = &mut head[i];
+            let b = &mut tail[0];
+            b[lo[i]..hi[i]].copy_from_slice(&a[lo[i]..hi[i]]);
+            a[lo[partner]..hi[partner]].copy_from_slice(&b[lo[partner]..hi[partner]]);
+            wire += (hi[i] - lo[i] + hi[partner] - lo[partner]) * F32;
+            step_max = step_max.max((hi[i] - lo[i]).max(hi[partner] - lo[partner]) * F32);
+            let (nl, nh) = (lo[i].min(lo[partner]), hi[i].max(hi[partner]));
+            lo[i] = nl;
+            hi[i] = nh;
+            lo[partner] = nl;
+            hi[partner] = nh;
+        }
+        seconds += hop(step_max);
+        mask *= 2;
+    }
+
+    if extras > 0 {
+        // Post-step: partners return the finished sum to the extras.
+        for i in p..n {
+            let (head, tail) = bufs.split_at_mut(i);
+            tail[0].copy_from_slice(&head[i - p]);
+        }
+        seconds += hop(len * F32);
+        wire += extras * len * F32;
+    }
+    CollectiveCost { seconds, wire_bytes: wire }
+}
+
+/// Two-level hierarchical allreduce (HetCCL/Holmes-style, §3): an
+/// intra-node ring reduce-scatter on the fast fabric, a leader-based
+/// inter-node ring exchange per chunk over the NIC path (the `k` chunk
+/// rings run concurrently), and an intra-node ring allgather to
+/// re-assemble. Ranks are node-major: rank `node·k + j` is chip `j` of
+/// `node`, with `k = ranks_per_node` dividing the rank count.
+pub fn hierarchical_allreduce(
+    bufs: &mut [Vec<f32>],
+    ranks_per_node: usize,
+    intra_hop: HopTime,
+    inter_hop: HopTime,
+) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(n > 0);
+    let k = ranks_per_node.clamp(1, n);
+    assert_eq!(n % k, 0, "ranks ({n}) must fill whole nodes of {k}");
+    let m = n / k;
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    if n == 1 || len == 0 {
+        return CollectiveCost::default();
+    }
+    // Degenerate shapes collapse to a flat ring on the only link in play.
+    if m == 1 {
+        return ring_allreduce(bufs, intra_hop);
+    }
+    if k == 1 {
+        return ring_allreduce(bufs, inter_hop);
+    }
+
+    let chunk = len.div_ceil(k);
+    let bounds: Vec<(usize, usize)> =
+        (0..k).map(|c| (c * chunk, ((c + 1) * chunk).min(len))).collect();
+    // After an intra-node reduce-scatter, local rank j leads chunk (j+1)%k
+    // (the classic ring ownership); invert it to find a chunk's leader.
+    let leader = |c: usize| (c + k - 1) % k;
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    let mut scratch = vec![0.0f32; chunk];
+
+    // Phase 1 — intra-node ring reduce-scatter, all nodes concurrently:
+    // step s, local rank j sends chunk (j−s) to j+1 which accumulates.
+    for s in 0..k - 1 {
+        let mut max_hop = 0.0f64;
+        for node in 0..m {
+            for j in 0..k {
+                let c = (j + k - s) % k;
+                let (lo, hi) = bounds[c];
+                if lo >= hi {
+                    continue;
+                }
+                let l = hi - lo;
+                let src = node * k + j;
+                let dst = node * k + (j + 1) % k;
+                scratch[..l].copy_from_slice(&bufs[src][lo..hi]);
+                for (x, y) in bufs[dst][lo..hi].iter_mut().zip(&scratch[..l]) {
+                    *x += *y;
+                }
+                max_hop = max_hop.max(intra_hop(l * F32));
+                wire += l * F32;
+            }
+        }
+        seconds += max_hop;
+    }
+
+    // Phase 2 — leader-based inter-node exchange: chunk c's leaders (one
+    // per node) ring-allreduce that chunk across the m nodes. The k chunk
+    // rings run concurrently over distinct NIC flows, so the phase costs
+    // the slowest ring once; wire bytes sum over all of them.
+    let mut phase2 = 0.0f64;
+    for c in 0..k {
+        let (lo, hi) = bounds[c];
+        if lo >= hi {
+            continue;
+        }
+        let j = leader(c);
+        let mut slices: Vec<&mut [f32]> = bufs
+            .iter_mut()
+            .enumerate()
+            .filter(|(r, _)| r % k == j)
+            .map(|(_, b)| &mut b[lo..hi])
+            .collect();
+        let cost = ring_allreduce_slices(&mut slices, inter_hop);
+        phase2 = phase2.max(cost.seconds);
+        wire += cost.wire_bytes;
+    }
+    seconds += phase2;
+
+    // Phase 3 — intra-node ring allgather of the k reduced chunks: k−1
+    // steps, every local rank forwarding one chunk per step (so each node
+    // circulates the full payload once per step).
+    let max_chunk_hop = bounds
+        .iter()
+        .filter(|(lo, hi)| lo < hi)
+        .map(|(lo, hi)| intra_hop((hi - lo) * F32))
+        .fold(0.0f64, f64::max);
+    seconds += (k - 1) as f64 * max_chunk_hop;
+    wire += m * (k - 1) * len * F32;
+    for node in 0..m {
+        for c in 0..k {
+            let (lo, hi) = bounds[c];
+            if lo >= hi {
+                continue;
+            }
+            let owner = node * k + leader(c);
+            scratch[..hi - lo].copy_from_slice(&bufs[owner][lo..hi]);
+            for j in 0..k {
+                let r = node * k + j;
+                if r != owner {
+                    bufs[r][lo..hi].copy_from_slice(&scratch[..hi - lo]);
+                }
+            }
+        }
+    }
+
+    CollectiveCost { seconds, wire_bytes: wire }
+}
+
+/// Execute an allreduce under `algo`. `ranks_per_node` describes the group
+/// layout (node-major: consecutive ranks share a server); the flat
+/// algorithms run every hop on the inter-node link whenever the group
+/// spans nodes, while [`CommAlgo::Hierarchical`] splits its phases between
+/// the two links. [`CommAlgo::Auto`] resolves against the closed-form
+/// costs by probing the two hop functions (exact for affine hops).
+pub fn allreduce(
+    algo: CommAlgo,
+    bufs: &mut [Vec<f32>],
+    ranks_per_node: usize,
+    intra_hop: HopTime,
+    inter_hop: HopTime,
+) -> CollectiveCost {
+    let n = bufs.len();
+    assert!(n > 0);
+    // Whole nodes only: the same rounding rule the closed-form topology
+    // applies, so model and executable agree on the group shape.
+    let k = whole_node_group(n, ranks_per_node);
+    let algo = match algo {
+        CommAlgo::Auto => {
+            let topo = super::algo::CommTopology {
+                n_ranks: n,
+                ranks_per_node: k,
+                intra: LinkTime::probe(intra_hop),
+                inter: LinkTime::probe(inter_hop),
+            };
+            let bytes = bufs[0].len() * F32;
+            algo.resolve(bytes, &topo)
+        }
+        concrete => concrete,
+    };
+    let flat: HopTime = if n > k { inter_hop } else { intra_hop };
+    match algo {
+        CommAlgo::Ring => ring_allreduce(bufs, flat),
+        CommAlgo::Tree => tree_allreduce(bufs, flat),
+        CommAlgo::RecursiveHalvingDoubling => rhd_allreduce(bufs, flat),
+        CommAlgo::Hierarchical => hierarchical_allreduce(bufs, k, intra_hop, inter_hop),
+        CommAlgo::Auto => unreachable!("Auto resolved above"),
+    }
+}
+
 /// Ring allgather: every rank contributes its buffer; all ranks end with the
 /// concatenation (rank-major). Returns (gathered, cost).
 pub fn ring_allgather(bufs: &[Vec<f32>], hop: HopTime) -> (Vec<Vec<f32>>, CollectiveCost) {
@@ -110,7 +420,6 @@ pub fn ring_allgather(bufs: &[Vec<f32>], hop: HopTime) -> (Vec<Vec<f32>>, Collec
             wire += bytes;
         }
         seconds += max_hop;
-        let _ = s;
     }
     (out, CollectiveCost { seconds, wire_bytes: wire })
 }
@@ -167,7 +476,7 @@ mod tests {
         ];
         ring_allreduce(&mut bufs, &unit_hop);
         for b in &bufs {
-            assert_eq!(b, &vec![111.0, 222.0, 333.0, 444.0, 555.0]);
+            assert_eq!(b, &[111.0, 222.0, 333.0, 444.0, 555.0]);
         }
     }
 
@@ -212,7 +521,7 @@ mod tests {
         let bufs = vec![vec![1.0f32], vec![2.0], vec![3.0]];
         let (out, cost) = ring_allgather(&bufs, &unit_hop);
         for o in &out {
-            assert_eq!(o, &vec![1.0, 2.0, 3.0]);
+            assert_eq!(o, &[1.0, 2.0, 3.0]);
         }
         assert_eq!(cost.seconds, 2.0);
     }
@@ -223,7 +532,7 @@ mod tests {
         bufs[2] = vec![9.0, 8.0, 7.0, 6.0];
         let c = tree_broadcast(&mut bufs, 2, &unit_hop);
         for b in &bufs {
-            assert_eq!(b, &vec![9.0, 8.0, 7.0, 6.0]);
+            assert_eq!(b, &[9.0, 8.0, 7.0, 6.0]);
         }
         // ceil(log2(5)) = 3 rounds.
         assert_eq!(c.seconds, 3.0);
@@ -235,5 +544,156 @@ mod tests {
         let c = ring_allreduce(&mut bufs, &unit_hop);
         // n=2: chunks of 4 floats; 2 steps, each moving 2 ranks * 16 bytes.
         assert_eq!(c.wire_bytes, 2 * 2 * 16);
+    }
+
+    /// Random small-integer buffers: every addition order yields the same
+    /// bits, so reduction results can be compared exactly across
+    /// algorithms.
+    fn integer_bufs(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.usize(0, 17) as f32 - 8.0).collect())
+            .collect()
+    }
+
+    fn naive_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        (0..bufs[0].len())
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>())
+            .collect()
+    }
+
+    #[test]
+    fn every_algorithm_matches_the_naive_sum_bit_for_bit() {
+        // Integer-valued payloads make f32 addition exact, so ring, tree,
+        // halving-doubling and hierarchical must all reproduce the naive
+        // per-element sum bit for bit, on every rank.
+        prop::check(60, |rng: &mut Rng| {
+            let n = rng.usize(1, 13);
+            let len = rng.usize(1, 70);
+            let reference = integer_bufs(rng, n, len);
+            let expect = naive_sum(&reference);
+            let rpn = rng.usize(1, n + 1);
+            for algo in CommAlgo::CONCRETE {
+                let mut bufs = reference.clone();
+                allreduce(algo, &mut bufs, rpn, &unit_hop, &unit_hop);
+                for (r, b) in bufs.iter().enumerate() {
+                    for (i, (x, e)) in b.iter().zip(&expect).enumerate() {
+                        prop::assert_prop(
+                            x.to_bits() == e.to_bits(),
+                            format!("{algo} rank {r} elem {i}: {x} != {e} \
+                                     (n={n}, len={len}, rpn={rpn})"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_dispatch_also_sums_exactly() {
+        prop::check(20, |rng: &mut Rng| {
+            let n = rng.usize(2, 10);
+            let len = rng.usize(1, 40);
+            let mut bufs = integer_bufs(rng, n, len);
+            let expect = naive_sum(&bufs);
+            let slow = |bytes: usize| 3.0e-6 + bytes as f64 / 10e9;
+            let fast = |bytes: usize| 0.8e-6 + bytes as f64 / 200e9;
+            allreduce(CommAlgo::Auto, &mut bufs, 2, &fast, &slow);
+            for b in &bufs {
+                for (x, e) in b.iter().zip(&expect) {
+                    prop::assert_prop(x.to_bits() == e.to_bits(), "auto dispatch sum")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_bytes_per_algorithm() {
+        // 4 ranks x 16 floats (64 bytes each): the textbook totals.
+        let mk = || vec![vec![1.0f32; 16]; 4];
+        let b = 64usize;
+        let ring = ring_allreduce(&mut mk(), &unit_hop);
+        assert_eq!(ring.wire_bytes, 2 * 3 * b); // 2(n-1) x full payload
+        let tree = tree_allreduce(&mut mk(), &unit_hop);
+        assert_eq!(tree.wire_bytes, 2 * 3 * b); // 2(n-1) edges x full payload
+        let rhd = rhd_allreduce(&mut mk(), &unit_hop);
+        assert_eq!(rhd.wire_bytes, 2 * 3 * b); // 2(p-1) x full payload
+        let hier = hierarchical_allreduce(&mut mk(), 2, &unit_hop, &unit_hop);
+        // 2 nodes x 1 intra step x 64B, twice (RS + AG), + 2 chunk rings
+        // of 2 nodes x 2(m-1)=2 steps x 16B sub-chunks.
+        assert_eq!(hier.wire_bytes, 2 * 2 * 64 + 2 * 2 * 32);
+    }
+
+    #[test]
+    fn tree_allreduce_steps_are_logarithmic() {
+        let mut bufs = vec![vec![0.0f32; 4]; 8];
+        let c = tree_allreduce(&mut bufs, &unit_hop);
+        assert_eq!(c.seconds, 6.0); // 3 reduce + 3 broadcast rounds
+        let mut bufs = vec![vec![0.0f32; 4]; 5];
+        let c = tree_allreduce(&mut bufs, &unit_hop);
+        assert_eq!(c.seconds, 6.0); // ceil(log2 5) = 3 each way
+    }
+
+    #[test]
+    fn rhd_handles_non_power_of_two_groups() {
+        for n in [2usize, 3, 5, 6, 7, 8, 12] {
+            let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![(r + 1) as f32; 24]).collect();
+            let expect = (n * (n + 1) / 2) as f32;
+            let c = rhd_allreduce(&mut bufs, &unit_hop);
+            for b in &bufs {
+                assert!(b.iter().all(|&x| x == expect), "n={n}");
+            }
+            let p = if n.is_power_of_two() { n } else { n.next_power_of_two() / 2 };
+            assert_eq!(c.wire_bytes, (2 * (p - 1) + 2 * (n - p)) * 24 * 4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn closed_form_costs_match_the_executable_collectives() {
+        // On evenly-splitting payloads the closed forms in comm::algo walk
+        // the identical hop sequence: seconds match to rounding, wire
+        // bytes match exactly.
+        use crate::comm::algo::{allreduce_cost, CommTopology, LinkTime};
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        for (k, m) in [(2usize, 2usize), (4, 2), (2, 4), (8, 2), (3, 3)] {
+            let n = k * m;
+            let len = k * m * 32; // divisible by n, k, and m per chunk
+            let topo = CommTopology { n_ranks: n, ranks_per_node: k, intra, inter };
+            for algo in CommAlgo::CONCRETE {
+                let mut bufs = vec![vec![1.0f32; len]; n];
+                let run = allreduce(algo, &mut bufs, k, &intra_hop, &inter_hop);
+                let model = allreduce_cost(algo, len * F32, &topo);
+                assert!(
+                    (run.seconds - model.seconds).abs() <= 1e-12 * model.seconds.max(1e-12),
+                    "{algo} k={k} m={m}: run {} vs model {}",
+                    run.seconds,
+                    model.seconds
+                );
+                assert_eq!(run.wire_bytes, model.wire_bytes, "{algo} k={k} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_end_to_end() {
+        // Executable collectives, 2 nodes x 4 ranks, intra 20x the NIC
+        // path: the two-level schedule must finish first.
+        let slow = |bytes: usize| 3.0e-6 + bytes as f64 / 10e9;
+        let fast = |bytes: usize| 0.8e-6 + bytes as f64 / 200e9;
+        let mk = || vec![vec![1.0f32; 1 << 16]; 8];
+        let ring = ring_allreduce(&mut mk(), &slow);
+        let hier = hierarchical_allreduce(&mut mk(), 4, &fast, &slow);
+        assert!(hier.seconds < ring.seconds, "hier {} !< ring {}", hier.seconds, ring.seconds);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole nodes")]
+    fn hierarchical_rejects_partial_nodes() {
+        let mut bufs = vec![vec![0.0f32; 4]; 6];
+        hierarchical_allreduce(&mut bufs, 4, &unit_hop, &unit_hop);
     }
 }

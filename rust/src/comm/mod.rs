@@ -2,15 +2,25 @@
 //!
 //! * [`model`] — calibrated timing model for the three strategies
 //!   (CPU-mediated TCP, CPU-mediated RDMA, device-direct RDMA).
-//! * [`collectives`] — byte-accurate ring allreduce / allgather / broadcast
-//!   with critical-path timing.
+//! * [`algo`] — the collective-algorithm engine: closed-form
+//!   latency/bandwidth costs for ring / tree / recursive halving-doubling
+//!   / hierarchical allreduces over a [`CommTopology`], plus the
+//!   topology-aware [`CommAlgo::Auto`] selector.
+//! * [`collectives`] — byte-accurate executable collectives (the same
+//!   algorithm library, moving real rank buffers) with critical-path
+//!   timing.
 //! * [`fabric`] — in-process transport for the coordinator's stage workers:
 //!   real tensors + LogP-style virtual clocks.
 
+pub mod algo;
 pub mod collectives;
 pub mod fabric;
 pub mod model;
 
-pub use collectives::{ring_allgather, ring_allreduce, send_recv, tree_broadcast, CollectiveCost};
+pub use algo::{allreduce_cost, CommAlgo, CommTopology, LinkTime};
+pub use collectives::{
+    allreduce, hierarchical_allreduce, rhd_allreduce, ring_allgather, ring_allreduce, send_recv,
+    tree_allreduce, tree_broadcast, CollectiveCost,
+};
 pub use fabric::{fabric, Endpoint, LatencyFn};
-pub use model::{cross_node_time, intra_node_time, p2p_latency, CommMode};
+pub use model::{cross_node_bandwidth, cross_node_time, intra_node_time, p2p_latency, CommMode};

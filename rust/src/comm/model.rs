@@ -61,8 +61,14 @@ impl CommMode {
 
 const GB: f64 = 1e9;
 
-/// Base one-way latency (s) of each strategy: protocol + setup cost.
-fn base_latency(mode: CommMode) -> f64 {
+/// Per-hop base latency (s) of the intra-node fabric (kernel launch +
+/// copy-engine setup) — the latency term of [`intra_node_time`] and of the
+/// intra-node link in [`crate::comm::algo::CommTopology`].
+pub const INTRA_NODE_LATENCY: f64 = 0.8e-6;
+
+/// Base one-way latency (s) of each strategy: protocol + setup cost — the
+/// latency term of the DiComm closed-form link model.
+pub fn base_latency(mode: CommMode) -> f64 {
     match mode {
         CommMode::TcpCpu => 5.23e-6,      // kernel stack + two staging setups
         CommMode::RdmaCpu => 4.5e-6,      // verbs post + staging setups
@@ -93,6 +99,30 @@ pub fn p2p_latency(mode: CommMode, bytes: usize) -> f64 {
     base_latency(mode) + bytes as f64 / streaming_bandwidth(mode, wire)
 }
 
+/// Effective cross-node streaming bandwidth (bytes/s) for one chip-to-chip
+/// flow under a communication strategy and NIC-affinity configuration —
+/// the bandwidth term of the DiComm closed-form link model, shared by
+/// [`cross_node_time`] and [`crate::comm::algo::CommTopology`].
+pub fn cross_node_bandwidth(
+    mode: CommMode,
+    src: &ChipSpec,
+    dst: &ChipSpec,
+    assign: NicAssignment,
+) -> f64 {
+    // Per-flow wire ceiling from the topology model (already includes RDMA
+    // efficiency and NIC sharing across the server's concurrent flows).
+    let flow = flow_bandwidth_gbps(src, dst, assign) * GB;
+    match mode {
+        CommMode::DeviceDirect => flow,
+        CommMode::RdmaCpu => 1.0 / (1.0 / 20e9 + 1.0 / flow + 1.0 / 20e9),
+        CommMode::TcpCpu => {
+            // TCP ignores the RDMA efficiency win but still shares the NIC.
+            let wire = flow / RDMA_EFFICIENCY / 16.0;
+            wire.min(flow)
+        }
+    }
+}
+
 /// Cross-node transfer time (s) between two specific chip types, with NIC
 /// affinity configuration — used by the resharding and pipeline models.
 pub fn cross_node_time(
@@ -102,25 +132,13 @@ pub fn cross_node_time(
     dst: &ChipSpec,
     assign: NicAssignment,
 ) -> f64 {
-    // Per-flow wire ceiling from the topology model (already includes RDMA
-    // efficiency and NIC sharing across the server's concurrent flows).
-    let flow = flow_bandwidth_gbps(src, dst, assign) * GB;
-    let eff = match mode {
-        CommMode::DeviceDirect => flow,
-        CommMode::RdmaCpu => 1.0 / (1.0 / 20e9 + 1.0 / flow + 1.0 / 20e9),
-        CommMode::TcpCpu => {
-            // TCP ignores the RDMA efficiency win but still shares the NIC.
-            let wire = flow / RDMA_EFFICIENCY / 16.0;
-            wire.min(flow)
-        }
-    };
-    base_latency(mode) + bytes as f64 / eff
+    base_latency(mode) + bytes as f64 / cross_node_bandwidth(mode, src, dst, assign)
 }
 
 /// Intra-node transfer time (s) between two chip slots of the same server.
 pub fn intra_node_time(spec: &ChipSpec, slot_a: usize, slot_b: usize, bytes: usize) -> f64 {
     let bw = spec.intra_node.bandwidth_gbps(slot_a, slot_b) * GB;
-    0.8e-6 + bytes as f64 / bw
+    INTRA_NODE_LATENCY + bytes as f64 / bw
 }
 
 #[cfg(test)]

@@ -19,9 +19,10 @@
 //!                                           {"chip": "B", "chips": 256}] },
 //!   "gbs_tokens": 2097152,
 //!   "search": { "schedules": ["1f1b", "interleaved:2", "zbv"],
+//!               "comm_algos": ["ring", "hierarchical"],
 //!               "group_split": 128, "two_stage": true },
-//!   "sim": { "comm": "ddr", "reshard": "srag", "nic_affinity": true,
-//!            "fine_overlap": true },
+//!   "sim": { "comm": "ddr", "reshard": "srag", "comm_algo": "auto",
+//!            "nic_affinity": true, "fine_overlap": true },
 //!   "train": {
 //!     "model": "h2_100m",
 //!     "stages": [{"prefix": "first_l10", "chip": "A"},
@@ -35,7 +36,7 @@
 use anyhow::{anyhow, Context, Result};
 
 use crate::auto::SearchConfig;
-use crate::comm::CommMode;
+use crate::comm::{CommAlgo, CommMode};
 use crate::coordinator::{StagePlan, TrainConfig};
 use crate::costmodel::Schedule;
 use crate::hetero::{register_custom, Cluster, CustomChipDef};
@@ -57,6 +58,13 @@ pub struct Config {
     pub gbs_tokens: Option<usize>,
     /// HeteroAuto options, if declared.
     pub search: Option<SearchConfig>,
+    /// An *explicitly* pinned DP-collective algorithm from the search
+    /// section (`comm_algo` token, or a one-entry `comm_algos` list).
+    /// Kept separate from [`SearchConfig::comm_algos`] because the default
+    /// space is already the singleton `auto` — without this flag an
+    /// explicit `"comm_algo": "auto"` pin would be indistinguishable from
+    /// "nothing declared" when lowering into a plan.
+    pub comm_algo_pin: Option<CommAlgo>,
     /// Simulation overrides, if declared.
     pub sim: Option<SimOverrides>,
     /// Real-training job, if declared.
@@ -70,6 +78,11 @@ pub struct Config {
 pub struct SimOverrides {
     /// Communication strategy override.
     pub comm: Option<CommMode>,
+    /// DP-collective algorithm override. Unlike the other keys this lands
+    /// on the plan's *strategy* (where the algorithm travels), not on
+    /// [`SimOptions`] — see `apply_sim_overrides` in the CLI and
+    /// [`crate::config::Config::plan_builder`].
+    pub comm_algo: Option<CommAlgo>,
     /// Resharding strategy override.
     pub reshard: Option<ReshardStrategy>,
     /// NIC affinity on/off override.
@@ -109,6 +122,23 @@ fn parse_cluster(v: &Value) -> Result<Cluster> {
 
 fn parse_search(v: &Value) -> Result<SearchConfig> {
     let d = SearchConfig::default();
+    // Collective-algorithm selection mirrors the schedule keys:
+    // `comm_algos` (list) > `comm_algo` (single token) > the default
+    // (the topology-aware auto selector).
+    let comm_algos = if let Some(list) = v.opt("comm_algos") {
+        let mut out = Vec::new();
+        for a in list.arr()? {
+            out.push(parse_token(a, "comm_algos", CommAlgo::parse)?);
+        }
+        if out.is_empty() {
+            anyhow::bail!("`comm_algos` must name at least one algorithm");
+        }
+        out
+    } else if let Some(tok) = v.opt("comm_algo") {
+        vec![parse_token(tok, "comm_algo", CommAlgo::parse)?]
+    } else {
+        d.comm_algos.clone()
+    };
     // Schedule selection, most specific key wins: `schedules` (list of
     // tokens) > `schedule` (single token) > legacy `alpha` (mapped through
     // `Schedule::from_alpha`) > the full default search space.
@@ -130,6 +160,7 @@ fn parse_search(v: &Value) -> Result<SearchConfig> {
     };
     Ok(SearchConfig {
         schedules,
+        comm_algos,
         group_split: v.opt("group_split").map(|x| x.usize()).transpose()?
             .unwrap_or(d.group_split),
         two_stage: v.opt("two_stage").map(|x| x.bool()).transpose()?.unwrap_or(d.two_stage),
@@ -141,6 +172,10 @@ fn parse_search(v: &Value) -> Result<SearchConfig> {
 fn parse_sim(v: &Value) -> Result<SimOverrides> {
     Ok(SimOverrides {
         comm: v.opt("comm").map(|c| parse_token(c, "comm", CommMode::parse)).transpose()?,
+        comm_algo: v
+            .opt("comm_algo")
+            .map(|a| parse_token(a, "comm_algo", CommAlgo::parse))
+            .transpose()?,
         reshard: v
             .opt("reshard")
             .map(|r| parse_token(r, "reshard", ReshardStrategy::parse))
@@ -201,13 +236,26 @@ impl Config {
                 chips.push(def);
             }
         }
+        let search = v.opt("search").map(parse_search).transpose()
+            .context("parsing `search`")?;
+        // A pin is explicit only when the section actually carried a
+        // comm-algo key and it narrowed the space to one algorithm.
+        let comm_algo_pin = match (&search, v.opt("search")) {
+            (Some(cfg), Some(sv))
+                if (sv.opt("comm_algo").is_some() || sv.opt("comm_algos").is_some())
+                    && cfg.comm_algos.len() == 1 =>
+            {
+                Some(cfg.comm_algos[0])
+            }
+            _ => None,
+        };
         Ok(Config {
             chips,
             cluster: v.opt("cluster").map(parse_cluster).transpose()
                 .context("parsing `cluster`")?,
             gbs_tokens: v.opt("gbs_tokens").map(|x| x.usize()).transpose()?,
-            search: v.opt("search").map(parse_search).transpose()
-                .context("parsing `search`")?,
+            search,
+            comm_algo_pin,
             sim: v.opt("sim").map(parse_sim).transpose()
                 .context("parsing `sim`")?,
             train: v.opt("train").map(parse_train).transpose()
@@ -254,8 +302,10 @@ impl Config {
     /// Lower the config into a [`PlanBuilder`]: cluster, global batch,
     /// simulation options, and the train section (run shape + perturb
     /// flag) are applied; when the search section pins exactly one
-    /// schedule, that schedule overrides the strategy's. The caller
-    /// supplies the strategy (usually from `HeteroAuto`) and builds.
+    /// schedule, that schedule overrides the strategy's, and an explicit
+    /// comm-algo pin (search section or `sim.comm_algo`) overrides the
+    /// strategy's collective. The caller supplies the strategy (usually
+    /// from `HeteroAuto`) and builds.
     pub fn plan_builder(&self, name: &str) -> Result<PlanBuilder> {
         let cluster = self
             .cluster
@@ -271,6 +321,16 @@ impl Config {
         let search = self.search_config();
         if search.schedules.len() == 1 {
             b = b.schedule(search.schedules[0]);
+        }
+        // Unlike schedules (whose default space has three entries), the
+        // default comm-algo space is already a singleton, so only a pin
+        // the config *explicitly* declared (any token, `auto` included)
+        // overrides the caller's strategy.
+        if let Some(algo) = self.comm_algo_pin {
+            b = b.comm_algo(algo);
+        }
+        if let Some(algo) = self.sim.and_then(|s| s.comm_algo) {
+            b = b.comm_algo(algo);
         }
         if let Some(gbs) = self.gbs_tokens {
             b = b.gbs_tokens(gbs);
@@ -403,7 +463,7 @@ mod tests {
         let c = Config::parse(r#"{
             "cluster": {"name": "lab", "groups": [{"chip": "A", "chips": 256}]},
             "gbs_tokens": 2097152,
-            "search": {"schedule": "zbv"},
+            "search": {"schedule": "zbv", "comm_algo": "hierarchical"},
             "sim": {"comm": "tcp"}
         }"#).unwrap();
         let plan = c.plan_builder("from-config").unwrap()
@@ -411,6 +471,7 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
             })
             .build()
@@ -418,8 +479,58 @@ mod tests {
         assert_eq!(plan.gbs_tokens, 2097152);
         assert_eq!(plan.comm, crate::comm::CommMode::TcpCpu);
         assert_eq!(plan.cluster.name, "lab");
-        // The pinned search schedule overrides the strategy's.
+        // The pinned search schedule and comm algo override the strategy's.
         assert_eq!(plan.strategy.schedule, Schedule::ZeroBubbleV);
+        assert_eq!(plan.strategy.comm_algo, CommAlgo::Hierarchical);
+    }
+
+    #[test]
+    fn comm_algo_keys_parse_like_the_schedule_keys() {
+        let c = Config::parse(r#"{"search": {"comm_algos": ["ring", "hier", "rhd"]}}"#)
+            .unwrap();
+        assert_eq!(c.search_config().comm_algos,
+                   vec![CommAlgo::Ring, CommAlgo::Hierarchical,
+                        CommAlgo::RecursiveHalvingDoubling]);
+        let c = Config::parse(r#"{"search": {"comm_algo": "tree"}}"#).unwrap();
+        assert_eq!(c.search_config().comm_algos, vec![CommAlgo::Tree]);
+        // No key: the topology-aware auto selector alone.
+        let c = Config::parse(r#"{"search": {}}"#).unwrap();
+        assert_eq!(c.search_config().comm_algos, vec![CommAlgo::Auto]);
+        // Bad tokens and empty lists fail loudly.
+        assert!(Config::parse(r#"{"search": {"comm_algo": "bogus"}}"#).is_err());
+        assert!(Config::parse(r#"{"search": {"comm_algos": []}}"#).is_err());
+        // The sim section carries a per-run override.
+        let c = Config::parse(r#"{"sim": {"comm_algo": "auto"}}"#).unwrap();
+        assert_eq!(c.sim.unwrap().comm_algo, Some(CommAlgo::Auto));
+        // Explicitness is tracked: an explicit `auto` pin is a pin, while
+        // a search section without comm-algo keys (or a multi-entry
+        // space) is not.
+        let c = Config::parse(r#"{"search": {"comm_algo": "auto"}}"#).unwrap();
+        assert_eq!(c.comm_algo_pin, Some(CommAlgo::Auto));
+        let c = Config::parse(r#"{"search": {"two_stage": false}}"#).unwrap();
+        assert_eq!(c.comm_algo_pin, None);
+        let c = Config::parse(r#"{"search": {"comm_algos": ["ring", "tree"]}}"#).unwrap();
+        assert_eq!(c.comm_algo_pin, None);
+    }
+
+    #[test]
+    fn explicit_auto_pin_lowers_into_the_plan_builder() {
+        use crate::costmodel::{GroupPlan, Strategy};
+        let c = Config::parse(r#"{
+            "cluster": {"name": "lab", "groups": [{"chip": "A", "chips": 256}]},
+            "search": {"comm_algo": "auto"}
+        }"#).unwrap();
+        let plan = c.plan_builder("auto-pin").unwrap()
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 128,
+                schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
+                plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+            })
+            .build()
+            .unwrap();
+        assert_eq!(plan.strategy.comm_algo, CommAlgo::Auto);
     }
 
     #[test]
@@ -433,6 +544,7 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 32, recompute: false },
                     GroupPlan { s_pp: 32, s_tp: 4, layers: 64, recompute: true },

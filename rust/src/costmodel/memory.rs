@@ -127,6 +127,7 @@ mod tests {
             s_dp: dp,
             micro_batches: 2 * 1024 * 1024 / 4096 / dp,
             schedule: crate::costmodel::Schedule::OneF1B,
+            comm_algo: crate::comm::CommAlgo::Ring,
             plans: vec![plan],
         };
         stage_memory_bytes(&spec(kind), &H2_100B, &plan, &strategy, 0, pp, 4096, true, false)
@@ -176,6 +177,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule: crate::costmodel::Schedule::OneF1B,
+            comm_algo: crate::comm::CommAlgo::Ring,
             plans: vec![plan],
         };
         let early = stage_memory_bytes(&spec(ChipKind::A), &H2_100B, &plan, &strategy,
@@ -192,6 +194,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule,
+            comm_algo: crate::comm::CommAlgo::Ring,
             plans: vec![plan],
         };
         let s1 = mk(crate::costmodel::Schedule::OneF1B);

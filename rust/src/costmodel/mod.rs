@@ -15,10 +15,11 @@ pub mod memory;
 pub mod profile;
 pub mod schedule;
 
+use crate::comm::CommAlgo;
 use crate::hetero::{ChipGroup, Cluster};
 
 pub use memory::{stage_memory_bytes, MemoryBreakdown};
-pub use profile::{profile_layer, LayerProfile};
+pub use profile::{profile_layer, profile_layer_comm, LayerProfile};
 pub use schedule::Schedule;
 
 /// Transformer shape consumed by the analytic model (Table 4 for the 100B).
@@ -127,6 +128,11 @@ pub struct Strategy {
     /// zero-bubble) — drives the cost model's bubble and memory terms and
     /// the simulator's issue order.
     pub schedule: Schedule,
+    /// Collective algorithm of the DP gradient synchronization (flat ring
+    /// / tree / recursive halving-doubling / hierarchical, or the
+    /// topology-aware `auto` selector) — drives the cost model's and
+    /// simulator's `t_update` via [`profile_layer_comm`].
+    pub comm_algo: CommAlgo,
     /// Plans in *memory-descending group order* (HeteroPP stage order).
     pub plans: Vec<GroupPlan>,
 }
@@ -163,7 +169,8 @@ pub const MEMORY_SAFETY: f64 = 0.92;
 
 /// Evaluate the §4.3.2 cost model. `groups` must be in memory-descending
 /// order and positionally matched with `strategy.plans`. The bubble
-/// coefficient and activation residency come from `strategy.schedule`.
+/// coefficient and activation residency come from `strategy.schedule`;
+/// the DP gradient-sync collective from `strategy.comm_algo`.
 pub fn evaluate(
     model: &ModelShape,
     groups: &[&ChipGroup],
@@ -183,7 +190,13 @@ pub fn evaluate(
     // Stage positions are assigned in group order (memory-descending).
     let mut first_stage = 0usize;
     for (g, plan) in groups.iter().zip(&strategy.plans) {
-        let prof = profile_layer(&g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp);
+        // The closed form has no NIC-policy axis (it models no reshard
+        // traffic either — both are simulator ablations): DP sync is
+        // priced at the paper-default affine mapping.
+        let prof = profile_layer_comm(
+            &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
+            crate::topology::NicAssignment::Affinity,
+        );
         let lps = plan.layers_per_stage() as f64;
         let mut t_comp = lps
             * (prof.t_fwd + prof.t_bwd + if plan.recompute { prof.t_recompute } else { 0.0 });
@@ -311,6 +324,7 @@ mod tests {
             s_dp: 1,
             micro_batches: 8,
             schedule: Schedule::ZeroBubbleV,
+            comm_algo: CommAlgo::Ring,
             plans: vec![
                 GroupPlan { s_pp: 24, s_tp: 1, layers: 0, recompute: false },
                 GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false },
@@ -327,6 +341,7 @@ mod tests {
             s_dp: 1,
             micro_batches: 8,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 1, layers: 0, recompute: false }],
         };
         uniform_1f1b(&mut s, 96);
@@ -348,6 +363,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128, // 2M tokens / 4096 seq / 4 dp
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
         };
         let eval = evaluate(&H2_100B, &groups, &strategy, 4096);
@@ -365,6 +381,7 @@ mod tests {
             s_dp: 4,
             micro_batches: mb,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
         };
         let t_small = evaluate(&H2_100B, &groups, &mk(16), 4096);
@@ -383,6 +400,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
         };
         let t1 = evaluate(&H2_100B, &groups, &mk(Schedule::OneF1B), 4096);
@@ -403,6 +421,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: rec }],
         };
         let with = evaluate(&H2_100B, &groups, &mk(true), 4096);

@@ -10,14 +10,17 @@
 //! * TP collective time on the intra-node fabric (2 allreduces each for
 //!   forward and backward per layer, §2.2),
 //! * ZeRO-1 optimizer update: Adam math + the non-overlapped slice of the
-//!   DP gradient synchronization over the NIC.
+//!   DP gradient synchronization, priced by the DiComm collective engine
+//!   ([`crate::comm::allreduce_cost`]) under the strategy's [`CommAlgo`]
+//!   over the stage's DP-group topology.
 //!
 //! The same numbers can alternatively be calibrated from real PJRT stage
 //! executions (`h2 profile`), which is what keeps HeteroAuto honest: it
 //! only ever consumes this table, exactly like the paper's searcher.
 
+use crate::comm::{allreduce_cost, CommAlgo, CommTopology};
 use crate::hetero::ChipSpec;
-use crate::topology::RDMA_EFFICIENCY;
+use crate::topology::NicAssignment;
 
 use super::ModelShape;
 
@@ -55,12 +58,33 @@ const PCIE_OFFLOAD_BPS: f64 = 12.0e9;
 
 /// Analytic per-layer profile for one (chip, TP, DP) combination —
 /// the roofline stand-in for the paper's measured auto-profiler table.
+/// DP gradient sync is priced as a flat ring under NIC affinity (the
+/// pre-engine behaviour); see [`profile_layer_comm`] for the
+/// algorithm- and NIC-policy-aware variant.
 pub fn profile_layer(
     spec: &ChipSpec,
     model: &ModelShape,
     tp: usize,
     micro_tokens: usize,
     dp: usize,
+) -> LayerProfile {
+    profile_layer_comm(spec, model, tp, micro_tokens, dp, CommAlgo::Ring,
+                       NicAssignment::Affinity)
+}
+
+/// [`profile_layer`] with an explicit DP-gradient collective algorithm
+/// and NIC-assignment policy: the exposed DP-sync slice of `t_update`
+/// prices `comm_algo` with the closed-form engine over the stage's
+/// DP-group topology ([`CommTopology::dp_group`]), whose inter-node link
+/// carries the Table 3 per-flow bandwidth under `assign`.
+pub fn profile_layer_comm(
+    spec: &ChipSpec,
+    model: &ModelShape,
+    tp: usize,
+    micro_tokens: usize,
+    dp: usize,
+    comm_algo: CommAlgo,
+    assign: NicAssignment,
 ) -> LayerProfile {
     let tpf = tp as f64;
     let sustained = spec.sustained_tflops() * 1e12;
@@ -86,14 +110,15 @@ pub fn profile_layer(
     let t_recompute = t_fwd;
 
     // Optimizer: Adam math (memory-bound on chip, folded into sustained
-    // throughput) + exposed DP sync of bf16 gradients over the NIC share.
+    // throughput) + exposed DP sync of bf16 gradients, priced by the
+    // DiComm engine under the strategy's collective algorithm over this
+    // stage's DP-group topology (co-located replicas on the intra fabric,
+    // scattered ones on the Table 3 per-flow NIC path).
     let t_adam = params_per_chip * ADAM_FLOPS / sustained / dp as f64; // ZeRO-1 shard
     let t_dp_sync = if dp > 1 {
-        let nic_share = spec.nic_gbps * 1e9 * RDMA_EFFICIENCY * spec.nics_per_node as f64
-            / spec.chips_per_node as f64;
-        let grad_bytes = params_per_chip * 2.0;
-        let ring = 2.0 * (dp as f64 - 1.0) / dp as f64 * grad_bytes / nic_share;
-        ring * (1.0 - DP_OVERLAP)
+        let topo = CommTopology::dp_group(spec, dp, tp, assign);
+        let grad_bytes = (params_per_chip * 2.0) as usize;
+        allreduce_cost(comm_algo, grad_bytes, &topo).seconds * (1.0 - DP_OVERLAP)
     } else {
         0.0
     };
@@ -143,6 +168,33 @@ mod tests {
         let p1 = profile_layer(&s, &H2_100B, 4, 4096, 1);
         let p8 = profile_layer(&s, &H2_100B, 4, 4096, 8);
         assert!(p8.t_update > p1.t_update);
+    }
+
+    #[test]
+    fn hierarchical_dp_sync_beats_ring_on_multi_node_groups() {
+        // Chip B, TP 4: only 2 of the 4 DP replicas fit per 8-chip node,
+        // so the DP ring crosses nodes — the two-level collective keeps
+        // most hops on the intra fabric and must shrink t_update.
+        let s = spec(ChipKind::B);
+        let aff = NicAssignment::Affinity;
+        let ring = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Ring, aff);
+        let hier = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Hierarchical, aff);
+        assert!(hier.t_update < ring.t_update,
+                "hier {} !< ring {}", hier.t_update, ring.t_update);
+        // Auto never loses to any concrete algorithm.
+        let auto = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Auto, aff);
+        for algo in CommAlgo::CONCRETE {
+            let p = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, algo, aff);
+            assert!(auto.t_update <= p.t_update, "{algo}");
+        }
+        // Compute terms are untouched by the collective choice.
+        assert_eq!(ring.t_fwd, hier.t_fwd);
+        assert_eq!(ring.t_bwd, hier.t_bwd);
+        // A non-affine NIC mapping degrades the cross-node DP sync.
+        let non = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Ring,
+                                     NicAssignment::NonAffinity);
+        assert!(non.t_update > ring.t_update,
+                "non-affinity {} !> affinity {}", non.t_update, ring.t_update);
     }
 
     #[test]

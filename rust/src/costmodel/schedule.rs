@@ -18,10 +18,11 @@
 use std::fmt;
 
 /// A pipeline-parallel execution schedule.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Schedule {
     /// Classic one-forward-one-backward: bubble fraction
     /// `(pp − 1) / (b + pp − 1)`, the paper's `α = 1` reference point.
+    #[default]
     OneF1B,
     /// Interleaved 1F1B (Megatron-style virtual pipeline): each physical
     /// stage hosts `virtual_stages` layer chunks, shrinking the bubble by
@@ -37,12 +38,6 @@ pub enum Schedule {
     /// phase that fills what would otherwise be bubble, approaching the
     /// paper's `α = 0` limit while keeping 1F1B-level activation memory.
     ZeroBubbleV,
-}
-
-impl Default for Schedule {
-    fn default() -> Self {
-        Schedule::OneF1B
-    }
 }
 
 impl Schedule {

@@ -285,13 +285,16 @@ pub fn register_custom(def: &CustomChipDef) -> Result<ChipKind> {
     if def.chips_per_node == 0 || def.nics_per_node == 0 {
         bail!("custom chip `{}`: chips_per_node and nics_per_node must be > 0", def.name);
     }
-    if !(def.fp16_tflops > 0.0 && def.memory_gib > 0.0 && def.mfu > 0.0 && def.nic_gbps > 0.0) {
+    let rates_ok = [def.fp16_tflops, def.memory_gib, def.mfu, def.nic_gbps]
+        .into_iter()
+        .all(|x| x > 0.0);
+    if !rates_ok {
         bail!("custom chip `{}`: tflops/memory/mfu/nic_gbps must be > 0", def.name);
     }
-    if !(def.pcie_to_nic_gbps > 0.0
+    let nic_path_ok = def.pcie_to_nic_gbps > 0.0
         && def.cross_switch_share > 0.0
-        && def.cross_switch_share <= 1.0)
-    {
+        && def.cross_switch_share <= 1.0;
+    if !nic_path_ok {
         bail!("custom chip `{}`: pcie_to_nic_gbps must be > 0 and \
                cross_switch_share in (0, 1]", def.name);
     }

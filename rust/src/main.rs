@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use h2::auto::{search, SearchConfig};
-use h2::comm::{p2p_latency, CommMode};
+use h2::comm::{p2p_latency, CommAlgo, CommMode};
 use h2::config::Config;
 use h2::coordinator::{train, train_plan, StagePlan, TrainConfig, TrainReport};
 use h2::costmodel::{profile_layer, tgs, uniform_1f1b, Schedule, H2_100B};
@@ -65,9 +65,11 @@ fn print_help() {
     println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
+    println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
     println!("              [--split 128] [--sequential] [--emit-plan plan.json]");
     println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--reshard srag|bcast|naive]");
+    println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
     println!("              [--no-overlap] [--uniform] [--non-affinity]");
     println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
     println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
@@ -119,10 +121,19 @@ fn parse_schedule(s: &str) -> Result<Schedule> {
     })
 }
 
+/// Parse a `--comm-algo` token with a helpful error.
+fn parse_comm_algo(s: &str) -> Result<CommAlgo> {
+    CommAlgo::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("bad --comm-algo `{s}` (expected ring, tree, rhd, \
+                         hierarchical or auto)")
+    })
+}
+
 /// Search options: config `search` section as the base, flags override.
 /// `--schedule` pins the search to one schedule; the hidden legacy
 /// `--alpha` maps through `Schedule::from_alpha`; the default explores
-/// 1F1B, interleaved:2 and zbv.
+/// 1F1B, interleaved:2 and zbv. `--comm-algo` pins the DP-collective
+/// algorithm the same way (default: the topology-aware auto selector).
 fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchConfig> {
     let base = config.map(|c| c.search_config()).unwrap_or_default();
     let schedules = if let Some(tok) = args.get("schedule") {
@@ -132,8 +143,14 @@ fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchC
     } else {
         base.schedules.clone()
     };
+    let comm_algos = if let Some(tok) = args.get("comm-algo") {
+        vec![parse_comm_algo(tok)?]
+    } else {
+        base.comm_algos.clone()
+    };
     Ok(SearchConfig {
         schedules,
+        comm_algos,
         group_split: args.usize_or("split", base.group_split)?,
         two_stage: if args.has("no-two-stage") { false } else { base.two_stage },
         max_dp: args.usize_or("max-dp", base.max_dp)?,
@@ -156,9 +173,17 @@ fn apply_sim_overrides(
         plan.reshard = opts.reshard;
         plan.nic_assignment = opts.nic_assignment;
         plan.fine_overlap = opts.fine_overlap;
+        // The collective algorithm travels with the strategy, not the
+        // SimOptions — land the override there.
+        if let Some(algo) = overrides.comm_algo {
+            plan.strategy.comm_algo = algo;
+        }
     }
     if let Some(s) = args.get("comm") {
         plan.comm = CommMode::parse(s).ok_or_else(|| anyhow::anyhow!("bad --comm `{s}`"))?;
+    }
+    if let Some(s) = args.get("comm-algo") {
+        plan.strategy.comm_algo = parse_comm_algo(s)?;
     }
     if let Some(s) = args.get("reshard") {
         plan.reshard =
@@ -310,8 +335,9 @@ fn cmd_search(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
-    println!("s_dp = {}, micro-batches = {}, schedule = {}",
-             r.strategy.s_dp, r.strategy.micro_batches, r.strategy.schedule);
+    println!("s_dp = {}, micro-batches = {}, schedule = {}, comm-algo = {}",
+             r.strategy.s_dp, r.strategy.micro_batches, r.strategy.schedule,
+             r.strategy.comm_algo);
     println!("estimated iteration: {} -> TGS {:.1}",
              fmt_duration(r.eval.iteration_seconds),
              tgs(&cluster, gbs, r.eval.iteration_seconds));
@@ -375,9 +401,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     let sim = simulate_plan(&plan);
-    println!("simulated `{}` under {}: iteration {} (bubble {:.1}%, exposed comm {})",
+    println!("simulated `{}` under {} / {} collectives: iteration {} (bubble {:.1}%, \
+              exposed comm {})",
              plan.cluster.name,
              plan.schedule(),
+             plan.strategy.comm_algo,
              fmt_duration(sim.iteration_seconds),
              sim.bubble_fraction * 100.0,
              fmt_duration(sim.exposed_comm));

@@ -1,6 +1,6 @@
 //! Typed construction of [`ExecutionPlan`]s with up-front validation.
 
-use crate::comm::CommMode;
+use crate::comm::{CommAlgo, CommMode};
 use crate::costmodel::{ModelShape, Schedule, Strategy, H2_100B};
 use crate::hetero::{ChipGroup, Cluster};
 use crate::sim::ReshardStrategy;
@@ -13,8 +13,9 @@ use super::{ExecutionPlan, PlanError, PrecisionPolicy, TrainSpec, PLAN_VERSION};
 ///
 /// Defaults: 100B model, GBS 2M tokens, micro-batch of one sequence,
 /// device-direct RDMA, SR&AG resharding, NIC affinity, fine-grained
-/// overlap on. The pipeline schedule travels inside the strategy;
-/// [`PlanBuilder::schedule`] overrides it.
+/// overlap on. The pipeline schedule and DP-collective algorithm travel
+/// inside the strategy; [`PlanBuilder::schedule`] and
+/// [`PlanBuilder::comm_algo`] override them.
 #[derive(Clone, Debug)]
 pub struct PlanBuilder {
     name: String,
@@ -25,6 +26,7 @@ pub struct PlanBuilder {
     gbs_tokens: usize,
     micro_tokens: Option<usize>,
     schedule: Option<Schedule>,
+    comm_algo: Option<CommAlgo>,
     comm: CommMode,
     reshard: ReshardStrategy,
     nic_assignment: NicAssignment,
@@ -45,6 +47,7 @@ impl PlanBuilder {
             gbs_tokens: 2 * 1024 * 1024,
             micro_tokens: None,
             schedule: None,
+            comm_algo: None,
             comm: CommMode::DeviceDirect,
             reshard: ReshardStrategy::SendRecvAllGather,
             nic_assignment: NicAssignment::Affinity,
@@ -98,6 +101,13 @@ impl PlanBuilder {
     /// `--schedule` layered over a searched strategy).
     pub fn schedule(mut self, schedule: Schedule) -> Self {
         self.schedule = Some(schedule);
+        self
+    }
+
+    /// Override the strategy's DP-collective algorithm (e.g. a config or
+    /// CLI `--comm-algo` layered over a searched strategy).
+    pub fn comm_algo(mut self, comm_algo: CommAlgo) -> Self {
+        self.comm_algo = Some(comm_algo);
         self
     }
 
@@ -157,6 +167,9 @@ impl PlanBuilder {
         if let Some(schedule) = self.schedule {
             strategy.schedule = schedule;
         }
+        if let Some(comm_algo) = self.comm_algo {
+            strategy.comm_algo = comm_algo;
+        }
         let plan = ExecutionPlan {
             version: PLAN_VERSION,
             name: self.name,
@@ -203,6 +216,7 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: false },
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 48, recompute: true },
@@ -216,7 +230,7 @@ mod tests {
     }
 
     #[test]
-    fn schedule_override_wins_over_the_strategy() {
+    fn schedule_and_comm_algo_overrides_win_over_the_strategy() {
         let cluster = Cluster::new("a", vec![(ChipKind::A, 256)]);
         let plan = PlanBuilder::new("override")
             .cluster(cluster)
@@ -224,11 +238,14 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
             })
             .schedule(Schedule::ZeroBubbleV)
+            .comm_algo(CommAlgo::Hierarchical)
             .build()
             .unwrap();
         assert_eq!(plan.strategy.schedule, Schedule::ZeroBubbleV);
+        assert_eq!(plan.strategy.comm_algo, CommAlgo::Hierarchical);
     }
 }

@@ -22,7 +22,7 @@ pub use error::{render_errors, PlanError};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::CommMode;
+use crate::comm::{CommAlgo, CommMode};
 use crate::coordinator::{StagePlan, TrainConfig};
 use crate::costmodel::{evaluate, tgs, Evaluation, GroupPlan, ModelShape, Schedule, Strategy};
 use crate::hetero::{self, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
@@ -31,12 +31,14 @@ use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions, SimResult};
 use crate::topology::NicAssignment;
 use crate::util::json::{self, Value};
 
-/// Plan-file schema version. Version 2 replaced the top-level `alpha`
-/// bubble coefficient with a `schedule` token inside `strategy`; version-1
-/// files still load, their `alpha` mapped through
-/// [`Schedule::from_alpha`] (see `docs/plan-format.md` for the full
-/// compatibility rules).
-pub const PLAN_VERSION: u64 = 2;
+/// Plan-file schema version. Version 3 added the `comm_algo` token inside
+/// `strategy` (the DP-collective algorithm of the DiComm engine); files
+/// without one — every v1/v2 file — load as `ring`, the previously
+/// hardwired collective. Version 2 replaced the top-level `alpha` bubble
+/// coefficient with a `schedule` token inside `strategy`; version-1 files
+/// still load, their `alpha` mapped through [`Schedule::from_alpha`] (see
+/// `docs/plan-format.md` for the full compatibility rules).
+pub const PLAN_VERSION: u64 = 3;
 
 /// Numeric-precision policy carried by a plan into real training runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -434,7 +436,8 @@ impl ExecutionPlan {
         // still rejected rather than silently mapped to some schedule.
         let legacy_schedule = if version < 2 {
             let alpha = v.get("alpha")?.num()?;
-            if !(alpha >= 0.0 && alpha.is_finite()) {
+            let alpha_valid = alpha >= 0.0 && alpha.is_finite();
+            if !alpha_valid {
                 bail!("version-1 plan has alpha {alpha} outside [0, inf)");
             }
             Some(Schedule::from_alpha(alpha))
@@ -588,6 +591,7 @@ fn strategy_to_json(s: &Strategy) -> Value {
         ("s_dp", json::num(s.s_dp as f64)),
         ("micro_batches", json::num(s.micro_batches as f64)),
         ("schedule", json::s(&s.schedule.token())),
+        ("comm_algo", json::s(s.comm_algo.token())),
         (
             "plans",
             json::arr(
@@ -624,10 +628,17 @@ fn strategy_from_json(v: &Value, legacy_schedule: Option<Schedule>) -> Result<St
         Some(s) => s,
         None => parse_token(v.get("schedule")?, "schedule", Schedule::parse)?,
     };
+    // Files older than v3 predate the collective engine: they executed the
+    // flat ring, so that is what a missing token migrates to.
+    let comm_algo = match v.opt("comm_algo") {
+        Some(tok) => parse_token(tok, "comm_algo", CommAlgo::parse)?,
+        None => CommAlgo::Ring,
+    };
     Ok(Strategy {
         s_dp: v.get("s_dp")?.usize()?,
         micro_batches: v.get("micro_batches")?.usize()?,
         schedule,
+        comm_algo,
         plans,
     })
 }
@@ -808,6 +819,7 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
             })
             .gbs_tokens(exp.gbs_tokens)
@@ -875,6 +887,7 @@ mod tests {
                 s_dp: 1,
                 micro_batches: 512,
                 schedule: Schedule::ZeroBubbleV,
+                comm_algo: CommAlgo::Hierarchical,
                 plans: vec![GroupPlan { s_pp: 8, s_tp: 2, layers: 96, recompute: true }],
             })
             .gbs_tokens(512 * H2_100B.seq_len)
@@ -981,6 +994,57 @@ mod tests {
         let back = ExecutionPlan::from_json(&v).unwrap();
         assert_eq!(back.strategy.schedule, Schedule::OneF1B);
         assert!(back.validate().is_ok());
+    }
+
+    #[test]
+    fn version2_files_migrate_to_the_ring_collective() {
+        // A version-2 plan has no `comm_algo` token in its strategy; it
+        // executed the hardwired flat ring, so that is what it loads as.
+        let plan = table6_a_plan();
+        let mut v = plan.to_json();
+        match &mut v {
+            Value::Obj(m) => {
+                m.insert("version".to_string(), json::num(2.0));
+                match m.get_mut("strategy") {
+                    Some(Value::Obj(s)) => {
+                        s.remove("comm_algo");
+                    }
+                    other => panic!("strategy must be an object, got {other:?}"),
+                }
+            }
+            other => panic!("plan must serialize to an object, got {other:?}"),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.version, PLAN_VERSION);
+        assert_eq!(back.strategy.comm_algo, CommAlgo::Ring);
+        assert!(back.validate().is_ok());
+        // Re-serializing writes the v3 schema with the token present.
+        let text = back.to_json_string();
+        assert!(text.contains("\"comm_algo\": \"ring\""), "{text}");
+
+        // A bad token is rejected loudly rather than defaulted.
+        match &mut v {
+            Value::Obj(m) => match m.get_mut("strategy") {
+                Some(Value::Obj(s)) => {
+                    s.insert("comm_algo".to_string(), json::s("bogus"));
+                }
+                _ => unreachable!(),
+            },
+            _ => unreachable!(),
+        }
+        let err = ExecutionPlan::from_json(&v).unwrap_err().to_string();
+        assert!(format!("{err:#}").contains("comm_algo") || err.contains("strategy"), "{err}");
+    }
+
+    #[test]
+    fn comm_algo_tokens_roundtrip_through_plans() {
+        let mut plan = table6_a_plan();
+        for algo in CommAlgo::ALL {
+            plan.strategy.comm_algo = algo;
+            let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(back.strategy.comm_algo, algo);
+            assert_eq!(back, plan);
+        }
     }
 
     #[test]

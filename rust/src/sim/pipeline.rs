@@ -17,7 +17,7 @@
 
 use crate::comm::CommMode;
 use crate::coordinator::schedule::{one_f1b_order, Op};
-use crate::costmodel::{profile_layer, ModelShape, Schedule, Strategy};
+use crate::costmodel::{profile_layer_comm, ModelShape, Schedule, Strategy};
 use crate::hetero::ChipGroup;
 use crate::topology::NicAssignment;
 
@@ -29,9 +29,9 @@ use super::reshard::{overlap_effectiveness, reshard_cost, ReshardStrategy};
 pub const FINE_OVERLAP_HIDDEN: f64 = 0.95;
 
 /// Simulation options (the Table 9 ablation axes). The pipeline schedule
-/// itself is not an option here — it travels with the
-/// [`Strategy`](crate::costmodel::Strategy) so that search, cost model and
-/// simulator always agree on it.
+/// and the DP-collective algorithm are not options here — they travel
+/// with the [`Strategy`](crate::costmodel::Strategy) so that search, cost
+/// model and simulator always agree on them.
 #[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
     /// Cross-chip communication strategy (TCP / CPU-RDMA / device-direct).
@@ -101,7 +101,10 @@ pub fn simulate_iteration(
     let mut stages = Vec::new();
     let mut first_stage = 0usize;
     for (gi, (g, plan)) in groups.iter().zip(&strategy.plans).enumerate() {
-        let prof = profile_layer(&g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp);
+        let prof = profile_layer_comm(
+            &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
+            opts.nic_assignment,
+        );
         let lps = plan.layers_per_stage() as f64;
         let recomp = if plan.recompute { prof.t_recompute } else { 0.0 };
         let mem = crate::costmodel::stage_memory_bytes(
@@ -580,6 +583,7 @@ fn simulate_zero_bubble(stages: &[StageSim], link: &[f64], micro_batches: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::CommAlgo;
     use crate::costmodel::{evaluate, GroupPlan, H2_100B};
     use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
 
@@ -588,6 +592,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
         }
     }
@@ -665,6 +670,7 @@ mod tests {
                 s_dp: 4,
                 micro_batches: 128,
                 schedule,
+                comm_algo: CommAlgo::Ring,
                 plans: vec![
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 40, recompute: false },
                     GroupPlan { s_pp: 16, s_tp: 4, layers: 40, recompute: true },
@@ -686,6 +692,7 @@ mod tests {
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![
                 GroupPlan { s_pp: 16, s_tp: 4, layers: 40, recompute: false },
                 GroupPlan { s_pp: 16, s_tp: 4, layers: 40, recompute: true },
@@ -709,6 +716,7 @@ mod tests {
             s_dp: 2,
             micro_batches: 256,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![
                 GroupPlan { s_pp: 32, s_tp: 4, layers: 40, recompute: false },
                 GroupPlan { s_pp: 32, s_tp: 4, layers: 40, recompute: true },
@@ -724,6 +732,54 @@ mod tests {
     }
 
     #[test]
+    fn non_affine_nic_mapping_slows_the_dp_sync_too() {
+        // The simulator prices the DP collective under the run's NIC
+        // policy: flipping to non-affinity must cost iteration time (on
+        // top of the resharding penalty it already modeled).
+        let exp = homogeneous_baseline(ChipKind::B);
+        let groups = exp.cluster.groups_by_memory_desc();
+        let strategy = Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
+            plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
+        };
+        let aff = simulate_iteration(&H2_100B, &groups, &strategy, 4096,
+                                     &SimOptions::default());
+        let non = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions {
+            nic_assignment: NicAssignment::NonAffinity,
+            ..Default::default()
+        });
+        assert!(non.iteration_seconds > aff.iteration_seconds,
+                "non-affinity {} !> affinity {}",
+                non.iteration_seconds, aff.iteration_seconds);
+    }
+
+    #[test]
+    fn hierarchical_collective_shrinks_iteration_time() {
+        // Chip B at TP 4 co-locates only 2 of the 4 DP replicas per node,
+        // so the DP sync crosses nodes: the two-level collective must beat
+        // the flat ring in the discrete-event view exactly as it does in
+        // the closed form.
+        let exp = homogeneous_baseline(ChipKind::B);
+        let groups = exp.cluster.groups_by_memory_desc();
+        let mk = |comm_algo| Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            schedule: Schedule::OneF1B,
+            comm_algo,
+            plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
+        };
+        let ring = simulate_iteration(&H2_100B, &groups, &mk(CommAlgo::Ring), 4096,
+                                      &SimOptions::default());
+        let hier = simulate_iteration(&H2_100B, &groups, &mk(CommAlgo::Hierarchical), 4096,
+                                      &SimOptions::default());
+        assert!(hier.iteration_seconds < ring.iteration_seconds,
+                "hier {} !< ring {}", hier.iteration_seconds, ring.iteration_seconds);
+    }
+
+    #[test]
     fn all_ops_complete() {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
@@ -731,6 +787,7 @@ mod tests {
             s_dp: 8,
             micro_batches: 64,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             plans: vec![GroupPlan { s_pp: 8, s_tp: 4, layers: 96, recompute: true }],
         };
         let sim = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());

@@ -72,6 +72,7 @@ pub struct ReshardCost {
 
 /// Time (s) to reshard `bytes` of activation from a `tp_src`-way stage on
 /// `src` chips to a `tp_dst`-way stage on `dst` chips.
+#[allow(clippy::too_many_arguments)]
 pub fn reshard_time(
     strategy: ReshardStrategy,
     mode: CommMode,

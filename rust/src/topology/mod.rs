@@ -73,6 +73,26 @@ pub fn flow_bandwidth_gbps(src: &ChipSpec, dst: &ChipSpec, assign: NicAssignment
     path(src, assign).min(path(dst, NicAssignment::Affinity))
 }
 
+/// Whole-node rounding rule shared by the collective engine: the largest
+/// group size that divides `n_ranks` while staying within
+/// `ranks_per_node`. One definition keeps the closed-form topology view
+/// ([`crate::comm::CommTopology`]), the executable collective dispatcher
+/// and [`co_located_replicas`] in exact agreement on group shape.
+pub fn whole_node_group(n_ranks: usize, ranks_per_node: usize) -> usize {
+    let cap = ranks_per_node.clamp(1, n_ranks.max(1));
+    (1..=cap).rev().find(|k| n_ranks % k == 0).unwrap_or(1)
+}
+
+/// Data-parallel replicas of one pipeline stage that share a server: a
+/// stage occupies `s_tp` chip slots, so `chips_per_node / s_tp` replicas
+/// fit per node — clamped to the group size and rounded down to a divisor
+/// of `dp` so the DP group always fills whole nodes. This is the
+/// `ranks_per_node` input of the hierarchical collective's topology
+/// ([`crate::comm::CommTopology`]).
+pub fn co_located_replicas(spec: &ChipSpec, s_tp: usize, dp: usize) -> usize {
+    whole_node_group(dp.max(1), (spec.chips_per_node / s_tp.max(1)).max(1))
+}
+
 /// Intra-node chip-to-chip bandwidth matrix for Fig 3.
 pub fn intra_node_matrix(spec: &ChipSpec) -> Vec<Vec<f64>> {
     let n = spec.chips_per_node;
@@ -165,6 +185,18 @@ mod tests {
         let c = intra_node_profile(&spec(ChipKind::C));
         assert!(!c.uniform);
         assert!(c.max_gbps < intra_node_profile(&spec(ChipKind::A)).max_gbps);
+    }
+
+    #[test]
+    fn co_located_replicas_fill_whole_nodes() {
+        let a = spec(ChipKind::A); // 16 chips/node
+        assert_eq!(co_located_replicas(&a, 4, 4), 4); // one full node
+        assert_eq!(co_located_replicas(&a, 4, 8), 4); // two nodes of 4
+        assert_eq!(co_located_replicas(&a, 16, 8), 1); // TP fills the node
+        assert_eq!(co_located_replicas(&a, 4, 6), 3); // divisor of dp only
+        let b = spec(ChipKind::B); // 8 chips/node
+        assert_eq!(co_located_replicas(&b, 2, 8), 4);
+        assert_eq!(co_located_replicas(&b, 1, 2), 2);
     }
 
     #[test]

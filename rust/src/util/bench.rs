@@ -71,6 +71,12 @@ impl Bench {
         s
     }
 
+    /// Recorded `(label, summary)` rows, in run order — the machine-facing
+    /// view the perf-regression guard compares against `BENCH_baseline.json`.
+    pub fn rows(&self) -> &[(String, Summary)] {
+        &self.rows
+    }
+
     /// Render all recorded timings as a table.
     pub fn report(&self) {
         let mut t = Table::new(&["benchmark", "iters", "mean", "p50", "p90", "max"])

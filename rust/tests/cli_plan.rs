@@ -173,6 +173,48 @@ fn schedule_flag_pins_search_and_reschedules_plans() {
 }
 
 #[test]
+fn comm_algo_flag_pins_search_and_overrides_plans() {
+    use h2::comm::CommAlgo;
+    let dir = tmp_dir("comm_algo");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+
+    // Pin the search to the hierarchical collective; the emitted plan
+    // must carry it.
+    run_ok(h2_bin().args([
+        "search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1",
+        "--comm-algo", "hierarchical", "--emit-plan", plan_path,
+    ]));
+    let plan = ExecutionPlan::load(plan_path).unwrap();
+    assert_eq!(plan.strategy.comm_algo, CommAlgo::Hierarchical);
+
+    // Simulating the plan reports the collective it runs...
+    let stdout = run_ok(h2_bin().args(["simulate", "--plan", plan_path]));
+    assert!(stdout.contains("hierarchical"),
+            "simulate output should name the collective:\n{stdout}");
+
+    // ...and --comm-algo re-prices a persisted plan without re-searching.
+    let stdout = run_ok(h2_bin().args([
+        "simulate", "--plan", plan_path, "--comm-algo", "ring",
+    ]));
+    assert!(stdout.contains("ring"), "override output:\n{stdout}");
+    let hier: f64 = parse_iteration_seconds(
+        &run_ok(h2_bin().args(["simulate", "--plan", plan_path])),
+    ).parse().unwrap();
+    let ring: f64 = parse_iteration_seconds(&stdout).parse().unwrap();
+    assert!(hier <= ring * 1.0001,
+            "hierarchical {hier} should not lose to the flat ring {ring} \
+             on the same plan");
+
+    // A bogus algorithm token fails loudly.
+    let out = h2_bin()
+        .args(["simulate", "--plan", plan_path, "--comm-algo", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bad --comm-algo must be rejected");
+}
+
+#[test]
 fn simulate_plan_flag_overrides_still_apply() {
     let dir = tmp_dir("overrides");
     let plan_path = dir.join("plan.json");

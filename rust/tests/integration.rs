@@ -3,7 +3,7 @@
 //! end-to-end properties over the whole search space.
 
 use h2::auto::{search, SearchConfig};
-use h2::comm::{cross_node_time, p2p_latency, CommMode};
+use h2::comm::{cross_node_time, p2p_latency, CommAlgo, CommMode};
 use h2::costmodel::{evaluate, GroupPlan, Schedule, Strategy, H2_100B, MEMORY_SAFETY};
 use h2::hetero::{experiment, spec, ChipKind, Cluster, ALL_EXPERIMENTS};
 use h2::sim::{simulate_iteration, SimOptions};
@@ -55,33 +55,42 @@ fn every_experiment_search_is_consistent() {
 }
 
 #[test]
-fn per_schedule_parity_on_searched_plans() {
-    // For each schedule variant: pin the search, package the winner as a
-    // plan, and check the discrete-event simulator against the closed-form
-    // view of the *same* strategy. 1F1B is the calibrated pair; the other
-    // schedules stay within a wider band (their issue-order effects are
-    // folded into one coefficient in the closed form).
+fn per_schedule_and_algo_parity_on_searched_plans() {
+    // For each (comm algo x schedule) pair: pin the search, package the
+    // winner as a plan, and check the discrete-event simulator against
+    // the closed-form view of the *same* strategy. 1F1B is the calibrated
+    // pair; the other schedules stay within a wider band (their
+    // issue-order effects are folded into one coefficient in the closed
+    // form). Both evaluators price the collective algorithm through the
+    // same profile, so the parity band is algorithm-independent.
     let exp = experiment("exp-a-1").unwrap();
-    for (schedule, tol) in [
-        (Schedule::OneF1B, 0.25),
-        (Schedule::Interleaved { virtual_stages: 2 }, 0.5),
-        (Schedule::ZeroBubbleV, 0.5),
-    ] {
-        let cfg = SearchConfig::pinned(schedule);
-        let r = match search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
-            Ok(r) => r,
-            // Interleaving may be infeasible on a heterogeneous cluster
-            // when no layer split chunks evenly — nothing to compare then.
-            Err(_) => continue,
-        };
-        assert_eq!(r.strategy.schedule, schedule);
-        let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
-        let sim = plan.simulate();
-        let cm = plan.evaluate();
-        let rel = (sim.iteration_seconds - cm.iteration_seconds).abs()
-            / cm.iteration_seconds;
-        assert!(rel < tol, "{schedule}: sim {} vs model {} (rel {rel})",
-                sim.iteration_seconds, cm.iteration_seconds);
+    for comm_algo in [CommAlgo::Ring, CommAlgo::Hierarchical, CommAlgo::Auto] {
+        for (schedule, tol) in [
+            (Schedule::OneF1B, 0.25),
+            (Schedule::Interleaved { virtual_stages: 2 }, 0.5),
+            (Schedule::ZeroBubbleV, 0.5),
+        ] {
+            let cfg = SearchConfig {
+                comm_algos: vec![comm_algo],
+                two_stage: false,
+                ..SearchConfig::pinned(schedule)
+            };
+            let r = match search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg) {
+                Ok(r) => r,
+                // Interleaving may be infeasible on a heterogeneous cluster
+                // when no layer split chunks evenly — nothing to compare.
+                Err(_) => continue,
+            };
+            assert_eq!(r.strategy.schedule, schedule);
+            assert_eq!(r.strategy.comm_algo, comm_algo);
+            let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+            let sim = plan.simulate();
+            let cm = plan.evaluate();
+            let rel = (sim.iteration_seconds - cm.iteration_seconds).abs()
+                / cm.iteration_seconds;
+            assert!(rel < tol, "{comm_algo}/{schedule}: sim {} vs model {} (rel {rel})",
+                    sim.iteration_seconds, cm.iteration_seconds);
+        }
     }
 }
 
@@ -148,6 +157,7 @@ fn random_feasible_strategies_never_beat_search() {
             s_dp,
             micro_batches: sequences / s_dp,
             schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Auto,
             plans,
         };
         let grefs: Vec<&h2::hetero::ChipGroup> = groups.iter().collect();
@@ -161,6 +171,76 @@ fn random_feasible_strategies_never_beat_search() {
                     eval.iteration_seconds, best.eval.iteration_seconds),
         )
     });
+}
+
+#[test]
+fn hierarchical_beats_flat_ring_on_a_two_node_mixed_vendor_fixture() {
+    // Two custom vendors, one 8-chip node each per group, with an
+    // NVLink-class intra fabric (200 GB/s) and a ~2 GB/s per-flow NIC
+    // path (intra >= 4x inter, comfortably). At TP 2 / DP 8 each stage's
+    // DP group spans both of its vendor's nodes, so the collective choice
+    // is visible end to end: the two-level allreduce must beat the flat
+    // ring in BOTH the closed-form cost model and the discrete-event
+    // simulator, on the same strategy.
+    use h2::costmodel::ModelShape;
+    use h2::hetero::{register_custom, ChipGroup, CustomChipDef, IntraNodeLink};
+
+    let mut chips = Vec::new();
+    for name in ["IntTest-HX", "IntTest-HY"] {
+        let mut def = CustomChipDef::new(name);
+        def.fp16_tflops = if name.ends_with('X') { 200.0 } else { 320.0 };
+        def.memory_gib = 64.0;
+        def.chips_per_node = 8;
+        def.intra_node = IntraNodeLink::Uniform { gbps: 200.0 };
+        def.nics_per_node = 8;
+        def.nic_gbps = 25.0;
+        def.pcie_to_nic_gbps = 2.5; // x RDMA efficiency -> 2 GB/s flows
+        chips.push(register_custom(&def).unwrap());
+    }
+    let groups: Vec<ChipGroup> =
+        chips.iter().map(|&k| ChipGroup::try_new(k, 16).unwrap()).collect();
+    let grefs: Vec<&ChipGroup> = groups.iter().collect();
+    let model = ModelShape {
+        n_layers: 8,
+        hidden: 4096,
+        n_heads: 32,
+        n_kv_heads: 8,
+        intermediate: 11008,
+        vocab: 32000,
+        seq_len: 4096,
+    };
+    let mk = |comm_algo| Strategy {
+        s_dp: 8,
+        micro_batches: 4,
+        schedule: Schedule::OneF1B,
+        comm_algo,
+        plans: vec![
+            GroupPlan { s_pp: 1, s_tp: 2, layers: 4, recompute: false },
+            GroupPlan { s_pp: 1, s_tp: 2, layers: 4, recompute: false },
+        ],
+    };
+    let ring = mk(CommAlgo::Ring);
+    let hier = mk(CommAlgo::Hierarchical);
+
+    let cm_ring = evaluate(&model, &grefs, &ring, model.seq_len);
+    let cm_hier = evaluate(&model, &grefs, &hier, model.seq_len);
+    assert!(cm_hier.iteration_seconds < cm_ring.iteration_seconds,
+            "cost model: hier {} !< ring {}",
+            cm_hier.iteration_seconds, cm_ring.iteration_seconds);
+
+    let sim_ring = simulate_iteration(&model, &grefs, &ring, model.seq_len,
+                                      &SimOptions::default());
+    let sim_hier = simulate_iteration(&model, &grefs, &hier, model.seq_len,
+                                      &SimOptions::default());
+    assert!(sim_hier.iteration_seconds < sim_ring.iteration_seconds,
+            "simulator: hier {} !< ring {}",
+            sim_hier.iteration_seconds, sim_ring.iteration_seconds);
+
+    // The auto selector picks the winning side on this fabric.
+    let auto = mk(CommAlgo::Auto);
+    let cm_auto = evaluate(&model, &grefs, &auto, model.seq_len);
+    assert!(cm_auto.iteration_seconds <= cm_hier.iteration_seconds,
+            "auto {} vs hier {}", cm_auto.iteration_seconds, cm_hier.iteration_seconds);
 }
 
 #[test]

@@ -5,7 +5,7 @@
 //! would fail validation, so plans are assembled directly rather than
 //! through the builder.
 
-use h2::comm::CommMode;
+use h2::comm::{CommAlgo, CommMode};
 use h2::coordinator::StagePlan;
 use h2::costmodel::{GroupPlan, ModelShape, Schedule, Strategy};
 use h2::hetero::{register_custom, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
@@ -86,11 +86,22 @@ fn random_schedule(rng: &mut Rng) -> Schedule {
     }
 }
 
+fn random_comm_algo(rng: &mut Rng) -> CommAlgo {
+    match rng.usize(0, 5) {
+        0 => CommAlgo::Ring,
+        1 => CommAlgo::Tree,
+        2 => CommAlgo::RecursiveHalvingDoubling,
+        3 => CommAlgo::Hierarchical,
+        _ => CommAlgo::Auto,
+    }
+}
+
 fn random_strategy(rng: &mut Rng, n_groups: usize) -> Strategy {
     Strategy {
         s_dp: rng.usize(1, 65),
         micro_batches: rng.usize(1, 1025),
         schedule: random_schedule(rng),
+        comm_algo: random_comm_algo(rng),
         plans: (0..n_groups)
             .map(|_| GroupPlan {
                 s_pp: rng.usize(1, 65),
@@ -154,12 +165,17 @@ fn from_json_to_json_is_identity() {
         let value = plan.to_json();
         let back = ExecutionPlan::from_json(&value)
             .map_err(|e| format!("from_json failed: {e:#}"))?;
-        // The schedule is the newest field — call out its drift explicitly
-        // before the whole-plan comparison.
+        // The schedule and comm algo are the newest fields — call out
+        // their drift explicitly before the whole-plan comparison.
         prop::assert_prop(
             back.strategy.schedule == plan.strategy.schedule,
             format!("schedule drift: {} vs {}", plan.strategy.schedule,
                     back.strategy.schedule),
+        )?;
+        prop::assert_prop(
+            back.strategy.comm_algo == plan.strategy.comm_algo,
+            format!("comm-algo drift: {} vs {}", plan.strategy.comm_algo,
+                    back.strategy.comm_algo),
         )?;
         prop::assert_prop(back == plan, format!("round-trip drift:\n{plan:?}\nvs\n{back:?}"))?;
         // And through the textual form (what plan files actually hold).
@@ -179,6 +195,7 @@ fn valid_plans_stay_valid_across_roundtrip() {
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::Interleaved { virtual_stages: 2 },
+            comm_algo: CommAlgo::Auto,
             plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: true }],
         })
         .gbs_tokens(exp.gbs_tokens)
