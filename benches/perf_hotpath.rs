@@ -22,8 +22,9 @@ use h2::auto::{search, SearchConfig};
 use h2::comm::collectives::{hierarchical_allreduce, ring_allreduce};
 use h2::comm::{allreduce_cost, fabric, CommAlgo, CommTopology, LinkTime};
 use h2::costmodel::{GroupPlan, Schedule, Strategy, H2_100B};
-use h2::hetero::{experiment, homogeneous_baseline, ChipKind};
+use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind};
 use h2::sim::{simulate_iteration, SimOptions};
+use h2::topology::NicAssignment;
 use h2::util::bench::Bench;
 use h2::util::cli::Args;
 use h2::util::json::{self, Value};
@@ -71,24 +72,25 @@ fn main() {
     });
 
     // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs
-    // the two-level hierarchical schedule (2 nodes x 4 ranks).
+    // the two-level hierarchical schedule (2 nodes x 4 ranks). Link times
+    // come from the Chip-B server spec via the DP-group topology (TP 2
+    // co-locates 4 replicas per 8-chip node) — the same derivation the
+    // coordinator's DpGroup uses, not hardwired hop constants.
     let mut rng = Rng::new(7);
     let bufs: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..1_000_000).map(|_| rng.f32()).collect())
         .collect();
+    let dp_topo = CommTopology::dp_group(&spec(ChipKind::B), 8, 2, NicAssignment::Affinity);
+    let intra_hop = move |bytes: usize| dp_topo.intra.time(bytes);
+    let inter_hop = move |bytes: usize| dp_topo.inter.time(bytes);
     b.run("allreduce: 8 ranks x 4MB", || {
         let mut work = bufs.clone();
-        let c = ring_allreduce(&mut work, &|bytes| 1e-6 + bytes as f64 / 25e9);
+        let c = ring_allreduce(&mut work, &inter_hop);
         std::hint::black_box(c.seconds);
     });
     b.run("allreduce: hierarchical 2x4 ranks x 4MB", || {
         let mut work = bufs.clone();
-        let c = hierarchical_allreduce(
-            &mut work,
-            4,
-            &|bytes| 0.8e-6 + bytes as f64 / 200e9,
-            &|bytes| 3e-6 + bytes as f64 / 10e9,
-        );
+        let c = hierarchical_allreduce(&mut work, dp_topo.node_group(), &intra_hop, &inter_hop);
         std::hint::black_box(c.seconds);
     });
 

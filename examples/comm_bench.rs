@@ -7,7 +7,7 @@
 //! ```
 
 use h2::comm::collectives::{ring_allgather, ring_allreduce, tree_broadcast};
-use h2::comm::{cross_node_time, p2p_latency, CommMode};
+use h2::comm::{cross_node_time, p2p_latency, CommMode, CommTopology};
 use h2::hetero::{spec, ChipKind};
 use h2::sim::{reshard_time, ReshardStrategy};
 use h2::topology::NicAssignment;
@@ -34,7 +34,10 @@ fn main() {
     let mut bufs: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..65536).map(|_| rng.f32()).collect())
         .collect();
-    let hop = |bytes: usize| 3e-6 + bytes as f64 / 20e9;
+    // Hop times from the Chip-A DP-group topology (cross-node link), the
+    // same spec-derived model the coordinator's DpGroup runs on.
+    let topo = CommTopology::dp_group(&spec(ChipKind::A), 8, 2, NicAssignment::Affinity);
+    let hop = |bytes: usize| topo.inter.time(bytes);
     let ar = ring_allreduce(&mut bufs, &hop);
     let (_, ag) = ring_allgather(&bufs, &hop);
     let bc = tree_broadcast(&mut bufs, 0, &hop);

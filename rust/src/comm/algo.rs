@@ -23,10 +23,10 @@
 use std::fmt;
 
 use crate::hetero::ChipSpec;
-use crate::topology::{co_located_replicas, flow_bandwidth_gbps, whole_node_group, NicAssignment};
+use crate::topology::{co_located_replicas, whole_node_group, NicAssignment};
 
 use super::collectives::{CollectiveCost, HopTime};
-use super::model::{base_latency, CommMode, INTRA_NODE_LATENCY};
+use super::model::{base_latency, cross_node_bandwidth, CommMode, INTRA_NODE_LATENCY};
 
 /// Collective algorithm run by a communication group (the DP gradient
 /// allreduce axis of the Table 9 ablation). Carried by
@@ -204,6 +204,22 @@ impl CommTopology {
         s_tp: usize,
         assign: NicAssignment,
     ) -> CommTopology {
+        CommTopology::dp_group_mode(spec, dp, s_tp, assign, CommMode::DeviceDirect)
+    }
+
+    /// [`CommTopology::dp_group`] under an explicit cross-node
+    /// communication strategy: the inter-node link takes `mode`'s base
+    /// latency and effective per-flow streaming bandwidth from the DiComm
+    /// timing model (`comm/model.rs`), so the real coordinator can price
+    /// its DP collective under the run's `--comm` mode while the
+    /// closed-form cost model stays pinned to device-direct RDMA.
+    pub fn dp_group_mode(
+        spec: &ChipSpec,
+        dp: usize,
+        s_tp: usize,
+        assign: NicAssignment,
+        mode: CommMode,
+    ) -> CommTopology {
         let slot = s_tp.clamp(1, spec.chips_per_node.saturating_sub(1).max(1));
         let intra_bw = spec.intra_node.bandwidth_gbps(0, slot.min(spec.chips_per_node - 1));
         CommTopology {
@@ -211,8 +227,8 @@ impl CommTopology {
             ranks_per_node: co_located_replicas(spec, s_tp, dp),
             intra: LinkTime { latency: INTRA_NODE_LATENCY, bytes_per_sec: intra_bw * 1e9 },
             inter: LinkTime {
-                latency: base_latency(CommMode::DeviceDirect),
-                bytes_per_sec: flow_bandwidth_gbps(spec, spec, assign) * 1e9,
+                latency: base_latency(mode),
+                bytes_per_sec: cross_node_bandwidth(mode, spec, spec, assign),
             },
         }
     }

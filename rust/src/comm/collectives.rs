@@ -679,6 +679,49 @@ mod tests {
     }
 
     #[test]
+    fn wire_bytes_and_sums_match_closed_forms_on_arbitrary_shapes() {
+        // For ANY group size (non-power-of-two included), ranks-per-node
+        // and payload length: every executable collective must (a) sum
+        // bit-exactly on integer payloads and (b) put exactly the closed
+        // form's byte count on the wire — the chunk boundaries telescope,
+        // so ceil-split payloads change per-hop seconds but never totals.
+        use crate::comm::algo::{allreduce_cost, CommTopology, LinkTime};
+        use crate::topology::whole_node_group;
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        prop::check(80, |rng: &mut Rng| {
+            let n = rng.usize(1, 14);
+            let len = rng.usize(1, 97);
+            let rpn = rng.usize(1, n + 1);
+            let k = whole_node_group(n, rpn);
+            let topo = CommTopology { n_ranks: n, ranks_per_node: k, intra, inter };
+            let reference = integer_bufs(rng, n, len);
+            let expect = naive_sum(&reference);
+            for algo in CommAlgo::CONCRETE {
+                let mut bufs = reference.clone();
+                let run = allreduce(algo, &mut bufs, rpn, &intra_hop, &inter_hop);
+                let model = allreduce_cost(algo, len * F32, &topo);
+                prop::assert_prop(
+                    run.wire_bytes == model.wire_bytes,
+                    format!("{algo} wire {} != closed form {} (n={n}, len={len}, rpn={rpn})",
+                            run.wire_bytes, model.wire_bytes),
+                )?;
+                for (r, b) in bufs.iter().enumerate() {
+                    for (x, e) in b.iter().zip(&expect) {
+                        prop::assert_prop(
+                            x.to_bits() == e.to_bits(),
+                            format!("{algo} rank {r} sum mismatch (n={n}, len={len})"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn hierarchical_beats_flat_ring_end_to_end() {
         // Executable collectives, 2 nodes x 4 ranks, intra 20x the NIC
         // path: the two-level schedule must finish first.

@@ -90,10 +90,22 @@ impl Endpoint {
     /// Non-blocking send of `data` to `dst` with a user tag.
     pub fn send(&self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
         let bytes = data.len() * 4;
-        let (depart, latency) = {
-            let clocks = self.shared.clocks.lock().unwrap();
-            (clocks[self.rank], (self.shared.latency)(self.rank, dst, bytes))
-        };
+        let latency = (self.shared.latency)(self.rank, dst, bytes);
+        self.send_with_latency(dst, tag, data, latency)
+    }
+
+    /// [`Endpoint::send`] with an explicit hop latency in place of the
+    /// fabric's latency model — for callers that price hops per logical
+    /// edge rather than per rank pair (the virtual evaluator's interleaved
+    /// wrap hand-off shares a rank pair with the neighbour link).
+    pub fn send_with_latency(
+        &self,
+        dst: usize,
+        tag: u64,
+        data: Vec<f32>,
+        latency: f64,
+    ) -> Result<()> {
+        let depart = self.shared.clocks.lock().unwrap()[self.rank];
         self.txs[dst]
             .send(Wire { src: self.rank, tag, depart, latency, data })
             .map_err(|_| anyhow!("rank {dst} hung up"))

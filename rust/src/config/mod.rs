@@ -28,6 +28,7 @@
 //!     "stages": [{"prefix": "first_l10", "chip": "A"},
 //!                {"prefix": "last_l6", "chip": "B"}],
 //!     "dp": 1, "micro_batches": 2, "steps": 100, "lr": 4e-4,
+//!     "schedule": "zbv", "comm_algo": "hierarchical",
 //!     "comm": "ddr", "fine_overlap": true
 //!   }
 //! }
@@ -197,6 +198,14 @@ fn parse_train(v: &Value) -> Result<TrainConfig> {
         Some(c) => parse_token(c, "comm", CommMode::parse)?,
         None => CommMode::DeviceDirect,
     };
+    let schedule = match v.opt("schedule") {
+        Some(s) => parse_token(s, "schedule", Schedule::parse)?,
+        None => Schedule::OneF1B,
+    };
+    let comm_algo = match v.opt("comm_algo") {
+        Some(a) => parse_token(a, "comm_algo", CommAlgo::parse)?,
+        None => CommAlgo::Ring,
+    };
     let get_usize = |key: &str, default: usize| -> Result<usize> {
         v.opt(key).map(|x| x.usize()).transpose().map(|o| o.unwrap_or(default))
     };
@@ -208,6 +217,8 @@ fn parse_train(v: &Value) -> Result<TrainConfig> {
         steps: get_usize("steps", 20)?,
         lr: v.opt("lr").map(|x| x.num()).transpose()?.unwrap_or(1e-3) as f32,
         seed: v.opt("seed").map(|x| x.u64()).transpose()?.unwrap_or(42),
+        schedule,
+        comm_algo,
         comm,
         nic_assignment: match v.opt("nic_affinity").map(|x| x.bool()).transpose()? {
             Some(false) => NicAssignment::NonAffinity,
@@ -386,6 +397,25 @@ mod tests {
         assert_eq!(t.steps, 20);
         assert_eq!(t.comm, crate::comm::CommMode::DeviceDirect);
         assert!(t.fine_overlap);
+        // The coordinator's pre-engine defaults: 1F1B order, flat ring.
+        assert_eq!(t.schedule, Schedule::OneF1B);
+        assert_eq!(t.comm_algo, CommAlgo::Ring);
+    }
+
+    #[test]
+    fn train_schedule_and_comm_algo_keys_parse() {
+        let c = Config::parse(r#"{"train": {"model": "h2_tiny",
+            "stages": [{"prefix": "first_l2", "chip": "A"},
+                       {"prefix": "last_l2", "chip": "B"}],
+            "schedule": "zbv", "comm_algo": "hierarchical"}}"#).unwrap();
+        let t = c.train.unwrap();
+        assert_eq!(t.schedule, Schedule::ZeroBubbleV);
+        assert_eq!(t.comm_algo, CommAlgo::Hierarchical);
+        // Bad tokens fail loudly.
+        assert!(Config::parse(r#"{"train": {"model": "m", "stages": [],
+            "schedule": "bogus"}}"#).is_err());
+        assert!(Config::parse(r#"{"train": {"model": "m", "stages": [],
+            "comm_algo": "bogus"}}"#).is_err());
     }
 
     #[test]

@@ -1,13 +1,23 @@
 //! Data-parallel gradient synchronization group.
 //!
 //! All DP replicas of one pipeline stage deposit their flattened gradients;
-//! the last depositor runs the DiComm ring allreduce (real byte math +
-//! modeled wire time) and wakes the group. Every member leaves with the
+//! the last depositor runs the DiComm collective engine (real byte math +
+//! modeled wire time) under the strategy's [`CommAlgo`] over the stage's
+//! [`CommTopology`], and wakes the group. Every member leaves with the
 //! summed gradient and the collective's modeled cost.
+//!
+//! The topology comes from the stage's chip spec
+//! ([`CommTopology::dp_group`] / [`CommTopology::dp_group_mode`]) — the
+//! intra-node fabric and the Table 3 per-flow NIC path price each hop, so
+//! co-located replicas sync over the fast fabric and only node-crossing
+//! hops pay the wire. `auto` resolves exactly like the cost model: the
+//! executable dispatcher probes the hop functions and picks the
+//! closed-form argmin ([`crate::comm::collectives::allreduce`]).
 
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::comm::collectives::{ring_allreduce, CollectiveCost};
+use crate::comm::algo::{CommAlgo, CommTopology};
+use crate::comm::collectives::{allreduce, CollectiveCost};
 
 struct State {
     slots: Vec<Option<Vec<f32>>>,
@@ -20,14 +30,32 @@ struct State {
 pub struct DpGroup {
     state: Mutex<State>,
     cond: Condvar,
-    hop_seconds_per_byte: f64,
-    hop_base: f64,
+    algo: CommAlgo,
+    topo: CommTopology,
+    /// Actual payload bytes are multiplied by this before pricing a hop,
+    /// so a small stand-in gradient can carry the modeled gradient
+    /// volume's wire time (1.0 for real runs).
+    byte_scale: f64,
 }
 
 impl DpGroup {
-    /// `hop(bytes) = hop_base + bytes * hop_seconds_per_byte` is the DiComm
-    /// per-hop model for the DP ring links of this stage.
-    pub fn new(dp: usize, hop_base: f64, hop_seconds_per_byte: f64) -> Arc<DpGroup> {
+    /// A DP group of `dp` replicas running `algo` over `topo` — hop times
+    /// come from the topology's intra/inter [`crate::comm::LinkTime`]s,
+    /// derived from the stage's chip spec rather than hardwired constants.
+    pub fn new(dp: usize, algo: CommAlgo, topo: CommTopology) -> Arc<DpGroup> {
+        DpGroup::with_byte_scale(dp, algo, topo, 1.0)
+    }
+
+    /// [`DpGroup::new`] with a payload scale: each hop of `bytes` is
+    /// priced as `bytes * byte_scale`. The plan-driven virtual evaluator
+    /// moves small synthetic gradients but charges the plan's modeled
+    /// per-layer gradient volume through this scale.
+    pub fn with_byte_scale(
+        dp: usize,
+        algo: CommAlgo,
+        topo: CommTopology,
+        byte_scale: f64,
+    ) -> Arc<DpGroup> {
         Arc::new(DpGroup {
             state: Mutex::new(State {
                 slots: vec![None; dp],
@@ -36,9 +64,16 @@ impl DpGroup {
                 cost: CollectiveCost::default(),
             }),
             cond: Condvar::new(),
-            hop_seconds_per_byte,
-            hop_base,
+            algo,
+            topo,
+            byte_scale,
         })
+    }
+
+    /// The collective algorithm this group dispatches (before `auto`
+    /// resolution).
+    pub fn algo(&self) -> CommAlgo {
+        self.algo
     }
 
     /// Allreduce (sum) `grads` across the group; blocks until all ranks
@@ -52,9 +87,20 @@ impl DpGroup {
         if st.done == dp {
             // Last arrival performs the reduction for the whole group.
             let mut bufs: Vec<Vec<f32>> = st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
-            let base = self.hop_base;
-            let per_byte = self.hop_seconds_per_byte;
-            let cost = ring_allreduce(&mut bufs, &|bytes| base + bytes as f64 * per_byte);
+            let scale = self.byte_scale;
+            let intra = self.topo.intra;
+            let inter = self.topo.inter;
+            let intra_hop =
+                move |bytes: usize| intra.latency + bytes as f64 * scale / intra.bytes_per_sec;
+            let inter_hop =
+                move |bytes: usize| inter.latency + bytes as f64 * scale / inter.bytes_per_sec;
+            let cost = allreduce(
+                self.algo,
+                &mut bufs,
+                self.topo.ranks_per_node,
+                &intra_hop,
+                &inter_hop,
+            );
             for (slot, buf) in st.slots.iter_mut().zip(bufs) {
                 *slot = Some(buf);
             }
@@ -75,12 +121,25 @@ impl DpGroup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::LinkTime;
+    use crate::hetero::{spec, ChipKind};
+    use crate::topology::NicAssignment;
     use std::thread;
+
+    /// A fully scattered group: every hop on a 1 GB/s inter link.
+    fn flat_topo(dp: usize) -> CommTopology {
+        CommTopology {
+            n_ranks: dp,
+            ranks_per_node: 1,
+            intra: LinkTime { latency: 1e-6, bytes_per_sec: 100e9 },
+            inter: LinkTime { latency: 1e-6, bytes_per_sec: 1e9 },
+        }
+    }
 
     #[test]
     fn allreduce_across_threads_sums() {
         let dp = 4;
-        let group = DpGroup::new(dp, 1e-6, 1e-9);
+        let group = DpGroup::new(dp, CommAlgo::Ring, flat_topo(dp));
         let mut handles = Vec::new();
         for rank in 0..dp {
             let g = group.clone();
@@ -100,7 +159,7 @@ mod tests {
     #[test]
     fn reusable_across_steps() {
         let dp = 2;
-        let group = DpGroup::new(dp, 0.0, 0.0);
+        let group = DpGroup::new(dp, CommAlgo::Ring, flat_topo(dp));
         for step in 0..3 {
             let g0 = group.clone();
             let t = thread::spawn(move || {
@@ -118,10 +177,84 @@ mod tests {
 
     #[test]
     fn single_rank_is_identity() {
-        let group = DpGroup::new(1, 1e-6, 1e-9);
+        let group = DpGroup::new(1, CommAlgo::Ring, flat_topo(1));
         let mut grads = vec![3.0f32; 8];
         let cost = group.allreduce(0, &mut grads);
         assert!(grads.iter().all(|&x| x == 3.0));
         assert_eq!(cost.seconds, 0.0);
+    }
+
+    #[test]
+    fn every_algorithm_sums_identically_on_integer_grads() {
+        // Integer-valued payloads make f32 addition exact in any order:
+        // every collective algorithm must produce bit-identical sums (the
+        // bedrock of the parity suite's cross-algorithm guarantee).
+        let dp = 4;
+        let topo = CommTopology::dp_group(&spec(ChipKind::B), dp, 4, NicAssignment::Affinity);
+        let expect: Vec<f32> = (0..32).map(|i| (4 * (i % 7)) as f32 - 8.0).collect();
+        for algo in CommAlgo::ALL {
+            let group = DpGroup::new(dp, algo, topo);
+            let mut handles = Vec::new();
+            for rank in 0..dp {
+                let g = group.clone();
+                handles.push(thread::spawn(move || {
+                    let mut grads: Vec<f32> =
+                        (0..32).map(|i| ((i % 7) as f32) - 2.0).collect();
+                    g.allreduce(rank, &mut grads);
+                    grads
+                }));
+            }
+            for h in handles {
+                let grads = h.join().unwrap();
+                for (x, e) in grads.iter().zip(&expect) {
+                    assert_eq!(x.to_bits(), e.to_bits(), "{algo}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_derived_topology_makes_hierarchical_beat_ring() {
+        // Chip B at TP 4 co-locates 2 of 4 replicas per node: the flat
+        // ring pays the NIC on every hop, the two-level schedule keeps
+        // half its steps on the intra fabric.
+        let dp = 4;
+        let topo = CommTopology::dp_group(&spec(ChipKind::B), dp, 4, NicAssignment::Affinity);
+        let run = |algo: CommAlgo| {
+            let group = DpGroup::new(dp, algo, topo);
+            let mut handles = Vec::new();
+            for rank in 0..dp {
+                let g = group.clone();
+                handles.push(thread::spawn(move || {
+                    let mut grads = vec![1.0f32; 1 << 16];
+                    g.allreduce(rank, &mut grads)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap().seconds).fold(0.0, f64::max)
+        };
+        let ring = run(CommAlgo::Ring);
+        let hier = run(CommAlgo::Hierarchical);
+        assert!(hier < ring, "hier {hier} !< ring {ring}");
+    }
+
+    #[test]
+    fn byte_scale_amplifies_the_modeled_cost_only() {
+        let dp = 2;
+        let run = |scale: f64| {
+            let group = DpGroup::with_byte_scale(dp, CommAlgo::Ring, flat_topo(dp), scale);
+            let g = group.clone();
+            let t = thread::spawn(move || {
+                let mut a = vec![1.0f32; 64];
+                g.allreduce(0, &mut a)
+            });
+            let mut b = vec![2.0f32; 64];
+            let cost = group.allreduce(1, &mut b);
+            t.join().unwrap();
+            assert!(b.iter().all(|&x| x == 3.0), "data unchanged by scale");
+            cost.seconds
+        };
+        let base = run(1.0);
+        let scaled = run(1024.0);
+        assert!(scaled > base, "scaled {scaled} !> base {base}");
     }
 }

@@ -1,14 +1,20 @@
-//! The H2 training coordinator (L3): real 1F1B pipeline training over PJRT
-//! stage executables with DiComm-modeled communication.
+//! The H2 training coordinator (L3): pipeline training over PJRT stage
+//! executables with DiComm-modeled communication — plus the plan-driven
+//! *virtual* evaluator ([`train_virtual`]), which executes an
+//! [`crate::plan::ExecutionPlan`]'s schedule and collective algorithm
+//! with modeled compute so the coordinator can be held to the same
+//! numbers as the cost model and the simulator (the third evaluator).
 
 pub mod checkpoint;
 pub mod data;
 pub mod dpgroup;
+pub mod exec;
 pub mod params;
 pub mod schedule;
 pub mod train;
 
 pub use data::Corpus;
 pub use dpgroup::DpGroup;
-pub use schedule::{in_flight, one_f1b_order, Op};
+pub use exec::{train_virtual, VirtualOptions, VirtualReport};
+pub use schedule::{in_flight, one_f1b_order, stage_orders, Op, PipeOp};
 pub use train::{train, train_plan, StagePlan, TrainConfig, TrainReport};

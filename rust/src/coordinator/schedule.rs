@@ -1,6 +1,23 @@
-//! 1F1B micro-batch issue order (shared by the coordinator's stage workers;
-//! mirrors the simulator's schedule so real runs and simulated runs execute
-//! the same op sequence).
+//! Pipeline issue orders shared by the simulator and the training
+//! coordinator.
+//!
+//! Every schedule the crate knows ([`Schedule`]) has exactly one order
+//! generator here, and both evaluators consume it: the discrete-event
+//! simulator replays the orders with modeled durations, the real and
+//! virtual coordinators execute them over the DiComm fabric. Because the
+//! generators live in one module, the simulator and the coordinator cannot
+//! drift apart — a plan's `strategy.schedule` means the same op sequence
+//! to every evaluator.
+//!
+//! * 1F1B: the classic static per-stage queue ([`one_f1b_order`]).
+//! * Interleaved: per-physical-stage queues derived from a unit-duration
+//!   1F1B run of the virtual pipeline ([`interleaved_orders`]), which is
+//!   deadlock-free by construction.
+//! * Zero-bubble: the greedy B/F/W executor ([`zero_bubble_events`]);
+//!   [`zero_bubble_orders`] freezes its unit-duration decisions into
+//!   static per-stage queues for the coordinator.
+
+use crate::costmodel::Schedule;
 
 /// One operation in a stage's static 1F1B schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -9,6 +26,39 @@ pub enum Op {
     Fwd(usize),
     /// Backward of micro-batch `m`.
     Bwd(usize),
+}
+
+/// One operation in a stage's static pipeline schedule, for any schedule:
+/// `chunk` is the virtual-stage index within the physical stage (always 0
+/// outside interleaved schedules), and the zero-bubble schedule splits
+/// backward into [`PipeOp::Bwd`] (input-gradient phase) plus
+/// [`PipeOp::BwdWeight`] (weight-gradient phase).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeOp {
+    /// Forward of micro-batch `micro` on virtual chunk `chunk`.
+    Fwd {
+        /// Virtual chunk within the physical stage (interleaving).
+        chunk: usize,
+        /// Micro-batch index.
+        micro: usize,
+    },
+    /// Backward of micro-batch `micro` on virtual chunk `chunk` — the full
+    /// backward for 1F1B/interleaved, the input-gradient phase under the
+    /// zero-bubble schedule.
+    Bwd {
+        /// Virtual chunk within the physical stage (interleaving).
+        chunk: usize,
+        /// Micro-batch index.
+        micro: usize,
+    },
+    /// Zero-bubble weight-gradient phase of micro-batch `micro` (local
+    /// work scheduled into what would otherwise be bubble time).
+    BwdWeight {
+        /// Virtual chunk within the physical stage (always 0 today).
+        chunk: usize,
+        /// Micro-batch index.
+        micro: usize,
+    },
 }
 
 /// The classic 1F1B order for `stage` of `n_stages` with `b` micro-batches:
@@ -35,10 +85,313 @@ pub fn one_f1b_order(stage: usize, n_stages: usize, b: usize) -> Vec<Op> {
     q
 }
 
+/// [`one_f1b_order`] lifted into the schedule-generic [`PipeOp`] currency
+/// (chunk 0 everywhere — plain 1F1B has no virtual chunks).
+pub fn one_f1b_pipe_order(stage: usize, n_stages: usize, b: usize) -> Vec<PipeOp> {
+    one_f1b_order(stage, n_stages, b)
+        .into_iter()
+        .map(|op| match op {
+            Op::Fwd(m) => PipeOp::Fwd { chunk: 0, micro: m },
+            Op::Bwd(m) => PipeOp::Bwd { chunk: 0, micro: m },
+        })
+        .collect()
+}
+
 /// Peak number of in-flight micro-batches at `stage` under this schedule
 /// (the memory model's warm-up depth).
 pub fn in_flight(stage: usize, n_stages: usize, b: usize) -> usize {
     (n_stages - stage).min(b)
+}
+
+/// End times of every op in a unit-duration, zero-latency 1F1B run over
+/// `s_n` stages — the canonical order the interleaved executor derives its
+/// per-physical-stage queues from. Returns `(fwd_end, bwd_end)` indexed
+/// `[m][stage]`.
+///
+/// Sorting each physical executor's ops by these end times yields a
+/// deadlock-free real schedule: dependency edges strictly increase the
+/// unit end time (every op takes one unit), and executor-order edges never
+/// decrease it, so the union of both edge sets is acyclic.
+pub fn unit_1f1b_end_times(s_n: usize, b: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    // The 1F1B list scheduler with unit durations and zero link latency,
+    // over the same per-stage queues as the real simulator/coordinator,
+    // recording end times (cheap: 2·b·s_n unit ops).
+    const UNSET: f64 = -1.0;
+    let mut fwd_done = vec![vec![UNSET; s_n]; b];
+    let mut bwd_done = vec![vec![UNSET; s_n]; b];
+    let queues: Vec<Vec<Op>> = (0..s_n).map(|s| one_f1b_order(s, s_n, b)).collect();
+    let mut head = vec![0usize; s_n];
+    let mut clock = vec![0.0f64; s_n];
+    let mut progressed = true;
+    while progressed {
+        progressed = false;
+        for s in 0..s_n {
+            while head[s] < queues[s].len() {
+                let op = queues[s][head[s]];
+                let ready = match op {
+                    Op::Fwd(m) => {
+                        if s == 0 {
+                            Some(0.0)
+                        } else if fwd_done[m][s - 1] >= 0.0 {
+                            Some(fwd_done[m][s - 1])
+                        } else {
+                            None
+                        }
+                    }
+                    Op::Bwd(m) => {
+                        if fwd_done[m][s] < 0.0 {
+                            None
+                        } else if s == s_n - 1 {
+                            Some(fwd_done[m][s])
+                        } else if bwd_done[m][s + 1] >= 0.0 {
+                            Some(bwd_done[m][s + 1])
+                        } else {
+                            None
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                let end = clock[s].max(ready) + 1.0;
+                clock[s] = end;
+                match op {
+                    Op::Fwd(m) => fwd_done[m][s] = end,
+                    Op::Bwd(m) => bwd_done[m][s] = end,
+                }
+                head[s] += 1;
+                progressed = true;
+            }
+        }
+    }
+    debug_assert!(head.iter().zip(&queues).all(|(h, q)| *h == q.len()),
+                  "unit 1F1B pre-pass deadlocked");
+    (fwd_done, bwd_done)
+}
+
+/// Per-physical-stage issue orders of the interleaved schedule: virtual
+/// stage `d` of the `s_n·v`-deep virtual pipeline runs on physical stage
+/// `d % s_n` as chunk `d / s_n`; each physical executor's ops are merged
+/// by their end time in a unit-duration 1F1B run of the virtual pipeline
+/// ([`unit_1f1b_end_times`]), which is deadlock-free by construction.
+/// `v <= 1` degenerates to plain 1F1B.
+pub fn interleaved_orders(s_n: usize, v: usize, b: usize) -> Vec<Vec<PipeOp>> {
+    if v <= 1 || s_n == 0 {
+        return (0..s_n).map(|s| one_f1b_pipe_order(s, s_n, b)).collect();
+    }
+    let d_n = s_n * v;
+    let (unit_f, unit_b) = unit_1f1b_end_times(d_n, b);
+    struct VOp {
+        end: f64,
+        d: usize,
+        m: usize,
+        fwd: bool,
+    }
+    let mut queues: Vec<Vec<VOp>> = (0..s_n).map(|_| Vec::with_capacity(2 * b * v)).collect();
+    for d in 0..d_n {
+        let s = d % s_n;
+        for m in 0..b {
+            queues[s].push(VOp { end: unit_f[m][d], d, m, fwd: true });
+            queues[s].push(VOp { end: unit_b[m][d], d, m, fwd: false });
+        }
+    }
+    queues
+        .into_iter()
+        .map(|mut q| {
+            // (end, d) is unique within an executor: ops of one virtual
+            // stage serialize on its unit clock, distinct virtual stages
+            // differ in d.
+            q.sort_by(|a, b| a.end.total_cmp(&b.end).then(a.d.cmp(&b.d)));
+            q.into_iter()
+                .map(|o| {
+                    let chunk = o.d / s_n;
+                    if o.fwd {
+                        PipeOp::Fwd { chunk, micro: o.m }
+                    } else {
+                        PipeOp::Bwd { chunk, micro: o.m }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-stage timing inputs of the zero-bubble greedy scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct ZbStage {
+    /// Forward seconds per micro-batch.
+    pub t_fwd: f64,
+    /// Input-gradient backward phase seconds (the inter-stage critical
+    /// path; includes any activation recompute that must precede it).
+    pub t_bwd_input: f64,
+    /// Weight-gradient backward phase seconds (local bubble filler).
+    pub t_bwd_weight: f64,
+}
+
+/// One scheduled op of the zero-bubble greedy executor.
+#[derive(Clone, Copy, Debug)]
+pub struct ZbEvent {
+    /// Physical stage the op ran on.
+    pub stage: usize,
+    /// The op ([`PipeOp::Bwd`] is the input-gradient phase).
+    pub op: PipeOp,
+    /// When the op's inputs were available.
+    pub ready: f64,
+    /// When the op started (stage busy-until ∨ ready).
+    pub start: f64,
+    /// When the op finished.
+    pub end: f64,
+    /// Stage idle time attributable to the op's inbound hop (exposed
+    /// communication).
+    pub wait_comm: f64,
+}
+
+/// Zero-bubble schedule: backward split into an input-gradient phase `B`
+/// (on the inter-stage critical path) and a weight-gradient phase `W`
+/// (local, deferred into what would otherwise be bubble time).
+///
+/// A greedy discrete-event scheduler executes, globally earliest first,
+/// the per-stage candidate ops under 1F1B's warm-up cap (so activation
+/// memory stays within the 1F1B envelope, as ZB-V guarantees): `B` when
+/// its downstream input gradient has arrived, `F` while the warm-up cap
+/// allows, and `W` whenever the stage would otherwise idle. Ties prefer
+/// `B` over `F` over `W`, then the lower stage index — fully
+/// deterministic. `link[s]` is the hop time between stages `s` and `s+1`.
+///
+/// Returns the full event list in execution order; the simulator folds it
+/// into clocks, the coordinator freezes the unit-duration variant into
+/// static orders ([`zero_bubble_orders`]).
+pub fn zero_bubble_events(stages: &[ZbStage], link: &[f64], b: usize) -> Vec<ZbEvent> {
+    let s_n = stages.len();
+    if s_n == 0 || b == 0 {
+        return Vec::new();
+    }
+    const UNSET: f64 = -1.0;
+    let mut fwd_done = vec![vec![UNSET; s_n]; b];
+    let mut bwd_done = vec![vec![UNSET; s_n]; b]; // input-gradient phase end
+    let mut next_f = vec![0usize; s_n];
+    let mut next_b = vec![0usize; s_n];
+    let mut next_w = vec![0usize; s_n];
+    let cap: Vec<usize> = (0..s_n).map(|s| (s_n - s).min(b).max(1)).collect();
+
+    let mut clock = vec![0.0f64; s_n];
+    let mut events = Vec::with_capacity(3 * b * s_n);
+
+    // Op kinds by tie-break priority: B (0) > F (1) > W (2).
+    let total_ops = 3 * b * s_n;
+    for _ in 0..total_ops {
+        // (start, priority, stage) minimal over every stage's candidates.
+        let mut best: Option<(f64, u8, usize, f64)> = None; // +ready for comm
+        let mut consider = |start: f64, prio: u8, s: usize, ready: f64| {
+            let better = match &best {
+                None => true,
+                Some((bs, bp, bi, _)) => (start, prio, s) < (*bs, *bp, *bi),
+            };
+            if better {
+                best = Some((start, prio, s, ready));
+            }
+        };
+        for s in 0..s_n {
+            if next_b[s] < b {
+                let m = next_b[s];
+                if fwd_done[m][s] >= 0.0 {
+                    let ready = if s == s_n - 1 {
+                        Some(fwd_done[m][s])
+                    } else if bwd_done[m][s + 1] >= 0.0 {
+                        Some(bwd_done[m][s + 1] + link[s])
+                    } else {
+                        None
+                    };
+                    if let Some(r) = ready {
+                        consider(clock[s].max(r), 0, s, r);
+                    }
+                }
+            }
+            if next_f[s] < b && next_f[s] - next_b[s] < cap[s] {
+                let m = next_f[s];
+                let ready = if s == 0 {
+                    Some(0.0)
+                } else if fwd_done[m][s - 1] >= 0.0 {
+                    Some(fwd_done[m][s - 1] + link[s - 1])
+                } else {
+                    None
+                };
+                if let Some(r) = ready {
+                    consider(clock[s].max(r), 1, s, r);
+                }
+            }
+            if next_w[s] < next_b[s] {
+                consider(clock[s], 2, s, clock[s]);
+            }
+        }
+        let (start, prio, s, ready) = best.expect("zero-bubble schedule deadlocked");
+        let dur = match prio {
+            0 => stages[s].t_bwd_input,
+            1 => stages[s].t_fwd,
+            _ => stages[s].t_bwd_weight,
+        };
+        // Exposed comm: the wait attributable to the inbound hop.
+        let wait_comm = if prio < 2 {
+            let hop = match prio {
+                0 if s < s_n - 1 => link[s],
+                1 if s > 0 => link[s - 1],
+                _ => 0.0,
+            };
+            (ready - clock[s]).max(0.0).min(hop)
+        } else {
+            0.0
+        };
+        let end = start + dur;
+        clock[s] = end;
+        let op = match prio {
+            0 => {
+                let m = next_b[s];
+                bwd_done[m][s] = end;
+                next_b[s] += 1;
+                PipeOp::Bwd { chunk: 0, micro: m }
+            }
+            1 => {
+                let m = next_f[s];
+                fwd_done[m][s] = end;
+                next_f[s] += 1;
+                PipeOp::Fwd { chunk: 0, micro: m }
+            }
+            _ => {
+                let m = next_w[s];
+                next_w[s] += 1;
+                PipeOp::BwdWeight { chunk: 0, micro: m }
+            }
+        };
+        events.push(ZbEvent { stage: s, op, ready, start, end, wait_comm });
+    }
+    events
+}
+
+/// Static per-stage zero-bubble orders: the greedy executor's decisions
+/// under unit durations and zero link latency, frozen into queues the
+/// coordinator executes. Deadlock-free under arbitrary real durations by
+/// the same argument as [`unit_1f1b_end_times`]: dependency edges strictly
+/// increase the unit end time, executor-order edges never decrease it.
+pub fn zero_bubble_orders(s_n: usize, b: usize) -> Vec<Vec<PipeOp>> {
+    let unit = vec![ZbStage { t_fwd: 1.0, t_bwd_input: 1.0, t_bwd_weight: 1.0 }; s_n];
+    let link = vec![0.0f64; s_n.saturating_sub(1)];
+    let mut orders: Vec<Vec<PipeOp>> =
+        (0..s_n).map(|_| Vec::with_capacity(3 * b)).collect();
+    for e in zero_bubble_events(&unit, &link, b) {
+        orders[e.stage].push(e.op);
+    }
+    orders
+}
+
+/// The per-stage issue orders of `schedule` over `s_n` physical stages and
+/// `b` micro-batches — the single entry point the simulator and both
+/// coordinators (real and virtual) derive their op sequences from.
+pub fn stage_orders(schedule: Schedule, s_n: usize, b: usize) -> Vec<Vec<PipeOp>> {
+    match schedule {
+        Schedule::OneF1B => (0..s_n).map(|s| one_f1b_pipe_order(s, s_n, b)).collect(),
+        Schedule::Interleaved { virtual_stages } => {
+            interleaved_orders(s_n, virtual_stages.max(1), b)
+        }
+        Schedule::ZeroBubbleV => zero_bubble_orders(s_n, b),
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +460,102 @@ mod tests {
         let q = one_f1b_order(3, 4, 4);
         assert_eq!(q, vec![Op::Fwd(0), Op::Bwd(0), Op::Fwd(1), Op::Bwd(1),
                            Op::Fwd(2), Op::Bwd(2), Op::Fwd(3), Op::Bwd(3)]);
+    }
+
+    /// Every schedule's per-stage orders must be complete and
+    /// dependency-consistent: each (chunk, micro) forwards exactly once
+    /// and backwards exactly once per stage, and no backward precedes its
+    /// own forward within a stage queue.
+    #[test]
+    fn stage_orders_are_complete_for_every_schedule() {
+        use crate::costmodel::Schedule;
+        prop::check(40, |rng| {
+            let s_n = rng.usize(1, 6);
+            let b = rng.usize(1, 12);
+            let v = rng.usize(2, 5);
+            for schedule in [
+                Schedule::OneF1B,
+                Schedule::Interleaved { virtual_stages: v },
+                Schedule::ZeroBubbleV,
+            ] {
+                let chunks = schedule.virtual_stages();
+                let orders = stage_orders(schedule, s_n, b);
+                prop::assert_prop(orders.len() == s_n, "one order per stage")?;
+                for (s, q) in orders.iter().enumerate() {
+                    let mut fwd = vec![vec![false; b]; chunks];
+                    let mut bwd = vec![vec![false; b]; chunks];
+                    let mut w = vec![vec![false; b]; chunks];
+                    for op in q {
+                        match *op {
+                            PipeOp::Fwd { chunk, micro } => {
+                                prop::assert_prop(!fwd[chunk][micro], "fwd twice")?;
+                                fwd[chunk][micro] = true;
+                            }
+                            PipeOp::Bwd { chunk, micro } => {
+                                prop::assert_prop(
+                                    fwd[chunk][micro],
+                                    format!("{schedule}: bwd before fwd at stage {s}"),
+                                )?;
+                                prop::assert_prop(!bwd[chunk][micro], "bwd twice")?;
+                                bwd[chunk][micro] = true;
+                            }
+                            PipeOp::BwdWeight { chunk, micro } => {
+                                prop::assert_prop(
+                                    bwd[chunk][micro],
+                                    "weight phase before input phase",
+                                )?;
+                                prop::assert_prop(!w[chunk][micro], "w twice")?;
+                                w[chunk][micro] = true;
+                            }
+                        }
+                    }
+                    let all_fwd = fwd.iter().all(|c| c.iter().all(|&x| x));
+                    let all_bwd = bwd.iter().all(|c| c.iter().all(|&x| x));
+                    prop::assert_prop(all_fwd && all_bwd,
+                                      format!("{schedule}: incomplete at stage {s}"))?;
+                    if schedule == Schedule::ZeroBubbleV {
+                        prop::assert_prop(w.iter().all(|c| c.iter().all(|&x| x)),
+                                          "missing weight phases")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_bubble_orders_respect_the_warmup_cap() {
+        // In-flight forwards (fwd issued minus input-phase backwards done)
+        // never exceed the 1F1B warm-up depth — the ZB-V memory guarantee.
+        prop::check(30, |rng| {
+            let s_n = rng.usize(1, 6);
+            let b = rng.usize(1, 12);
+            for (s, q) in zero_bubble_orders(s_n, b).iter().enumerate() {
+                let cap = (s_n - s).min(b).max(1);
+                let mut live = 0i64;
+                for op in q {
+                    match op {
+                        PipeOp::Fwd { .. } => {
+                            live += 1;
+                            prop::assert_prop(live as usize <= cap,
+                                              format!("cap exceeded at stage {s}"))?;
+                        }
+                        PipeOp::Bwd { .. } => live -= 1,
+                        PipeOp::BwdWeight { .. } => {}
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interleaved_orders_degenerate_to_1f1b() {
+        for s_n in 1..4 {
+            for b in 1..5 {
+                assert_eq!(interleaved_orders(s_n, 1, b),
+                           stage_orders(Schedule::OneF1B, s_n, b));
+            }
+        }
     }
 }

@@ -1,11 +1,15 @@
 //! The HeteroPP training coordinator: leader + per-stage worker threads.
 //!
-//! Each (pipeline stage × DP replica) runs as a worker thread executing the
-//! real 1F1B schedule over AOT-compiled PJRT stage executables: forward
+//! Each (pipeline stage × DP replica) runs as a worker thread executing
+//! the plan's pipeline schedule (1F1B or zero-bubble order; the
+//! interleaved schedule needs per-chunk artifacts and runs on the virtual
+//! evaluator instead) over AOT-compiled PJRT stage executables: forward
 //! activations and backward gradients are real tensors moving through the
-//! DiComm fabric (real bytes + modeled wire time), DP gradients are summed
-//! with the real ring allreduce, and Adam updates run through the exported
-//! `*_update` executables. Python is never on this path.
+//! DiComm fabric (real bytes + modeled wire time), DP gradients are
+//! summed by the DiComm collective engine under the configured
+//! [`CommAlgo`] over the stage's chip-derived topology, and Adam updates
+//! run through the exported `*_update` executables. Python is never on
+//! this path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -13,7 +17,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::{cross_node_time, fabric, CommMode, Endpoint};
+use crate::comm::{cross_node_time, fabric, CommAlgo, CommMode, CommTopology, Endpoint};
+use crate::costmodel::profile::DP_OVERLAP;
+use crate::costmodel::Schedule;
 use crate::hetero::{spec, ChipKind};
 use crate::precision::Perturbation;
 use crate::runtime::{Executable, HostTensor, Runtime};
@@ -23,7 +29,7 @@ use crate::topology::NicAssignment;
 use super::data::Corpus;
 use super::dpgroup::DpGroup;
 use super::params::{accumulate, flatten, init_params, unflatten, zeros_like};
-use super::schedule::{one_f1b_order, Op};
+use super::schedule::{stage_orders, PipeOp};
 
 /// PJRT executables are thread-safe for concurrent execution (the TFRT CPU
 /// client serializes internally as needed); the raw pointers inside the
@@ -59,6 +65,15 @@ pub struct TrainConfig {
     pub lr: f32,
     /// Parameter-init and data seed.
     pub seed: u64,
+    /// Pipeline schedule the workers execute (the plan's
+    /// `strategy.schedule`). 1F1B and zero-bubble run on the real
+    /// executables; the interleaved schedule needs one artifact per
+    /// virtual chunk and is executed by the virtual evaluator
+    /// ([`crate::coordinator::train_virtual`]).
+    pub schedule: Schedule,
+    /// DP gradient-sync collective algorithm (the plan's
+    /// `strategy.comm_algo`), dispatched through the DiComm engine.
+    pub comm_algo: CommAlgo,
     /// Cross-node communication strategy for the modeled wire time.
     pub comm: CommMode,
     /// NIC selection policy.
@@ -83,6 +98,8 @@ impl TrainConfig {
             steps,
             lr: 1e-3,
             seed: 42,
+            schedule: Schedule::OneF1B,
+            comm_algo: CommAlgo::Ring,
             comm: CommMode::DeviceDirect,
             nic_assignment: NicAssignment::Affinity,
             fine_overlap: true,
@@ -116,8 +133,9 @@ struct WorkerShared {
 }
 
 /// Run a serialized [`crate::plan::ExecutionPlan`]'s train section — the
-/// plan-centric entry point. The plan's comm mode, NIC assignment, overlap
-/// and precision policy apply; errors if the plan has no train section.
+/// plan-centric entry point. The plan's schedule, DP-collective
+/// algorithm, comm mode, NIC assignment, overlap and precision policy all
+/// apply; errors if the plan has no train section.
 pub fn train_plan(rt: &Runtime, plan: &crate::plan::ExecutionPlan) -> Result<TrainReport> {
     train(rt, &plan.train_config()?)
 }
@@ -127,6 +145,14 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
     let n_stages = cfg.stages.len();
     if n_stages == 0 {
         bail!("no stages configured");
+    }
+    if let Schedule::Interleaved { virtual_stages } = cfg.schedule {
+        if virtual_stages > 1 {
+            bail!("the real coordinator maps artifacts 1:1 onto physical stages and \
+                   cannot split them into {virtual_stages} virtual chunks — run the \
+                   interleaved schedule on the plan-driven virtual evaluator \
+                   (`h2 train --plan ... --virtual`) or re-schedule to 1f1b/zbv");
+        }
     }
     let entry = rt.manifest.model(&cfg.model)?.clone();
 
@@ -167,15 +193,21 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
     });
     let endpoints = fabric(cfg.dp * n_stages, latency);
 
-    // One DP rendezvous per stage; ring hops between same-kind nodes.
+    // One DP rendezvous per stage, running the configured collective
+    // algorithm over the stage's chip-derived topology (hop latency and
+    // bandwidth from the DiComm timing model under the run's comm mode —
+    // no hardwired hop constants).
     let dp_groups: Vec<Arc<DpGroup>> = (0..n_stages)
         .map(|si| {
             let sp = spec(cfg.stages[si].chip);
-            let nic_share = sp.nic_gbps * 1e9 * crate::topology::RDMA_EFFICIENCY
-                * sp.nics_per_node as f64 / sp.chips_per_node as f64;
-            DpGroup::new(cfg.dp, 3e-6, 1.0 / nic_share)
+            let topo = CommTopology::dp_group_mode(&sp, cfg.dp, 1, assign, mode);
+            DpGroup::new(cfg.dp, cfg.comm_algo, topo)
         })
         .collect();
+
+    // Per-stage issue orders of the configured schedule — the same
+    // generators the simulator replays (`coordinator::schedule`).
+    let orders = stage_orders(cfg.schedule, n_stages, cfg.micro_batches);
 
     let shared = Arc::new(WorkerShared {
         losses: Mutex::new(vec![0.0; cfg.steps]),
@@ -206,6 +238,7 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
                 micro_batch: stage_meta[si].micro_batch.unwrap_or(1),
                 seq: stage_meta[si].seq.unwrap_or(entry.seq_len),
                 hidden: entry.hidden,
+                order: orders[si].clone(),
                 dp_group: dp_groups[si].clone(),
                 shared: shared.clone(),
                 corpus: corpus.clone(),
@@ -242,6 +275,7 @@ struct WorkerCtx {
     micro_batch: usize,
     seq: usize,
     hidden: usize,
+    order: Vec<PipeOp>,
     dp_group: Arc<DpGroup>,
     shared: Arc<WorkerShared>,
     corpus: Arc<Corpus>,
@@ -270,7 +304,6 @@ fn worker(ctx: WorkerCtx, mut ep: Endpoint) -> Result<()> {
     });
 
     let n_p = ctx.meta_params.len();
-    let order = one_f1b_order(ctx.stage, ctx.n_stages, ctx.cfg.micro_batches);
     let act_shape = [ctx.micro_batch, ctx.seq, ctx.hidden];
     let h_elems: usize = act_shape.iter().product();
 
@@ -280,9 +313,9 @@ fn worker(ctx: WorkerCtx, mut ep: Endpoint) -> Result<()> {
         let mut dx_stash: Vec<Option<HostTensor>> = vec![None; ctx.cfg.micro_batches];
         let mut step_loss = 0.0f64;
 
-        for &op in &order {
+        for &op in &ctx.order {
             match op {
-                Op::Fwd(micro) => {
+                PipeOp::Fwd { micro, .. } => {
                     // Input: tokens (first stage) or upstream activations.
                     let x = if is_first {
                         let (inp, _) = ctx.corpus.microbatch(step, micro, ctx.dp_rank,
@@ -320,7 +353,7 @@ fn worker(ctx: WorkerCtx, mut ep: Endpoint) -> Result<()> {
                                 out[0].as_f32()?.to_vec())?;
                     }
                 }
-                Op::Bwd(micro) => {
+                PipeOp::Bwd { micro, .. } => {
                     if is_last {
                         let dx = dx_stash[micro].take()
                             .ok_or_else(|| anyhow!("missing dx for micro {micro}"))?;
@@ -347,14 +380,23 @@ fn worker(ctx: WorkerCtx, mut ep: Endpoint) -> Result<()> {
                         }
                     }
                 }
+                // The real backward executable computes input and weight
+                // gradients together, so the zero-bubble weight phase is
+                // fused into `Bwd` here; the op stays in the order (the
+                // virtual evaluator executes it as a real split phase).
+                PipeOp::BwdWeight { .. } => {}
             }
         }
 
-        // DP gradient synchronization (real ring allreduce over DiComm).
+        // DP gradient synchronization: the DiComm collective engine under
+        // the configured algorithm. Only the exposed slice is charged —
+        // the paper overlaps gradient sync with backward compute
+        // (§4.3.2's t_update convention, shared with the cost model).
         let mut flat = flatten(&grad_acc)?;
         let cost = ctx.dp_group.allreduce(ctx.dp_rank, &mut flat);
-        ep.advance(cost.seconds);
-        ep.add_wire(cost.seconds);
+        let exposed = cost.seconds * (1.0 - DP_OVERLAP);
+        ep.advance(exposed);
+        ep.add_wire(exposed);
         unflatten(&mut grad_acc, &flat)?;
         if let Some(p) = perturb.as_mut() {
             // Vendor-stack numerics model: correlated per-tensor noise.
@@ -465,6 +507,46 @@ mod tests {
         cfg.log_every = 0;
         let report = train(&rt, &cfg).unwrap();
         assert!(report.losses.last().unwrap() < &report.losses[0]);
+    }
+
+    #[test]
+    fn zbv_order_reproduces_1f1b_numerics() {
+        // The zero-bubble order fuses the weight phase into `Bwd` on the
+        // real backend, so it is a pure reordering: losses must be
+        // identical to the 1F1B run.
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 1, 4, 6);
+        cfg.log_every = 0;
+        let f1b = train(&rt, &cfg).unwrap();
+        cfg.schedule = Schedule::ZeroBubbleV;
+        let zbv = train(&rt, &cfg).unwrap();
+        for (a, b) in f1b.losses.iter().zip(&zbv.losses) {
+            assert!((a - b).abs() < 1e-9, "losses must be identical: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn interleaved_is_rejected_on_the_real_path() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 1, 2, 2);
+        cfg.schedule = Schedule::Interleaved { virtual_stages: 2 };
+        let err = train(&rt, &cfg).unwrap_err().to_string();
+        assert!(err.contains("virtual"), "{err}");
+    }
+
+    #[test]
+    fn hierarchical_collective_runs_and_matches_ring_losses() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = TrainConfig::quick("h2_tiny", tiny_stages_pp2(), 2, 2, 4);
+        cfg.log_every = 0;
+        let ring = train(&rt, &cfg).unwrap();
+        cfg.comm_algo = CommAlgo::Hierarchical;
+        let hier = train(&rt, &cfg).unwrap();
+        // Same data, same reduction values (integer-exactness is not
+        // guaranteed on real gradients, so allow float-level slack).
+        for (a, b) in ring.losses.iter().zip(&hier.losses) {
+            assert!((a - b).abs() < 1e-3, "losses diverged: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct LayerProfile {
     pub t_recompute: f64,
     /// Optimizer step + non-overlapped DP gradient sync, per layer.
     pub t_update: f64,
+    /// The exposed DP gradient-sync slice alone (already included in
+    /// [`LayerProfile::t_update`]) — the part the coordinator replaces
+    /// with its executed collective's own accounting.
+    pub t_dp_sync: f64,
     /// Extra per-layer time *per iteration* if optimizer states are
     /// offloaded to host (fp32 shard traffic over PCIe).
     pub t_offload: f64,
@@ -130,8 +134,8 @@ pub fn profile_layer_comm(
     // Per microbatch, bf16 gradients stream down synchronously.
     let t_offload_micro = params_per_chip * 2.0 / PCIE_OFFLOAD_BPS;
 
-    LayerProfile { t_fwd, t_bwd, t_recompute, t_update, t_offload, t_offload_micro,
-                   params_per_chip }
+    LayerProfile { t_fwd, t_bwd, t_recompute, t_update, t_dp_sync, t_offload,
+                   t_offload_micro, params_per_chip }
 }
 
 #[cfg(test)]

@@ -91,11 +91,9 @@ impl ChipKind {
             ChipKind::A100 => 4,
             ChipKind::Custom(_) => {
                 // FNV-1a over the lower-cased name (parse is case-insensitive).
-                let mut h: u64 = 0xcbf29ce484222325;
-                for b in self.name().bytes() {
-                    h ^= b.to_ascii_lowercase() as u64;
-                    h = h.wrapping_mul(0x100000001b3);
-                }
+                let h = crate::util::hash::fnv1a(
+                    self.name().bytes().map(|b| b.to_ascii_lowercase()),
+                );
                 // Setting a high bit keeps custom tags clear of the
                 // built-in 0..=4 range (and avoids overflow).
                 h | (1 << 32)

@@ -19,7 +19,9 @@
 //!   auto::search ──► SearchResult::into_plan ──► plan.json
 //!                                                  │
 //!                    sim::simulate_plan ◄──────────┤  (HeteroPP simulator)
-//!                    coordinator::train_plan ◄─────┤  (real 1F1B over PJRT)
+//!                    coordinator::train_plan ◄─────┤  (schedule + collectives
+//!                      / train_virtual             │   executed; PJRT or
+//!                                                  │   virtual compute)
 //!                    costmodel::evaluate_plan ◄────┘  (§4.3.2 closed form)
 //! ```
 //!
@@ -85,7 +87,10 @@
 //!   (data-parallel × schedule) candidates with branch-and-bound pruning.
 //! * [`sim`] — the HeteroPP discrete-event simulator (§4.2) with a real
 //!   issue order per schedule.
-//! * [`coordinator`] — the real 1F1B training coordinator over PJRT.
+//! * [`coordinator`] — the training coordinator: executes a plan's
+//!   schedule and DP collective over PJRT artifacts
+//!   ([`coordinator::train_plan`]) or with modeled compute as the third
+//!   plan evaluator ([`coordinator::train_virtual`]).
 //! * [`plan`] — the serializable `ExecutionPlan` tying them together.
 //! * [`config`] — JSON config front-end lowering into the plan builder.
 //! * [`report`] — paper-table drivers (Table 6/9, Fig 11) over plans.

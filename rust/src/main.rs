@@ -20,7 +20,9 @@ use anyhow::{bail, Result};
 use h2::auto::{search, SearchConfig};
 use h2::comm::{p2p_latency, CommAlgo, CommMode};
 use h2::config::Config;
-use h2::coordinator::{train, train_plan, StagePlan, TrainConfig, TrainReport};
+use h2::coordinator::{
+    train, train_plan, train_virtual, StagePlan, TrainConfig, TrainReport, VirtualOptions,
+};
 use h2::costmodel::{profile_layer, tgs, uniform_1f1b, Schedule, H2_100B};
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
 use h2::plan::{render_errors, ExecutionPlan};
@@ -62,6 +64,8 @@ fn print_help() {
     println!("usage: h2 <command> [flags]   (every command accepts --config file.json)\n");
     println!("  train       --plan plan.json | --model h2_tiny --stages first_l2:A,last_l2:B");
     println!("              --dp 1 --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
+    println!("              [--schedule 1f1b|interleaved:V|zbv] [--comm-algo ring|...|auto]");
+    println!("              [--virtual]  plan-driven virtual evaluator (no artifacts)");
     println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
@@ -240,6 +244,16 @@ fn print_train_report(report: &TrainReport, steps: usize) {
              report.losses.last().unwrap_or(&f64::NAN));
 }
 
+/// FNV-1a over the bit patterns of the final parameters — a compact
+/// machine-readable fingerprint for cross-algorithm identity checks.
+fn params_fingerprint(params: &[Vec<f32>]) -> u64 {
+    h2::util::hash::fnv1a(
+        params
+            .iter()
+            .flat_map(|stage| stage.iter().flat_map(|x| x.to_bits().to_le_bytes())),
+    )
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let config = load_config(args)?;
     if let Some(path) = args.get("plan") {
@@ -248,12 +262,67 @@ fn cmd_train(args: &Args) -> Result<()> {
                    `train` section instead");
         }
         let mut plan = ExecutionPlan::load(path)?;
+        // Explicit flags override what the plan searched/priced — warn
+        // loudly so a run that diverges from its plan is visible.
+        if let Some(s) = args.get("comm-algo") {
+            let new = parse_comm_algo(s)?;
+            if new != plan.strategy.comm_algo {
+                eprintln!("[h2] warning: --comm-algo {new} overrides the plan's \
+                           `{}`", plan.strategy.comm_algo);
+            }
+        }
+        if let Some(tok) = args.get("schedule") {
+            let new = parse_schedule(tok)?;
+            if new != plan.strategy.schedule {
+                eprintln!("[h2] warning: --schedule {new} overrides the plan's \
+                           `{}`", plan.strategy.schedule);
+            }
+            plan.strategy.schedule = new;
+            if let Err(errs) = plan.validate() {
+                bail!("plan cannot run under --schedule {}:\n{}",
+                      plan.strategy.schedule, render_errors(&errs));
+            }
+        }
         // The same config/flag overrides `simulate --plan` honors apply to
-        // the real run too (comm, NIC affinity, overlap), plus --perturb
-        // and the cheap run-shape scalars.
+        // the real run too (comm, comm-algo, NIC affinity, overlap), plus
+        // --perturb and the cheap run-shape scalars.
         apply_sim_overrides(&mut plan, args, config.as_ref())?;
         if args.has("perturb") {
             plan.precision.perturb = true;
+        }
+        if args.has("virtual") {
+            // Plan-driven virtual evaluator: executes the plan's schedule
+            // and collective algorithm with modeled compute — no PJRT
+            // artifacts needed, comparable to simulate/evaluate.
+            // Run shape comes from the plan's *strategy* (dp, micro
+            // batches) — honoring --dp/--micros would break the plan's
+            // batch arithmetic, and the synthetic model has no vendor
+            // noise to perturb, so reject rather than silently ignore.
+            for flag in ["dp", "micros", "perturb"] {
+                if args.has(flag) {
+                    bail!("--{flag} does not apply to --virtual (the virtual \
+                           evaluator executes the plan's strategy as-is; edit \
+                           the plan instead)");
+                }
+            }
+            let mut vopts = VirtualOptions::from_plan(&plan);
+            vopts.steps = args.usize_or("steps", vopts.steps)?;
+            vopts.lr = args.f64_or("lr", vopts.lr as f64)? as f32;
+            vopts.seed = args.u64_or("seed", vopts.seed)?;
+            vopts.log_every = args.usize_or("log-every", vopts.log_every)?;
+            let report = train_virtual(&plan, &vopts)?;
+            println!("[h2] virtual evaluator: plan `{}` ({} stages x dp {}, {} / {})",
+                     plan.name, plan.strategy.total_stages(), plan.strategy.s_dp,
+                     plan.schedule(), plan.strategy.comm_algo);
+            println!("[h2] modeled step {:.6}s ({:.6}s comm); loss first {:.4} last {:.4}",
+                     report.step_seconds, report.comm_seconds,
+                     report.losses.first().unwrap_or(&f64::NAN),
+                     report.losses.last().unwrap_or(&f64::NAN));
+            // Full-precision values for scripts and the parity tests.
+            println!("virtual_step_seconds {:.17e}", report.step_seconds);
+            println!("virtual_comm_seconds {:.17e}", report.comm_seconds);
+            println!("params_fnv {:016x}", params_fingerprint(&report.final_params));
+            return Ok(());
         }
         if let Some(t) = plan.train.as_mut() {
             t.steps = args.usize_or("steps", t.steps)?;
@@ -297,6 +366,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         steps: args.usize_or("steps", 20)?,
         lr: args.f64_or("lr", 1e-3)? as f32,
         seed: args.u64_or("seed", 42)?,
+        schedule: match args.get("schedule") {
+            Some(s) => parse_schedule(s)?,
+            None => Schedule::OneF1B,
+        },
+        comm_algo: match args.get("comm-algo") {
+            Some(s) => parse_comm_algo(s)?,
+            None => CommAlgo::Ring,
+        },
         comm: parse_comm(args)?,
         nic_assignment: if args.has("non-affinity") {
             NicAssignment::NonAffinity

@@ -159,19 +159,11 @@ impl ExecutionPlan {
         tgs(&self.cluster, self.gbs_tokens, iteration_seconds)
     }
 
-    /// Lower the plan into a [`TrainConfig`] for the real coordinator.
-    /// Errors if the plan has no `train` section, or if its schedule is
-    /// not 1F1B — the real coordinator only executes the classic 1F1B
-    /// order, and silently running a zbv/interleaved plan as 1F1B would
-    /// divorce the real run from the plan's searched and simulated claims.
+    /// Lower the plan into a [`TrainConfig`] for the real coordinator —
+    /// the plan's `strategy.schedule` and `strategy.comm_algo` travel
+    /// with it, so the coordinator executes what the search priced and
+    /// the simulator replayed. Errors if the plan has no `train` section.
     pub fn train_config(&self) -> Result<TrainConfig> {
-        if self.strategy.schedule != Schedule::OneF1B {
-            bail!("plan `{}` uses the {} schedule, but the real training \
-                   coordinator only executes 1f1b — re-schedule the plan \
-                   (e.g. `h2 simulate --plan ... --schedule 1f1b` validates \
-                   the swap) before `h2 train`",
-                  self.name, self.strategy.schedule);
-        }
         let t = self
             .train
             .as_ref()
@@ -184,6 +176,8 @@ impl ExecutionPlan {
             steps: t.steps,
             lr: t.lr,
             seed: t.seed,
+            schedule: self.strategy.schedule,
+            comm_algo: self.strategy.comm_algo,
             comm: self.comm,
             nic_assignment: self.nic_assignment,
             fine_overlap: self.fine_overlap,
@@ -1060,9 +1054,10 @@ mod tests {
     }
 
     #[test]
-    fn train_rejects_non_1f1b_schedules() {
-        // The real coordinator executes 1F1B only; lowering a zbv plan
-        // into it must fail loudly rather than silently run 1F1B.
+    fn train_config_carries_the_plan_strategy() {
+        // The coordinator is a plan evaluator: the lowered TrainConfig
+        // must carry the plan's schedule and collective algorithm instead
+        // of rejecting non-1F1B schedules.
         let mut plan = table6_a_plan();
         plan.train = Some(TrainSpec {
             model: "h2_tiny".into(),
@@ -1078,10 +1073,12 @@ mod tests {
             log_every: 10,
         });
         plan.strategy.schedule = Schedule::ZeroBubbleV;
-        let err = plan.train_config().unwrap_err().to_string();
-        assert!(err.contains("zbv"), "{err}");
-        plan.strategy.schedule = Schedule::OneF1B;
-        assert!(plan.train_config().is_ok());
+        plan.strategy.comm_algo = CommAlgo::Hierarchical;
+        let cfg = plan.train_config().unwrap();
+        assert_eq!(cfg.schedule, Schedule::ZeroBubbleV);
+        assert_eq!(cfg.comm_algo, CommAlgo::Hierarchical);
+        plan.train = None;
+        assert!(plan.train_config().is_err(), "no train section must error");
     }
 
     #[test]

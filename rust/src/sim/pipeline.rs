@@ -16,7 +16,9 @@
 //! ablations are run here.
 
 use crate::comm::CommMode;
-use crate::coordinator::schedule::{one_f1b_order, Op};
+use crate::coordinator::schedule::{
+    interleaved_orders, one_f1b_order, zero_bubble_events, Op, PipeOp, ZbStage,
+};
 use crate::costmodel::{profile_layer_comm, ModelShape, Schedule, Strategy};
 use crate::hetero::ChipGroup;
 use crate::topology::NicAssignment;
@@ -55,21 +57,33 @@ impl Default for SimOptions {
     }
 }
 
-/// One pipeline stage as the simulator sees it.
+/// One pipeline stage as the simulator sees it — also the timing table
+/// the coordinator's plan-driven virtual evaluator executes against
+/// ([`crate::coordinator::train_virtual`]), so both evaluators price a
+/// stage identically.
 #[derive(Clone, Debug)]
-struct StageSim {
-    t_fwd: f64,
+pub(crate) struct StageSim {
+    pub(crate) t_fwd: f64,
     /// Full backward: input + weight gradients, recompute, offload stall.
-    t_bwd: f64,
+    pub(crate) t_bwd: f64,
     /// Zero-bubble input-gradient phase (critical path; includes the
     /// activation recompute that must precede it).
-    t_bwd_input: f64,
+    pub(crate) t_bwd_input: f64,
     /// Zero-bubble weight-gradient phase (bubble filler; includes the
     /// per-microbatch gradient-offload stall).
-    t_bwd_weight: f64,
-    t_update: f64,
-    group: usize,
-    s_tp: usize,
+    pub(crate) t_bwd_weight: f64,
+    pub(crate) t_update: f64,
+    /// Exposed DP gradient-sync slice already included in `t_update`
+    /// (the virtual coordinator replaces it with the executed
+    /// collective's own accounting).
+    pub(crate) t_update_comm: f64,
+    /// Layers this stage holds (`layers_per_stage` of its group plan).
+    pub(crate) lps: f64,
+    /// Modeled bf16 gradient bytes of one layer on one chip (after TP
+    /// sharding) — what the DP collective moves per layer.
+    pub(crate) grad_bytes_per_layer: f64,
+    pub(crate) group: usize,
+    pub(crate) s_tp: usize,
 }
 
 /// Simulation outcome.
@@ -95,8 +109,30 @@ pub fn simulate_iteration(
     micro_tokens: usize,
     opts: &SimOptions,
 ) -> SimResult {
-    // Expand group plans into a flat stage list (HeteroPP stage order),
-    // applying the same memory/offload decisions as the cost model.
+    let stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
+    let (link, wrap_link) = stage_links(&stages, groups, model, micro_tokens, opts);
+    let exposed = |t: f64| t;
+
+    match strategy.schedule {
+        Schedule::OneF1B => simulate_1f1b(&stages, &link, strategy.micro_batches, &exposed),
+        Schedule::Interleaved { virtual_stages } => simulate_interleaved(
+            &stages, &link, wrap_link, strategy.micro_batches, virtual_stages.max(1),
+        ),
+        Schedule::ZeroBubbleV => simulate_zero_bubble(&stages, &link, strategy.micro_batches),
+    }
+}
+
+/// Expand group plans into a flat per-stage timing table (HeteroPP stage
+/// order), applying the same memory/offload decisions as the cost model.
+/// Shared by [`simulate_iteration`] and the coordinator's plan-driven
+/// virtual evaluator so the two execution-level views cannot diverge.
+pub(crate) fn plan_stage_sims(
+    model: &ModelShape,
+    groups: &[&ChipGroup],
+    strategy: &Strategy,
+    micro_tokens: usize,
+    opts: &SimOptions,
+) -> Vec<StageSim> {
     let total_stages: usize = strategy.plans.iter().map(|p| p.s_pp).sum();
     let mut stages = Vec::new();
     let mut first_stage = 0usize;
@@ -126,19 +162,32 @@ pub fn simulate_iteration(
                 t_bwd_input: t_bwd_base / 2.0 + lps * recomp,
                 t_bwd_weight: t_bwd_base / 2.0 + off_micro,
                 t_update: lps * prof.t_update + off_iter,
+                t_update_comm: lps * prof.t_dp_sync,
+                lps,
+                grad_bytes_per_layer: prof.params_per_chip * 2.0,
                 group: gi,
                 s_tp: plan.s_tp,
             });
         }
         first_stage += plan.s_pp;
     }
-    let act_bytes = micro_tokens * model.hidden * 2; // bf16 activations
+    stages
+}
 
-    // Inter-stage transfer times (forward direction; gradients are the same
-    // size on the way back).
-    // Pre-compute EXPOSED per-hop time: total reshard cost minus whatever
-    // the fine-grained overlap machinery hides (mode-dependent, and only
-    // the streamed base transfer is hideable).
+/// Inter-stage transfer times (forward direction; gradients are the same
+/// size on the way back): EXPOSED per-hop time — total reshard cost minus
+/// whatever the fine-grained overlap machinery hides (mode-dependent, and
+/// only the streamed base transfer is hideable). Returns the neighbour
+/// links plus the interleaved wrap hand-off (last physical stage back to
+/// the first, a long-haul reshard between those two chip groups).
+pub(crate) fn stage_links(
+    stages: &[StageSim],
+    groups: &[&ChipGroup],
+    model: &ModelShape,
+    micro_tokens: usize,
+    opts: &SimOptions,
+) -> (Vec<f64>, f64) {
+    let act_bytes = micro_tokens * model.hidden * 2; // bf16 activations
     let eff = if opts.fine_overlap { overlap_effectiveness(opts.comm) } else { 0.0 };
     let hop = |src_stage: &StageSim, dst_stage: &StageSim| {
         let src = &groups[src_stage.group].spec;
@@ -154,25 +203,12 @@ pub fn simulate_iteration(
     for s in 0..link.len() {
         link[s] = hop(&stages[s], &stages[s + 1]);
     }
-    let exposed = |t: f64| t;
-
-    match strategy.schedule {
-        Schedule::OneF1B => simulate_1f1b(&stages, &link, strategy.micro_batches, &exposed),
-        Schedule::Interleaved { virtual_stages } => {
-            // The chunk hand-off from the last physical stage back to the
-            // first (between consecutive virtual chunks) is a long-haul
-            // reshard between those two chip groups.
-            let wrap_link = if stages.len() > 1 {
-                hop(&stages[stages.len() - 1], &stages[0])
-            } else {
-                0.0
-            };
-            simulate_interleaved(
-                &stages, &link, wrap_link, strategy.micro_batches, virtual_stages.max(1),
-            )
-        }
-        Schedule::ZeroBubbleV => simulate_zero_bubble(&stages, &link, strategy.micro_batches),
-    }
+    let wrap_link = if stages.len() > 1 {
+        hop(&stages[stages.len() - 1], &stages[0])
+    } else {
+        0.0
+    };
+    (link, wrap_link)
 }
 
 /// Simulate a serialized [`crate::plan::ExecutionPlan`] — the plan-centric
@@ -297,79 +333,14 @@ fn simulate_1f1b(
     finish(stages, clock, busy, exposed_comm)
 }
 
-/// End times of every op in a unit-duration, zero-latency 1F1B run over
-/// `s_n` stages — the canonical order the interleaved executor derives its
-/// per-physical-stage queues from. Returns `(fwd_end, bwd_end)` indexed
-/// `[m][stage]`.
-///
-/// Sorting each physical executor's ops by these end times yields a
-/// deadlock-free real schedule: dependency edges strictly increase the
-/// unit end time (every op takes one unit), and executor-order edges never
-/// decrease it, so the union of both edge sets is acyclic.
-fn unit_1f1b_end_times(s_n: usize, b: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
-    // The 1F1B list scheduler with unit durations and zero link latency,
-    // over the same per-stage queues as the real simulator/coordinator,
-    // recording end times (cheap: 2·b·s_n unit ops).
-    const UNSET: f64 = -1.0;
-    let mut fwd_done = vec![vec![UNSET; s_n]; b];
-    let mut bwd_done = vec![vec![UNSET; s_n]; b];
-    let queues: Vec<Vec<Op>> = (0..s_n).map(|s| one_f1b_order(s, s_n, b)).collect();
-    let mut head = vec![0usize; s_n];
-    let mut clock = vec![0.0f64; s_n];
-    let mut progressed = true;
-    while progressed {
-        progressed = false;
-        for s in 0..s_n {
-            while head[s] < queues[s].len() {
-                let op = queues[s][head[s]];
-                let ready = match op {
-                    Op::Fwd(m) => {
-                        if s == 0 {
-                            Some(0.0)
-                        } else if fwd_done[m][s - 1] >= 0.0 {
-                            Some(fwd_done[m][s - 1])
-                        } else {
-                            None
-                        }
-                    }
-                    Op::Bwd(m) => {
-                        if fwd_done[m][s] < 0.0 {
-                            None
-                        } else if s == s_n - 1 {
-                            Some(fwd_done[m][s])
-                        } else if bwd_done[m][s + 1] >= 0.0 {
-                            Some(bwd_done[m][s + 1])
-                        } else {
-                            None
-                        }
-                    }
-                };
-                let Some(ready) = ready else { break };
-                let end = clock[s].max(ready) + 1.0;
-                clock[s] = end;
-                match op {
-                    Op::Fwd(m) => fwd_done[m][s] = end,
-                    Op::Bwd(m) => bwd_done[m][s] = end,
-                }
-                head[s] += 1;
-                progressed = true;
-            }
-        }
-    }
-    debug_assert!(head.iter().zip(&queues).all(|(h, q)| *h == q.len()),
-                  "unit 1F1B pre-pass deadlocked");
-    (fwd_done, bwd_done)
-}
-
 /// Interleaved 1F1B over `v` virtual chunks per physical stage.
 ///
 /// The virtual pipeline has `D = S·v` stages; virtual stage `d` executes
 /// on physical stage `d % S` with `1/v` of the stage's layers per chunk.
-/// Per-physical-stage issue order: the ops of its `v` virtual stages
-/// merged by their end time in a unit-duration 1F1B run of the virtual
-/// pipeline (see [`unit_1f1b_end_times`]), which is deadlock-free by
-/// construction. `wrap_link` is the reshard cost of the chunk hand-off
-/// from the last physical stage back to the first.
+/// Per-physical-stage issue order: the shared [`interleaved_orders`]
+/// queues (deadlock-free by construction — the same queues the
+/// coordinator executes). `wrap_link` is the reshard cost of the chunk
+/// hand-off from the last physical stage back to the first.
 fn simulate_interleaved(
     stages: &[StageSim],
     link: &[f64],
@@ -383,7 +354,6 @@ fn simulate_interleaved(
         return simulate_1f1b(stages, link, b, &|t| t);
     }
     let d_n = s_n * v;
-    let (unit_f, unit_b) = unit_1f1b_end_times(d_n, b);
 
     // Hop latency leaving virtual stage d toward d+1 (or back, for
     // gradients): adjacent physical stages, except the wrap from the last
@@ -392,26 +362,7 @@ fn simulate_interleaved(
         if d % s_n == s_n - 1 { wrap_link } else { link[d % s_n] }
     };
 
-    #[derive(Clone, Copy)]
-    struct VOp {
-        end: f64,
-        d: usize,
-        m: usize,
-        fwd: bool,
-    }
-    let mut queues: Vec<Vec<VOp>> = vec![Vec::with_capacity(2 * b * v); s_n];
-    for d in 0..d_n {
-        let s = d % s_n;
-        for m in 0..b {
-            queues[s].push(VOp { end: unit_f[m][d], d, m, fwd: true });
-            queues[s].push(VOp { end: unit_b[m][d], d, m, fwd: false });
-        }
-    }
-    for q in &mut queues {
-        // (end, d) is unique within an executor: ops of one virtual stage
-        // serialize on its unit clock, distinct virtual stages differ in d.
-        q.sort_by(|a, b| a.end.total_cmp(&b.end).then(a.d.cmp(&b.d)));
-    }
+    let queues = interleaved_orders(s_n, v, b);
 
     const UNSET: f64 = -1.0;
     let mut fwd_done = vec![vec![UNSET; d_n]; b];
@@ -426,26 +377,32 @@ fn simulate_interleaved(
         progressed = false;
         for s in 0..s_n {
             while head[s] < queues[s].len() {
-                let op = queues[s][head[s]];
-                let (ready, comm) = if op.fwd {
-                    if op.d == 0 {
+                let (d, m, fwd) = match queues[s][head[s]] {
+                    PipeOp::Fwd { chunk, micro } => (chunk * s_n + s, micro, true),
+                    PipeOp::Bwd { chunk, micro } => (chunk * s_n + s, micro, false),
+                    PipeOp::BwdWeight { .. } => {
+                        unreachable!("interleaved orders have no weight phase")
+                    }
+                };
+                let (ready, comm) = if fwd {
+                    if d == 0 {
                         (Some(0.0), 0.0)
-                    } else if fwd_done[op.m][op.d - 1] >= 0.0 {
-                        (Some(fwd_done[op.m][op.d - 1] + hop(op.d - 1)), hop(op.d - 1))
+                    } else if fwd_done[m][d - 1] >= 0.0 {
+                        (Some(fwd_done[m][d - 1] + hop(d - 1)), hop(d - 1))
                     } else {
                         (None, 0.0)
                     }
-                } else if fwd_done[op.m][op.d] < 0.0 {
+                } else if fwd_done[m][d] < 0.0 {
                     (None, 0.0)
-                } else if op.d == d_n - 1 {
-                    (Some(fwd_done[op.m][op.d]), 0.0)
-                } else if bwd_done[op.m][op.d + 1] >= 0.0 {
-                    (Some(bwd_done[op.m][op.d + 1] + hop(op.d)), hop(op.d))
+                } else if d == d_n - 1 {
+                    (Some(fwd_done[m][d]), 0.0)
+                } else if bwd_done[m][d + 1] >= 0.0 {
+                    (Some(bwd_done[m][d + 1] + hop(d)), hop(d))
                 } else {
                     (None, 0.0)
                 };
                 let Some(ready) = ready else { break };
-                let dur = if op.fwd {
+                let dur = if fwd {
                     stages[s].t_fwd / v as f64
                 } else {
                     stages[s].t_bwd / v as f64
@@ -455,10 +412,10 @@ fn simulate_interleaved(
                 let end = start + dur;
                 clock[s] = end;
                 busy[s] += dur;
-                if op.fwd {
-                    fwd_done[op.m][op.d] = end;
+                if fwd {
+                    fwd_done[m][d] = end;
                 } else {
-                    bwd_done[op.m][op.d] = end;
+                    bwd_done[m][d] = end;
                 }
                 head[s] += 1;
                 progressed = true;
@@ -471,110 +428,26 @@ fn simulate_interleaved(
     finish(stages, clock, busy, exposed_comm)
 }
 
-/// Zero-bubble schedule: backward split into an input-gradient phase `B`
-/// (on the inter-stage critical path) and a weight-gradient phase `W`
-/// (local, deferred into what would otherwise be bubble time).
-///
-/// A greedy discrete-event scheduler executes, globally earliest first,
-/// the per-stage candidate ops under 1F1B's warm-up cap (so activation
-/// memory stays within the 1F1B envelope, as ZB-V guarantees): `B` when
-/// its downstream input gradient has arrived, `F` while the warm-up cap
-/// allows, and `W` whenever the stage would otherwise idle. Ties prefer
-/// `B` over `F` over `W`, then the lower stage index — fully
-/// deterministic.
+/// Zero-bubble schedule: the shared greedy B/F/W executor
+/// ([`zero_bubble_events`] — see its docs for the scheduling policy),
+/// folded into the simulator's per-stage clock/busy/exposed-comm view.
 fn simulate_zero_bubble(stages: &[StageSim], link: &[f64], micro_batches: usize) -> SimResult {
     let s_n = stages.len();
-    let b = micro_batches;
-    const UNSET: f64 = -1.0;
-    let mut fwd_done = vec![vec![UNSET; s_n]; b];
-    let mut bwd_done = vec![vec![UNSET; s_n]; b]; // input-gradient phase end
-    let mut next_f = vec![0usize; s_n];
-    let mut next_b = vec![0usize; s_n];
-    let mut next_w = vec![0usize; s_n];
-    let cap: Vec<usize> = (0..s_n).map(|s| (s_n - s).min(b).max(1)).collect();
-
+    let zb: Vec<ZbStage> = stages
+        .iter()
+        .map(|s| ZbStage {
+            t_fwd: s.t_fwd,
+            t_bwd_input: s.t_bwd_input,
+            t_bwd_weight: s.t_bwd_weight,
+        })
+        .collect();
     let mut clock = vec![0.0f64; s_n];
     let mut busy = vec![0.0f64; s_n];
     let mut exposed_comm = vec![0.0f64; s_n];
-
-    // Op kinds by tie-break priority: B (0) > F (1) > W (2).
-    let total_ops = 3 * b * s_n;
-    for _ in 0..total_ops {
-        // (start, priority, stage) minimal over every stage's candidates.
-        let mut best: Option<(f64, u8, usize, f64)> = None; // +ready for comm
-        let mut consider = |start: f64, prio: u8, s: usize, ready: f64| {
-            let better = match &best {
-                None => true,
-                Some((bs, bp, bi, _)) => {
-                    (start, prio, s) < (*bs, *bp, *bi)
-                }
-            };
-            if better {
-                best = Some((start, prio, s, ready));
-            }
-        };
-        for s in 0..s_n {
-            if next_b[s] < b {
-                let m = next_b[s];
-                if fwd_done[m][s] >= 0.0 {
-                    let ready = if s == s_n - 1 {
-                        Some(fwd_done[m][s])
-                    } else if bwd_done[m][s + 1] >= 0.0 {
-                        Some(bwd_done[m][s + 1] + link[s])
-                    } else {
-                        None
-                    };
-                    if let Some(r) = ready {
-                        consider(clock[s].max(r), 0, s, r);
-                    }
-                }
-            }
-            if next_f[s] < b && next_f[s] - next_b[s] < cap[s] {
-                let m = next_f[s];
-                let ready = if s == 0 {
-                    Some(0.0)
-                } else if fwd_done[m][s - 1] >= 0.0 {
-                    Some(fwd_done[m][s - 1] + link[s - 1])
-                } else {
-                    None
-                };
-                if let Some(r) = ready {
-                    consider(clock[s].max(r), 1, s, r);
-                }
-            }
-            if next_w[s] < next_b[s] {
-                consider(clock[s], 2, s, clock[s]);
-            }
-        }
-        let (start, prio, s, ready) = best.expect("zero-bubble schedule deadlocked");
-        let dur = match prio {
-            0 => stages[s].t_bwd_input,
-            1 => stages[s].t_fwd,
-            _ => stages[s].t_bwd_weight,
-        };
-        // Exposed comm: the wait attributable to the inbound hop.
-        if prio < 2 {
-            let hop = match prio {
-                0 if s < s_n - 1 => link[s],
-                1 if s > 0 => link[s - 1],
-                _ => 0.0,
-            };
-            exposed_comm[s] += (ready - clock[s]).max(0.0).min(hop);
-        }
-        let end = start + dur;
-        clock[s] = end;
-        busy[s] += dur;
-        match prio {
-            0 => {
-                bwd_done[next_b[s]][s] = end;
-                next_b[s] += 1;
-            }
-            1 => {
-                fwd_done[next_f[s]][s] = end;
-                next_f[s] += 1;
-            }
-            _ => next_w[s] += 1,
-        }
+    for e in zero_bubble_events(&zb, link, micro_batches) {
+        clock[e.stage] = e.end;
+        busy[e.stage] += e.end - e.start;
+        exposed_comm[e.stage] += e.wait_comm;
     }
 
     finish(stages, clock, busy, exposed_comm)

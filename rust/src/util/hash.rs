@@ -1,0 +1,32 @@
+//! Small non-cryptographic hashes (the offline vendor set has no hash
+//! crates).
+
+/// FNV-1a over a byte stream — the crate's one stable fingerprint/tag
+/// hash (custom-chip seed tags, the virtual evaluator's parameter
+/// fingerprint printed by `h2 train --virtual`).
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_vectors() {
+        // The standard 64-bit FNV-1a test vectors.
+        assert_eq!(fnv1a(std::iter::empty()), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(*b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar".iter().copied()), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(fnv1a(*b"ab"), fnv1a(*b"ba"));
+    }
+}

@@ -4,6 +4,8 @@
 //! uniformly across subcommands — including clusters made of chips that
 //! exist only in the config JSON.
 
+mod common;
+
 use std::path::PathBuf;
 use std::process::Command;
 
@@ -212,6 +214,92 @@ fn comm_algo_flag_pins_search_and_overrides_plans() {
         .output()
         .unwrap();
     assert!(!out.status.success(), "bad --comm-algo must be rejected");
+}
+
+/// A machine-readable `<prefix> <value>` line from stdout.
+fn parse_line<'a>(stdout: &'a str, prefix: &str) -> &'a str {
+    stdout
+        .lines()
+        .find_map(|l| l.strip_prefix(prefix))
+        .unwrap_or_else(|| panic!("no `{prefix}` line in:\n{stdout}"))
+        .trim()
+}
+
+/// The parity fixture (`common.rs`) as a plan file: 2-stage mixed-vendor
+/// pipeline whose Chip-B stage syncs gradients across nodes (so the
+/// collective matters) — the same plan the in-process parity suite runs.
+fn write_virtual_fixture(path: &str, comm_algo: h2::comm::CommAlgo) {
+    common::two_stage_mixed_vendor_plan(Schedule::OneF1B, comm_algo)
+        .save(path)
+        .unwrap();
+}
+
+#[test]
+fn train_virtual_honors_the_plan_strategy() {
+    use h2::comm::CommAlgo;
+    let dir = tmp_dir("train_virtual");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+    write_virtual_fixture(plan_path, CommAlgo::Hierarchical);
+
+    // The virtual evaluator runs without artifacts and reports the plan's
+    // schedule and collective.
+    let stdout = run_ok(h2_bin().args(["train", "--plan", plan_path, "--virtual",
+                                       "--steps", "1"]));
+    assert!(stdout.contains("hierarchical"),
+            "virtual run should name the plan's collective:\n{stdout}");
+    assert!(stdout.contains("1f1b"),
+            "virtual run should name the plan's schedule:\n{stdout}");
+    let hier_comm: f64 = parse_line(&stdout, "virtual_comm_seconds ").parse().unwrap();
+    assert!(hier_comm > 0.0);
+
+    // --comm-algo overrides the plan with a visible warning, and the ring
+    // must report MORE virtual comm seconds on this node-crossing fixture.
+    let out = h2_bin()
+        .args(["train", "--plan", plan_path, "--virtual", "--steps", "1",
+               "--comm-algo", "ring"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("overrides"),
+            "expected an override warning on stderr:\n{stderr}");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let ring_comm: f64 = parse_line(&stdout, "virtual_comm_seconds ").parse().unwrap();
+    assert!(hier_comm < ring_comm,
+            "hierarchical comm {hier_comm} should beat the flat ring {ring_comm}");
+
+    // --schedule overrides with a warning too.
+    let out = h2_bin()
+        .args(["train", "--plan", plan_path, "--virtual", "--steps", "1",
+               "--schedule", "zbv"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("overrides"));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("zbv"));
+}
+
+#[test]
+fn train_virtual_params_are_identical_across_comm_algos() {
+    use h2::comm::CommAlgo;
+    let dir = tmp_dir("train_virtual_params");
+    let plan_path = dir.join("plan.json");
+    let plan_path = plan_path.to_str().unwrap();
+    write_virtual_fixture(plan_path, CommAlgo::Ring);
+    let mut fingerprints = Vec::new();
+    for algo in ["ring", "tree", "rhd", "hierarchical", "auto"] {
+        let out = h2_bin()
+            .args(["train", "--plan", plan_path, "--virtual", "--steps", "2",
+                   "--comm-algo", algo])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{algo} run failed");
+        let stdout = String::from_utf8(out.stdout).unwrap();
+        fingerprints.push(parse_line(&stdout, "params_fnv ").to_string());
+    }
+    assert!(fingerprints.windows(2).all(|w| w[0] == w[1]),
+            "final parameters must be bit-identical across comm algos: {fingerprints:?}");
 }
 
 #[test]

@@ -1,0 +1,52 @@
+//! Shared fixture of the three-evaluator parity suites (`parity.rs` and
+//! the CLI tests in `cli_plan.rs`): one 2-stage mixed-vendor plan, so the
+//! in-process and CLI assertions are guaranteed to run the same strategy.
+//! (`coordinator/exec.rs`'s unit tests mirror this plan — integration
+//! helpers are unreachable from the lib crate — keep the two in sync.)
+//!
+//! Included via `mod common;` from each integration-test target
+//! (`autotests = false` keeps cargo from compiling it standalone).
+
+use h2::comm::CommAlgo;
+use h2::costmodel::{GroupPlan, ModelShape, Schedule, Strategy};
+use h2::hetero::{ChipKind, Cluster};
+use h2::plan::ExecutionPlan;
+use h2::plan::PlanBuilder;
+
+/// A small transformer whose 8 layers split evenly over 2 stages (and
+/// chunk under `interleaved:2`).
+pub fn tiny_model() -> ModelShape {
+    ModelShape {
+        n_layers: 8,
+        hidden: 2048,
+        n_heads: 16,
+        n_kv_heads: 16,
+        intermediate: 8192,
+        vocab: 32000,
+        seq_len: 4096,
+    }
+}
+
+/// The 2-stage mixed-vendor fixture: Chip A (96 GiB/chip, 16 chips/node)
+/// feeding Chip B (64 GiB/chip, 8 chips/node), TP 4 and DP 4 on both. On
+/// Chip B only 2 of the 4 DP replicas share a node, so the DP gradient
+/// sync crosses nodes and the collective algorithm matters.
+pub fn two_stage_mixed_vendor_plan(schedule: Schedule, comm_algo: CommAlgo) -> ExecutionPlan {
+    let cluster = Cluster::new("parity-2stage", vec![(ChipKind::A, 16), (ChipKind::B, 16)]);
+    PlanBuilder::new("parity")
+        .model(tiny_model())
+        .cluster(cluster)
+        .strategy(Strategy {
+            s_dp: 4,
+            micro_batches: 8,
+            schedule,
+            comm_algo,
+            plans: vec![
+                GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: false },
+                GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: true },
+            ],
+        })
+        .gbs_tokens(4 * 8 * 4096)
+        .build()
+        .unwrap()
+}
