@@ -1,0 +1,485 @@
+"""Independent cross-check of HeteroAuto's branch-and-bound lower bound.
+
+A from-scratch Python port of the §4.3.2 cost model, the layer-sharding
+heuristic and the search's admissible lower bound (mirroring
+`rust/src/auto/search.rs` + `costmodel/`), used to hold the EXPERIMENTS.md
+§Perf work counts and the pruning invariants without touching the Rust:
+
+  * every leaf's bound must not exceed its true evaluated cost
+    (admissibility — the "strict pruning => bit-identical winner" pillar);
+  * the stronger bound must return the same winner as a compute-only
+    bound (and it does, with evaluated+pruned partitioning the space);
+  * the exp-mega fixture (1,280 chips, 4 vendors) must search feasibly.
+
+Run:  python3 python/tools/search_bound_check.py          # exp-a-1 checks
+      python3 python/tools/search_bound_check.py --mega   # + mega (slow, ~3 min)
+
+Constants here are hand-copied from the Rust; if the cost model changes,
+update both or the assertions below will say so.
+"""
+import math, itertools, sys
+
+# ---------------- chip catalog (chip.rs) ----------------
+class Link:
+    def __init__(self, kind, **kw): self.kind=kind; self.__dict__.update(kw)
+    def bw(self, a, b):
+        if self.kind=='uniform': return self.gbps
+        if self.kind=='numa':
+            return self.local if a//self.isl==b//self.isl else self.cross
+        if self.kind=='pcie':
+            return self.local if a//self.group==b//self.group else self.cross
+    def island_of(self, cpn):
+        if self.kind=='uniform': return cpn
+        if self.kind=='numa': return self.isl
+        return self.grp
+
+class Spec:
+    def __init__(self, kind, tflops, mem, cpn, link, nics, nic_gbps, mfu, pcie, share):
+        self.kind=kind; self.fp16=tflops; self.mem=mem; self.cpn=cpn
+        self.link=link; self.nics=nics; self.nic_gbps=nic_gbps; self.mfu=mfu
+        self.pcie=pcie; self.share=share
+    def sustained(self): return self.fp16*self.mfu
+    def tp_max(self):
+        isl=self.link.island_of(self.cpn); tp=1
+        while tp*2<=isl: tp*=2
+        return tp
+    def mem_bytes(self): return self.mem*1024**3
+
+SPECS = {
+ 'A': Spec('A',182.0,96.0,16,Link('uniform',gbps=200.0),8,25.0,0.573,11.95,0.576),
+ 'B': Spec('B',256.0,64.0,8,Link('numa',local=160.0,cross=56.0,isl=4),4,25.0,0.570,12.39,0.528),
+ 'C': Spec('C',128.0,32.0,16,Link('pcie',local=64.0,cross=24.0,group=4,grp=4),2,12.5,0.367,8.2,0.50),
+ 'D': Spec('D',550.0,32.0,8,Link('uniform',gbps=180.0),8,25.0,0.30,12.39,0.55),
+}
+# fix link island/group attr naming
+for s in SPECS.values():
+    if s.link.kind=='numa': s.link.island_= s.link.isl
+H2_100B = dict(n_layers=96, hidden=8192, n_heads=64, n_kv_heads=8,
+               intermediate=36864, vocab=92544, seq_len=4096)
+
+def head_dim(m): return m['hidden']//m['n_heads']
+def kv_dim(m): return m['n_kv_heads']*head_dim(m)
+def params_per_layer(m):
+    h=m['hidden']; kd=kv_dim(m); i=m['intermediate']
+    return 2.0*h*h + 2.0*h*kd + 3.0*h*i + 2.0*h
+def fwd_flops_per_token_layer(m):
+    return 2.0*params_per_layer(m) + 4.0*m['seq_len']*m['hidden']
+
+RDMA_EFF=0.8; INTRA_LAT=0.8e-6; DDR_LAT=3.0e-6
+DP_OVERLAP=0.7; ADAM=12.0; PCIE_OFF=12.0e9
+MEM_SAFETY=0.92
+
+def flow_bw_gbps(src, dst, affinity=True):
+    def path(spec, aff):
+        rate=spec.pcie*RDMA_EFF
+        if not aff: rate*=spec.share
+        cpn_per_nic=max(spec.cpn/spec.nics,1.0)
+        return min(rate, spec.nic_gbps*RDMA_EFF/cpn_per_nic)
+    return min(path(src,affinity), path(dst,True))
+
+def whole_node_group(n_ranks, rpn):
+    cap=max(1,min(rpn,max(n_ranks,1)))
+    for k in range(cap,0,-1):
+        if n_ranks%k==0: return k
+    return 1
+
+def co_located(spec, s_tp, dp):
+    return whole_node_group(max(dp,1), max(spec.cpn//max(s_tp,1),1))
+
+class Topo:
+    def __init__(self, n, rpn, intra, inter):
+        self.n=n; self.rpn=rpn; self.intra=intra; self.inter=inter
+    def node_group(self): return whole_node_group(self.n, self.rpn)
+    def nodes(self): return max(self.n,1)//self.node_group()
+
+def link_time(lat,bw): return (lat,bw)
+def lt(l,bytes_): return l[0]+bytes_/l[1]
+
+def dp_group(spec, dp, s_tp):
+    slot=min(max(s_tp,1), max(spec.cpn-1,1))
+    intra_bw=spec.link.bw(0, min(slot, spec.cpn-1))
+    return Topo(max(dp,1), co_located(spec,s_tp,dp),
+                (INTRA_LAT, intra_bw*1e9),
+                (DDR_LAT, flow_bw_gbps(spec,spec)*1e9))
+
+def ring_cost(bytes_,n,link):
+    if n<=1 or bytes_==0: return 0.0
+    steps=2*(n-1)
+    return steps*lt(link, -(-bytes_//n))
+def tree_cost(bytes_,n,link):
+    if n<=1 or bytes_==0: return 0.0
+    rounds=(1<<((n-1).bit_length())).bit_length()-1  # log2 next_pow2
+    return 2.0*rounds*lt(link,bytes_)
+def rhd_cost(bytes_,n,link):
+    if n<=1 or bytes_==0: return 0.0
+    p = n if (n & (n-1))==0 else (1<<((n-1).bit_length()))//2
+    extras=n-p; sec=0.0
+    if extras>0: sec+=2.0*lt(link,bytes_)
+    sizes=[]; block=bytes_
+    steps=p.bit_length()-1
+    for _ in range(steps):
+        upper=block-block//2; sizes.append(upper); block=upper
+    for s in sizes: sec+=lt(link,s)
+    for s in reversed(sizes): sec+=lt(link,s)
+    return sec
+def allreduce_cost(algo, bytes_, topo):
+    n=topo.n
+    if n<=1 or bytes_==0: return 0.0
+    k=topo.node_group(); m=n//k
+    flat=topo.inter if m>1 else topo.intra
+    if algo=='ring': return ring_cost(bytes_,n,flat)
+    if algo=='tree': return tree_cost(bytes_,n,flat)
+    if algo=='rhd': return rhd_cost(bytes_,n,flat)
+    if algo=='hier':
+        if m==1: return ring_cost(bytes_,n,topo.intra)
+        if k==1: return ring_cost(bytes_,n,topo.inter)
+        chunk=-(-bytes_//k)
+        return 2.0*(k-1)*lt(topo.intra,chunk)+ring_cost(chunk,m,topo.inter)
+    if algo=='auto':
+        best=None;bestt=float('inf')
+        for a in ['ring','tree','rhd','hier']:
+            t=allreduce_cost(a,bytes_,topo)
+            if t<bestt: bestt=t;best=a
+        return bestt
+    raise ValueError(algo)
+
+def profile(spec, m, tp, micro_tokens, dp, algo='ring'):
+    tpf=float(tp); sus=spec.sustained()*1e12
+    ppc=params_per_layer(m)/tpf
+    fwd_flops=micro_tokens*fwd_flops_per_token_layer(m)/tpf
+    t_fwd_d=fwd_flops/sus
+    if tp>1:
+        isl=spec.link.island_of(spec.cpn)
+        bw=spec.link.bw(0,min(tp-1,isl-1))*1e9
+        bytes_=micro_tokens*m['hidden']*2.0
+        t_tp=2.0*(2.0*(tpf-1.0)/tpf)*bytes_/bw + 2.0*3.0e-6
+    else: t_tp=0.0
+    t_fwd=t_fwd_d+t_tp; t_bwd=2.0*t_fwd_d+t_tp
+    t_adam=ppc*ADAM/sus/dp
+    if dp>1:
+        topo=dp_group(spec,dp,tp)
+        gb=int(ppc*2.0)
+        t_sync=allreduce_cost(algo,gb,topo)*(1.0-DP_OVERLAP)
+    else: t_sync=0.0
+    return dict(t_fwd=t_fwd,t_bwd=t_bwd,t_rec=t_fwd,t_update=t_adam+t_sync,
+                t_off=ppc*8.0/PCIE_OFF, t_offm=ppc*2.0/PCIE_OFF, ppc=ppc)
+
+ACT=68.0
+def act_residency(schedule, b, pp, pos):
+    queue=max(pp-pos,1)
+    if schedule[0] in ('1f1b','zbv'): return float(min(b,queue))
+    v=schedule[1]
+    chunks=min(b*v,(v-1)*pp+queue)
+    return chunks/v
+def bubble_coeff(schedule):
+    if schedule[0]=='1f1b': return 1.0
+    if schedule[0]=='zbv': return 0.0
+    return 1.0/schedule[1]
+
+def stage_mem(spec, m, plan, strat, pos, total_stages, micro_tokens, first, last):
+    tp=float(plan['s_tp'])
+    lps=-(-plan['layers']//plan['s_pp'])
+    params_stage=lps*params_per_layer(m)/tp
+    wg=params_stage*4.0; opt=params_stage*12.0/strat['s_dp']
+    infl=act_residency(strat['schedule'],strat['micro_batches'],total_stages,pos)
+    tokens=float(micro_tokens)
+    apl=2.0*tokens*m['hidden'] if plan['rec'] else ACT*tokens*m['hidden']/tp
+    acts=infl*lps*apl
+    ep=m['vocab']*m['hidden']/tp*((1 if first else 0)+(1 if last else 0))
+    logits=tokens*m['vocab']*6.0/tp if last else 0.0
+    eh=ep*(4.0+12.0/strat['s_dp'])+logits
+    total=wg+opt+acts+eh; off=False
+    if total>spec.mem_bytes()*MEM_SAFETY:
+        retry=params_stage*2.0+0.0+acts+ep*2.0+logits
+        if retry<=spec.mem_bytes()*MEM_SAFETY:
+            total=retry; off=True
+    return total, off
+
+def evaluate(m, groups, strat, micro_tokens, profs):
+    alpha=bubble_coeff(strat['schedule']); b=float(strat['micro_batches'])
+    total_stages=sum(p['s_pp'] for p in strat['plans'])
+    compute=[];update=[];peak=[];feas=True
+    fs=0
+    for (spec,_),plan,prof in zip(groups,strat['plans'],profs):
+        lps=float(-(-plan['layers']//plan['s_pp']))
+        t_comp=lps*(prof['t_fwd']+prof['t_bwd']+(prof['t_rec'] if plan['rec'] else 0.0))
+        t_up=lps*prof['t_update']
+        mem,off=stage_mem(spec,m,plan,strat,fs,total_stages,micro_tokens,fs==0,fs+plan['s_pp']==total_stages)
+        peak.append(mem)
+        if mem>spec.mem_bytes()*MEM_SAFETY: feas=False
+        if off:
+            t_comp+=lps*prof['t_offm']; t_up+=lps*prof['t_off']
+        compute.append(b*t_comp); update.append(t_up); fs+=plan['s_pp']
+    stage_sum=sum(p['s_pp']*compute[g]/b for g,p in enumerate(strat['plans']))
+    it=0.0
+    for g in range(len(groups)):
+        ts=compute[g]/b
+        it=max(it, compute[g]+update[g]+alpha*(stage_sum-ts))
+    return it, peak, feas
+
+def shard_layers(m, groups, shapes, s_dp, mb, micro_tokens, schedule, algo, profs):
+    n=len(groups); L=m['n_layers']
+    t_layer=[p['t_fwd']+p['t_bwd'] for p in profs]
+    denom=sum(s['s_pp']/t for s,t in zip(shapes,t_layer))
+    k=L/denom
+    lps=[max(int(round(k/t)),1) for t in t_layer]
+    assigned=lambda: sum(l*s['s_pp'] for l,s in zip(lps,shapes))
+    guard=0
+    while assigned()!=L and guard<10000:
+        guard+=1
+        if assigned()>L:
+            best=None
+            for i in range(n):
+                if lps[i]<=1: continue
+                load=lps[i]*t_layer[i]
+                if best is None or load>best[1]: best=(i,load)
+            if best is None: break
+            lps[best[0]]-=1
+        else:
+            best=None
+            for i in range(n):
+                load=(lps[i]+1)*t_layer[i]
+                if best is None or load<best[1]: best=(i,load)
+            lps[best[0]]+=1
+    if assigned()!=L:
+        return None
+    plans=[dict(s_pp=s['s_pp'],s_tp=s['s_tp'],layers=l*s['s_pp'],rec=False)
+           for s,l in zip(shapes,lps)]
+    for _ in range(8):
+        strat=dict(s_dp=s_dp,micro_batches=mb,schedule=schedule,plans=plans)
+        it,peak,feas=evaluate(m,groups,strat,micro_tokens,profs)
+        if feas: return plans
+        changed=False
+        for i,plan in enumerate(plans):
+            budget=groups[i][0].mem_bytes()*MEM_SAFETY
+            if peak[i]>budget:
+                if not plan['rec']: plan['rec']=True; changed=True
+                elif plan['layers']>plan['s_pp']:
+                    plan['layers']-=plan['s_pp']; changed=True
+        if changed:
+            short=L-sum(p['layers'] for p in plans)
+            if short>0:
+                missing=short
+                order=sorted(range(n), key=lambda i:t_layer[i])
+                while missing>0:
+                    prog=False
+                    for i in order:
+                        if missing<plans[i]['s_pp']: continue
+                        plans[i]['layers']+=plans[i]['s_pp']; missing-=plans[i]['s_pp']; prog=True
+                        if missing==0: break
+                    if not prog: break
+                if missing!=0: return None
+        else:
+            return None
+    return None
+
+def tp_candidates(n_chips, tp_max):
+    v=[];tp=1
+    while tp<=tp_max:
+        if n_chips%tp==0: v.append(tp)
+        tp*=2
+    return v
+
+def dp_table(m, groups, s_dp, cache):
+    options=[]
+    for spec,n_chips in groups:
+        opts=[]
+        for tp in tp_candidates(n_chips, spec.tp_max()):
+            if n_chips%(tp*s_dp)==0 and n_chips//(tp*s_dp)>=1:
+                key=(spec.kind,tp,s_dp,'ring')
+                if key not in cache: cache[key]=profile(spec,m,tp,m['seq_len'],s_dp,'ring')
+                p=cache[key]
+                opts.append(dict(s_tp=tp,s_pp=n_chips//(tp*s_dp),t_layer=p['t_fwd']+p['t_bwd']))
+        options.append(opts)
+    n=len(groups)
+    ratio=[0.0]*(n+1); sppt=[0.0]*(n+1); maxt=[0.0]*(n+1); leaf=[1]*(n+1)
+    for idx in range(n-1,-1,-1):
+        ratio[idx]=ratio[idx+1]+max([o['s_pp']/o['t_layer'] for o in options[idx]],default=0.0)
+        ms=min([o['s_pp']*o['t_layer'] for o in options[idx]],default=float('inf'))
+        sppt[idx]=sppt[idx+1]+(ms if math.isfinite(ms) else 0.0)
+        maxt[idx]=max(maxt[idx+1], max([o['t_layer'] for o in options[idx]],default=0.0))
+        leaf[idx]=leaf[idx+1]*len(options[idx])
+    return dict(options=options,ratio=ratio,sppt=sppt,maxt=maxt,leaf=leaf)
+
+def update_floor(m, groups, table, s_dp, algo, cache):
+    fl=float('inf')
+    for (spec,_),opts in zip(groups,table['options']):
+        for o in opts:
+            key=(spec.kind,o['s_tp'],s_dp,algo)
+            if key not in cache: cache[key]=profile(spec,m,o['s_tp'],m['seq_len'],s_dp,algo)
+            fl=min(fl,cache[key]['t_update'])
+    return fl
+
+LB_SAFETY=1.0-1e-9
+def bound(mb,L,alpha,ufloor,denom,sweep,own):
+    if denom<=0.0: return float('inf')
+    comp=mb*L/denom
+    bub=alpha*max(sweep-own,0.0)
+    return (comp+bub+ufloor)*LB_SAFETY
+
+def leaf_cost(m, groups, shapes, s_dp, mb, schedule, algo, cache):
+    profs=[]
+    for (spec,_),s in zip(groups,shapes):
+        key=(spec.kind,s['s_tp'],s_dp,algo)
+        if key not in cache: cache[key]=profile(spec,m,s['s_tp'],m['seq_len'],s_dp,algo)
+        profs.append(cache[key])
+    plans=shard_layers(m,groups,shapes,s_dp,mb,m['seq_len'],schedule,algo,profs)
+    if plans is None: return None
+    v = schedule[1] if schedule[0]=='il' else 1
+    if v>1 and any((-(-p['layers']//p['s_pp']))%v!=0 for p in plans): return None
+    strat=dict(s_dp=s_dp,micro_batches=mb,schedule=schedule,plans=plans)
+    it,peak,feas=evaluate(m,groups,strat,m['seq_len'],profs)
+    if not feas: return None
+    return it,plans
+
+def search(m, groups, sequences, schedules, monotone, seed_inc, cache, old_bound=False):
+    # dp candidates
+    dps=[]
+    for d in range(1,int(math.isqrt(sequences))+1):
+        if sequences%d==0:
+            for dp in {d, sequences//d}:
+                if all(nc%dp==0 for _,nc in groups): dps.append(dp)
+    dps=sorted(set(dps))
+    jobs=[(dp,sch) for dp in dps for sch in schedules]
+    incumbent=[seed_inc]
+    stats=dict(ev=0,pr=0)
+    best=[None]
+    tables={}
+    for dp,sch in jobs:
+        if dp not in tables: tables[dp]=dp_table(m,groups,dp,cache)
+        table=tables[dp]
+        ufloor=update_floor(m,groups,table,dp,'auto',cache)
+        mb=sequences//dp
+        alpha=bubble_coeff(sch)
+        opts=table['options']; n=len(groups)
+        def dfs(idx, shapes, ratio, sppt, maxt):
+            if old_bound:
+                denom=ratio+table['ratio'][idx]
+                lb = float('inf') if denom<=0 else mb*m['n_layers']/denom
+            else:
+                lb=bound(mb,m['n_layers'],alpha,ufloor,
+                         ratio+table['ratio'][idx], sppt+table['sppt'][idx],
+                         max(maxt,table['maxt'][idx]))
+            if lb>incumbent[0]:
+                stats['pr']+=table['leaf'][idx]; return
+            if idx==n:
+                stats['ev']+=1
+                r=leaf_cost(m,groups,shapes,dp,mb,sch,'auto',cache)
+                if r is None: return
+                t,plans=r
+                if best[0] is None or t<best[0][0]:
+                    best[0]=(t,dp,sch,[dict(p) for p in plans])
+                incumbent[0]=min(incumbent[0],t)
+                return
+            for o in opts[idx]:
+                if monotone and idx>0 and groups[idx-1][0].kind==groups[idx][0].kind \
+                   and shapes[idx-1]['s_tp']<o['s_tp']: continue
+                shapes.append(dict(s_tp=o['s_tp'],s_pp=o['s_pp']))
+                dfs(idx+1,shapes,ratio+o['s_pp']/o['t_layer'],
+                    sppt+o['s_pp']*o['t_layer'],max(maxt,o['t_layer']))
+                shapes.pop()
+        dfs(0,[],0.0,0.0,0.0)
+    total=sum(tables[dp]['leaf'][0] for dp in dps)*len(schedules)
+    return best[0], stats, total
+
+
+SCHEDULES=[('1f1b',1),('il',2),('zbv',1)]
+
+def check_exp_a():
+    m=H2_100B
+    expa=[(SPECS['A'],256),(SPECS['B'],256),(SPECS['C'],256)]
+    cache={}
+    seqs=2*1024*1024//4096
+    dps=[d for d in range(1,seqs+1) if seqs%d==0 and all(nc%d==0 for _,nc in expa)]
+    viol=0; checked=0; min_margin=float('inf')
+    for dp in dps:
+        table=dp_table(m,expa,dp,cache)
+        uf=update_floor(m,expa,table,dp,'auto',cache)
+        mb=seqs//dp
+        for sch in SCHEDULES:
+            alpha=bubble_coeff(sch)
+            for combo in itertools.product(*table['options']):
+                shapes=[dict(s_tp=o['s_tp'],s_pp=o['s_pp']) for o in combo]
+                ratio=sum(o['s_pp']/o['t_layer'] for o in combo)
+                sppt=sum(o['s_pp']*o['t_layer'] for o in combo)
+                mx=max(o['t_layer'] for o in combo)
+                lb=bound(mb,m['n_layers'],alpha,uf,ratio,sppt,mx)
+                r=leaf_cost(m,expa,shapes,dp,mb,sch,'auto',cache)
+                if r is None: continue
+                checked+=1
+                min_margin=min(min_margin,(r[0]-lb)/r[0])
+                if lb>r[0]: viol+=1
+    print(f"admissibility: {checked} leaves checked, {viol} violations, "
+          f"min rel margin {min_margin:.3e}")
+    assert viol==0 and checked>50
+
+    b_new,st_new,total=search(m,expa,seqs,SCHEDULES,False,float('inf'),cache)
+    b_old,st_old,_=search(m,expa,seqs,SCHEDULES,False,float('inf'),cache,old_bound=True)
+    print(f"exp-a-1 coarse: winner new={b_new[0]:.9f} dp={b_new[1]} sch={b_new[2]}  "
+          f"old={b_old[0]:.9f} dp={b_old[1]} sch={b_old[2]}")
+    print(f"  new: evaluated={st_new['ev']} pruned={st_new['pr']} total={total}")
+    print(f"  old: evaluated={st_old['ev']} pruned={st_old['pr']}")
+    assert (b_new[0],b_new[1],b_new[2],b_new[3])==(b_old[0],b_old[1],b_old[2],b_old[3])
+    assert st_new['ev']+st_new['pr']==total and st_new['pr']>0
+    print("  winners identical, partition exact")
+
+def check_mega():
+    m=H2_100B
+    # memory-descending order: A(96), B(64), D(32 GiB, faster), C(32 GiB)
+    mega=[(SPECS['A'],256),(SPECS['B'],512),(SPECS['D'],256),(SPECS['C'],256)]
+    seqs=4*1024*1024//4096
+    cache={}
+    best,st,total=search(m,mega,seqs,SCHEDULES,False,float('inf'),cache)
+    print(f"mega coarse: best={best[0]:.6f}s dp={best[1]} sch={best[2]} "
+          f"ev={st['ev']} pr={st['pr']} total={total}")
+    assert best is not None and sum(p['layers'] for p in best[3])==m['n_layers']
+    def split(groups, cut=128):
+        out=[]
+        for spec,n in groups:
+            if n<=cut: out.append((spec,n)); continue
+            node=spec.cpn; chunk=max(cut,node); chunk-=chunk%node
+            rest=n
+            while rest>0:
+                take=min(chunk,rest); out.append((spec,take)); rest-=take
+        return out
+    fine=split(mega); dp=best[1]
+    incumbent=[best[0]]; stats=dict(ev=0,pr=0); fbest=[None]
+    table=dp_table(m,fine,dp,cache)
+    print("fine option counts:", [len(o) for o in table['options']],
+          "leaf product:", table['leaf'][0])
+    sys.setrecursionlimit(10000)
+    for sch in SCHEDULES:
+        uf=update_floor(m,fine,table,dp,'auto',cache)
+        mb=seqs//dp; alpha=bubble_coeff(sch); n=len(fine); opts=table['options']
+        def dfs(idx, shapes, ratio, sppt, maxt):
+            lb=bound(mb,m['n_layers'],alpha,uf,ratio+table['ratio'][idx],
+                     sppt+table['sppt'][idx],max(maxt,table['maxt'][idx]))
+            if lb>incumbent[0]:
+                stats['pr']+=table['leaf'][idx]; return
+            if idx==n:
+                stats['ev']+=1
+                r=leaf_cost(m,fine,shapes,dp,mb,sch,'auto',cache)
+                if r is None: return
+                t,plans=r
+                if fbest[0] is None or t<fbest[0][0]: fbest[0]=(t,dp,sch,plans)
+                incumbent[0]=min(incumbent[0],t)
+                return
+            for o in opts[idx]:
+                if idx>0 and fine[idx-1][0].kind==fine[idx][0].kind \
+                   and shapes[idx-1]['s_tp']<o['s_tp']: continue
+                shapes.append(dict(s_tp=o['s_tp'],s_pp=o['s_pp']))
+                dfs(idx+1,shapes,ratio+o['s_pp']/o['t_layer'],
+                    sppt+o['s_pp']*o['t_layer'],max(maxt,o['t_layer']))
+                shapes.pop()
+        dfs(0,[],0.0,0.0,0.0)
+    print(f"mega stage2: ev={stats['ev']} pr={stats['pr']}")
+    win,wg=(fbest[0],fine) if fbest[0] is not None and fbest[0][0]<best[0] else (best,mega)
+    for (spec,n),p in zip(wg,win[3]):
+        assert n==p['s_pp']*p['s_tp']*win[1], (spec.kind,n,p)
+    print(f"mega winner: {win[0]:.6f}s, chip accounting exact")
+
+if __name__=='__main__':
+    check_exp_a()
+    if '--mega' in sys.argv:
+        check_mega()
+    print("OK")

@@ -12,16 +12,28 @@
 //!
 //! Step 3 — cost estimation with the §4.3.2 model; the feasible minimum wins.
 //!
-//! The outer (s_dp × schedule × comm-algo) candidate loop runs on scoped
-//! worker threads (the offline vendor set has no rayon; `std::thread::scope`
+//! # The hot path
+//!
+//! Every per-layer profile the search consumes goes through one shared
+//! [`ProfileCache`], so `profile_layer`-style work is done once per
+//! *distinct* `(chip, s_tp, micro_tokens, s_dp, comm-algo)` shape instead
+//! of per DFS leaf; the leaves hand those profiles straight to
+//! [`shard_layers`] and [`evaluate_with_profiles`].
+//!
+//! The outer (s_dp × schedule × comm-algo) candidates are decomposed onto
+//! a shared work queue of tasks — a whole job, or one top-level DFS branch
+//! of a large job (see `SPLIT_MIN_LEAVES`) — drained by scoped worker
+//! threads (the offline vendor set has no rayon; `std::thread::scope`
 //! plays its role) with incumbent-cost branch-and-bound pruning: a shared
 //! atomic incumbent tracks the best feasible iteration time, and any DFS
-//! subtree whose compute lower bound already exceeds it is cut. Pruning is
-//! *strict* (only subtrees provably worse than the incumbent are cut — the
-//! bound is compute-only, which comm and update terms only add to) and
-//! the final reduction takes the minimum in deterministic candidate order
-//! (s_dp ascending, schedules then comm algos in configured order, DFS
-//! order within), so the parallel search returns bit-identically the same
+//! subtree whose admissible lower bound already exceeds it is cut. The
+//! bound combines a compute packing floor with a schedule-aware bubble
+//! floor and a DP-sync/update floor (see `DfsCtx::lower_bound`), each
+//! provably optimistic, so pruning is *strict*: only subtrees provably
+//! worse than the incumbent are cut, and the final reduction takes the
+//! minimum in deterministic task order (s_dp ascending, schedules then
+//! comm algos in configured order, top-level branches then DFS order
+//! within), so the parallel search returns bit-identically the same
 //! strategy as the sequential one regardless of thread timing.
 //!
 //! The **two-stage** refinement fixes `s_dp` from a coarse pass, then splits
@@ -35,8 +47,12 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::comm::CommAlgo;
-use crate::costmodel::{evaluate, profile_layer, Evaluation, ModelShape, Schedule, Strategy};
+use crate::costmodel::{
+    evaluate_with_profiles, Evaluation, LayerProfile, ModelShape, ProfileCache, Schedule,
+    Strategy,
+};
 use crate::hetero::{ChipGroup, Cluster};
+use crate::topology::NicAssignment;
 
 use super::sharding::shard_layers;
 pub use super::sharding::GroupShape;
@@ -61,6 +77,12 @@ pub struct SearchConfig {
     /// Run the outer (s_dp × schedule) loop on worker threads. The result
     /// is bit-identical to the sequential path either way.
     pub parallel: bool,
+    /// Emit progress lines on stderr — a periodic line (leaves evaluated /
+    /// pruned, incumbent seconds, elapsed) while workers run, plus one
+    /// summary per search stage — so long mega-cluster searches are
+    /// observable. Off by default; purely observational (no effect on the
+    /// searched result).
+    pub progress: bool,
 }
 
 impl Default for SearchConfig {
@@ -72,6 +94,7 @@ impl Default for SearchConfig {
             two_stage: true,
             max_dp: 0,
             parallel: true,
+            progress: false,
         }
     }
 }
@@ -96,9 +119,20 @@ pub struct SearchResult {
     /// Groups (memory-descending) matching strategy.plans — includes the
     /// pseudo-subgroups if the two-stage refinement produced them.
     pub groups: Vec<ChipGroup>,
-    /// Leaf configurations evaluated. With branch-and-bound pruning this
-    /// varies with thread timing; the winning strategy does not.
+    /// Leaf configurations *reached* — fully evaluated past every bound
+    /// cut. Deterministic for a sequential search (pinned by
+    /// `evaluated_plus_pruned_covers_the_whole_space`); under the parallel
+    /// search the exact evaluated/pruned split depends on incumbent timing
+    /// while the winning strategy does not (pinned by
+    /// `parallel_search_matches_sequential_bit_for_bit`).
     pub candidates_explored: usize,
+    /// Leaf configurations skipped by branch-and-bound subtree cuts,
+    /// counted from the per-group option products below each cut point.
+    /// Together with [`SearchResult::candidates_explored`] this splits the
+    /// whole candidate space into reached vs pruned work (exactly, for the
+    /// coarse stage; the monotone-TP rule of the refinement stage makes
+    /// its pruned counts an upper accounting of the restricted subtrees).
+    pub leaves_pruned: usize,
     /// Wall-clock search time.
     pub elapsed_seconds: f64,
 }
@@ -217,6 +251,102 @@ impl Incumbent {
     }
 }
 
+/// Leaf accounting for one task / stage: leaves fully evaluated vs leaves
+/// skipped under branch-and-bound subtree cuts.
+#[derive(Clone, Copy, Debug, Default)]
+struct SearchStats {
+    evaluated: usize,
+    pruned: usize,
+}
+
+/// Milliseconds between `--progress` stderr lines.
+const PROGRESS_INTERVAL_MS: u64 = 500;
+
+/// Shared live counters behind `--progress`: workers bump these as they
+/// evaluate and prune, and whichever worker crosses the reporting interval
+/// first claims the next stderr line via compare-exchange. Disabled, every
+/// call is a single branch on a bool.
+struct SearchProgress {
+    enabled: bool,
+    start: Instant,
+    evaluated: AtomicUsize,
+    pruned: AtomicUsize,
+    /// Milliseconds since `start` of the last printed line.
+    last_report_ms: AtomicU64,
+}
+
+impl SearchProgress {
+    fn new(enabled: bool) -> SearchProgress {
+        SearchProgress {
+            enabled,
+            start: Instant::now(),
+            evaluated: AtomicUsize::new(0),
+            pruned: AtomicUsize::new(0),
+            last_report_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// One leaf evaluated; every 64th leaf checks whether a periodic line
+    /// is due (keeping the hot path to a counter bump).
+    fn leaf(&self, incumbent: &Incumbent) {
+        if !self.enabled {
+            return;
+        }
+        let n = self.evaluated.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % 64 == 0 {
+            self.maybe_report(incumbent);
+        }
+    }
+
+    /// `leaves` skipped under one subtree cut.
+    fn prune(&self, leaves: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.pruned.fetch_add(leaves, Ordering::Relaxed);
+    }
+
+    fn maybe_report(&self, incumbent: &Incumbent) {
+        let elapsed_ms = self.start.elapsed().as_millis() as u64;
+        let last = self.last_report_ms.load(Ordering::Relaxed);
+        if elapsed_ms < last.saturating_add(PROGRESS_INTERVAL_MS) {
+            return;
+        }
+        if self
+            .last_report_ms
+            .compare_exchange(last, elapsed_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // another worker just printed
+        }
+        let inc = incumbent.get();
+        let inc = if inc.is_finite() { format!("{inc:.4}s") } else { "-".to_string() };
+        eprintln!(
+            "[h2 search] progress: {} leaves evaluated, {} pruned, incumbent {inc}, \
+             elapsed {:.1}s",
+            self.evaluated.load(Ordering::Relaxed),
+            self.pruned.load(Ordering::Relaxed),
+            elapsed_ms as f64 / 1000.0,
+        );
+    }
+
+    /// One line per completed search stage (always printed when enabled,
+    /// so even sub-interval searches are observable).
+    fn stage_summary(&self, label: &str, stats: SearchStats, best: f64) {
+        if !self.enabled {
+            return;
+        }
+        let best = if best.is_finite() { format!("{best:.4}s") } else { "none".to_string() };
+        eprintln!(
+            "[h2 search] {label}: {} leaves evaluated, {} pruned, best {best}, \
+             elapsed {:.2}s",
+            stats.evaluated,
+            stats.pruned,
+            self.start.elapsed().as_secs_f64(),
+        );
+    }
+}
+
 /// One (tp, s_pp) option for a group at a fixed s_dp, with its per-layer
 /// fwd+bwd time and its best-case `s_pp/t` packing ratio contribution.
 #[derive(Clone, Copy, Debug)]
@@ -226,6 +356,36 @@ struct TpOption {
     t_layer: f64,
 }
 
+/// Shrinks the lower bound by one part per billion so float rounding in
+/// the bound arithmetic can never nudge an exactly-tight bound past the
+/// true cost (which would break the strict-pruning ⇒ bit-identical-winner
+/// invariant): a *relative* 1e-9 shave dwarfs the relative f64 rounding
+/// error of the few dozen operations on either side (~1e-14) while giving
+/// up a negligible sliver of pruning power.
+const LB_SAFETY: f64 = 1.0 - 1e-9;
+
+/// The admissible-bound arithmetic shared by [`DfsCtx::lower_bound`] and
+/// the admissibility tests. `denom` is the optimistic `Σ s_pp/t` packing
+/// capacity, `sweep` the optimistic `Σ s_pp·t` one-sweep floor, `own` an
+/// upper bound on the unknown bottleneck stage's own per-layer time, and
+/// `update_floor` the cheapest per-layer optimizer update anywhere.
+fn bound_value(
+    micro_batches: f64,
+    n_layers: f64,
+    alpha: f64,
+    update_floor: f64,
+    denom: f64,
+    sweep: f64,
+    own: f64,
+) -> f64 {
+    if denom <= 0.0 {
+        return f64::INFINITY;
+    }
+    let compute = micro_batches * n_layers / denom;
+    let bubble = alpha * (sweep - own).max(0.0);
+    (compute + bubble + update_floor) * LB_SAFETY
+}
+
 struct DfsCtx<'a> {
     model: &'a ModelShape,
     groups: &'a [ChipGroup],
@@ -233,43 +393,106 @@ struct DfsCtx<'a> {
     options: &'a [Vec<TpOption>],
     /// Per group: suffix sums of the maximal `s_pp/t_layer` ratio over the
     /// group's options — the optimistic packing capacity of the not-yet
-    /// assigned groups, used in the compute lower bound.
+    /// assigned groups, used in the compute term of the lower bound.
     ratio_suffix: &'a [f64],
+    /// Per group: suffix sums of the *minimal* `s_pp·t_layer` over the
+    /// group's options — an optimistic floor on the open groups'
+    /// contribution to one full pipeline sweep (every stage holds ≥ 1
+    /// layer), used in the bubble term of the lower bound.
+    sppt_suffix: &'a [f64],
+    /// Per group: suffix max of `t_layer` over the group's options —
+    /// bounds the unknown bottleneck stage's own per-layer time that the
+    /// bubble term subtracts from the sweep.
+    max_t_suffix: &'a [f64],
+    /// Per group: suffix product of option counts — the leaves below a
+    /// node, charged to [`SearchStats::pruned`] on a subtree cut.
+    leaf_suffix: &'a [usize],
     s_dp: usize,
     micro_batches: usize,
     micro_tokens: usize,
     schedule: Schedule,
+    /// `schedule.bubble_coefficient()`, hoisted out of the bound.
+    alpha: f64,
     comm_algo: CommAlgo,
+    /// Admissible floor on the bottleneck group's update term under this
+    /// job's collective algorithm (min `t_update` over every group option).
+    update_floor: f64,
     monotone_tp: bool,
     incumbent: &'a Incumbent,
-    explored: usize,
+    progress: &'a SearchProgress,
+    cache: &'a ProfileCache,
+    /// `groups` as refs, built once (the evaluator's calling convention).
+    grefs: Vec<&'a ChipGroup>,
+    /// Scratch: the current leaf's per-group profiles (cache hits).
+    profiles: Vec<LayerProfile>,
+    stats: SearchStats,
     best: Option<(f64, Strategy, Evaluation)>,
 }
 
 impl<'a> DfsCtx<'a> {
-    /// Lower bound on any completion of the current partial assignment:
-    /// every layer must run somewhere, so the bottleneck stage computes at
-    /// least `L / Σ_g (s_pp_g / t_g)` per microbatch — assigned groups
-    /// contribute their actual ratio, open groups their best case — and
-    /// the iteration costs at least `b ×` that, whatever the schedule
-    /// (bubble, update, recompute and offload terms only add).
-    fn lower_bound(&self, idx: usize, ratio_sum: f64) -> f64 {
-        let denom = ratio_sum + self.ratio_suffix[idx];
-        if denom <= 0.0 {
-            return f64::INFINITY;
-        }
-        self.micro_batches as f64 * self.model.n_layers as f64 / denom
+    /// Admissible lower bound on any completion of the current partial
+    /// assignment. Three provably optimistic terms:
+    ///
+    /// * **compute** — every layer must run somewhere, so the bottleneck
+    ///   stage computes at least `L / Σ_g (s_pp_g / t_g)` per microbatch
+    ///   (assigned groups contribute their actual ratio, open groups their
+    ///   best case) and the iteration pays `b ×` that;
+    /// * **bubble** — each of the `Σ s_pp_g` stages holds ≥ 1
+    ///   layer-per-stage, so one pipeline sweep costs ≥ `Σ_g s_pp_g·t_g`
+    ///   (assigned actual, open per-group minimum) and the bottleneck
+    ///   stage idles through `α ×` (that sweep minus its own stage time,
+    ///   optimistically bounded by the largest per-layer time anywhere);
+    /// * **update** — the bottleneck group pays ≥ one layer-per-stage of
+    ///   its cheapest option's `t_update` (Adam + the exposed DP-sync
+    ///   slice under this job's collective algorithm), floored over every
+    ///   group since the bottleneck is unknown.
+    ///
+    /// Recompute and offload taxes only add, so the bound holds whatever
+    /// the sharding decides; `lower_bound_is_admissible_on_every_leaf`
+    /// checks it against the true evaluated cost leaf by leaf.
+    fn lower_bound(&self, idx: usize, ratio_sum: f64, sppt_sum: f64, max_t: f64) -> f64 {
+        bound_value(
+            self.micro_batches as f64,
+            self.model.n_layers as f64,
+            self.alpha,
+            self.update_floor,
+            ratio_sum + self.ratio_suffix[idx],
+            sppt_sum + self.sppt_suffix[idx],
+            max_t.max(self.max_t_suffix[idx]),
+        )
     }
 
-    fn dfs(&mut self, idx: usize, shapes: &mut Vec<GroupShape>, ratio_sum: f64) {
-        if self.lower_bound(idx, ratio_sum) > self.incumbent.get() {
-            return; // provably worse than the incumbent — prune
+    fn dfs(
+        &mut self,
+        idx: usize,
+        shapes: &mut Vec<GroupShape>,
+        ratio_sum: f64,
+        sppt_sum: f64,
+        max_t: f64,
+    ) {
+        if self.lower_bound(idx, ratio_sum, sppt_sum, max_t) > self.incumbent.get() {
+            // Provably worse than the incumbent — cut the whole subtree.
+            let cut = self.leaf_suffix[idx];
+            self.stats.pruned += cut;
+            self.progress.prune(cut);
+            return;
         }
-        if idx == self.groups.len() {
-            self.explored += 1;
+        let groups = self.groups;
+        if idx == groups.len() {
+            self.stats.evaluated += 1;
+            self.progress.leaf(self.incumbent);
+            self.profiles.clear();
+            for (g, shape) in groups.iter().zip(shapes.iter()) {
+                let p = self.cache.profile(
+                    &g.spec, self.model, shape.s_tp, self.micro_tokens, self.s_dp,
+                    self.comm_algo, NicAssignment::Affinity,
+                );
+                self.profiles.push(p);
+            }
             let sharding = shard_layers(
-                self.model, self.groups, shapes, self.s_dp,
+                self.model, groups, shapes, self.s_dp,
                 self.micro_batches, self.micro_tokens, self.schedule, self.comm_algo,
+                &self.profiles,
             );
             if !sharding.feasible {
                 return;
@@ -287,8 +510,9 @@ impl<'a> DfsCtx<'a> {
                 comm_algo: self.comm_algo,
                 plans: sharding.plans,
             };
-            let grefs: Vec<&ChipGroup> = self.groups.iter().collect();
-            let eval = evaluate(self.model, &grefs, &strategy, self.micro_tokens);
+            let eval = evaluate_with_profiles(
+                self.model, &self.grefs, &strategy, self.micro_tokens, &self.profiles,
+            );
             if !eval.feasible {
                 return;
             }
@@ -299,18 +523,25 @@ impl<'a> DfsCtx<'a> {
             self.incumbent.observe(t);
             return;
         }
-        for opt in &self.options[idx] {
+        let opts: &[TpOption] = &self.options[idx];
+        for opt in opts {
             // Monotone-TP pruning within a chip type (two-stage constraint).
             if self.monotone_tp && idx > 0 {
-                let prev = &self.groups[idx - 1];
-                if prev.spec.kind == self.groups[idx].spec.kind
+                let prev = &groups[idx - 1];
+                if prev.spec.kind == groups[idx].spec.kind
                     && shapes[idx - 1].s_tp < opt.s_tp
                 {
                     continue;
                 }
             }
             shapes.push(GroupShape { s_tp: opt.s_tp, s_pp: opt.s_pp });
-            self.dfs(idx + 1, shapes, ratio_sum + opt.s_pp as f64 / opt.t_layer);
+            self.dfs(
+                idx + 1,
+                shapes,
+                ratio_sum + opt.s_pp as f64 / opt.t_layer,
+                sppt_sum + opt.s_pp as f64 * opt.t_layer,
+                max_t.max(opt.t_layer),
+            );
             shapes.pop();
         }
     }
@@ -320,20 +551,40 @@ impl<'a> DfsCtx<'a> {
 /// DP-collective algorithm.
 type Job = (usize, Schedule, CommAlgo);
 
-/// What one job reports back: leaves explored plus its best feasible
+/// One unit of work on the shared queue: a whole job, or (for large jobs)
+/// one top-level DFS branch of it.
+#[derive(Clone, Copy, Debug)]
+struct Task {
+    /// Index into the job list.
+    job: usize,
+    /// `Some(i)` pins the first group to its i-th TP option (a split
+    /// branch); `None` runs the job's full DFS.
+    root: Option<usize>,
+}
+
+/// What one task reports back: its leaf accounting plus its best feasible
 /// (cost, strategy, evaluation), if any.
-type JobOutcome = (usize, Option<(f64, Strategy, Evaluation)>);
+type JobOutcome = (SearchStats, Option<(f64, Strategy, Evaluation)>);
 
 /// Schedule-independent search tables for one s_dp: per-group TP options
-/// plus the optimistic ratio suffix for the branch-and-bound lower bound —
-/// built once per distinct s_dp and shared across that dp's schedule jobs.
+/// plus the optimistic suffix tables behind the branch-and-bound lower
+/// bound — built once per distinct s_dp and shared across that dp's
+/// schedule and comm-algo jobs.
 struct DpTable {
     s_dp: usize,
     options: Vec<Vec<TpOption>>,
     ratio_suffix: Vec<f64>,
+    sppt_suffix: Vec<f64>,
+    max_t_suffix: Vec<f64>,
+    leaf_suffix: Vec<usize>,
 }
 
-fn dp_table(model: &ModelShape, groups: &[ChipGroup], s_dp: usize) -> DpTable {
+fn dp_table(
+    model: &ModelShape,
+    groups: &[ChipGroup],
+    s_dp: usize,
+    cache: &ProfileCache,
+) -> DpTable {
     let micro_tokens = model.seq_len; // paper: micro batch size pinned to 1
     let options: Vec<Vec<TpOption>> = groups
         .iter()
@@ -342,7 +593,10 @@ fn dp_table(model: &ModelShape, groups: &[ChipGroup], s_dp: usize) -> DpTable {
                 .into_iter()
                 .filter(|tp| g.n_chips % (tp * s_dp) == 0 && g.n_chips / (tp * s_dp) >= 1)
                 .map(|tp| {
-                    let p = profile_layer(&g.spec, model, tp, micro_tokens, s_dp);
+                    // t_fwd/t_bwd are collective-independent, so one
+                    // flat-ring profile prices every job's packing ratio.
+                    let p = cache.profile(&g.spec, model, tp, micro_tokens, s_dp,
+                                          CommAlgo::Ring, NicAssignment::Affinity);
                     TpOption {
                         s_tp: tp,
                         s_pp: g.n_chips / (tp * s_dp),
@@ -352,27 +606,72 @@ fn dp_table(model: &ModelShape, groups: &[ChipGroup], s_dp: usize) -> DpTable {
                 .collect()
         })
         .collect();
-    let mut ratio_suffix = vec![0.0f64; groups.len() + 1];
-    for idx in (0..groups.len()).rev() {
+    let n = groups.len();
+    let mut ratio_suffix = vec![0.0f64; n + 1];
+    let mut sppt_suffix = vec![0.0f64; n + 1];
+    let mut max_t_suffix = vec![0.0f64; n + 1];
+    let mut leaf_suffix = vec![1usize; n + 1];
+    for idx in (0..n).rev() {
         let best_ratio = options[idx]
             .iter()
             .map(|o| o.s_pp as f64 / o.t_layer)
             .fold(0.0f64, f64::max);
         ratio_suffix[idx] = ratio_suffix[idx + 1] + best_ratio;
+        // A group with no options has no completions at all; contribute
+        // nothing rather than poisoning the floor (the DFS dead-ends there
+        // with zero leaves anyway).
+        let min_sppt = options[idx]
+            .iter()
+            .map(|o| o.s_pp as f64 * o.t_layer)
+            .fold(f64::INFINITY, f64::min);
+        sppt_suffix[idx] = sppt_suffix[idx + 1] + if min_sppt.is_finite() { min_sppt } else { 0.0 };
+        let max_t = options[idx].iter().map(|o| o.t_layer).fold(0.0f64, f64::max);
+        max_t_suffix[idx] = max_t_suffix[idx + 1].max(max_t);
+        leaf_suffix[idx] = leaf_suffix[idx + 1].saturating_mul(options[idx].len());
     }
-    DpTable { s_dp, options, ratio_suffix }
+    DpTable { s_dp, options, ratio_suffix, sppt_suffix, max_t_suffix, leaf_suffix }
 }
 
-/// Run the DFS for one (s_dp, schedule, comm-algo) job over its dp's
-/// shared tables.
-fn run_one_job(
+/// Admissible floor on any completion's per-layer update term for one job:
+/// whichever group bottlenecks pays at least one layer-per-stage of its
+/// cheapest option's `t_update` (Adam + the exposed DP-sync slice under
+/// the job's collective algorithm), so the min over every group option is
+/// a true floor. Also pre-warms the cache with every (option, comm-algo)
+/// shape the job's leaves will request.
+fn update_floor(
+    model: &ModelShape,
+    groups: &[ChipGroup],
+    table: &DpTable,
+    s_dp: usize,
+    comm_algo: CommAlgo,
+    cache: &ProfileCache,
+) -> f64 {
+    let micro_tokens = model.seq_len;
+    let mut floor = f64::INFINITY;
+    for (g, opts) in groups.iter().zip(&table.options) {
+        for opt in opts {
+            let p = cache.profile(&g.spec, model, opt.s_tp, micro_tokens, s_dp, comm_algo,
+                                  NicAssignment::Affinity);
+            floor = floor.min(p.t_update);
+        }
+    }
+    floor
+}
+
+/// Run the DFS for one task over its dp's shared tables.
+#[allow(clippy::too_many_arguments)]
+fn run_one_task(
     model: &ModelShape,
     groups: &[ChipGroup],
     sequences: usize,
     job: Job,
+    task_root: Option<usize>,
     table: &DpTable,
+    update_floor: f64,
     monotone_tp: bool,
     incumbent: &Incumbent,
+    cache: &ProfileCache,
+    progress: &SearchProgress,
 ) -> JobOutcome {
     let (s_dp, schedule, comm_algo) = job;
     debug_assert_eq!(s_dp, table.s_dp);
@@ -381,28 +680,63 @@ fn run_one_job(
         groups,
         options: &table.options,
         ratio_suffix: &table.ratio_suffix,
+        sppt_suffix: &table.sppt_suffix,
+        max_t_suffix: &table.max_t_suffix,
+        leaf_suffix: &table.leaf_suffix,
         s_dp,
         micro_batches: sequences / s_dp,
         micro_tokens: model.seq_len,
         schedule,
+        alpha: schedule.bubble_coefficient(),
         comm_algo,
+        update_floor,
         monotone_tp,
         incumbent,
-        explored: 0,
+        progress,
+        cache,
+        grefs: groups.iter().collect(),
+        profiles: Vec::with_capacity(groups.len()),
+        stats: SearchStats::default(),
         best: None,
     };
     let mut shapes = Vec::with_capacity(groups.len());
-    ctx.dfs(0, &mut shapes, 0.0);
-    (ctx.explored, ctx.best)
+    match task_root {
+        None => ctx.dfs(0, &mut shapes, 0.0, 0.0, 0.0),
+        Some(r) => {
+            // One top-level branch of a split job: pin the first group's
+            // option and run the subtree below it (the idx-1 bound check
+            // inside dfs is at least as tight as the job-level one).
+            let opt = table.options[0][r];
+            shapes.push(GroupShape { s_tp: opt.s_tp, s_pp: opt.s_pp });
+            ctx.dfs(
+                1,
+                &mut shapes,
+                opt.s_pp as f64 / opt.t_layer,
+                opt.s_pp as f64 * opt.t_layer,
+                opt.t_layer,
+            );
+        }
+    }
+    (ctx.stats, ctx.best)
 }
 
-/// Run every (s_dp × schedule × comm-algo) job — on scoped worker threads
-/// when `parallel` — and reduce to the minimum in deterministic job order.
+/// Minimum estimated leaf count before a job's top-level DFS branches are
+/// split into separate queue tasks. Splitting makes the work units fine
+/// enough that a couple of huge jobs cannot serialize the pool, while
+/// small jobs stay whole (one queue slot each). The threshold only shapes
+/// scheduling — results are reduced in deterministic task order either
+/// way.
+const SPLIT_MIN_LEAVES: usize = 256;
+
+/// Run every (s_dp × schedule × comm-algo) job through the shared task
+/// queue — drained by scoped worker threads when `parallel` — and reduce
+/// to the minimum in deterministic task order.
 ///
 /// `seed_incumbent` primes the branch-and-bound bound (`f64::INFINITY` for
 /// a fresh search; the coarse best for the two-stage refinement, whose
 /// results are only accepted when strictly better anyway, so seeding
 /// cannot change the outcome — only skip provably useless work).
+#[allow(clippy::too_many_arguments)]
 fn run_jobs(
     model: &ModelShape,
     groups: &[ChipGroup],
@@ -411,51 +745,86 @@ fn run_jobs(
     monotone_tp: bool,
     parallel: bool,
     seed_incumbent: f64,
-) -> (usize, Option<(f64, Strategy, Evaluation)>) {
+    cache: &ProfileCache,
+    progress: &SearchProgress,
+) -> (SearchStats, Option<(f64, Strategy, Evaluation)>) {
     let incumbent = Incumbent::new(seed_incumbent);
     // The TP-option tables are schedule-independent: one per distinct dp,
-    // shared by every schedule job at that dp.
+    // shared by every schedule/comm-algo job at that dp.
     let mut tables: Vec<DpTable> = Vec::new();
     for &(dp, _, _) in jobs {
         if !tables.iter().any(|t| t.s_dp == dp) {
-            tables.push(dp_table(model, groups, dp));
+            tables.push(dp_table(model, groups, dp, cache));
         }
     }
     fn table_for(tables: &[DpTable], dp: usize) -> &DpTable {
         tables.iter().find(|t| t.s_dp == dp).expect("table built for every job dp")
     }
+    // Per-job admissible update floors (also pre-warm the profile cache).
+    // The floor depends only on (dp, comm algo) — dedup across schedules
+    // exactly like the dp tables above.
+    let mut floors: Vec<f64> = Vec::with_capacity(jobs.len());
+    for (i, &(dp, _, algo)) in jobs.iter().enumerate() {
+        let f = match jobs[..i].iter().position(|&(d, _, a)| d == dp && a == algo) {
+            Some(j) => floors[j],
+            None => update_floor(model, groups, table_for(&tables, dp), dp, algo, cache),
+        };
+        floors.push(f);
+    }
+
+    // The shared work queue, in deterministic order: jobs as configured,
+    // large jobs fanned into one task per top-level DFS branch.
+    let mut tasks: Vec<Task> = Vec::new();
+    for (j, &(dp, _, _)) in jobs.iter().enumerate() {
+        let table = table_for(&tables, dp);
+        let roots = table.options.first().map(|o| o.len()).unwrap_or(0);
+        if groups.len() > 1 && roots > 1 && table.leaf_suffix[0] >= SPLIT_MIN_LEAVES {
+            for r in 0..roots {
+                tasks.push(Task { job: j, root: Some(r) });
+            }
+        } else {
+            tasks.push(Task { job: j, root: None });
+        }
+    }
+
     let workers = if parallel {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(jobs.len())
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(tasks.len())
     } else {
         1
     };
 
-    let mut slots: Vec<Option<JobOutcome>> = vec![None; jobs.len()];
+    let mut slots: Vec<Option<JobOutcome>> = vec![None; tasks.len()];
     if workers <= 1 {
-        for (i, job) in jobs.iter().enumerate() {
-            slots[i] = Some(run_one_job(model, groups, sequences, *job,
-                                        table_for(&tables, job.0), monotone_tp, &incumbent));
+        for (i, task) in tasks.iter().enumerate() {
+            let job = jobs[task.job];
+            slots[i] = Some(run_one_task(model, groups, sequences, job, task.root,
+                                         table_for(&tables, job.0), floors[task.job],
+                                         monotone_tp, &incumbent, cache, progress));
         }
     } else {
         let next = AtomicUsize::new(0);
+        let tasks_ref = &tasks;
         let finished = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for _ in 0..workers {
                 let next = &next;
                 let incumbent = &incumbent;
                 let tables = &tables;
+                let floors = &floors;
                 handles.push(scope.spawn(move || {
                     let mut out = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= jobs.len() {
+                        if i >= tasks_ref.len() {
                             break;
                         }
+                        let task = tasks_ref[i];
+                        let job = jobs[task.job];
                         out.push((
                             i,
-                            run_one_job(model, groups, sequences, jobs[i],
-                                        table_for(tables, jobs[i].0), monotone_tp,
-                                        incumbent),
+                            run_one_task(model, groups, sequences, job, task.root,
+                                         table_for(tables, job.0), floors[task.job],
+                                         monotone_tp, incumbent, cache, progress),
                         ));
                     }
                     out
@@ -471,22 +840,23 @@ fn run_jobs(
         }
     }
 
-    // Deterministic reduction: min by cost with ties broken by job order
-    // (s_dp ascending, schedules then comm algos in configured order) —
-    // identical to the sequential scan whatever the thread interleaving
-    // was.
-    let mut explored = 0;
+    // Deterministic reduction: min by cost with ties broken by task order
+    // (s_dp ascending, schedules then comm algos in configured order,
+    // top-level branches then DFS order within) — identical to the
+    // sequential scan whatever the thread interleaving was.
+    let mut stats = SearchStats::default();
     let mut best: Option<(f64, Strategy, Evaluation)> = None;
     for slot in slots {
-        let (n, job_best) = slot.expect("every job produces a result");
-        explored += n;
-        if let Some((t, s, e)) = job_best {
+        let (s, task_best) = slot.expect("every task produces a result");
+        stats.evaluated += s.evaluated;
+        stats.pruned += s.pruned;
+        if let Some((t, st, e)) = task_best {
             if best.as_ref().map(|(bt, _, _)| t < *bt).unwrap_or(true) {
-                best = Some((t, s, e));
+                best = Some((t, st, e));
             }
         }
     }
-    (explored, best)
+    (stats, best)
 }
 
 /// Split each homogeneous group into `split`-chip pseudo-heterogeneous
@@ -549,9 +919,19 @@ pub fn search(
         }
     }
 
+    // One profile cache for the whole search: both stages, every worker.
+    let cache = ProfileCache::new();
+    let progress = SearchProgress::new(cfg.progress);
+
     // Stage 1: coarse search, one group per chip type.
-    let (mut explored, coarse) =
-        run_jobs(model, &groups, sequences, &jobs, false, cfg.parallel, f64::INFINITY);
+    let (stats, coarse) =
+        run_jobs(model, &groups, sequences, &jobs, false, cfg.parallel, f64::INFINITY,
+                 &cache, &progress);
+    progress.stage_summary(
+        "coarse stage",
+        stats,
+        coarse.as_ref().map(|c| c.0).unwrap_or(f64::INFINITY),
+    );
     let coarse = match coarse {
         Some(c) => c,
         None => bail!("no feasible strategy found for `{}`", cluster.name),
@@ -563,7 +943,8 @@ pub fn search(
             strategy,
             eval,
             groups,
-            candidates_explored: explored,
+            candidates_explored: stats.evaluated,
+            leaves_pruned: stats.pruned,
             elapsed_seconds: start.elapsed().as_secs_f64(),
         });
     }
@@ -578,9 +959,14 @@ pub fn search(
         }
     }
     let fine_groups = split_groups(&groups, cfg.group_split);
-    let (explored2, fine) =
-        run_jobs(model, &fine_groups, sequences, &fine_jobs, true, cfg.parallel, coarse.0);
-    explored += explored2;
+    let (stats2, fine) =
+        run_jobs(model, &fine_groups, sequences, &fine_jobs, true, cfg.parallel, coarse.0,
+                 &cache, &progress);
+    progress.stage_summary(
+        "refine stage",
+        stats2,
+        fine.as_ref().map(|f| f.0).unwrap_or(coarse.0),
+    );
 
     // Keep whichever stage produced the better feasible strategy.
     let use_fine = fine.as_ref().map(|(t, _, _)| *t < coarse.0).unwrap_or(false);
@@ -596,7 +982,8 @@ pub fn search(
         strategy,
         eval,
         groups: out_groups,
-        candidates_explored: explored,
+        candidates_explored: stats.evaluated + stats2.evaluated,
+        leaves_pruned: stats.pruned + stats2.pruned,
         elapsed_seconds: start.elapsed().as_secs_f64(),
     })
 }
@@ -699,9 +1086,9 @@ mod tests {
 
     #[test]
     fn parallel_search_matches_sequential_bit_for_bit() {
-        // The Table 8 fixture: the worker-thread path with shared-incumbent
-        // pruning must return the identical strategy and cost as the
-        // sequential scan.
+        // The Table 8 fixture: the work-queue path with shared-incumbent
+        // pruning and branch-split tasks must return the identical strategy
+        // and cost as the sequential scan.
         let exp = experiment("exp-a-1").unwrap();
         let par = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
                          &SearchConfig { parallel: true, ..Default::default() }).unwrap();
@@ -745,7 +1132,7 @@ mod tests {
 
     #[test]
     fn parallel_comm_algo_search_matches_sequential_bit_for_bit() {
-        // The comm-algo axis rides the same worker-thread machinery: with
+        // The comm-algo axis rides the same work-queue machinery: with
         // every algorithm (and the auto selector) in the job list, the
         // parallel reduction must return exactly the sequential winner.
         let exp = experiment("exp-a-1").unwrap();
@@ -801,5 +1188,138 @@ mod tests {
         let fine = search(&H2_100B, &exp.cluster, exp.gbs_tokens,
                           &SearchConfig::default()).unwrap();
         assert!(fine.eval.iteration_seconds <= coarse.eval.iteration_seconds * 1.0001);
+    }
+
+    #[test]
+    fn lower_bound_is_admissible_on_every_leaf() {
+        // The pruning invariant in one test: for every complete assignment
+        // of the Exp-A space (several dps × every schedule), the bound at
+        // the leaf must not exceed the true evaluated iteration time.
+        // Internal-node bounds are ≤ their leaves' bounds by construction
+        // (suffix tables are per-group optima), so leaf admissibility
+        // covers the whole tree.
+        let exp = experiment("exp-a-1").unwrap();
+        let groups: Vec<ChipGroup> =
+            exp.cluster.groups_by_memory_desc().into_iter().cloned().collect();
+        let sequences = exp.gbs_tokens / H2_100B.seq_len;
+        let cache = ProfileCache::new();
+        let mut checked = 0usize;
+        for &s_dp in &[2usize, 8] {
+            let table = dp_table(&H2_100B, &groups, s_dp, &cache);
+            let counts: Vec<usize> = table.options.iter().map(|o| o.len()).collect();
+            assert!(counts.iter().all(|&c| c > 0));
+            for schedule in Schedule::SEARCH_SPACE {
+                let comm_algo = CommAlgo::Auto;
+                let floor = update_floor(&H2_100B, &groups, &table, s_dp, comm_algo, &cache);
+                assert!(floor.is_finite() && floor > 0.0);
+                // Odometer over every option combination.
+                let mut idxs = vec![0usize; counts.len()];
+                loop {
+                    let mut shapes = Vec::with_capacity(counts.len());
+                    let (mut ratio, mut sppt, mut max_t) = (0.0f64, 0.0f64, 0.0f64);
+                    for (g, &oi) in idxs.iter().enumerate() {
+                        let opt = table.options[g][oi];
+                        shapes.push(GroupShape { s_tp: opt.s_tp, s_pp: opt.s_pp });
+                        ratio += opt.s_pp as f64 / opt.t_layer;
+                        sppt += opt.s_pp as f64 * opt.t_layer;
+                        max_t = max_t.max(opt.t_layer);
+                    }
+                    let micro_batches = sequences / s_dp;
+                    let lb = bound_value(
+                        micro_batches as f64,
+                        H2_100B.n_layers as f64,
+                        schedule.bubble_coefficient(),
+                        floor,
+                        ratio + table.ratio_suffix[counts.len()],
+                        sppt + table.sppt_suffix[counts.len()],
+                        max_t.max(table.max_t_suffix[counts.len()]),
+                    );
+                    let profiles: Vec<LayerProfile> = groups
+                        .iter()
+                        .zip(&shapes)
+                        .map(|(g, s)| {
+                            cache.profile(&g.spec, &H2_100B, s.s_tp, H2_100B.seq_len,
+                                          s_dp, comm_algo, NicAssignment::Affinity)
+                        })
+                        .collect();
+                    let sharding = shard_layers(
+                        &H2_100B, &groups, &shapes, s_dp, micro_batches, H2_100B.seq_len,
+                        schedule, comm_algo, &profiles,
+                    );
+                    if sharding.feasible {
+                        let strategy = Strategy {
+                            s_dp,
+                            micro_batches,
+                            schedule,
+                            comm_algo,
+                            plans: sharding.plans,
+                        };
+                        let grefs: Vec<&ChipGroup> = groups.iter().collect();
+                        let eval = evaluate_with_profiles(
+                            &H2_100B, &grefs, &strategy, H2_100B.seq_len, &profiles,
+                        );
+                        checked += 1;
+                        assert!(
+                            lb <= eval.iteration_seconds,
+                            "bound {lb} exceeds true cost {} (dp {s_dp}, {schedule}, \
+                             shapes {shapes:?})",
+                            eval.iteration_seconds
+                        );
+                        // The bound should also be doing real work: within
+                        // an order of magnitude of the truth, not a
+                        // degenerate 0.
+                        assert!(lb > 0.0);
+                    }
+                    // Advance the odometer.
+                    let mut g = counts.len();
+                    loop {
+                        if g == 0 {
+                            break;
+                        }
+                        g -= 1;
+                        idxs[g] += 1;
+                        if idxs[g] < counts[g] {
+                            break;
+                        }
+                        idxs[g] = 0;
+                        if g == 0 {
+                            break;
+                        }
+                    }
+                    if idxs.iter().all(|&i| i == 0) {
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(checked > 50, "only {checked} feasible leaves checked");
+    }
+
+    #[test]
+    fn evaluated_plus_pruned_covers_the_whole_space() {
+        // Sequentially (fixed config), the reported (evaluated, pruned)
+        // pair is deterministic and partitions the entire coarse candidate
+        // space: every leaf is either reached or under exactly one cut.
+        let exp = experiment("exp-a-1").unwrap();
+        let cfg = SearchConfig { parallel: false, two_stage: false, ..Default::default() };
+        let r1 = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).unwrap();
+        let r2 = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg).unwrap();
+        assert_eq!(r1.candidates_explored, r2.candidates_explored);
+        assert_eq!(r1.leaves_pruned, r2.leaves_pruned);
+
+        let groups: Vec<ChipGroup> =
+            exp.cluster.groups_by_memory_desc().into_iter().cloned().collect();
+        let sequences = exp.gbs_tokens / H2_100B.seq_len;
+        let cache = ProfileCache::new();
+        let mut total = 0usize;
+        for dp in dp_candidates(sequences, &groups, cfg.max_dp) {
+            let table = dp_table(&H2_100B, &groups, dp, &cache);
+            total += table.leaf_suffix[0] * cfg.schedules.len() * cfg.comm_algos.len();
+        }
+        assert_eq!(r1.candidates_explored + r1.leaves_pruned, total,
+                   "evaluated {} + pruned {} != space {total}",
+                   r1.candidates_explored, r1.leaves_pruned);
+        // The tightened bound must actually cut most of the space here.
+        assert!(r1.leaves_pruned > 0, "no pruning on the Exp-A fixture?");
     }
 }

@@ -167,6 +167,7 @@ fn parse_search(v: &Value) -> Result<SearchConfig> {
         two_stage: v.opt("two_stage").map(|x| x.bool()).transpose()?.unwrap_or(d.two_stage),
         max_dp: v.opt("max_dp").map(|x| x.usize()).transpose()?.unwrap_or(d.max_dp),
         parallel: v.opt("parallel").map(|x| x.bool()).transpose()?.unwrap_or(d.parallel),
+        progress: v.opt("progress").map(|x| x.bool()).transpose()?.unwrap_or(d.progress),
     })
 }
 

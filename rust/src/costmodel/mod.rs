@@ -19,11 +19,12 @@ use crate::comm::CommAlgo;
 use crate::hetero::{ChipGroup, Cluster};
 
 pub use memory::{stage_memory_bytes, MemoryBreakdown};
-pub use profile::{profile_layer, profile_layer_comm, LayerProfile};
+pub use profile::{profile_layer, profile_layer_comm, LayerProfile, ProfileCache};
 pub use schedule::Schedule;
 
 /// Transformer shape consumed by the analytic model (Table 4 for the 100B).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Hashable so it can key the [`ProfileCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ModelShape {
     /// Decoder layer count.
     pub n_layers: usize,
@@ -171,6 +172,11 @@ pub const MEMORY_SAFETY: f64 = 0.92;
 /// order and positionally matched with `strategy.plans`. The bubble
 /// coefficient and activation residency come from `strategy.schedule`;
 /// the DP gradient-sync collective from `strategy.comm_algo`.
+///
+/// Profiles each group on the fly; hot callers that already hold the
+/// per-group [`LayerProfile`]s (HeteroAuto's DFS leaves, the sharding
+/// refinement) use [`evaluate_with_profiles`] instead, which is
+/// bit-identical given the same profiles.
 pub fn evaluate(
     model: &ModelShape,
     groups: &[&ChipGroup],
@@ -178,6 +184,35 @@ pub fn evaluate(
     micro_tokens: usize,
 ) -> Evaluation {
     assert_eq!(groups.len(), strategy.plans.len());
+    // The closed form has no NIC-policy axis (it models no reshard
+    // traffic either — both are simulator ablations): DP sync is
+    // priced at the paper-default affine mapping.
+    let profiles: Vec<LayerProfile> = groups
+        .iter()
+        .zip(&strategy.plans)
+        .map(|(g, plan)| {
+            profile_layer_comm(
+                &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
+                crate::topology::NicAssignment::Affinity,
+            )
+        })
+        .collect();
+    evaluate_with_profiles(model, groups, strategy, micro_tokens, &profiles)
+}
+
+/// [`evaluate`] over pre-computed per-group profiles (positionally matched
+/// with `groups`/`strategy.plans`, priced under `strategy.comm_algo` and
+/// the affine NIC mapping — exactly what [`evaluate`] computes inline, or
+/// what a [`ProfileCache`] returns for those keys).
+pub fn evaluate_with_profiles(
+    model: &ModelShape,
+    groups: &[&ChipGroup],
+    strategy: &Strategy,
+    micro_tokens: usize,
+    profiles: &[LayerProfile],
+) -> Evaluation {
+    assert_eq!(groups.len(), strategy.plans.len());
+    assert_eq!(groups.len(), profiles.len());
     let alpha = strategy.schedule.bubble_coefficient();
     let b = strategy.micro_batches as f64;
     let total_stages = strategy.total_stages();
@@ -189,14 +224,7 @@ pub fn evaluate(
 
     // Stage positions are assigned in group order (memory-descending).
     let mut first_stage = 0usize;
-    for (g, plan) in groups.iter().zip(&strategy.plans) {
-        // The closed form has no NIC-policy axis (it models no reshard
-        // traffic either — both are simulator ablations): DP sync is
-        // priced at the paper-default affine mapping.
-        let prof = profile_layer_comm(
-            &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
-            crate::topology::NicAssignment::Affinity,
-        );
+    for ((g, plan), prof) in groups.iter().zip(&strategy.plans).zip(profiles) {
         let lps = plan.layers_per_stage() as f64;
         let mut t_comp = lps
             * (prof.t_fwd + prof.t_bwd + if plan.recompute { prof.t_recompute } else { 0.0 });

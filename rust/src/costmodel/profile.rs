@@ -18,14 +18,20 @@
 //! executions (`h2 profile`), which is what keeps HeteroAuto honest: it
 //! only ever consumes this table, exactly like the paper's searcher.
 
+use std::collections::HashMap;
+use std::sync::RwLock;
+
 use crate::comm::{allreduce_cost, CommAlgo, CommTopology};
-use crate::hetero::ChipSpec;
+use crate::hetero::{ChipKind, ChipSpec};
 use crate::topology::NicAssignment;
 
 use super::ModelShape;
 
 /// Profiled per-layer times (seconds) for one (chip, TP, DP) combination.
-#[derive(Clone, Copy, Debug)]
+///
+/// Equality is exact (bit-level on every field) — what the profile-cache
+/// parity tests rely on.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LayerProfile {
     /// Forward seconds per layer per microbatch.
     pub t_fwd: f64,
@@ -138,6 +144,70 @@ pub fn profile_layer_comm(
                    t_offload_micro, params_per_chip }
 }
 
+/// One distinct profile shape: everything [`profile_layer_comm`] depends on.
+type ProfileKey = (ModelShape, ChipKind, usize, usize, usize, CommAlgo, NicAssignment);
+
+/// Shared, thread-safe memoization of [`profile_layer_comm`].
+///
+/// HeteroAuto's hot path evaluates the same per-layer profile at every DFS
+/// leaf and sharding-refinement round; the number of *distinct* shapes —
+/// `(model, chip kind, s_tp, micro_tokens, s_dp, comm algo, NIC policy)`
+/// tuples — is tiny by comparison (tens per search, even at paper scale).
+/// A cache hit returns the stored [`LayerProfile`] verbatim, so cached and
+/// uncached paths are bit-identical (property-tested).
+///
+/// The key includes the [`ChipKind`] but not the numbers behind it, so a
+/// cache must not outlive a [`crate::hetero::register_custom`] call that
+/// redefines a custom chip — the search creates one cache per invocation,
+/// which also keeps entries from piling up across unrelated models.
+#[derive(Debug, Default)]
+pub struct ProfileCache {
+    map: RwLock<HashMap<ProfileKey, LayerProfile>>,
+}
+
+impl ProfileCache {
+    /// An empty cache. Cheap; intended to live for one search/evaluation.
+    pub fn new() -> ProfileCache {
+        ProfileCache::default()
+    }
+
+    /// The cached (or freshly computed and stored) [`profile_layer_comm`]
+    /// result for this shape — bit-identical to calling the profiler
+    /// directly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn profile(
+        &self,
+        spec: &ChipSpec,
+        model: &ModelShape,
+        tp: usize,
+        micro_tokens: usize,
+        dp: usize,
+        comm_algo: CommAlgo,
+        assign: NicAssignment,
+    ) -> LayerProfile {
+        let key = (*model, spec.kind, tp, micro_tokens, dp, comm_algo, assign);
+        if let Some(p) = self.map.read().expect("profile cache poisoned").get(&key) {
+            return *p;
+        }
+        // Compute outside any lock; a racing duplicate insert stores the
+        // identical value (the profiler is deterministic), so last-write-
+        // wins is harmless.
+        let p = profile_layer_comm(spec, model, tp, micro_tokens, dp, comm_algo, assign);
+        self.map.write().expect("profile cache poisoned").insert(key, p);
+        p
+    }
+
+    /// Distinct shapes profiled so far.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("profile cache poisoned").len()
+    }
+
+    /// Whether nothing has been profiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +276,39 @@ mod tests {
         // A layer of the 100B on Chip-A/TP4 should be O(10ms), not O(1s).
         let p = profile_layer(&spec(ChipKind::A), &H2_100B, 4, 4096, 4);
         assert!(p.t_fwd > 1e-3 && p.t_fwd < 0.1, "t_fwd {}", p.t_fwd);
+    }
+
+    #[test]
+    fn cached_profiles_are_bit_identical_to_uncached() {
+        // Property: for arbitrary shapes, the cache returns exactly what
+        // the profiler computes — on first fill and on every hit after.
+        use crate::costmodel::{H2_100B, H2_20B};
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+
+        let cache = ProfileCache::new();
+        prop::check(200, |rng: &mut Rng| {
+            let kinds = [ChipKind::A, ChipKind::B, ChipKind::C, ChipKind::D, ChipKind::A100];
+            let s = spec(*rng.choose(&kinds));
+            let model = if rng.f64() < 0.5 { H2_100B } else { H2_20B };
+            let tp = 1usize << rng.usize(0, 5); // 1..16
+            let micro_tokens = *rng.choose(&[1024usize, 2048, 4096]);
+            let dp = rng.usize(1, 65);
+            let algo = *rng.choose(&CommAlgo::ALL);
+            let assign = if rng.f64() < 0.5 {
+                NicAssignment::Affinity
+            } else {
+                NicAssignment::NonAffinity
+            };
+            let direct = profile_layer_comm(&s, &model, tp, micro_tokens, dp, algo, assign);
+            let first = cache.profile(&s, &model, tp, micro_tokens, dp, algo, assign);
+            let hit = cache.profile(&s, &model, tp, micro_tokens, dp, algo, assign);
+            prop::assert_prop(
+                first == direct && hit == direct,
+                format!("cache diverged for {s:?} tp={tp} dp={dp} {algo} {assign:?}"),
+            )
+        });
+        assert!(!cache.is_empty());
+        assert!(cache.len() <= 200);
     }
 }

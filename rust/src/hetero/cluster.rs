@@ -104,7 +104,11 @@ pub struct Experiment {
     pub gbs_tokens: usize,
 }
 
-/// Look up a Table 7 experiment by its index string.
+/// Look up an experiment by its index string: the Table 7 configurations
+/// (`exp-a-1` .. `exp-d`) plus `exp-mega`, the beyond-Table-7 paper-scale
+/// fixture backing the §4.3.3 headline claim — 1,280 chips across all
+/// four vendors (whole-node groups with their Table 3 NIC shapes), sized
+/// so the two-stage 128-chip refinement splits every group.
 pub fn experiment(index: &str) -> Result<Experiment> {
     let m = 1024 * 1024;
     let (cluster, gbs) = match index {
@@ -115,12 +119,22 @@ pub fn experiment(index: &str) -> Result<Experiment> {
         "exp-c-1" => (Cluster::new("Exp-C", vec![(ChipKind::A, 384), (ChipKind::B, 1024)]), 4 * m),
         "exp-c-2" => (Cluster::new("Exp-C", vec![(ChipKind::A, 384), (ChipKind::B, 1024)]), 8 * m),
         "exp-d" => (Cluster::new("Exp-D", vec![(ChipKind::A, 384), (ChipKind::B, 2048)]), 8 * m),
-        _ => bail!("unknown experiment `{index}` (expected exp-a-1 .. exp-d)"),
+        "exp-mega" | "mega" => (
+            Cluster::new(
+                "Exp-Mega",
+                vec![(ChipKind::A, 256), (ChipKind::B, 512), (ChipKind::C, 256),
+                     (ChipKind::D, 256)],
+            ),
+            4 * m,
+        ),
+        _ => bail!("unknown experiment `{index}` (expected exp-a-1 .. exp-d, or exp-mega)"),
     };
     Ok(Experiment { index: Box::leak(index.to_string().into_boxed_str()), cluster, gbs_tokens: gbs })
 }
 
-/// Every Table 7 experiment index, in paper order.
+/// Every Table 7 experiment index, in paper order (`exp-mega` is a
+/// beyond-Table-7 scale fixture and deliberately not listed — the paper
+/// reports no baseline numbers for it).
 pub const ALL_EXPERIMENTS: [&str; 7] =
     ["exp-a-1", "exp-a-2", "exp-b-1", "exp-b-2", "exp-c-1", "exp-c-2", "exp-d"];
 
@@ -159,6 +173,25 @@ mod tests {
             .iter().map(|g| g.spec.kind).collect();
         assert_eq!(order[0], ChipKind::A); // 96 GB
         assert_eq!(order[1], ChipKind::B); // 64 GB
+    }
+
+    #[test]
+    fn mega_fixture_is_paper_scale() {
+        // The §4.3.3 headline scenario: over 1,000 chips, all four vendors,
+        // every group a whole number of nodes and big enough that the
+        // 128-chip two-stage split fragments it.
+        let e = experiment("exp-mega").unwrap();
+        assert_eq!(e.cluster.total_chips(), 1280);
+        assert!(e.cluster.total_chips() > 1000);
+        assert_eq!(e.cluster.n_types(), 4);
+        for g in &e.cluster.groups {
+            assert_eq!(g.n_chips % g.spec.chips_per_node, 0, "{}", g.spec.kind);
+            assert!(g.n_chips > 128, "{} should split in stage 2", g.spec.kind);
+        }
+        // The short alias resolves to the same fixture.
+        assert_eq!(experiment("mega").unwrap().cluster.total_chips(), 1280);
+        // Not a Table 7 row: the paper-table drivers must not pick it up.
+        assert!(!ALL_EXPERIMENTS.contains(&"exp-mega"));
     }
 
     #[test]

@@ -71,6 +71,7 @@ fn print_help() {
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
     println!("              [--split 128] [--sequential] [--emit-plan plan.json]");
+    println!("              [--progress]  periodic stderr progress lines");
     println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--reshard srag|bcast|naive]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
@@ -159,6 +160,7 @@ fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchC
         two_stage: if args.has("no-two-stage") { false } else { base.two_stage },
         max_dp: args.usize_or("max-dp", base.max_dp)?,
         parallel: if args.has("sequential") { false } else { base.parallel },
+        progress: args.has("progress") || base.progress,
     })
 }
 
@@ -397,9 +399,10 @@ fn cmd_search(args: &Args) -> Result<()> {
     let (cluster, gbs) = resolve_cluster(args, config.as_ref(), None)?;
     let cfg = resolve_search_config(args, config.as_ref())?;
     let r = search(&H2_100B, &cluster, gbs, &cfg)?;
-    println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {}",
+    println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {} \
+              ({} leaves pruned)",
              cluster.name, cluster.total_chips(), gbs >> 20,
-             r.candidates_explored, fmt_duration(r.elapsed_seconds));
+             r.candidates_explored, fmt_duration(r.elapsed_seconds), r.leaves_pruned);
     let mut t = Table::new(&["group", "chips", "s_pp", "s_tp", "layers", "recompute"]);
     for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
         t.row(vec![

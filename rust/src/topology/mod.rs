@@ -16,7 +16,7 @@
 use crate::hetero::{ChipKind, ChipSpec};
 
 /// How chips are mapped to NICs for cross-node communication.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum NicAssignment {
     /// Each chip uses the NIC behind its own PCIe switch (paper's §5 fix).
     Affinity,

@@ -175,6 +175,42 @@ fn schedule_flag_pins_search_and_reschedules_plans() {
 }
 
 #[test]
+fn search_progress_flag_reports_on_stderr_and_is_off_by_default() {
+    // --progress: at least the per-stage summary lines land on stderr
+    // (periodic lines appear only on long searches), and the searched
+    // result is untouched.
+    let with = h2_bin()
+        .args(["search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1", "--progress"])
+        .output()
+        .unwrap();
+    assert!(with.status.success());
+    let stderr = String::from_utf8_lossy(&with.stderr);
+    assert!(stderr.contains("[h2 search]"),
+            "expected progress lines on stderr:\n{stderr}");
+    assert!(stderr.contains("coarse stage") && stderr.contains("refine stage"),
+            "expected one summary per stage:\n{stderr}");
+
+    // Off by default: stderr stays silent.
+    let without = h2_bin()
+        .args(["search", "--cluster", "A=16,B=16", "--gbs-mtokens", "1"])
+        .output()
+        .unwrap();
+    assert!(without.status.success());
+    assert!(!String::from_utf8_lossy(&without.stderr).contains("[h2 search]"),
+            "progress must be opt-in");
+
+    // Purely observational: the winning strategy line is identical.
+    let pick = |out: &std::process::Output| {
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .find(|l| l.starts_with("s_dp"))
+            .map(str::to_string)
+            .expect("search prints its strategy line")
+    };
+    assert_eq!(pick(&with), pick(&without));
+}
+
+#[test]
 fn comm_algo_flag_pins_search_and_overrides_plans() {
     use h2::comm::CommAlgo;
     let dir = tmp_dir("comm_algo");

@@ -95,6 +95,34 @@ fn per_schedule_and_algo_parity_on_searched_plans() {
 }
 
 #[test]
+fn mega_cluster_two_stage_search_roundtrips_through_plan_json() {
+    // The paper-scale scenario end to end: 1,280 chips across all four
+    // vendors, full two-stage search (every group splits into 128-chip
+    // subgroups), winner packaged as a plan that survives the JSON
+    // round-trip bit for bit.
+    use h2::plan::ExecutionPlan;
+    let exp = experiment("exp-mega").unwrap();
+    assert!(exp.cluster.total_chips() > 1000);
+    assert_eq!(exp.cluster.n_types(), 4);
+    let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &SearchConfig::default()).unwrap();
+    assert!(r.eval.feasible);
+    assert_eq!(r.strategy.total_layers(), H2_100B.n_layers);
+    assert!(r.candidates_explored > 0);
+    // Exact chip accounting across every (sub)group.
+    for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
+        assert_eq!(g.n_chips, p.s_pp * p.s_tp * r.strategy.s_dp, "{}", g.spec.kind);
+    }
+    let strategy = r.strategy.clone();
+    let eval_iter = r.eval.iteration_seconds;
+    let plan = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+    assert!(plan.validate().is_ok());
+    let loaded = ExecutionPlan::from_json_str(&plan.to_json_string()).unwrap();
+    assert_eq!(loaded, plan);
+    assert_eq!(loaded.strategy, strategy);
+    assert_eq!(loaded.evaluate().iteration_seconds, eval_iter);
+}
+
+#[test]
 fn search_monotone_in_batch_size() {
     // Larger global batch must never raise the searched cost-per-token.
     let exp = experiment("exp-a-1").unwrap();
