@@ -18,10 +18,10 @@
 //! laptop numbers). `--write-baseline` snapshots the current p50s
 //! instead, for regenerating the file on a reference machine.
 
-use h2::auto::{search, SearchConfig};
+use h2::auto::{replan, search, search_with_cache, ClusterDelta, ReplanOptions, SearchConfig};
 use h2::comm::collectives::{hierarchical_allreduce, ring_allreduce};
 use h2::comm::{allreduce_cost, fabric, CommAlgo, CommTopology, LinkTime};
-use h2::costmodel::{GroupPlan, Schedule, Strategy, H2_100B};
+use h2::costmodel::{GroupPlan, ProfileCache, Schedule, Strategy, H2_100B};
 use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind};
 use h2::sim::{simulate_iteration, SimOptions};
 use h2::topology::NicAssignment;
@@ -89,6 +89,40 @@ fn main() {
     b.run("search: mega-cluster two-stage", || {
         let r = search(&H2_100B, &mega.cluster, mega.gbs_tokens, &two_stage).unwrap();
         std::hint::black_box(r.eval.iteration_seconds);
+    });
+
+    // Elastic re-plan: exp-mega loses one node and re-plans over the
+    // profile cache the incumbent search warmed — the recovery half of
+    // the restart-vs-recovery margin, so it must stay far cheaper than
+    // the cold two-stage search above. Victim and mode are fixed in
+    // setup: the first node (largest-first, TP >= 2 preferred) whose
+    // pipeline-preserving re-plan succeeds, else a full re-plan.
+    let cache = ProfileCache::new();
+    let warm =
+        search_with_cache(&H2_100B, &mega.cluster, mega.gbs_tokens, &two_stage, &cache).unwrap();
+    let incumbent = warm.into_plan(&H2_100B, &mega.cluster, mega.gbs_tokens);
+    let mut victims: Vec<_> =
+        incumbent.stage_groups.iter().zip(&incumbent.strategy.plans).collect();
+    victims.sort_by_key(|(g, p)| (p.s_tp < 2, std::cmp::Reverse(g.n_chips)));
+    let keep = ReplanOptions::default();
+    let mut case = None;
+    for (g, _) in &victims {
+        let delta = ClusterDelta::exclude(g.spec.kind, g.spec.chips_per_node);
+        if replan(&incumbent, &delta, &cache, &keep).is_ok() {
+            case = Some((delta, keep));
+            break;
+        }
+    }
+    let (delta, ropts) = case.unwrap_or_else(|| {
+        let g = victims[0].0;
+        (
+            ClusterDelta::exclude(g.spec.kind, g.spec.chips_per_node),
+            ReplanOptions { keep_pipeline: false, ..keep },
+        )
+    });
+    b.run("replan: exp-mega after chip loss", || {
+        let out = replan(&incumbent, &delta, &cache, &ropts).unwrap();
+        std::hint::black_box(out.plan.plan_epoch);
     });
 
     // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs

@@ -5,9 +5,16 @@
 //! ([`crate::costmodel::Schedule`]); the outer candidate loop runs on
 //! worker threads with branch-and-bound pruning and a deterministic
 //! reduction ([`SearchConfig::parallel`]).
+//!
+//! [`replan`] is the incremental entry point of the elastic loop
+//! ([`crate::elastic`]): it re-plans an incumbent execution plan after
+//! chip loss, reusing the original search's
+//! [`crate::costmodel::ProfileCache`].
 
+pub mod replan;
 pub mod search;
 pub mod sharding;
 
-pub use search::{search, SearchConfig, SearchResult};
+pub use replan::{replan, ClusterDelta, ReplanOptions, ReplanOutcome};
+pub use search::{search, search_with_cache, SearchConfig, SearchResult};
 pub use sharding::{shard_layers, GroupShape, Sharding};

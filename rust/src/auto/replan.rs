@@ -1,0 +1,590 @@
+//! Incremental re-planning after chip loss — the planner half of the
+//! elastic loop (see [`crate::elastic`]).
+//!
+//! [`replan`] takes the incumbent [`ExecutionPlan`], a [`ClusterDelta`]
+//! naming the chips that died, and the [`ProfileCache`] warmed by the
+//! original search, and produces the next plan with its `plan_epoch`
+//! bumped. Two modes:
+//!
+//! * **pipeline-preserving** (the default): keep the incumbent's `s_dp`,
+//!   schedule, micro-batching and per-group stage counts, shrink the
+//!   affected groups' tensor parallelism to fit the surviving chips, and
+//!   re-shard layers over the cached profiles. Survivors that no longer
+//!   form a complete `s_pp × s_tp × s_dp` slice are idled alongside the
+//!   dead chips ([`ReplanOutcome::idled_chips`]) — at power-of-two group
+//!   sizes a single lost node always strands some siblings; a later full
+//!   re-plan reclaims them. The result is hot-swap compatible
+//!   ([`crate::elastic::swap_compatible`]): training resumes by migrating
+//!   per-stage state instead of restarting.
+//! * **full**: re-run the DFS over the reduced cluster along the
+//!   incumbent's `(s_dp, schedule, comm-algo)` slice, falling back to a
+//!   pinned HeteroAuto search when that slice has no feasible point. The
+//!   plan may change shape arbitrarily; resuming requires a checkpoint
+//!   restart.
+//!
+//! Either way every profile lookup goes through the caller's cache, so a
+//! replan right after a search is nearly all hits
+//! ([`ReplanOutcome::cache_misses`] makes that observable). An empty
+//! delta returns the incumbent bit-identically with its epoch untouched —
+//! re-planning is a no-op unless the cluster actually changed.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::costmodel::{evaluate_with_profiles, LayerProfile, ProfileCache, Strategy};
+use crate::hetero::{ChipGroup, ChipKind, Cluster};
+use crate::plan::{ExecutionPlan, PlanBuilder};
+
+use super::search::{run_jobs, search_with_cache, SearchConfig, SearchProgress};
+use super::sharding::{shard_layers, GroupShape};
+
+/// The cluster difference handed to [`replan`]: chips lost per type.
+/// Losses are rounded **up to whole nodes** — a dead chip drains its node
+/// (its surviving siblings lose their TP peers and their NIC shares).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterDelta {
+    /// Chips lost per chip type (entries with a zero count are ignored;
+    /// repeated kinds accumulate).
+    pub dead: Vec<(ChipKind, usize)>,
+}
+
+impl ClusterDelta {
+    /// A delta excluding `chips` chips of one `kind`.
+    pub fn exclude(kind: ChipKind, chips: usize) -> ClusterDelta {
+        ClusterDelta { dead: vec![(kind, chips)] }
+    }
+
+    /// True when no chips are excluded — [`replan`] is then the identity.
+    pub fn is_empty(&self) -> bool {
+        self.dead.iter().all(|&(_, n)| n == 0)
+    }
+}
+
+/// Knobs for [`replan`].
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanOptions {
+    /// Preserve the incumbent's pipeline shape (`s_dp`, schedule,
+    /// per-group stage counts) so the new plan is hot-swap compatible.
+    /// Off, the DFS may reshape the pipeline freely (checkpoint-restart
+    /// territory). Default: on.
+    pub keep_pipeline: bool,
+    /// Run any fallback search on worker threads (bit-identical result
+    /// either way). Default: on.
+    pub parallel: bool,
+}
+
+impl Default for ReplanOptions {
+    fn default() -> Self {
+        ReplanOptions { keep_pipeline: true, parallel: true }
+    }
+}
+
+/// What [`replan`] returns.
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    /// The plan to run next. On an empty delta this is the incumbent,
+    /// bit for bit; otherwise a validated plan over the reduced cluster
+    /// with `plan_epoch` bumped and any embedded fault plan consumed.
+    pub plan: ExecutionPlan,
+    /// False only for the empty-delta identity case.
+    pub changed: bool,
+    /// Profile-cache hits during this replan alone (a warm cache from the
+    /// original search should make this ≈ every lookup).
+    pub cache_hits: usize,
+    /// Profile-cache misses during this replan alone.
+    pub cache_misses: usize,
+    /// Surviving chips the new plan cannot use: the pipeline-preserving
+    /// mode idles survivors that no longer form a complete
+    /// `s_pp × s_tp × s_dp` slice (zero in full mode and on exact fits).
+    pub idled_chips: usize,
+    /// Wall-clock re-planning time.
+    pub elapsed_seconds: f64,
+}
+
+/// Re-plan `incumbent` after losing the chips in `delta`, reusing the
+/// cached profiles in `cache`. See the module docs for the two modes.
+pub fn replan(
+    incumbent: &ExecutionPlan,
+    delta: &ClusterDelta,
+    cache: &ProfileCache,
+    opts: &ReplanOptions,
+) -> Result<ReplanOutcome> {
+    let start = Instant::now();
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    if delta.is_empty() {
+        return Ok(ReplanOutcome {
+            plan: incumbent.clone(),
+            changed: false,
+            cache_hits: 0,
+            cache_misses: 0,
+            idled_chips: 0,
+            elapsed_seconds: start.elapsed().as_secs_f64(),
+        });
+    }
+
+    // Merge the delta per kind, then round each kind's loss up to whole
+    // nodes and check something survives.
+    let mut dead: Vec<(ChipKind, usize)> = Vec::new();
+    for &(kind, chips) in &delta.dead {
+        if chips == 0 {
+            continue;
+        }
+        match dead.iter_mut().find(|(k, _)| *k == kind) {
+            Some((_, n)) => *n += chips,
+            None => dead.push((kind, chips)),
+        }
+    }
+    let mut removed: Vec<(ChipKind, usize)> = Vec::new();
+    for &(kind, chips) in &dead {
+        let group = incumbent.cluster.group(kind)?;
+        let node = group.spec.chips_per_node;
+        let r = chips.div_ceil(node) * node;
+        ensure!(
+            r < group.n_chips,
+            "excluding {chips} {kind} chips drains {r} after whole-node rounding, \
+             but the cluster only has {} — nothing of the group would survive",
+            group.n_chips
+        );
+        removed.push((kind, r));
+    }
+
+    let reduced = Cluster::try_build(
+        &incumbent.cluster.name,
+        incumbent
+            .cluster
+            .groups
+            .iter()
+            .map(|g| {
+                let r = removed
+                    .iter()
+                    .find(|(k, _)| *k == g.spec.kind)
+                    .map(|&(_, r)| r)
+                    .unwrap_or(0);
+                (g.spec.kind, g.n_chips - r)
+            })
+            .collect(),
+    )?;
+
+    let plan = if opts.keep_pipeline {
+        replan_keep_pipeline(incumbent, &removed, cache)?
+    } else {
+        replan_full(incumbent, reduced, cache, opts)?
+    };
+    let lost: usize = removed.iter().map(|&(_, r)| r).sum();
+    Ok(ReplanOutcome {
+        idled_chips: incumbent.cluster.total_chips() - lost - plan.cluster.total_chips(),
+        plan,
+        changed: true,
+        cache_hits: cache.hits() - hits0,
+        cache_misses: cache.misses() - misses0,
+        elapsed_seconds: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// The hot-swap mode: charge each kind's loss to its stage groups (last
+/// stage of the kind first — deterministic), shrink each affected group's
+/// TP to the largest power of two whose `s_pp · s_tp · s_dp` slice the
+/// survivors still fill (idling the remainder), and re-shard layers over
+/// cached profiles. Stage counts never change, so the result passes
+/// [`crate::elastic::swap_compatible`] against the incumbent.
+fn replan_keep_pipeline(
+    incumbent: &ExecutionPlan,
+    removed: &[(ChipKind, usize)],
+    cache: &ProfileCache,
+) -> Result<ExecutionPlan> {
+    let model = &incumbent.model;
+    let s_dp = incumbent.strategy.s_dp;
+    let schedule = incumbent.strategy.schedule;
+    let comm_algo = incumbent.strategy.comm_algo;
+    let micro_batches = incumbent.strategy.micro_batches;
+    let micro_tokens = incumbent.micro_tokens;
+
+    let mut groups = incumbent.stage_groups.clone();
+    let mut shapes: Vec<GroupShape> = incumbent
+        .strategy
+        .plans
+        .iter()
+        .map(|p| GroupShape { s_tp: p.s_tp, s_pp: p.s_pp })
+        .collect();
+    for &(kind, loss) in removed {
+        let mut remove = loss;
+        for i in (0..groups.len()).rev() {
+            if groups[i].spec.kind != kind || remove == 0 {
+                continue;
+            }
+            let take = remove.min(groups[i].n_chips);
+            remove -= take;
+            let left = groups[i].n_chips - take;
+            let s_pp = shapes[i].s_pp;
+            let slice = s_pp * s_dp;
+            // Shrink-to-fit: the widest power-of-two TP whose full
+            // s_pp × s_tp × s_dp slice the survivors cover; the rest idle.
+            let cap = (left / slice).min(groups[i].spec.tp_max());
+            if cap == 0 {
+                bail!(
+                    "{left} surviving {kind} chips cannot fill stage group {i}'s \
+                     s_pp {s_pp} × s_dp {s_dp} slice even at TP 1; a \
+                     pipeline-preserving replan cannot drop a stage (re-plan \
+                     without keep_pipeline instead)"
+                );
+            }
+            let s_tp = if cap.is_power_of_two() { cap } else { cap.next_power_of_two() / 2 };
+            let used = slice * s_tp;
+            ensure!(
+                used % groups[i].spec.chips_per_node == 0,
+                "a pipeline-preserving replan would run stage group {i} on {used} \
+                 {kind} chips — not whole {}-chip nodes (re-plan without \
+                 keep_pipeline)",
+                groups[i].spec.chips_per_node
+            );
+            groups[i].n_chips = used;
+            shapes[i].s_tp = s_tp;
+        }
+        debug_assert_eq!(remove, 0, "per-kind totals were validated upstream");
+    }
+
+    // The plan's cluster must tally with its stage groups per kind, so the
+    // idled chips leave the cluster too (they come back on a full re-plan
+    // over the physical cluster).
+    let cluster = Cluster::try_build(
+        &incumbent.cluster.name,
+        incumbent
+            .cluster
+            .groups
+            .iter()
+            .map(|cg| {
+                let total: usize = groups
+                    .iter()
+                    .filter(|g| g.spec.kind == cg.spec.kind)
+                    .map(|g| g.n_chips)
+                    .sum();
+                (cg.spec.kind, total)
+            })
+            .collect(),
+    )?;
+
+    let profiles: Vec<LayerProfile> = groups
+        .iter()
+        .zip(&shapes)
+        .map(|(g, s)| {
+            cache.profile(
+                &g.spec,
+                model,
+                s.s_tp,
+                micro_tokens,
+                s_dp,
+                comm_algo,
+                incumbent.nic_assignment,
+            )
+        })
+        .collect();
+    let sharding = shard_layers(
+        model,
+        &groups,
+        &shapes,
+        s_dp,
+        micro_batches,
+        micro_tokens,
+        schedule,
+        comm_algo,
+        &profiles,
+    );
+    ensure!(
+        sharding.feasible,
+        "no memory-feasible layer allocation on the reduced cluster with the \
+         incumbent pipeline (re-plan without keep_pipeline)"
+    );
+    let v = schedule.virtual_stages();
+    ensure!(
+        v <= 1 || sharding.plans.iter().all(|p| p.layers_per_stage() % v == 0),
+        "re-sharded allocation does not chunk into {v} virtual stages \
+         (re-plan without keep_pipeline)"
+    );
+    let strategy =
+        Strategy { s_dp, micro_batches, schedule, comm_algo, plans: sharding.plans };
+    let grefs: Vec<&ChipGroup> = groups.iter().collect();
+    let eval = evaluate_with_profiles(model, &grefs, &strategy, micro_tokens, &profiles);
+    ensure!(
+        eval.feasible,
+        "the re-sharded strategy is infeasible on the reduced cluster \
+         (re-plan without keep_pipeline)"
+    );
+    build_plan(incumbent, cluster, groups, strategy)
+}
+
+/// The full mode: DFS over the reduced cluster along the incumbent's
+/// `(s_dp, schedule, comm-algo)` slice; if that slice is dry (e.g. the
+/// surviving chips no longer divide by the incumbent `s_dp`), fall back
+/// to a HeteroAuto search pinned to the incumbent schedule + algorithm.
+fn replan_full(
+    incumbent: &ExecutionPlan,
+    reduced: Cluster,
+    cache: &ProfileCache,
+    opts: &ReplanOptions,
+) -> Result<ExecutionPlan> {
+    let model = &incumbent.model;
+    let sequences = incumbent.gbs_tokens / model.seq_len;
+    let s_dp = incumbent.strategy.s_dp;
+    let schedule = incumbent.strategy.schedule;
+    let comm_algo = incumbent.strategy.comm_algo;
+    let groups: Vec<ChipGroup> =
+        reduced.groups_by_memory_desc().into_iter().cloned().collect();
+    let dp_fits = sequences % s_dp == 0 && groups.iter().all(|g| g.n_chips % s_dp == 0);
+    let best = if dp_fits {
+        let jobs = [(s_dp, schedule, comm_algo)];
+        let progress = SearchProgress::new(false);
+        let (_, best) = run_jobs(
+            model,
+            &groups,
+            sequences,
+            &jobs,
+            false,
+            opts.parallel,
+            f64::INFINITY,
+            cache,
+            &progress,
+        );
+        best
+    } else {
+        None
+    };
+    let (stage_groups, strategy) = match best {
+        Some((_, strategy, _)) => (groups, strategy),
+        None => {
+            let cfg = SearchConfig {
+                schedules: vec![schedule],
+                comm_algos: vec![comm_algo],
+                parallel: opts.parallel,
+                ..SearchConfig::default()
+            };
+            let r = search_with_cache(model, &reduced, incumbent.gbs_tokens, &cfg, cache)?;
+            (r.groups, r.strategy)
+        }
+    };
+    build_plan(incumbent, reduced, stage_groups, strategy)
+}
+
+/// Package a re-planned strategy as a validated [`ExecutionPlan`] carrying
+/// the incumbent's communication options, a bumped `plan_epoch`, and no
+/// fault plan (the fault that triggered the replan is consumed, not
+/// inherited).
+fn build_plan(
+    incumbent: &ExecutionPlan,
+    cluster: Cluster,
+    stage_groups: Vec<ChipGroup>,
+    strategy: Strategy,
+) -> Result<ExecutionPlan> {
+    let mut builder = PlanBuilder::new(&incumbent.name)
+        .model(incumbent.model)
+        .cluster(cluster)
+        .stage_groups(stage_groups)
+        .strategy(strategy)
+        .gbs_tokens(incumbent.gbs_tokens)
+        .micro_tokens(incumbent.micro_tokens)
+        .comm(incumbent.comm)
+        .reshard(incumbent.reshard)
+        .nic_assignment(incumbent.nic_assignment)
+        .fine_overlap(incumbent.fine_overlap)
+        .precision(incumbent.precision);
+    if let Some(train) = &incumbent.train {
+        builder = builder.train(train.clone());
+    }
+    let mut plan = builder.build().map_err(|errs| {
+        anyhow!(
+            "replanned plan failed validation: {}",
+            errs.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("; ")
+        )
+    })?;
+    plan.plan_epoch = incumbent.plan_epoch + 1;
+    plan.fault_plan = None;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommAlgo;
+    use crate::costmodel::{GroupPlan, ModelShape, Schedule};
+    use crate::elastic::swap_compatible;
+    use crate::util::prop;
+
+    /// In-lib mirror of the integration suites' `tiny_model` /
+    /// `two_stage_mixed_vendor_plan` fixture (keep in sync with
+    /// `rust/tests/common.rs`).
+    fn tiny_model() -> ModelShape {
+        ModelShape {
+            n_layers: 8,
+            hidden: 2048,
+            n_heads: 16,
+            n_kv_heads: 16,
+            intermediate: 8192,
+            vocab: 32000,
+            seq_len: 4096,
+        }
+    }
+
+    fn mixed_plan(schedule: Schedule, comm_algo: CommAlgo) -> ExecutionPlan {
+        let cluster =
+            Cluster::new("parity-2stage", vec![(ChipKind::A, 16), (ChipKind::B, 16)]);
+        PlanBuilder::new("parity")
+            .model(tiny_model())
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 8,
+                schedule,
+                comm_algo,
+                plans: vec![
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: false },
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: true },
+                ],
+            })
+            .gbs_tokens(4 * 8 * 4096)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn empty_delta_returns_the_incumbent_bit_for_bit() {
+        let plan = mixed_plan(Schedule::OneF1B, CommAlgo::Ring);
+        let cache = ProfileCache::new();
+        let out =
+            replan(&plan, &ClusterDelta::default(), &cache, &ReplanOptions::default())
+                .unwrap();
+        assert!(!out.changed);
+        assert_eq!(out.plan, plan);
+        assert_eq!((out.cache_hits, out.cache_misses), (0, 0));
+    }
+
+    #[test]
+    fn replan_on_unchanged_cluster_is_identity_for_any_incumbent() {
+        // The satellite property: whatever the incumbent looks like —
+        // schedule, comm algo, epoch, an embedded fault plan — an empty
+        // delta must hand it back untouched (and a zero-count delta
+        // counts as empty).
+        prop::check(24, |rng| {
+            let schedule =
+                Schedule::SEARCH_SPACE[rng.usize(0, Schedule::SEARCH_SPACE.len() - 1)];
+            let comm_algo = CommAlgo::ALL[rng.usize(0, CommAlgo::ALL.len() - 1)];
+            let mut plan = mixed_plan(schedule, comm_algo);
+            plan.plan_epoch = rng.range(0, 16);
+            let delta = if rng.usize(0, 1) == 0 {
+                ClusterDelta::default()
+            } else {
+                ClusterDelta::exclude(ChipKind::B, 0)
+            };
+            let cache = ProfileCache::new();
+            let out = replan(&plan, &delta, &cache, &ReplanOptions::default())
+                .map_err(|e| e.to_string())?;
+            prop::assert_prop(!out.changed, "empty delta must not report change")?;
+            prop::assert_prop(out.plan == plan, "incumbent must round-trip bit-identically")
+        });
+    }
+
+    #[test]
+    fn node_loss_preserves_the_pipeline_and_bumps_the_epoch() {
+        let plan = mixed_plan(Schedule::OneF1B, CommAlgo::Ring);
+        let cache = ProfileCache::new();
+        // One dead B chip drains its whole 8-chip node: B 16 → 8.
+        let delta = ClusterDelta::exclude(ChipKind::B, 1);
+        let opts = ReplanOptions::default();
+        let out = replan(&plan, &delta, &cache, &opts).unwrap();
+        assert!(out.changed);
+        let next = &out.plan;
+        assert!(next.validate().is_ok());
+        assert_eq!(next.plan_epoch, plan.plan_epoch + 1);
+        assert_eq!(next.cluster.group(ChipKind::B).unwrap().n_chips, 8);
+        assert_eq!(next.cluster.group(ChipKind::A).unwrap().n_chips, 16);
+        // Same pipeline: hot-swap compatible, with B's TP shrunk to fit.
+        swap_compatible(&plan, next).unwrap();
+        assert_eq!(next.strategy.plans[1].s_tp, 2);
+        assert_eq!(next.strategy.total_layers(), plan.model.n_layers);
+        // A second replan over the now-warm cache re-profiles nothing.
+        let again = replan(&plan, &delta, &cache, &opts).unwrap();
+        assert_eq!(again.cache_misses, 0, "warm-cache replan re-profiled shapes");
+        assert!(again.cache_hits > 0);
+        assert_eq!(again.plan, out.plan);
+    }
+
+    #[test]
+    fn odd_node_loss_idles_the_stranded_slice_remainder() {
+        // A 3-stage plan whose B group spans two pipeline stages: losing
+        // one of its four 8-chip nodes leaves 24 chips, which cannot fill
+        // the s_pp 2 × s_dp 4 slice at any power-of-two TP except 2 — so
+        // 16 chips run and 8 survivors idle until a full re-plan.
+        let cluster =
+            Cluster::new("idle-3stage", vec![(ChipKind::A, 16), (ChipKind::B, 32)]);
+        let plan = PlanBuilder::new("idle")
+            .model(tiny_model())
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 8,
+                schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
+                plans: vec![
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: false },
+                    GroupPlan { s_pp: 2, s_tp: 4, layers: 4, recompute: true },
+                ],
+            })
+            .gbs_tokens(4 * 8 * 4096)
+            .build()
+            .unwrap();
+        let cache = ProfileCache::new();
+        let out = replan(
+            &plan,
+            &ClusterDelta::exclude(ChipKind::B, 1),
+            &cache,
+            &ReplanOptions::default(),
+        )
+        .unwrap();
+        assert!(out.plan.validate().is_ok());
+        swap_compatible(&plan, &out.plan).unwrap();
+        assert_eq!(out.idled_chips, 8, "24 survivors, 16 usable at TP 2");
+        assert_eq!(out.plan.cluster.group(ChipKind::B).unwrap().n_chips, 16);
+        assert_eq!(out.plan.strategy.plans[1].s_tp, 2);
+        assert_eq!(out.plan.plan_epoch, plan.plan_epoch + 1);
+    }
+
+    #[test]
+    fn full_replan_reshapes_over_the_reduced_cluster() {
+        let plan = mixed_plan(Schedule::OneF1B, CommAlgo::Ring);
+        let cache = ProfileCache::new();
+        let opts = ReplanOptions { keep_pipeline: false, ..Default::default() };
+        let out =
+            replan(&plan, &ClusterDelta::exclude(ChipKind::B, 8), &cache, &opts).unwrap();
+        assert!(out.changed);
+        assert!(out.plan.validate().is_ok());
+        assert_eq!(out.plan.plan_epoch, plan.plan_epoch + 1);
+        assert_eq!(out.plan.cluster.total_chips(), 24);
+        assert_eq!(out.plan.strategy.total_layers(), plan.model.n_layers);
+    }
+
+    #[test]
+    fn draining_a_whole_group_is_rejected() {
+        let plan = mixed_plan(Schedule::OneF1B, CommAlgo::Ring);
+        let cache = ProfileCache::new();
+        let err = replan(
+            &plan,
+            &ClusterDelta::exclude(ChipKind::B, 16),
+            &cache,
+            &ReplanOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("survive"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_in_the_delta_is_rejected() {
+        let plan = mixed_plan(Schedule::OneF1B, CommAlgo::Ring);
+        let cache = ProfileCache::new();
+        assert!(replan(
+            &plan,
+            &ClusterDelta::exclude(ChipKind::C, 8),
+            &cache,
+            &ReplanOptions::default(),
+        )
+        .is_err());
+    }
+}

@@ -135,6 +135,13 @@ pub struct SearchResult {
     pub leaves_pruned: usize,
     /// Wall-clock search time.
     pub elapsed_seconds: f64,
+    /// Profile-cache lookups served from the cache during this search.
+    /// With a fresh per-search cache most lookups are hits already; a
+    /// re-plan over a caller-supplied warm cache ([`search_with_cache`])
+    /// should see near-100% hits — this is how that reuse is observed.
+    pub cache_hits: usize,
+    /// Profile-cache lookups that ran the profiler during this search.
+    pub cache_misses: usize,
 }
 
 impl SearchResult {
@@ -254,9 +261,9 @@ impl Incumbent {
 /// Leaf accounting for one task / stage: leaves fully evaluated vs leaves
 /// skipped under branch-and-bound subtree cuts.
 #[derive(Clone, Copy, Debug, Default)]
-struct SearchStats {
-    evaluated: usize,
-    pruned: usize,
+pub(crate) struct SearchStats {
+    pub(crate) evaluated: usize,
+    pub(crate) pruned: usize,
 }
 
 /// Milliseconds between `--progress` stderr lines.
@@ -266,7 +273,7 @@ const PROGRESS_INTERVAL_MS: u64 = 500;
 /// evaluate and prune, and whichever worker crosses the reporting interval
 /// first claims the next stderr line via compare-exchange. Disabled, every
 /// call is a single branch on a bool.
-struct SearchProgress {
+pub(crate) struct SearchProgress {
     enabled: bool,
     start: Instant,
     evaluated: AtomicUsize,
@@ -276,7 +283,7 @@ struct SearchProgress {
 }
 
 impl SearchProgress {
-    fn new(enabled: bool) -> SearchProgress {
+    pub(crate) fn new(enabled: bool) -> SearchProgress {
         SearchProgress {
             enabled,
             start: Instant::now(),
@@ -288,13 +295,13 @@ impl SearchProgress {
 
     /// One leaf evaluated; every 64th leaf checks whether a periodic line
     /// is due (keeping the hot path to a counter bump).
-    fn leaf(&self, incumbent: &Incumbent) {
+    fn leaf(&self, incumbent: &Incumbent, cache: &ProfileCache) {
         if !self.enabled {
             return;
         }
         let n = self.evaluated.fetch_add(1, Ordering::Relaxed) + 1;
         if n % 64 == 0 {
-            self.maybe_report(incumbent);
+            self.maybe_report(incumbent, cache);
         }
     }
 
@@ -306,7 +313,7 @@ impl SearchProgress {
         self.pruned.fetch_add(leaves, Ordering::Relaxed);
     }
 
-    fn maybe_report(&self, incumbent: &Incumbent) {
+    fn maybe_report(&self, incumbent: &Incumbent, cache: &ProfileCache) {
         let elapsed_ms = self.start.elapsed().as_millis() as u64;
         let last = self.last_report_ms.load(Ordering::Relaxed);
         if elapsed_ms < last.saturating_add(PROGRESS_INTERVAL_MS) {
@@ -323,25 +330,35 @@ impl SearchProgress {
         let inc = if inc.is_finite() { format!("{inc:.4}s") } else { "-".to_string() };
         eprintln!(
             "[h2 search] progress: {} leaves evaluated, {} pruned, incumbent {inc}, \
-             elapsed {:.1}s",
+             cache {} hits / {} misses, elapsed {:.1}s",
             self.evaluated.load(Ordering::Relaxed),
             self.pruned.load(Ordering::Relaxed),
+            cache.hits(),
+            cache.misses(),
             elapsed_ms as f64 / 1000.0,
         );
     }
 
     /// One line per completed search stage (always printed when enabled,
     /// so even sub-interval searches are observable).
-    fn stage_summary(&self, label: &str, stats: SearchStats, best: f64) {
+    pub(crate) fn stage_summary(
+        &self,
+        label: &str,
+        stats: SearchStats,
+        best: f64,
+        cache: &ProfileCache,
+    ) {
         if !self.enabled {
             return;
         }
         let best = if best.is_finite() { format!("{best:.4}s") } else { "none".to_string() };
         eprintln!(
             "[h2 search] {label}: {} leaves evaluated, {} pruned, best {best}, \
-             elapsed {:.2}s",
+             cache {} hits / {} misses, elapsed {:.2}s",
             stats.evaluated,
             stats.pruned,
+            cache.hits(),
+            cache.misses(),
             self.start.elapsed().as_secs_f64(),
         );
     }
@@ -480,7 +497,7 @@ impl<'a> DfsCtx<'a> {
         let groups = self.groups;
         if idx == groups.len() {
             self.stats.evaluated += 1;
-            self.progress.leaf(self.incumbent);
+            self.progress.leaf(self.incumbent, self.cache);
             self.profiles.clear();
             for (g, shape) in groups.iter().zip(shapes.iter()) {
                 let p = self.cache.profile(
@@ -549,7 +566,7 @@ impl<'a> DfsCtx<'a> {
 
 /// One outer-loop candidate: a data-parallel degree, a schedule and a
 /// DP-collective algorithm.
-type Job = (usize, Schedule, CommAlgo);
+pub(crate) type Job = (usize, Schedule, CommAlgo);
 
 /// One unit of work on the shared queue: a whole job, or (for large jobs)
 /// one top-level DFS branch of it.
@@ -737,7 +754,7 @@ const SPLIT_MIN_LEAVES: usize = 256;
 /// results are only accepted when strictly better anyway, so seeding
 /// cannot change the outcome — only skip provably useless work).
 #[allow(clippy::too_many_arguments)]
-fn run_jobs(
+pub(crate) fn run_jobs(
     model: &ModelShape,
     groups: &[ChipGroup],
     sequences: usize,
@@ -888,7 +905,25 @@ pub fn search(
     gbs_tokens: usize,
     cfg: &SearchConfig,
 ) -> Result<SearchResult> {
+    // One profile cache for the whole search: both stages, every worker.
+    let cache = ProfileCache::new();
+    search_with_cache(model, cluster, gbs_tokens, cfg, &cache)
+}
+
+/// [`search`] over a caller-supplied [`ProfileCache`] — the re-planning
+/// entry point: a warm cache from a previous search over the same chips
+/// turns almost every profile lookup into a hit, and the returned
+/// [`SearchResult::cache_hits`] / [`SearchResult::cache_misses`] count
+/// only *this* search's lookups so the reuse is measurable.
+pub fn search_with_cache(
+    model: &ModelShape,
+    cluster: &Cluster,
+    gbs_tokens: usize,
+    cfg: &SearchConfig,
+    cache: &ProfileCache,
+) -> Result<SearchResult> {
     let start = Instant::now();
+    let (hits0, misses0) = (cache.hits(), cache.misses());
     let sequences = gbs_tokens / model.seq_len;
     if sequences == 0 {
         bail!("global batch smaller than one sequence");
@@ -919,18 +954,17 @@ pub fn search(
         }
     }
 
-    // One profile cache for the whole search: both stages, every worker.
-    let cache = ProfileCache::new();
     let progress = SearchProgress::new(cfg.progress);
 
     // Stage 1: coarse search, one group per chip type.
     let (stats, coarse) =
         run_jobs(model, &groups, sequences, &jobs, false, cfg.parallel, f64::INFINITY,
-                 &cache, &progress);
+                 cache, &progress);
     progress.stage_summary(
         "coarse stage",
         stats,
         coarse.as_ref().map(|c| c.0).unwrap_or(f64::INFINITY),
+        cache,
     );
     let coarse = match coarse {
         Some(c) => c,
@@ -946,6 +980,8 @@ pub fn search(
             candidates_explored: stats.evaluated,
             leaves_pruned: stats.pruned,
             elapsed_seconds: start.elapsed().as_secs_f64(),
+            cache_hits: cache.hits() - hits0,
+            cache_misses: cache.misses() - misses0,
         });
     }
 
@@ -961,11 +997,12 @@ pub fn search(
     let fine_groups = split_groups(&groups, cfg.group_split);
     let (stats2, fine) =
         run_jobs(model, &fine_groups, sequences, &fine_jobs, true, cfg.parallel, coarse.0,
-                 &cache, &progress);
+                 cache, &progress);
     progress.stage_summary(
         "refine stage",
         stats2,
         fine.as_ref().map(|f| f.0).unwrap_or(coarse.0),
+        cache,
     );
 
     // Keep whichever stage produced the better feasible strategy.
@@ -985,6 +1022,8 @@ pub fn search(
         candidates_explored: stats.evaluated + stats2.evaluated,
         leaves_pruned: stats.pruned + stats2.pruned,
         elapsed_seconds: start.elapsed().as_secs_f64(),
+        cache_hits: cache.hits() - hits0,
+        cache_misses: cache.misses() - misses0,
     })
 }
 
@@ -1293,6 +1332,26 @@ mod tests {
             }
         }
         assert!(checked > 50, "only {checked} feasible leaves checked");
+    }
+
+    #[test]
+    fn warm_cache_search_reports_hits_not_misses() {
+        // First search over a fresh cache profiles every distinct shape
+        // (misses > 0); re-searching the same cluster over the same cache
+        // is all hits — the observable core of incremental re-planning.
+        let exp = homogeneous_baseline(ChipKind::A);
+        let cfg = SearchConfig { two_stage: false, ..Default::default() };
+        let cache = ProfileCache::new();
+        let cold = search_with_cache(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg, &cache)
+            .unwrap();
+        assert!(cold.cache_misses > 0, "fresh cache must profile something");
+        let warm = search_with_cache(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg, &cache)
+            .unwrap();
+        assert_eq!(warm.cache_misses, 0, "warm cache re-profiled {} shapes",
+                   warm.cache_misses);
+        assert!(warm.cache_hits > 0);
+        // Counters are per-search deltas, so the cold run's are untouched.
+        assert_eq!(warm.strategy, cold.strategy);
     }
 
     #[test]

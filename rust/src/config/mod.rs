@@ -23,6 +23,8 @@
 //!               "group_split": 128, "two_stage": true },
 //!   "sim": { "comm": "ddr", "reshard": "srag", "comm_algo": "auto",
 //!            "nic_affinity": true, "fine_overlap": true },
+//!   "elastic": { "straggler_factor": 1.5, "debounce": 3,
+//!                "keep_last": 4, "faults": "faults.json" },
 //!   "train": {
 //!     "model": "h2_100m",
 //!     "stages": [{"prefix": "first_l10", "chip": "A"},
@@ -40,6 +42,7 @@ use crate::auto::SearchConfig;
 use crate::comm::{CommAlgo, CommMode};
 use crate::coordinator::{StagePlan, TrainConfig};
 use crate::costmodel::Schedule;
+use crate::elastic::MonitorConfig;
 use crate::hetero::{register_custom, Cluster, CustomChipDef};
 use crate::plan::{
     chip_def_from_json, parse_kind, parse_token, PlanBuilder, PrecisionPolicy, TrainSpec,
@@ -68,8 +71,38 @@ pub struct Config {
     pub comm_algo_pin: Option<CommAlgo>,
     /// Simulation overrides, if declared.
     pub sim: Option<SimOverrides>,
+    /// Elastic-loop options, if declared.
+    pub elastic: Option<ElasticConfig>,
     /// Real-training job, if declared.
     pub train: Option<TrainConfig>,
+}
+
+/// The config's `elastic` section: step-monitor thresholds plus the
+/// virtual evaluator's fault-replay and checkpoint-retention knobs. Every
+/// key is optional; CLI flags override whatever the section sets.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ElasticConfig {
+    /// [`MonitorConfig::straggler_factor`] override.
+    pub straggler_factor: Option<f64>,
+    /// [`MonitorConfig::debounce`] override.
+    pub debounce: Option<usize>,
+    /// Checkpoint retention for virtual runs
+    /// ([`crate::coordinator::VirtualOptions::keep_last`]).
+    pub keep_last: Option<usize>,
+    /// Path of a fault-injection plan to replay
+    /// ([`crate::elastic::FaultPlan`]).
+    pub faults: Option<String>,
+}
+
+impl ElasticConfig {
+    /// Monitor thresholds: the defaults with this section's keys applied.
+    pub fn monitor_config(&self) -> MonitorConfig {
+        let d = MonitorConfig::default();
+        MonitorConfig {
+            straggler_factor: self.straggler_factor.unwrap_or(d.straggler_factor),
+            debounce: self.debounce.unwrap_or(d.debounce),
+        }
+    }
 }
 
 /// Partial overrides for [`SimOptions`]: only keys actually present in the
@@ -187,6 +220,15 @@ fn parse_sim(v: &Value) -> Result<SimOverrides> {
     })
 }
 
+fn parse_elastic(v: &Value) -> Result<ElasticConfig> {
+    Ok(ElasticConfig {
+        straggler_factor: v.opt("straggler_factor").map(|x| x.num()).transpose()?,
+        debounce: v.opt("debounce").map(|x| x.usize()).transpose()?,
+        keep_last: v.opt("keep_last").map(|x| x.usize()).transpose()?,
+        faults: v.opt("faults").map(|x| x.str().map(str::to_string)).transpose()?,
+    })
+}
+
 fn parse_train(v: &Value) -> Result<TrainConfig> {
     let mut stages = Vec::new();
     for s in v.get("stages")?.arr()? {
@@ -270,6 +312,8 @@ impl Config {
             comm_algo_pin,
             sim: v.opt("sim").map(parse_sim).transpose()
                 .context("parsing `sim`")?,
+            elastic: v.opt("elastic").map(parse_elastic).transpose()
+                .context("parsing `elastic`")?,
             train: v.opt("train").map(parse_train).transpose()
                 .context("parsing `train`")?,
         })
@@ -417,6 +461,26 @@ mod tests {
             "schedule": "bogus"}}"#).is_err());
         assert!(Config::parse(r#"{"train": {"model": "m", "stages": [],
             "comm_algo": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn elastic_section_parses_and_defaults_fill_in() {
+        let c = Config::parse(r#"{"elastic": {"straggler_factor": 1.5,
+            "debounce": 3, "keep_last": 4, "faults": "faults.json"}}"#).unwrap();
+        let e = c.elastic.unwrap();
+        assert_eq!(e.debounce, Some(3));
+        assert_eq!(e.keep_last, Some(4));
+        assert_eq!(e.faults.as_deref(), Some("faults.json"));
+        let m = e.monitor_config();
+        assert_eq!(m.debounce, 3);
+        assert!((m.straggler_factor - 1.5).abs() < 1e-12);
+        // A partial section keeps the monitor defaults for absent keys.
+        let c = Config::parse(r#"{"elastic": {"keep_last": 2}}"#).unwrap();
+        let e = c.elastic.unwrap();
+        assert_eq!(e.monitor_config().debounce, MonitorConfig::default().debounce);
+        assert!(e.faults.is_none());
+        // No section at all.
+        assert!(Config::parse("{}").unwrap().elastic.is_none());
     }
 
     #[test]

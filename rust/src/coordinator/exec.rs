@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::comm::{fabric, CommTopology, Endpoint, LatencyFn};
 use crate::costmodel::profile::DP_OVERLAP;
+use crate::elastic::FaultPlan;
 use crate::plan::ExecutionPlan;
 use crate::runtime::{HostTensor, ParamMeta};
 use crate::sim::pipeline::{plan_stage_sims, stage_links, StageSim};
@@ -62,8 +63,16 @@ pub struct VirtualOptions {
     pub checkpoint_dir: Option<PathBuf>,
     /// Checkpoint every N steps (0 = never).
     pub checkpoint_every: usize,
+    /// Keep only the newest N complete archived checkpoint generations
+    /// (0 = keep all). The prune never touches an incomplete generation
+    /// or the newest complete one, and the flat per-stage files (what
+    /// `resume_from` reads) always hold the latest state.
+    pub keep_last: usize,
     /// Directory to resume per-stage checkpoints from.
     pub resume_from: Option<PathBuf>,
+    /// Fault-injection scenario to replay (overrides the plan's embedded
+    /// `fault_plan` when both are set).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for VirtualOptions {
@@ -75,7 +84,9 @@ impl Default for VirtualOptions {
             log_every: 0,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            keep_last: 0,
             resume_from: None,
+            faults: None,
         }
     }
 }
@@ -91,6 +102,7 @@ impl VirtualOptions {
             o.seed = t.seed;
             o.log_every = t.log_every;
         }
+        o.faults = plan.fault_plan.clone();
         o
     }
 }
@@ -114,6 +126,14 @@ pub struct VirtualReport {
     /// Final weights per physical stage (virtual chunks concatenated,
     /// identical across DP replicas after synchronization).
     pub final_params: Vec<Vec<f32>>,
+    /// `Some(step)` when a `ChipDeath` fault drained the run at that step
+    /// boundary before `steps` completed (steps `start_step..step` ran).
+    pub halted_at: Option<usize>,
+    /// DP-rank-0 compute-only seconds per stage per executed step
+    /// (`[stage][step - start_step]`) — the heartbeat stream the
+    /// [`crate::elastic::StepMonitor`] compares against its predictions;
+    /// a fault factor of k shows up as a ×k ratio here.
+    pub stage_compute_seconds: Vec<Vec<f64>>,
 }
 
 const DIR_FWD: u64 = 0;
@@ -184,15 +204,54 @@ impl ChunkState {
     }
 }
 
-/// Checkpoint layout of one stage: `v` chunk weight vectors.
-fn chunk_metas(v: usize) -> Vec<ParamMeta> {
+/// Checkpoint layout of one stage: `v` chunk weight vectors (shared with
+/// the elastic hot-swap migration, which copies these files).
+pub(crate) fn chunk_metas(v: usize) -> Vec<ParamMeta> {
     (0..v)
         .map(|c| ParamMeta { name: format!("chunk{c}.w"), shape: vec![VIRTUAL_WIDTH] })
         .collect()
 }
 
-fn stage_ckpt_path(dir: &std::path::Path, stage: usize) -> PathBuf {
+/// Per-stage checkpoint file inside a checkpoint directory.
+pub(crate) fn stage_ckpt_path(dir: &std::path::Path, stage: usize) -> PathBuf {
     dir.join(format!("stage{stage}.ckpt"))
+}
+
+/// Archived generation directory for the checkpoint written at `step`.
+fn gen_dir(dir: &std::path::Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step}"))
+}
+
+/// Prune archived checkpoint generations down to the newest `keep_last`
+/// *complete* ones (a generation is complete when all `s_n` stage files
+/// exist). Incomplete generations are never touched — a concurrently
+/// written one must not be half-deleted — and with `keep_last >= 1` the
+/// newest complete generation always survives. Races between the
+/// per-stage workers (both pruning, or re-listing a dir the other just
+/// removed) are benign: removal errors are ignored.
+fn prune_generations(dir: &std::path::Path, s_n: usize, keep_last: usize) {
+    if keep_last == 0 {
+        return;
+    }
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut complete: Vec<u64> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(|n| n.strip_prefix("step")) else {
+            continue;
+        };
+        let Ok(step) = step.parse::<u64>() else { continue };
+        if (0..s_n).all(|s| stage_ckpt_path(&gen_dir(dir, step), s).exists()) {
+            complete.push(step);
+        }
+    }
+    complete.sort_unstable_by(|a, b| b.cmp(a));
+    for &step in complete.iter().skip(keep_last) {
+        let _ = std::fs::remove_dir_all(gen_dir(dir, step));
+    }
 }
 
 struct VShared {
@@ -202,6 +261,8 @@ struct VShared {
     comm_ns: AtomicU64,
     /// Final concatenated chunk weights per stage (written by dp rank 0).
     params: Mutex<Vec<Vec<f32>>>,
+    /// compute[stage][step - start_step], dp rank 0's compute-only seconds.
+    compute: Mutex<Vec<Vec<f64>>>,
 }
 
 struct VCtx {
@@ -224,7 +285,9 @@ struct VCtx {
     dp_group: Arc<DpGroup>,
     shared: Arc<VShared>,
     checkpoint: Option<(PathBuf, usize)>,
+    keep_last: usize,
     resume_from: Option<PathBuf>,
+    faults: Arc<FaultPlan>,
 }
 
 impl VCtx {
@@ -256,6 +319,23 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
     let v = strategy.schedule.virtual_stages();
     let orders = stage_orders(strategy.schedule, s_n, b);
 
+    // Fault scenario: an explicit option wins over the plan's embedded
+    // one. A `ChipDeath` drains the run at that step boundary — steps
+    // `start_step..death` execute normally, then every worker stops at
+    // the same synchronized point (the post-step checkpoint is the state
+    // the elastic hot-swap migrates).
+    let faults = Arc::new(
+        opts.faults
+            .clone()
+            .or_else(|| plan.fault_plan.clone())
+            .unwrap_or_default(),
+    );
+    faults.validate(s_n)?;
+    let (steps, halted_at) = match faults.first_death() {
+        Some(death) if death.step < opts.steps => (death.step, Some(death.step)),
+        _ => (opts.steps, None),
+    };
+
     // Resume: the leader reads stage 0's checkpoint to learn the start
     // step; every worker re-validates its own stage file against it.
     let start_step = match &opts.resume_from {
@@ -267,9 +347,8 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         None => 0,
     };
     ensure!(
-        start_step < opts.steps,
-        "resume checkpoint is at step {start_step}, nothing left of a {}-step run",
-        opts.steps
+        start_step < steps,
+        "resume checkpoint is at step {start_step}, nothing left of a {steps}-step run",
     );
 
     // One DP rendezvous per stage: the plan's collective algorithm over
@@ -294,12 +373,13 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         })
         .collect();
 
-    let executed = opts.steps - start_step;
+    let executed = steps - start_step;
     let shared = Arc::new(VShared {
         losses: Mutex::new(vec![vec![0.0; executed]; dp]),
         virtual_ns: AtomicU64::new(0),
         comm_ns: AtomicU64::new(0),
         params: Mutex::new(vec![Vec::new(); s_n]),
+        compute: Mutex::new(vec![vec![0.0; executed]; s_n]),
     });
 
     // Hop latencies are charged per logical edge through
@@ -321,7 +401,7 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
                 dp,
                 v,
                 b,
-                steps: opts.steps,
+                steps,
                 start_step,
                 lr: opts.lr,
                 seed: opts.seed,
@@ -338,7 +418,9 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
                     .checkpoint_dir
                     .as_ref()
                     .map(|d| (d.clone(), opts.checkpoint_every)),
+                keep_last: opts.keep_last,
                 resume_from: opts.resume_from.clone(),
+                faults: faults.clone(),
             };
             handles.push(std::thread::spawn(move || vworker(ctx, ep)));
         }
@@ -360,6 +442,8 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         comm_seconds: comm_seconds / executed.max(1) as f64,
         virtual_seconds,
         final_params: shared.params.lock().unwrap().clone(),
+        halted_at,
+        stage_compute_seconds: shared.compute.lock().unwrap().clone(),
     })
 }
 
@@ -400,6 +484,12 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
         let mut w_stash: Vec<Vec<Option<(Vec<f32>, Vec<f32>)>>> =
             vec![(0..b).map(|_| None).collect(); v];
         let mut step_loss = 0.0f64;
+        // Faults scale *time only* — compute advances by `cf`, hop
+        // latencies and the exposed DP-sync slice by `nf`. The numeric
+        // stream (activations, gradients, Adam) never sees them, so a
+        // faulty run's losses stay bit-identical to a healthy run's.
+        let (cf, nf) = ctx.faults.factors_at(step, ctx.stage);
+        let mut step_compute = 0.0f64;
 
         for &op in &ctx.order {
             match op {
@@ -415,7 +505,9 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
                     };
                     let y: Vec<f32> =
                         chunks[chunk].w.iter().zip(&x).map(|(w, xi)| w * xi).collect();
-                    ep.advance(ctx.timing.t_fwd / vf);
+                    let dur = ctx.timing.t_fwd / vf * cf;
+                    ep.advance(dur);
+                    step_compute += dur;
                     if d == d_n - 1 {
                         let t = gen_values(ctx.seed, step, micro, ctx.dp_rank, SALT_T);
                         let mut loss = 0.0f64;
@@ -433,7 +525,7 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
                             dst,
                             tag(step, d + 1, micro, DIR_FWD),
                             y,
-                            ctx.hop(d),
+                            ctx.hop(d) * nf,
                         )?;
                     }
                     stash[chunk][micro] = Some(x);
@@ -453,21 +545,23 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
                     let x = stash[chunk][micro]
                         .take()
                         .ok_or_else(|| anyhow!("missing stash for micro {micro}"))?;
-                    let dur = if ctx.split_backward {
-                        ctx.timing.t_bwd_input
-                    } else {
-                        ctx.timing.t_bwd / vf
-                    };
+                    let dur = cf
+                        * if ctx.split_backward {
+                            ctx.timing.t_bwd_input
+                        } else {
+                            ctx.timing.t_bwd / vf
+                        };
                     let dx: Vec<f32> =
                         chunks[chunk].w.iter().zip(&dy).map(|(w, g)| w * g).collect();
                     ep.advance(dur);
+                    step_compute += dur;
                     if d > 0 {
                         let dst = ctx.dp_rank * s_n + (d - 1) % s_n;
                         ep.send_with_latency(
                             dst,
                             tag(step, d - 1, micro, DIR_BWD),
                             dx,
-                            ctx.hop(d - 1),
+                            ctx.hop(d - 1) * nf,
                         )?;
                     }
                     if ctx.split_backward {
@@ -485,7 +579,9 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
                     for i in 0..w_len {
                         grads[chunk][i] += x[i] * dy[i];
                     }
-                    ep.advance(ctx.timing.t_bwd_weight);
+                    let dur = ctx.timing.t_bwd_weight * cf;
+                    ep.advance(dur);
+                    step_compute += dur;
                 }
             }
         }
@@ -500,9 +596,15 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
         }
         quantize_dyadic(&mut flat);
         let cost = ctx.dp_group.allreduce(ctx.dp_rank, &mut flat);
-        let sync = ctx.timing.lps * cost.seconds * (1.0 - DP_OVERLAP);
-        ep.advance(ctx.timing.t_update - ctx.timing.t_update_comm + sync);
+        let sync = ctx.timing.lps * cost.seconds * (1.0 - DP_OVERLAP) * nf;
+        let update = (ctx.timing.t_update - ctx.timing.t_update_comm) * cf;
+        ep.advance(update + sync);
         ep.add_wire(sync);
+        step_compute += update;
+        if ctx.dp_rank == 0 {
+            ctx.shared.compute.lock().unwrap()[ctx.stage][step - ctx.start_step] =
+                step_compute;
+        }
 
         // Adam update (gradient averaged over the global batch).
         let gscale = 1.0 / (b * ctx.dp) as f32;
@@ -541,7 +643,15 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
                 };
                 std::fs::create_dir_all(dir)
                     .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+                // Flat per-stage file: always the latest state (what
+                // `resume_from` and the hot-swap migration read) — then
+                // an archived generation, pruned to `keep_last`.
                 checkpoint::save(stage_ckpt_path(dir, ctx.stage), &metas, &state)?;
+                let gen = gen_dir(dir, state.step);
+                std::fs::create_dir_all(&gen)
+                    .with_context(|| format!("creating checkpoint dir {gen:?}"))?;
+                checkpoint::save(stage_ckpt_path(&gen, ctx.stage), &metas, &state)?;
+                prune_generations(dir, ctx.s_n, ctx.keep_last);
             }
         }
     }
@@ -682,6 +792,126 @@ mod tests {
             for (a, b) in resumed.final_params.iter().zip(&full.final_params) {
                 assert_eq!(a, b, "{schedule}: final params drifted");
             }
+        }
+    }
+
+    #[test]
+    fn faults_scale_time_but_never_numerics() {
+        use crate::elastic::fault::{FaultEvent, FaultKind, FaultPlan};
+        let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+        let opts = VirtualOptions { steps: 3, ..Default::default() };
+        let healthy = train_virtual(&plan, &opts).unwrap();
+        let faults = FaultPlan {
+            seed: 1,
+            events: vec![
+                FaultEvent { step: 0, stage: 1, kind: FaultKind::Slowdown { factor: 2.0 } },
+                FaultEvent { step: 0, stage: 0, kind: FaultKind::NicDegrade { factor: 3.0 } },
+            ],
+        };
+        let faulty = train_virtual(
+            &plan,
+            &VirtualOptions { faults: Some(faults), ..opts.clone() },
+        )
+        .unwrap();
+        assert_eq!(faulty.losses, healthy.losses, "faults must not touch numerics");
+        assert_eq!(faulty.final_params, healthy.final_params);
+        assert!(faulty.virtual_seconds > healthy.virtual_seconds);
+        assert_eq!(faulty.halted_at, None);
+        // The slowdown shows up in the heartbeat stream at exactly ×2 on
+        // the faulty stage and ×1 on the healthy one.
+        for step in 0..3 {
+            let r1 = faulty.stage_compute_seconds[1][step] / healthy.stage_compute_seconds[1][step];
+            let r0 = faulty.stage_compute_seconds[0][step] / healthy.stage_compute_seconds[0][step];
+            assert!((r1 - 2.0).abs() < 1e-9, "stage 1 step {step}: {r1}");
+            assert!((r0 - 1.0).abs() < 1e-9, "stage 0 step {step}: {r0}");
+        }
+    }
+
+    #[test]
+    fn chip_death_drains_at_the_step_boundary() {
+        use crate::elastic::fault::{FaultEvent, FaultKind, FaultPlan};
+        let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+        let healthy = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 5, ..Default::default() },
+        )
+        .unwrap();
+        let faults = FaultPlan {
+            seed: 2,
+            events: vec![FaultEvent {
+                step: 3,
+                stage: 1,
+                kind: FaultKind::ChipDeath { nodes: 1 },
+            }],
+        };
+        let halted = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 5, faults: Some(faults), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(halted.halted_at, Some(3));
+        assert_eq!(halted.losses, healthy.losses[..3], "pre-death steps must match");
+    }
+
+    #[test]
+    fn keep_last_prunes_old_generations_but_never_the_newest() {
+        let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+        let dir = std::env::temp_dir().join("h2_virt_keep_last");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 6, ..Default::default() },
+        )
+        .unwrap();
+        let pruned = train_virtual(
+            &plan,
+            &VirtualOptions {
+                steps: 6,
+                checkpoint_dir: Some(dir.clone()),
+                checkpoint_every: 1,
+                keep_last: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(pruned.losses, full.losses);
+        // Generations 1..=6 were written; only the newest two survive.
+        for step in 1..=4u64 {
+            assert!(!gen_dir(&dir, step).exists(), "step{step} should be pruned");
+        }
+        for step in 5..=6u64 {
+            for stage in 0..2 {
+                assert!(
+                    stage_ckpt_path(&gen_dir(&dir, step), stage).exists(),
+                    "step{step}/stage{stage} must survive"
+                );
+            }
+        }
+        // The flat files still hold the latest state and resume cleanly.
+        let resumed = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 8, resume_from: Some(dir.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.start_step, 6);
+
+        // Default keep-all is preserved: no pruning without keep_last.
+        let dir_all = std::env::temp_dir().join("h2_virt_keep_all");
+        let _ = std::fs::remove_dir_all(&dir_all);
+        std::fs::create_dir_all(&dir_all).unwrap();
+        train_virtual(
+            &plan,
+            &VirtualOptions {
+                steps: 4,
+                checkpoint_dir: Some(dir_all.clone()),
+                checkpoint_every: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for step in 1..=4u64 {
+            assert!(gen_dir(&dir_all, step).exists(), "keep-all must keep step{step}");
         }
     }
 

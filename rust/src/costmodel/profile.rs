@@ -19,6 +19,7 @@
 //! only ever consumes this table, exactly like the paper's searcher.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use crate::comm::{allreduce_cost, CommAlgo, CommTopology};
@@ -163,6 +164,8 @@ type ProfileKey = (ModelShape, ChipKind, usize, usize, usize, CommAlgo, NicAssig
 #[derive(Debug, Default)]
 pub struct ProfileCache {
     map: RwLock<HashMap<ProfileKey, LayerProfile>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
 }
 
 impl ProfileCache {
@@ -187,11 +190,13 @@ impl ProfileCache {
     ) -> LayerProfile {
         let key = (*model, spec.kind, tp, micro_tokens, dp, comm_algo, assign);
         if let Some(p) = self.map.read().expect("profile cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return *p;
         }
         // Compute outside any lock; a racing duplicate insert stores the
         // identical value (the profiler is deterministic), so last-write-
         // wins is harmless.
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let p = profile_layer_comm(spec, model, tp, micro_tokens, dp, comm_algo, assign);
         self.map.write().expect("profile cache poisoned").insert(key, p);
         p
@@ -205,6 +210,16 @@ impl ProfileCache {
     /// Whether nothing has been profiled yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Lookups served from the cache so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to run the profiler so far.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 

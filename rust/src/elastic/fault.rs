@@ -1,0 +1,327 @@
+//! Deterministic, seedable fault injection.
+//!
+//! A [`FaultPlan`] is a replayable script of hardware misbehavior — chip
+//! death, persistent compute slowdown, NIC degradation, recovery — keyed
+//! by training step and pipeline stage. Both the discrete-event simulator
+//! (`sim::simulate_plan_under_faults`) and the coordinator's virtual
+//! evaluator (`coordinator::train_virtual`) consume the *same* plan, so a
+//! kill-chip-at-step-N scenario replays identically across evaluators.
+//!
+//! Faults scale *time*, never numerics: a slowed or NIC-degraded stage
+//! computes exactly what a healthy one computes, only later — which is
+//! what keeps the elastic hot-swap loss trajectory bit-comparable to an
+//! uninterrupted run. A [`FaultKind::ChipDeath`] is the one exception:
+//! the dead stage cannot execute at all, so the run drains at the step
+//! boundary before the death and hands off to the elastic loop
+//! (detect → replan → migrate, see [`crate::elastic`]).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// What goes wrong (or right again) at one [`FaultEvent`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Whole nodes of the stage's chip group die permanently. The run
+    /// drains at the step boundary *before* `step`; the elastic loop
+    /// excludes the dead chips and re-plans.
+    ChipDeath {
+        /// Number of whole nodes lost (chips = nodes × chips-per-node).
+        nodes: usize,
+    },
+    /// Persistent compute slowdown: the stage's forward/backward/update
+    /// compute takes `factor` × its healthy time until a
+    /// [`FaultKind::Recover`] event on the same stage.
+    Slowdown {
+        /// Multiplier on the stage's compute time (≥ 1 slows it down).
+        factor: f64,
+    },
+    /// NIC degradation: the stage's P2P hops and exposed DP-sync slice
+    /// take `factor` × their healthy time until recovery.
+    NicDegrade {
+        /// Multiplier on the stage's communication time (≥ 1 degrades).
+        factor: f64,
+    },
+    /// The stage returns to healthy timing (clears any active slowdown
+    /// and NIC degradation).
+    Recover,
+}
+
+impl FaultKind {
+    fn token(&self) -> &'static str {
+        match self {
+            FaultKind::ChipDeath { .. } => "chip-death",
+            FaultKind::Slowdown { .. } => "slowdown",
+            FaultKind::NicDegrade { .. } => "nic-degrade",
+            FaultKind::Recover => "recover",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` hits pipeline stage `stage` at the start
+/// of training step `step`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Training step the event fires at (start-of-step semantics).
+    pub step: usize,
+    /// Global pipeline stage index the event hits.
+    pub stage: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seedable, serializable fault script.
+///
+/// The `seed` records how a generated plan was derived (and salts
+/// [`FaultPlan::generate`]); hand-written plans may use any value. Events
+/// are applied in list order, so the plan is replayable byte-for-byte —
+/// it round-trips through JSON losslessly and can travel inside an
+/// [`crate::plan::ExecutionPlan`] (format v4) or a standalone
+/// `--faults` file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the plan was generated from (informational for hand-written
+    /// plans).
+    pub seed: u64,
+    /// The fault script, applied in order.
+    pub events: Vec<FaultEvent>,
+}
+
+/// Per-stage multiplicative timing state at one step, folded from every
+/// event at or before it: `(compute factor, nic factor)`.
+pub type FaultFactors = (f64, f64);
+
+impl FaultPlan {
+    /// A plan with no events (healthy cluster).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Generate a small random fault script: a few slowdown / NIC /
+    /// recover events over `steps` steps and `stages` stages, plus — when
+    /// `with_death` — one chip-death event in the back half of the run.
+    /// Deterministic in `seed`.
+    pub fn generate(seed: u64, steps: usize, stages: usize, with_death: bool) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017_FA_017);
+        let mut events = Vec::new();
+        let n = rng.usize(1, 4);
+        for _ in 0..n {
+            let step = rng.usize(1, steps.max(2));
+            let stage = rng.usize(0, stages.saturating_sub(1));
+            let kind = match rng.usize(0, 2) {
+                0 => FaultKind::Slowdown { factor: 1.0 + rng.usize(5, 30) as f64 / 10.0 },
+                1 => FaultKind::NicDegrade { factor: 1.0 + rng.usize(5, 30) as f64 / 10.0 },
+                _ => FaultKind::Recover,
+            };
+            events.push(FaultEvent { step, stage, kind });
+        }
+        if with_death {
+            let step = (steps / 2).max(1) + rng.usize(0, steps.saturating_sub(steps / 2 + 1));
+            let stage = rng.usize(0, stages.saturating_sub(1));
+            events.push(FaultEvent { step, stage, kind: FaultKind::ChipDeath { nodes: 1 } });
+        }
+        events.sort_by_key(|e| (e.step, e.stage));
+        FaultPlan { seed, events }
+    }
+
+    /// The effective `(compute, nic)` time multipliers for `stage` at
+    /// `step`: every event at or before `step` on that stage is folded in
+    /// list order (later events override earlier ones of the same class;
+    /// recover resets both to 1.0). Chip death carries no factor — it
+    /// halts the run instead (see [`FaultPlan::first_death`]).
+    pub fn factors_at(&self, step: usize, stage: usize) -> FaultFactors {
+        let (mut compute, mut nic) = (1.0f64, 1.0f64);
+        for e in &self.events {
+            if e.step > step || e.stage != stage {
+                continue;
+            }
+            match e.kind {
+                FaultKind::Slowdown { factor } => compute = factor,
+                FaultKind::NicDegrade { factor } => nic = factor,
+                FaultKind::Recover => {
+                    compute = 1.0;
+                    nic = 1.0;
+                }
+                FaultKind::ChipDeath { .. } => {}
+            }
+        }
+        (compute, nic)
+    }
+
+    /// The earliest chip-death event, if any — the step the run must
+    /// drain at (start-of-step semantics: steps `0..step` complete).
+    pub fn first_death(&self) -> Option<&FaultEvent> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::ChipDeath { .. }))
+            .min_by_key(|e| e.step)
+    }
+
+    /// Structural validation against a pipeline of `s_n` stages.
+    pub fn validate(&self, s_n: usize) -> Result<()> {
+        for e in &self.events {
+            if e.stage >= s_n {
+                bail!("fault event at step {} targets stage {} of a {s_n}-stage pipeline",
+                      e.step, e.stage);
+            }
+            match e.kind {
+                FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
+                    if !factor.is_finite() || factor <= 0.0 {
+                        bail!("fault factor {factor} at step {} is not positive finite", e.step);
+                    }
+                }
+                FaultKind::ChipDeath { nodes } => {
+                    if nodes == 0 {
+                        bail!("chip-death event at step {} kills zero nodes", e.step);
+                    }
+                }
+                FaultKind::Recover => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize (seeds travel as decimal strings, like plan train seeds,
+    /// so full-range u64 values survive the f64 JSON number space).
+    pub fn to_json(&self) -> Value {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("step", json::num(e.step as f64)),
+                    ("stage", json::num(e.stage as f64)),
+                    ("kind", json::s(e.kind.token())),
+                ];
+                match e.kind {
+                    FaultKind::ChipDeath { nodes } => {
+                        fields.push(("nodes", json::num(nodes as f64)));
+                    }
+                    FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
+                        fields.push(("factor", json::num(factor)));
+                    }
+                    FaultKind::Recover => {}
+                }
+                json::obj(fields)
+            })
+            .collect();
+        json::obj(vec![
+            ("seed", json::s(&self.seed.to_string())),
+            ("events", json::arr(events)),
+        ])
+    }
+
+    /// Parse a serialized fault plan.
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let seed = match v.get("seed")? {
+            Value::Str(s) => s.parse::<u64>().map_err(|e| anyhow!("bad fault seed `{s}`: {e}"))?,
+            other => other.u64()?,
+        };
+        let mut events = Vec::new();
+        for e in v.get("events")?.arr()? {
+            let kind = match e.get("kind")?.str()? {
+                "chip-death" => FaultKind::ChipDeath { nodes: e.get("nodes")?.usize()? },
+                "slowdown" => FaultKind::Slowdown { factor: e.get("factor")?.num()? },
+                "nic-degrade" => FaultKind::NicDegrade { factor: e.get("factor")?.num()? },
+                "recover" => FaultKind::Recover,
+                other => bail!("unknown fault kind `{other}`"),
+            };
+            events.push(FaultEvent {
+                step: e.get("step")?.usize()?,
+                stage: e.get("stage")?.usize()?,
+                kind,
+            });
+        }
+        Ok(FaultPlan { seed, events })
+    }
+
+    /// Load a fault plan from a JSON file (the CLI `--faults` path).
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        FaultPlan::from_json(&Value::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample() -> FaultPlan {
+        FaultPlan {
+            seed: u64::MAX - 1, // exercises the decimal-string seed path
+            events: vec![
+                FaultEvent { step: 2, stage: 0, kind: FaultKind::Slowdown { factor: 1.5 } },
+                FaultEvent { step: 3, stage: 1, kind: FaultKind::NicDegrade { factor: 2.0 } },
+                FaultEvent { step: 4, stage: 0, kind: FaultKind::Recover },
+                FaultEvent { step: 5, stage: 1, kind: FaultKind::ChipDeath { nodes: 1 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let plan = sample();
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        // And through text, the way a --faults file travels.
+        let text = plan.to_json().to_string_pretty();
+        let back = FaultPlan::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn factors_fold_in_order_and_recover_resets() {
+        let plan = sample();
+        assert_eq!(plan.factors_at(1, 0), (1.0, 1.0));
+        assert_eq!(plan.factors_at(2, 0), (1.5, 1.0));
+        assert_eq!(plan.factors_at(3, 0), (1.5, 1.0));
+        assert_eq!(plan.factors_at(3, 1), (1.0, 2.0));
+        assert_eq!(plan.factors_at(4, 0), (1.0, 1.0), "recover clears the slowdown");
+        // Death carries no factor.
+        assert_eq!(plan.factors_at(9, 1), (1.0, 2.0));
+    }
+
+    #[test]
+    fn first_death_finds_the_earliest() {
+        assert_eq!(sample().first_death().unwrap().step, 5);
+        assert!(FaultPlan::none().first_death().is_none());
+    }
+
+    #[test]
+    fn validation_rejects_bad_events() {
+        let plan = sample();
+        assert!(plan.validate(2).is_ok());
+        assert!(plan.validate(1).is_err(), "stage 1 out of a 1-stage pipeline");
+        let bad = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                step: 0,
+                stage: 0,
+                kind: FaultKind::Slowdown { factor: 0.0 },
+            }],
+        };
+        assert!(bad.validate(1).is_err());
+    }
+
+    #[test]
+    fn generated_plans_are_deterministic_valid_and_roundtrip() {
+        prop::check(100, |rng| {
+            let seed = rng.next_u64();
+            let steps = rng.usize(2, 20);
+            let stages = rng.usize(1, 8);
+            let with_death = rng.usize(0, 1) == 1;
+            let a = FaultPlan::generate(seed, steps, stages, with_death);
+            let b = FaultPlan::generate(seed, steps, stages, with_death);
+            prop::assert_prop(a == b, "generation must be deterministic in the seed")?;
+            prop::assert_prop(a.validate(stages).is_ok(), format!("invalid: {a:?}"))?;
+            prop::assert_prop(
+                with_death == a.first_death().is_some(),
+                "death present iff requested",
+            )?;
+            let back = FaultPlan::from_json(&a.to_json())
+                .map_err(|e| format!("reparse failed: {e}"))?;
+            prop::assert_prop(a == back, "JSON round-trip must be lossless")
+        });
+    }
+}

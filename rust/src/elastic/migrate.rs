@@ -1,0 +1,393 @@
+//! Hot-swap state migration and the recovery-vs-restart timeline.
+//!
+//! After a re-plan, each pipeline stage's parameter/optimizer state must
+//! land on the stage that owns those layers under the *new* plan. The
+//! layer→stage mapping diff between the incumbent and the replanned plan
+//! tells each stage exactly what to send and receive; the transfer is
+//! executed over the DiComm fabric with hop latencies derived from the
+//! plans' own link tables, so migration time is modeled with the same
+//! machinery as everything else.
+//!
+//! Bit-identity: the virtual coordinator's trainable state is per-stage
+//! virtual chunks keyed by *global* chunk index, and a swap-compatible
+//! re-plan preserves the global chunk layout (same pipeline depth, same
+//! schedule, same DP degree — see [`swap_compatible`]). Migrating a
+//! checkpoint and resuming is therefore exactly restart-from-checkpoint
+//! on the surviving cluster; the elastic win is *time* (a warm-cache
+//! incremental re-plan plus a diff-only state transfer versus a cold
+//! search plus a full-state restore), never numerics.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::comm::{fabric, LatencyFn};
+use crate::coordinator::checkpoint;
+use crate::coordinator::exec::{chunk_metas, stage_ckpt_path};
+use crate::plan::ExecutionPlan;
+
+/// One layer whose owning stage changes between plans.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerMove {
+    /// Model layer index.
+    pub layer: usize,
+    /// Owning stage under the incumbent plan.
+    pub from_stage: usize,
+    /// Owning stage under the new plan.
+    pub to_stage: usize,
+    /// Parameter + optimizer state bytes to move (fp32 p, m, v).
+    pub bytes: f64,
+}
+
+/// What a hot-swap migration did (or would do).
+#[derive(Clone, Debug)]
+pub struct MigrationReport {
+    /// Layers whose owning stage changed.
+    pub moves: Vec<LayerMove>,
+    /// Total state bytes transferred between stages.
+    pub bytes: f64,
+    /// Modeled transfer seconds over the DiComm fabric (max rank clock).
+    pub seconds: f64,
+}
+
+/// Check that `new` can take over `old`'s training state mid-run with a
+/// bit-identical trajectory: the virtual coordinator's state layout is
+/// keyed by (global chunk index, DP degree, micro-batches, schedule), so
+/// all four must survive the re-plan. Layer counts, TP widths and chip
+/// assignments may change freely — they move time, not numerics.
+pub fn swap_compatible(old: &ExecutionPlan, new: &ExecutionPlan) -> Result<()> {
+    ensure!(
+        old.model == new.model,
+        "hot-swap requires the same model shape (`{}` vs `{}`)",
+        old.name,
+        new.name
+    );
+    ensure!(
+        old.strategy.s_dp == new.strategy.s_dp,
+        "hot-swap requires the same DP degree ({} vs {})",
+        old.strategy.s_dp,
+        new.strategy.s_dp
+    );
+    ensure!(
+        old.strategy.micro_batches == new.strategy.micro_batches,
+        "hot-swap requires the same micro-batch count ({} vs {})",
+        old.strategy.micro_batches,
+        new.strategy.micro_batches
+    );
+    ensure!(
+        old.strategy.schedule == new.strategy.schedule,
+        "hot-swap requires the same pipeline schedule ({} vs {})",
+        old.strategy.schedule,
+        new.strategy.schedule
+    );
+    let (old_pp, new_pp) = (total_stages(old), total_stages(new));
+    ensure!(
+        old_pp == new_pp,
+        "hot-swap requires the same pipeline depth ({old_pp} vs {new_pp} stages)"
+    );
+    Ok(())
+}
+
+/// Total pipeline stages of a plan (Σ per-group `s_pp`).
+pub fn total_stages(plan: &ExecutionPlan) -> usize {
+    plan.strategy.plans.iter().map(|p| p.s_pp).sum()
+}
+
+/// Owning stage per model layer, in layer order (stages are groups in
+/// order, `s_pp` stages within each, layers contiguous).
+fn layer_stage_map(plan: &ExecutionPlan) -> Vec<usize> {
+    let mut map = Vec::with_capacity(plan.model.n_layers);
+    let mut stage = 0usize;
+    for gp in &plan.strategy.plans {
+        let lps = gp.layers / gp.s_pp;
+        for _ in 0..gp.s_pp {
+            map.extend(std::iter::repeat(stage).take(lps));
+            stage += 1;
+        }
+    }
+    map
+}
+
+/// Per-stage fp32 parameter+optimizer state bytes per layer (p, m, v =
+/// 12 bytes/param; the timing table carries bf16 gradient bytes, 2/param).
+fn state_bytes_per_layer(plan: &ExecutionPlan) -> Vec<f64> {
+    let groups = plan.group_refs();
+    let sim_opts = plan.sim_options();
+    let stages = crate::sim::pipeline::plan_stage_sims(
+        &plan.model,
+        &groups,
+        &plan.strategy,
+        plan.micro_tokens,
+        &sim_opts,
+    );
+    stages.iter().map(|st| st.grad_bytes_per_layer * 6.0).collect()
+}
+
+/// Per-hop seconds-per-byte out of each stage, from the plan's own link
+/// table (the table prices one activation hop of known size).
+fn per_byte_hops(plan: &ExecutionPlan) -> Vec<f64> {
+    let groups = plan.group_refs();
+    let sim_opts = plan.sim_options();
+    let stages = crate::sim::pipeline::plan_stage_sims(
+        &plan.model,
+        &groups,
+        &plan.strategy,
+        plan.micro_tokens,
+        &sim_opts,
+    );
+    let (links, wrap) =
+        crate::sim::pipeline::stage_links(&stages, &groups, &plan.model, plan.micro_tokens,
+                                          &sim_opts);
+    let act_bytes = (plan.micro_tokens * plan.model.hidden * 2) as f64;
+    let mut per_byte: Vec<f64> = links.iter().map(|l| l / act_bytes).collect();
+    if let Some(last) = per_byte.last_mut() {
+        *last = wrap / act_bytes;
+    }
+    per_byte
+}
+
+/// The layer→stage mapping diff between two swap-compatible plans: every
+/// layer whose owning stage changes, with its state bytes (priced at the
+/// source stage's sharding).
+pub fn migration_moves(old: &ExecutionPlan, new: &ExecutionPlan) -> Result<Vec<LayerMove>> {
+    swap_compatible(old, new)?;
+    let from = layer_stage_map(old);
+    let to = layer_stage_map(new);
+    ensure!(
+        from.len() == to.len() && from.len() == old.model.n_layers,
+        "layer maps must cover the model ({} vs {} vs {} layers)",
+        from.len(),
+        to.len(),
+        old.model.n_layers
+    );
+    let bytes = state_bytes_per_layer(old);
+    Ok(from
+        .iter()
+        .zip(&to)
+        .enumerate()
+        .filter(|(_, (f, t))| f != t)
+        .map(|(layer, (&f, &t))| LayerMove {
+            layer,
+            from_stage: f,
+            to_stage: t,
+            bytes: bytes[f],
+        })
+        .collect())
+}
+
+/// Execute the migration's sends/receives over a DiComm fabric — one
+/// endpoint per stage, hop latency per transfer derived from the old
+/// plan's link table — and return the modeled transfer time (the slowest
+/// rank's clock).
+fn execute_moves(old: &ExecutionPlan, moves: &[LayerMove]) -> Result<f64> {
+    if moves.is_empty() {
+        return Ok(0.0);
+    }
+    let per_byte = per_byte_hops(old);
+    let s_n = per_byte.len();
+    let zero: LatencyFn = Arc::new(|_, _, _| 0.0);
+    let mut endpoints = fabric(s_n, zero);
+    // All sends first (non-blocking), then the receives: the fabric's
+    // arrival rule (arrive = depart + latency, receiver clock = max)
+    // models every stage shipping its outgoing layers concurrently.
+    for (i, mv) in moves.iter().enumerate() {
+        let (lo, hi) = (mv.from_stage.min(mv.to_stage), mv.from_stage.max(mv.to_stage));
+        let latency: f64 = (lo..hi).map(|h| mv.bytes * per_byte[h]).sum();
+        endpoints[mv.from_stage].send_with_latency(mv.to_stage, i as u64, Vec::new(), latency)?;
+    }
+    for (i, mv) in moves.iter().enumerate() {
+        endpoints[mv.to_stage].recv(mv.from_stage, i as u64)?;
+    }
+    Ok(endpoints
+        .iter()
+        .map(|ep| ep.now())
+        .fold(0.0f64, f64::max))
+}
+
+/// Migrate a `train_virtual` checkpoint from `old`'s stage layout into
+/// `new`'s at `new_dir`, and model the hot-swap transfer time from the
+/// layer→stage diff. The plans must be [`swap_compatible`]; the global
+/// virtual-chunk layout is then preserved, so the migrated checkpoint
+/// resumes bit-identically to restart-from-checkpoint on the surviving
+/// cluster.
+pub fn migrate_state(
+    old: &ExecutionPlan,
+    new: &ExecutionPlan,
+    old_dir: &Path,
+    new_dir: &Path,
+) -> Result<MigrationReport> {
+    let moves = migration_moves(old, new)?;
+    let s_n = total_stages(old);
+    let v = old.strategy.schedule.virtual_stages();
+    let metas = chunk_metas(v);
+    std::fs::create_dir_all(new_dir)?;
+    let mut step = None;
+    for stage in 0..s_n {
+        let state = checkpoint::load(stage_ckpt_path(old_dir, stage), &metas)?;
+        match step {
+            None => step = Some(state.step),
+            Some(s) => ensure!(
+                s == state.step,
+                "stage {stage} checkpoint is at step {}, stage 0 at {s}",
+                state.step
+            ),
+        }
+        checkpoint::save(stage_ckpt_path(new_dir, stage), &metas, &state)?;
+    }
+    if step.is_none() {
+        bail!("plan `{}` has no pipeline stages to migrate", old.name);
+    }
+    let seconds = execute_moves(old, &moves)?;
+    let bytes = moves.iter().map(|m| m.bytes).sum();
+    Ok(MigrationReport { moves, bytes, seconds })
+}
+
+/// Modeled seconds for a cold restart to restore *every* stage's full
+/// parameter/optimizer state (all stages restore concurrently; per-byte
+/// cost as the interconnect's, a deliberately generous assumption in the
+/// restart baseline's favor).
+pub fn restore_seconds(plan: &ExecutionPlan) -> f64 {
+    let per_byte = per_byte_hops(plan);
+    let bytes = state_bytes_per_layer(plan);
+    let map = layer_stage_map(plan);
+    let s_n = per_byte.len();
+    (0..s_n)
+        .map(|s| {
+            let layers = map.iter().filter(|&&m| m == s).count() as f64;
+            layers * bytes[s] * per_byte[s.min(per_byte.len() - 1)]
+        })
+        .fold(0.0f64, f64::max)
+}
+
+/// The recovery-vs-restart comparison for one kill-a-chip scenario, per
+/// evaluator: feed it the evaluator's step seconds plus the measured
+/// re-plan and cold-search times, read back both totals. Detection
+/// (the debounce window) is paid on both sides, so it cancels out of the
+/// margin.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryTimeline {
+    /// Seconds to drain in-flight micro-batches (one step boundary).
+    pub drain_seconds: f64,
+    /// Seconds for the debounced detection window.
+    pub detect_seconds: f64,
+    /// Measured incremental re-plan wall-clock.
+    pub replan_seconds: f64,
+    /// Modeled diff-only state migration over the fabric.
+    pub migrate_seconds: f64,
+    /// Measured cold two-stage search wall-clock (restart path).
+    pub search_seconds: f64,
+    /// Modeled full-state restore from the checkpoint (restart path).
+    pub restore_seconds: f64,
+}
+
+impl RecoveryTimeline {
+    /// Assemble a timeline: `step_seconds` is one evaluator's per-step
+    /// time of the *incumbent* plan, `debounce` the monitor's window.
+    pub fn new(
+        old: &ExecutionPlan,
+        new: &ExecutionPlan,
+        step_seconds: f64,
+        debounce: usize,
+        replan_seconds: f64,
+        search_seconds: f64,
+    ) -> Result<RecoveryTimeline> {
+        let moves = migration_moves(old, new)?;
+        let migrate_seconds = execute_moves(old, &moves)?;
+        Ok(RecoveryTimeline {
+            drain_seconds: step_seconds,
+            detect_seconds: debounce as f64 * step_seconds,
+            replan_seconds,
+            migrate_seconds,
+            search_seconds,
+            restore_seconds: restore_seconds(new),
+        })
+    }
+
+    /// Elastic path: drain + detect + warm re-plan + diff migration.
+    pub fn recovery_seconds(&self) -> f64 {
+        self.drain_seconds + self.detect_seconds + self.replan_seconds + self.migrate_seconds
+    }
+
+    /// Restart path: drain + detect + cold search + full-state restore.
+    pub fn restart_seconds(&self) -> f64 {
+        self.drain_seconds + self.detect_seconds + self.search_seconds + self.restore_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommAlgo;
+    use crate::costmodel::{GroupPlan, ModelShape, Schedule, Strategy};
+    use crate::hetero::{ChipKind, Cluster};
+    use crate::plan::PlanBuilder;
+
+    fn plan(layers_a: usize, layers_b: usize, tp_b: usize, chips_b: usize) -> ExecutionPlan {
+        let model = ModelShape {
+            n_layers: 8,
+            hidden: 2048,
+            n_heads: 16,
+            n_kv_heads: 16,
+            intermediate: 8192,
+            vocab: 32000,
+            seq_len: 4096,
+        };
+        let cluster = Cluster::new(
+            "mig-2stage",
+            vec![(ChipKind::A, 16), (ChipKind::B, chips_b)],
+        );
+        PlanBuilder::new("mig")
+            .model(model)
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 8,
+                schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
+                plans: vec![
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: layers_a, recompute: false },
+                    GroupPlan { s_pp: 1, s_tp: tp_b, layers: layers_b, recompute: true },
+                ],
+            })
+            .gbs_tokens(4 * 8 * 4096)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn identical_plans_have_no_moves() {
+        let p = plan(4, 4, 4, 16);
+        let moves = migration_moves(&p, &p).unwrap();
+        assert!(moves.is_empty(), "{moves:?}");
+        assert_eq!(execute_moves(&p, &moves).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn resharded_layers_move_with_positive_modeled_time() {
+        // The re-plan shifts two layers from stage 1 (B, halved) onto
+        // stage 0 (A): exactly layers 4 and 5 change owner.
+        let old = plan(4, 4, 4, 16);
+        let new = plan(6, 2, 2, 8);
+        swap_compatible(&old, &new).unwrap();
+        let moves = migration_moves(&old, &new).unwrap();
+        assert_eq!(
+            moves.iter().map(|m| (m.layer, m.from_stage, m.to_stage)).collect::<Vec<_>>(),
+            vec![(4, 1, 0), (5, 1, 0)]
+        );
+        assert!(moves.iter().all(|m| m.bytes > 0.0));
+        let seconds = execute_moves(&old, &moves).unwrap();
+        assert!(seconds > 0.0 && seconds.is_finite());
+        // A diff-only migration beats a full restore.
+        assert!(seconds < restore_seconds(&new), "{seconds} vs {}", restore_seconds(&new));
+    }
+
+    #[test]
+    fn incompatible_plans_are_rejected() {
+        let old = plan(4, 4, 4, 16);
+        let mut new = plan(6, 2, 2, 8);
+        new.strategy.s_dp = 2;
+        new.strategy.micro_batches = 16;
+        assert!(swap_compatible(&old, &new).is_err());
+    }
+}

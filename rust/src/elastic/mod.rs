@@ -1,0 +1,43 @@
+//! Elastic training: survive chip loss and stragglers without losing the
+//! run.
+//!
+//! Production hyper-heterogeneous clusters lose nodes and degrade NICs
+//! mid-run as a matter of course; H2's answer is a closed loop over the
+//! existing evaluators rather than a separate system:
+//!
+//! ```text
+//!   FaultPlan ──► train_virtual / simulator (deterministic replay)
+//!                      │ per-stage compute seconds
+//!                      ▼
+//!   StepMonitor ──► ElasticEvent (dead / straggler / recovered)
+//!                      │ debounced
+//!                      ▼
+//!   auto::replan ──► v4 plan (plan_epoch + 1, dead chips excluded)
+//!                      │ seeded B&B + warm ProfileCache
+//!                      ▼
+//!   migrate_state ──► hot-swap resume (bit-identical to
+//!                      restart-from-checkpoint on the survivors)
+//! ```
+//!
+//! * [`fault`] — deterministic, seedable fault injection shared by the
+//!   simulator and the virtual coordinator, so a kill-chip-at-step-N
+//!   scenario replays identically across evaluators.
+//! * [`monitor`] — per-(stage × DP replica) step-time drift detection
+//!   against the plan's predicted `StageSim` times, with debounce.
+//! * [`migrate`] — the layer→stage mapping diff, the DiComm-modeled
+//!   state transfer, checkpoint migration, and the recovery-vs-restart
+//!   timeline.
+//!
+//! Re-planning itself lives in [`crate::auto::replan`], next to the
+//! search it reuses.
+
+pub mod fault;
+pub mod migrate;
+pub mod monitor;
+
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use migrate::{
+    migrate_state, migration_moves, restore_seconds, swap_compatible, total_stages, LayerMove,
+    MigrationReport, RecoveryTimeline,
+};
+pub use monitor::{predicted_stage_compute, ElasticEvent, MonitorConfig, StepMonitor};

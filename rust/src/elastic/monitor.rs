@@ -1,0 +1,242 @@
+//! Per-stage step-time monitoring with debounced, typed events.
+//!
+//! The coordinator (and any outer training loop) feeds the monitor one
+//! observation per (stage × DP replica) per step — the stage's *compute*
+//! seconds for that step, or `None` for a missed heartbeat. The monitor
+//! compares each observation against the plan's predicted per-stage
+//! compute time (the same [`crate::sim::pipeline`] timing table the
+//! simulator and virtual coordinator execute) and raises a typed
+//! [`ElasticEvent`] once an anomaly survives a debounce window —
+//! transient hiccups never trigger a re-plan.
+
+use anyhow::Result;
+
+use crate::plan::ExecutionPlan;
+
+/// Monitor thresholds and debounce window.
+#[derive(Clone, Copy, Debug)]
+pub struct MonitorConfig {
+    /// Observed/predicted compute ratio above which a step counts as
+    /// straggling.
+    pub straggler_factor: f64,
+    /// Consecutive anomalous (or missed) steps before an event fires.
+    pub debounce: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig { straggler_factor: 1.3, debounce: 2 }
+    }
+}
+
+/// A debounced monitor verdict for one (stage × DP replica).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ElasticEvent {
+    /// The replica missed `debounce` consecutive heartbeats: treat its
+    /// chips as dead and re-plan without them.
+    Dead {
+        /// Pipeline stage of the failed replica.
+        stage: usize,
+        /// DP replica index.
+        dp_rank: usize,
+    },
+    /// The replica ran ≥ `straggler_factor` × its predicted compute time
+    /// for `debounce` consecutive steps.
+    Straggler {
+        /// Pipeline stage of the slow replica.
+        stage: usize,
+        /// DP replica index.
+        dp_rank: usize,
+        /// Observed/predicted ratio of the step that fired the event.
+        factor: f64,
+    },
+    /// A previously-flagged replica ran healthily for `debounce`
+    /// consecutive steps.
+    Recovered {
+        /// Pipeline stage of the recovered replica.
+        stage: usize,
+        /// DP replica index.
+        dp_rank: usize,
+    },
+}
+
+/// Per-replica debounce state.
+#[derive(Clone, Copy, Debug, Default)]
+struct ReplicaState {
+    slow_streak: usize,
+    miss_streak: usize,
+    healthy_streak: usize,
+    /// An un-recovered straggler/dead event has fired.
+    flagged: bool,
+}
+
+/// The per-stage timing monitor: one [`ReplicaState`] per
+/// (stage × DP replica), compared against the plan's predicted per-stage
+/// compute seconds.
+#[derive(Clone, Debug)]
+pub struct StepMonitor {
+    cfg: MonitorConfig,
+    /// Predicted healthy compute seconds per stage per step.
+    expected: Vec<f64>,
+    dp: usize,
+    states: Vec<ReplicaState>,
+}
+
+impl StepMonitor {
+    /// Build a monitor from explicit per-stage predictions.
+    pub fn new(expected: Vec<f64>, dp: usize, cfg: MonitorConfig) -> StepMonitor {
+        let states = vec![ReplicaState::default(); expected.len() * dp];
+        StepMonitor { cfg, expected, dp, states }
+    }
+
+    /// Build a monitor from a plan's own timing tables: the predicted
+    /// per-stage compute seconds per step are exactly what the virtual
+    /// coordinator advances its clock by on a healthy step
+    /// (`b·(t_fwd + t_bwd) + t_update − t_update_comm`), so a fault
+    /// factor of k shows up as an observed/predicted ratio of ≈ k.
+    pub fn for_plan(plan: &ExecutionPlan) -> Result<StepMonitor> {
+        let expected = predicted_stage_compute(plan)?;
+        Ok(StepMonitor::new(expected, plan.strategy.s_dp, MonitorConfig::default()))
+    }
+
+    /// Same, with explicit thresholds.
+    pub fn for_plan_with(plan: &ExecutionPlan, cfg: MonitorConfig) -> Result<StepMonitor> {
+        let expected = predicted_stage_compute(plan)?;
+        Ok(StepMonitor::new(expected, plan.strategy.s_dp, cfg))
+    }
+
+    /// Number of monitored pipeline stages.
+    pub fn stages(&self) -> usize {
+        self.expected.len()
+    }
+
+    /// Feed one observation: `seconds` is the replica's compute time for
+    /// this step, `None` a missed heartbeat. Returns the debounced event
+    /// this observation fires, if any.
+    pub fn observe(
+        &mut self,
+        stage: usize,
+        dp_rank: usize,
+        seconds: Option<f64>,
+    ) -> Option<ElasticEvent> {
+        let idx = stage * self.dp + dp_rank;
+        let expected = self.expected[stage];
+        let st = &mut self.states[idx];
+        match seconds {
+            None => {
+                st.miss_streak += 1;
+                st.slow_streak = 0;
+                st.healthy_streak = 0;
+                if st.miss_streak == self.cfg.debounce {
+                    st.flagged = true;
+                    return Some(ElasticEvent::Dead { stage, dp_rank });
+                }
+            }
+            Some(t) => {
+                st.miss_streak = 0;
+                let ratio = if expected > 0.0 { t / expected } else { 1.0 };
+                if ratio >= self.cfg.straggler_factor {
+                    st.slow_streak += 1;
+                    st.healthy_streak = 0;
+                    if st.slow_streak == self.cfg.debounce {
+                        st.flagged = true;
+                        return Some(ElasticEvent::Straggler { stage, dp_rank, factor: ratio });
+                    }
+                } else {
+                    st.slow_streak = 0;
+                    if st.flagged {
+                        st.healthy_streak += 1;
+                        if st.healthy_streak == self.cfg.debounce {
+                            st.flagged = false;
+                            st.healthy_streak = 0;
+                            return Some(ElasticEvent::Recovered { stage, dp_rank });
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Predicted healthy compute seconds per stage per step, from the same
+/// timing table the simulator and virtual coordinator execute.
+pub fn predicted_stage_compute(plan: &ExecutionPlan) -> Result<Vec<f64>> {
+    if let Err(errs) = plan.validate() {
+        anyhow::bail!(
+            "plan `{}` is invalid:\n{}",
+            plan.name,
+            crate::plan::render_errors(&errs)
+        );
+    }
+    let groups = plan.group_refs();
+    let sim_opts = plan.sim_options();
+    let stages = crate::sim::pipeline::plan_stage_sims(
+        &plan.model,
+        &groups,
+        &plan.strategy,
+        plan.micro_tokens,
+        &sim_opts,
+    );
+    let b = plan.strategy.micro_batches as f64;
+    Ok(stages
+        .iter()
+        .map(|st| b * (st.t_fwd + st.t_bwd) + st.t_update - st.t_update_comm)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(debounce: usize) -> StepMonitor {
+        StepMonitor::new(
+            vec![1.0, 2.0],
+            2,
+            MonitorConfig { straggler_factor: 1.5, debounce },
+        )
+    }
+
+    #[test]
+    fn transient_hiccups_are_debounced_away() {
+        let mut m = monitor(2);
+        assert_eq!(m.observe(0, 0, Some(3.0)), None, "first slow step only starts a streak");
+        assert_eq!(m.observe(0, 0, Some(1.0)), None, "healthy step resets it");
+        assert_eq!(m.observe(0, 0, Some(3.0)), None);
+        assert_eq!(m.observe(0, 0, None), None, "one miss only starts a streak");
+        assert_eq!(m.observe(0, 0, Some(1.0)), None);
+    }
+
+    #[test]
+    fn sustained_slowdown_fires_once_then_recovers() {
+        let mut m = monitor(2);
+        assert_eq!(m.observe(1, 1, Some(4.0)), None);
+        let e = m.observe(1, 1, Some(4.0));
+        match e {
+            Some(ElasticEvent::Straggler { stage: 1, dp_rank: 1, factor }) => {
+                assert!((factor - 2.0).abs() < 1e-12, "{factor}");
+            }
+            other => panic!("expected straggler, got {other:?}"),
+        }
+        // Still slow: no re-fire.
+        assert_eq!(m.observe(1, 1, Some(4.0)), None);
+        // Two healthy steps: recovered.
+        assert_eq!(m.observe(1, 1, Some(2.0)), None);
+        assert_eq!(
+            m.observe(1, 1, Some(2.0)),
+            Some(ElasticEvent::Recovered { stage: 1, dp_rank: 1 })
+        );
+        // Healthy and unflagged: silence.
+        assert_eq!(m.observe(1, 1, Some(2.0)), None);
+    }
+
+    #[test]
+    fn missed_heartbeats_fire_dead() {
+        let mut m = monitor(3);
+        assert_eq!(m.observe(0, 1, None), None);
+        assert_eq!(m.observe(0, 1, None), None);
+        assert_eq!(m.observe(0, 1, None), Some(ElasticEvent::Dead { stage: 0, dp_rank: 1 }));
+        // Replicas are independent.
+        assert_eq!(m.observe(0, 0, None), None);
+    }
+}

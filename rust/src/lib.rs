@@ -84,7 +84,10 @@
 //! * [`costmodel`] — the §4.3.2 iteration-time + memory cost model, with
 //!   the pipeline [`costmodel::Schedule`] as a first-class dimension.
 //! * [`auto`] — HeteroAuto strategy search (§4.3.3), parallel over
-//!   (data-parallel × schedule) candidates with branch-and-bound pruning.
+//!   (data-parallel × schedule) candidates with branch-and-bound pruning,
+//!   plus [`auto::replan`] for incremental re-planning after chip loss.
+//! * [`elastic`] — fault injection, step-time monitoring, and hot-swap
+//!   state migration: the detect → replan → migrate loop.
 //! * [`sim`] — the HeteroPP discrete-event simulator (§4.2) with a real
 //!   issue order per schedule.
 //! * [`coordinator`] — the training coordinator: executes a plan's
@@ -102,6 +105,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
+pub mod elastic;
 pub mod hetero;
 pub mod plan;
 pub mod precision;

@@ -9,21 +9,24 @@
 //! Subcommands:
 //!   train       real pipeline training over PJRT artifacts
 //!   search      HeteroAuto strategy search (§4.3)
+//!   replan      incremental re-planning after chip loss (elastic loop)
 //!   simulate    discrete-event HeteroPP simulation at paper scale
 //!   comm-bench  DiComm latency sweep (Fig 7)
 //!   precision   DiTorch precision-alignment run (Fig 5 / Table 1)
 //!   profile     analytic layer profile per chip/TP (the auto-profiler)
-//!   report      paper-table reports (Table 6 baselines, Fig 11 ratios)
+//!   report      paper-table reports (Table 6 baselines, Fig 11 ratios,
+//!               recovery-vs-restart on exp-mega)
 
 use anyhow::{bail, Result};
 
-use h2::auto::{search, SearchConfig};
+use h2::auto::{replan, search, ClusterDelta, ReplanOptions, SearchConfig};
 use h2::comm::{p2p_latency, CommAlgo, CommMode};
 use h2::config::Config;
 use h2::coordinator::{
     train, train_plan, train_virtual, StagePlan, TrainConfig, TrainReport, VirtualOptions,
 };
-use h2::costmodel::{profile_layer, tgs, uniform_1f1b, Schedule, H2_100B};
+use h2::costmodel::{profile_layer, tgs, uniform_1f1b, ProfileCache, Schedule, H2_100B};
+use h2::elastic::FaultPlan;
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
 use h2::plan::{render_errors, ExecutionPlan};
 use h2::precision::check_alignment;
@@ -39,6 +42,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "search" => cmd_search(&args),
+        "replan" => cmd_replan(&args),
         "simulate" => cmd_simulate(&args),
         "comm-bench" => cmd_comm_bench(&args),
         "precision" => cmd_precision(&args),
@@ -66,12 +70,18 @@ fn print_help() {
     println!("              --dp 1 --micros 2 --steps 20 [--lr 1e-3] [--comm ddr|tcp|gloo]");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--comm-algo ring|...|auto]");
     println!("              [--virtual]  plan-driven virtual evaluator (no artifacts)");
+    println!("              [--faults faults.json]  replay a fault-injection scenario");
+    println!("              [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-last K]");
+    println!("              [--resume-from DIR]  (--virtual only)");
     println!("              [--no-overlap] [--perturb] [--artifacts DIR]");
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
     println!("              [--split 128] [--sequential] [--emit-plan plan.json]");
-    println!("              [--progress]  periodic stderr progress lines");
+    println!("              [--progress]  periodic stderr progress lines (+ cache hits)");
+    println!("  replan      --plan plan.json --exclude-chips B=8[,A=16]");
+    println!("              [--full]  drop the hot-swap pipeline constraint");
+    println!("              [--sequential] [--out newplan.json]");
     println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--reshard srag|bcast|naive]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
@@ -79,7 +89,7 @@ fn print_help() {
     println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
     println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
     println!("  profile     [--chip A] [--dp 4]");
-    println!("  report      table6 | fig11");
+    println!("  report      table6 | fig11 | elastic [--exp exp-mega]");
 }
 
 /// Load `--config` if given (side effect: registers any custom chips).
@@ -312,6 +322,28 @@ fn cmd_train(args: &Args) -> Result<()> {
             vopts.lr = args.f64_or("lr", vopts.lr as f64)? as f32;
             vopts.seed = args.u64_or("seed", vopts.seed)?;
             vopts.log_every = args.usize_or("log-every", vopts.log_every)?;
+            // Config `elastic` section first, then flags on top: an
+            // explicit --faults file overrides both the config's path and
+            // any fault plan embedded in the execution plan.
+            if let Some(e) = config.as_ref().and_then(|c| c.elastic.as_ref()) {
+                if let Some(k) = e.keep_last {
+                    vopts.keep_last = k;
+                }
+                if let Some(path) = &e.faults {
+                    vopts.faults = Some(FaultPlan::load(path)?);
+                }
+            }
+            if let Some(p) = args.get("faults") {
+                vopts.faults = Some(FaultPlan::load(p)?);
+            }
+            if let Some(dir) = args.get("checkpoint-dir") {
+                vopts.checkpoint_dir = Some(dir.into());
+            }
+            vopts.checkpoint_every = args.usize_or("checkpoint-every", vopts.checkpoint_every)?;
+            vopts.keep_last = args.usize_or("keep-last", vopts.keep_last)?;
+            if let Some(dir) = args.get("resume-from") {
+                vopts.resume_from = Some(dir.into());
+            }
             let report = train_virtual(&plan, &vopts)?;
             println!("[h2] virtual evaluator: plan `{}` ({} stages x dp {}, {} / {})",
                      plan.name, plan.strategy.total_stages(), plan.strategy.s_dp,
@@ -320,6 +352,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                      report.step_seconds, report.comm_seconds,
                      report.losses.first().unwrap_or(&f64::NAN),
                      report.losses.last().unwrap_or(&f64::NAN));
+            if let Some(step) = report.halted_at {
+                println!("[h2] chip death at step {step}: ran {} of {} steps — \
+                          checkpoint, `h2 replan`, and resume",
+                         report.losses.len(), vopts.steps.saturating_sub(report.start_step));
+            }
             // Full-precision values for scripts and the parity tests.
             println!("virtual_step_seconds {:.17e}", report.step_seconds);
             println!("virtual_comm_seconds {:.17e}", report.comm_seconds);
@@ -400,9 +437,10 @@ fn cmd_search(args: &Args) -> Result<()> {
     let cfg = resolve_search_config(args, config.as_ref())?;
     let r = search(&H2_100B, &cluster, gbs, &cfg)?;
     println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {} \
-              ({} leaves pruned)",
+              ({} leaves pruned, profile cache {} hits / {} misses)",
              cluster.name, cluster.total_chips(), gbs >> 20,
-             r.candidates_explored, fmt_duration(r.elapsed_seconds), r.leaves_pruned);
+             r.candidates_explored, fmt_duration(r.elapsed_seconds), r.leaves_pruned,
+             r.cache_hits, r.cache_misses);
     let mut t = Table::new(&["group", "chips", "s_pp", "s_tp", "layers", "recompute"]);
     for (g, p) in r.groups.iter().zip(&r.strategy.plans) {
         t.row(vec![
@@ -437,6 +475,81 @@ fn cmd_search(args: &Args) -> Result<()> {
         }
         plan.save(path)?;
         println!("[h2] wrote plan `{}` to {path}", plan.name);
+    }
+    Ok(())
+}
+
+/// Parse the `--exclude-chips B=8,A=16` list into a [`ClusterDelta`].
+fn parse_exclusions(text: &str) -> Result<ClusterDelta> {
+    let mut delta = ClusterDelta::default();
+    for part in text.split(',') {
+        let (kind, n) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--exclude-chips expects B=8,A=16 style"))?;
+        let kind = ChipKind::parse(kind)
+            .ok_or_else(|| anyhow::anyhow!("unknown chip `{kind}`"))?;
+        delta.dead.push((kind, n.parse()?));
+    }
+    Ok(delta)
+}
+
+fn cmd_replan(args: &Args) -> Result<()> {
+    let _config = load_config(args)?; // registers custom chips the plan may use
+    let path = args
+        .get("plan")
+        .ok_or_else(|| anyhow::anyhow!("replan needs --plan plan.json"))?;
+    let incumbent = ExecutionPlan::load(&path)?;
+    let delta = match args.get("exclude-chips") {
+        Some(text) => parse_exclusions(&text)?,
+        None => ClusterDelta::default(),
+    };
+    let opts = ReplanOptions {
+        keep_pipeline: !args.has("full"),
+        parallel: !args.has("sequential"),
+    };
+    // A cold cache here: the CLI has no process to inherit warm profiles
+    // from. In-process callers (the elastic loop, the benches) pass the
+    // search's own cache and replan near-instantly.
+    let cache = ProfileCache::new();
+    let out = replan(&incumbent, &delta, &cache, &opts)?;
+    if !out.changed {
+        println!("[h2] cluster unchanged: keeping `{}` at plan_epoch {}",
+                 incumbent.name, incumbent.plan_epoch);
+        return Ok(());
+    }
+    println!("[h2] replanned `{}`: {} -> {} chips, plan_epoch {} -> {} \
+              ({}, cache {} hits / {} misses, {})",
+             incumbent.name,
+             incumbent.cluster.total_chips(), out.plan.cluster.total_chips(),
+             incumbent.plan_epoch, out.plan.plan_epoch,
+             if opts.keep_pipeline { "pipeline-preserving" } else { "full re-search" },
+             out.cache_hits, out.cache_misses,
+             fmt_duration(out.elapsed_seconds));
+    if out.idled_chips > 0 {
+        println!("[h2] {} surviving chips idled (no complete s_pp x s_tp x s_dp \
+                  slice left for them; a --full replan reclaims them)",
+                 out.idled_chips);
+    }
+    let mut t = Table::new(&["group", "chips", "s_pp", "s_tp", "layers", "recompute"]);
+    for (g, p) in out.plan.stage_groups.iter().zip(&out.plan.strategy.plans) {
+        t.row(vec![
+            g.spec.kind.to_string(),
+            g.n_chips.to_string(),
+            p.s_pp.to_string(),
+            p.s_tp.to_string(),
+            p.layers.to_string(),
+            p.recompute.to_string(),
+        ]);
+    }
+    t.print();
+    let eval = out.plan.evaluate();
+    println!("estimated iteration: {} -> TGS {:.1}",
+             fmt_duration(eval.iteration_seconds),
+             out.plan.tgs(eval.iteration_seconds));
+    if let Some(dst) = args.get("out") {
+        out.plan.save(&dst)?;
+        println!("[h2] wrote plan `{}` (epoch {}) to {dst}",
+                 out.plan.name, out.plan.plan_epoch);
     }
     Ok(())
 }
@@ -625,6 +738,37 @@ fn cmd_report(args: &Args) -> Result<()> {
                          fmt_duration(row.search.elapsed_seconds),
                          row.search.candidates_explored);
             }
+        }
+        "elastic" => {
+            let exp_name = args.str_or("exp", "exp-mega");
+            let rep = h2::report::recovery_vs_restart(&exp_name)?;
+            let (kind, n) = rep.killed;
+            println!("kill-a-node on `{exp_name}`: {n} {kind} chips died; \
+                      pipeline-preserving replan to plan_epoch {} in {} \
+                      (cache {} hits / {} misses, {} survivors idled)",
+                     rep.outcome.plan.plan_epoch,
+                     fmt_duration(rep.outcome.elapsed_seconds),
+                     rep.outcome.cache_hits, rep.outcome.cache_misses,
+                     rep.outcome.idled_chips);
+            let mut t = Table::new(&["evaluator", "step", "replan", "migrate",
+                                     "recovery", "search", "restore", "restart",
+                                     "win"])
+                .with_title("Elastic recovery vs restart-from-checkpoint");
+            for row in &rep.rows {
+                let tl = &row.timeline;
+                t.row(vec![
+                    row.evaluator.to_string(),
+                    fmt_duration(row.step_seconds),
+                    fmt_duration(tl.replan_seconds),
+                    fmt_duration(tl.migrate_seconds),
+                    fmt_duration(tl.recovery_seconds()),
+                    fmt_duration(tl.search_seconds),
+                    fmt_duration(tl.restore_seconds),
+                    fmt_duration(tl.restart_seconds()),
+                    format!("{:.2}x", tl.restart_seconds() / tl.recovery_seconds()),
+                ]);
+            }
+            t.print();
         }
         other => bail!("unknown report `{other}`"),
     }

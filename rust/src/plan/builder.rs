@@ -185,6 +185,8 @@ impl PlanBuilder {
             fine_overlap: self.fine_overlap,
             precision: self.precision,
             train: self.train,
+            plan_epoch: 0,
+            fault_plan: None,
         };
         plan.validate()?;
         Ok(plan)

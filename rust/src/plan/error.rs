@@ -60,6 +60,9 @@ pub enum PlanError {
     TrainStageRole { index: usize, prefix: String, expected: &'static str },
     /// The train section is structurally empty.
     TrainEmpty,
+    /// The embedded fault-injection scenario is malformed (stage out of
+    /// range, non-positive factor, zero-node death).
+    FaultPlanInvalid { detail: String },
 }
 
 impl fmt::Display for PlanError {
@@ -122,6 +125,9 @@ impl fmt::Display for PlanError {
                            role `{expected}`")
             }
             PlanError::TrainEmpty => write!(f, "train section has no stages"),
+            PlanError::FaultPlanInvalid { detail } => {
+                write!(f, "fault plan is invalid: {detail}")
+            }
         }
     }
 }

@@ -25,20 +25,25 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::comm::{CommAlgo, CommMode};
 use crate::coordinator::{StagePlan, TrainConfig};
 use crate::costmodel::{evaluate, tgs, Evaluation, GroupPlan, ModelShape, Schedule, Strategy};
+use crate::elastic::FaultPlan;
 use crate::hetero::{self, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
 use crate::precision::MRE_THRESHOLD;
 use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions, SimResult};
 use crate::topology::NicAssignment;
 use crate::util::json::{self, Value};
 
-/// Plan-file schema version. Version 3 added the `comm_algo` token inside
-/// `strategy` (the DP-collective algorithm of the DiComm engine); files
-/// without one — every v1/v2 file — load as `ring`, the previously
-/// hardwired collective. Version 2 replaced the top-level `alpha` bubble
-/// coefficient with a `schedule` token inside `strategy`; version-1 files
-/// still load, their `alpha` mapped through [`Schedule::from_alpha`] (see
+/// Plan-file schema version. Version 4 added the elastic-training fields:
+/// `plan_epoch` (how many times the plan has been re-planned; a missing
+/// field — every v1–v3 file — loads as 0) and the optional `fault_plan`
+/// section (a seeded fault-injection scenario, absent unless set).
+/// Version 3 added the `comm_algo` token inside `strategy` (the
+/// DP-collective algorithm of the DiComm engine); files without one —
+/// every v1/v2 file — load as `ring`, the previously hardwired collective.
+/// Version 2 replaced the top-level `alpha` bubble coefficient with a
+/// `schedule` token inside `strategy`; version-1 files still load, their
+/// `alpha` mapped through [`Schedule::from_alpha`] (see
 /// `docs/plan-format.md` for the full compatibility rules).
-pub const PLAN_VERSION: u64 = 3;
+pub const PLAN_VERSION: u64 = 4;
 
 /// Numeric-precision policy carried by a plan into real training runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -115,6 +120,12 @@ pub struct ExecutionPlan {
     pub precision: PrecisionPolicy,
     /// Optional real-training section (`h2 train --plan`).
     pub train: Option<TrainSpec>,
+    /// How many times this plan has been re-planned by the elastic loop
+    /// (0 for a freshly searched plan; `auto::replan` increments it).
+    pub plan_epoch: u64,
+    /// Optional seeded fault-injection scenario replayed by the simulator
+    /// and the virtual coordinator (`h2 train --virtual --faults`).
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl ExecutionPlan {
@@ -313,6 +324,12 @@ impl ExecutionPlan {
         if assigned != self.model.n_layers {
             errs.push(PlanError::LayersMismatch { assigned, model: self.model.n_layers });
         }
+        if let Some(fp) = &self.fault_plan {
+            let s_n: usize = self.strategy.plans.iter().map(|p| p.s_pp).sum();
+            if let Err(e) = fp.validate(s_n) {
+                errs.push(PlanError::FaultPlanInvalid { detail: e.to_string() });
+            }
+        }
         if let Some(t) = &self.train {
             if t.stages.is_empty() || t.dp == 0 || t.micro_batches == 0 {
                 errs.push(PlanError::TrainEmpty);
@@ -374,6 +391,7 @@ impl ExecutionPlan {
             ("reshard", json::s(self.reshard.token())),
             ("nic_assignment", json::s(self.nic_assignment.token())),
             ("fine_overlap", Value::Bool(self.fine_overlap)),
+            ("plan_epoch", json::num(self.plan_epoch as f64)),
             (
                 "precision",
                 json::obj(vec![
@@ -387,6 +405,9 @@ impl ExecutionPlan {
         }
         if let Some(t) = &self.train {
             fields.push(("train", train_to_json(t)));
+        }
+        if let Some(fp) = &self.fault_plan {
+            fields.push(("fault_plan", fp.to_json()));
         }
         json::obj(fields)
     }
@@ -482,6 +503,17 @@ impl ExecutionPlan {
             fine_overlap: v.get("fine_overlap")?.bool()?,
             precision,
             train: v.opt("train").map(train_from_json).transpose().context("parsing `train`")?,
+            // v4 elastic fields: every pre-v4 file is a freshly searched
+            // plan (epoch 0) with no fault scenario.
+            plan_epoch: match v.opt("plan_epoch") {
+                Some(x) => x.u64()?,
+                None => 0,
+            },
+            fault_plan: v
+                .opt("fault_plan")
+                .map(FaultPlan::from_json)
+                .transpose()
+                .context("parsing `fault_plan`")?,
         })
     }
 
@@ -1028,6 +1060,63 @@ mod tests {
         }
         let err = ExecutionPlan::from_json(&v).unwrap_err().to_string();
         assert!(format!("{err:#}").contains("comm_algo") || err.contains("strategy"), "{err}");
+    }
+
+    #[test]
+    fn version3_files_migrate_to_epoch_zero() {
+        // A version-3 plan has neither `plan_epoch` nor `fault_plan`: it
+        // loads as a freshly searched plan (epoch 0, no fault scenario).
+        let plan = table6_a_plan();
+        let mut v = plan.to_json();
+        match &mut v {
+            Value::Obj(m) => {
+                m.insert("version".to_string(), json::num(3.0));
+                m.remove("plan_epoch");
+                assert!(m.remove("fault_plan").is_none(), "v3 file must not carry one");
+            }
+            other => panic!("plan must serialize to an object, got {other:?}"),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.version, PLAN_VERSION);
+        assert_eq!(back.plan_epoch, 0);
+        assert_eq!(back.fault_plan, None);
+        assert!(back.validate().is_ok());
+        // Re-serializing writes the v4 schema: `plan_epoch` present,
+        // `fault_plan` still absent (absence round-trips losslessly).
+        let text = back.to_json_string();
+        assert!(text.contains("\"plan_epoch\": 0"), "{text}");
+        assert!(!text.contains("fault_plan"), "{text}");
+        assert_eq!(ExecutionPlan::from_json_str(&text).unwrap(), back);
+    }
+
+    #[test]
+    fn fault_plan_and_epoch_roundtrip() {
+        use crate::elastic::fault::{FaultEvent, FaultKind};
+        let mut plan = table6_a_plan();
+        plan.plan_epoch = 3;
+        plan.fault_plan = Some(FaultPlan {
+            seed: 7,
+            events: vec![
+                FaultEvent { step: 2, stage: 1, kind: FaultKind::Slowdown { factor: 2.0 } },
+                FaultEvent { step: 5, stage: 3, kind: FaultKind::ChipDeath { nodes: 1 } },
+            ],
+        });
+        assert!(plan.validate().is_ok());
+        let back = ExecutionPlan::from_json_str(&plan.to_json_string()).unwrap();
+        assert_eq!(back, plan);
+
+        // A fault plan naming a stage the strategy doesn't have is caught
+        // by plan validation, not left for the executors to trip over.
+        plan.fault_plan = Some(FaultPlan {
+            seed: 7,
+            events: vec![FaultEvent {
+                step: 0,
+                stage: 99,
+                kind: FaultKind::Recover,
+            }],
+        });
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, PlanError::FaultPlanInvalid { .. })), "{errs:?}");
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! Paper-experiment drivers shared by `h2 report`, the benches, and the
 //! examples: Table 6 baselines, Fig 11 HeteroSpeedupRatio, Table 9
-//! ablations — each returning paper-vs-measured pairs.
+//! ablations, and the kill-a-node recovery-vs-restart comparison — each
+//! returning paper-vs-measured pairs.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::auto::{search, SearchConfig, SearchResult};
+use crate::auto::{
+    replan, search, search_with_cache, ClusterDelta, ReplanOptions, ReplanOutcome,
+    SearchConfig, SearchResult,
+};
 use crate::comm::{CommAlgo, CommMode};
-use crate::costmodel::{uniform_1f1b, GroupPlan, Schedule, Strategy, H2_100B};
+use crate::coordinator::{train_virtual, VirtualOptions};
+use crate::costmodel::{uniform_1f1b, GroupPlan, ProfileCache, Schedule, Strategy, H2_100B};
+use crate::elastic::{swap_compatible, MonitorConfig, RecoveryTimeline};
 use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
 use crate::plan::{ExecutionPlan, PlanBuilder};
 use crate::sim::{simulate_plan, ReshardStrategy};
@@ -291,6 +299,107 @@ pub fn comm_algo_axis(exp_name: &str) -> Result<Vec<CommAlgoAxisRow>> {
         rows.push(row);
     }
     Ok(rows)
+}
+
+/// One evaluator's pricing of the kill-a-node elastic scenario from
+/// [`recovery_vs_restart`].
+#[derive(Clone, Debug)]
+pub struct RecoveryRow {
+    /// Which evaluator priced the incumbent's step time.
+    pub evaluator: &'static str,
+    /// The incumbent's per-step seconds under that evaluator.
+    pub step_seconds: f64,
+    /// The elastic-vs-restart timeline assembled at that step time.
+    pub timeline: RecoveryTimeline,
+}
+
+/// Everything the kill-a-node scenario produced.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    /// The searched incumbent plan the node died under.
+    pub incumbent: ExecutionPlan,
+    /// The chip kind and count the scenario killed (one whole node).
+    pub killed: (ChipKind, usize),
+    /// The pipeline-preserving re-plan over the warm profile cache.
+    pub outcome: ReplanOutcome,
+    /// Measured wall-clock of the restart baseline's cold search.
+    pub cold_search_seconds: f64,
+    /// One row per evaluator (cost model, simulator, virtual coordinator).
+    pub rows: Vec<RecoveryRow>,
+}
+
+/// The elastic tentpole scenario on a Table 7 cluster: search the
+/// incumbent, kill one node of the widest-TP stage group, re-plan over
+/// the still-warm [`ProfileCache`], and price elastic recovery (drain +
+/// detect + warm re-plan + diff-only state migration) against a
+/// restart-from-checkpoint (drain + detect + cold search + full-state
+/// restore) under all three evaluators. The re-plan is hot-swap
+/// compatible by construction, so the comparison is pure time — the loss
+/// trajectory is bit-identical either way (`rust/tests/elastic.rs` holds
+/// that end to end).
+pub fn recovery_vs_restart(exp_name: &str) -> Result<RecoveryReport> {
+    let exp = experiment(exp_name)?;
+    let cfg = paper_search_config();
+    let cache = ProfileCache::new();
+    let r = search_with_cache(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg, &cache)?;
+    let incumbent = r.to_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
+    // Kill one whole node, preferring the largest stage group that still
+    // has TP width to give up — a one-node loss in a TP-1 group cannot
+    // keep the pipeline shape. Not every victim admits a
+    // pipeline-preserving re-plan (the shrunk slice must still cover
+    // whole nodes), so candidates are tried in preference order.
+    let mut candidates: Vec<_> = incumbent
+        .stage_groups
+        .iter()
+        .zip(&incumbent.strategy.plans)
+        .collect();
+    candidates.sort_by_key(|(g, p)| (p.s_tp < 2, std::cmp::Reverse(g.n_chips)));
+    let mut chosen = None;
+    let mut last_err = None;
+    for (victim, _) in candidates {
+        let killed = (victim.spec.kind, victim.spec.chips_per_node);
+        let delta = ClusterDelta::exclude(killed.0, killed.1);
+        match replan(&incumbent, &delta, &cache, &ReplanOptions::default()) {
+            Ok(outcome) => {
+                chosen = Some((killed, outcome));
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let (killed, outcome) = chosen.ok_or_else(|| {
+        last_err.unwrap_or_else(|| {
+            anyhow::anyhow!("plan `{}` has no stage groups to kill", incumbent.name)
+        })
+    })?;
+    swap_compatible(&incumbent, &outcome.plan)?;
+    // The restart baseline re-plans from scratch: a cold-cache search
+    // over the surviving cluster.
+    let t = Instant::now();
+    search(&H2_100B, &outcome.plan.cluster, exp.gbs_tokens, &cfg)?;
+    let cold_search_seconds = t.elapsed().as_secs_f64();
+    let debounce = MonitorConfig::default().debounce;
+    let virtual_step = {
+        let vopts = VirtualOptions { steps: 1, log_every: 0, ..VirtualOptions::default() };
+        train_virtual(&incumbent, &vopts)?.step_seconds
+    };
+    let mut rows = Vec::new();
+    for (evaluator, step_seconds) in [
+        ("cost model", incumbent.evaluate().iteration_seconds),
+        ("simulator", simulate_plan(&incumbent).iteration_seconds),
+        ("virtual coordinator", virtual_step),
+    ] {
+        let timeline = RecoveryTimeline::new(
+            &incumbent,
+            &outcome.plan,
+            step_seconds,
+            debounce,
+            outcome.elapsed_seconds,
+            cold_search_seconds,
+        )?;
+        rows.push(RecoveryRow { evaluator, step_seconds, timeline });
+    }
+    Ok(RecoveryReport { incumbent, killed, outcome, cold_search_seconds, rows })
 }
 
 #[cfg(test)]

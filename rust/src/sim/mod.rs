@@ -6,5 +6,8 @@
 pub mod pipeline;
 pub mod reshard;
 
-pub use pipeline::{simulate_iteration, simulate_plan, SimOptions, SimResult, FINE_OVERLAP_HIDDEN};
+pub use pipeline::{
+    simulate_iteration, simulate_plan, simulate_plan_with_faults, FaultSimResult, SimOptions,
+    SimResult, FINE_OVERLAP_HIDDEN,
+};
 pub use reshard::{reshard_time, ReshardStrategy};

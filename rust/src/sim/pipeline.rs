@@ -15,11 +15,14 @@
 //! the two honest against each other per schedule, and the Table 9
 //! ablations are run here.
 
+use anyhow::Result;
+
 use crate::comm::CommMode;
 use crate::coordinator::schedule::{
     interleaved_orders, one_f1b_order, zero_bubble_events, Op, PipeOp, ZbStage,
 };
 use crate::costmodel::{profile_layer_comm, ModelShape, Schedule, Strategy};
+use crate::elastic::FaultPlan;
 use crate::hetero::ChipGroup;
 use crate::topology::NicAssignment;
 
@@ -111,14 +114,26 @@ pub fn simulate_iteration(
 ) -> SimResult {
     let stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
     let (link, wrap_link) = stage_links(&stages, groups, model, micro_tokens, opts);
-    let exposed = |t: f64| t;
+    dispatch_schedule(&stages, &link, wrap_link, strategy.schedule, strategy.micro_batches)
+}
 
-    match strategy.schedule {
-        Schedule::OneF1B => simulate_1f1b(&stages, &link, strategy.micro_batches, &exposed),
+/// Route a per-stage timing table to its schedule's executor — shared by
+/// the healthy single-iteration entry point and the fault-aware per-step
+/// loop of [`simulate_plan_with_faults`].
+fn dispatch_schedule(
+    stages: &[StageSim],
+    link: &[f64],
+    wrap_link: f64,
+    schedule: Schedule,
+    micro_batches: usize,
+) -> SimResult {
+    let exposed = |t: f64| t;
+    match schedule {
+        Schedule::OneF1B => simulate_1f1b(stages, link, micro_batches, &exposed),
         Schedule::Interleaved { virtual_stages } => simulate_interleaved(
-            &stages, &link, wrap_link, strategy.micro_batches, virtual_stages.max(1),
+            stages, link, wrap_link, micro_batches, virtual_stages.max(1),
         ),
-        Schedule::ZeroBubbleV => simulate_zero_bubble(&stages, &link, strategy.micro_batches),
+        Schedule::ZeroBubbleV => simulate_zero_bubble(stages, link, micro_batches),
     }
 }
 
@@ -216,6 +231,104 @@ pub(crate) fn stage_links(
 /// [`crate::plan::ExecutionPlan::simulate`].
 pub fn simulate_plan(plan: &crate::plan::ExecutionPlan) -> SimResult {
     plan.simulate()
+}
+
+/// What [`simulate_plan_with_faults`] returns: one simulated iteration per
+/// executed step, truncated at the first chip death.
+#[derive(Clone, Debug)]
+pub struct FaultSimResult {
+    /// Seconds of each executed step (`step_seconds[i]` is step
+    /// `i`'s iteration time under that step's fault factors).
+    pub step_seconds: Vec<f64>,
+    /// Sum of [`FaultSimResult::step_seconds`].
+    pub total_seconds: f64,
+    /// `Some(step)` when a [`crate::elastic::FaultKind::ChipDeath`] halted
+    /// the run at the start of `step` (steps `0..step` executed); `None`
+    /// when every requested step ran.
+    pub halted_at: Option<usize>,
+}
+
+/// Simulate `steps` training steps of a plan under a fault schedule — the
+/// simulator's view of the elastic loop's fault layer, mirroring the
+/// virtual coordinator's semantics ([`crate::coordinator::train_virtual`]):
+/// a slowdown multiplies a stage's compute times, NIC degradation
+/// multiplies its outgoing activation hop and its exposed DP-sync slice,
+/// and a chip death drains the run at that step boundary. Faults scale
+/// *time only* — the simulator has no numerics to disturb, exactly like
+/// the virtual coordinator whose losses stay bit-identical under faults.
+///
+/// A hop is charged its upstream (activation-sending) stage's NIC factor;
+/// gradients re-use the same link table, so a degraded stage also slows
+/// the backward hand-off it forwards activations over.
+pub fn simulate_plan_with_faults(
+    plan: &crate::plan::ExecutionPlan,
+    faults: &FaultPlan,
+    steps: usize,
+) -> Result<FaultSimResult> {
+    let groups = plan.group_refs();
+    let opts = plan.sim_options();
+    let stages =
+        plan_stage_sims(&plan.model, &groups, &plan.strategy, plan.micro_tokens, &opts);
+    let s_n = stages.len();
+    faults.validate(s_n)?;
+    let (link, wrap_link) =
+        stage_links(&stages, &groups, &plan.model, plan.micro_tokens, &opts);
+
+    let (run_steps, halted_at) = match faults.first_death() {
+        Some(death) if death.step < steps => (death.step, Some(death.step)),
+        _ => (steps, None),
+    };
+
+    // Healthy steps all cost the same — simulate that case once.
+    let mut healthy: Option<f64> = None;
+    let schedule = plan.strategy.schedule;
+    let b = plan.strategy.micro_batches;
+    let mut step_seconds = Vec::with_capacity(run_steps);
+    for step in 0..run_steps {
+        let factors: Vec<(f64, f64)> =
+            (0..s_n).map(|s| faults.factors_at(step, s)).collect();
+        if factors.iter().all(|&(cf, nf)| cf == 1.0 && nf == 1.0) {
+            let t = match healthy {
+                Some(t) => t,
+                None => {
+                    let t =
+                        dispatch_schedule(&stages, &link, wrap_link, schedule, b)
+                            .iteration_seconds;
+                    healthy = Some(t);
+                    t
+                }
+            };
+            step_seconds.push(t);
+            continue;
+        }
+        let scaled: Vec<StageSim> = stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                let (cf, nf) = factors[s];
+                StageSim {
+                    t_fwd: st.t_fwd * cf,
+                    t_bwd: st.t_bwd * cf,
+                    t_bwd_input: st.t_bwd_input * cf,
+                    t_bwd_weight: st.t_bwd_weight * cf,
+                    t_update: (st.t_update - st.t_update_comm) * cf
+                        + st.t_update_comm * nf,
+                    t_update_comm: st.t_update_comm * nf,
+                    ..st.clone()
+                }
+            })
+            .collect();
+        let scaled_link: Vec<f64> =
+            link.iter().enumerate().map(|(i, &l)| l * factors[i].1).collect();
+        let scaled_wrap = wrap_link * factors[s_n - 1].1;
+        let r = dispatch_schedule(&scaled, &scaled_link, scaled_wrap, schedule, b);
+        step_seconds.push(r.iteration_seconds);
+    }
+    Ok(FaultSimResult {
+        total_seconds: step_seconds.iter().sum(),
+        step_seconds,
+        halted_at,
+    })
 }
 
 /// Fold per-stage clocks into the shared [`SimResult`] shape: optimizer
@@ -650,6 +763,96 @@ mod tests {
                                       &SimOptions::default());
         assert!(hier.iteration_seconds < ring.iteration_seconds,
                 "hier {} !< ring {}", hier.iteration_seconds, ring.iteration_seconds);
+    }
+
+    fn faulted_fixture_plan() -> crate::plan::ExecutionPlan {
+        // In-lib mirror of the integration suites' mixed-vendor fixture.
+        let model = ModelShape {
+            n_layers: 8,
+            hidden: 2048,
+            n_heads: 16,
+            n_kv_heads: 16,
+            intermediate: 8192,
+            vocab: 32000,
+            seq_len: 4096,
+        };
+        let cluster = crate::hetero::Cluster::new(
+            "parity-2stage",
+            vec![(ChipKind::A, 16), (ChipKind::B, 16)],
+        );
+        crate::plan::PlanBuilder::new("parity")
+            .model(model)
+            .cluster(cluster)
+            .strategy(Strategy {
+                s_dp: 4,
+                micro_batches: 8,
+                schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
+                plans: vec![
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: false },
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: true },
+                ],
+            })
+            .gbs_tokens(4 * 8 * 4096)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn fault_free_steps_match_the_healthy_iteration_bit_for_bit() {
+        use crate::elastic::FaultPlan;
+        let plan = faulted_fixture_plan();
+        let healthy = simulate_plan(&plan).iteration_seconds;
+        let r = simulate_plan_with_faults(&plan, &FaultPlan::none(), 4).unwrap();
+        assert_eq!(r.halted_at, None);
+        assert_eq!(r.step_seconds.len(), 4);
+        assert!(r.step_seconds.iter().all(|&t| t == healthy));
+        assert_eq!(r.total_seconds, healthy * 4.0);
+    }
+
+    #[test]
+    fn slowdown_and_nic_degradation_cost_time_until_recovery() {
+        use crate::elastic::{FaultEvent, FaultKind, FaultPlan};
+        let plan = faulted_fixture_plan();
+        let healthy = simulate_plan(&plan).iteration_seconds;
+        let faults = FaultPlan {
+            seed: 7,
+            events: vec![
+                FaultEvent { step: 1, stage: 1, kind: FaultKind::Slowdown { factor: 2.0 } },
+                FaultEvent { step: 1, stage: 0, kind: FaultKind::NicDegrade { factor: 3.0 } },
+                FaultEvent { step: 3, stage: 1, kind: FaultKind::Recover },
+                FaultEvent { step: 3, stage: 0, kind: FaultKind::Recover },
+            ],
+        };
+        let r = simulate_plan_with_faults(&plan, &faults, 4).unwrap();
+        assert_eq!(r.halted_at, None);
+        assert_eq!(r.step_seconds[0], healthy, "pre-fault step must be healthy");
+        assert!(r.step_seconds[1] > healthy, "degraded step not slower");
+        assert_eq!(r.step_seconds[1], r.step_seconds[2], "persistent fault drifted");
+        assert_eq!(r.step_seconds[3], healthy, "recovery must restore the clock");
+    }
+
+    #[test]
+    fn chip_death_truncates_the_simulated_run() {
+        use crate::elastic::{FaultEvent, FaultKind, FaultPlan};
+        let plan = faulted_fixture_plan();
+        let faults = FaultPlan {
+            seed: 7,
+            events: vec![FaultEvent {
+                step: 2,
+                stage: 1,
+                kind: FaultKind::ChipDeath { nodes: 1 },
+            }],
+        };
+        let r = simulate_plan_with_faults(&plan, &faults, 6).unwrap();
+        assert_eq!(r.halted_at, Some(2));
+        assert_eq!(r.step_seconds.len(), 2);
+        // An out-of-range stage is rejected by the plan check.
+        let bad = FaultPlan {
+            seed: 7,
+            events: vec![FaultEvent { step: 0, stage: 9, kind: FaultKind::Recover }],
+        };
+        assert!(simulate_plan_with_faults(&plan, &bad, 2).is_err());
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! End-to-end elastic scenario on the 2-stage mixed-vendor fixture: a
+//! seeded fault plan kills one Chip B node at step 3 of 6. The run must
+//! drain at the step boundary, the monitor must raise a debounced `Dead`
+//! event, `auto::replan` must produce a valid v4 plan excluding the dead
+//! chips, and the hot-swap resume must be bit-identical to
+//! restart-from-checkpoint on the reduced cluster — with the recovery
+//! path beating the restart path by the pinned margin in all three
+//! evaluators (cost model, simulator, virtual coordinator).
+
+mod common;
+
+use common::two_stage_mixed_vendor_plan as fixture;
+use h2::auto::{replan, search, ClusterDelta, ReplanOptions, SearchConfig};
+use h2::comm::CommAlgo;
+use h2::coordinator::{train_virtual, VirtualOptions};
+use h2::costmodel::{evaluate_plan, ProfileCache, Schedule};
+use h2::elastic::{
+    migrate_state, swap_compatible, ElasticEvent, FaultEvent, FaultKind, FaultPlan, MonitorConfig,
+    RecoveryTimeline, StepMonitor,
+};
+use h2::hetero::ChipKind;
+use h2::plan::ExecutionPlan;
+use h2::sim::{simulate_plan, simulate_plan_with_faults};
+
+const STEPS: usize = 6;
+const KILL_STEP: usize = 3;
+
+/// The seeded fault script: one node of stage 1's chip group (Chip B,
+/// 8 chips/node) dies at the start of step 3.
+fn kill_one_b_node() -> FaultPlan {
+    FaultPlan {
+        seed: 0xE1A5,
+        events: vec![FaultEvent {
+            step: KILL_STEP,
+            stage: 1,
+            kind: FaultKind::ChipDeath { nodes: 1 },
+        }],
+    }
+}
+
+fn b_chips(plan: &ExecutionPlan) -> usize {
+    plan.cluster
+        .groups
+        .iter()
+        .filter(|g| g.spec.kind == ChipKind::B)
+        .map(|g| g.n_chips)
+        .sum()
+}
+
+#[test]
+fn kill_a_chip_at_step_n_recovers_bit_identically_and_beats_restart() {
+    let incumbent = fixture(Schedule::OneF1B, CommAlgo::Ring);
+    let faults = kill_one_b_node();
+
+    // Reference: the uninterrupted 6-step run.
+    let healthy =
+        train_virtual(&incumbent, &VirtualOptions { steps: STEPS, ..Default::default() }).unwrap();
+
+    // Phase A — the same run under the fault plan, checkpointing every
+    // step: it must drain at the step-3 boundary with steps 0..3 done and
+    // bit-identical to the healthy prefix.
+    let old_dir = std::env::temp_dir().join("h2_elastic_e2e_old");
+    let _ = std::fs::remove_dir_all(&old_dir);
+    let halted = train_virtual(
+        &incumbent,
+        &VirtualOptions {
+            steps: STEPS,
+            checkpoint_dir: Some(old_dir.clone()),
+            checkpoint_every: 1,
+            faults: Some(faults.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(halted.halted_at, Some(KILL_STEP));
+    assert_eq!(halted.losses, healthy.losses[..KILL_STEP], "pre-death steps diverged");
+
+    // The simulator consumes the same script and halts at the same step.
+    let sim_faulty = simulate_plan_with_faults(&incumbent, &faults, STEPS).unwrap();
+    assert_eq!(sim_faulty.halted_at, Some(KILL_STEP));
+    assert_eq!(sim_faulty.step_seconds.len(), KILL_STEP);
+
+    // Detection — the dead replica's missed heartbeats fire a typed
+    // `Dead` event only once the debounce window closes; the healthy
+    // replica on stage 0 stays silent throughout.
+    let cfg = MonitorConfig::default();
+    let mut monitor = StepMonitor::for_plan(&incumbent).unwrap();
+    assert_eq!(monitor.stages(), 2);
+    let mut event = None;
+    for _ in 0..cfg.debounce {
+        assert_eq!(event, None, "event fired before the debounce window closed");
+        assert_eq!(monitor.observe(0, 0, Some(0.0)), None);
+        event = monitor.observe(1, 0, None);
+    }
+    assert_eq!(event, Some(ElasticEvent::Dead { stage: 1, dp_rank: 0 }));
+
+    // Re-plan — exclude the dead node's 8 chips. The pipeline-preserving
+    // mode halves stage 1's TP (16 → 8 chips at s_tp 2), keeps every
+    // surviving chip busy, and bumps the plan epoch.
+    let cache = ProfileCache::new();
+    let outcome = replan(
+        &incumbent,
+        &ClusterDelta::exclude(ChipKind::B, 8),
+        &cache,
+        &ReplanOptions::default(),
+    )
+    .unwrap();
+    assert!(outcome.changed);
+    assert_eq!(outcome.plan.plan_epoch, incumbent.plan_epoch + 1);
+    assert_eq!(outcome.idled_chips, 0);
+    assert!(outcome.plan.validate().is_ok(), "replanned plan must validate");
+    assert_eq!(b_chips(&outcome.plan), 8, "dead chips must leave the cluster");
+    assert_eq!(outcome.plan.strategy.plans[1].s_tp, 2);
+    swap_compatible(&incumbent, &outcome.plan).unwrap();
+
+    // A second replan over the now-warm cache re-profiles nothing.
+    let rerun = replan(
+        &incumbent,
+        &ClusterDelta::exclude(ChipKind::B, 8),
+        &cache,
+        &ReplanOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(rerun.plan, outcome.plan, "replan must be deterministic");
+    assert_eq!(rerun.cache_misses, 0, "warm cache must serve every profile");
+    assert!(rerun.cache_hits > 0);
+
+    // Hot swap — migrate the step-3 checkpoint into the new plan's stage
+    // layout. Layer ownership is unchanged (only TP width shrank), so the
+    // diff migration ships zero layers.
+    let new_dir = std::env::temp_dir().join("h2_elastic_e2e_new");
+    let _ = std::fs::remove_dir_all(&new_dir);
+    let migration = migrate_state(&incumbent, &outcome.plan, &old_dir, &new_dir).unwrap();
+    assert!(migration.moves.is_empty(), "TP-only shrink must not move layers");
+
+    // Resume from the migrated checkpoint on the new plan…
+    let resumed = train_virtual(
+        &outcome.plan,
+        &VirtualOptions { steps: STEPS, resume_from: Some(new_dir), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(resumed.start_step, KILL_STEP);
+    // …and the restart baseline: restart-from-checkpoint reads the
+    // original step-3 checkpoint directly on the reduced cluster.
+    let restarted = train_virtual(
+        &outcome.plan,
+        &VirtualOptions { steps: STEPS, resume_from: Some(old_dir), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(resumed.losses, restarted.losses, "hot swap diverged from restart");
+    assert_eq!(resumed.final_params, restarted.final_params, "hot-swap params diverged");
+    // The virtual numerics are TP-invariant, so the post-swap trajectory
+    // also tracks the uninterrupted run bit for bit.
+    assert_eq!(resumed.losses, healthy.losses[KILL_STEP..]);
+    assert_eq!(resumed.final_params, healthy.final_params);
+
+    // Three-evaluator parity on the replanned plan: the new plan is a
+    // first-class citizen of the parity contract, not a special case.
+    let coord = train_virtual(&outcome.plan, &VirtualOptions { steps: 1, ..Default::default() })
+        .unwrap()
+        .step_seconds;
+    let sim = simulate_plan(&outcome.plan).iteration_seconds;
+    let cm = evaluate_plan(&outcome.plan).iteration_seconds;
+    let rel_sim = (coord - sim).abs() / sim;
+    assert!(rel_sim < 0.10, "coordinator {coord} vs simulator {sim} (rel {rel_sim:.3})");
+    let rel_cm = (coord - cm).abs() / cm;
+    assert!(rel_cm < 0.5, "coordinator {coord} vs cost model {cm} (rel {rel_cm:.3})");
+
+    // Recovery must beat restart in all three evaluators. Drain and
+    // detection are paid on both sides, so the pinned 2x margin is
+    // asserted on the parts that differ: warm re-plan + diff migration
+    // vs cold search + full-state restore.
+    let t0 = std::time::Instant::now();
+    search(
+        &incumbent.model,
+        &outcome.plan.cluster,
+        incumbent.gbs_tokens,
+        &SearchConfig::pinned(Schedule::OneF1B),
+    )
+    .unwrap();
+    let search_seconds = t0.elapsed().as_secs_f64();
+    for (name, step_seconds) in
+        [("cost model", cm), ("simulator", sim), ("virtual coordinator", coord)]
+    {
+        let tl = RecoveryTimeline::new(
+            &incumbent,
+            &outcome.plan,
+            step_seconds,
+            cfg.debounce,
+            outcome.elapsed_seconds,
+            search_seconds,
+        )
+        .unwrap();
+        assert!(
+            tl.recovery_seconds() < tl.restart_seconds(),
+            "{name}: recovery {} !< restart {}",
+            tl.recovery_seconds(),
+            tl.restart_seconds()
+        );
+        assert!(
+            tl.replan_seconds + tl.migrate_seconds
+                < 0.5 * (tl.search_seconds + tl.restore_seconds),
+            "{name}: replan {} + migrate {} lost the 2x margin to search {} + restore {}",
+            tl.replan_seconds,
+            tl.migrate_seconds,
+            tl.search_seconds,
+            tl.restore_seconds
+        );
+    }
+}

@@ -8,6 +8,7 @@
 use h2::comm::{CommAlgo, CommMode};
 use h2::coordinator::StagePlan;
 use h2::costmodel::{GroupPlan, ModelShape, Schedule, Strategy};
+use h2::elastic::FaultPlan;
 use h2::hetero::{register_custom, ChipGroup, ChipKind, Cluster, CustomChipDef, IntraNodeLink};
 use h2::plan::{ExecutionPlan, PlanBuilder, PrecisionPolicy, TrainSpec, PLAN_VERSION};
 use h2::sim::ReshardStrategy;
@@ -155,6 +156,13 @@ fn random_plan(rng: &mut Rng) -> ExecutionPlan {
         fine_overlap: rng.f64() < 0.5,
         precision: PrecisionPolicy { perturb: rng.f64() < 0.5, mre_threshold: rng.f64() * 0.1 },
         train,
+        // plan_epoch serializes as a JSON number (f64): keep it well
+        // under 2^53 so the round-trip is exact.
+        plan_epoch: rng.range(0, 1 << 20),
+        fault_plan: (rng.f64() < 0.5).then(|| {
+            FaultPlan::generate(rng.next_u64(), rng.usize(2, 32), rng.usize(1, 9),
+                                rng.f64() < 0.5)
+        }),
     }
 }
 
