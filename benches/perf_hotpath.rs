@@ -2,7 +2,10 @@
 //! the simulator inner loop, HeteroAuto search, the DiComm collective
 //! library (ring and hierarchical allreduces, closed-form pricing), the
 //! fabric send/recv path and the JSON/manifest parser. Tracked in
-//! EXPERIMENTS.md §Perf (before/after per optimization).
+//! EXPERIMENTS.md §Perf (before/after per optimization). The simulator
+//! benches run as engine/reference pairs — the flat-arena engine next to
+//! the pre-refactor executor on identical inputs — and the old-vs-new
+//! speedup per schedule is printed after the report.
 //!
 //! Doubles as the CI perf-regression guard:
 //!
@@ -23,7 +26,7 @@ use h2::comm::collectives::{hierarchical_allreduce, ring_allreduce};
 use h2::comm::{allreduce_cost, fabric, CommAlgo, CommTopology, LinkTime};
 use h2::costmodel::{GroupPlan, ProfileCache, Schedule, Strategy, H2_100B};
 use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind};
-use h2::sim::{simulate_iteration, SimOptions};
+use h2::sim::{reference, SimEngine, SimOptions};
 use h2::topology::NicAssignment;
 use h2::util::bench::Bench;
 use h2::util::cli::Args;
@@ -38,33 +41,54 @@ fn main() {
     // benches still collect thousands inside the per-case budget.
     let mut b = Bench::new("h2 hot paths").max_seconds(2.5).min_iters(5);
 
-    // Simulator: the Fig 11 inner loop (one full 1F1B iteration at scale).
+    // Simulator: the Fig 11 inner loop (one full iteration at scale) on
+    // the arena engine, paired with the pre-arena reference executor on
+    // the same inputs — the differential suite proves the outputs are
+    // bit-identical, this pair proves the rewrite actually paid off (the
+    // old-vs-new ratio is printed after the report).
     let exp = homogeneous_baseline(ChipKind::A);
     let groups = exp.cluster.groups_by_memory_desc();
-    let mut strategy = Strategy {
-        s_dp: 4,
-        micro_batches: 128,
-        schedule: Schedule::OneF1B,
-        comm_algo: CommAlgo::Ring,
-        plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
-    };
-    b.run("sim: 16-stage x 128-micro 1F1B", || {
-        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
-        std::hint::black_box(r.iteration_seconds);
-    });
-
-    // The schedule-aware issue orders (interleaved chunking, zero-bubble
-    // greedy fill) are costlier inner loops — track them next to 1F1B.
-    strategy.schedule = Schedule::Interleaved { virtual_stages: 2 };
-    b.run("sim: 16-stage x 128-micro interleaved:2", || {
-        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
-        std::hint::black_box(r.iteration_seconds);
-    });
-    strategy.schedule = Schedule::ZeroBubbleV;
-    b.run("sim: 16-stage x 128-micro zero-bubble", || {
-        let r = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
-        std::hint::black_box(r.iteration_seconds);
-    });
+    let sim_pairs = [
+        (
+            "sim: 16-stage x 128-micro 1F1B",
+            "sim-reference: 16-stage x 128-micro 1F1B",
+            Schedule::OneF1B,
+        ),
+        (
+            "sim: 16-stage x 128-micro interleaved:2",
+            "sim-reference: 16-stage x 128-micro interleaved:2",
+            Schedule::Interleaved { virtual_stages: 2 },
+        ),
+        (
+            "sim: 16-stage x 128-micro zero-bubble",
+            "sim-reference: 16-stage x 128-micro zero-bubble",
+            Schedule::ZeroBubbleV,
+        ),
+    ];
+    for &(label, ref_label, schedule) in &sim_pairs {
+        let strategy = Strategy {
+            s_dp: 4,
+            micro_batches: 128,
+            schedule,
+            comm_algo: CommAlgo::Ring,
+            plans: vec![GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false }],
+        };
+        let mut eng = SimEngine::new(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
+        b.run(label, || {
+            let r = eng.run();
+            std::hint::black_box(r.iteration_seconds);
+        });
+        b.run(ref_label, || {
+            let r = reference::simulate_iteration_reference(
+                &H2_100B,
+                &groups,
+                &strategy,
+                4096,
+                &SimOptions::default(),
+            );
+            std::hint::black_box(r.iteration_seconds);
+        });
+    }
 
     // HeteroAuto: the coarse (stage-1) search for Exp-A.
     let expa = experiment("exp-a-1").unwrap();
@@ -125,6 +149,15 @@ fn main() {
         std::hint::black_box(out.plan.plan_epoch);
     });
 
+    // The full-cluster simulation of the incumbent mega plan itself: the
+    // 1,280-chip iteration the re-planner scores candidates with, on the
+    // warm arena engine (arenas sized once, zero per-op allocation).
+    let mut mega_eng = SimEngine::for_plan(&incumbent);
+    b.run("sim: exp-mega full-cluster", || {
+        let r = mega_eng.run();
+        std::hint::black_box(r.iteration_seconds);
+    });
+
     // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs
     // the two-level hierarchical schedule (2 nodes x 4 ranks). Link times
     // come from the Chip-B server spec via the DP-group topology (TP 2
@@ -182,6 +215,18 @@ fn main() {
     }
 
     b.report();
+
+    // Old-vs-new: the arena engine against the reference executor it
+    // replaced, from the p50s measured above.
+    let p50 = |l: &str| b.rows().iter().find(|(n, _)| n == l).map(|(_, s)| s.p50);
+    for &(label, ref_label, _) in &sim_pairs {
+        if let (Some(new), Some(old)) = (p50(label), p50(ref_label)) {
+            println!(
+                "sim speedup {label}: {:.1}x (reference p50 {old:.6}s / engine p50 {new:.6}s)",
+                old / new
+            );
+        }
+    }
 
     if let Some(path) = args.get("write-baseline") {
         write_baseline(&b, path);

@@ -17,6 +17,9 @@
 //!   [`zero_bubble_orders`] freezes its unit-duration decisions into
 //!   static per-stage queues for the coordinator.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::costmodel::Schedule;
 
 /// One operation in a stage's static 1F1B schedule.
@@ -258,111 +261,257 @@ pub struct ZbEvent {
 ///
 /// Returns the full event list in execution order; the simulator folds it
 /// into clocks, the coordinator freezes the unit-duration variant into
-/// static orders ([`zero_bubble_orders`]).
+/// static orders ([`zero_bubble_orders`]). A thin wrapper over
+/// [`ZbRunner`], which hot callers (the arena engine) hold and re-run
+/// without reallocating.
 pub fn zero_bubble_events(stages: &[ZbStage], link: &[f64], b: usize) -> Vec<ZbEvent> {
-    let s_n = stages.len();
-    if s_n == 0 || b == 0 {
-        return Vec::new();
+    let mut runner = ZbRunner::new(stages.len(), b);
+    runner.run(stages, link).to_vec()
+}
+
+/// One stage's current best candidate op in the [`ZbRunner`] heap, keyed
+/// exactly like the reference scan's global pick: `(start, priority,
+/// stage)`. `gen` is the stage's generation counter — it lazily
+/// invalidates stale entries (only the entry whose `gen` matches the
+/// stage's current counter is live) and never orders live entries, since
+/// each stage has at most one.
+#[derive(Clone, Copy, Debug)]
+struct ZbCand {
+    start: f64,
+    prio: u8,
+    stage: usize,
+    gen: u64,
+    ready: f64,
+}
+
+impl PartialEq for ZbCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
     }
-    const UNSET: f64 = -1.0;
-    let mut fwd_done = vec![vec![UNSET; s_n]; b];
-    let mut bwd_done = vec![vec![UNSET; s_n]; b]; // input-gradient phase end
-    let mut next_f = vec![0usize; s_n];
-    let mut next_b = vec![0usize; s_n];
-    let mut next_w = vec![0usize; s_n];
-    let cap: Vec<usize> = (0..s_n).map(|s| (s_n - s).min(b).max(1)).collect();
+}
 
-    let mut clock = vec![0.0f64; s_n];
-    let mut events = Vec::with_capacity(3 * b * s_n);
+impl Eq for ZbCand {}
 
-    // Op kinds by tie-break priority: B (0) > F (1) > W (2).
-    let total_ops = 3 * b * s_n;
-    for _ in 0..total_ops {
-        // (start, priority, stage) minimal over every stage's candidates.
-        let mut best: Option<(f64, u8, usize, f64)> = None; // +ready for comm
-        let mut consider = |start: f64, prio: u8, s: usize, ready: f64| {
+impl PartialOrd for ZbCand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ZbCand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `ready` is derived from (stage, gen) state, not part of the key.
+        self.start
+            .total_cmp(&other.start)
+            .then(self.prio.cmp(&other.prio))
+            .then(self.stage.cmp(&other.stage))
+            .then(self.gen.cmp(&other.gen))
+    }
+}
+
+/// Reusable zero-bubble greedy executor over pre-sized flat arenas.
+///
+/// Replaces the original `O(ops × stages)` rescan-everything loop with a
+/// binary heap of per-stage best candidates under lazy invalidation:
+/// executing an op on stage `s` only refreshes the stages whose candidate
+/// inputs it touched (`B` → `{s−1, s}`, `F` → `{s, s+1}`, `W` → `{s}`),
+/// bumping their generation counters so stale heap entries are skipped on
+/// pop. Because every live entry's key equals its stage's current
+/// candidate and ties are broken `(start, priority, stage)` exactly as
+/// the scan did, the event stream is bit-identical to the original
+/// executor (pinned by `heap_greedy_matches_the_reference_scan` and the
+/// `sim_differential` suite).
+///
+/// All state lives in flat `micro × stage` arenas sized once in
+/// [`ZbRunner::new`]; [`ZbRunner::run`] re-runs without allocating beyond
+/// incidental heap growth on the first call.
+#[derive(Clone, Debug)]
+pub struct ZbRunner {
+    s_n: usize,
+    b: usize,
+    /// Forward end times, `[micro * s_n + stage]` (−1 = not executed).
+    fwd_done: Vec<f64>,
+    /// Input-gradient-phase end times, same layout.
+    bwd_done: Vec<f64>,
+    next_f: Vec<usize>,
+    next_b: Vec<usize>,
+    next_w: Vec<usize>,
+    cap: Vec<usize>,
+    clock: Vec<f64>,
+    gen: Vec<u64>,
+    heap: BinaryHeap<Reverse<ZbCand>>,
+    events: Vec<ZbEvent>,
+}
+
+impl ZbRunner {
+    /// Size the arenas for a `s_n`-stage pipeline with `b` micro-batches.
+    pub fn new(s_n: usize, b: usize) -> ZbRunner {
+        ZbRunner {
+            s_n,
+            b,
+            fwd_done: vec![0.0; s_n * b],
+            bwd_done: vec![0.0; s_n * b],
+            next_f: vec![0; s_n],
+            next_b: vec![0; s_n],
+            next_w: vec![0; s_n],
+            cap: (0..s_n).map(|s| (s_n - s).min(b).max(1)).collect(),
+            clock: vec![0.0; s_n],
+            gen: vec![0; s_n],
+            heap: BinaryHeap::with_capacity(2 * s_n + 1),
+            events: Vec::with_capacity(3 * b * s_n),
+        }
+    }
+
+    /// Stage `s`'s best candidate `(start, priority, ready)` — the
+    /// reference scan's per-stage `consider` calls (B, then F, then W,
+    /// strict `<` on `(start, priority)`), verbatim.
+    fn candidate(&self, s: usize, link: &[f64]) -> Option<(f64, u8, f64)> {
+        let (s_n, b) = (self.s_n, self.b);
+        let mut best: Option<(f64, u8, f64)> = None;
+        let mut consider = |start: f64, prio: u8, ready: f64| {
             let better = match &best {
                 None => true,
-                Some((bs, bp, bi, _)) => (start, prio, s) < (*bs, *bp, *bi),
+                Some((bs, bp, _)) => (start, prio) < (*bs, *bp),
             };
             if better {
-                best = Some((start, prio, s, ready));
+                best = Some((start, prio, ready));
             }
         };
-        for s in 0..s_n {
-            if next_b[s] < b {
-                let m = next_b[s];
-                if fwd_done[m][s] >= 0.0 {
-                    let ready = if s == s_n - 1 {
-                        Some(fwd_done[m][s])
-                    } else if bwd_done[m][s + 1] >= 0.0 {
-                        Some(bwd_done[m][s + 1] + link[s])
-                    } else {
-                        None
-                    };
-                    if let Some(r) = ready {
-                        consider(clock[s].max(r), 0, s, r);
-                    }
-                }
-            }
-            if next_f[s] < b && next_f[s] - next_b[s] < cap[s] {
-                let m = next_f[s];
-                let ready = if s == 0 {
-                    Some(0.0)
-                } else if fwd_done[m][s - 1] >= 0.0 {
-                    Some(fwd_done[m][s - 1] + link[s - 1])
+        if self.next_b[s] < b {
+            let m = self.next_b[s];
+            if self.fwd_done[m * s_n + s] >= 0.0 {
+                let ready = if s == s_n - 1 {
+                    Some(self.fwd_done[m * s_n + s])
+                } else if self.bwd_done[m * s_n + s + 1] >= 0.0 {
+                    Some(self.bwd_done[m * s_n + s + 1] + link[s])
                 } else {
                     None
                 };
                 if let Some(r) = ready {
-                    consider(clock[s].max(r), 1, s, r);
+                    consider(self.clock[s].max(r), 0, r);
                 }
             }
-            if next_w[s] < next_b[s] {
-                consider(clock[s], 2, s, clock[s]);
+        }
+        if self.next_f[s] < b && self.next_f[s] - self.next_b[s] < self.cap[s] {
+            let m = self.next_f[s];
+            let ready = if s == 0 {
+                Some(0.0)
+            } else if self.fwd_done[m * s_n + s - 1] >= 0.0 {
+                Some(self.fwd_done[m * s_n + s - 1] + link[s - 1])
+            } else {
+                None
+            };
+            if let Some(r) = ready {
+                consider(self.clock[s].max(r), 1, r);
             }
         }
-        let (start, prio, s, ready) = best.expect("zero-bubble schedule deadlocked");
-        let dur = match prio {
-            0 => stages[s].t_bwd_input,
-            1 => stages[s].t_fwd,
-            _ => stages[s].t_bwd_weight,
-        };
-        // Exposed comm: the wait attributable to the inbound hop.
-        let wait_comm = if prio < 2 {
-            let hop = match prio {
-                0 if s < s_n - 1 => link[s],
-                1 if s > 0 => link[s - 1],
-                _ => 0.0,
-            };
-            (ready - clock[s]).max(0.0).min(hop)
-        } else {
-            0.0
-        };
-        let end = start + dur;
-        clock[s] = end;
-        let op = match prio {
-            0 => {
-                let m = next_b[s];
-                bwd_done[m][s] = end;
-                next_b[s] += 1;
-                PipeOp::Bwd { chunk: 0, micro: m }
-            }
-            1 => {
-                let m = next_f[s];
-                fwd_done[m][s] = end;
-                next_f[s] += 1;
-                PipeOp::Fwd { chunk: 0, micro: m }
-            }
-            _ => {
-                let m = next_w[s];
-                next_w[s] += 1;
-                PipeOp::BwdWeight { chunk: 0, micro: m }
-            }
-        };
-        events.push(ZbEvent { stage: s, op, ready, start, end, wait_comm });
+        if self.next_w[s] < self.next_b[s] {
+            consider(self.clock[s], 2, self.clock[s]);
+        }
+        best
     }
-    events
+
+    /// Invalidate stage `s`'s heap entry and push its fresh candidate.
+    fn refresh(&mut self, s: usize, link: &[f64]) {
+        self.gen[s] += 1;
+        if let Some((start, prio, ready)) = self.candidate(s, link) {
+            let gen = self.gen[s];
+            self.heap.push(Reverse(ZbCand { start, prio, stage: s, gen, ready }));
+        }
+    }
+
+    /// Run the greedy schedule over real durations; returns the event list
+    /// in execution order (borrowed from the runner's arena — it is
+    /// overwritten by the next call).
+    pub fn run(&mut self, stages: &[ZbStage], link: &[f64]) -> &[ZbEvent] {
+        let (s_n, b) = (self.s_n, self.b);
+        assert_eq!(stages.len(), s_n, "stage count changed under the runner");
+        self.events.clear();
+        if s_n == 0 || b == 0 {
+            return &self.events;
+        }
+        const UNSET: f64 = -1.0;
+        self.fwd_done.fill(UNSET);
+        self.bwd_done.fill(UNSET);
+        self.next_f.fill(0);
+        self.next_b.fill(0);
+        self.next_w.fill(0);
+        self.clock.fill(0.0);
+        self.gen.fill(0);
+        self.heap.clear();
+        for s in 0..s_n {
+            if let Some((start, prio, ready)) = self.candidate(s, link) {
+                self.heap.push(Reverse(ZbCand { start, prio, stage: s, gen: 0, ready }));
+            }
+        }
+
+        // Op kinds by tie-break priority: B (0) > F (1) > W (2).
+        let total_ops = 3 * b * s_n;
+        for _ in 0..total_ops {
+            let cand = loop {
+                let Reverse(c) = self.heap.pop().expect("zero-bubble schedule deadlocked");
+                if c.gen == self.gen[c.stage] {
+                    break c;
+                }
+            };
+            let (s, prio, start, ready) = (cand.stage, cand.prio, cand.start, cand.ready);
+            let dur = match prio {
+                0 => stages[s].t_bwd_input,
+                1 => stages[s].t_fwd,
+                _ => stages[s].t_bwd_weight,
+            };
+            // Exposed comm: the wait attributable to the inbound hop.
+            let wait_comm = if prio < 2 {
+                let hop = match prio {
+                    0 if s < s_n - 1 => link[s],
+                    1 if s > 0 => link[s - 1],
+                    _ => 0.0,
+                };
+                (ready - self.clock[s]).max(0.0).min(hop)
+            } else {
+                0.0
+            };
+            let end = start + dur;
+            self.clock[s] = end;
+            let op = match prio {
+                0 => {
+                    let m = self.next_b[s];
+                    self.bwd_done[m * s_n + s] = end;
+                    self.next_b[s] += 1;
+                    PipeOp::Bwd { chunk: 0, micro: m }
+                }
+                1 => {
+                    let m = self.next_f[s];
+                    self.fwd_done[m * s_n + s] = end;
+                    self.next_f[s] += 1;
+                    PipeOp::Fwd { chunk: 0, micro: m }
+                }
+                _ => {
+                    let m = self.next_w[s];
+                    self.next_w[s] += 1;
+                    PipeOp::BwdWeight { chunk: 0, micro: m }
+                }
+            };
+            self.events.push(ZbEvent { stage: s, op, ready, start, end, wait_comm });
+            // Refresh every stage whose candidate inputs this op touched.
+            match prio {
+                0 => {
+                    if s > 0 {
+                        self.refresh(s - 1, link);
+                    }
+                    self.refresh(s, link);
+                }
+                1 => {
+                    self.refresh(s, link);
+                    if s + 1 < s_n {
+                        self.refresh(s + 1, link);
+                    }
+                }
+                _ => self.refresh(s, link),
+            }
+        }
+        &self.events
+    }
 }
 
 /// Static per-stage zero-bubble orders: the greedy executor's decisions
@@ -557,5 +706,36 @@ mod tests {
                            stage_orders(Schedule::OneF1B, s_n, b));
             }
         }
+    }
+
+    #[test]
+    fn heap_greedy_matches_the_reference_scan() {
+        // The lazy-invalidation heap must reproduce the original
+        // rescan-everything greedy bit-for-bit: same ops in the same
+        // order with identical ready/start/end/wait_comm timestamps.
+        prop::check(40, |rng| {
+            let s_n = rng.usize(1, 7);
+            let b = rng.usize(1, 14);
+            let stages: Vec<ZbStage> = (0..s_n)
+                .map(|_| ZbStage {
+                    t_fwd: 0.5 + rng.f64(),
+                    t_bwd_input: 0.5 + rng.f64(),
+                    t_bwd_weight: 0.25 + rng.f64(),
+                })
+                .collect();
+            let link: Vec<f64> = (0..s_n).map(|_| rng.f64() * 0.5).collect();
+            let heap_events = zero_bubble_events(&stages, &link, b);
+            let scan_events = crate::sim::reference::zb_events_scan(&stages, &link, b);
+            prop::assert_prop(heap_events.len() == scan_events.len(), "event count")?;
+            for (a, e) in heap_events.iter().zip(scan_events.iter()) {
+                prop::assert_prop(a.stage == e.stage, "stage")?;
+                prop::assert_prop(a.op == e.op, "op")?;
+                prop::assert_prop(a.ready == e.ready, "ready")?;
+                prop::assert_prop(a.start == e.start, "start")?;
+                prop::assert_prop(a.end == e.end, "end")?;
+                prop::assert_prop(a.wait_comm == e.wait_comm, "wait_comm")?;
+            }
+            Ok(())
+        });
     }
 }

@@ -239,4 +239,44 @@ mod tests {
         // Replicas are independent.
         assert_eq!(m.observe(0, 0, None), None);
     }
+
+    #[test]
+    fn event_observed_exactly_debounce_times_fires_once_and_exactly_once() {
+        // Regression pin for the debounce boundary: an anomaly sustained
+        // for exactly `debounce` observations fires on observation number
+        // `debounce` — not `debounce - 1` (too eager: transient blips
+        // would trigger re-plans), not `debounce + 1` (too lazy: the
+        // config's contract is "N consecutive anomalous steps"), and never
+        // a second time while the anomaly persists.
+        for debounce in 1..=4 {
+            // Missed heartbeats → Dead.
+            let mut m = monitor(debounce);
+            let mut fired_at = None;
+            for obs in 1..=debounce + 3 {
+                let e = m.observe(0, 0, None);
+                if e.is_some() {
+                    assert_eq!(e, Some(ElasticEvent::Dead { stage: 0, dp_rank: 0 }));
+                    assert_eq!(fired_at, None,
+                               "debounce {debounce}: re-fired at observation {obs}");
+                    fired_at = Some(obs);
+                }
+            }
+            assert_eq!(fired_at, Some(debounce), "debounce {debounce}: Dead");
+
+            // Sustained slowdown → Straggler, same boundary.
+            let mut m = monitor(debounce);
+            let mut fired_at = None;
+            for obs in 1..=debounce + 3 {
+                let e = m.observe(0, 0, Some(3.0));
+                if let Some(ev) = e {
+                    assert!(matches!(ev, ElasticEvent::Straggler { stage: 0, dp_rank: 0, .. }),
+                            "debounce {debounce}: {ev:?}");
+                    assert_eq!(fired_at, None,
+                               "debounce {debounce}: re-fired at observation {obs}");
+                    fired_at = Some(obs);
+                }
+            }
+            assert_eq!(fired_at, Some(debounce), "debounce {debounce}: Straggler");
+        }
+    }
 }

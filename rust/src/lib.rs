@@ -89,7 +89,10 @@
 //! * [`elastic`] — fault injection, step-time monitoring, and hot-swap
 //!   state migration: the detect → replan → migrate loop.
 //! * [`sim`] — the HeteroPP discrete-event simulator (§4.2) with a real
-//!   issue order per schedule.
+//!   issue order per schedule: the flat-arena [`sim::SimEngine`] hot
+//!   path, machine-readable [`sim::EventTimeline`]s, and the preserved
+//!   pre-arena executors in [`sim::reference`] as a differential
+//!   baseline.
 //! * [`coordinator`] — the training coordinator: executes a plan's
 //!   schedule and DP collective over PJRT artifacts
 //!   ([`coordinator::train_plan`]) or with modeled compute as the third

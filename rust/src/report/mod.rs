@@ -17,7 +17,7 @@ use crate::costmodel::{uniform_1f1b, GroupPlan, ProfileCache, Schedule, Strategy
 use crate::elastic::{swap_compatible, MonitorConfig, RecoveryTimeline};
 use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
 use crate::plan::{ExecutionPlan, PlanBuilder};
-use crate::sim::{simulate_plan, ReshardStrategy};
+use crate::sim::{simulate_plan, simulate_plans, ReshardStrategy};
 
 /// The paper ran everything on 1F1B with flat-ring collectives; its tables
 /// are reproduced under a search pinned to both so the comparisons stay
@@ -176,11 +176,11 @@ pub fn table9_ablation() -> Result<Vec<AblationRow>> {
     let cfg = paper_search_config();
     let r = search(&H2_100B, &exp.cluster, exp.gbs_tokens, &cfg)?;
     let base = r.into_plan(&H2_100B, &exp.cluster, exp.gbs_tokens);
-    let run = |plan: &ExecutionPlan| simulate_plan(plan).iteration_seconds;
-    let full = run(&base);
 
     // Each ablation is the base plan with one field flipped — exactly what
-    // a user does to a persisted plan.json.
+    // a user does to a persisted plan.json. The five variants are
+    // independent, so the batch runs on the simulator's deterministic
+    // parallel driver (one arena engine per plan, results in input order).
     let mut tcp = base.clone();
     tcp.comm = CommMode::TcpCpu;
     let mut uniform = base.clone();
@@ -190,27 +190,30 @@ pub fn table9_ablation() -> Result<Vec<AblationRow>> {
     let mut no_overlap = base.clone();
     no_overlap.fine_overlap = false;
 
+    let sims = simulate_plans(&[&base, &tcp, &uniform, &naive, &no_overlap]);
+    let full = sims[0].iteration_seconds;
+
     let rows = vec![
         AblationRow { label: "DDR + HeteroAuto + HeteroPP 1F1B (full)",
                       relative_percent: 100.0, paper_percent: 100.0 },
         AblationRow {
             label: "TCP instead of DDR",
-            relative_percent: run(&tcp) / full * 100.0,
+            relative_percent: sims[1].iteration_seconds / full * 100.0,
             paper_percent: 110.1,
         },
         AblationRow {
             label: "Uniform 1F1B instead of HeteroPP",
-            relative_percent: run(&uniform) / full * 100.0,
+            relative_percent: sims[2].iteration_seconds / full * 100.0,
             paper_percent: 126.4,
         },
         AblationRow {
             label: "w/o SR&AG resharding (naive P2P)",
-            relative_percent: run(&naive) / full * 100.0,
+            relative_percent: sims[3].iteration_seconds / full * 100.0,
             paper_percent: 104.8,
         },
         AblationRow {
             label: "w/o fine-grained overlap",
-            relative_percent: run(&no_overlap) / full * 100.0,
+            relative_percent: sims[4].iteration_seconds / full * 100.0,
             paper_percent: 101.8,
         },
     ];

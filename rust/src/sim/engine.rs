@@ -1,0 +1,669 @@
+//! Flat-arena discrete-event engine for the pipeline simulator.
+//!
+//! [`SimEngine`] is the allocation-free hot path behind
+//! [`simulate_iteration`](super::simulate_iteration): construction does all
+//! the pricing work (per-stage timing tables via
+//! [`plan_stage_sims`](super::pipeline), reshard link costs via
+//! [`stage_links`](super::pipeline), and the static per-stage issue orders
+//! from the shared [`stage_orders`] generators), and every subsequent
+//! [`SimEngine::run`] replays the iteration over pre-sized flat arenas
+//! keyed by `(micro, virtual-stage)` indices — no per-op allocation, no
+//! `Vec<Vec<_>>` pointer chasing, no re-derivation of the schedule.
+//!
+//! The engine is bit-identical to the pre-arena executors preserved in
+//! [`super::reference`]: the 1F1B and interleaved schedules replay the same
+//! static queues with the same readiness formulas (1F1B is the `v = 1`
+//! degenerate case — `x / 1.0 == x` bitwise), and the zero-bubble schedule
+//! delegates to the shared heap-based
+//! [`ZbRunner`](crate::coordinator::schedule::ZbRunner), itself pinned
+//! against the original scan greedy. The differential suite
+//! (`tests/sim_differential.rs`) and the golden timelines
+//! (`tests/golden_timeline.rs`) hold that equivalence.
+//!
+//! Every execution can optionally record an [`EventTimeline`] — the
+//! machine-readable per-op `(stage, chunk, micro, kind, start, end)` trace
+//! that is the currency of the golden-snapshot harness.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::schedule::{stage_orders, PipeOp, ZbRunner, ZbStage};
+use crate::costmodel::{ModelShape, Schedule, Strategy};
+use crate::hetero::ChipGroup;
+use crate::util::json::{self, Value};
+
+use super::pipeline::{finish, plan_stage_sims, stage_links, SimOptions, SimResult, StageSim};
+
+/// Kind of one simulated pipeline op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventKind {
+    /// Forward pass of one micro-batch through one (virtual) stage.
+    #[default]
+    Fwd,
+    /// Backward pass (full, or the input-gradient phase under zero-bubble).
+    Bwd,
+    /// Zero-bubble weight-gradient phase (bubble filler).
+    BwdWeight,
+}
+
+impl EventKind {
+    /// Canonical token used in the timeline JSON.
+    pub fn token(self) -> &'static str {
+        match self {
+            EventKind::Fwd => "fwd",
+            EventKind::Bwd => "bwd",
+            EventKind::BwdWeight => "bwd-w",
+        }
+    }
+
+    /// Parse a canonical token back into the kind.
+    pub fn parse(token: &str) -> Result<EventKind> {
+        match token {
+            "fwd" => Ok(EventKind::Fwd),
+            "bwd" => Ok(EventKind::Bwd),
+            "bwd-w" => Ok(EventKind::BwdWeight),
+            other => bail!("unknown event kind `{other}`"),
+        }
+    }
+}
+
+/// One executed op in a simulated iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimelineEvent {
+    /// Physical pipeline stage the op ran on.
+    pub stage: usize,
+    /// Virtual-stage chunk (0 for non-interleaved schedules).
+    pub chunk: usize,
+    /// Micro-batch index.
+    pub micro: usize,
+    /// Op kind.
+    pub kind: EventKind,
+    /// Start time (seconds from iteration start).
+    pub start: f64,
+    /// End time (seconds from iteration start).
+    pub end: f64,
+}
+
+/// Machine-readable trace of one simulated iteration: every op's
+/// `(stage, chunk, micro, kind, start, end)`, grouped by stage and in
+/// per-stage execution order. Round-trips through JSON bit-exactly (the
+/// writer prints `f64`s shortest-roundtrip), which is what lets the golden
+/// snapshots under `rust/tests/golden/` pin the engine to the reference
+/// executors timestamp-for-timestamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventTimeline {
+    /// Canonical schedule token ([`Schedule::token`]).
+    pub schedule: String,
+    /// Physical stage count.
+    pub stages: usize,
+    /// Micro-batches per iteration.
+    pub micro_batches: usize,
+    /// All executed ops, sorted by stage, per-stage execution order.
+    pub events: Vec<TimelineEvent>,
+}
+
+impl EventTimeline {
+    /// Canonicalize a raw event list: stable-sort by stage so that
+    /// executors that emit events in different global interleavings (the
+    /// arena engine replays stage-by-stage, the reference executors sweep)
+    /// produce comparable traces — within a stage every executor emits in
+    /// execution order, so the stable sort is a total canonical order.
+    pub fn from_events(
+        schedule: Schedule,
+        stages: usize,
+        micro_batches: usize,
+        mut events: Vec<TimelineEvent>,
+    ) -> EventTimeline {
+        events.sort_by_key(|e| e.stage);
+        EventTimeline { schedule: schedule.token(), stages, micro_batches, events }
+    }
+
+    /// Serialize to the canonical JSON shape (sorted keys, shortest
+    /// round-trip floats).
+    pub fn to_json(&self) -> Value {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("stage", json::num(e.stage as f64)),
+                    ("chunk", json::num(e.chunk as f64)),
+                    ("micro", json::num(e.micro as f64)),
+                    ("kind", json::s(e.kind.token())),
+                    ("start", json::num(e.start)),
+                    ("end", json::num(e.end)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schedule", json::s(&self.schedule)),
+            ("stages", json::num(self.stages as f64)),
+            ("micro_batches", json::num(self.micro_batches as f64)),
+            ("events", json::arr(events)),
+        ])
+    }
+
+    /// Parse a timeline back from its canonical JSON shape.
+    pub fn from_json(v: &Value) -> Result<EventTimeline> {
+        let mut events = Vec::new();
+        for e in v.get("events")?.arr()? {
+            events.push(TimelineEvent {
+                stage: e.get("stage")?.usize()?,
+                chunk: e.get("chunk")?.usize()?,
+                micro: e.get("micro")?.usize()?,
+                kind: EventKind::parse(e.get("kind")?.str()?)?,
+                start: e.get("start")?.num()?,
+                end: e.get("end")?.num()?,
+            });
+        }
+        Ok(EventTimeline {
+            schedule: v.get("schedule")?.str()?.to_string(),
+            stages: v.get("stages")?.usize()?,
+            micro_batches: v.get("micro_batches")?.usize()?,
+            events,
+        })
+    }
+
+    /// First difference against another timeline, as a human-readable
+    /// description — `None` when the two are identical (bit-for-bit on
+    /// every timestamp).
+    pub fn diff(&self, other: &EventTimeline) -> Option<String> {
+        if self.schedule != other.schedule {
+            return Some(format!("schedule: `{}` vs `{}`", self.schedule, other.schedule));
+        }
+        if self.stages != other.stages {
+            return Some(format!("stage count: {} vs {}", self.stages, other.stages));
+        }
+        if self.micro_batches != other.micro_batches {
+            return Some(format!(
+                "micro-batches: {} vs {}",
+                self.micro_batches, other.micro_batches
+            ));
+        }
+        if self.events.len() != other.events.len() {
+            return Some(format!(
+                "event count: {} vs {}",
+                self.events.len(),
+                other.events.len()
+            ));
+        }
+        for (i, (a, b)) in self.events.iter().zip(&other.events).enumerate() {
+            if a != b {
+                return Some(format!("event {i}: {a:?} vs {b:?}"));
+            }
+        }
+        None
+    }
+}
+
+/// Reusable per-iteration scratch state, sized once at engine build time.
+/// Done-time arenas are flat `[micro * d_n + virtual_stage]` slabs; the
+/// work-list (`stack`/`queued`) drives the stage replay loop.
+#[derive(Clone, Debug)]
+struct Scratch {
+    fwd_done: Vec<f64>,
+    bwd_done: Vec<f64>,
+    head: Vec<usize>,
+    clock: Vec<f64>,
+    busy: Vec<f64>,
+    exposed: Vec<f64>,
+    stack: Vec<usize>,
+    queued: Vec<bool>,
+}
+
+/// Flat-arena pipeline simulator, priced once and replayed many times.
+///
+/// Construction folds everything iteration-invariant into the engine: the
+/// per-stage timing table, the exposed reshard link costs, and the static
+/// per-stage issue orders from the shared
+/// [`stage_orders`] generators (so the simulator executes
+/// exactly the queues the training coordinator executes and the two cannot
+/// drift). [`SimEngine::run`] then replays the iteration with zero
+/// allocation: a work-list loop over per-stage queue heads for the static
+/// schedules, the heap-based [`ZbRunner`] for zero-bubble.
+///
+/// [`SimEngine::run_scaled`] re-prices the same iteration under per-stage
+/// `(compute, nic)` fault factors — the elastic fault path — by rescaling
+/// the cached base table in place, and [`SimEngine::run_timeline`] records
+/// the machine-readable [`EventTimeline`]. The engine is `Clone`, which is
+/// what the deterministic parallel drivers
+/// ([`simulate_plan_with_faults_workers`](super::simulate_plan_with_faults_workers),
+/// [`simulate_plans`](super::simulate_plans)) hand to each worker thread.
+#[derive(Clone, Debug)]
+pub struct SimEngine {
+    s_n: usize,
+    v: usize,
+    b: usize,
+    schedule: Schedule,
+    base_stages: Vec<StageSim>,
+    base_link: Vec<f64>,
+    base_wrap: f64,
+    scaled_stages: Vec<StageSim>,
+    scaled_link: Vec<f64>,
+    /// Static issue orders, all stages concatenated (`off` delimits).
+    ops: Vec<PipeOp>,
+    /// `ops[off[s]..off[s + 1]]` is stage `s`'s queue.
+    off: Vec<usize>,
+    scratch: Scratch,
+    zb: ZbRunner,
+    zb_stages: Vec<ZbStage>,
+}
+
+impl SimEngine {
+    /// Price a strategy into a reusable engine (the expensive part:
+    /// per-stage profiles, reshard links, static issue orders).
+    pub fn new(
+        model: &ModelShape,
+        groups: &[&ChipGroup],
+        strategy: &Strategy,
+        micro_tokens: usize,
+        opts: &SimOptions,
+    ) -> SimEngine {
+        let base_stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
+        let (base_link, base_wrap) = stage_links(&base_stages, groups, model, micro_tokens, opts);
+        let s_n = base_stages.len();
+        let schedule = strategy.schedule;
+        let v = schedule.virtual_stages();
+        let b = strategy.micro_batches;
+        let (ops, off, zb) = match schedule {
+            Schedule::ZeroBubbleV => (Vec::new(), vec![0; s_n + 1], ZbRunner::new(s_n, b)),
+            _ => {
+                let queues = stage_orders(schedule, s_n, b);
+                let mut ops = Vec::new();
+                let mut off = Vec::with_capacity(s_n + 1);
+                off.push(0);
+                for q in queues {
+                    ops.extend(q);
+                    off.push(ops.len());
+                }
+                (ops, off, ZbRunner::new(0, 0))
+            }
+        };
+        let d_n = s_n * v;
+        SimEngine {
+            s_n,
+            v,
+            b,
+            schedule,
+            scaled_stages: base_stages.clone(),
+            scaled_link: base_link.clone(),
+            base_stages,
+            base_link,
+            base_wrap,
+            ops,
+            off,
+            scratch: Scratch {
+                fwd_done: vec![0.0; b * d_n],
+                bwd_done: vec![0.0; b * d_n],
+                head: vec![0; s_n],
+                clock: vec![0.0; s_n],
+                busy: vec![0.0; s_n],
+                exposed: vec![0.0; s_n],
+                stack: Vec::with_capacity(s_n),
+                queued: vec![false; s_n],
+            },
+            zb,
+            zb_stages: Vec::with_capacity(s_n),
+        }
+    }
+
+    /// Build the engine for a serialized [`crate::plan::ExecutionPlan`].
+    pub fn for_plan(plan: &crate::plan::ExecutionPlan) -> SimEngine {
+        let groups = plan.group_refs();
+        SimEngine::new(
+            &plan.model,
+            &groups,
+            &plan.strategy,
+            plan.micro_tokens,
+            &plan.sim_options(),
+        )
+    }
+
+    /// Physical stage count of the priced pipeline.
+    pub fn stages(&self) -> usize {
+        self.s_n
+    }
+
+    /// Simulate one healthy iteration (the hot path — no allocation).
+    pub fn run(&mut self) -> SimResult {
+        self.execute(false, self.base_wrap, None)
+    }
+
+    /// Simulate one healthy iteration and record its [`EventTimeline`].
+    pub fn run_timeline(&mut self) -> (SimResult, EventTimeline) {
+        let cap = if matches!(self.schedule, Schedule::ZeroBubbleV) {
+            3 * self.b * self.s_n
+        } else {
+            self.ops.len()
+        };
+        let mut events = Vec::with_capacity(cap);
+        let r = self.execute(false, self.base_wrap, Some(&mut events));
+        let t = EventTimeline::from_events(self.schedule, self.s_n, self.b, events);
+        (r, t)
+    }
+
+    /// Simulate one iteration under per-stage `(compute, nic)` fault
+    /// factors, with the exact scaling semantics of the fault loop: a
+    /// compute factor multiplies the stage's compute times plus the
+    /// compute share of its update, a NIC factor multiplies its outgoing
+    /// activation hop and its exposed DP-sync slice.
+    pub fn run_scaled(&mut self, factors: &[(f64, f64)]) -> SimResult {
+        assert_eq!(factors.len(), self.s_n, "one (compute, nic) pair per stage");
+        for s in 0..self.s_n {
+            let (cf, nf) = factors[s];
+            let st = &self.base_stages[s];
+            self.scaled_stages[s] = StageSim {
+                t_fwd: st.t_fwd * cf,
+                t_bwd: st.t_bwd * cf,
+                t_bwd_input: st.t_bwd_input * cf,
+                t_bwd_weight: st.t_bwd_weight * cf,
+                t_update: (st.t_update - st.t_update_comm) * cf + st.t_update_comm * nf,
+                t_update_comm: st.t_update_comm * nf,
+                ..st.clone()
+            };
+        }
+        for i in 0..self.base_link.len() {
+            self.scaled_link[i] = self.base_link[i] * factors[i].1;
+        }
+        let wrap = if self.s_n > 0 {
+            self.base_wrap * factors[self.s_n - 1].1
+        } else {
+            self.base_wrap
+        };
+        self.execute(true, wrap, None)
+    }
+
+    /// Replay one iteration over the scratch arenas against either the
+    /// base or the fault-scaled timing table.
+    fn execute(
+        &mut self,
+        scaled: bool,
+        wrap: f64,
+        timeline: Option<&mut Vec<TimelineEvent>>,
+    ) -> SimResult {
+        let SimEngine {
+            v,
+            schedule,
+            ref base_stages,
+            ref base_link,
+            ref scaled_stages,
+            ref scaled_link,
+            ref ops,
+            ref off,
+            ref mut scratch,
+            ref mut zb,
+            ref mut zb_stages,
+            ..
+        } = *self;
+        let (stages, link): (&[StageSim], &[f64]) = if scaled {
+            (scaled_stages, scaled_link)
+        } else {
+            (base_stages, base_link)
+        };
+        if matches!(schedule, Schedule::ZeroBubbleV) {
+            zb_stages.clear();
+            zb_stages.extend(stages.iter().map(|s| ZbStage {
+                t_fwd: s.t_fwd,
+                t_bwd_input: s.t_bwd_input,
+                t_bwd_weight: s.t_bwd_weight,
+            }));
+            scratch.clock.fill(0.0);
+            scratch.busy.fill(0.0);
+            scratch.exposed.fill(0.0);
+            let mut out = timeline;
+            if let Some(o) = out.as_deref_mut() {
+                o.clear();
+            }
+            for e in zb.run(zb_stages, link) {
+                scratch.clock[e.stage] = e.end;
+                scratch.busy[e.stage] += e.end - e.start;
+                scratch.exposed[e.stage] += e.wait_comm;
+                if let Some(o) = out.as_deref_mut() {
+                    let (chunk, micro, kind) = match e.op {
+                        PipeOp::Fwd { chunk, micro } => (chunk, micro, EventKind::Fwd),
+                        PipeOp::Bwd { chunk, micro } => (chunk, micro, EventKind::Bwd),
+                        PipeOp::BwdWeight { chunk, micro } => {
+                            (chunk, micro, EventKind::BwdWeight)
+                        }
+                    };
+                    o.push(TimelineEvent {
+                        stage: e.stage,
+                        chunk,
+                        micro,
+                        kind,
+                        start: e.start,
+                        end: e.end,
+                    });
+                }
+            }
+            return finish(stages, &scratch.clock, &scratch.busy, &scratch.exposed);
+        }
+        replay(stages, link, wrap, v, ops, off, scratch, timeline)
+    }
+}
+
+/// Work-list replay of the static per-stage issue orders (1F1B and
+/// interleaved; 1F1B is the `v = 1` case — same readiness formulas, and
+/// `x / 1.0 == x` bitwise so chunk durations degrade exactly).
+///
+/// Values are traversal-order independent: each stage's queue is a fixed
+/// sequence, an op's start is `clock[stage].max(ready)` where `ready`
+/// depends only on already-executed ops' end times, so any order that
+/// respects readiness yields the same timestamps — this loop just reaches
+/// the fixed point without re-sweeping stages whose head op is still
+/// blocked. A stage parks when its head op's cross-stage input is missing
+/// and is re-queued by the completion that supplies it (forward at virtual
+/// stage `d` wakes `d + 1`'s stage, backward wakes `d - 1`'s).
+#[allow(clippy::too_many_arguments)]
+fn replay(
+    stages: &[StageSim],
+    link: &[f64],
+    wrap_link: f64,
+    v: usize,
+    ops: &[PipeOp],
+    off: &[usize],
+    sc: &mut Scratch,
+    mut timeline: Option<&mut Vec<TimelineEvent>>,
+) -> SimResult {
+    let s_n = stages.len();
+    let d_n = s_n * v;
+    const UNSET: f64 = -1.0;
+    sc.fwd_done.fill(UNSET);
+    sc.bwd_done.fill(UNSET);
+    sc.head.fill(0);
+    sc.clock.fill(0.0);
+    sc.busy.fill(0.0);
+    sc.exposed.fill(0.0);
+    sc.stack.clear();
+    for s in (0..s_n).rev() {
+        sc.stack.push(s);
+        sc.queued[s] = true;
+    }
+    if let Some(out) = timeline.as_deref_mut() {
+        out.clear();
+        out.resize(ops.len(), TimelineEvent::default());
+    }
+    // Hop latency leaving virtual stage d toward d+1 (or back, for
+    // gradients): adjacent physical stages, except the wrap from the last
+    // physical stage back to the first between chunks.
+    let hop = |d: usize| -> f64 {
+        if d % s_n == s_n - 1 {
+            wrap_link
+        } else {
+            link[d % s_n]
+        }
+    };
+    while let Some(s) = sc.stack.pop() {
+        sc.queued[s] = false;
+        while off[s] + sc.head[s] < off[s + 1] {
+            let slot = off[s] + sc.head[s];
+            let (d, m, fwd) = match ops[slot] {
+                PipeOp::Fwd { chunk, micro } => (chunk * s_n + s, micro, true),
+                PipeOp::Bwd { chunk, micro } => (chunk * s_n + s, micro, false),
+                PipeOp::BwdWeight { .. } => {
+                    unreachable!("static replay has no weight phase")
+                }
+            };
+            let (ready, comm) = if fwd {
+                if d == 0 {
+                    (Some(0.0), 0.0)
+                } else if sc.fwd_done[m * d_n + d - 1] >= 0.0 {
+                    (Some(sc.fwd_done[m * d_n + d - 1] + hop(d - 1)), hop(d - 1))
+                } else {
+                    (None, 0.0)
+                }
+            } else if sc.fwd_done[m * d_n + d] < 0.0 {
+                (None, 0.0)
+            } else if d == d_n - 1 {
+                (Some(sc.fwd_done[m * d_n + d]), 0.0)
+            } else if sc.bwd_done[m * d_n + d + 1] >= 0.0 {
+                (Some(sc.bwd_done[m * d_n + d + 1] + hop(d)), hop(d))
+            } else {
+                (None, 0.0)
+            };
+            let Some(ready) = ready else { break };
+            let dur = if fwd {
+                stages[s].t_fwd / v as f64
+            } else {
+                stages[s].t_bwd / v as f64
+            };
+            let start = sc.clock[s].max(ready);
+            sc.exposed[s] += (ready - sc.clock[s]).max(0.0).min(comm);
+            let end = start + dur;
+            sc.clock[s] = end;
+            sc.busy[s] += dur;
+            if fwd {
+                sc.fwd_done[m * d_n + d] = end;
+            } else {
+                sc.bwd_done[m * d_n + d] = end;
+            }
+            if let Some(out) = timeline.as_deref_mut() {
+                out[slot] = TimelineEvent {
+                    stage: s,
+                    chunk: d / s_n,
+                    micro: m,
+                    kind: if fwd { EventKind::Fwd } else { EventKind::Bwd },
+                    start,
+                    end,
+                };
+            }
+            sc.head[s] += 1;
+            // Wake the stage whose parked head op this completion feeds.
+            let wake = if fwd {
+                if d + 1 < d_n {
+                    Some((d + 1) % s_n)
+                } else {
+                    None
+                }
+            } else if d > 0 {
+                Some((d - 1) % s_n)
+            } else {
+                None
+            };
+            if let Some(t) = wake {
+                if t != s && !sc.queued[t] {
+                    sc.queued[t] = true;
+                    sc.stack.push(t);
+                }
+            }
+        }
+    }
+    assert!(
+        (0..s_n).all(|s| off[s] + sc.head[s] == off[s + 1]),
+        "pipeline deadlocked"
+    );
+    finish(stages, &sc.clock, &sc.busy, &sc.exposed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommAlgo;
+    use crate::costmodel::{GroupPlan, H2_100B};
+    use crate::hetero::{homogeneous_baseline, ChipKind};
+
+    fn strategy(schedule: Schedule) -> Strategy {
+        Strategy {
+            s_dp: 4,
+            micro_batches: 32,
+            schedule,
+            comm_algo: CommAlgo::Ring,
+            plans: vec![GroupPlan { s_pp: 8, s_tp: 4, layers: 96, recompute: false }],
+        }
+    }
+
+    #[test]
+    fn rerun_is_bit_identical() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let groups = exp.cluster.groups_by_memory_desc();
+        for schedule in Schedule::SEARCH_SPACE {
+            let mut eng = SimEngine::new(
+                &H2_100B,
+                &groups,
+                &strategy(schedule),
+                4096,
+                &SimOptions::default(),
+            );
+            let a = eng.run();
+            let b = eng.run();
+            assert_eq!(a.iteration_seconds, b.iteration_seconds, "{schedule}");
+            assert_eq!(a.busy, b.busy, "{schedule}");
+            assert_eq!(a.exposed_comm, b.exposed_comm, "{schedule}");
+        }
+    }
+
+    #[test]
+    fn unit_fault_factors_match_the_healthy_run() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let groups = exp.cluster.groups_by_memory_desc();
+        for schedule in Schedule::SEARCH_SPACE {
+            let mut eng = SimEngine::new(
+                &H2_100B,
+                &groups,
+                &strategy(schedule),
+                4096,
+                &SimOptions::default(),
+            );
+            let healthy = eng.run();
+            let unit = vec![(1.0, 1.0); eng.stages()];
+            let scaled = eng.run_scaled(&unit);
+            assert_eq!(healthy.iteration_seconds, scaled.iteration_seconds, "{schedule}");
+            assert_eq!(healthy.busy, scaled.busy, "{schedule}");
+        }
+    }
+
+    #[test]
+    fn timeline_roundtrips_through_json_bit_exactly() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let groups = exp.cluster.groups_by_memory_desc();
+        let mut eng = SimEngine::new(
+            &H2_100B,
+            &groups,
+            &strategy(Schedule::ZeroBubbleV),
+            4096,
+            &SimOptions::default(),
+        );
+        let (_, t) = eng.run_timeline();
+        assert!(!t.events.is_empty());
+        let text = t.to_json().to_string_pretty();
+        let back = EventTimeline::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.diff(&back), None);
+    }
+
+    #[test]
+    fn timeline_covers_every_op_exactly_once() {
+        let exp = homogeneous_baseline(ChipKind::A);
+        let groups = exp.cluster.groups_by_memory_desc();
+        let strat = strategy(Schedule::Interleaved { virtual_stages: 2 });
+        let mut eng = SimEngine::new(&H2_100B, &groups, &strat, 4096, &SimOptions::default());
+        let (_, t) = eng.run_timeline();
+        let s_n = eng.stages();
+        let (v, b) = (2, strat.micro_batches);
+        assert_eq!(t.events.len(), 2 * v * b * s_n);
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &t.events {
+            assert!(e.end >= e.start);
+            assert!(seen.insert((e.stage, e.chunk, e.micro, e.kind.token())), "duplicate {e:?}");
+        }
+    }
+}

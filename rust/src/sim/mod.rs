@@ -2,12 +2,23 @@
 //! scale with a real issue order per pipeline schedule (1F1B, interleaved,
 //! zero-bubble — see [`crate::costmodel::Schedule`]), activation-resharding
 //! strategies, and the Table 9 ablation axes.
+//!
+//! Layout after the flat-arena refactor: [`engine`] holds the hot
+//! allocation-free event loop ([`SimEngine`]) and the machine-readable
+//! [`EventTimeline`]; [`pipeline`] owns the pricing (stage timing tables,
+//! reshard links) and the plan-level entry points, including the
+//! deterministic parallel fault/batch drivers; [`reference`] preserves the
+//! pre-refactor executors verbatim as the differential-testing baseline.
 
+pub mod engine;
 pub mod pipeline;
+pub mod reference;
 pub mod reshard;
 
+pub use engine::{EventKind, EventTimeline, SimEngine, TimelineEvent};
 pub use pipeline::{
-    simulate_iteration, simulate_plan, simulate_plan_with_faults, FaultSimResult, SimOptions,
-    SimResult, FINE_OVERLAP_HIDDEN,
+    simulate_iteration, simulate_iteration_timeline, simulate_plan, simulate_plan_with_faults,
+    simulate_plan_with_faults_workers, simulate_plans, FaultSimResult, SimOptions, SimResult,
+    FINE_OVERLAP_HIDDEN,
 };
 pub use reshard::{reshard_time, ReshardStrategy};

@@ -14,18 +14,24 @@
 //! coefficient: the parity tests here and in `tests/integration.rs` keep
 //! the two honest against each other per schedule, and the Table 9
 //! ablations are run here.
+//!
+//! Since the flat-arena refactor this module owns the *pricing* (per-stage
+//! timing tables, reshard link costs) and the plan-level entry points; the
+//! hot event loop lives in [`super::engine`] ([`SimEngine`]), and the
+//! original executors survive verbatim in [`super::reference`] as the
+//! differential-testing baseline.
+
+use std::thread;
 
 use anyhow::Result;
 
 use crate::comm::CommMode;
-use crate::coordinator::schedule::{
-    interleaved_orders, one_f1b_order, zero_bubble_events, Op, PipeOp, ZbStage,
-};
-use crate::costmodel::{profile_layer_comm, ModelShape, Schedule, Strategy};
+use crate::costmodel::{profile_layer_comm, ModelShape, Strategy};
 use crate::elastic::FaultPlan;
 use crate::hetero::ChipGroup;
 use crate::topology::NicAssignment;
 
+use super::engine::{EventTimeline, SimEngine};
 use super::reshard::{overlap_effectiveness, reshard_cost, ReshardStrategy};
 
 /// Fraction of P2P transfer time hidden by the fine-grained overlap of §5
@@ -104,7 +110,11 @@ pub struct SimResult {
 }
 
 /// Build per-stage timings from a strategy and simulate one iteration
-/// under the strategy's [`Schedule`].
+/// under the strategy's [`Schedule`](crate::costmodel::Schedule).
+///
+/// One-shot convenience over [`SimEngine`]: hot callers that price the
+/// same strategy repeatedly (the elastic loop, fleet sweeps, benches)
+/// should build the engine once and call [`SimEngine::run`] per iteration.
 pub fn simulate_iteration(
     model: &ModelShape,
     groups: &[&ChipGroup],
@@ -112,29 +122,19 @@ pub fn simulate_iteration(
     micro_tokens: usize,
     opts: &SimOptions,
 ) -> SimResult {
-    let stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
-    let (link, wrap_link) = stage_links(&stages, groups, model, micro_tokens, opts);
-    dispatch_schedule(&stages, &link, wrap_link, strategy.schedule, strategy.micro_batches)
+    SimEngine::new(model, groups, strategy, micro_tokens, opts).run()
 }
 
-/// Route a per-stage timing table to its schedule's executor — shared by
-/// the healthy single-iteration entry point and the fault-aware per-step
-/// loop of [`simulate_plan_with_faults`].
-fn dispatch_schedule(
-    stages: &[StageSim],
-    link: &[f64],
-    wrap_link: f64,
-    schedule: Schedule,
-    micro_batches: usize,
-) -> SimResult {
-    let exposed = |t: f64| t;
-    match schedule {
-        Schedule::OneF1B => simulate_1f1b(stages, link, micro_batches, &exposed),
-        Schedule::Interleaved { virtual_stages } => simulate_interleaved(
-            stages, link, wrap_link, micro_batches, virtual_stages.max(1),
-        ),
-        Schedule::ZeroBubbleV => simulate_zero_bubble(stages, link, micro_batches),
-    }
+/// [`simulate_iteration`] plus the machine-readable [`EventTimeline`] —
+/// the engine-path emitter the golden-snapshot harness pins.
+pub fn simulate_iteration_timeline(
+    model: &ModelShape,
+    groups: &[&ChipGroup],
+    strategy: &Strategy,
+    micro_tokens: usize,
+    opts: &SimOptions,
+) -> (SimResult, EventTimeline) {
+    SimEngine::new(model, groups, strategy, micro_tokens, opts).run_timeline()
 }
 
 /// Expand group plans into a flat per-stage timing table (HeteroPP stage
@@ -265,64 +265,96 @@ pub fn simulate_plan_with_faults(
     faults: &FaultPlan,
     steps: usize,
 ) -> Result<FaultSimResult> {
-    let groups = plan.group_refs();
-    let opts = plan.sim_options();
-    let stages =
-        plan_stage_sims(&plan.model, &groups, &plan.strategy, plan.micro_tokens, &opts);
-    let s_n = stages.len();
+    let workers = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    simulate_plan_with_faults_workers(plan, faults, steps, workers)
+}
+
+/// Below this many faulty steps the scoped-thread fan-out costs more than
+/// it saves; the fault driver falls back to the sequential loop (which is
+/// bit-identical anyway).
+const MIN_PARALLEL_STEPS: usize = 4;
+
+/// [`simulate_plan_with_faults`] with an explicit worker count — the
+/// deterministic parallel driver. Faulty steps are priced concurrently by
+/// per-worker clones of one shared [`SimEngine`] over contiguous slot
+/// ranges and merged back in step order, so the result is bit-identical
+/// for every worker count (each step's simulation reads only the engine's
+/// iteration-invariant base tables; the scratch arenas are fully
+/// reinitialized per run).
+pub fn simulate_plan_with_faults_workers(
+    plan: &crate::plan::ExecutionPlan,
+    faults: &FaultPlan,
+    steps: usize,
+    workers: usize,
+) -> Result<FaultSimResult> {
+    let mut engine = SimEngine::for_plan(plan);
+    let s_n = engine.stages();
     faults.validate(s_n)?;
-    let (link, wrap_link) =
-        stage_links(&stages, &groups, &plan.model, plan.micro_tokens, &opts);
 
     let (run_steps, halted_at) = match faults.first_death() {
         Some(death) if death.step < steps => (death.step, Some(death.step)),
         _ => (steps, None),
     };
 
+    let factors: Vec<Vec<(f64, f64)>> = (0..run_steps)
+        .map(|step| (0..s_n).map(|s| faults.factors_at(step, s)).collect())
+        .collect();
+    let is_healthy =
+        |f: &Vec<(f64, f64)>| f.iter().all(|&(cf, nf)| cf == 1.0 && nf == 1.0);
+
     // Healthy steps all cost the same — simulate that case once.
-    let mut healthy: Option<f64> = None;
-    let schedule = plan.strategy.schedule;
-    let b = plan.strategy.micro_batches;
-    let mut step_seconds = Vec::with_capacity(run_steps);
-    for step in 0..run_steps {
-        let factors: Vec<(f64, f64)> =
-            (0..s_n).map(|s| faults.factors_at(step, s)).collect();
-        if factors.iter().all(|&(cf, nf)| cf == 1.0 && nf == 1.0) {
-            let t = match healthy {
-                Some(t) => t,
-                None => {
-                    let t =
-                        dispatch_schedule(&stages, &link, wrap_link, schedule, b)
-                            .iteration_seconds;
-                    healthy = Some(t);
-                    t
-                }
-            };
-            step_seconds.push(t);
-            continue;
-        }
-        let scaled: Vec<StageSim> = stages
+    let healthy = if factors.iter().any(&is_healthy) {
+        Some(engine.run().iteration_seconds)
+    } else {
+        None
+    };
+
+    let faulty: Vec<usize> =
+        (0..run_steps).filter(|&i| !is_healthy(&factors[i])).collect();
+    let workers = workers.max(1).min(faulty.len().max(1));
+    let faulty_seconds: Vec<f64> = if workers <= 1 || faulty.len() < MIN_PARALLEL_STEPS {
+        faulty
             .iter()
-            .enumerate()
-            .map(|(s, st)| {
-                let (cf, nf) = factors[s];
-                StageSim {
-                    t_fwd: st.t_fwd * cf,
-                    t_bwd: st.t_bwd * cf,
-                    t_bwd_input: st.t_bwd_input * cf,
-                    t_bwd_weight: st.t_bwd_weight * cf,
-                    t_update: (st.t_update - st.t_update_comm) * cf
-                        + st.t_update_comm * nf,
-                    t_update_comm: st.t_update_comm * nf,
-                    ..st.clone()
+            .map(|&step| engine.run_scaled(&factors[step]).iteration_seconds)
+            .collect()
+    } else {
+        let chunk = faulty.len().div_ceil(workers);
+        let mut per_worker: Vec<Vec<f64>> = Vec::with_capacity(workers);
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(faulty.len());
+                if lo >= hi {
+                    break;
                 }
-            })
-            .collect();
-        let scaled_link: Vec<f64> =
-            link.iter().enumerate().map(|(i, &l)| l * factors[i].1).collect();
-        let scaled_wrap = wrap_link * factors[s_n - 1].1;
-        let r = dispatch_schedule(&scaled, &scaled_link, scaled_wrap, schedule, b);
-        step_seconds.push(r.iteration_seconds);
+                let mut eng = engine.clone();
+                let faulty = &faulty[lo..hi];
+                let factors = &factors;
+                handles.push(scope.spawn(move || {
+                    faulty
+                        .iter()
+                        .map(|&step| eng.run_scaled(&factors[step]).iteration_seconds)
+                        .collect::<Vec<f64>>()
+                }));
+            }
+            // Fixed reduction order: worker 0's chunk first, then 1's, …
+            for h in handles {
+                per_worker.push(h.join().expect("fault-sim worker panicked"));
+            }
+        });
+        per_worker.concat()
+    };
+
+    let mut step_seconds = Vec::with_capacity(run_steps);
+    let mut next_faulty = 0usize;
+    for f in &factors {
+        if is_healthy(f) {
+            step_seconds.push(healthy.expect("healthy memo populated above"));
+        } else {
+            step_seconds.push(faulty_seconds[next_faulty]);
+            next_faulty += 1;
+        }
     }
     Ok(FaultSimResult {
         total_seconds: step_seconds.iter().sum(),
@@ -331,14 +363,34 @@ pub fn simulate_plan_with_faults(
     })
 }
 
+/// Simulate several plans concurrently (one scoped worker per plan, one
+/// engine each) and return the results in input order — the deterministic
+/// fan-out behind the Table 9 ablation batch and any caller that prices
+/// independent plan variants side by side. Parallel ≡ sequential
+/// bit-for-bit: the plans share no state and the reduction order is fixed.
+pub fn simulate_plans(plans: &[&crate::plan::ExecutionPlan]) -> Vec<SimResult> {
+    let mut results: Vec<Option<SimResult>> = (0..plans.len()).map(|_| None).collect();
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(plans.len());
+        for &plan in plans {
+            handles.push(scope.spawn(move || SimEngine::for_plan(plan).run()));
+        }
+        for (slot, h) in handles.into_iter().enumerate() {
+            results[slot] = Some(h.join().expect("plan-sim worker panicked"));
+        }
+    });
+    results.into_iter().map(|r| r.expect("every plan simulated")).collect()
+}
+
 /// Fold per-stage clocks into the shared [`SimResult`] shape: optimizer
 /// update appended per stage, critical stage by final clock, bubble from
-/// its busy/idle split.
-fn finish(
+/// its busy/idle split. Shared by the arena engine and the reference
+/// executors so the two cannot diverge in the fold.
+pub(crate) fn finish(
     stages: &[StageSim],
-    clock: Vec<f64>,
-    busy: Vec<f64>,
-    exposed_comm: Vec<f64>,
+    clock: &[f64],
+    busy: &[f64],
+    exposed_comm: &[f64],
 ) -> SimResult {
     let s_n = stages.len();
     let mut iteration: f64 = 0.0;
@@ -356,221 +408,17 @@ fn finish(
 
     SimResult {
         iteration_seconds: iteration,
-        busy,
+        busy: busy.to_vec(),
         bubble_fraction,
         exposed_comm: exposed_comm[crit],
     }
-}
-
-/// Core 1F1B list scheduler over explicit per-stage op queues.
-fn simulate_1f1b(
-    stages: &[StageSim],
-    link: &[f64],
-    micro_batches: usize,
-    exposed: &dyn Fn(f64) -> f64,
-) -> SimResult {
-    let s_n = stages.len();
-    let b = micro_batches;
-    const UNSET: f64 = -1.0;
-    // fwd_done[m][s], bwd_done[m][s]
-    let mut fwd_done = vec![vec![UNSET; s_n]; b];
-    let mut bwd_done = vec![vec![UNSET; s_n]; b];
-
-    // Static 1F1B issue order per stage — the same queue the real training
-    // coordinator executes.
-    let queues: Vec<Vec<Op>> = (0..s_n).map(|s| one_f1b_order(s, s_n, b)).collect();
-
-    let mut head = vec![0usize; s_n]; // next op index per stage
-    let mut clock = vec![0.0f64; s_n]; // stage-busy-until
-    let mut busy = vec![0.0f64; s_n];
-    let mut exposed_comm = vec![0.0f64; s_n];
-
-    // Fixed-point scheduling: keep sweeping stages until no progress.
-    let mut progressed = true;
-    while progressed {
-        progressed = false;
-        for s in 0..s_n {
-            while head[s] < queues[s].len() {
-                let op = queues[s][head[s]];
-                // Readiness: input availability time, or None if dep not done.
-                let ready = match op {
-                    Op::Fwd(m) => {
-                        if s == 0 {
-                            Some(0.0)
-                        } else if fwd_done[m][s - 1] >= 0.0 {
-                            Some(fwd_done[m][s - 1] + exposed(link[s - 1]))
-                        } else {
-                            None
-                        }
-                    }
-                    Op::Bwd(m) => {
-                        if fwd_done[m][s] < 0.0 {
-                            None
-                        } else if s == s_n - 1 {
-                            Some(fwd_done[m][s])
-                        } else if bwd_done[m][s + 1] >= 0.0 {
-                            Some(bwd_done[m][s + 1] + exposed(link[s]))
-                        } else {
-                            None
-                        }
-                    }
-                };
-                let Some(ready) = ready else { break };
-                let start = clock[s].max(ready);
-                let (dur, m, is_f) = match op {
-                    Op::Fwd(m) => (stages[s].t_fwd, m, true),
-                    Op::Bwd(m) => (stages[s].t_bwd, m, false),
-                };
-                let wait_comm = (ready - clock[s]).max(0.0);
-                exposed_comm[s] += wait_comm.min(match op {
-                    Op::Fwd(_) if s > 0 => exposed(link[s - 1]),
-                    Op::Bwd(_) if s < s_n - 1 => exposed(link[s]),
-                    _ => 0.0,
-                });
-                let end = start + dur;
-                clock[s] = end;
-                busy[s] += dur;
-                if is_f {
-                    fwd_done[m][s] = end;
-                } else {
-                    bwd_done[m][s] = end;
-                }
-                head[s] += 1;
-                progressed = true;
-            }
-        }
-    }
-    debug_assert!(head.iter().zip(&queues).all(|(h, q)| *h == q.len()),
-                  "pipeline deadlocked");
-
-    finish(stages, clock, busy, exposed_comm)
-}
-
-/// Interleaved 1F1B over `v` virtual chunks per physical stage.
-///
-/// The virtual pipeline has `D = S·v` stages; virtual stage `d` executes
-/// on physical stage `d % S` with `1/v` of the stage's layers per chunk.
-/// Per-physical-stage issue order: the shared [`interleaved_orders`]
-/// queues (deadlock-free by construction — the same queues the
-/// coordinator executes). `wrap_link` is the reshard cost of the chunk
-/// hand-off from the last physical stage back to the first.
-fn simulate_interleaved(
-    stages: &[StageSim],
-    link: &[f64],
-    wrap_link: f64,
-    micro_batches: usize,
-    v: usize,
-) -> SimResult {
-    let s_n = stages.len();
-    let b = micro_batches;
-    if v <= 1 || s_n == 0 {
-        return simulate_1f1b(stages, link, b, &|t| t);
-    }
-    let d_n = s_n * v;
-
-    // Hop latency leaving virtual stage d toward d+1 (or back, for
-    // gradients): adjacent physical stages, except the wrap from the last
-    // physical stage back to the first between chunks.
-    let hop = |d: usize| -> f64 {
-        if d % s_n == s_n - 1 { wrap_link } else { link[d % s_n] }
-    };
-
-    let queues = interleaved_orders(s_n, v, b);
-
-    const UNSET: f64 = -1.0;
-    let mut fwd_done = vec![vec![UNSET; d_n]; b];
-    let mut bwd_done = vec![vec![UNSET; d_n]; b];
-    let mut head = vec![0usize; s_n];
-    let mut clock = vec![0.0f64; s_n];
-    let mut busy = vec![0.0f64; s_n];
-    let mut exposed_comm = vec![0.0f64; s_n];
-
-    let mut progressed = true;
-    while progressed {
-        progressed = false;
-        for s in 0..s_n {
-            while head[s] < queues[s].len() {
-                let (d, m, fwd) = match queues[s][head[s]] {
-                    PipeOp::Fwd { chunk, micro } => (chunk * s_n + s, micro, true),
-                    PipeOp::Bwd { chunk, micro } => (chunk * s_n + s, micro, false),
-                    PipeOp::BwdWeight { .. } => {
-                        unreachable!("interleaved orders have no weight phase")
-                    }
-                };
-                let (ready, comm) = if fwd {
-                    if d == 0 {
-                        (Some(0.0), 0.0)
-                    } else if fwd_done[m][d - 1] >= 0.0 {
-                        (Some(fwd_done[m][d - 1] + hop(d - 1)), hop(d - 1))
-                    } else {
-                        (None, 0.0)
-                    }
-                } else if fwd_done[m][d] < 0.0 {
-                    (None, 0.0)
-                } else if d == d_n - 1 {
-                    (Some(fwd_done[m][d]), 0.0)
-                } else if bwd_done[m][d + 1] >= 0.0 {
-                    (Some(bwd_done[m][d + 1] + hop(d)), hop(d))
-                } else {
-                    (None, 0.0)
-                };
-                let Some(ready) = ready else { break };
-                let dur = if fwd {
-                    stages[s].t_fwd / v as f64
-                } else {
-                    stages[s].t_bwd / v as f64
-                };
-                let start = clock[s].max(ready);
-                exposed_comm[s] += (ready - clock[s]).max(0.0).min(comm);
-                let end = start + dur;
-                clock[s] = end;
-                busy[s] += dur;
-                if fwd {
-                    fwd_done[m][d] = end;
-                } else {
-                    bwd_done[m][d] = end;
-                }
-                head[s] += 1;
-                progressed = true;
-            }
-        }
-    }
-    assert!(head.iter().zip(&queues).all(|(h, q)| *h == q.len()),
-            "interleaved pipeline deadlocked");
-
-    finish(stages, clock, busy, exposed_comm)
-}
-
-/// Zero-bubble schedule: the shared greedy B/F/W executor
-/// ([`zero_bubble_events`] — see its docs for the scheduling policy),
-/// folded into the simulator's per-stage clock/busy/exposed-comm view.
-fn simulate_zero_bubble(stages: &[StageSim], link: &[f64], micro_batches: usize) -> SimResult {
-    let s_n = stages.len();
-    let zb: Vec<ZbStage> = stages
-        .iter()
-        .map(|s| ZbStage {
-            t_fwd: s.t_fwd,
-            t_bwd_input: s.t_bwd_input,
-            t_bwd_weight: s.t_bwd_weight,
-        })
-        .collect();
-    let mut clock = vec![0.0f64; s_n];
-    let mut busy = vec![0.0f64; s_n];
-    let mut exposed_comm = vec![0.0f64; s_n];
-    for e in zero_bubble_events(&zb, link, micro_batches) {
-        clock[e.stage] = e.end;
-        busy[e.stage] += e.end - e.start;
-        exposed_comm[e.stage] += e.wait_comm;
-    }
-
-    finish(stages, clock, busy, exposed_comm)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::CommAlgo;
-    use crate::costmodel::{evaluate, GroupPlan, H2_100B};
+    use crate::costmodel::{evaluate, GroupPlan, Schedule, H2_100B};
     use crate::hetero::{experiment, homogeneous_baseline, ChipKind};
 
     fn table6_a_strategy() -> Strategy {
@@ -869,5 +717,28 @@ mod tests {
         let sim = simulate_iteration(&H2_100B, &groups, &strategy, 4096, &SimOptions::default());
         assert!(sim.iteration_seconds.is_finite());
         assert!(sim.busy.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn fault_driver_is_worker_count_invariant() {
+        use crate::elastic::FaultPlan;
+        let plan = faulted_fixture_plan();
+        let faults = FaultPlan::generate(11, 12, 2, false);
+        let a = simulate_plan_with_faults_workers(&plan, &faults, 12, 1).unwrap();
+        let b = simulate_plan_with_faults_workers(&plan, &faults, 12, 4).unwrap();
+        assert_eq!(a.halted_at, b.halted_at);
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.total_seconds, b.total_seconds);
+    }
+
+    #[test]
+    fn simulate_plans_matches_the_sequential_entry_point() {
+        let plan = faulted_fixture_plan();
+        let one = simulate_plan(&plan);
+        for r in simulate_plans(&[&plan, &plan, &plan]) {
+            assert_eq!(r.iteration_seconds, one.iteration_seconds);
+            assert_eq!(r.busy, one.busy);
+            assert_eq!(r.exposed_comm, one.exposed_comm);
+        }
     }
 }

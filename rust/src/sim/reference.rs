@@ -1,0 +1,516 @@
+//! Pre-arena-engine pipeline executors, kept verbatim as the
+//! differential-testing reference.
+//!
+//! These are the original `sim::pipeline` executors from before the
+//! flat-arena [`SimEngine`](super::SimEngine) refactor: `Vec<Vec<_>>`
+//! done-time tables, fixed-point sweeps, per-call re-derivation of every
+//! issue order, and the `O(ops × stages)` rescan greedy for zero-bubble.
+//! They are deliberately slow and deliberately untouched — the
+//! differential proptest (`tests/sim_differential.rs`), the golden-timeline
+//! suite (`tests/golden_timeline.rs`) and the `sim-reference:` benches in
+//! `benches/perf_hotpath.rs` all hold the fast engine against this module
+//! bit-for-bit, so any behavioral drift in the hot path shows up as a
+//! timestamp mismatch rather than a silent re-baseline.
+//!
+//! The only addition over the historical code is optional
+//! [`EventTimeline`] recording, so the reference path can emit the same
+//! machine-readable trace the engine emits (the "old-path shim").
+
+use anyhow::Result;
+
+use crate::coordinator::schedule::{
+    interleaved_orders, one_f1b_order, Op, PipeOp, ZbEvent, ZbStage,
+};
+use crate::costmodel::Schedule;
+use crate::elastic::FaultPlan;
+
+use super::engine::{EventKind, EventTimeline, TimelineEvent};
+use super::pipeline::{
+    finish, plan_stage_sims, stage_links, FaultSimResult, SimOptions, SimResult, StageSim,
+};
+
+/// Reference (pre-refactor) single-iteration simulation — the slow twin of
+/// [`simulate_iteration`](super::simulate_iteration), priced from scratch
+/// on every call exactly as the original did.
+pub fn simulate_iteration_reference(
+    model: &crate::costmodel::ModelShape,
+    groups: &[&crate::hetero::ChipGroup],
+    strategy: &crate::costmodel::Strategy,
+    micro_tokens: usize,
+    opts: &SimOptions,
+) -> SimResult {
+    let stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
+    let (link, wrap_link) = stage_links(&stages, groups, model, micro_tokens, opts);
+    dispatch_reference(&stages, &link, wrap_link, strategy.schedule, strategy.micro_batches, None)
+}
+
+/// [`simulate_iteration_reference`] plus the recorded [`EventTimeline`] —
+/// the old-path shim the golden harness diffs against the arena engine.
+pub fn simulate_iteration_reference_timeline(
+    model: &crate::costmodel::ModelShape,
+    groups: &[&crate::hetero::ChipGroup],
+    strategy: &crate::costmodel::Strategy,
+    micro_tokens: usize,
+    opts: &SimOptions,
+) -> (SimResult, EventTimeline) {
+    let stages = plan_stage_sims(model, groups, strategy, micro_tokens, opts);
+    let (link, wrap_link) = stage_links(&stages, groups, model, micro_tokens, opts);
+    let mut events = Vec::new();
+    let r = dispatch_reference(
+        &stages,
+        &link,
+        wrap_link,
+        strategy.schedule,
+        strategy.micro_batches,
+        Some(&mut events),
+    );
+    let t = EventTimeline::from_events(
+        strategy.schedule,
+        stages.len(),
+        strategy.micro_batches,
+        events,
+    );
+    (r, t)
+}
+
+/// Reference fault-path simulation — the original sequential per-step loop
+/// of [`simulate_plan_with_faults`](super::simulate_plan_with_faults),
+/// re-pricing the scaled stage tables per faulty step.
+pub fn simulate_plan_with_faults_reference(
+    plan: &crate::plan::ExecutionPlan,
+    faults: &FaultPlan,
+    steps: usize,
+) -> Result<FaultSimResult> {
+    let groups = plan.group_refs();
+    let opts = plan.sim_options();
+    let stages = plan_stage_sims(&plan.model, &groups, &plan.strategy, plan.micro_tokens, &opts);
+    let s_n = stages.len();
+    faults.validate(s_n)?;
+    let (link, wrap_link) = stage_links(&stages, &groups, &plan.model, plan.micro_tokens, &opts);
+
+    let (run_steps, halted_at) = match faults.first_death() {
+        Some(death) if death.step < steps => (death.step, Some(death.step)),
+        _ => (steps, None),
+    };
+
+    // Healthy steps all cost the same — simulate that case once.
+    let mut healthy: Option<f64> = None;
+    let schedule = plan.strategy.schedule;
+    let b = plan.strategy.micro_batches;
+    let mut step_seconds = Vec::with_capacity(run_steps);
+    for step in 0..run_steps {
+        let factors: Vec<(f64, f64)> = (0..s_n).map(|s| faults.factors_at(step, s)).collect();
+        if factors.iter().all(|&(cf, nf)| cf == 1.0 && nf == 1.0) {
+            let t = match healthy {
+                Some(t) => t,
+                None => {
+                    let r = dispatch_reference(&stages, &link, wrap_link, schedule, b, None);
+                    healthy = Some(r.iteration_seconds);
+                    r.iteration_seconds
+                }
+            };
+            step_seconds.push(t);
+            continue;
+        }
+        let scaled: Vec<StageSim> = stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                let (cf, nf) = factors[s];
+                StageSim {
+                    t_fwd: st.t_fwd * cf,
+                    t_bwd: st.t_bwd * cf,
+                    t_bwd_input: st.t_bwd_input * cf,
+                    t_bwd_weight: st.t_bwd_weight * cf,
+                    t_update: (st.t_update - st.t_update_comm) * cf + st.t_update_comm * nf,
+                    t_update_comm: st.t_update_comm * nf,
+                    ..st.clone()
+                }
+            })
+            .collect();
+        let scaled_link: Vec<f64> =
+            link.iter().enumerate().map(|(i, &l)| l * factors[i].1).collect();
+        let scaled_wrap = wrap_link * factors[s_n - 1].1;
+        let r = dispatch_reference(&scaled, &scaled_link, scaled_wrap, schedule, b, None);
+        step_seconds.push(r.iteration_seconds);
+    }
+    Ok(FaultSimResult {
+        total_seconds: step_seconds.iter().sum(),
+        step_seconds,
+        halted_at,
+    })
+}
+
+/// Route a timing table to its schedule's reference executor.
+fn dispatch_reference(
+    stages: &[StageSim],
+    link: &[f64],
+    wrap_link: f64,
+    schedule: Schedule,
+    micro_batches: usize,
+    events: Option<&mut Vec<TimelineEvent>>,
+) -> SimResult {
+    let exposed = |t: f64| t;
+    match schedule {
+        Schedule::OneF1B => simulate_1f1b(stages, link, micro_batches, &exposed, events),
+        Schedule::Interleaved { virtual_stages } => {
+            let v = virtual_stages.max(1);
+            simulate_interleaved(stages, link, wrap_link, micro_batches, v, events)
+        }
+        Schedule::ZeroBubbleV => simulate_zero_bubble(stages, link, micro_batches, events),
+    }
+}
+
+/// Core 1F1B list scheduler over explicit per-stage op queues.
+fn simulate_1f1b(
+    stages: &[StageSim],
+    link: &[f64],
+    micro_batches: usize,
+    exposed: &dyn Fn(f64) -> f64,
+    mut events: Option<&mut Vec<TimelineEvent>>,
+) -> SimResult {
+    let s_n = stages.len();
+    let b = micro_batches;
+    const UNSET: f64 = -1.0;
+    // fwd_done[m][s], bwd_done[m][s]
+    let mut fwd_done = vec![vec![UNSET; s_n]; b];
+    let mut bwd_done = vec![vec![UNSET; s_n]; b];
+
+    // Static 1F1B issue order per stage — the same queue the real training
+    // coordinator executes.
+    let queues: Vec<Vec<Op>> = (0..s_n).map(|s| one_f1b_order(s, s_n, b)).collect();
+
+    let mut head = vec![0usize; s_n]; // next op index per stage
+    let mut clock = vec![0.0f64; s_n]; // stage-busy-until
+    let mut busy = vec![0.0f64; s_n];
+    let mut exposed_comm = vec![0.0f64; s_n];
+
+    // Fixed-point scheduling: keep sweeping stages until no progress.
+    let mut progressed = true;
+    while progressed {
+        progressed = false;
+        for s in 0..s_n {
+            while head[s] < queues[s].len() {
+                let op = queues[s][head[s]];
+                // Readiness: input availability time, or None if dep not done.
+                let ready = match op {
+                    Op::Fwd(m) => {
+                        if s == 0 {
+                            Some(0.0)
+                        } else if fwd_done[m][s - 1] >= 0.0 {
+                            Some(fwd_done[m][s - 1] + exposed(link[s - 1]))
+                        } else {
+                            None
+                        }
+                    }
+                    Op::Bwd(m) => {
+                        if fwd_done[m][s] < 0.0 {
+                            None
+                        } else if s == s_n - 1 {
+                            Some(fwd_done[m][s])
+                        } else if bwd_done[m][s + 1] >= 0.0 {
+                            Some(bwd_done[m][s + 1] + exposed(link[s]))
+                        } else {
+                            None
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                let start = clock[s].max(ready);
+                let (dur, m, is_f) = match op {
+                    Op::Fwd(m) => (stages[s].t_fwd, m, true),
+                    Op::Bwd(m) => (stages[s].t_bwd, m, false),
+                };
+                let wait_comm = (ready - clock[s]).max(0.0);
+                exposed_comm[s] += wait_comm.min(match op {
+                    Op::Fwd(_) if s > 0 => exposed(link[s - 1]),
+                    Op::Bwd(_) if s < s_n - 1 => exposed(link[s]),
+                    _ => 0.0,
+                });
+                let end = start + dur;
+                clock[s] = end;
+                busy[s] += dur;
+                if is_f {
+                    fwd_done[m][s] = end;
+                } else {
+                    bwd_done[m][s] = end;
+                }
+                if let Some(out) = events.as_deref_mut() {
+                    out.push(TimelineEvent {
+                        stage: s,
+                        chunk: 0,
+                        micro: m,
+                        kind: if is_f { EventKind::Fwd } else { EventKind::Bwd },
+                        start,
+                        end,
+                    });
+                }
+                head[s] += 1;
+                progressed = true;
+            }
+        }
+    }
+    debug_assert!(head.iter().zip(&queues).all(|(h, q)| *h == q.len()), "pipeline deadlocked");
+
+    finish(stages, &clock, &busy, &exposed_comm)
+}
+
+/// Interleaved 1F1B over `v` virtual chunks per physical stage (the
+/// original fixed-point sweep; see the engine's `replay` for the formulas).
+fn simulate_interleaved(
+    stages: &[StageSim],
+    link: &[f64],
+    wrap_link: f64,
+    micro_batches: usize,
+    v: usize,
+    mut events: Option<&mut Vec<TimelineEvent>>,
+) -> SimResult {
+    let s_n = stages.len();
+    let b = micro_batches;
+    if v <= 1 || s_n == 0 {
+        return simulate_1f1b(stages, link, b, &|t| t, events);
+    }
+    let d_n = s_n * v;
+
+    // Hop latency leaving virtual stage d toward d+1 (or back, for
+    // gradients): adjacent physical stages, except the wrap from the last
+    // physical stage back to the first between chunks.
+    let hop = |d: usize| -> f64 {
+        if d % s_n == s_n - 1 {
+            wrap_link
+        } else {
+            link[d % s_n]
+        }
+    };
+
+    let queues = interleaved_orders(s_n, v, b);
+
+    const UNSET: f64 = -1.0;
+    let mut fwd_done = vec![vec![UNSET; d_n]; b];
+    let mut bwd_done = vec![vec![UNSET; d_n]; b];
+    let mut head = vec![0usize; s_n];
+    let mut clock = vec![0.0f64; s_n];
+    let mut busy = vec![0.0f64; s_n];
+    let mut exposed_comm = vec![0.0f64; s_n];
+
+    let mut progressed = true;
+    while progressed {
+        progressed = false;
+        for s in 0..s_n {
+            while head[s] < queues[s].len() {
+                let (d, m, fwd) = match queues[s][head[s]] {
+                    PipeOp::Fwd { chunk, micro } => (chunk * s_n + s, micro, true),
+                    PipeOp::Bwd { chunk, micro } => (chunk * s_n + s, micro, false),
+                    PipeOp::BwdWeight { .. } => {
+                        unreachable!("interleaved orders have no weight phase")
+                    }
+                };
+                let (ready, comm) = if fwd {
+                    if d == 0 {
+                        (Some(0.0), 0.0)
+                    } else if fwd_done[m][d - 1] >= 0.0 {
+                        (Some(fwd_done[m][d - 1] + hop(d - 1)), hop(d - 1))
+                    } else {
+                        (None, 0.0)
+                    }
+                } else if fwd_done[m][d] < 0.0 {
+                    (None, 0.0)
+                } else if d == d_n - 1 {
+                    (Some(fwd_done[m][d]), 0.0)
+                } else if bwd_done[m][d + 1] >= 0.0 {
+                    (Some(bwd_done[m][d + 1] + hop(d)), hop(d))
+                } else {
+                    (None, 0.0)
+                };
+                let Some(ready) = ready else { break };
+                let dur = if fwd {
+                    stages[s].t_fwd / v as f64
+                } else {
+                    stages[s].t_bwd / v as f64
+                };
+                let start = clock[s].max(ready);
+                exposed_comm[s] += (ready - clock[s]).max(0.0).min(comm);
+                let end = start + dur;
+                clock[s] = end;
+                busy[s] += dur;
+                if fwd {
+                    fwd_done[m][d] = end;
+                } else {
+                    bwd_done[m][d] = end;
+                }
+                if let Some(out) = events.as_deref_mut() {
+                    out.push(TimelineEvent {
+                        stage: s,
+                        chunk: d / s_n,
+                        micro: m,
+                        kind: if fwd { EventKind::Fwd } else { EventKind::Bwd },
+                        start,
+                        end,
+                    });
+                }
+                head[s] += 1;
+                progressed = true;
+            }
+        }
+    }
+    assert!(
+        head.iter().zip(&queues).all(|(h, q)| *h == q.len()),
+        "interleaved pipeline deadlocked"
+    );
+
+    finish(stages, &clock, &busy, &exposed_comm)
+}
+
+/// Zero-bubble schedule: the original rescan greedy folded into the
+/// per-stage clock/busy/exposed-comm view.
+fn simulate_zero_bubble(
+    stages: &[StageSim],
+    link: &[f64],
+    micro_batches: usize,
+    mut events: Option<&mut Vec<TimelineEvent>>,
+) -> SimResult {
+    let s_n = stages.len();
+    let zb: Vec<ZbStage> = stages
+        .iter()
+        .map(|s| ZbStage {
+            t_fwd: s.t_fwd,
+            t_bwd_input: s.t_bwd_input,
+            t_bwd_weight: s.t_bwd_weight,
+        })
+        .collect();
+    let mut clock = vec![0.0f64; s_n];
+    let mut busy = vec![0.0f64; s_n];
+    let mut exposed_comm = vec![0.0f64; s_n];
+    for e in zb_events_scan(&zb, link, micro_batches) {
+        clock[e.stage] = e.end;
+        busy[e.stage] += e.end - e.start;
+        exposed_comm[e.stage] += e.wait_comm;
+        if let Some(out) = events.as_deref_mut() {
+            let (chunk, micro, kind) = match e.op {
+                PipeOp::Fwd { chunk, micro } => (chunk, micro, EventKind::Fwd),
+                PipeOp::Bwd { chunk, micro } => (chunk, micro, EventKind::Bwd),
+                PipeOp::BwdWeight { chunk, micro } => (chunk, micro, EventKind::BwdWeight),
+            };
+            out.push(TimelineEvent {
+                stage: e.stage,
+                chunk,
+                micro,
+                kind,
+                start: e.start,
+                end: e.end,
+            });
+        }
+    }
+
+    finish(stages, &clock, &busy, &exposed_comm)
+}
+
+/// The original `O(ops × stages)` zero-bubble greedy: every pick rescans
+/// every stage's B/F/W candidates. Kept verbatim so the heap-based
+/// [`ZbRunner`](crate::coordinator::schedule::ZbRunner) has a fixed point
+/// of comparison (`heap_greedy_matches_the_reference_scan`).
+pub(crate) fn zb_events_scan(stages: &[ZbStage], link: &[f64], b: usize) -> Vec<ZbEvent> {
+    let s_n = stages.len();
+    if s_n == 0 || b == 0 {
+        return Vec::new();
+    }
+    const UNSET: f64 = -1.0;
+    let mut fwd_done = vec![vec![UNSET; s_n]; b];
+    let mut bwd_done = vec![vec![UNSET; s_n]; b]; // input-gradient phase end
+    let mut next_f = vec![0usize; s_n];
+    let mut next_b = vec![0usize; s_n];
+    let mut next_w = vec![0usize; s_n];
+    let cap: Vec<usize> = (0..s_n).map(|s| (s_n - s).min(b).max(1)).collect();
+
+    let mut clock = vec![0.0f64; s_n];
+    let mut events = Vec::with_capacity(3 * b * s_n);
+
+    // Op kinds by tie-break priority: B (0) > F (1) > W (2).
+    let total_ops = 3 * b * s_n;
+    for _ in 0..total_ops {
+        // (start, priority, stage) minimal over every stage's candidates.
+        let mut best: Option<(f64, u8, usize, f64)> = None; // +ready for comm
+        let mut consider = |start: f64, prio: u8, s: usize, ready: f64| {
+            let better = match &best {
+                None => true,
+                Some((bs, bp, bi, _)) => (start, prio, s) < (*bs, *bp, *bi),
+            };
+            if better {
+                best = Some((start, prio, s, ready));
+            }
+        };
+        for s in 0..s_n {
+            if next_b[s] < b {
+                let m = next_b[s];
+                if fwd_done[m][s] >= 0.0 {
+                    let ready = if s == s_n - 1 {
+                        Some(fwd_done[m][s])
+                    } else if bwd_done[m][s + 1] >= 0.0 {
+                        Some(bwd_done[m][s + 1] + link[s])
+                    } else {
+                        None
+                    };
+                    if let Some(r) = ready {
+                        consider(clock[s].max(r), 0, s, r);
+                    }
+                }
+            }
+            if next_f[s] < b && next_f[s] - next_b[s] < cap[s] {
+                let m = next_f[s];
+                let ready = if s == 0 {
+                    Some(0.0)
+                } else if fwd_done[m][s - 1] >= 0.0 {
+                    Some(fwd_done[m][s - 1] + link[s - 1])
+                } else {
+                    None
+                };
+                if let Some(r) = ready {
+                    consider(clock[s].max(r), 1, s, r);
+                }
+            }
+            if next_w[s] < next_b[s] {
+                consider(clock[s], 2, s, clock[s]);
+            }
+        }
+        let (start, prio, s, ready) = best.expect("zero-bubble schedule deadlocked");
+        let dur = match prio {
+            0 => stages[s].t_bwd_input,
+            1 => stages[s].t_fwd,
+            _ => stages[s].t_bwd_weight,
+        };
+        // Exposed comm: the wait attributable to the inbound hop.
+        let wait_comm = if prio < 2 {
+            let hop = match prio {
+                0 if s < s_n - 1 => link[s],
+                1 if s > 0 => link[s - 1],
+                _ => 0.0,
+            };
+            (ready - clock[s]).max(0.0).min(hop)
+        } else {
+            0.0
+        };
+        let end = start + dur;
+        clock[s] = end;
+        let op = match prio {
+            0 => {
+                let m = next_b[s];
+                bwd_done[m][s] = end;
+                next_b[s] += 1;
+                PipeOp::Bwd { chunk: 0, micro: m }
+            }
+            1 => {
+                let m = next_f[s];
+                fwd_done[m][s] = end;
+                next_f[s] += 1;
+                PipeOp::Fwd { chunk: 0, micro: m }
+            }
+            _ => {
+                let m = next_w[s];
+                next_w[s] += 1;
+                PipeOp::BwdWeight { chunk: 0, micro: m }
+            }
+        };
+        events.push(ZbEvent { stage: s, op, ready, start, end, wait_comm });
+    }
+    events
+}

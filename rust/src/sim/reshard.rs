@@ -185,4 +185,123 @@ mod tests {
             assert!(tcp > 2.0 * ddr, "{}: tcp {tcp} ddr {ddr}", s.name());
         }
     }
+
+    const ALL_STRATEGIES: [ReshardStrategy; 3] = [
+        ReshardStrategy::NaiveP2p,
+        ReshardStrategy::Broadcast,
+        ReshardStrategy::SendRecvAllGather,
+    ];
+
+    #[test]
+    fn naive_pays_one_full_copy_per_destination_chip() {
+        // The sizing law of the naive path: total = tp_dst serialized
+        // copies of the full tensor, of which exactly one (the streamed
+        // first copy) is overlappable — bitwise, not approximately.
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        for tp_dst in [1usize, 2, 4, 8] {
+            let c = reshard_cost(ReshardStrategy::NaiveP2p, CommMode::DeviceDirect,
+                                 MB64, &a, 4, &b, tp_dst, NicAssignment::Affinity);
+            assert_eq!(c.total, c.overlappable * tp_dst as f64, "tp_dst {tp_dst}");
+        }
+    }
+
+    #[test]
+    fn broadcast_to_one_chip_degenerates_to_a_single_cross_copy() {
+        // tp_dst = 1 means no intra-node fan-out: the whole cost is the one
+        // cross-node transfer and all of it is overlappable.
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        let c = reshard_cost(ReshardStrategy::Broadcast, CommMode::DeviceDirect,
+                             MB64, &a, 4, &b, 1, NicAssignment::Affinity);
+        assert_eq!(c.total, c.overlappable);
+    }
+
+    #[test]
+    fn srag_slices_by_the_smaller_tp_degree() {
+        // k = min(tp_src, tp_dst): widening the destination beyond the
+        // source changes nothing (bitwise), because the source can only
+        // cut the tensor into tp_src affine slices.
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        let at4 = reshard_cost(ReshardStrategy::SendRecvAllGather, CommMode::DeviceDirect,
+                               MB64, &a, 4, &b, 4, NicAssignment::Affinity);
+        let at8 = reshard_cost(ReshardStrategy::SendRecvAllGather, CommMode::DeviceDirect,
+                               MB64, &a, 4, &b, 8, NicAssignment::Affinity);
+        assert_eq!(at4, at8);
+    }
+
+    #[test]
+    fn srag_cost_decomposes_into_slice_transfer_plus_all_gather() {
+        // The documented sizing: one cross-node transfer of a
+        // ceil(bytes / k) slice, plus an intra-node all-gather of the
+        // remaining (k-1)/k of the tensor. Pin the decomposition bitwise
+        // against the public comm primitives it is built from.
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        let (tp_src, tp_dst) = (4usize, 2usize);
+        let k = tp_src.min(tp_dst);
+        let c = reshard_cost(ReshardStrategy::SendRecvAllGather, CommMode::DeviceDirect,
+                             MB64, &a, tp_src, &b, tp_dst, NicAssignment::Affinity);
+        let slice = MB64.div_ceil(k);
+        let cross = cross_node_time(CommMode::DeviceDirect, slice, &a, &b,
+                                    NicAssignment::Affinity);
+        let intra_bw = b.intra_node.bandwidth_gbps(0, 1) * 1e9;
+        let ag = (k as f64 - 1.0) / k as f64 * MB64 as f64 / intra_bw + 1e-6;
+        assert_eq!(c.overlappable, cross);
+        assert_eq!(c.total, cross + ag);
+    }
+
+    #[test]
+    fn cost_grows_with_bytes_for_every_strategy() {
+        let a = spec(ChipKind::A);
+        let b = spec(ChipKind::B);
+        for s in ALL_STRATEGIES {
+            let small = reshard_time(s, CommMode::DeviceDirect, MB64, &a, 4, &b, 4,
+                                     NicAssignment::Affinity);
+            let large = reshard_time(s, CommMode::DeviceDirect, 4 * MB64, &a, 4, &b, 4,
+                                     NicAssignment::Affinity);
+            assert!(large > small, "{}: {large} !> {small}", s.name());
+        }
+    }
+
+    #[test]
+    fn reshard_cost_is_invariant_under_dp_replica_permutation() {
+        // Every DP replica of a stage pair prices the same hop: the cost is
+        // a pure function of (strategy, mode, bytes, specs, tps), with no
+        // hidden per-call or replica-order state. Price a batch of replica
+        // hops in natural order and again in a shuffled order — every
+        // replica's cost must be bitwise identical, which is exactly the
+        // property that lets the simulator charge one link cost per stage
+        // boundary instead of one per DP replica.
+        use crate::util::prop;
+        prop::check(40, |rng| {
+            let kinds = [ChipKind::A, ChipKind::B, ChipKind::C];
+            let src = spec(*rng.choose(&kinds));
+            let dst = spec(*rng.choose(&kinds));
+            let strategy = *rng.choose(&ALL_STRATEGIES);
+            let mode = *rng.choose(&[CommMode::TcpCpu, CommMode::RdmaCpu,
+                                     CommMode::DeviceDirect]);
+            let assign = *rng.choose(&[NicAssignment::Affinity,
+                                       NicAssignment::NonAffinity]);
+            let bytes = rng.usize(1, 1 << 28);
+            let tp_src = *rng.choose(&[1usize, 2, 4, 8]);
+            let tp_dst = *rng.choose(&[1usize, 2, 4, 8]);
+            let replicas = rng.usize(2, 9);
+            let natural: Vec<ReshardCost> = (0..replicas)
+                .map(|_| reshard_cost(strategy, mode, bytes, &src, tp_src, &dst,
+                                      tp_dst, assign))
+                .collect();
+            let mut order: Vec<usize> = (0..replicas).collect();
+            rng.shuffle(&mut order);
+            for &r in &order {
+                let again = reshard_cost(strategy, mode, bytes, &src, tp_src, &dst,
+                                         tp_dst, assign);
+                prop::assert_prop(again == natural[r],
+                                  format!("replica {r} drifted: {again:?} vs {:?}",
+                                          natural[r]))?;
+            }
+            Ok(())
+        });
+    }
 }

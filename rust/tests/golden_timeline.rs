@@ -1,0 +1,110 @@
+//! Golden-timeline snapshot suite: the arena engine's [`EventTimeline`]
+//! for the parity fixture, pinned as checked-in JSON across every
+//! (schedule × comm-algo) pair under `rust/tests/golden/`.
+//!
+//! Self-seeding: a missing snapshot is generated, written, and reported —
+//! the CI step runs this suite twice, so run 2 pins the files run 1 wrote
+//! on a fresh checkout that predates them. After an *intentional* engine
+//! change, regenerate with `H2_BLESS=1 cargo test --test golden_timeline`
+//! and commit the diff; an unintentional drift fails with the first
+//! mismatching event.
+//!
+//! The DP-collective algorithm only affects update-time pricing, never the
+//! pipeline event clock, so the per-algo snapshots are intentionally
+//! event-identical per schedule — the pair-wise files exist to pin exactly
+//! that invariant alongside the timestamps themselves.
+
+mod common;
+
+use std::env;
+use std::fs;
+use std::path::PathBuf;
+
+use h2::comm::CommAlgo;
+use h2::costmodel::Schedule;
+use h2::sim::reference::simulate_iteration_reference_timeline;
+use h2::sim::{EventTimeline, SimEngine};
+use h2::util::json::Value;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn golden_path(schedule: Schedule, algo: CommAlgo) -> PathBuf {
+    golden_dir().join(format!(
+        "timeline_{}_{}.json",
+        schedule.token().replace(':', ""),
+        algo.token()
+    ))
+}
+
+#[test]
+fn golden_timelines_pin_every_schedule_and_comm_algo() {
+    let bless = env::var("H2_BLESS").map(|v| v == "1").unwrap_or(false);
+    for schedule in Schedule::SEARCH_SPACE {
+        for algo in CommAlgo::ALL {
+            let plan = common::two_stage_mixed_vendor_plan(schedule, algo);
+            let (_, timeline) = SimEngine::for_plan(&plan).run_timeline();
+            assert!(!timeline.events.is_empty(), "{schedule} x {}", algo.token());
+            let path = golden_path(schedule, algo);
+            if bless || !path.exists() {
+                fs::create_dir_all(golden_dir()).unwrap();
+                fs::write(&path, timeline.to_json().to_string_pretty()).unwrap();
+                eprintln!("seeded golden timeline {} — commit it to pin", path.display());
+                continue;
+            }
+            let text = fs::read_to_string(&path).unwrap();
+            let golden = EventTimeline::from_json(&Value::parse(&text).unwrap()).unwrap();
+            if let Some(diff) = golden.diff(&timeline) {
+                panic!(
+                    "{} drifted from its golden snapshot: {diff}\n(set H2_BLESS=1 to \
+                     regenerate after an intentional engine change)",
+                    path.file_name().unwrap().to_string_lossy()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reference_shim_emits_the_same_timeline_as_the_engine() {
+    // The old-path shim (reference executors + timeline recording) and the
+    // arena engine must agree on every event, bit-for-bit — the in-process
+    // half of the golden contract, independent of any checked-in file.
+    for schedule in Schedule::SEARCH_SPACE {
+        for algo in [CommAlgo::Ring, CommAlgo::Hierarchical] {
+            let plan = common::two_stage_mixed_vendor_plan(schedule, algo);
+            let (eng_sim, eng_t) = SimEngine::for_plan(&plan).run_timeline();
+            let groups = plan.group_refs();
+            let (ref_sim, ref_t) = simulate_iteration_reference_timeline(
+                &plan.model,
+                &groups,
+                &plan.strategy,
+                plan.micro_tokens,
+                &plan.sim_options(),
+            );
+            assert_eq!(
+                ref_t.diff(&eng_t),
+                None,
+                "{schedule} x {}: engine and reference timelines diverged",
+                algo.token()
+            );
+            assert_eq!(
+                eng_sim.iteration_seconds,
+                ref_sim.iteration_seconds,
+                "{schedule} x {}",
+                algo.token()
+            );
+        }
+    }
+}
+
+#[test]
+fn timeline_json_roundtrip_is_bit_exact() {
+    let plan = common::two_stage_mixed_vendor_plan(Schedule::ZeroBubbleV, CommAlgo::Ring);
+    let (_, timeline) = SimEngine::for_plan(&plan).run_timeline();
+    let text = timeline.to_json().to_string_pretty();
+    let back = EventTimeline::from_json(&Value::parse(&text).unwrap()).unwrap();
+    assert_eq!(timeline, back);
+    assert_eq!(timeline.diff(&back), None);
+}

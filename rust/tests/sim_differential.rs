@@ -1,0 +1,157 @@
+//! Differential proptest: the flat-arena [`SimEngine`] against the
+//! pre-refactor executors preserved in `h2::sim::reference`.
+//!
+//! Arbitrary small clusters × schedules × comm-algos × sim options must
+//! produce bit-identical results AND bit-identical event timelines on both
+//! paths; arbitrary seeded `FaultPlan`s must produce bit-identical
+//! per-step seconds on the new parallel fault driver for every worker
+//! count (parallel ≡ sequential) and against the reference sequential
+//! loop. Any divergence prints the first mismatching event or step.
+
+mod common;
+
+use h2::comm::{CommAlgo, CommMode};
+use h2::costmodel::{GroupPlan, Schedule, Strategy};
+use h2::elastic::FaultPlan;
+use h2::hetero::{ChipKind, Cluster};
+use h2::sim::reference::{
+    simulate_iteration_reference_timeline, simulate_plan_with_faults_reference,
+};
+use h2::sim::{
+    simulate_plan_with_faults, simulate_plan_with_faults_workers, ReshardStrategy, SimEngine,
+    SimOptions,
+};
+use h2::topology::NicAssignment;
+use h2::util::prop;
+
+#[test]
+fn engine_matches_reference_bit_for_bit() {
+    prop::check(60, |rng| {
+        let model = common::tiny_model();
+
+        // 1–2 distinct chip kinds, node-aligned chip counts.
+        let mut pool = [ChipKind::A, ChipKind::B, ChipKind::C];
+        rng.shuffle(&mut pool);
+        let n_kinds = rng.usize(1, 3);
+        let kinds: Vec<(ChipKind, usize)> = pool[..n_kinds]
+            .iter()
+            .map(|&k| (k, *rng.choose(&[16usize, 32, 48])))
+            .collect();
+        let cluster = Cluster::new("diff", kinds);
+        let groups = cluster.groups_by_memory_desc();
+
+        let plans: Vec<GroupPlan> = (0..groups.len())
+            .map(|_| {
+                let s_pp = rng.usize(1, 4);
+                let lps = rng.usize(1, 5);
+                GroupPlan {
+                    s_pp,
+                    s_tp: *rng.choose(&[1usize, 2, 4]),
+                    layers: s_pp * lps,
+                    recompute: rng.f64() < 0.5,
+                }
+            })
+            .collect();
+        let schedule = *rng.choose(&[
+            Schedule::OneF1B,
+            Schedule::Interleaved { virtual_stages: 2 },
+            Schedule::Interleaved { virtual_stages: 3 },
+            Schedule::ZeroBubbleV,
+        ]);
+        let strategy = Strategy {
+            s_dp: *rng.choose(&[1usize, 2, 4]),
+            micro_batches: rng.usize(1, 11),
+            schedule,
+            comm_algo: *rng.choose(&CommAlgo::ALL),
+            plans,
+        };
+        let opts = SimOptions {
+            comm: *rng.choose(&[CommMode::TcpCpu, CommMode::RdmaCpu, CommMode::DeviceDirect]),
+            reshard: *rng.choose(&[
+                ReshardStrategy::NaiveP2p,
+                ReshardStrategy::Broadcast,
+                ReshardStrategy::SendRecvAllGather,
+            ]),
+            nic_assignment: *rng.choose(&[NicAssignment::Affinity, NicAssignment::NonAffinity]),
+            fine_overlap: rng.f64() < 0.5,
+        };
+        let micro_tokens = *rng.choose(&[1024usize, 2048, 4096]);
+
+        let mut eng = SimEngine::new(&model, &groups, &strategy, micro_tokens, &opts);
+        let (eng_sim, eng_t) = eng.run_timeline();
+        let (ref_sim, ref_t) = simulate_iteration_reference_timeline(
+            &model, &groups, &strategy, micro_tokens, &opts,
+        );
+
+        if let Some(diff) = ref_t.diff(&eng_t) {
+            return Err(format!("{schedule}: timeline diverged: {diff}"));
+        }
+        prop::assert_prop(
+            eng_sim.iteration_seconds == ref_sim.iteration_seconds,
+            format!(
+                "{schedule}: iteration {} vs {}",
+                eng_sim.iteration_seconds, ref_sim.iteration_seconds
+            ),
+        )?;
+        prop::assert_prop(eng_sim.busy == ref_sim.busy, format!("{schedule}: busy"))?;
+        prop::assert_prop(
+            eng_sim.bubble_fraction == ref_sim.bubble_fraction,
+            format!("{schedule}: bubble"),
+        )?;
+        prop::assert_prop(
+            eng_sim.exposed_comm == ref_sim.exposed_comm,
+            format!("{schedule}: exposed comm"),
+        )?;
+
+        // Re-running the warm engine must not drift either.
+        let again = eng.run();
+        prop::assert_prop(
+            again.iteration_seconds == eng_sim.iteration_seconds,
+            format!("{schedule}: warm re-run drifted"),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn fault_path_matches_reference_and_parallel_matches_sequential() {
+    prop::check(25, |rng| {
+        let schedule = *rng.choose(&[
+            Schedule::OneF1B,
+            Schedule::Interleaved { virtual_stages: 2 },
+            Schedule::ZeroBubbleV,
+        ]);
+        let algo = *rng.choose(&CommAlgo::ALL);
+        let plan = common::two_stage_mixed_vendor_plan(schedule, algo);
+        let steps = rng.usize(4, 13);
+        let faults = FaultPlan::generate(rng.next_u64(), steps, 2, rng.f64() < 0.5);
+
+        let default = simulate_plan_with_faults(&plan, &faults, steps)
+            .map_err(|e| e.to_string())?;
+        let seq = simulate_plan_with_faults_workers(&plan, &faults, steps, 1)
+            .map_err(|e| e.to_string())?;
+        let par = simulate_plan_with_faults_workers(&plan, &faults, steps, 4)
+            .map_err(|e| e.to_string())?;
+        let reference = simulate_plan_with_faults_reference(&plan, &faults, steps)
+            .map_err(|e| e.to_string())?;
+
+        for (label, r) in [("default", &default), ("workers=1", &seq), ("workers=4", &par)] {
+            prop::assert_prop(
+                r.halted_at == reference.halted_at,
+                format!("{schedule}: {label} halted_at {:?} vs {:?}",
+                        r.halted_at, reference.halted_at),
+            )?;
+            prop::assert_prop(
+                r.step_seconds == reference.step_seconds,
+                format!("{schedule}: {label} step seconds diverged: {:?} vs {:?}",
+                        r.step_seconds, reference.step_seconds),
+            )?;
+            prop::assert_prop(
+                r.total_seconds == reference.total_seconds,
+                format!("{schedule}: {label} total {} vs {}",
+                        r.total_seconds, reference.total_seconds),
+            )?;
+        }
+        Ok(())
+    });
+}
