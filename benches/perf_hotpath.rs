@@ -158,6 +158,22 @@ fn main() {
         std::hint::black_box(r.iteration_seconds);
     });
 
+    // Fleet: the pinned contrast trace packed onto exp-mega under
+    // priority-with-backfill — a whole fleet run per iteration (two
+    // whole-cluster 100B solves, a burst of eight small 20B placements,
+    // preempt-by-resize, and the batched engine-pool pricing). This is
+    // the `h2 fleet --exp exp-mega --trace pinned` hot path end to end;
+    // EXPERIMENTS.md §Fleet tracks it.
+    let fleet_trace = h2::fleet::JobTrace::pinned(mega.cluster.total_chips());
+    let fleet_opts = h2::fleet::FleetOptions {
+        policy: h2::fleet::Policy::PriorityBackfill,
+        ..Default::default()
+    };
+    b.run("fleet: exp-mega pinned trace", || {
+        let tl = h2::fleet::run(&mega.cluster, &fleet_trace, &fleet_opts).unwrap();
+        std::hint::black_box(tl.metrics.p99_wait_seconds);
+    });
+
     // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs
     // the two-level hierarchical schedule (2 nodes x 4 ranks). Link times
     // come from the Chip-B server spec via the DP-group topology (TP 2

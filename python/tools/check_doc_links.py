@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Docs link-and-anchor checker (CI gate, stdlib only).
+
+Walks the repo's markdown docs (README.md, EXPERIMENTS.md, ROADMAP.md,
+docs/*.md), extracts every inline link, and fails on:
+
+* relative links to files that do not exist (external URLs are skipped —
+  the checker must pass offline);
+* fragment links (`path#anchor` or `#anchor`) whose anchor matches no
+  heading in the target file, using GitHub's slug rules (lowercase,
+  punctuation stripped, spaces to hyphens, `-N` suffixes for
+  duplicates).
+
+Usage: python3 python/tools/check_doc_links.py  (from the repo root;
+exits non-zero listing every broken link).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+DOC_FILES = ["README.md", "EXPERIMENTS.md", "ROADMAP.md"]
+DOC_GLOBS = ["docs/*.md"]
+
+# Inline markdown links [text](target). Images (![alt](src)) are checked
+# the same way — a missing image is as broken as a missing page.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown markup, lowercase, drop
+    punctuation, spaces to hyphens."""
+    # Inline code/emphasis markers contribute their text only.
+    text = re.sub(r"[`*_]", "", heading)
+    # Links in headings anchor on their text.
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.strip().lower()
+    out = []
+    for ch in text:
+        if ch.isalnum():
+            out.append(ch)
+        elif ch in (" ", "-"):
+            out.append("-" if ch == " " else ch)
+        # Everything else (punctuation, em dashes, §, ...) drops out.
+    return "".join(out)
+
+
+def anchors_of(path: Path) -> set:
+    """All heading anchors of a markdown file, with GitHub's -N
+    deduplication for repeated headings."""
+    slugs = {}
+    anchors = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def doc_files(root: Path):
+    files = [root / f for f in DOC_FILES if (root / f).exists()]
+    for pattern in DOC_GLOBS:
+        files.extend(sorted(root.glob(pattern)))
+    return files
+
+
+def links_of(path: Path):
+    """(line_number, target) pairs for every inline link, skipping
+    fenced code blocks (their example links are illustrative)."""
+    links = []
+    in_fence = False
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            links.append((i, m.group(1)))
+    return links
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[2]
+    anchor_cache = {}
+
+    def anchors(p: Path):
+        key = p.resolve()
+        if key not in anchor_cache:
+            anchor_cache[key] = anchors_of(p)
+        return anchor_cache[key]
+
+    errors = []
+    checked = 0
+    for doc in doc_files(root):
+        for line, target in links_of(doc):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            checked += 1
+            where = f"{doc.relative_to(root)}:{line}"
+            path_part, _, fragment = target.partition("#")
+            dest = doc if not path_part else (doc.parent / path_part)
+            if not dest.exists():
+                errors.append(f"{where}: dead link `{target}` ({path_part} not found)")
+                continue
+            if fragment:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    continue  # anchors only checkable in markdown
+                if fragment.lower() not in anchors(dest):
+                    errors.append(
+                        f"{where}: missing anchor `#{fragment}` in {path_part or doc.name}"
+                    )
+
+    if errors:
+        print(f"{len(errors)} broken doc link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"doc links OK: {checked} relative links/anchors across {len(doc_files(root))} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

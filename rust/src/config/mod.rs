@@ -73,6 +73,8 @@ pub struct Config {
     pub sim: Option<SimOverrides>,
     /// Elastic-loop options, if declared.
     pub elastic: Option<ElasticConfig>,
+    /// Fleet-scheduler options, if declared.
+    pub fleet: Option<FleetConfig>,
     /// Real-training job, if declared.
     pub train: Option<TrainConfig>,
 }
@@ -103,6 +105,22 @@ impl ElasticConfig {
             debounce: self.debounce.unwrap_or(d.debounce),
         }
     }
+}
+
+/// The config's `fleet` section: defaults for `h2 fleet`. Every key is
+/// optional; CLI flags override whatever the section sets.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetConfig {
+    /// Queue policy ([`crate::fleet::Policy`] token: `fifo` / `priority`).
+    pub policy: Option<crate::fleet::Policy>,
+    /// Path of a trace file to run (`--trace` overrides).
+    pub trace: Option<String>,
+    /// Generator seed when no trace file is given.
+    pub seed: Option<u64>,
+    /// Generated trace length in jobs.
+    pub jobs: Option<usize>,
+    /// Worker threads for the batched plan-pricing pass (0 = per core).
+    pub workers: Option<usize>,
 }
 
 /// Partial overrides for [`SimOptions`]: only keys actually present in the
@@ -229,6 +247,18 @@ fn parse_elastic(v: &Value) -> Result<ElasticConfig> {
     })
 }
 
+fn parse_fleet(v: &Value) -> Result<FleetConfig> {
+    Ok(FleetConfig {
+        policy: v.opt("policy")
+            .map(|x| crate::fleet::Policy::parse(x.str()?))
+            .transpose()?,
+        trace: v.opt("trace").map(|x| x.str().map(str::to_string)).transpose()?,
+        seed: v.opt("seed").map(|x| x.u64()).transpose()?,
+        jobs: v.opt("jobs").map(|x| x.usize()).transpose()?,
+        workers: v.opt("workers").map(|x| x.usize()).transpose()?,
+    })
+}
+
 fn parse_train(v: &Value) -> Result<TrainConfig> {
     let mut stages = Vec::new();
     for s in v.get("stages")?.arr()? {
@@ -314,6 +344,8 @@ impl Config {
                 .context("parsing `sim`")?,
             elastic: v.opt("elastic").map(parse_elastic).transpose()
                 .context("parsing `elastic`")?,
+            fleet: v.opt("fleet").map(parse_fleet).transpose()
+                .context("parsing `fleet`")?,
             train: v.opt("train").map(parse_train).transpose()
                 .context("parsing `train`")?,
         })
@@ -481,6 +513,26 @@ mod tests {
         assert!(e.faults.is_none());
         // No section at all.
         assert!(Config::parse("{}").unwrap().elastic.is_none());
+    }
+
+    #[test]
+    fn fleet_section_parses_and_is_optional() {
+        let c = Config::parse(r#"{"fleet": {"policy": "priority", "seed": 42,
+            "jobs": 12, "workers": 4, "trace": "trace.json"}}"#).unwrap();
+        let f = c.fleet.unwrap();
+        assert_eq!(f.policy, Some(crate::fleet::Policy::PriorityBackfill));
+        assert_eq!(f.seed, Some(42));
+        assert_eq!(f.jobs, Some(12));
+        assert_eq!(f.workers, Some(4));
+        assert_eq!(f.trace.as_deref(), Some("trace.json"));
+        // A partial section leaves the rest unset for the CLI defaults.
+        let c = Config::parse(r#"{"fleet": {"policy": "fifo"}}"#).unwrap();
+        let f = c.fleet.unwrap();
+        assert_eq!(f.policy, Some(crate::fleet::Policy::Fifo));
+        assert!(f.seed.is_none() && f.trace.is_none());
+        // Bad policy tokens fail loudly; no section at all is fine.
+        assert!(Config::parse(r#"{"fleet": {"policy": "bogus"}}"#).is_err());
+        assert!(Config::parse("{}").unwrap().fleet.is_none());
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Job specifications and the seedable arrival-trace generator.
+//!
+//! A [`JobSpec`] is one training job in the fleet queue: which model it
+//! trains, its global batch, how many chips it needs (a `min..=max`
+//! range the scheduler carves from the free pool), its priority, when it
+//! arrives, and how many steps it runs. A [`JobTrace`] is a replayable
+//! queue of jobs — generated from a seed ([`JobTrace::generate`], Poisson
+//! inter-arrivals with bursts) or hand-written — that round-trips
+//! losslessly through JSON, with the seed as a decimal string exactly
+//! like [`crate::elastic::FaultPlan`] so full-range `u64` seeds survive
+//! the f64 JSON number space.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::costmodel::{ModelShape, H2_100B, H2_20B};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Which model a fleet job trains. The fleet layer names models by token
+/// rather than embedding a full [`ModelShape`] so traces stay small and
+/// human-editable; both paper models are available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobModel {
+    /// The 100B flagship ([`H2_100B`]) — Table 6 / Table 8 scale.
+    H100B,
+    /// The 20B precision-study model ([`H2_20B`]) — cheap enough for
+    /// small sub-clusters.
+    H20B,
+}
+
+impl JobModel {
+    /// The wire token (`"h2-100b"` / `"h2-20b"`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            JobModel::H100B => "h2-100b",
+            JobModel::H20B => "h2-20b",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(text: &str) -> Result<JobModel> {
+        match text {
+            "h2-100b" => Ok(JobModel::H100B),
+            "h2-20b" => Ok(JobModel::H20B),
+            other => bail!("unknown job model `{other}` (expected h2-100b or h2-20b)"),
+        }
+    }
+
+    /// The concrete model shape the inner HeteroAuto solver searches.
+    pub fn shape(&self) -> &'static ModelShape {
+        match self {
+            JobModel::H100B => &H2_100B,
+            JobModel::H20B => &H2_20B,
+        }
+    }
+}
+
+/// One training job in the fleet queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Queue-unique id (also the deterministic tie-breaker everywhere
+    /// the scheduler orders jobs).
+    pub id: usize,
+    /// Which model the job trains.
+    pub model: JobModel,
+    /// Global batch size in tokens (must be a whole number of the
+    /// model's sequences).
+    pub gbs_tokens: usize,
+    /// Scheduling priority — larger is more urgent. Only the
+    /// priority-with-backfill policy looks at it.
+    pub priority: u8,
+    /// Fleet-clock second the job joins the queue (the fleet clock runs
+    /// in modeled seconds; an arrival step is one second).
+    pub arrival_step: u64,
+    /// Smallest sub-cluster the job accepts, in chips. The scheduler
+    /// only ever allocates whole nodes, so the carve may exceed this.
+    pub min_chips: usize,
+    /// Largest sub-cluster the job can use, in chips.
+    pub max_chips: usize,
+    /// Training steps the job runs once placed.
+    pub steps: u64,
+}
+
+impl JobSpec {
+    /// The job's display name (`job-<id>`), used for sub-cluster names
+    /// and timeline events.
+    pub fn name(&self) -> String {
+        format!("job-{}", self.id)
+    }
+}
+
+/// A deterministic, seedable, serializable queue of jobs.
+///
+/// The `seed` records how a generated trace was derived (and salts
+/// [`JobTrace::generate`]); hand-written traces may use any value. Jobs
+/// are kept sorted by `(arrival_step, id)` so the trace is replayable
+/// byte-for-byte.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobTrace {
+    /// Seed the trace was generated from (informational for
+    /// hand-written traces).
+    pub seed: u64,
+    /// The job queue, sorted by `(arrival_step, id)`.
+    pub jobs: Vec<JobSpec>,
+}
+
+impl JobTrace {
+    /// Generate a random trace of `n_jobs` jobs sized for a cluster of
+    /// `cluster_chips` chips. Deterministic in `seed`.
+    ///
+    /// Arrivals are Poisson — exponential inter-arrival gaps with a mean
+    /// of 60 fleet seconds, derived from the uniform PRNG as
+    /// `-ln(1-u) · mean` — except that with probability ¼ a job starts a
+    /// *burst*: the next one or two jobs arrive at the same step, the
+    /// paper-cluster reality of a team submitting a sweep at once.
+    ///
+    /// Sizes are vendor-agnostic fractions of the cluster (1/16, 1/8 or
+    /// 1/4 of `cluster_chips`, floored to a multiple of 64 so any
+    /// vendor's whole-node carve fits), `max_chips` is 1–2× the minimum,
+    /// and jobs needing ≥ 128 chips train the 100B model while smaller
+    /// ones train the 20B model (which fits tight memory).
+    pub fn generate(seed: u64, n_jobs: usize, cluster_chips: usize) -> JobTrace {
+        let mut rng = Rng::new(seed ^ 0xF1EE_70B5_F1EE_70B5);
+        let mut jobs = Vec::with_capacity(n_jobs);
+        let mut t: u64 = 0;
+        let mut burst_left = 0usize;
+        for id in 0..n_jobs {
+            if burst_left > 0 {
+                burst_left -= 1; // same arrival step as the burst head
+            } else {
+                let u = rng.f64();
+                t += (-(1.0 - u).ln() * 60.0).ceil() as u64;
+                if rng.usize(0, 4) == 0 {
+                    burst_left = rng.usize(1, 3);
+                }
+            }
+            let frac = [16, 8, 4][rng.usize(0, 3)];
+            let min_chips = ((cluster_chips / frac) / 64 * 64).max(64);
+            let growth = rng.usize(1, 3);
+            let max_chips = (min_chips * growth).min(cluster_chips / 64 * 64);
+            let model = if min_chips >= 128 { JobModel::H100B } else { JobModel::H20B };
+            let seq = model.shape().seq_len;
+            let gbs_tokens = [128, 256, 512][rng.usize(0, 3)] * seq;
+            jobs.push(JobSpec {
+                id,
+                model,
+                gbs_tokens,
+                priority: rng.usize(0, 4) as u8,
+                arrival_step: t,
+                min_chips,
+                max_chips,
+                steps: rng.usize(10, 51) as u64,
+            });
+        }
+        jobs.sort_by_key(|j| (j.arrival_step, j.id));
+        JobTrace { seed, jobs }
+    }
+
+    /// The pinned fleet scenario — the hand-authored trace behind
+    /// EXPERIMENTS.md §Fleet, `rust/tests/fleet.rs`, and the
+    /// `fleet: exp-mega pinned trace` bench (CLI: `--trace pinned`).
+    ///
+    /// It is built to make the policy contrast structural rather than
+    /// seed-luck: two whole-cluster low-priority jobs arrive back to
+    /// back (the second is long), then a burst of eight small
+    /// high-priority jobs lands behind them. Under FIFO the second
+    /// whole-cluster job blocks the head of the queue, so every small
+    /// job's wait includes its long runtime; under priority-with-backfill
+    /// the small jobs overtake it (shrinking the incumbent where the
+    /// re-planner allows), so the long job's runtime drops out of all
+    /// but its own wait — p99 wait falls accordingly.
+    pub fn pinned(cluster_chips: usize) -> JobTrace {
+        let whole = cluster_chips / 64 * 64;
+        let mut jobs = vec![
+            JobSpec {
+                id: 0,
+                model: JobModel::H100B,
+                gbs_tokens: 512 * 4096,
+                priority: 0,
+                arrival_step: 0,
+                min_chips: whole,
+                max_chips: whole,
+                steps: 30,
+            },
+            JobSpec {
+                id: 1,
+                model: JobModel::H100B,
+                gbs_tokens: 512 * 4096,
+                priority: 0,
+                arrival_step: 1,
+                min_chips: whole,
+                max_chips: whole,
+                steps: 60,
+            },
+        ];
+        for id in 2..10 {
+            jobs.push(JobSpec {
+                id,
+                model: JobModel::H20B,
+                gbs_tokens: 128 * 4096,
+                priority: 3,
+                arrival_step: 2,
+                min_chips: 64,
+                max_chips: 64,
+                steps: 3,
+            });
+        }
+        JobTrace { seed: 0, jobs }
+    }
+
+    /// Structural validation: unique ids, sorted arrivals, sane chip
+    /// ranges, whole-sequence batches, non-zero step counts.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut prev = (0u64, 0usize);
+        for (i, j) in self.jobs.iter().enumerate() {
+            if !seen.insert(j.id) {
+                bail!("duplicate job id {}", j.id);
+            }
+            let key = (j.arrival_step, j.id);
+            if i > 0 && key < prev {
+                bail!("jobs out of (arrival_step, id) order at job {}", j.id);
+            }
+            prev = key;
+            if j.min_chips == 0 || j.max_chips < j.min_chips {
+                bail!("job {}: bad chip range {}..={}", j.id, j.min_chips, j.max_chips);
+            }
+            if j.gbs_tokens == 0 || j.gbs_tokens % j.model.shape().seq_len != 0 {
+                bail!(
+                    "job {}: gbs {} is not a whole number of {}-token sequences",
+                    j.id, j.gbs_tokens, j.model.shape().seq_len
+                );
+            }
+            if j.steps == 0 {
+                bail!("job {}: zero training steps", j.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize (seeds travel as decimal strings, like plan train seeds
+    /// and fault-plan seeds, so full-range u64 values survive the f64
+    /// JSON number space).
+    pub fn to_json(&self) -> Value {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                json::obj(vec![
+                    ("id", json::num(j.id as f64)),
+                    ("model", json::s(j.model.token())),
+                    ("gbs_tokens", json::num(j.gbs_tokens as f64)),
+                    ("priority", json::num(j.priority as f64)),
+                    ("arrival_step", json::num(j.arrival_step as f64)),
+                    ("min_chips", json::num(j.min_chips as f64)),
+                    ("max_chips", json::num(j.max_chips as f64)),
+                    ("steps", json::num(j.steps as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("seed", json::s(&self.seed.to_string())),
+            ("jobs", json::arr(jobs)),
+        ])
+    }
+
+    /// Parse a serialized trace (validates on the way in).
+    pub fn from_json(v: &Value) -> Result<JobTrace> {
+        let seed = match v.get("seed")? {
+            Value::Str(s) => s.parse::<u64>().map_err(|e| anyhow!("bad trace seed `{s}`: {e}"))?,
+            other => other.u64()?,
+        };
+        let mut jobs = Vec::new();
+        for j in v.get("jobs")?.arr()? {
+            jobs.push(JobSpec {
+                id: j.get("id")?.usize()?,
+                model: JobModel::parse(j.get("model")?.str()?)?,
+                gbs_tokens: j.get("gbs_tokens")?.usize()?,
+                priority: u8::try_from(j.get("priority")?.u64()?)
+                    .map_err(|_| anyhow!("job priority does not fit in u8"))?,
+                arrival_step: j.get("arrival_step")?.u64()?,
+                min_chips: j.get("min_chips")?.usize()?,
+                max_chips: j.get("max_chips")?.usize()?,
+                steps: j.get("steps")?.u64()?,
+            });
+        }
+        let trace = JobTrace { seed, jobs };
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    /// Load a trace from a JSON file (the CLI `--trace <path>` path).
+    pub fn load(path: &str) -> Result<JobTrace> {
+        JobTrace::from_json(&Value::from_file(path)?)
+    }
+
+    /// Write the trace to a JSON file (the CLI `--emit-trace` path).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing trace `{path}`: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample() -> JobTrace {
+        JobTrace {
+            seed: u64::MAX - 1, // exercises the decimal-string seed path
+            jobs: vec![
+                JobSpec {
+                    id: 0,
+                    model: JobModel::H100B,
+                    gbs_tokens: 256 * 4096,
+                    priority: 1,
+                    arrival_step: 0,
+                    min_chips: 128,
+                    max_chips: 256,
+                    steps: 20,
+                },
+                JobSpec {
+                    id: 1,
+                    model: JobModel::H20B,
+                    gbs_tokens: 128 * 4096,
+                    priority: 3,
+                    arrival_step: 40,
+                    min_chips: 64,
+                    max_chips: 64,
+                    steps: 10,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let trace = sample();
+        let back = JobTrace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(trace, back);
+        // And through text, the way a --trace file travels.
+        let text = trace.to_json().to_string_pretty();
+        let back = JobTrace::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(trace, back);
+    }
+
+    #[test]
+    fn validation_rejects_bad_traces() {
+        assert!(sample().validate().is_ok());
+        let mut dup = sample();
+        dup.jobs[1].id = 0;
+        assert!(dup.validate().is_err(), "duplicate ids");
+        let mut range = sample();
+        range.jobs[0].max_chips = 1;
+        assert!(range.validate().is_err(), "max below min");
+        let mut gbs = sample();
+        gbs.jobs[0].gbs_tokens = 4097;
+        assert!(gbs.validate().is_err(), "ragged batch");
+        let mut order = sample();
+        order.jobs.swap(0, 1);
+        assert!(order.validate().is_err(), "arrival order");
+    }
+
+    #[test]
+    fn generated_traces_are_deterministic_valid_and_roundtrip() {
+        prop::check(50, |rng| {
+            let seed = rng.next_u64();
+            let n = rng.usize(1, 16);
+            let chips = 64 * rng.usize(4, 21);
+            let a = JobTrace::generate(seed, n, chips);
+            let b = JobTrace::generate(seed, n, chips);
+            prop::assert_prop(a == b, "generation must be deterministic in the seed")?;
+            prop::assert_prop(a.jobs.len() == n, "job count")?;
+            prop::assert_prop(a.validate().is_ok(), format!("invalid: {a:?}"))?;
+            prop::assert_prop(
+                a.jobs.iter().all(|j| j.max_chips <= chips && j.min_chips % 64 == 0),
+                "sizes fit the cluster on whole-node boundaries",
+            )?;
+            let back = JobTrace::from_json(&a.to_json())
+                .map_err(|e| format!("reparse failed: {e}"))?;
+            prop::assert_prop(a == back, "JSON round-trip must be lossless")
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! The fleet layer: pack a queue of heterogeneous jobs onto one cluster.
+//!
+//! The north star is a production system serving many concurrent
+//! training jobs, not one. This module is the cluster-level scheduler
+//! over everything below it:
+//!
+//! ```text
+//!   JobTrace (seeded / JSON) ──► fleet::run event loop
+//!                                     │ per decision point
+//!                                     ▼
+//!        FreePool::carve ──► auto::search_with_cache   (HeteroAuto inner
+//!          (whole-node,           shared ProfileCache    solver per carve)
+//!           vendor-aware)              │
+//!                                      ▼
+//!        preempt-by-resize ──► auto::replan + elastic migration ledger
+//!                                      │
+//!                                      ▼
+//!        sim engine pool ──► price all new/resized plans in one batch
+//!                                      │
+//!                                      ▼
+//!        FleetTimeline: events + per-job outcomes + fleet metrics
+//! ```
+//!
+//! * [`job`] — [`JobSpec`], and [`JobTrace`]: the serializable job queue
+//!   with a deterministic, seedable arrival-trace generator.
+//! * [`sched`] — the free pool, vendor-aware whole-node carving, the
+//!   HeteroAuto inner solver, and preempt-by-resize via
+//!   [`crate::auto::replan`].
+//! * [`sim`] — the fleet event loop, the batched plan-pricing pass, and
+//!   the machine-readable [`FleetTimeline`] + [`FleetMetrics`].
+//!
+//! Everything is deterministic: same trace seed + policy ⇒ bit-identical
+//! [`FleetTimeline`], for any simulator worker count. The narrative
+//! guide (schema, policy semantics, metric definitions, a worked
+//! `h2 fleet` walkthrough) is `docs/fleet.md`.
+
+pub mod job;
+pub mod sched;
+pub mod sim;
+
+pub use job::{JobModel, JobSpec, JobTrace};
+pub use sched::{FreePool, PlaceOutcome, Placement, Policy, Scheduler, Shrink};
+pub use sim::{
+    fleet_search_config, run, FleetEvent, FleetEventKind, FleetMetrics, FleetOptions,
+    FleetTimeline, JobOutcome,
+};

@@ -1,0 +1,318 @@
+//! Placement: carving vendor-aware sub-clusters and solving them.
+//!
+//! The fleet scheduler never plans a job itself — it carves a sub-cluster
+//! out of the free pool ([`FreePool::carve`], whole nodes only, fewest
+//! vendors first) and hands it to HeteroAuto
+//! ([`crate::auto::search_with_cache`]) as the inner solver, over one
+//! shared [`ProfileCache`] so repeated placements on the same chip kinds
+//! hit warm per-layer profiles. Preemption is a *resize*: the victim's
+//! incumbent plan is re-planned over a reduced cluster with
+//! [`crate::auto::replan`] (pipeline-preserving, so the elastic
+//! migration ledger prices the hot swap), and the freed whole nodes go
+//! back to the pool.
+
+use anyhow::Result;
+
+use crate::auto::{replan, search_with_cache, ClusterDelta, ReplanOptions, SearchConfig};
+use crate::costmodel::ProfileCache;
+use crate::elastic::RecoveryTimeline;
+use crate::hetero::{spec, ChipKind, Cluster};
+use crate::plan::ExecutionPlan;
+
+use super::job::JobSpec;
+
+/// A fleet scheduling policy. Both are deterministic; they differ only
+/// in queue order and in whether a stuck head blocks the queue.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict arrival order. A head job that does not fit blocks every
+    /// job behind it until chips free up — the honest baseline.
+    #[default]
+    Fifo,
+    /// Jobs are served in `(priority desc, arrival, id)` order, jobs
+    /// that do not fit are skipped so smaller ones behind them backfill,
+    /// and a job may shrink (preempt-by-resize) one or more
+    /// strictly-lower-priority running jobs to make room.
+    PriorityBackfill,
+}
+
+impl Policy {
+    /// The wire/CLI token (`"fifo"` / `"priority"`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::PriorityBackfill => "priority",
+        }
+    }
+
+    /// Parse a CLI/config token.
+    pub fn parse(text: &str) -> Result<Policy> {
+        match text {
+            "fifo" => Ok(Policy::Fifo),
+            "priority" | "priority-backfill" | "backfill" => Ok(Policy::PriorityBackfill),
+            other => anyhow::bail!("unknown fleet policy `{other}` (expected fifo or priority)"),
+        }
+    }
+}
+
+/// The cluster's idle chips, per kind, in the cluster's
+/// memory-descending group order. Every count is a whole number of that
+/// kind's nodes by construction: the pool starts from whole-node cluster
+/// groups and only ever moves whole-node allocations in or out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FreePool {
+    free: Vec<(ChipKind, usize)>,
+}
+
+impl FreePool {
+    /// A pool with the whole cluster idle.
+    pub fn new(cluster: &Cluster) -> FreePool {
+        FreePool {
+            free: cluster
+                .groups_by_memory_desc()
+                .into_iter()
+                .map(|g| (g.spec.kind, g.n_chips))
+                .collect(),
+        }
+    }
+
+    /// Total idle chips.
+    pub fn total(&self) -> usize {
+        self.free.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Carve a whole-node allocation of at least `min_chips` and at most
+    /// `max_chips` chips, or `None` if the pool cannot cover `min_chips`.
+    ///
+    /// Vendor-aware and deterministic: kinds are visited largest free
+    /// pool first (ties in memory-descending order), each contributing
+    /// whole nodes up to the remaining budget — so a job that fits in
+    /// one vendor's pool gets a homogeneous sub-cluster, and a job that
+    /// does not spans the fewest pools that cover it.
+    pub fn carve(&self, min_chips: usize, max_chips: usize) -> Option<Vec<(ChipKind, usize)>> {
+        let mut order: Vec<usize> = (0..self.free.len()).collect();
+        order.sort_by_key(|&i| (usize::MAX - self.free[i].1, i));
+        let mut alloc = Vec::new();
+        let mut got = 0usize;
+        for i in order {
+            let (kind, free) = self.free[i];
+            let node = spec(kind).chips_per_node;
+            let take = free.min((max_chips - got) / node * node);
+            if take > 0 {
+                alloc.push((kind, take));
+                got += take;
+            }
+            if max_chips - got < node {
+                break;
+            }
+        }
+        if got < min_chips {
+            return None;
+        }
+        // Return in the pool's (memory-descending) kind order so the
+        // sub-cluster names its groups the way every other cluster does.
+        let mut out = Vec::new();
+        for &(kind, _) in &self.free {
+            if let Some(&(_, n)) = alloc.iter().find(|&&(k, _)| k == kind) {
+                out.push((kind, n));
+            }
+        }
+        Some(out)
+    }
+
+    /// Remove an allocation from the pool (panics if over-drawn — the
+    /// scheduler only takes what [`FreePool::carve`] returned).
+    pub fn take(&mut self, alloc: &[(ChipKind, usize)]) {
+        for &(kind, n) in alloc {
+            let slot = self
+                .free
+                .iter_mut()
+                .find(|(k, _)| *k == kind)
+                .unwrap_or_else(|| panic!("taking {n} chips of unknown kind {kind:?}"));
+            assert!(slot.1 >= n, "over-drawing {n} chips of {kind:?} from a pool of {}", slot.1);
+            slot.1 -= n;
+        }
+    }
+
+    /// Return an allocation to the pool.
+    pub fn release(&mut self, alloc: &[(ChipKind, usize)]) {
+        for &(kind, n) in alloc {
+            if let Some(slot) = self.free.iter_mut().find(|(k, _)| *k == kind) {
+                slot.1 += n;
+            } else {
+                self.free.push((kind, n));
+            }
+        }
+    }
+}
+
+/// A successful placement: the carved allocation and the solved plan
+/// (iteration time still to be priced by the fleet's simulator pool).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Whole-node chips taken from the pool, per kind.
+    pub alloc: Vec<(ChipKind, usize)>,
+    /// Total chips in the allocation.
+    pub chips: usize,
+    /// The HeteroAuto plan for the carved sub-cluster.
+    pub plan: ExecutionPlan,
+}
+
+/// What one placement attempt produced.
+#[derive(Clone, Debug)]
+pub enum PlaceOutcome {
+    /// The job got a sub-cluster and a plan; the chips are already taken
+    /// from the pool.
+    Placed(Placement),
+    /// The free pool cannot cover the job's `min_chips` — wait for
+    /// capacity (or preempt, under the priority policy).
+    NoCapacity,
+    /// The pool covered the chips but HeteroAuto found no feasible
+    /// strategy on the carve (with the reason). On a fully idle cluster
+    /// this is terminal; otherwise the job waits for a different carve.
+    SearchFailed(String),
+}
+
+/// A successful preempt-by-resize of one running job.
+#[derive(Clone, Debug)]
+pub struct Shrink {
+    /// The victim's re-planned (pipeline-preserving, epoch-bumped) plan
+    /// over the reduced sub-cluster.
+    pub plan: ExecutionPlan,
+    /// Whole-node chips returned to the pool.
+    pub freed: Vec<(ChipKind, usize)>,
+    /// Hot-swap cost from the elastic migration ledger: the time to move
+    /// displaced layer state onto the surviving stages.
+    pub migrate_seconds: f64,
+    /// Surviving chips the pipeline-preserving re-plan idles (still held
+    /// by the victim, not returned to the pool).
+    pub idled_chips: usize,
+}
+
+/// The placement engine: one policy, one inner-solver config, one warm
+/// [`ProfileCache`] shared by every placement and resize decision.
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    /// Queue policy (used by the fleet loop, not by placement itself).
+    pub policy: Policy,
+    /// Inner HeteroAuto solver config (see
+    /// [`super::fleet_search_config`] for the default).
+    pub search: SearchConfig,
+    cache: ProfileCache,
+}
+
+impl Scheduler {
+    /// A scheduler with a fresh profile cache.
+    pub fn new(policy: Policy, search: SearchConfig) -> Scheduler {
+        Scheduler { policy, search, cache: ProfileCache::new() }
+    }
+
+    /// The shared profile cache (observability: hits/misses).
+    pub fn cache(&self) -> &ProfileCache {
+        &self.cache
+    }
+
+    /// Try to place `job`: carve from `pool`, solve with HeteroAuto, and
+    /// on success take the chips. The pool is untouched on failure.
+    pub fn try_place(&self, job: &JobSpec, pool: &mut FreePool) -> PlaceOutcome {
+        let Some(alloc) = pool.carve(job.min_chips, job.max_chips) else {
+            return PlaceOutcome::NoCapacity;
+        };
+        let chips = alloc.iter().map(|&(_, n)| n).sum();
+        let sub = match Cluster::try_build(&job.name(), alloc.clone()) {
+            Ok(c) => c,
+            Err(e) => return PlaceOutcome::SearchFailed(e.to_string()),
+        };
+        match search_with_cache(job.model.shape(), &sub, job.gbs_tokens, &self.search, &self.cache)
+        {
+            Ok(r) => {
+                pool.take(&alloc);
+                let plan = r.into_plan(job.model.shape(), &sub, job.gbs_tokens);
+                PlaceOutcome::Placed(Placement { alloc, chips, plan })
+            }
+            Err(e) => PlaceOutcome::SearchFailed(e.to_string()),
+        }
+    }
+
+    /// Try to shrink a running job to free at least `need_chips` chips:
+    /// a pipeline-preserving [`replan`] excluding whole nodes of the
+    /// victim's largest chip group, priced by the elastic migration
+    /// ledger (`step_seconds` is the victim's current per-step time).
+    /// `None` when the victim cannot shrink that far (its plan would not
+    /// survive) — the caller then tries the next victim or waits.
+    pub fn try_shrink(
+        &self,
+        victim: &ExecutionPlan,
+        step_seconds: f64,
+        need_chips: usize,
+    ) -> Option<Shrink> {
+        // Shed from the victim's largest group (ties: memory-descending
+        // order), keeping at least one node so the stage group survives.
+        let groups = victim.cluster.groups_by_memory_desc();
+        let g = groups.iter().max_by_key(|g| g.n_chips)?;
+        let (kind, node) = (g.spec.kind, g.spec.chips_per_node);
+        let exclude = (need_chips.div_ceil(node) * node).min(g.n_chips.saturating_sub(node));
+        if exclude == 0 {
+            return None;
+        }
+        let outcome =
+            replan(victim, &ClusterDelta::exclude(kind, exclude), &self.cache, &ReplanOptions::default())
+                .ok()?;
+        if !outcome.changed {
+            return None;
+        }
+        let migrate_seconds =
+            RecoveryTimeline::new(victim, &outcome.plan, step_seconds, 0, 0.0, 0.0)
+                .ok()?
+                .migrate_seconds;
+        Some(Shrink {
+            plan: outcome.plan,
+            freed: vec![(kind, exclude)],
+            migrate_seconds,
+            idled_chips: outcome.idled_chips,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::experiment;
+
+    #[test]
+    fn carve_prefers_one_vendor_and_whole_nodes() {
+        let mega = experiment("exp-mega").unwrap().cluster;
+        let pool = FreePool::new(&mega);
+        // 128 chips fit inside the biggest single pool (B = 512).
+        let alloc = pool.carve(128, 128).unwrap();
+        assert_eq!(alloc.len(), 1, "homogeneous carve expected, got {alloc:?}");
+        assert_eq!(alloc[0].1, 128);
+        // A carve bigger than any one pool spans several, whole nodes each.
+        let alloc = pool.carve(1024, 1024).unwrap();
+        assert!(alloc.len() > 1);
+        for &(kind, n) in &alloc {
+            assert_eq!(n % spec(kind).chips_per_node, 0, "ragged node carve of {kind:?}");
+        }
+        assert_eq!(alloc.iter().map(|&(_, n)| n).sum::<usize>(), 1024);
+    }
+
+    #[test]
+    fn take_and_release_are_inverse() {
+        let mega = experiment("exp-mega").unwrap().cluster;
+        let mut pool = FreePool::new(&mega);
+        let before = pool.clone();
+        let alloc = pool.carve(256, 256).unwrap();
+        pool.take(&alloc);
+        assert_eq!(pool.total(), mega.total_chips() - 256);
+        pool.release(&alloc);
+        assert_eq!(pool, before);
+    }
+
+    #[test]
+    fn carve_fails_only_below_min() {
+        let mega = experiment("exp-mega").unwrap().cluster;
+        let pool = FreePool::new(&mega);
+        assert!(pool.carve(mega.total_chips() + 64, mega.total_chips() + 64).is_none());
+        assert!(pool.carve(mega.total_chips(), mega.total_chips()).is_some());
+    }
+}

@@ -1,0 +1,605 @@
+//! The fleet-level event loop, timeline, and metrics.
+//!
+//! [`run`] drives a [`JobTrace`] through one cluster: arrivals and
+//! completions advance a modeled fleet clock, every decision point runs
+//! a placement round under the configured [`Policy`], and every plan the
+//! round produces (new placements and resized victims alike) is priced
+//! in a single batched pass over the simulator engine pool
+//! ([`crate::sim::simulate_plans`] semantics, chunked across a
+//! configurable worker count with a fixed reduction order, so
+//! workers = 1 ≡ workers = N bit for bit).
+//!
+//! The output is a machine-readable [`FleetTimeline`] — every event,
+//! per-job outcomes, and fleet metrics (makespan, p99 job wait,
+//! chip-hour utilization, preemption count). Same trace + same options ⇒
+//! bit-identical timeline JSON.
+
+use std::thread;
+
+use anyhow::{bail, Result};
+
+use crate::auto::SearchConfig;
+use crate::costmodel::Schedule;
+use crate::hetero::{ChipKind, Cluster};
+use crate::plan::ExecutionPlan;
+use crate::sim::{simulate_plan, simulate_plans};
+use crate::util::json::{self, Value};
+use crate::util::stats;
+
+use super::job::JobTrace;
+use super::sched::{FreePool, PlaceOutcome, Policy, Scheduler};
+
+/// The inner-solver config the fleet uses by default: 1F1B pinned and no
+/// two-stage refinement — sub-clusters are small enough that the coarse
+/// pass is both fast (one search per placement decision) and close to
+/// optimal, and the paper's schedule baseline keeps placements
+/// comparable across jobs.
+pub fn fleet_search_config() -> SearchConfig {
+    SearchConfig { two_stage: false, ..SearchConfig::pinned(Schedule::OneF1B) }
+}
+
+/// Knobs for [`run`].
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Queue policy.
+    pub policy: Policy,
+    /// Worker threads for the batched plan-pricing pass (0 = one per
+    /// available core). Purely a wall-clock knob: results are
+    /// bit-identical for every value.
+    pub workers: usize,
+    /// Inner HeteroAuto solver config (default:
+    /// [`fleet_search_config`]).
+    pub search: SearchConfig,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions { policy: Policy::Fifo, workers: 0, search: fleet_search_config() }
+    }
+}
+
+/// What happened at one fleet event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FleetEventKind {
+    /// The job joined the queue.
+    Arrive,
+    /// The job got a sub-cluster and started training.
+    Start {
+        /// Chips in the job's sub-cluster.
+        chips: usize,
+        /// The simulator-priced per-step time on that sub-cluster.
+        iteration_seconds: f64,
+    },
+    /// A running job was shrunk (preempt-by-resize) to make room.
+    Resize {
+        /// Whole-node chips returned to the free pool.
+        freed_chips: usize,
+        /// The victim's new per-step time after the re-plan.
+        iteration_seconds: f64,
+        /// Hot-swap cost charged before the victim resumes.
+        migrate_seconds: f64,
+    },
+    /// The job finished its steps; its chips returned to the pool.
+    Finish,
+    /// The job can never run on this cluster (no feasible carve/strategy
+    /// even with the whole cluster idle) and left the queue.
+    Reject,
+}
+
+impl FleetEventKind {
+    fn token(&self) -> &'static str {
+        match self {
+            FleetEventKind::Arrive => "arrive",
+            FleetEventKind::Start { .. } => "start",
+            FleetEventKind::Resize { .. } => "resize",
+            FleetEventKind::Finish => "finish",
+            FleetEventKind::Reject => "reject",
+        }
+    }
+}
+
+/// One entry in the [`FleetTimeline`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetEvent {
+    /// Fleet-clock time of the event, in modeled seconds.
+    pub t_seconds: f64,
+    /// The job the event concerns.
+    pub job: usize,
+    /// What happened.
+    pub kind: FleetEventKind,
+}
+
+/// Per-job outcome row in the [`FleetTimeline`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobOutcome {
+    /// Job id.
+    pub id: usize,
+    /// The job's priority (echoed for metric post-processing).
+    pub priority: u8,
+    /// Arrival time in fleet seconds.
+    pub arrival_seconds: f64,
+    /// Queue wait (`start − arrival`), `None` for rejected jobs.
+    pub wait_seconds: Option<f64>,
+    /// Completion time, `None` for rejected jobs.
+    pub finish_seconds: Option<f64>,
+    /// Chips the job held at start (0 for rejected jobs).
+    pub chips: usize,
+}
+
+/// Fleet-level metrics over one [`run`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetMetrics {
+    /// Jobs in the trace.
+    pub jobs: usize,
+    /// Jobs that ran to completion.
+    pub completed: usize,
+    /// Jobs rejected as unplaceable on an idle cluster.
+    pub rejected: usize,
+    /// Successful preempt-by-resize operations.
+    pub preemptions: usize,
+    /// Fleet-clock time of the last event (normally the last finish).
+    pub makespan_seconds: f64,
+    /// Mean queue wait over completed jobs.
+    pub mean_wait_seconds: f64,
+    /// 99th-percentile queue wait over completed jobs (linear
+    /// interpolation, the crate-wide [`stats::percentile`]).
+    pub p99_wait_seconds: f64,
+    /// Chip-seconds held by jobs (allocation-based: idled survivors of a
+    /// resize still count against the job holding them).
+    pub chip_seconds: f64,
+    /// `chip_seconds / (total_chips × makespan)` — the chip-hour
+    /// utilization of the whole fleet window.
+    pub utilization: f64,
+}
+
+/// The machine-readable record of one fleet run: every event, per-job
+/// outcomes, and the fleet metrics. Serializes deterministically —
+/// [`FleetTimeline::to_json_string`] is bit-identical across repeats and
+/// worker counts for the same trace + options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetTimeline {
+    /// Policy the run used.
+    pub policy: Policy,
+    /// Seed of the trace (echoed from [`JobTrace::seed`]).
+    pub trace_seed: u64,
+    /// Cluster name.
+    pub cluster: String,
+    /// Total chips in the cluster.
+    pub total_chips: usize,
+    /// Every event, in fleet-clock order.
+    pub events: Vec<FleetEvent>,
+    /// Per-job outcomes, in job-id order.
+    pub jobs: Vec<JobOutcome>,
+    /// Fleet metrics.
+    pub metrics: FleetMetrics,
+}
+
+impl FleetTimeline {
+    /// Serialize (deterministic: key order is sorted, floats print in
+    /// shortest-roundtrip form, and no wall-clock field exists).
+    pub fn to_json(&self) -> Value {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("t_seconds", json::num(e.t_seconds)),
+                    ("job", json::num(e.job as f64)),
+                    ("kind", json::s(e.kind.token())),
+                ];
+                match e.kind {
+                    FleetEventKind::Start { chips, iteration_seconds } => {
+                        fields.push(("chips", json::num(chips as f64)));
+                        fields.push(("iteration_seconds", json::num(iteration_seconds)));
+                    }
+                    FleetEventKind::Resize { freed_chips, iteration_seconds, migrate_seconds } => {
+                        fields.push(("freed_chips", json::num(freed_chips as f64)));
+                        fields.push(("iteration_seconds", json::num(iteration_seconds)));
+                        fields.push(("migrate_seconds", json::num(migrate_seconds)));
+                    }
+                    _ => {}
+                }
+                json::obj(fields)
+            })
+            .collect();
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut fields = vec![
+                    ("id", json::num(j.id as f64)),
+                    ("priority", json::num(j.priority as f64)),
+                    ("arrival_seconds", json::num(j.arrival_seconds)),
+                    ("chips", json::num(j.chips as f64)),
+                ];
+                if let Some(w) = j.wait_seconds {
+                    fields.push(("wait_seconds", json::num(w)));
+                }
+                if let Some(f) = j.finish_seconds {
+                    fields.push(("finish_seconds", json::num(f)));
+                }
+                json::obj(fields)
+            })
+            .collect();
+        let m = &self.metrics;
+        json::obj(vec![
+            ("policy", json::s(self.policy.token())),
+            ("trace_seed", json::s(&self.trace_seed.to_string())),
+            ("cluster", json::s(&self.cluster)),
+            ("total_chips", json::num(self.total_chips as f64)),
+            ("events", json::arr(events)),
+            ("jobs", json::arr(jobs)),
+            (
+                "metrics",
+                json::obj(vec![
+                    ("jobs", json::num(m.jobs as f64)),
+                    ("completed", json::num(m.completed as f64)),
+                    ("rejected", json::num(m.rejected as f64)),
+                    ("preemptions", json::num(m.preemptions as f64)),
+                    ("makespan_seconds", json::num(m.makespan_seconds)),
+                    ("mean_wait_seconds", json::num(m.mean_wait_seconds)),
+                    ("p99_wait_seconds", json::num(m.p99_wait_seconds)),
+                    ("chip_seconds", json::num(m.chip_seconds)),
+                    ("utilization", json::num(m.utilization)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The timeline as pretty JSON text — the determinism contract is on
+    /// this string (bit-identical across repeats and worker counts).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Write the timeline to a file (the CLI `--out` path).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .map_err(|e| anyhow::anyhow!("writing timeline `{path}`: {e}"))
+    }
+}
+
+/// Price a batch of plans on the engine pool: one [`simulate_plan`] per
+/// plan, chunked contiguously over `workers` threads, results joined in
+/// fixed worker order — the [`crate::sim::simulate_plans`] contract at a
+/// controllable width. Identical output for every worker count.
+fn price_plans(plans: &[&ExecutionPlan], workers: usize) -> Vec<f64> {
+    if plans.is_empty() {
+        return Vec::new();
+    }
+    let workers = if workers == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    }
+    .min(plans.len());
+    if workers >= plans.len() {
+        // Full width: the shared engine-pool driver, one engine per plan.
+        return simulate_plans(plans).iter().map(|r| r.iteration_seconds).collect();
+    }
+    let chunk = plans.len().div_ceil(workers);
+    let mut out = Vec::with_capacity(plans.len());
+    thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for piece in plans.chunks(chunk) {
+            handles.push(scope.spawn(move || {
+                piece.iter().map(|p| simulate_plan(p).iteration_seconds).collect::<Vec<f64>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("fleet pricing worker panicked"));
+        }
+    });
+    out
+}
+
+/// One running job's live state.
+struct Running {
+    id: usize,
+    /// Index of the job in the trace (outcome row index).
+    ti: usize,
+    priority: u8,
+    alloc: Vec<(ChipKind, usize)>,
+    /// Chips currently held (allocation minus freed; includes idled).
+    held: usize,
+    plan: ExecutionPlan,
+    iteration_seconds: f64,
+    /// Start of the current rate segment (placement, or post-resize).
+    seg_start: f64,
+    steps_remaining: u64,
+    finish: f64,
+}
+
+/// A resize staged during a placement round, applied after pricing.
+struct StagedResize {
+    running_idx: usize,
+    plan: ExecutionPlan,
+    freed: Vec<(ChipKind, usize)>,
+    migrate_seconds: f64,
+}
+
+/// Run a job trace through the fleet scheduler on `cluster`.
+///
+/// Deterministic: same `cluster` + `trace` + `opts.policy` +
+/// `opts.search` ⇒ bit-identical [`FleetTimeline`], for any
+/// `opts.workers`.
+pub fn run(cluster: &Cluster, trace: &JobTrace, opts: &FleetOptions) -> Result<FleetTimeline> {
+    trace.validate()?;
+    for j in &trace.jobs {
+        if j.min_chips > cluster.total_chips() {
+            // Caught up front so the queue never carries a job the
+            // cluster axiomatically cannot host.
+            bail!(
+                "job {} needs {} chips but cluster `{}` has {}",
+                j.id, j.min_chips, cluster.name, cluster.total_chips()
+            );
+        }
+    }
+    let sched = Scheduler::new(opts.policy, opts.search.clone());
+    let mut pool = FreePool::new(cluster);
+    let mut events: Vec<FleetEvent> = Vec::new();
+    let mut running: Vec<Running> = Vec::new();
+    let mut pending: Vec<usize> = Vec::new(); // indices into trace.jobs
+    let mut next_arrival = 0usize;
+    let mut outcomes: Vec<JobOutcome> = trace
+        .jobs
+        .iter()
+        .map(|j| JobOutcome {
+            id: j.id,
+            priority: j.priority,
+            arrival_seconds: j.arrival_step as f64,
+            wait_seconds: None,
+            finish_seconds: None,
+            chips: 0,
+        })
+        .collect();
+    let mut segments: Vec<(usize, f64, f64)> = Vec::new(); // (chips, t0, t1)
+    let mut preemptions = 0usize;
+    let mut rejected = 0usize;
+
+    loop {
+        // Next decision point: the earliest running finish or the next
+        // arrival, whichever is sooner (finishes win ties so freed chips
+        // are visible to jobs arriving at the same instant).
+        let arrival_t = trace.jobs.get(next_arrival).map(|j| j.arrival_step as f64);
+        let finish_t = running
+            .iter()
+            .map(|r| r.finish)
+            .min_by(|a, b| a.partial_cmp(b).expect("finish times are finite"));
+        let t = match (arrival_t, finish_t) {
+            (Some(a), Some(f)) => a.min(f),
+            (Some(a), None) => a,
+            (None, Some(f)) => f,
+            (None, None) => break,
+        };
+
+        // Completions at exactly t, in job-id order.
+        let mut done: Vec<usize> = running
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.finish == t)
+            .map(|(i, _)| i)
+            .collect();
+        done.sort_by_key(|&i| running[i].id);
+        for &i in &done {
+            let r = &running[i];
+            pool.release(&r.alloc);
+            segments.push((r.held, r.seg_start, t));
+            outcomes[r.ti].finish_seconds = Some(t);
+            events.push(FleetEvent { t_seconds: t, job: r.id, kind: FleetEventKind::Finish });
+        }
+        // Remove highest index first so the remaining indices stay valid
+        // (the event order above is id order, which need not match).
+        done.sort_unstable_by(|a, b| b.cmp(a));
+        for i in done {
+            running.remove(i);
+        }
+
+        // Arrivals at exactly t, trace order.
+        while let Some(j) = trace.jobs.get(next_arrival) {
+            if j.arrival_step as f64 > t {
+                break;
+            }
+            pending.push(next_arrival);
+            events.push(FleetEvent { t_seconds: t, job: j.id, kind: FleetEventKind::Arrive });
+            next_arrival += 1;
+        }
+
+        // Placement round at t.
+        let order = queue_order(opts.policy, trace, &pending);
+        let mut placed: Vec<(usize, super::sched::Placement)> = Vec::new();
+        let mut resizes: Vec<StagedResize> = Vec::new();
+        for &pi in &order {
+            let job = &trace.jobs[pi];
+            let mut outcome = sched.try_place(job, &mut pool);
+            if matches!(outcome, PlaceOutcome::NoCapacity)
+                && opts.policy == Policy::PriorityBackfill
+            {
+                // Preempt-by-resize: shrink strictly-lower-priority
+                // running jobs (lowest priority first, latest start /
+                // highest id breaking ties) until the job fits.
+                let mut victims: Vec<usize> = (0..running.len())
+                    .filter(|&i| running[i].priority < job.priority)
+                    .collect();
+                victims.sort_by_key(|&i| {
+                    (running[i].priority, u64::MAX - running[i].id as u64)
+                });
+                for vi in victims {
+                    let need = job.min_chips.saturating_sub(pool.total());
+                    if need == 0 {
+                        break;
+                    }
+                    let already = resizes.iter().any(|s| s.running_idx == vi);
+                    if already {
+                        continue; // one shrink per victim per round
+                    }
+                    let v = &running[vi];
+                    if let Some(shrink) =
+                        sched.try_shrink(&v.plan, v.iteration_seconds, need)
+                    {
+                        pool.release(&shrink.freed);
+                        preemptions += 1;
+                        resizes.push(StagedResize {
+                            running_idx: vi,
+                            plan: shrink.plan,
+                            freed: shrink.freed,
+                            migrate_seconds: shrink.migrate_seconds,
+                        });
+                    }
+                }
+                if job.min_chips <= pool.total() {
+                    outcome = sched.try_place(job, &mut pool);
+                }
+            }
+            match outcome {
+                PlaceOutcome::Placed(p) => placed.push((pi, p)),
+                PlaceOutcome::NoCapacity => {
+                    if running.is_empty() && placed.is_empty() && pool.total() == cluster.total_chips()
+                    {
+                        // Idle cluster and still no carve: terminal.
+                        reject(job.id, t, &mut pending, pi, &mut events, &mut rejected);
+                    } else if opts.policy == Policy::Fifo {
+                        break; // head-of-line blocking
+                    }
+                }
+                PlaceOutcome::SearchFailed(_) => {
+                    if running.is_empty() && placed.is_empty() && pool.total() == cluster.total_chips()
+                    {
+                        reject(job.id, t, &mut pending, pi, &mut events, &mut rejected);
+                    } else if opts.policy == Policy::Fifo {
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Price every plan this round produced in one batched pass.
+        let mut plan_refs: Vec<&ExecutionPlan> = placed.iter().map(|(_, p)| &p.plan).collect();
+        plan_refs.extend(resizes.iter().map(|s| &s.plan));
+        let prices = price_plans(&plan_refs, opts.workers);
+        let (start_prices, resize_prices) = prices.split_at(placed.len());
+
+        // Apply resizes (victims keep running at their new rate after
+        // the migration penalty; the partially-done step restarts).
+        for (s, &iter_new) in resizes.iter().zip(resize_prices) {
+            let r = &mut running[s.running_idx];
+            let freed: usize = s.freed.iter().map(|&(_, n)| n).sum();
+            let base = t.max(r.seg_start); // a victim mid-migration resumes later
+            let done = if base > r.seg_start && r.iteration_seconds > 0.0 {
+                (((base - r.seg_start) / r.iteration_seconds).floor() as u64)
+                    .min(r.steps_remaining)
+            } else {
+                0
+            };
+            segments.push((r.held, r.seg_start, base));
+            r.steps_remaining -= done;
+            r.held -= freed;
+            r.plan = s.plan.clone();
+            r.iteration_seconds = iter_new;
+            r.seg_start = base + s.migrate_seconds;
+            r.finish = r.seg_start + r.steps_remaining as f64 * iter_new;
+            for &(kind, n) in &s.freed {
+                r.shed(kind, n);
+            }
+            events.push(FleetEvent {
+                t_seconds: t,
+                job: r.id,
+                kind: FleetEventKind::Resize {
+                    freed_chips: freed,
+                    iteration_seconds: iter_new,
+                    migrate_seconds: s.migrate_seconds,
+                },
+            });
+        }
+
+        // Apply placements.
+        for ((pi, p), &iter) in placed.iter().zip(start_prices) {
+            let job = &trace.jobs[*pi];
+            pending.retain(|&x| x != *pi);
+            outcomes[*pi].wait_seconds = Some(t - job.arrival_step as f64);
+            outcomes[*pi].chips = p.chips;
+            running.push(Running {
+                id: job.id,
+                ti: *pi,
+                priority: job.priority,
+                alloc: p.alloc.clone(),
+                held: p.chips,
+                plan: p.plan.clone(),
+                iteration_seconds: iter,
+                seg_start: t,
+                steps_remaining: job.steps,
+                finish: t + job.steps as f64 * iter,
+            });
+            events.push(FleetEvent {
+                t_seconds: t,
+                job: job.id,
+                kind: FleetEventKind::Start { chips: p.chips, iteration_seconds: iter },
+            });
+        }
+    }
+
+    // Metrics.
+    let makespan = events.last().map(|e| e.t_seconds).unwrap_or(0.0);
+    let mut waits: Vec<f64> = outcomes.iter().filter_map(|o| o.wait_seconds).collect();
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let chip_seconds: f64 = segments.iter().map(|&(c, t0, t1)| c as f64 * (t1 - t0)).sum();
+    let denom = cluster.total_chips() as f64 * makespan;
+    let metrics = FleetMetrics {
+        jobs: trace.jobs.len(),
+        completed: outcomes.iter().filter(|o| o.finish_seconds.is_some()).count(),
+        rejected,
+        preemptions,
+        makespan_seconds: makespan,
+        mean_wait_seconds: if waits.is_empty() { 0.0 } else { stats::mean(&waits) },
+        p99_wait_seconds: if waits.is_empty() { 0.0 } else { stats::percentile(&waits, 0.99) },
+        chip_seconds,
+        utilization: if denom > 0.0 { chip_seconds / denom } else { 0.0 },
+    };
+    Ok(FleetTimeline {
+        policy: opts.policy,
+        trace_seed: trace.seed,
+        cluster: cluster.name.clone(),
+        total_chips: cluster.total_chips(),
+        events,
+        jobs: outcomes,
+        metrics,
+    })
+}
+
+impl Running {
+    /// Record `n` chips of `kind` as no longer held after a resize.
+    fn shed(&mut self, kind: ChipKind, n: usize) {
+        if let Some(slot) = self.alloc.iter_mut().find(|(k, _)| *k == kind) {
+            slot.1 -= n.min(slot.1);
+        }
+        self.alloc.retain(|&(_, n)| n > 0);
+    }
+}
+
+/// Queue order for one placement round, per policy. FIFO is
+/// `(arrival, id)`; priority-with-backfill is
+/// `(priority desc, arrival, id)`.
+fn queue_order(policy: Policy, trace: &JobTrace, pending: &[usize]) -> Vec<usize> {
+    let mut order = pending.to_vec();
+    match policy {
+        Policy::Fifo => order.sort_by_key(|&i| (trace.jobs[i].arrival_step, trace.jobs[i].id)),
+        Policy::PriorityBackfill => order.sort_by_key(|&i| {
+            let j = &trace.jobs[i];
+            (u8::MAX - j.priority, j.arrival_step, j.id)
+        }),
+    }
+    order
+}
+
+fn reject(
+    job_id: usize,
+    t: f64,
+    pending: &mut Vec<usize>,
+    pi: usize,
+    events: &mut Vec<FleetEvent>,
+    rejected: &mut usize,
+) {
+    pending.retain(|&x| x != pi);
+    events.push(FleetEvent { t_seconds: t, job: job_id, kind: FleetEventKind::Reject });
+    *rejected += 1;
+}

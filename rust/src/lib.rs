@@ -58,6 +58,29 @@
 //! }
 //! ```
 //!
+//! One level up, the [`fleet`] layer packs a whole queue of jobs onto a
+//! cluster (this is the README fleet quickstart, also compiled):
+//!
+//! ```no_run
+//! use h2::fleet::{run, FleetOptions, JobTrace, Policy};
+//! use h2::hetero::experiment;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let exp = experiment("exp-mega")?;           // 1,280 chips, 4 vendors
+//!     let trace = JobTrace::generate(42, 12, exp.cluster.total_chips());
+//!     let opts = FleetOptions { policy: Policy::PriorityBackfill, ..Default::default() };
+//!     let timeline = run(&exp.cluster, &trace, &opts)?;
+//!     println!(
+//!         "makespan {:.0}s  p99 wait {:.0}s  utilization {:.2}",
+//!         timeline.metrics.makespan_seconds,
+//!         timeline.metrics.p99_wait_seconds,
+//!         timeline.metrics.utilization,
+//!     );
+//!     timeline.save("fleet.json")?;                // bit-identical per seed+policy
+//!     Ok(())
+//! }
+//! ```
+//!
 //! Pinning a schedule and re-scheduling a loaded plan are one-liners:
 //!
 //! ```no_run
@@ -88,6 +111,11 @@
 //!   plus [`auto::replan`] for incremental re-planning after chip loss.
 //! * [`elastic`] — fault injection, step-time monitoring, and hot-swap
 //!   state migration: the detect → replan → migrate loop.
+//! * [`fleet`] — the cluster-level scheduler: a seedable job queue
+//!   packed onto one cluster with HeteroAuto as the inner solver per
+//!   placement, FIFO or priority-with-backfill policies,
+//!   preempt-by-resize via [`auto::replan`], and a deterministic
+//!   [`fleet::FleetTimeline`] of events and fleet metrics.
 //! * [`sim`] — the HeteroPP discrete-event simulator (§4.2) with a real
 //!   issue order per schedule: the flat-arena [`sim::SimEngine`] hot
 //!   path, machine-readable [`sim::EventTimeline`]s, and the preserved
@@ -109,6 +137,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod elastic;
+pub mod fleet;
 pub mod hetero;
 pub mod plan;
 pub mod precision;

@@ -14,8 +14,9 @@
 //!   comm-bench  DiComm latency sweep (Fig 7)
 //!   precision   DiTorch precision-alignment run (Fig 5 / Table 1)
 //!   profile     analytic layer profile per chip/TP (the auto-profiler)
+//!   fleet       pack a queue of jobs onto one cluster (fleet scheduler)
 //!   report      paper-table reports (Table 6 baselines, Fig 11 ratios,
-//!               recovery-vs-restart on exp-mega)
+//!               recovery-vs-restart and fleet policies on exp-mega)
 
 use anyhow::{bail, Result};
 
@@ -27,6 +28,7 @@ use h2::coordinator::{
 };
 use h2::costmodel::{profile_layer, tgs, uniform_1f1b, ProfileCache, Schedule, H2_100B};
 use h2::elastic::FaultPlan;
+use h2::fleet::{fleet_search_config, FleetOptions, JobTrace, Policy};
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
 use h2::plan::{render_errors, ExecutionPlan};
 use h2::precision::check_alignment;
@@ -47,6 +49,7 @@ fn main() {
         "comm-bench" => cmd_comm_bench(&args),
         "precision" => cmd_precision(&args),
         "profile" => cmd_profile(&args),
+        "fleet" => cmd_fleet(&args),
         "report" => cmd_report(&args),
         "help" | "--help" => {
             print_help();
@@ -89,7 +92,10 @@ fn print_help() {
     println!("  comm-bench  [--min-shift 8] [--max-shift 28]");
     println!("  precision   --chip A|B|C|D --steps 300 [--artifacts DIR]");
     println!("  profile     [--chip A] [--dp 4]");
-    println!("  report      table6 | fig11 | elastic [--exp exp-mega]");
+    println!("  fleet       --exp exp-mega --trace <json|seed|pinned> [--policy fifo|priority]");
+    println!("              [--jobs 12] [--workers N] [--schedule 1f1b|...] [--sequential]");
+    println!("              [--emit-trace trace.json] [--out timeline.json]");
+    println!("  report      table6 | fig11 | elastic | fleet [--exp exp-mega]");
 }
 
 /// Load `--config` if given (side effect: registers any custom chips).
@@ -702,6 +708,86 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `h2 fleet` — pack a queue of jobs onto one cluster and print the
+/// timeline + fleet metrics. `--trace` takes a JSON trace file, a
+/// decimal seed for the generator, or `pinned` for the checked-in
+/// contrast scenario; same trace + policy ⇒ bit-identical timeline.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let config = load_config(args)?;
+    let fleet_cfg = config.as_ref().and_then(|c| c.fleet.clone()).unwrap_or_default();
+    let (cluster, _gbs) = resolve_cluster(args, config.as_ref(), Some("exp-mega"))?;
+    let jobs = args.usize_or("jobs", fleet_cfg.jobs.unwrap_or(12))?;
+    let trace_tok = args.get("trace").map(str::to_string).or_else(|| fleet_cfg.trace.clone());
+    let trace = match trace_tok.as_deref() {
+        Some("pinned") => JobTrace::pinned(cluster.total_chips()),
+        Some(tok) => match tok.parse::<u64>() {
+            Ok(seed) => JobTrace::generate(seed, jobs, cluster.total_chips()),
+            Err(_) => JobTrace::load(tok)?,
+        },
+        None => JobTrace::generate(fleet_cfg.seed.unwrap_or(42), jobs, cluster.total_chips()),
+    };
+    if let Some(path) = args.get("emit-trace") {
+        trace.save(path)?;
+        println!("trace ({} jobs, seed {}) written to {path}", trace.jobs.len(), trace.seed);
+    }
+    let policy = match args.get("policy") {
+        Some(tok) => Policy::parse(tok)?,
+        None => fleet_cfg.policy.unwrap_or_default(),
+    };
+    let mut search = fleet_search_config();
+    if let Some(tok) = args.get("schedule") {
+        search.schedules = vec![parse_schedule(tok)?];
+    }
+    if args.has("sequential") {
+        search.parallel = false;
+    }
+    let workers = args.usize_or("workers", fleet_cfg.workers.unwrap_or(0))?;
+    let opts = FleetOptions { policy, workers, search };
+    let timeline = h2::fleet::run(&cluster, &trace, &opts)?;
+
+    let mut t = Table::new(&["job", "prio", "arrival", "wait", "finish", "chips"])
+        .with_title(&format!(
+            "Fleet on `{}` ({} chips) — policy {}",
+            cluster.name,
+            cluster.total_chips(),
+            policy.token()
+        ));
+    for j in &timeline.jobs {
+        t.row(vec![
+            j.id.to_string(),
+            j.priority.to_string(),
+            fmt_duration(j.arrival_seconds),
+            j.wait_seconds.map(fmt_duration).unwrap_or_else(|| "rejected".into()),
+            j.finish_seconds.map(fmt_duration).unwrap_or_else(|| "-".into()),
+            j.chips.to_string(),
+        ]);
+    }
+    t.print();
+    let m = &timeline.metrics;
+    println!(
+        "{} events; {} completed, {} rejected, {} preemptions; makespan {}, \
+         p99 wait {}, utilization {:.1}%",
+        timeline.events.len(), m.completed, m.rejected, m.preemptions,
+        fmt_duration(m.makespan_seconds), fmt_duration(m.p99_wait_seconds),
+        100.0 * m.utilization
+    );
+    if let Some(path) = args.get("out") {
+        timeline.save(path)?;
+        println!("timeline written to {path}");
+    }
+    // Machine-readable lines (full precision, for scripts and tests).
+    println!("fleet_policy {}", policy.token());
+    println!("fleet_jobs {}", m.jobs);
+    println!("fleet_completed {}", m.completed);
+    println!("fleet_rejected {}", m.rejected);
+    println!("fleet_preemptions {}", m.preemptions);
+    println!("fleet_makespan_seconds {:.17e}", m.makespan_seconds);
+    println!("fleet_mean_wait_seconds {:.17e}", m.mean_wait_seconds);
+    println!("fleet_p99_wait_seconds {:.17e}", m.p99_wait_seconds);
+    println!("fleet_utilization {:.17e}", m.utilization);
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let _config = load_config(args)?; // registers custom chips for parity
     match args.positional.get(1).map(|s| s.as_str()).unwrap_or("table6") {
@@ -766,6 +852,27 @@ fn cmd_report(args: &Args) -> Result<()> {
                     fmt_duration(tl.restore_seconds),
                     fmt_duration(tl.restart_seconds()),
                     format!("{:.2}x", tl.restart_seconds() / tl.recovery_seconds()),
+                ]);
+            }
+            t.print();
+        }
+        "fleet" => {
+            let exp_name = args.str_or("exp", "exp-mega");
+            let rows = h2::report::fleet_metrics(&exp_name, args.usize_or("workers", 0)?)?;
+            let mut t = Table::new(&["policy", "completed", "rejected", "preempt",
+                                     "makespan", "mean wait", "p99 wait", "util"])
+                .with_title(&format!("Fleet policies on `{exp_name}` — pinned trace"));
+            for row in &rows {
+                let m = &row.metrics;
+                t.row(vec![
+                    row.policy.token().to_string(),
+                    format!("{}/{}", m.completed, m.jobs),
+                    m.rejected.to_string(),
+                    m.preemptions.to_string(),
+                    fmt_duration(m.makespan_seconds),
+                    fmt_duration(m.mean_wait_seconds),
+                    fmt_duration(m.p99_wait_seconds),
+                    format!("{:.1}%", 100.0 * m.utilization),
                 ]);
             }
             t.print();

@@ -405,6 +405,34 @@ pub fn recovery_vs_restart(exp_name: &str) -> Result<RecoveryReport> {
     Ok(RecoveryReport { incumbent, killed, outcome, cold_search_seconds, rows })
 }
 
+/// One policy's fleet metrics on the pinned trace (`h2 report fleet`).
+#[derive(Clone, Debug)]
+pub struct FleetPolicyRow {
+    /// The queue policy the run used.
+    pub policy: crate::fleet::Policy,
+    /// The fleet metrics the run produced.
+    pub metrics: crate::fleet::FleetMetrics,
+}
+
+/// Run the pinned fleet trace (`JobTrace::pinned`) on `exp_name` under
+/// both policies and return one metrics row each — the FIFO-vs-backfill
+/// comparison behind EXPERIMENTS.md §Fleet. Deterministic for any
+/// `workers` (0 = one per core); `rust/tests/fleet.rs` pins the
+/// relationship the comparison exists to show: priority-with-backfill
+/// beats FIFO on p99 job wait.
+pub fn fleet_metrics(exp_name: &str, workers: usize) -> Result<Vec<FleetPolicyRow>> {
+    use crate::fleet::{fleet_search_config, run, FleetOptions, JobTrace, Policy};
+    let exp = experiment(exp_name)?;
+    let trace = JobTrace::pinned(exp.cluster.total_chips());
+    let mut rows = Vec::new();
+    for policy in [Policy::Fifo, Policy::PriorityBackfill] {
+        let opts = FleetOptions { policy, workers, search: fleet_search_config() };
+        let timeline = run(&exp.cluster, &trace, &opts)?;
+        rows.push(FleetPolicyRow { policy, metrics: timeline.metrics });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
