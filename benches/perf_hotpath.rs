@@ -22,8 +22,8 @@
 //! instead, for regenerating the file on a reference machine.
 
 use h2::auto::{replan, search, search_with_cache, ClusterDelta, ReplanOptions, SearchConfig};
-use h2::comm::collectives::{hierarchical_allreduce, ring_allreduce};
-use h2::comm::{allreduce_cost, fabric, CommAlgo, CommTopology, LinkTime};
+use h2::comm::collectives::{alltoall, hierarchical_allreduce, ring_allreduce};
+use h2::comm::{allreduce_cost, fabric, AllToAllAlgo, CommAlgo, CommTopology, LinkTime};
 use h2::costmodel::{GroupPlan, ProfileCache, Schedule, Strategy, H2_100B};
 use h2::hetero::{experiment, homogeneous_baseline, spec, ChipKind};
 use h2::sim::{reference, SimEngine, SimOptions};
@@ -67,6 +67,7 @@ fn main() {
     ];
     for &(label, ref_label, schedule) in &sim_pairs {
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule,
@@ -195,6 +196,24 @@ fn main() {
         let mut work = bufs.clone();
         let c = hierarchical_allreduce(&mut work, dp_topo.node_group(), &intra_hop, &inter_hop);
         std::hint::black_box(c.seconds);
+    });
+
+    // All-to-all: the exp-moe MoE dispatch payload over an 8-way EP group
+    // on Chip-A servers — TP 8 co-locates 2 replicas per 16-chip node, so
+    // the group spans 4 nodes and the hierarchical two-level exchange has
+    // real structure for Auto to weigh against pairwise. This is the
+    // per-layer hot collective the §4.3.2 MoE term prices twice per
+    // microbatch (dispatch + combine).
+    let ep_topo = CommTopology::dp_group(&spec(ChipKind::A), 8, 8, NicAssignment::Affinity);
+    let ep_intra = |bytes: usize| ep_topo.intra.time(bytes);
+    let ep_inter = |bytes: usize| ep_topo.inter.time(bytes);
+    let moe_bufs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..1_000_000).map(|_| rng.f32()).collect())
+        .collect();
+    b.run("alltoall: exp-moe", || {
+        let (out, c) =
+            alltoall(AllToAllAlgo::Auto, &moe_bufs, ep_topo.ranks_per_node, &ep_intra, &ep_inter);
+        std::hint::black_box((out[0][0], c.seconds));
     });
 
     // Closed-form collective pricing + auto selection (the cost-model and

@@ -15,6 +15,6 @@ pub mod replan;
 pub mod search;
 pub mod sharding;
 
-pub use replan::{replan, ClusterDelta, ReplanOptions, ReplanOutcome};
+pub use replan::{replan, ClusterDelta, ReplanError, ReplanOptions, ReplanOutcome};
 pub use search::{search, search_with_cache, SearchConfig, SearchResult};
 pub use sharding::{shard_layers, GroupShape, Sharding};

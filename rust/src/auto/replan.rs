@@ -28,9 +28,10 @@
 //! delta returns the incumbent bit-identically with its epoch untouched —
 //! re-planning is a no-op unless the cluster actually changed.
 
+use std::fmt;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::costmodel::{evaluate_with_profiles, LayerProfile, ProfileCache, Strategy};
 use crate::hetero::{ChipGroup, ChipKind, Cluster};
@@ -38,6 +39,47 @@ use crate::plan::{ExecutionPlan, PlanBuilder};
 
 use super::search::{run_jobs, search_with_cache, SearchConfig, SearchProgress};
 use super::sharding::{shard_layers, GroupShape};
+
+/// Typed failures of the pipeline-preserving replan path. They travel
+/// inside the `anyhow::Error` that [`replan`] returns — callers that need
+/// to dispatch on the cause (e.g. fall back to `keep_pipeline: false`)
+/// use `err.downcast_ref::<ReplanError>()` instead of string-scraping.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplanError {
+    /// Whole-node rounding of a kind's losses drains the kind entirely —
+    /// nothing of the group would survive, so no replan mode can help.
+    GroupDrained { kind: ChipKind, requested: usize, rounded: usize, available: usize },
+    /// A stage group's survivors (possibly zero) cannot fill its
+    /// `s_pp × s_dp` slice even at TP 1. A pipeline-preserving replan
+    /// cannot drop a stage; re-plan with `keep_pipeline: false`.
+    StageUnfillable { group: usize, kind: ChipKind, survivors: usize, s_pp: usize, s_dp: usize },
+}
+
+impl fmt::Display for ReplanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplanError::GroupDrained { kind, requested, rounded, available } => {
+                write!(
+                    f,
+                    "excluding {requested} {kind} chips drains {rounded} after \
+                     whole-node rounding, but the cluster only has {available} — \
+                     nothing of the group would survive"
+                )
+            }
+            ReplanError::StageUnfillable { group, kind, survivors, s_pp, s_dp } => {
+                write!(
+                    f,
+                    "{survivors} surviving {kind} chips cannot fill stage group \
+                     {group}'s s_pp {s_pp} × s_dp {s_dp} slice even at TP 1; a \
+                     pipeline-preserving replan cannot drop a stage (re-plan \
+                     without keep_pipeline instead)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReplanError {}
 
 /// The cluster difference handed to [`replan`]: chips lost per type.
 /// Losses are rounded **up to whole nodes** — a dead chip drains its node
@@ -140,12 +182,15 @@ pub fn replan(
         let group = incumbent.cluster.group(kind)?;
         let node = group.spec.chips_per_node;
         let r = chips.div_ceil(node) * node;
-        ensure!(
-            r < group.n_chips,
-            "excluding {chips} {kind} chips drains {r} after whole-node rounding, \
-             but the cluster only has {} — nothing of the group would survive",
-            group.n_chips
-        );
+        if r >= group.n_chips {
+            return Err(ReplanError::GroupDrained {
+                kind,
+                requested: chips,
+                rounded: r,
+                available: group.n_chips,
+            }
+            .into());
+        }
         removed.push((kind, r));
     }
 
@@ -195,6 +240,7 @@ fn replan_keep_pipeline(
 ) -> Result<ExecutionPlan> {
     let model = &incumbent.model;
     let s_dp = incumbent.strategy.s_dp;
+    let s_ep = incumbent.strategy.s_ep;
     let schedule = incumbent.strategy.schedule;
     let comm_algo = incumbent.strategy.comm_algo;
     let micro_batches = incumbent.strategy.micro_batches;
@@ -221,13 +267,20 @@ fn replan_keep_pipeline(
             // Shrink-to-fit: the widest power-of-two TP whose full
             // s_pp × s_tp × s_dp slice the survivors cover; the rest idle.
             let cap = (left / slice).min(groups[i].spec.tp_max());
+            // Guard before the power-of-two rounding below: with cap == 0
+            // (a group whose survivors — possibly none at all — cannot
+            // fill the slice even at TP 1) `next_power_of_two() / 2`
+            // yields s_tp = 0 and the zero-width group would limp on into
+            // plan validation. Fail here, typed, instead.
             if cap == 0 {
-                bail!(
-                    "{left} surviving {kind} chips cannot fill stage group {i}'s \
-                     s_pp {s_pp} × s_dp {s_dp} slice even at TP 1; a \
-                     pipeline-preserving replan cannot drop a stage (re-plan \
-                     without keep_pipeline instead)"
-                );
+                return Err(ReplanError::StageUnfillable {
+                    group: i,
+                    kind,
+                    survivors: left,
+                    s_pp,
+                    s_dp,
+                }
+                .into());
             }
             let s_tp = if cap.is_power_of_two() { cap } else { cap.next_power_of_two() / 2 };
             let used = slice * s_tp;
@@ -274,6 +327,7 @@ fn replan_keep_pipeline(
                 s.s_tp,
                 micro_tokens,
                 s_dp,
+                s_ep,
                 comm_algo,
                 incumbent.nic_assignment,
             )
@@ -284,6 +338,7 @@ fn replan_keep_pipeline(
         &groups,
         &shapes,
         s_dp,
+        s_ep,
         micro_batches,
         micro_tokens,
         schedule,
@@ -302,7 +357,7 @@ fn replan_keep_pipeline(
          (re-plan without keep_pipeline)"
     );
     let strategy =
-        Strategy { s_dp, micro_batches, schedule, comm_algo, plans: sharding.plans };
+        Strategy { s_ep, s_dp, micro_batches, schedule, comm_algo, plans: sharding.plans };
     let grefs: Vec<&ChipGroup> = groups.iter().collect();
     let eval = evaluate_with_profiles(model, &grefs, &strategy, micro_tokens, &profiles);
     ensure!(
@@ -326,13 +381,14 @@ fn replan_full(
     let model = &incumbent.model;
     let sequences = incumbent.gbs_tokens / model.seq_len;
     let s_dp = incumbent.strategy.s_dp;
+    let s_ep = incumbent.strategy.s_ep;
     let schedule = incumbent.strategy.schedule;
     let comm_algo = incumbent.strategy.comm_algo;
     let groups: Vec<ChipGroup> =
         reduced.groups_by_memory_desc().into_iter().cloned().collect();
     let dp_fits = sequences % s_dp == 0 && groups.iter().all(|g| g.n_chips % s_dp == 0);
     let best = if dp_fits {
-        let jobs = [(s_dp, schedule, comm_algo)];
+        let jobs = [(s_dp, s_ep, schedule, comm_algo)];
         let progress = SearchProgress::new(false);
         let (_, best) = run_jobs(
             model,
@@ -421,6 +477,9 @@ mod tests {
             intermediate: 8192,
             vocab: 32000,
             seq_len: 4096,
+            n_experts: 0,
+            top_k: 0,
+            expert_intermediate: 0,
         }
     }
 
@@ -431,6 +490,7 @@ mod tests {
             .model(tiny_model())
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 8,
                 schedule,
@@ -519,6 +579,7 @@ mod tests {
             .model(tiny_model())
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 8,
                 schedule: Schedule::OneF1B,
@@ -572,7 +633,84 @@ mod tests {
             &ReplanOptions::default(),
         )
         .unwrap_err();
-        assert!(err.to_string().contains("survive"), "{err}");
+        assert_eq!(
+            err.downcast_ref::<ReplanError>(),
+            Some(&ReplanError::GroupDrained {
+                kind: ChipKind::B,
+                requested: 16,
+                rounded: 16,
+                available: 16,
+            }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn killing_every_chip_of_one_stage_group_is_a_typed_error_not_tp_zero() {
+        // Regression: a chip kind split over two stage groups, with the
+        // whole loss landing on the last one. Its survivor count is zero,
+        // so the TP shrink-to-fit cap is 0 — without the guard,
+        // `cap.next_power_of_two() / 2` underflows to s_tp = 0 and a
+        // zero-chip group limps on into plan validation. The replan must
+        // instead fail with a typed `StageUnfillable` naming that group.
+        let cluster =
+            Cluster::new("split-b", vec![(ChipKind::A, 16), (ChipKind::B, 16)]);
+        let groups = vec![
+            ChipGroup::new(ChipKind::A, 16),
+            ChipGroup::new(ChipKind::B, 8),
+            ChipGroup::new(ChipKind::B, 8),
+        ];
+        let plan = PlanBuilder::new("split-b")
+            .model(tiny_model())
+            .cluster(cluster)
+            .stage_groups(groups)
+            .strategy(Strategy {
+                s_ep: 1,
+                s_dp: 4,
+                micro_batches: 8,
+                schedule: Schedule::OneF1B,
+                comm_algo: CommAlgo::Ring,
+                plans: vec![
+                    GroupPlan { s_pp: 1, s_tp: 4, layers: 4, recompute: false },
+                    GroupPlan { s_pp: 1, s_tp: 2, layers: 2, recompute: true },
+                    GroupPlan { s_pp: 1, s_tp: 2, layers: 2, recompute: true },
+                ],
+            })
+            .gbs_tokens(4 * 8 * 4096)
+            .build()
+            .unwrap();
+        let cache = ProfileCache::new();
+        // Eight dead B chips survive the kind-level check (16 - 8 > 0) but
+        // drain the *last* B stage group completely.
+        let err = replan(
+            &plan,
+            &ClusterDelta::exclude(ChipKind::B, 8),
+            &cache,
+            &ReplanOptions::default(),
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ReplanError>(),
+            Some(&ReplanError::StageUnfillable {
+                group: 2,
+                kind: ChipKind::B,
+                survivors: 0,
+                s_pp: 1,
+                s_dp: 4,
+            }),
+            "{err}"
+        );
+        // The full mode still re-plans the same loss successfully.
+        let opts = ReplanOptions { keep_pipeline: false, ..Default::default() };
+        let out = replan(
+            &plan,
+            &ClusterDelta::exclude(ChipKind::B, 8),
+            &cache,
+            &opts,
+        )
+        .unwrap();
+        assert!(out.plan.validate().is_ok());
+        assert_eq!(out.plan.cluster.total_chips(), 24);
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! Step 1 — depth-first search over the parallelism space: data-parallel
 //! candidates dividing the global batch; per chip type, tensor-parallel
 //! degrees in powers of two up to `TP_MAX_i`; pipeline degree from
-//! `N_i = s_pp,i · s_tp,i · s_dp`; and the pipeline [`Schedule`] plus the
-//! DP-collective [`CommAlgo`] as extra search dimensions. Types are
-//! visited in descending memory order (the HeteroPP stage order).
+//! `N_i = s_pp,i · s_tp,i · s_dp`; for MoE models an expert-parallel
+//! degree dividing both `s_dp` and the expert count; and the pipeline
+//! [`Schedule`] plus the DP-collective [`CommAlgo`] as extra search
+//! dimensions. Types are visited in descending memory order (the HeteroPP
+//! stage order).
 //!
 //! Step 2 — optimal layer sharding per configuration (see [`super::sharding`]).
 //!
@@ -74,6 +76,10 @@ pub struct SearchConfig {
     pub two_stage: bool,
     /// Cap on candidate data-parallel degrees (0 = no cap).
     pub max_dp: usize,
+    /// Cap on candidate expert-parallel degrees (0 = no cap; the axis is
+    /// model-driven — dense models only ever search `s_ep = 1`). Pin to 1
+    /// to measure what the EP axis buys on an MoE model.
+    pub max_ep: usize,
     /// Run the outer (s_dp × schedule) loop on worker threads. The result
     /// is bit-identical to the sequential path either way.
     pub parallel: bool,
@@ -93,6 +99,7 @@ impl Default for SearchConfig {
             group_split: 128,
             two_stage: true,
             max_dp: 0,
+            max_ep: 0,
             parallel: true,
             progress: false,
         }
@@ -195,6 +202,21 @@ fn tp_candidates(n_chips: usize, tp_max: usize) -> Vec<usize> {
         tp *= 2;
     }
     v
+}
+
+/// Expert-parallel candidates at a fixed s_dp: divisors of the expert
+/// count that also divide the data-parallel degree (EP groups are carved
+/// out of the DP replicas and the expert bank must shard evenly). Dense
+/// models search only the degenerate `s_ep = 1`.
+fn ep_candidates(model: &ModelShape, s_dp: usize, max_ep: usize) -> Vec<usize> {
+    if !model.is_moe() {
+        return vec![1];
+    }
+    (1..=model.n_experts)
+        .filter(|&ep| {
+            (max_ep == 0 || ep <= max_ep) && model.n_experts % ep == 0 && s_dp % ep == 0
+        })
+        .collect()
 }
 
 /// Divisors of `sequences` usable as s_dp (every group must split evenly).
@@ -425,6 +447,7 @@ struct DfsCtx<'a> {
     /// node, charged to [`SearchStats::pruned`] on a subtree cut.
     leaf_suffix: &'a [usize],
     s_dp: usize,
+    s_ep: usize,
     micro_batches: usize,
     micro_tokens: usize,
     schedule: Schedule,
@@ -502,12 +525,12 @@ impl<'a> DfsCtx<'a> {
             for (g, shape) in groups.iter().zip(shapes.iter()) {
                 let p = self.cache.profile(
                     &g.spec, self.model, shape.s_tp, self.micro_tokens, self.s_dp,
-                    self.comm_algo, NicAssignment::Affinity,
+                    self.s_ep, self.comm_algo, NicAssignment::Affinity,
                 );
                 self.profiles.push(p);
             }
             let sharding = shard_layers(
-                self.model, groups, shapes, self.s_dp,
+                self.model, groups, shapes, self.s_dp, self.s_ep,
                 self.micro_batches, self.micro_tokens, self.schedule, self.comm_algo,
                 &self.profiles,
             );
@@ -521,6 +544,7 @@ impl<'a> DfsCtx<'a> {
                 return;
             }
             let strategy = Strategy {
+                s_ep: self.s_ep,
                 s_dp: self.s_dp,
                 micro_batches: self.micro_batches,
                 schedule: self.schedule,
@@ -564,9 +588,9 @@ impl<'a> DfsCtx<'a> {
     }
 }
 
-/// One outer-loop candidate: a data-parallel degree, a schedule and a
-/// DP-collective algorithm.
-pub(crate) type Job = (usize, Schedule, CommAlgo);
+/// One outer-loop candidate: a data-parallel degree, an expert-parallel
+/// degree, a schedule and a DP-collective algorithm.
+pub(crate) type Job = (usize, usize, Schedule, CommAlgo);
 
 /// One unit of work on the shared queue: a whole job, or (for large jobs)
 /// one top-level DFS branch of it.
@@ -583,12 +607,15 @@ struct Task {
 /// (cost, strategy, evaluation), if any.
 type JobOutcome = (SearchStats, Option<(f64, Strategy, Evaluation)>);
 
-/// Schedule-independent search tables for one s_dp: per-group TP options
-/// plus the optimistic suffix tables behind the branch-and-bound lower
-/// bound — built once per distinct s_dp and shared across that dp's
-/// schedule and comm-algo jobs.
+/// Schedule-independent search tables for one (s_dp, s_ep): per-group TP
+/// options plus the optimistic suffix tables behind the branch-and-bound
+/// lower bound — built once per distinct (s_dp, s_ep) and shared across
+/// that pair's schedule and comm-algo jobs. (For MoE models t_fwd/t_bwd
+/// carry the EP-dependent all-to-all and hot-rank terms, so the tables
+/// cannot be shared across expert-parallel degrees.)
 struct DpTable {
     s_dp: usize,
+    s_ep: usize,
     options: Vec<Vec<TpOption>>,
     ratio_suffix: Vec<f64>,
     sppt_suffix: Vec<f64>,
@@ -600,6 +627,7 @@ fn dp_table(
     model: &ModelShape,
     groups: &[ChipGroup],
     s_dp: usize,
+    s_ep: usize,
     cache: &ProfileCache,
 ) -> DpTable {
     let micro_tokens = model.seq_len; // paper: micro batch size pinned to 1
@@ -612,7 +640,7 @@ fn dp_table(
                 .map(|tp| {
                     // t_fwd/t_bwd are collective-independent, so one
                     // flat-ring profile prices every job's packing ratio.
-                    let p = cache.profile(&g.spec, model, tp, micro_tokens, s_dp,
+                    let p = cache.profile(&g.spec, model, tp, micro_tokens, s_dp, s_ep,
                                           CommAlgo::Ring, NicAssignment::Affinity);
                     TpOption {
                         s_tp: tp,
@@ -646,7 +674,7 @@ fn dp_table(
         max_t_suffix[idx] = max_t_suffix[idx + 1].max(max_t);
         leaf_suffix[idx] = leaf_suffix[idx + 1].saturating_mul(options[idx].len());
     }
-    DpTable { s_dp, options, ratio_suffix, sppt_suffix, max_t_suffix, leaf_suffix }
+    DpTable { s_dp, s_ep, options, ratio_suffix, sppt_suffix, max_t_suffix, leaf_suffix }
 }
 
 /// Admissible floor on any completion's per-layer update term for one job:
@@ -655,11 +683,13 @@ fn dp_table(
 /// the job's collective algorithm), so the min over every group option is
 /// a true floor. Also pre-warms the cache with every (option, comm-algo)
 /// shape the job's leaves will request.
+#[allow(clippy::too_many_arguments)]
 fn update_floor(
     model: &ModelShape,
     groups: &[ChipGroup],
     table: &DpTable,
     s_dp: usize,
+    s_ep: usize,
     comm_algo: CommAlgo,
     cache: &ProfileCache,
 ) -> f64 {
@@ -667,8 +697,8 @@ fn update_floor(
     let mut floor = f64::INFINITY;
     for (g, opts) in groups.iter().zip(&table.options) {
         for opt in opts {
-            let p = cache.profile(&g.spec, model, opt.s_tp, micro_tokens, s_dp, comm_algo,
-                                  NicAssignment::Affinity);
+            let p = cache.profile(&g.spec, model, opt.s_tp, micro_tokens, s_dp, s_ep,
+                                  comm_algo, NicAssignment::Affinity);
             floor = floor.min(p.t_update);
         }
     }
@@ -690,8 +720,9 @@ fn run_one_task(
     cache: &ProfileCache,
     progress: &SearchProgress,
 ) -> JobOutcome {
-    let (s_dp, schedule, comm_algo) = job;
+    let (s_dp, s_ep, schedule, comm_algo) = job;
     debug_assert_eq!(s_dp, table.s_dp);
+    debug_assert_eq!(s_ep, table.s_ep);
     let mut ctx = DfsCtx {
         model,
         groups,
@@ -701,6 +732,7 @@ fn run_one_task(
         max_t_suffix: &table.max_t_suffix,
         leaf_suffix: &table.leaf_suffix,
         s_dp,
+        s_ep,
         micro_batches: sequences / s_dp,
         micro_tokens: model.seq_len,
         schedule,
@@ -766,25 +798,33 @@ pub(crate) fn run_jobs(
     progress: &SearchProgress,
 ) -> (SearchStats, Option<(f64, Strategy, Evaluation)>) {
     let incumbent = Incumbent::new(seed_incumbent);
-    // The TP-option tables are schedule-independent: one per distinct dp,
-    // shared by every schedule/comm-algo job at that dp.
+    // The TP-option tables are schedule-independent: one per distinct
+    // (dp, ep) pair, shared by every schedule/comm-algo job at that pair.
     let mut tables: Vec<DpTable> = Vec::new();
-    for &(dp, _, _) in jobs {
-        if !tables.iter().any(|t| t.s_dp == dp) {
-            tables.push(dp_table(model, groups, dp, cache));
+    for &(dp, ep, _, _) in jobs {
+        if !tables.iter().any(|t| t.s_dp == dp && t.s_ep == ep) {
+            tables.push(dp_table(model, groups, dp, ep, cache));
         }
     }
-    fn table_for(tables: &[DpTable], dp: usize) -> &DpTable {
-        tables.iter().find(|t| t.s_dp == dp).expect("table built for every job dp")
+    fn table_for(tables: &[DpTable], dp: usize, ep: usize) -> &DpTable {
+        tables
+            .iter()
+            .find(|t| t.s_dp == dp && t.s_ep == ep)
+            .expect("table built for every job (dp, ep)")
     }
     // Per-job admissible update floors (also pre-warm the profile cache).
-    // The floor depends only on (dp, comm algo) — dedup across schedules
-    // exactly like the dp tables above.
+    // The floor depends only on (dp, ep, comm algo) — dedup across
+    // schedules exactly like the dp tables above.
     let mut floors: Vec<f64> = Vec::with_capacity(jobs.len());
-    for (i, &(dp, _, algo)) in jobs.iter().enumerate() {
-        let f = match jobs[..i].iter().position(|&(d, _, a)| d == dp && a == algo) {
+    for (i, &(dp, ep, _, algo)) in jobs.iter().enumerate() {
+        let f = match jobs[..i]
+            .iter()
+            .position(|&(d, e, _, a)| d == dp && e == ep && a == algo)
+        {
             Some(j) => floors[j],
-            None => update_floor(model, groups, table_for(&tables, dp), dp, algo, cache),
+            None => {
+                update_floor(model, groups, table_for(&tables, dp, ep), dp, ep, algo, cache)
+            }
         };
         floors.push(f);
     }
@@ -792,8 +832,8 @@ pub(crate) fn run_jobs(
     // The shared work queue, in deterministic order: jobs as configured,
     // large jobs fanned into one task per top-level DFS branch.
     let mut tasks: Vec<Task> = Vec::new();
-    for (j, &(dp, _, _)) in jobs.iter().enumerate() {
-        let table = table_for(&tables, dp);
+    for (j, &(dp, ep, _, _)) in jobs.iter().enumerate() {
+        let table = table_for(&tables, dp, ep);
         let roots = table.options.first().map(|o| o.len()).unwrap_or(0);
         if groups.len() > 1 && roots > 1 && table.leaf_suffix[0] >= SPLIT_MIN_LEAVES {
             for r in 0..roots {
@@ -947,9 +987,11 @@ pub fn search_with_cache(
     }
     let mut jobs: Vec<Job> = Vec::new();
     for &dp in &dp_choices {
-        for &schedule in &cfg.schedules {
-            for &algo in &cfg.comm_algos {
-                jobs.push((dp, schedule, algo));
+        for ep in ep_candidates(model, dp, cfg.max_ep) {
+            for &schedule in &cfg.schedules {
+                for &algo in &cfg.comm_algos {
+                    jobs.push((dp, ep, schedule, algo));
+                }
             }
         }
     }
@@ -991,7 +1033,7 @@ pub fn search_with_cache(
     let mut fine_jobs: Vec<Job> = Vec::new();
     for &schedule in &cfg.schedules {
         for &algo in &cfg.comm_algos {
-            fine_jobs.push((coarse.1.s_dp, schedule, algo));
+            fine_jobs.push((coarse.1.s_dp, coarse.1.s_ep, schedule, algo));
         }
     }
     let fine_groups = split_groups(&groups, cfg.group_split);
@@ -1037,6 +1079,20 @@ mod tests {
     fn tp_candidates_respect_max() {
         assert_eq!(tp_candidates(256, 4), vec![1, 2, 4]);
         assert_eq!(tp_candidates(256, 16), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn ep_candidates_follow_experts_and_dp() {
+        use crate::costmodel::H2_MOE;
+        // Dense models have no expert axis.
+        assert_eq!(ep_candidates(&H2_100B, 8, 0), vec![1]);
+        // MoE: every ep dividing both n_experts and s_dp.
+        assert_eq!(ep_candidates(&H2_MOE, 8, 0), vec![1, 2, 4, 8]);
+        assert_eq!(ep_candidates(&H2_MOE, 6, 0), vec![1, 2]);
+        assert_eq!(ep_candidates(&H2_MOE, 1, 0), vec![1]);
+        // The cap pins the axis (what `SearchConfig::max_ep = 1` lowers to).
+        assert_eq!(ep_candidates(&H2_MOE, 8, 1), vec![1]);
+        assert_eq!(ep_candidates(&H2_MOE, 8, 4), vec![1, 2, 4]);
     }
 
     #[test]
@@ -1244,12 +1300,12 @@ mod tests {
         let cache = ProfileCache::new();
         let mut checked = 0usize;
         for &s_dp in &[2usize, 8] {
-            let table = dp_table(&H2_100B, &groups, s_dp, &cache);
+            let table = dp_table(&H2_100B, &groups, s_dp, 1, &cache);
             let counts: Vec<usize> = table.options.iter().map(|o| o.len()).collect();
             assert!(counts.iter().all(|&c| c > 0));
             for schedule in Schedule::SEARCH_SPACE {
                 let comm_algo = CommAlgo::Auto;
-                let floor = update_floor(&H2_100B, &groups, &table, s_dp, comm_algo, &cache);
+                let floor = update_floor(&H2_100B, &groups, &table, s_dp, 1, comm_algo, &cache);
                 assert!(floor.is_finite() && floor > 0.0);
                 // Odometer over every option combination.
                 let mut idxs = vec![0usize; counts.len()];
@@ -1278,15 +1334,16 @@ mod tests {
                         .zip(&shapes)
                         .map(|(g, s)| {
                             cache.profile(&g.spec, &H2_100B, s.s_tp, H2_100B.seq_len,
-                                          s_dp, comm_algo, NicAssignment::Affinity)
+                                          s_dp, 1, comm_algo, NicAssignment::Affinity)
                         })
                         .collect();
                     let sharding = shard_layers(
-                        &H2_100B, &groups, &shapes, s_dp, micro_batches, H2_100B.seq_len,
+                        &H2_100B, &groups, &shapes, s_dp, 1, micro_batches, H2_100B.seq_len,
                         schedule, comm_algo, &profiles,
                     );
                     if sharding.feasible {
                         let strategy = Strategy {
+                            s_ep: 1,
                             s_dp,
                             micro_batches,
                             schedule,
@@ -1372,7 +1429,7 @@ mod tests {
         let cache = ProfileCache::new();
         let mut total = 0usize;
         for dp in dp_candidates(sequences, &groups, cfg.max_dp) {
-            let table = dp_table(&H2_100B, &groups, dp, &cache);
+            let table = dp_table(&H2_100B, &groups, dp, 1, &cache);
             total += table.leaf_suffix[0] * cfg.schedules.len() * cfg.comm_algos.len();
         }
         assert_eq!(r1.candidates_explored + r1.leaves_pruned, total,

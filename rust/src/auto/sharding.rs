@@ -88,7 +88,7 @@ impl StageTimes {
     }
 }
 
-/// Compute the layer allocation for fixed (s_dp, shapes) under `schedule`
+/// Compute the layer allocation for fixed (s_dp, s_ep, shapes) under `schedule`
 /// (whose bubble coefficient and activation residency shape both the cost
 /// evaluation and the memory-repair loop) and `comm_algo` (which prices
 /// the DP-sync term of the evaluations). `profiles` carries one
@@ -100,6 +100,7 @@ pub fn shard_layers(
     groups: &[ChipGroup],
     shapes: &[GroupShape],
     s_dp: usize,
+    s_ep: usize,
     micro_batches: usize,
     micro_tokens: usize,
     schedule: Schedule,
@@ -202,7 +203,8 @@ pub fn shard_layers(
 
     let grefs: Vec<&ChipGroup> = groups.iter().collect();
     for _round in 0..8 {
-        let strategy = Strategy { s_dp, micro_batches, schedule, comm_algo, plans: plans.clone() };
+        let strategy =
+            Strategy { s_ep, s_dp, micro_batches, schedule, comm_algo, plans: plans.clone() };
         let eval = evaluate_with_profiles(model, &grefs, &strategy, micro_tokens, profiles);
         if eval.feasible {
             return Sharding { plans, feasible: true };
@@ -283,7 +285,7 @@ mod tests {
             .iter()
             .zip(shapes)
             .map(|(g, s)| {
-                profile_layer_comm(&g.spec, &H2_100B, s.s_tp, 4096, s_dp, comm_algo,
+                profile_layer_comm(&g.spec, &H2_100B, s.s_tp, 4096, s_dp, 1, comm_algo,
                                    NicAssignment::Affinity)
             })
             .collect()
@@ -296,7 +298,7 @@ mod tests {
         micro_batches: usize,
     ) -> Sharding {
         let profiles = profiles_for(groups, shapes, s_dp, CommAlgo::Ring);
-        shard_layers(&H2_100B, groups, shapes, s_dp, micro_batches, 4096,
+        shard_layers(&H2_100B, groups, shapes, s_dp, 1, micro_batches, 4096,
                      Schedule::OneF1B, CommAlgo::Ring, &profiles)
     }
 
@@ -405,7 +407,7 @@ mod tests {
             let profiles = profiles_for(&groups, &shapes, s_dp, CommAlgo::Ring);
             let t_layer: Vec<f64> = profiles.iter().map(|p| p.t_fwd + p.t_bwd).collect();
             let expect = reference_lps(&shapes, &t_layer, H2_100B.n_layers);
-            let got = shard_layers(&H2_100B, &groups, &shapes, s_dp, 64, 4096,
+            let got = shard_layers(&H2_100B, &groups, &shapes, s_dp, 1, 64, 4096,
                                    Schedule::OneF1B, CommAlgo::Ring, &profiles);
             // Compare through the pre-repair allocation: layers = lps·s_pp.
             // Memory repair only runs when the totals match, and both paths

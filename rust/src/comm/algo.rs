@@ -25,7 +25,7 @@ use std::fmt;
 use crate::hetero::ChipSpec;
 use crate::topology::{co_located_replicas, whole_node_group, NicAssignment};
 
-use super::collectives::{CollectiveCost, HopTime};
+use super::collectives::{CollectiveCost, HopTime, F32};
 use super::model::{base_latency, cross_node_bandwidth, CommMode, INTRA_NODE_LATENCY};
 
 /// Collective algorithm run by a communication group (the DP gradient
@@ -315,14 +315,18 @@ fn rhd_cost(bytes: usize, n: usize, link: LinkTime) -> CollectiveCost {
         wire += 2 * extras * bytes;
     }
     // Worst-rank block sizes per halving step (the upper half keeps the
-    // ceil on odd splits, exactly as the executable splits blocks). Fixed
+    // ceil on odd splits, exactly as the executable splits blocks). The
+    // executable halves at *element* granularity — `mid = l + (h−l)/2`
+    // over f32 slices — so the chain must walk element counts, not bytes:
+    // a byte-level ceil rounds to 2 B where the wire really carries a
+    // whole 4 B element, drifting on any odd-element block. Fixed
     // buffer: this runs in the search's leaf evaluation (no allocations).
     let mut sizes = [0usize; 64];
     let steps = p.trailing_zeros() as usize;
-    let mut block = bytes;
+    let mut block = bytes.div_ceil(F32);
     for s in sizes.iter_mut().take(steps) {
         let upper = block - block / 2;
-        *s = upper;
+        *s = upper * F32;
         block = upper;
     }
     for &s in sizes.iter().take(steps) {
@@ -333,6 +337,117 @@ fn rhd_cost(bytes: usize, n: usize, link: LinkTime) -> CollectiveCost {
     }
     wire += 2 * (p - 1) * bytes;
     CollectiveCost { seconds, wire_bytes: wire }
+}
+
+/// All-to-all algorithm run by an expert-parallel group (the MoE token
+/// dispatch/combine axis): every rank holds one equal partition per peer
+/// and ends with the partitions addressed to it. Serialized nowhere —
+/// resolved per collective like [`CommAlgo::Auto`]; the cost model prices
+/// MoE layers with [`AllToAllAlgo::Auto`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum AllToAllAlgo {
+    /// Pairwise exchange: `n−1` steps, step `s` sending rank `r`'s
+    /// partition to rank `(r+s) mod n` — works for any group size, every
+    /// hop pays the flat (slowest-spanned) link.
+    #[default]
+    Pairwise,
+    /// Two-level (HetCCL-style): an intra-node all-to-all regroups
+    /// partitions by destination *local index* (`k−1` steps of `m`
+    /// partitions each on the fast fabric), then the `k` per-row
+    /// inter-node all-to-alls run concurrently over distinct NIC flows
+    /// (`m−1` steps of `k` partitions each).
+    Hierarchical,
+    /// Resolve per collective to the concrete variant with the lowest
+    /// closed-form cost for the payload and topology at hand.
+    Auto,
+}
+
+impl AllToAllAlgo {
+    /// The two concrete (executable) variants, in the deterministic order
+    /// [`AllToAllAlgo::resolve`] breaks cost ties by.
+    pub const CONCRETE: [AllToAllAlgo; 2] = [AllToAllAlgo::Pairwise, AllToAllAlgo::Hierarchical];
+
+    /// Human-readable variant name.
+    pub fn name(self) -> &'static str {
+        match self {
+            AllToAllAlgo::Pairwise => "pairwise exchange",
+            AllToAllAlgo::Hierarchical => "hierarchical (two-level)",
+            AllToAllAlgo::Auto => "auto (topology-selected)",
+        }
+    }
+
+    /// Resolve [`AllToAllAlgo::Auto`] to the concrete variant with the
+    /// lowest closed-form cost for this payload and topology (ties broken
+    /// in [`AllToAllAlgo::CONCRETE`] order). Concrete variants return
+    /// themselves.
+    pub fn resolve(self, bytes: usize, topo: &CommTopology) -> AllToAllAlgo {
+        if self != AllToAllAlgo::Auto {
+            return self;
+        }
+        let mut best = AllToAllAlgo::Pairwise;
+        let mut best_seconds = f64::INFINITY;
+        for algo in AllToAllAlgo::CONCRETE {
+            let t = alltoall_cost(algo, bytes, topo).seconds;
+            if t < best_seconds {
+                best = algo;
+                best_seconds = t;
+            }
+        }
+        best
+    }
+}
+
+impl fmt::Display for AllToAllAlgo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Closed-form cost of one all-to-all under `algo` on `topo`, where
+/// `bytes` is ONE rank's whole send buffer (its `n` partitions together,
+/// self-partition included — that one never hits the wire). The planning
+/// twin of [`super::collectives::alltoall`], walking the same hop
+/// sequence: seconds are bit-exact whenever the payload splits evenly
+/// over the group, wire bytes are exact for every shape (parity-tested).
+pub fn alltoall_cost(algo: AllToAllAlgo, bytes: usize, topo: &CommTopology) -> CollectiveCost {
+    let n = topo.n_ranks;
+    if n <= 1 || bytes == 0 {
+        return CollectiveCost::default();
+    }
+    let k = topo.node_group();
+    let m = n / k;
+    let flat = if m > 1 { topo.inter } else { topo.intra };
+    // Partition granularity is elements, like the executable: the first
+    // partition always carries the ceil share, so each step's critical
+    // hop moves exactly `chunk` elements.
+    let elems = bytes.div_ceil(F32);
+    let chunk = elems.div_ceil(n);
+    match algo {
+        AllToAllAlgo::Pairwise => CollectiveCost {
+            seconds: (n - 1) as f64 * flat.time(chunk * F32),
+            // Every rank wires out all partitions but its own.
+            wire_bytes: (n - 1) * bytes,
+        },
+        AllToAllAlgo::Hierarchical => {
+            if m == 1 || k == 1 {
+                return alltoall_cost(AllToAllAlgo::Pairwise, bytes, topo);
+            }
+            // Phase 1 — intra-node regroup by destination local index:
+            // k−1 steps, the critical message bundling m partitions.
+            let intra_steps = (k - 1) as f64 * topo.intra.time(m * chunk * F32);
+            // Phase 2 — per-row inter-node exchange, k rows concurrent:
+            // m−1 steps, the critical message bundling k partitions.
+            let inter_steps = (m - 1) as f64 * topo.inter.time(k * chunk * F32);
+            CollectiveCost {
+                seconds: intra_steps + inter_steps,
+                // Each node's k ranks wire the payload k−1 times locally;
+                // each row's m ranks wire their k-bundled payload m−1
+                // times across nodes.
+                wire_bytes: (k - 1) * m * bytes + (m - 1) * k * bytes,
+            }
+        }
+        AllToAllAlgo::Auto => alltoall_cost(algo.resolve(bytes, topo), bytes, topo),
+    }
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@
 
 use crate::topology::whole_node_group;
 
-use super::algo::{CommAlgo, LinkTime};
+use super::algo::{AllToAllAlgo, CommAlgo, LinkTime};
 
 /// Per-hop wire time for a message of `bytes` between ring neighbours.
 pub type HopTime<'a> = &'a dyn Fn(usize) -> f64;
@@ -27,7 +27,7 @@ pub struct CollectiveCost {
     pub wire_bytes: usize,
 }
 
-const F32: usize = 4;
+pub(crate) const F32: usize = 4;
 
 /// Ring allreduce (sum): 2·(N−1) chunk steps, exactly the classic schedule.
 /// Buffers are modified in place; every rank ends with the elementwise sum.
@@ -457,6 +457,167 @@ pub fn send_recv(src: &[f32], dst: &mut Vec<f32>, hop: HopTime) -> CollectiveCos
     CollectiveCost { seconds: hop(src.len() * F32), wire_bytes: src.len() * F32 }
 }
 
+/// Partition bounds of one rank's `len`-element all-to-all send buffer:
+/// partition `d` (destined to rank `d`) is `[d·chunk, (d+1)·chunk) ∩
+/// [0, len)` with `chunk = ⌈len/n⌉` — the ring-collective split, trailing
+/// partitions absorb the shortfall.
+fn a2a_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let chunk = len.div_ceil(n);
+    (0..n).map(|d| ((d * chunk).min(len), ((d + 1) * chunk).min(len))).collect()
+}
+
+/// The all-to-all result: rank `d` receives every source's partition `d`,
+/// source-major — the fixed output layout both variants must produce.
+fn a2a_output(bufs: &[Vec<f32>], bounds: &[(usize, usize)]) -> Vec<Vec<f32>> {
+    bounds
+        .iter()
+        .map(|&(lo, hi)| {
+            let mut out = Vec::with_capacity((hi - lo) * bufs.len());
+            for src in bufs {
+                out.extend_from_slice(&src[lo..hi]);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Pairwise-exchange all-to-all: `n−1` steps, step `s` wiring rank `r`'s
+/// partition `(r+s) mod n` to that rank — the `n` transfers of one step
+/// run concurrently, so each step costs its largest in-flight partition.
+/// Works for any group size. Returns (received, cost).
+pub fn pairwise_alltoall(bufs: &[Vec<f32>], hop: HopTime) -> (Vec<Vec<f32>>, CollectiveCost) {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    let bounds = a2a_bounds(len, n);
+    let out = a2a_output(bufs, &bounds);
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    for s in 1..n {
+        let mut max_hop = 0.0f64;
+        for r in 0..n {
+            let (lo, hi) = bounds[(r + s) % n];
+            if lo >= hi {
+                continue;
+            }
+            max_hop = max_hop.max(hop((hi - lo) * F32));
+            wire += (hi - lo) * F32;
+        }
+        seconds += max_hop;
+    }
+    (out, CollectiveCost { seconds, wire_bytes: wire })
+}
+
+/// Two-level hierarchical all-to-all (node-major ranks, `rank = node·k + j`
+/// with `k = ranks_per_node` dividing the rank count): an intra-node
+/// all-to-all regroups each rank's partitions by destination *local
+/// index* (`k−1` steps, each message bundling the `m` partitions bound
+/// for one row), then the `k` per-row inter-node all-to-alls run
+/// concurrently over distinct NIC flows (`m−1` steps of `k`-partition
+/// bundles) and land every partition at its destination — no third phase.
+pub fn hierarchical_alltoall(
+    bufs: &[Vec<f32>],
+    ranks_per_node: usize,
+    intra_hop: HopTime,
+    inter_hop: HopTime,
+) -> (Vec<Vec<f32>>, CollectiveCost) {
+    let n = bufs.len();
+    assert!(n > 0);
+    let k = ranks_per_node.clamp(1, n);
+    assert_eq!(n % k, 0, "ranks ({n}) must fill whole nodes of {k}");
+    let m = n / k;
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffer lengths differ");
+    // Degenerate shapes collapse to pairwise on the only link in play.
+    if m == 1 {
+        return pairwise_alltoall(bufs, intra_hop);
+    }
+    if k == 1 {
+        return pairwise_alltoall(bufs, inter_hop);
+    }
+    let bounds = a2a_bounds(len, n);
+    let out = a2a_output(bufs, &bounds);
+    // Row j's share of one send buffer: the m partitions destined to
+    // local index j, one per node.
+    let row = |j: usize| -> usize {
+        (0..m).map(|node| bounds[node * k + j]).map(|(lo, hi)| hi - lo).sum()
+    };
+    let mut seconds = 0.0;
+    let mut wire = 0usize;
+    // Phase 1 — intra-node regroup: step s, local rank i bundles row
+    // (i+s) mod k to that local rank; all nodes and pairs concurrent
+    // (the pair pattern repeats identically on every node).
+    for s in 1..k {
+        let mut max_hop = 0.0f64;
+        for i in 0..k {
+            let r = row((i + s) % k);
+            if r == 0 {
+                continue;
+            }
+            max_hop = max_hop.max(intra_hop(r * F32));
+            wire += m * r * F32;
+        }
+        seconds += max_hop;
+    }
+    // Phase 2 — per-row inter-node exchange: row j's m ranks swap their
+    // k-bundled partitions pairwise; the k rows run concurrently, so the
+    // phase costs the slowest row once; wire bytes sum over all of them.
+    let mut phase2 = 0.0f64;
+    for j in 0..k {
+        let mut row_seconds = 0.0;
+        for s in 1..m {
+            let mut max_hop = 0.0f64;
+            for t in 0..m {
+                let (lo, hi) = bounds[((t + s) % m) * k + j];
+                if lo >= hi {
+                    continue;
+                }
+                max_hop = max_hop.max(inter_hop(k * (hi - lo) * F32));
+                wire += k * (hi - lo) * F32;
+            }
+            row_seconds += max_hop;
+        }
+        phase2 = phase2.max(row_seconds);
+    }
+    seconds += phase2;
+    (out, CollectiveCost { seconds, wire_bytes: wire })
+}
+
+/// Execute an all-to-all under `algo`. `ranks_per_node` describes the
+/// group layout exactly as for [`allreduce`]; [`AllToAllAlgo::Auto`]
+/// resolves against the closed-form costs by probing the two hop
+/// functions (exact for affine hops).
+pub fn alltoall(
+    algo: AllToAllAlgo,
+    bufs: &[Vec<f32>],
+    ranks_per_node: usize,
+    intra_hop: HopTime,
+    inter_hop: HopTime,
+) -> (Vec<Vec<f32>>, CollectiveCost) {
+    let n = bufs.len();
+    assert!(n > 0);
+    let k = whole_node_group(n, ranks_per_node);
+    let algo = match algo {
+        AllToAllAlgo::Auto => {
+            let topo = super::algo::CommTopology {
+                n_ranks: n,
+                ranks_per_node: k,
+                intra: LinkTime::probe(intra_hop),
+                inter: LinkTime::probe(inter_hop),
+            };
+            algo.resolve(bufs[0].len() * F32, &topo)
+        }
+        concrete => concrete,
+    };
+    let flat: HopTime = if n > k { inter_hop } else { intra_hop };
+    match algo {
+        AllToAllAlgo::Pairwise => pairwise_alltoall(bufs, flat),
+        AllToAllAlgo::Hierarchical => hierarchical_alltoall(bufs, k, intra_hop, inter_hop),
+        AllToAllAlgo::Auto => unreachable!("Auto resolved above"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -738,5 +899,205 @@ mod tests {
     fn hierarchical_rejects_partial_nodes() {
         let mut bufs = vec![vec![0.0f32; 4]; 6];
         hierarchical_allreduce(&mut bufs, 4, &unit_hop, &unit_hop);
+    }
+
+    #[test]
+    fn tree_and_rhd_closed_forms_match_on_non_power_of_two_groups() {
+        // Regression: the rhd closed form halved blocks at *byte*
+        // granularity while the executable splits f32 *elements*, so any
+        // odd-element block drifted the modeled seconds. Pin hop-for-hop
+        // parity (seconds AND wire bytes) for tree and rhd on every
+        // non-power-of-two group size with payloads whose halving chain
+        // splits unevenly at every step.
+        use crate::comm::algo::{allreduce_cost, CommTopology, LinkTime};
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        for n in [3usize, 5, 6, 7, 12] {
+            for len in [7usize, 25, 33, 64] {
+                for rpn in [1usize, n] {
+                    let k = whole_node_group(n, rpn);
+                    let topo = CommTopology { n_ranks: n, ranks_per_node: k, intra, inter };
+                    for algo in [CommAlgo::Tree, CommAlgo::RecursiveHalvingDoubling] {
+                        let mut bufs: Vec<Vec<f32>> =
+                            (0..n).map(|r| vec![r as f32; len]).collect();
+                        let run = allreduce(algo, &mut bufs, rpn, &intra_hop, &inter_hop);
+                        let model = allreduce_cost(algo, len * F32, &topo);
+                        assert!(
+                            (run.seconds - model.seconds).abs()
+                                <= 1e-12 * model.seconds.max(1e-12),
+                            "{algo} n={n} len={len} rpn={rpn}: run {} vs model {}",
+                            run.seconds,
+                            model.seconds
+                        );
+                        assert_eq!(
+                            run.wire_bytes, model.wire_bytes,
+                            "{algo} n={n} len={len} rpn={rpn}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // All-to-all: correctness, closed-form parity, auto dispatch.
+
+    /// The reference all-to-all: rank d gets every source's partition d.
+    fn naive_alltoall(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let bounds = a2a_bounds(bufs[0].len(), bufs.len());
+        a2a_output(bufs, &bounds)
+    }
+
+    #[test]
+    fn alltoall_transposes_partitions() {
+        // 3 ranks x 6 elements: partitions of 2; rank d must end with the
+        // three source partitions d, source-major.
+        let bufs: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..6).map(|i| (10 * r + i) as f32).collect())
+            .collect();
+        let (out, cost) = pairwise_alltoall(&bufs, &unit_hop);
+        assert_eq!(out[0], vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        assert_eq!(out[1], vec![2.0, 3.0, 12.0, 13.0, 22.0, 23.0]);
+        assert_eq!(out[2], vec![4.0, 5.0, 14.0, 15.0, 24.0, 25.0]);
+        assert_eq!(cost.seconds, 2.0); // n-1 unit steps
+        assert_eq!(cost.wire_bytes, 2 * 6 * F32); // each rank wires 2 of 3 partitions
+    }
+
+    #[test]
+    fn alltoall_single_rank_is_identity() {
+        let bufs = vec![vec![1.0f32, 2.0, 3.0]];
+        let (out, cost) = pairwise_alltoall(&bufs, &unit_hop);
+        assert_eq!(out, bufs);
+        assert_eq!(cost, CollectiveCost::default());
+    }
+
+    #[test]
+    fn alltoall_closed_forms_match_the_executables() {
+        // Evenly-splitting payloads: seconds match to rounding, wire bytes
+        // exactly — on power-of-two AND non-power-of-two (k, m) layouts.
+        use crate::comm::algo::{alltoall_cost, CommTopology, LinkTime};
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        for (k, m) in [(2usize, 2usize), (4, 2), (2, 4), (8, 2), (3, 3), (3, 4), (5, 2), (1, 7)] {
+            let n = k * m;
+            let len = n * 16;
+            let topo = CommTopology { n_ranks: n, ranks_per_node: k, intra, inter };
+            let bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32 + 1.0; len]).collect();
+            for algo in AllToAllAlgo::CONCRETE {
+                let (out, run) = alltoall(algo, &bufs, k, &intra_hop, &inter_hop);
+                let model = alltoall_cost(algo, len * F32, &topo);
+                assert!(
+                    (run.seconds - model.seconds).abs() <= 1e-12 * model.seconds.max(1e-12),
+                    "{algo} k={k} m={m}: run {} vs model {}",
+                    run.seconds,
+                    model.seconds
+                );
+                assert_eq!(run.wire_bytes, model.wire_bytes, "{algo} k={k} m={m}");
+                assert_eq!(out, naive_alltoall(&bufs), "{algo} k={k} m={m} data");
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_wire_bytes_and_data_match_on_arbitrary_shapes() {
+        // ANY group size, ranks-per-node and payload length: both
+        // variants must land the exact transpose and wire exactly the
+        // closed form's byte count (ragged partitions telescope).
+        use crate::comm::algo::{alltoall_cost, CommTopology, LinkTime};
+        use crate::topology::whole_node_group;
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        prop::check(80, |rng: &mut Rng| {
+            let n = rng.usize(1, 14);
+            let len = rng.usize(1, 97);
+            let rpn = rng.usize(1, n + 1);
+            let k = whole_node_group(n, rpn);
+            let topo = CommTopology { n_ranks: n, ranks_per_node: k, intra, inter };
+            let bufs = integer_bufs(rng, n, len);
+            let expect = naive_alltoall(&bufs);
+            for algo in AllToAllAlgo::CONCRETE {
+                let (out, run) = alltoall(algo, &bufs, rpn, &intra_hop, &inter_hop);
+                let model = alltoall_cost(algo, len * F32, &topo);
+                prop::assert_prop(
+                    run.wire_bytes == model.wire_bytes,
+                    format!(
+                        "{algo} wire {} != closed form {} (n={n}, len={len}, rpn={rpn})",
+                        run.wire_bytes, model.wire_bytes
+                    ),
+                )?;
+                prop::assert_prop(
+                    out == expect,
+                    format!("{algo} data mismatch (n={n}, len={len}, rpn={rpn})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alltoall_pairwise_seconds_match_closed_form_on_any_shape() {
+        // Pairwise's critical hop is always the ceil-share partition, so
+        // its seconds parity holds even on ragged payloads.
+        use crate::comm::algo::{alltoall_cost, AllToAllAlgo, CommTopology, LinkTime};
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let hop = |b: usize| inter.time(b);
+        for n in [2usize, 3, 5, 7, 12] {
+            for len in [5usize, 26, 33, 96] {
+                let topo = CommTopology { n_ranks: n, ranks_per_node: 1, intra: inter, inter };
+                let bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+                let (_, run) = pairwise_alltoall(&bufs, &hop);
+                let model = alltoall_cost(AllToAllAlgo::Pairwise, len * F32, &topo);
+                assert!(
+                    (run.seconds - model.seconds).abs() <= 1e-12 * model.seconds.max(1e-12),
+                    "n={n} len={len}: run {} vs model {}",
+                    run.seconds,
+                    model.seconds
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_alltoall_beats_pairwise_on_fast_intra_fabrics() {
+        // 4 nodes x 8 ranks, intra 20x the NIC flow: bundling partitions
+        // through the fast fabric must win for bandwidth-relevant payloads.
+        let slow = |bytes: usize| 3.0e-6 + bytes as f64 / 10e9;
+        let fast = |bytes: usize| 0.8e-6 + bytes as f64 / 200e9;
+        let bufs: Vec<Vec<f32>> = (0..32).map(|_| vec![1.0f32; 1 << 15]).collect();
+        let (_, pair) = pairwise_alltoall(&bufs, &slow);
+        let (_, hier) = hierarchical_alltoall(&bufs, 8, &fast, &slow);
+        assert!(hier.seconds < pair.seconds, "hier {} !< pair {}", hier.seconds, pair.seconds);
+    }
+
+    #[test]
+    fn alltoall_auto_dispatch_is_the_concrete_minimum() {
+        use crate::comm::algo::{alltoall_cost, CommTopology, LinkTime};
+        let intra = LinkTime { latency: 0.8e-6, bytes_per_sec: 200e9 };
+        let inter = LinkTime { latency: 3.0e-6, bytes_per_sec: 10e9 };
+        let intra_hop = |b: usize| intra.time(b);
+        let inter_hop = |b: usize| inter.time(b);
+        let topo = CommTopology { n_ranks: 16, ranks_per_node: 4, intra, inter };
+        for shift in [4usize, 10, 16, 22] {
+            let len = 1usize << shift;
+            let bufs: Vec<Vec<f32>> = (0..16).map(|_| vec![1.0; len]).collect();
+            let (out, run) = alltoall(AllToAllAlgo::Auto, &bufs, 4, &intra_hop, &inter_hop);
+            let min = AllToAllAlgo::CONCRETE
+                .iter()
+                .map(|&a| alltoall_cost(a, len * F32, &topo).seconds)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                (run.seconds - min).abs() <= 1e-12 * min.max(1e-12),
+                "len {len}: auto {} vs min {}",
+                run.seconds,
+                min
+            );
+            assert_eq!(out, naive_alltoall(&bufs), "len {len}");
+        }
     }
 }

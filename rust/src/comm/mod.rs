@@ -4,8 +4,9 @@
 //!   (CPU-mediated TCP, CPU-mediated RDMA, device-direct RDMA).
 //! * [`algo`] — the collective-algorithm engine: closed-form
 //!   latency/bandwidth costs for ring / tree / recursive halving-doubling
-//!   / hierarchical allreduces over a [`CommTopology`], plus the
-//!   topology-aware [`CommAlgo::Auto`] selector.
+//!   / hierarchical allreduces and pairwise / hierarchical all-to-alls
+//!   (the MoE dispatch/combine axis) over a [`CommTopology`], plus the
+//!   topology-aware [`CommAlgo::Auto`] / [`AllToAllAlgo::Auto`] selectors.
 //! * [`collectives`] — byte-accurate executable collectives (the same
 //!   algorithm library, moving real rank buffers) with critical-path
 //!   timing.
@@ -17,10 +18,11 @@ pub mod collectives;
 pub mod fabric;
 pub mod model;
 
-pub use algo::{allreduce_cost, CommAlgo, CommTopology, LinkTime};
+pub use algo::{allreduce_cost, alltoall_cost, AllToAllAlgo, CommAlgo, CommTopology, LinkTime};
 pub use collectives::{
-    allreduce, hierarchical_allreduce, rhd_allreduce, ring_allgather, ring_allreduce, send_recv,
-    tree_allreduce, tree_broadcast, CollectiveCost,
+    allreduce, alltoall, hierarchical_allreduce, hierarchical_alltoall, pairwise_alltoall,
+    rhd_allreduce, ring_allgather, ring_allreduce, send_recv, tree_allreduce, tree_broadcast,
+    CollectiveCost,
 };
 pub use fabric::{fabric, Endpoint, LatencyFn};
 pub use model::{cross_node_bandwidth, cross_node_time, intra_node_time, p2p_latency, CommMode};

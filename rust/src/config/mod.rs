@@ -217,6 +217,7 @@ fn parse_search(v: &Value) -> Result<SearchConfig> {
             .unwrap_or(d.group_split),
         two_stage: v.opt("two_stage").map(|x| x.bool()).transpose()?.unwrap_or(d.two_stage),
         max_dp: v.opt("max_dp").map(|x| x.usize()).transpose()?.unwrap_or(d.max_dp),
+        max_ep: v.opt("max_ep").map(|x| x.usize()).transpose()?.unwrap_or(d.max_ep),
         parallel: v.opt("parallel").map(|x| x.bool()).transpose()?.unwrap_or(d.parallel),
         progress: v.opt("progress").map(|x| x.bool()).transpose()?.unwrap_or(d.progress),
     })
@@ -615,6 +616,7 @@ mod tests {
         }"#).unwrap();
         let plan = c.plan_builder("from-config").unwrap()
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
@@ -669,6 +671,7 @@ mod tests {
         }"#).unwrap();
         let plan = c.plan_builder("auto-pin").unwrap()
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
@@ -688,6 +691,7 @@ mod tests {
             .plan_builder("with-train")
             .unwrap()
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,

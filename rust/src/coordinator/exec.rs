@@ -689,6 +689,9 @@ mod tests {
             intermediate: 8192,
             vocab: 32000,
             seq_len: 4096,
+            n_experts: 0,
+            top_k: 0,
+            expert_intermediate: 0,
         }
     }
 
@@ -706,6 +709,7 @@ mod tests {
             .model(model)
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 8,
                 schedule,

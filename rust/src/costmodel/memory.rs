@@ -64,7 +64,12 @@ pub fn stage_memory_bytes(
     is_last: bool,
 ) -> MemoryBreakdown {
     let tp = plan.s_tp as f64;
-    let params_stage = plan.layers_per_stage() as f64 * model.params_per_layer() / tp;
+    // The routed expert bank is EP-sharded across `s_ep` of the DP
+    // replicas (then TP-sharded like everything else): the memory lever
+    // the EP axis exists for. Dense models contribute exactly 0 here.
+    let params_stage = plan.layers_per_stage() as f64
+        * (model.params_per_layer() + model.expert_params_per_layer() / strategy.s_ep as f64)
+        / tp;
 
     let weights_grads = params_stage * WEIGHT_GRAD_BYTES;
     let mut optimizer = params_stage * OPTIMIZER_BYTES / strategy.s_dp as f64;
@@ -124,6 +129,7 @@ mod tests {
     fn eval(kind: ChipKind, pp: usize, tp: usize, dp: usize, recompute: bool) -> MemoryBreakdown {
         let plan = GroupPlan { s_pp: pp, s_tp: tp, layers: 96, recompute };
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: dp,
             micro_batches: 2 * 1024 * 1024 / 4096 / dp,
             schedule: crate::costmodel::Schedule::OneF1B,
@@ -174,6 +180,7 @@ mod tests {
     fn later_stages_use_less_activation_memory() {
         let plan = GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false };
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: crate::costmodel::Schedule::OneF1B,
@@ -191,6 +198,7 @@ mod tests {
     fn interleaving_multiplies_late_stage_activation_residency() {
         let plan = GroupPlan { s_pp: 16, s_tp: 4, layers: 96, recompute: false };
         let mk = |schedule| Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule,
@@ -212,5 +220,34 @@ mod tests {
         let with = eval(ChipKind::A, 16, 4, 4, true);
         let without = eval(ChipKind::A, 16, 4, 4, false);
         assert!(with.activations < without.activations / 3.0);
+    }
+
+    #[test]
+    fn ep_shards_expert_parameter_memory() {
+        use crate::costmodel::H2_MOE;
+        let plan = GroupPlan { s_pp: 15, s_tp: 4, layers: 60, recompute: true };
+        let mk = |s_ep| Strategy {
+            s_ep,
+            s_dp: 8,
+            micro_batches: 16,
+            schedule: crate::costmodel::Schedule::OneF1B,
+            comm_algo: crate::comm::CommAlgo::Ring,
+            plans: vec![plan],
+        };
+        let at = |s: &Strategy| {
+            stage_memory_bytes(&spec(ChipKind::A), &H2_MOE, &plan, s, 0, 15, 4096, true, false)
+        };
+        let ep1 = at(&mk(1));
+        let ep8 = at(&mk(8));
+        // The 32-expert bank dominates EP=1 parameter memory; EP=8 keeps
+        // 1/8th of it per replica and must shed the rest.
+        assert!(
+            ep8.weights_grads < ep1.weights_grads / 2.0,
+            "ep8 {} !<< ep1 {}",
+            ep8.weights_grads,
+            ep1.weights_grads
+        );
+        // Activations are routing-invariant: EP moves parameters only.
+        assert_eq!(ep8.activations, ep1.activations);
     }
 }

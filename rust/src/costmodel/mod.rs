@@ -40,6 +40,12 @@ pub struct ModelShape {
     pub vocab: usize,
     /// Training sequence length in tokens.
     pub seq_len: usize,
+    /// Routed experts per layer (0 = dense FFN, no MoE terms anywhere).
+    pub n_experts: usize,
+    /// Experts each token routes through (router top-k; 0 when dense).
+    pub top_k: usize,
+    /// Intermediate width of one expert FFN (0 when dense).
+    pub expert_intermediate: usize,
 }
 
 /// Table 4: the 100B-parameter production model.
@@ -51,6 +57,9 @@ pub const H2_100B: ModelShape = ModelShape {
     intermediate: 36864,
     vocab: 92544,
     seq_len: 4096,
+    n_experts: 0,
+    top_k: 0,
+    expert_intermediate: 0,
 };
 
 /// The 20B model of the Fig 5 precision study.
@@ -62,6 +71,29 @@ pub const H2_20B: ModelShape = ModelShape {
     intermediate: 13824,
     vocab: 92544,
     seq_len: 4096,
+    n_experts: 0,
+    top_k: 0,
+    expert_intermediate: 0,
+};
+
+/// The sparse scenario model of the `exp-moe` fixture: the 20B trunk with
+/// a routed 32-expert FFN bank per layer (2 active per token). The expert
+/// bank multiplies *parameter* memory ~26x while each token's compute only
+/// grows by the 2 routed experts — at EP=1 the per-stage optimizer state
+/// no longer fits the fixture's chips and every layout degrades to PCIe
+/// offload, exactly the cliff the EP axis (sharding expert memory across
+/// DP replicas) removes.
+pub const H2_MOE: ModelShape = ModelShape {
+    n_layers: 60,
+    hidden: 5120,
+    n_heads: 40,
+    n_kv_heads: 8,
+    intermediate: 13824,
+    vocab: 92544,
+    seq_len: 4096,
+    n_experts: 32,
+    top_k: 2,
+    expert_intermediate: 13824,
 };
 
 impl ModelShape {
@@ -83,17 +115,46 @@ impl ModelShape {
         2.0 * h * h + 2.0 * h * kd + 3.0 * h * i + 2.0 * h
     }
 
-    /// Total parameter count (embeddings + layers + final norm).
+    /// Total parameter count (embeddings + layers + expert banks + final
+    /// norm).
     pub fn total_params(&self) -> f64 {
         self.vocab as f64 * self.hidden as f64 * 2.0
-            + self.n_layers as f64 * self.params_per_layer()
+            + self.n_layers as f64
+                * (self.params_per_layer() + self.expert_params_per_layer())
             + self.hidden as f64
     }
 
-    /// Forward FLOPs per token for one layer (2·params + attention matmuls).
+    /// Forward FLOPs per token for one layer (2·params + attention
+    /// matmuls), *excluding* the routed expert FFNs — those scale with
+    /// `top_k` (and routing imbalance), priced in the layer profiler.
     pub fn fwd_flops_per_token_layer(&self) -> f64 {
         2.0 * self.params_per_layer()
             + 4.0 * self.seq_len as f64 * self.hidden as f64
+    }
+
+    /// Whether the FFN is a routed mixture of experts.
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Parameters of one layer's whole expert bank (all `n_experts`
+    /// routed FFNs: gate/up/down projections each). Zero when dense.
+    pub fn expert_params_per_layer(&self) -> f64 {
+        3.0 * self.hidden as f64
+            * self.expert_intermediate as f64
+            * self.n_experts as f64
+    }
+
+    /// This shape with a routed expert bank swapped in (the `--experts`
+    /// CLI surface): `n_experts` experts of the dense FFN's width, top-2
+    /// routing. Dense when `n_experts == 0`.
+    pub fn with_experts(&self, n_experts: usize) -> ModelShape {
+        ModelShape {
+            n_experts,
+            top_k: if n_experts == 0 { 0 } else { 2.min(n_experts) },
+            expert_intermediate: if n_experts == 0 { 0 } else { self.intermediate },
+            ..*self
+        }
     }
 }
 
@@ -123,6 +184,13 @@ impl GroupPlan {
 pub struct Strategy {
     /// Data-parallel degree shared by every chip group.
     pub s_dp: usize,
+    /// Expert-parallel degree (s_ep): how many ways each layer's routed
+    /// expert bank is sharded. Nested inside data parallelism — every EP
+    /// group is `s_ep` of the DP replicas, so `s_ep` divides `s_dp` (and
+    /// `n_experts`); exactly 1 for dense models. Drives the profiler's
+    /// per-layer all-to-all dispatch/combine terms and the expert slice
+    /// of per-chip parameter memory.
+    pub s_ep: usize,
     /// Micro-batches per pipeline per iteration (b = B / s_dp).
     pub micro_batches: usize,
     /// Pipeline schedule executed by every stage (1F1B / interleaved /
@@ -192,8 +260,8 @@ pub fn evaluate(
         .zip(&strategy.plans)
         .map(|(g, plan)| {
             profile_layer_comm(
-                &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
-                crate::topology::NicAssignment::Affinity,
+                &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.s_ep,
+                strategy.comm_algo, crate::topology::NicAssignment::Affinity,
             )
         })
         .collect();
@@ -349,6 +417,7 @@ mod tests {
         // Mismatched stage counts that the naive round-robin overshot:
         // s_pp [24, 16] needs lps [2, 3] to land exactly on 96.
         let mut s = Strategy {
+            s_ep: 1,
             s_dp: 1,
             micro_batches: 8,
             schedule: Schedule::ZeroBubbleV,
@@ -366,6 +435,7 @@ mod tests {
 
         // The easy homogeneous case stays exactly uniform.
         let mut s = Strategy {
+            s_ep: 1,
             s_dp: 1,
             micro_batches: 8,
             schedule: Schedule::OneF1B,
@@ -388,6 +458,7 @@ mod tests {
         let groups = exp.cluster.groups_by_memory_desc();
         // Table 6 row: PP=16, DP=4, TP=4, no recompute.
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128, // 2M tokens / 4096 seq / 4 dp
             schedule: Schedule::OneF1B,
@@ -406,6 +477,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::A);
         let groups = exp.cluster.groups_by_memory_desc();
         let mk = |mb| Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: mb,
             schedule: Schedule::OneF1B,
@@ -425,6 +497,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
         let mk = |schedule| Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule,
@@ -446,6 +519,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
         let mk = |rec| Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,

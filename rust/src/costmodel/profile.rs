@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
-use crate::comm::{allreduce_cost, CommAlgo, CommTopology};
+use crate::comm::{allreduce_cost, alltoall_cost, AllToAllAlgo, CommAlgo, CommTopology};
 use crate::hetero::{ChipKind, ChipSpec};
 use crate::topology::NicAssignment;
 
@@ -67,6 +67,15 @@ const ADAM_FLOPS: f64 = 12.0;
 /// Host↔device PCIe bandwidth for offloaded optimizer traffic, bytes/s.
 const PCIE_OFFLOAD_BPS: f64 = 12.0e9;
 
+/// Token-routing imbalance factor: the hottest expert-parallel rank's
+/// all-to-all payload and expert compute relative to a perfectly balanced
+/// router. A deterministic stand-in for the load factor real MoE runs
+/// measure (auxiliary-loss-balanced routers hover near this); applied
+/// only once experts are actually sharded (`s_ep > 1`) — with every
+/// expert resident (`s_ep == 1`) routing moves no tokens between chips,
+/// so skew cancels out within the chip.
+pub const MOE_IMBALANCE: f64 = 1.2;
+
 /// Analytic per-layer profile for one (chip, TP, DP) combination —
 /// the roofline stand-in for the paper's measured auto-profiler table.
 /// DP gradient sync is priced as a flat ring under NIC affinity (the
@@ -79,27 +88,37 @@ pub fn profile_layer(
     micro_tokens: usize,
     dp: usize,
 ) -> LayerProfile {
-    profile_layer_comm(spec, model, tp, micro_tokens, dp, CommAlgo::Ring,
+    profile_layer_comm(spec, model, tp, micro_tokens, dp, 1, CommAlgo::Ring,
                        NicAssignment::Affinity)
 }
 
-/// [`profile_layer`] with an explicit DP-gradient collective algorithm
-/// and NIC-assignment policy: the exposed DP-sync slice of `t_update`
-/// prices `comm_algo` with the closed-form engine over the stage's
-/// DP-group topology ([`CommTopology::dp_group`]), whose inter-node link
-/// carries the Table 3 per-flow bandwidth under `assign`.
+/// [`profile_layer`] with an explicit DP-gradient collective algorithm,
+/// expert-parallel degree and NIC-assignment policy: the exposed DP-sync
+/// slice of `t_update` prices `comm_algo` with the closed-form engine
+/// over the stage's DP-group topology ([`CommTopology::dp_group`]), whose
+/// inter-node link carries the Table 3 per-flow bandwidth under `assign`.
+/// For MoE shapes the routed expert FFNs add compute, and `ep > 1` adds
+/// the per-layer token dispatch/combine all-to-alls over the EP group
+/// (priced by [`alltoall_cost`] under [`AllToAllAlgo::Auto`]) with the
+/// hottest rank carrying [`MOE_IMBALANCE`]× the balanced share.
+#[allow(clippy::too_many_arguments)]
 pub fn profile_layer_comm(
     spec: &ChipSpec,
     model: &ModelShape,
     tp: usize,
     micro_tokens: usize,
     dp: usize,
+    ep: usize,
     comm_algo: CommAlgo,
     assign: NicAssignment,
 ) -> LayerProfile {
     let tpf = tp as f64;
     let sustained = spec.sustained_tflops() * 1e12;
-    let params_per_chip = model.params_per_layer() / tpf;
+    // The expert bank is EP-sharded across `ep` of the DP replicas (then
+    // TP-sharded like the dense trunk) — the memory/update/sync pool a
+    // chip actually holds. Dense models contribute exactly 0.
+    let params_per_chip =
+        (model.params_per_layer() + model.expert_params_per_layer() / ep as f64) / tpf;
 
     // Dense compute: fwd = 2·params + attention; bwd = 2×fwd.
     let fwd_flops = micro_tokens as f64 * model.fwd_flops_per_token_layer() / tpf;
@@ -116,8 +135,39 @@ pub fn profile_layer_comm(
         0.0
     };
 
-    let t_fwd = t_fwd_dense + t_tp_ar;
-    let t_bwd = 2.0 * t_fwd_dense + t_tp_ar;
+    // MoE: each token routes through its `top_k` expert FFNs on top of the
+    // dense trunk; with the experts sharded over `ep` ranks the tokens
+    // cross the EP group twice per direction (dispatch + combine), priced
+    // by the all-to-all engine with the hottest rank carrying
+    // [`MOE_IMBALANCE`]× the balanced payload and compute. Every term is
+    // exactly 0.0 for dense models, keeping their profiles bit-identical.
+    let (t_moe_fwd, t_moe_a2a) = if model.n_experts > 0 {
+        let imbalance = if ep > 1 { MOE_IMBALANCE } else { 1.0 };
+        let expert_flops = micro_tokens as f64
+            * model.top_k as f64
+            * 6.0
+            * model.hidden as f64
+            * model.expert_intermediate as f64
+            / tpf;
+        let t_expert = imbalance * expert_flops / sustained;
+        let a2a = if ep > 1 {
+            let topo = CommTopology::dp_group(spec, ep, tp, assign);
+            let bytes = (imbalance
+                * micro_tokens as f64
+                * model.top_k as f64
+                * model.hidden as f64
+                * 2.0) as usize; // bf16 routed activations
+            2.0 * alltoall_cost(AllToAllAlgo::Auto, bytes, &topo).seconds
+        } else {
+            0.0
+        };
+        (t_expert, a2a)
+    } else {
+        (0.0, 0.0)
+    };
+
+    let t_fwd = t_fwd_dense + t_tp_ar + t_moe_fwd + t_moe_a2a;
+    let t_bwd = 2.0 * t_fwd_dense + t_tp_ar + 2.0 * t_moe_fwd + t_moe_a2a;
     let t_recompute = t_fwd;
 
     // Optimizer: Adam math (memory-bound on chip, folded into sustained
@@ -146,14 +196,16 @@ pub fn profile_layer_comm(
 }
 
 /// One distinct profile shape: everything [`profile_layer_comm`] depends on.
-type ProfileKey = (ModelShape, ChipKind, usize, usize, usize, CommAlgo, NicAssignment);
+type ProfileKey =
+    (ModelShape, ChipKind, usize, usize, usize, usize, CommAlgo, NicAssignment);
 
 /// Shared, thread-safe memoization of [`profile_layer_comm`].
 ///
 /// HeteroAuto's hot path evaluates the same per-layer profile at every DFS
 /// leaf and sharding-refinement round; the number of *distinct* shapes —
-/// `(model, chip kind, s_tp, micro_tokens, s_dp, comm algo, NIC policy)`
-/// tuples — is tiny by comparison (tens per search, even at paper scale).
+/// `(model, chip kind, s_tp, micro_tokens, s_dp, s_ep, comm algo, NIC
+/// policy)` tuples — is tiny by comparison (tens per search, even at
+/// paper scale).
 /// A cache hit returns the stored [`LayerProfile`] verbatim, so cached and
 /// uncached paths are bit-identical (property-tested).
 ///
@@ -185,10 +237,11 @@ impl ProfileCache {
         tp: usize,
         micro_tokens: usize,
         dp: usize,
+        ep: usize,
         comm_algo: CommAlgo,
         assign: NicAssignment,
     ) -> LayerProfile {
-        let key = (*model, spec.kind, tp, micro_tokens, dp, comm_algo, assign);
+        let key = (*model, spec.kind, tp, micro_tokens, dp, ep, comm_algo, assign);
         if let Some(p) = self.map.read().expect("profile cache poisoned").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *p;
@@ -197,7 +250,7 @@ impl ProfileCache {
         // identical value (the profiler is deterministic), so last-write-
         // wins is harmless.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let p = profile_layer_comm(spec, model, tp, micro_tokens, dp, comm_algo, assign);
+        let p = profile_layer_comm(spec, model, tp, micro_tokens, dp, ep, comm_algo, assign);
         self.map.write().expect("profile cache poisoned").insert(key, p);
         p
     }
@@ -266,21 +319,21 @@ mod tests {
         // most hops on the intra fabric and must shrink t_update.
         let s = spec(ChipKind::B);
         let aff = NicAssignment::Affinity;
-        let ring = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Ring, aff);
-        let hier = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Hierarchical, aff);
+        let ring = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, CommAlgo::Ring, aff);
+        let hier = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, CommAlgo::Hierarchical, aff);
         assert!(hier.t_update < ring.t_update,
                 "hier {} !< ring {}", hier.t_update, ring.t_update);
         // Auto never loses to any concrete algorithm.
-        let auto = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Auto, aff);
+        let auto = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, CommAlgo::Auto, aff);
         for algo in CommAlgo::CONCRETE {
-            let p = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, algo, aff);
+            let p = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, algo, aff);
             assert!(auto.t_update <= p.t_update, "{algo}");
         }
         // Compute terms are untouched by the collective choice.
         assert_eq!(ring.t_fwd, hier.t_fwd);
         assert_eq!(ring.t_bwd, hier.t_bwd);
         // A non-affine NIC mapping degrades the cross-node DP sync.
-        let non = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, CommAlgo::Ring,
+        let non = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, CommAlgo::Ring,
                                      NicAssignment::NonAffinity);
         assert!(non.t_update > ring.t_update,
                 "non-affinity {} !> affinity {}", non.t_update, ring.t_update);
@@ -305,25 +358,79 @@ mod tests {
         prop::check(200, |rng: &mut Rng| {
             let kinds = [ChipKind::A, ChipKind::B, ChipKind::C, ChipKind::D, ChipKind::A100];
             let s = spec(*rng.choose(&kinds));
-            let model = if rng.f64() < 0.5 { H2_100B } else { H2_20B };
+            let r = rng.f64();
+            let model = if r < 0.4 {
+                H2_100B
+            } else if r < 0.8 {
+                H2_20B
+            } else {
+                crate::costmodel::H2_MOE
+            };
             let tp = 1usize << rng.usize(0, 5); // 1..16
             let micro_tokens = *rng.choose(&[1024usize, 2048, 4096]);
             let dp = rng.usize(1, 65);
+            let ep = if model.is_moe() { *rng.choose(&[1usize, 2, 4, 8]) } else { 1 };
             let algo = *rng.choose(&CommAlgo::ALL);
             let assign = if rng.f64() < 0.5 {
                 NicAssignment::Affinity
             } else {
                 NicAssignment::NonAffinity
             };
-            let direct = profile_layer_comm(&s, &model, tp, micro_tokens, dp, algo, assign);
-            let first = cache.profile(&s, &model, tp, micro_tokens, dp, algo, assign);
-            let hit = cache.profile(&s, &model, tp, micro_tokens, dp, algo, assign);
+            let direct = profile_layer_comm(&s, &model, tp, micro_tokens, dp, ep, algo, assign);
+            let first = cache.profile(&s, &model, tp, micro_tokens, dp, ep, algo, assign);
+            let hit = cache.profile(&s, &model, tp, micro_tokens, dp, ep, algo, assign);
             prop::assert_prop(
                 first == direct && hit == direct,
-                format!("cache diverged for {s:?} tp={tp} dp={dp} {algo} {assign:?}"),
+                format!("cache diverged for {s:?} tp={tp} dp={dp} ep={ep} {algo} {assign:?}"),
             )
         });
         assert!(!cache.is_empty());
         assert!(cache.len() <= 200);
+    }
+
+    #[test]
+    fn moe_layer_costs_more_than_its_dense_trunk() {
+        use crate::costmodel::{H2_20B, H2_MOE};
+        // Same trunk geometry class, same chip/TP: the routed experts add
+        // both compute time and resident parameters.
+        let s = spec(ChipKind::A);
+        let dense = profile_layer(&s, &H2_20B, 4, 4096, 4);
+        let moe = profile_layer(&s, &H2_MOE, 4, 4096, 4);
+        assert!(moe.t_fwd > dense.t_fwd, "moe {} !> dense {}", moe.t_fwd, dense.t_fwd);
+        assert!(moe.params_per_chip > 2.0 * dense.params_per_chip);
+    }
+
+    #[test]
+    fn ep_shards_expert_params_and_prices_the_alltoall() {
+        use crate::costmodel::H2_MOE;
+        let s = spec(ChipKind::A);
+        let aff = NicAssignment::Affinity;
+        let ep1 = profile_layer_comm(&s, &H2_MOE, 4, 4096, 8, 1, CommAlgo::Ring, aff);
+        let ep8 = profile_layer_comm(&s, &H2_MOE, 4, 4096, 8, 8, CommAlgo::Ring, aff);
+        // EP=8 keeps 1/8th of the expert bank per replica...
+        assert!(ep8.params_per_chip < ep1.params_per_chip / 2.0);
+        // ...but pays the dispatch/combine all-to-alls plus the hot-rank
+        // imbalance on expert compute, which EP=1 (all experts resident,
+        // no tokens cross chips) avoids entirely.
+        assert!(
+            ep8.t_fwd > ep1.t_fwd,
+            "ep8 fwd {} should pay a2a over ep1's local routing {}",
+            ep8.t_fwd,
+            ep1.t_fwd
+        );
+        // The lighter resident shard also shrinks the optimizer/offload
+        // terms that scale with params_per_chip.
+        assert!(ep8.t_offload < ep1.t_offload);
+    }
+
+    #[test]
+    fn dense_profiles_ignore_the_ep_axis_bit_for_bit() {
+        // For a dense model every MoE term is literally 0.0, so ep is inert
+        // and the legacy wrapper is bit-identical to the full call.
+        let s = spec(ChipKind::B);
+        let aff = NicAssignment::Affinity;
+        let legacy = profile_layer(&s, &H2_100B, 4, 4096, 4);
+        let full = profile_layer_comm(&s, &H2_100B, 4, 4096, 4, 1, CommAlgo::Ring, aff);
+        assert_eq!(legacy, full);
     }
 }

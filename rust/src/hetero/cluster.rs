@@ -105,10 +105,13 @@ pub struct Experiment {
 }
 
 /// Look up an experiment by its index string: the Table 7 configurations
-/// (`exp-a-1` .. `exp-d`) plus `exp-mega`, the beyond-Table-7 paper-scale
-/// fixture backing the §4.3.3 headline claim — 1,280 chips across all
-/// four vendors (whole-node groups with their Table 3 NIC shapes), sized
-/// so the two-stage 128-chip refinement splits every group.
+/// (`exp-a-1` .. `exp-d`) plus two beyond-Table-7 fixtures — `exp-mega`,
+/// the paper-scale scenario backing the §4.3.3 headline claim (1,280
+/// chips across all four vendors), and `exp-moe`, a 128-chip two-vendor
+/// cluster sized for [`crate::costmodel::H2_MOE`]: at EP 1 every chip
+/// carries the full 32-expert bank, which overflows the memory budget and
+/// forces PCIe optimizer offload on every layout, so the expert-parallel
+/// axis (sharding the bank across DP replicas) has decisive headroom.
 pub fn experiment(index: &str) -> Result<Experiment> {
     let m = 1024 * 1024;
     let (cluster, gbs) = match index {
@@ -127,14 +130,19 @@ pub fn experiment(index: &str) -> Result<Experiment> {
             ),
             4 * m,
         ),
-        _ => bail!("unknown experiment `{index}` (expected exp-a-1 .. exp-d, or exp-mega)"),
+        "exp-moe" | "moe" => (
+            Cluster::new("Exp-MoE", vec![(ChipKind::A, 64), (ChipKind::B, 64)]),
+            m,
+        ),
+        _ => bail!("unknown experiment `{index}` (expected exp-a-1 .. exp-d, \
+                    exp-mega, or exp-moe)"),
     };
     Ok(Experiment { index: Box::leak(index.to_string().into_boxed_str()), cluster, gbs_tokens: gbs })
 }
 
-/// Every Table 7 experiment index, in paper order (`exp-mega` is a
-/// beyond-Table-7 scale fixture and deliberately not listed — the paper
-/// reports no baseline numbers for it).
+/// Every Table 7 experiment index, in paper order (`exp-mega` and
+/// `exp-moe` are beyond-Table-7 fixtures and deliberately not listed —
+/// the paper reports no baseline numbers for them).
 pub const ALL_EXPERIMENTS: [&str; 7] =
     ["exp-a-1", "exp-a-2", "exp-b-1", "exp-b-2", "exp-c-1", "exp-c-2", "exp-d"];
 
@@ -198,6 +206,18 @@ mod tests {
     fn whole_nodes_enforced() {
         let result = std::panic::catch_unwind(|| ChipGroup::new(ChipKind::A, 100));
         assert!(result.is_err()); // 100 % 16 != 0
+    }
+
+    #[test]
+    fn exp_moe_is_the_128_chip_two_vendor_moe_fixture() {
+        let e = experiment("exp-moe").unwrap();
+        assert_eq!(e.cluster.total_chips(), 128);
+        assert_eq!(e.cluster.n_types(), 2);
+        assert_eq!(e.gbs_tokens, 1024 * 1024);
+        // The short alias resolves to the same fixture.
+        assert_eq!(experiment("moe").unwrap().cluster.total_chips(), 128);
+        // Not a Table 7 row: the paper-table drivers must not pick it up.
+        assert!(!ALL_EXPERIMENTS.contains(&"exp-moe"));
     }
 
     #[test]

@@ -26,7 +26,9 @@ use h2::config::Config;
 use h2::coordinator::{
     train, train_plan, train_virtual, StagePlan, TrainConfig, TrainReport, VirtualOptions,
 };
-use h2::costmodel::{profile_layer, tgs, uniform_1f1b, ProfileCache, Schedule, H2_100B};
+use h2::costmodel::{
+    profile_layer, tgs, uniform_1f1b, ModelShape, ProfileCache, Schedule, H2_100B, H2_MOE,
+};
 use h2::elastic::FaultPlan;
 use h2::fleet::{fleet_search_config, FleetOptions, JobTrace, Policy};
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
@@ -80,12 +82,16 @@ fn print_help() {
     println!("  search      --exp exp-a-1 | --cluster A=256,B=256 --gbs-mtokens 2");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--no-two-stage]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
+    println!("              [--experts N]  MoE trunk (N-expert top-2 bank;");
+    println!("                             --exp exp-moe implies the H2-MoE model)");
+    println!("              [--ep CAP]  cap expert-parallel degrees (1 = off)");
     println!("              [--split 128] [--sequential] [--emit-plan plan.json]");
     println!("              [--progress]  periodic stderr progress lines (+ cache hits)");
     println!("  replan      --plan plan.json --exclude-chips B=8[,A=16]");
     println!("              [--full]  drop the hot-swap pipeline constraint");
     println!("              [--sequential] [--out newplan.json]");
     println!("  simulate    --plan plan.json | --exp exp-c-1 [--comm ddr|tcp]");
+    println!("              [--experts N] [--ep CAP]  MoE trunk + EP cap (no --plan)");
     println!("              [--schedule 1f1b|interleaved:V|zbv] [--reshard srag|bcast|naive]");
     println!("              [--comm-algo ring|tree|rhd|hierarchical|auto]");
     println!("              [--no-overlap] [--uniform] [--non-affinity]");
@@ -101,6 +107,28 @@ fn print_help() {
 /// Load `--config` if given (side effect: registers any custom chips).
 fn load_config(args: &Args) -> Result<Option<Config>> {
     args.get("config").map(Config::load).transpose()
+}
+
+/// Resolve the model shape. The base follows the experiment: `--exp
+/// exp-moe` carries its own model ([`H2_MOE`] — the cluster is sized for
+/// that expert bank, not for the 100B trunk); everything else uses the
+/// paper's dense 100B model. `--experts N` then swaps the base trunk's
+/// FFN for an `N`-expert top-2 MoE bank (§4.3.2).
+fn resolve_model(args: &Args) -> Result<ModelShape> {
+    let base = match args.get("exp") {
+        Some("exp-moe") | Some("moe") => H2_MOE,
+        _ => H2_100B,
+    };
+    match args.get("experts") {
+        Some(_) => {
+            let n = args.usize_or("experts", 0)?;
+            if n < 2 {
+                bail!("--experts needs at least 2 experts (got {n})");
+            }
+            Ok(base.with_experts(n))
+        }
+        None => Ok(base),
+    }
 }
 
 /// Resolve (cluster, gbs_tokens): `--exp` > `--cluster` flag > config
@@ -155,6 +183,8 @@ fn parse_comm_algo(s: &str) -> Result<CommAlgo> {
 /// `--alpha` maps through `Schedule::from_alpha`; the default explores
 /// 1F1B, interleaved:2 and zbv. `--comm-algo` pins the DP-collective
 /// algorithm the same way (default: the topology-aware auto selector).
+/// `--ep` caps the expert-parallel degrees the search may try (1 pins
+/// the axis off; only matters for MoE models, see `--experts`).
 fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchConfig> {
     let base = config.map(|c| c.search_config()).unwrap_or_default();
     let schedules = if let Some(tok) = args.get("schedule") {
@@ -175,6 +205,7 @@ fn resolve_search_config(args: &Args, config: Option<&Config>) -> Result<SearchC
         group_split: args.usize_or("split", base.group_split)?,
         two_stage: if args.has("no-two-stage") { false } else { base.two_stage },
         max_dp: args.usize_or("max-dp", base.max_dp)?,
+        max_ep: args.usize_or("ep", base.max_ep)?,
         parallel: if args.has("sequential") { false } else { base.parallel },
         progress: args.has("progress") || base.progress,
     })
@@ -441,7 +472,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let config = load_config(args)?;
     let (cluster, gbs) = resolve_cluster(args, config.as_ref(), None)?;
     let cfg = resolve_search_config(args, config.as_ref())?;
-    let r = search(&H2_100B, &cluster, gbs, &cfg)?;
+    let model = resolve_model(args)?;
+    let r = search(&model, &cluster, gbs, &cfg)?;
     println!("HeteroAuto on `{}` ({} chips, GBS {}M tokens): {} candidates in {} \
               ({} leaves pruned, profile cache {} hits / {} misses)",
              cluster.name, cluster.total_chips(), gbs >> 20,
@@ -459,14 +491,14 @@ fn cmd_search(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
-    println!("s_dp = {}, micro-batches = {}, schedule = {}, comm-algo = {}",
-             r.strategy.s_dp, r.strategy.micro_batches, r.strategy.schedule,
-             r.strategy.comm_algo);
+    println!("s_dp = {}, s_ep = {}, micro-batches = {}, schedule = {}, comm-algo = {}",
+             r.strategy.s_dp, r.strategy.s_ep, r.strategy.micro_batches,
+             r.strategy.schedule, r.strategy.comm_algo);
     println!("estimated iteration: {} -> TGS {:.1}",
              fmt_duration(r.eval.iteration_seconds),
              tgs(&cluster, gbs, r.eval.iteration_seconds));
     if let Some(path) = args.get("emit-plan") {
-        let mut plan = r.into_plan(&H2_100B, &cluster, gbs);
+        let mut plan = r.into_plan(&model, &cluster, gbs);
         apply_sim_overrides(&mut plan, args, config.as_ref())?;
         // The config's train section rides along so `h2 train --plan` works
         // from the emitted file alone.
@@ -567,8 +599,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     } else {
         let (cluster, gbs) = resolve_cluster(args, config.as_ref(), Some("exp-c-1"))?;
         let scfg = resolve_search_config(args, config.as_ref())?;
-        let r = search(&H2_100B, &cluster, gbs, &scfg)?;
-        r.into_plan(&H2_100B, &cluster, gbs)
+        let model = resolve_model(args)?;
+        let r = search(&model, &cluster, gbs, &scfg)?;
+        r.into_plan(&model, &cluster, gbs)
     };
     apply_sim_overrides(&mut plan, args, config.as_ref())?;
     if let Some(tok) = args.get("schedule") {

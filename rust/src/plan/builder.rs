@@ -215,6 +215,7 @@ mod tests {
         let plan = PlanBuilder::new("order")
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
@@ -237,6 +238,7 @@ mod tests {
         let plan = PlanBuilder::new("override")
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,

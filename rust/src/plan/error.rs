@@ -63,6 +63,19 @@ pub enum PlanError {
     /// The embedded fault-injection scenario is malformed (stage out of
     /// range, non-positive factor, zero-node death).
     FaultPlanInvalid { detail: String },
+    /// Expert-parallel degree of zero (dense plans carry `s_ep == 1`).
+    ZeroEp,
+    /// Expert-parallel degree does not divide the data-parallel degree
+    /// (EP groups are carved out of the DP replicas).
+    EpNotInDp { s_ep: usize, s_dp: usize },
+    /// Expert-parallel degree does not divide the expert count, so the
+    /// expert bank cannot shard evenly.
+    EpNotInExperts { s_ep: usize, n_experts: usize },
+    /// A dense model (no experts) with an expert-parallel degree above 1.
+    EpWithoutExperts { s_ep: usize },
+    /// The MoE shape is internally inconsistent (`top_k` outside
+    /// `1..=n_experts`, or a zero expert FFN width).
+    MoeShapeInvalid { n_experts: usize, top_k: usize, expert_intermediate: usize },
 }
 
 impl fmt::Display for PlanError {
@@ -127,6 +140,20 @@ impl fmt::Display for PlanError {
             PlanError::TrainEmpty => write!(f, "train section has no stages"),
             PlanError::FaultPlanInvalid { detail } => {
                 write!(f, "fault plan is invalid: {detail}")
+            }
+            PlanError::ZeroEp => write!(f, "s_ep must be >= 1"),
+            PlanError::EpNotInDp { s_ep, s_dp } => {
+                write!(f, "s_ep {s_ep} does not divide s_dp {s_dp}")
+            }
+            PlanError::EpNotInExperts { s_ep, n_experts } => {
+                write!(f, "s_ep {s_ep} does not divide n_experts {n_experts}")
+            }
+            PlanError::EpWithoutExperts { s_ep } => {
+                write!(f, "s_ep {s_ep} > 1 on a dense model (no experts to shard)")
+            }
+            PlanError::MoeShapeInvalid { n_experts, top_k, expert_intermediate } => {
+                write!(f, "MoE shape invalid: n_experts {n_experts}, top_k {top_k}, \
+                           expert_intermediate {expert_intermediate}")
             }
         }
     }

@@ -32,7 +32,12 @@ use crate::sim::{simulate_iteration, ReshardStrategy, SimOptions, SimResult};
 use crate::topology::NicAssignment;
 use crate::util::json::{self, Value};
 
-/// Plan-file schema version. Version 4 added the elastic-training fields:
+/// Plan-file schema version. Version 5 added the expert-parallel axis:
+/// `s_ep` inside `strategy` (the expert-parallel degree; a missing field —
+/// every v1–v4 file — loads as 1) and the MoE shape fields inside `model`
+/// (`n_experts`, `top_k`, `expert_intermediate`; missing fields load as 0,
+/// i.e. dense).
+/// Version 4 added the elastic-training fields:
 /// `plan_epoch` (how many times the plan has been re-planned; a missing
 /// field — every v1–v3 file — loads as 0) and the optional `fault_plan`
 /// section (a seeded fault-injection scenario, absent unless set).
@@ -43,7 +48,7 @@ use crate::util::json::{self, Value};
 /// `schedule` token inside `strategy`; version-1 files still load, their
 /// `alpha` mapped through [`Schedule::from_alpha`] (see
 /// `docs/plan-format.md` for the full compatibility rules).
-pub const PLAN_VERSION: u64 = 4;
+pub const PLAN_VERSION: u64 = 5;
 
 /// Numeric-precision policy carried by a plan into real training runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -239,6 +244,38 @@ impl ExecutionPlan {
         }
         if self.strategy.micro_batches == 0 {
             errs.push(PlanError::ZeroMicroBatches);
+        }
+        // Expert-parallel axis: EP groups are carved out of the DP
+        // replicas and shard the expert bank evenly; dense plans are
+        // pinned to s_ep == 1.
+        let s_ep = self.strategy.s_ep;
+        if s_ep == 0 {
+            errs.push(PlanError::ZeroEp);
+        } else {
+            if self.strategy.s_dp > 0 && self.strategy.s_dp % s_ep != 0 {
+                errs.push(PlanError::EpNotInDp { s_ep, s_dp: self.strategy.s_dp });
+            }
+            if self.model.is_moe() {
+                if self.model.n_experts % s_ep != 0 {
+                    errs.push(PlanError::EpNotInExperts {
+                        s_ep,
+                        n_experts: self.model.n_experts,
+                    });
+                }
+            } else if s_ep > 1 {
+                errs.push(PlanError::EpWithoutExperts { s_ep });
+            }
+        }
+        if self.model.is_moe()
+            && (self.model.top_k == 0
+                || self.model.top_k > self.model.n_experts
+                || self.model.expert_intermediate == 0)
+        {
+            errs.push(PlanError::MoeShapeInvalid {
+                n_experts: self.model.n_experts,
+                top_k: self.model.top_k,
+                expert_intermediate: self.model.expert_intermediate,
+            });
         }
         if self.micro_tokens > 0 {
             let sequences = self.gbs_tokens / self.micro_tokens;
@@ -567,10 +604,21 @@ fn model_to_json(m: &ModelShape) -> Value {
         ("intermediate", json::num(m.intermediate as f64)),
         ("vocab", json::num(m.vocab as f64)),
         ("seq_len", json::num(m.seq_len as f64)),
+        ("n_experts", json::num(m.n_experts as f64)),
+        ("top_k", json::num(m.top_k as f64)),
+        ("expert_intermediate", json::num(m.expert_intermediate as f64)),
     ])
 }
 
 fn model_from_json(v: &Value) -> Result<ModelShape> {
+    // The MoE shape fields arrived in v5; files older than that are all
+    // dense, which is exactly what the zero defaults mean.
+    let moe_field = |key: &str| -> Result<usize> {
+        match v.opt(key) {
+            Some(n) => n.usize(),
+            None => Ok(0),
+        }
+    };
     Ok(ModelShape {
         n_layers: v.get("n_layers")?.usize()?,
         hidden: v.get("hidden")?.usize()?,
@@ -579,6 +627,9 @@ fn model_from_json(v: &Value) -> Result<ModelShape> {
         intermediate: v.get("intermediate")?.usize()?,
         vocab: v.get("vocab")?.usize()?,
         seq_len: v.get("seq_len")?.usize()?,
+        n_experts: moe_field("n_experts")?,
+        top_k: moe_field("top_k")?,
+        expert_intermediate: moe_field("expert_intermediate")?,
     })
 }
 
@@ -614,6 +665,7 @@ fn cluster_from_json(v: &Value) -> Result<Cluster> {
 
 fn strategy_to_json(s: &Strategy) -> Value {
     json::obj(vec![
+        ("s_ep", json::num(s.s_ep as f64)),
         ("s_dp", json::num(s.s_dp as f64)),
         ("micro_batches", json::num(s.micro_batches as f64)),
         ("schedule", json::s(&s.schedule.token())),
@@ -660,7 +712,14 @@ fn strategy_from_json(v: &Value, legacy_schedule: Option<Schedule>) -> Result<St
         Some(tok) => parse_token(tok, "comm_algo", CommAlgo::parse)?,
         None => CommAlgo::Ring,
     };
+    // Files older than v5 predate the expert-parallel axis: they are all
+    // dense plans, i.e. s_ep == 1.
+    let s_ep = match v.opt("s_ep") {
+        Some(n) => n.usize()?,
+        None => 1,
+    };
     Ok(Strategy {
+        s_ep,
         s_dp: v.get("s_dp")?.usize()?,
         micro_batches: v.get("micro_batches")?.usize()?,
         schedule,
@@ -842,6 +901,7 @@ mod tests {
             .model(H2_100B)
             .cluster(exp.cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule: Schedule::OneF1B,
@@ -910,6 +970,7 @@ mod tests {
             .model(H2_100B)
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 1,
                 micro_batches: 512,
                 schedule: Schedule::ZeroBubbleV,
@@ -1087,6 +1148,88 @@ mod tests {
         assert!(text.contains("\"plan_epoch\": 0"), "{text}");
         assert!(!text.contains("fault_plan"), "{text}");
         assert_eq!(ExecutionPlan::from_json_str(&text).unwrap(), back);
+    }
+
+    #[test]
+    fn version4_files_migrate_to_dense_ep1() {
+        // A version-4 plan predates the expert-parallel axis: its strategy
+        // has no `s_ep` token and its model has no MoE shape fields. It
+        // loads as a dense plan with s_ep == 1 — exactly what it executed.
+        let plan = table6_a_plan();
+        let mut v = plan.to_json();
+        match &mut v {
+            Value::Obj(m) => {
+                m.insert("version".to_string(), json::num(4.0));
+                match m.get_mut("strategy") {
+                    Some(Value::Obj(s)) => {
+                        s.remove("s_ep");
+                    }
+                    other => panic!("strategy must be an object, got {other:?}"),
+                }
+                match m.get_mut("model") {
+                    Some(Value::Obj(mo)) => {
+                        mo.remove("n_experts");
+                        mo.remove("top_k");
+                        mo.remove("expert_intermediate");
+                    }
+                    other => panic!("model must be an object, got {other:?}"),
+                }
+            }
+            other => panic!("plan must serialize to an object, got {other:?}"),
+        }
+        let back = ExecutionPlan::from_json(&v).unwrap();
+        assert_eq!(back.version, PLAN_VERSION);
+        assert_eq!(back.strategy.s_ep, 1);
+        assert_eq!(back.model.n_experts, 0);
+        assert!(!back.model.is_moe());
+        assert_eq!(back, plan, "v4 migration must be lossless");
+        assert!(back.validate().is_ok());
+        // Re-serializing writes the v5 schema with the new fields present.
+        let text = back.to_json_string();
+        assert!(text.contains("\"s_ep\": 1"), "{text}");
+        assert!(text.contains("\"n_experts\": 0"), "{text}");
+        assert_eq!(ExecutionPlan::from_json_str(&text).unwrap(), back);
+    }
+
+    #[test]
+    fn ep_validation_rules() {
+        // Keep the fixture's 96-layer geometry and bolt an expert bank on,
+        // so only the EP rules fire.
+        let moe = |m: &ModelShape| ModelShape {
+            n_experts: 8,
+            top_k: 2,
+            expert_intermediate: m.intermediate,
+            ..*m
+        };
+        // Dense plan with s_ep > 1 is rejected.
+        let mut plan = table6_a_plan();
+        plan.strategy.s_ep = 2;
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::EpWithoutExperts { s_ep: 2 }), "{errs:?}");
+        // s_ep = 0 is rejected.
+        plan.strategy.s_ep = 0;
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::ZeroEp), "{errs:?}");
+        // MoE shape: s_ep must divide both s_dp and n_experts.
+        let mut plan = table6_a_plan();
+        plan.model = moe(&plan.model);
+        plan.strategy.s_ep = 3; // divides neither s_dp=4 nor n_experts=8
+        let errs = plan.validate().unwrap_err();
+        assert!(errs.contains(&PlanError::EpNotInDp { s_ep: 3, s_dp: 4 }), "{errs:?}");
+        assert!(
+            errs.contains(&PlanError::EpNotInExperts { s_ep: 3, n_experts: 8 }),
+            "{errs:?}"
+        );
+        // A valid EP degree (divides both) passes.
+        plan.strategy.s_ep = 4;
+        assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+        // A broken MoE shape is caught too.
+        plan.model.top_k = 0;
+        let errs = plan.validate().unwrap_err();
+        assert!(
+            errs.iter().any(|e| matches!(e, PlanError::MoeShapeInvalid { .. })),
+            "{errs:?}"
+        );
     }
 
     #[test]

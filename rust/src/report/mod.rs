@@ -69,6 +69,7 @@ pub struct BaselineRow {
 pub fn table6_plan(kind: ChipKind, pp: usize, dp: usize, tp: usize, rec: bool) -> ExecutionPlan {
     let exp = homogeneous_baseline(kind);
     let strategy = Strategy {
+        s_ep: 1,
         s_dp: dp,
         micro_batches: exp.gbs_tokens / H2_100B.seq_len / dp,
         schedule: Schedule::OneF1B,

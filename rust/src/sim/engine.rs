@@ -583,6 +583,7 @@ mod tests {
 
     fn strategy(schedule: Schedule) -> Strategy {
         Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 32,
             schedule,

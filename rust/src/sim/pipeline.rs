@@ -153,8 +153,8 @@ pub(crate) fn plan_stage_sims(
     let mut first_stage = 0usize;
     for (gi, (g, plan)) in groups.iter().zip(&strategy.plans).enumerate() {
         let prof = profile_layer_comm(
-            &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.comm_algo,
-            opts.nic_assignment,
+            &g.spec, model, plan.s_tp, micro_tokens, strategy.s_dp, strategy.s_ep,
+            strategy.comm_algo, opts.nic_assignment,
         );
         let lps = plan.layers_per_stage() as f64;
         let recomp = if plan.recompute { prof.t_recompute } else { 0.0 };
@@ -423,6 +423,7 @@ mod tests {
 
     fn table6_a_strategy() -> Strategy {
         Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
@@ -501,6 +502,7 @@ mod tests {
         let groups = exp.cluster.groups_by_memory_desc();
         for schedule in Schedule::SEARCH_SPACE {
             let strategy = Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 128,
                 schedule,
@@ -523,6 +525,7 @@ mod tests {
         let exp = experiment("exp-a-1").unwrap();
         let groups = exp.cluster.groups_by_memory_desc();
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
@@ -547,6 +550,7 @@ mod tests {
         let exp = experiment("exp-a-1").unwrap();
         let groups = exp.cluster.groups_by_memory_desc();
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 2,
             micro_batches: 256,
             schedule: Schedule::OneF1B,
@@ -573,6 +577,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
@@ -599,6 +604,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
         let mk = |comm_algo| Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::OneF1B,
@@ -623,6 +629,9 @@ mod tests {
             intermediate: 8192,
             vocab: 32000,
             seq_len: 4096,
+            n_experts: 0,
+            top_k: 0,
+            expert_intermediate: 0,
         };
         let cluster = crate::hetero::Cluster::new(
             "parity-2stage",
@@ -632,6 +641,7 @@ mod tests {
             .model(model)
             .cluster(cluster)
             .strategy(Strategy {
+                s_ep: 1,
                 s_dp: 4,
                 micro_batches: 8,
                 schedule: Schedule::OneF1B,
@@ -708,6 +718,7 @@ mod tests {
         let exp = homogeneous_baseline(ChipKind::B);
         let groups = exp.cluster.groups_by_memory_desc();
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: 8,
             micro_batches: 64,
             schedule: Schedule::OneF1B,

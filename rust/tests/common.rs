@@ -24,6 +24,9 @@ pub fn tiny_model() -> ModelShape {
         intermediate: 8192,
         vocab: 32000,
         seq_len: 4096,
+        n_experts: 0,
+        top_k: 0,
+        expert_intermediate: 0,
     }
 }
 
@@ -37,6 +40,7 @@ pub fn two_stage_mixed_vendor_plan(schedule: Schedule, comm_algo: CommAlgo) -> E
         .model(tiny_model())
         .cluster(cluster)
         .strategy(Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 8,
             schedule,

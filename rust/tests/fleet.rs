@@ -7,7 +7,10 @@
 use std::path::PathBuf;
 use std::process::Command;
 
-use h2::fleet::{run, FleetEventKind, FleetOptions, FleetTimeline, JobTrace, Policy};
+use h2::fleet::{
+    fleet_search_config, run, FleetEventKind, FleetOptions, FleetTimeline, FreePool, JobModel,
+    JobSpec, JobTrace, PlaceOutcome, Policy, Scheduler,
+};
 use h2::hetero::{spec, ChipKind, Cluster};
 
 /// The two-vendor lab cluster the in-process tests run on: big enough
@@ -102,6 +105,58 @@ fn generated_trace_runs_deterministically_end_to_end() {
     for j in &a.jobs {
         assert_eq!(j.chips % node, 0, "ragged allocation for job {}", j.id);
     }
+}
+
+#[test]
+fn failed_preemption_shrink_leaves_the_free_pool_untouched() {
+    // A victim whose only chip group is a single node is not
+    // swap-compatible with any shrink: `try_shrink` must keep at least
+    // one node per group, so it can never free chips here — and a
+    // placement round built on that failed shrink must leave the
+    // `FreePool` exactly as it was.
+    let cluster = Cluster::new("one-node", vec![(ChipKind::A, 16)]);
+    let sched = Scheduler::new(Policy::PriorityBackfill, fleet_search_config());
+    let mut pool = FreePool::new(&cluster);
+    assert_eq!(pool.total(), cluster.total_chips());
+
+    let victim_job = JobSpec {
+        id: 0,
+        model: JobModel::H20B,
+        gbs_tokens: 128 * 4096,
+        priority: 0,
+        arrival_step: 0,
+        min_chips: 16,
+        max_chips: 16,
+        steps: 10,
+    };
+    let PlaceOutcome::Placed(victim) = sched.try_place(&victim_job, &mut pool) else {
+        panic!("victim placement failed on an idle one-node cluster");
+    };
+    // Chip accounting after the take: pool + held allocation = cluster.
+    assert_eq!(victim.chips, 16);
+    assert_eq!(pool.total() + victim.chips, cluster.total_chips());
+    let snapshot = pool.clone();
+
+    // A higher-priority arrival needs a whole node; the only victim
+    // cannot shed one and survive, so the shrink must fail...
+    let need = 16;
+    assert!(
+        sched.try_shrink(&victim.plan, 1.0, need).is_none(),
+        "a one-node victim must never shrink"
+    );
+    // ...and the pool is bit-for-bit what it was before the attempt.
+    assert_eq!(pool, snapshot);
+    assert_eq!(pool.total() + victim.chips, cluster.total_chips());
+
+    // The round then resolves to NoCapacity for the contender — which
+    // also must not touch the pool.
+    let contender = JobSpec { id: 1, priority: 3, arrival_step: 1, ..victim_job.clone() };
+    assert!(matches!(sched.try_place(&contender, &mut pool), PlaceOutcome::NoCapacity));
+    assert_eq!(pool, snapshot);
+
+    // Releasing the victim restores the idle pool exactly.
+    pool.release(&victim.alloc);
+    assert_eq!(pool, FreePool::new(&cluster));
 }
 
 #[test]

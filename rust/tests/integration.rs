@@ -182,6 +182,7 @@ fn random_feasible_strategies_never_beat_search() {
             return Ok(());
         }
         let strategy = Strategy {
+            s_ep: 1,
             s_dp,
             micro_batches: sequences / s_dp,
             schedule: Schedule::OneF1B,
@@ -236,8 +237,12 @@ fn hierarchical_beats_flat_ring_on_a_two_node_mixed_vendor_fixture() {
         intermediate: 11008,
         vocab: 32000,
         seq_len: 4096,
+        n_experts: 0,
+        top_k: 0,
+        expert_intermediate: 0,
     };
     let mk = |comm_algo| Strategy {
+        s_ep: 1,
         s_dp: 8,
         micro_batches: 4,
         schedule: Schedule::OneF1B,

@@ -19,6 +19,9 @@ use h2::util::rng::Rng;
 fn random_model(rng: &mut Rng) -> ModelShape {
     let n_heads = 1 << rng.usize(2, 7);
     let head_dim = 1 << rng.usize(5, 8);
+    // Half the models are MoE: the serializer must round-trip both the
+    // dense all-zero shape and arbitrary expert banks.
+    let n_experts = if rng.f64() < 0.5 { 0 } else { rng.usize(2, 17) };
     ModelShape {
         n_layers: rng.usize(1, 129),
         hidden: n_heads * head_dim,
@@ -27,6 +30,9 @@ fn random_model(rng: &mut Rng) -> ModelShape {
         intermediate: rng.usize(1024, 40_000),
         vocab: rng.usize(1000, 100_000),
         seq_len: 1 << rng.usize(8, 14),
+        n_experts,
+        top_k: if n_experts == 0 { 0 } else { rng.usize(1, n_experts) },
+        expert_intermediate: if n_experts == 0 { 0 } else { rng.usize(1024, 40_000) },
     }
 }
 
@@ -99,6 +105,7 @@ fn random_comm_algo(rng: &mut Rng) -> CommAlgo {
 
 fn random_strategy(rng: &mut Rng, n_groups: usize) -> Strategy {
     Strategy {
+        s_ep: rng.usize(1, 9),
         s_dp: rng.usize(1, 65),
         micro_batches: rng.usize(1, 1025),
         schedule: random_schedule(rng),
@@ -200,6 +207,7 @@ fn valid_plans_stay_valid_across_roundtrip() {
     let plan = PlanBuilder::new("rt-valid")
         .cluster(exp.cluster)
         .strategy(Strategy {
+            s_ep: 1,
             s_dp: 4,
             micro_batches: 128,
             schedule: Schedule::Interleaved { virtual_stages: 2 },

@@ -59,6 +59,7 @@ fn engine_matches_reference_bit_for_bit() {
             Schedule::ZeroBubbleV,
         ]);
         let strategy = Strategy {
+            s_ep: 1,
             s_dp: *rng.choose(&[1usize, 2, 4]),
             micro_batches: rng.usize(1, 11),
             schedule,
