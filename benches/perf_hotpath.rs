@@ -175,6 +175,26 @@ fn main() {
         std::hint::black_box(tl.metrics.p99_wait_seconds);
     });
 
+    // Fleet under faults: the same pinned trace with the pinned cluster
+    // fault plan and the graceful-degradation cascade — adds the fault
+    // projection, an in-place re-plan, a requeue-from-checkpoint, and
+    // the recovery-ledger accounting on top of the healthy run above.
+    // The healthy prerun that seeds the fault plan runs once in setup.
+    let fault_base = h2::fleet::FleetOptions {
+        policy: h2::fleet::Policy::Fifo,
+        checkpoint_every: 10,
+        ..Default::default()
+    };
+    let fleet_healthy = h2::fleet::run(&mega.cluster, &fleet_trace, &fault_base).unwrap();
+    let fleet_faults =
+        h2::fleet::ClusterFaultPlan::pinned_for(&mega.cluster, &fleet_healthy).unwrap();
+    let faulty_opts =
+        h2::fleet::FleetOptions { faults: Some(fleet_faults), ..fault_base };
+    b.run("fleet: exp-mega faulty trace", || {
+        let tl = h2::fleet::run(&mega.cluster, &fleet_trace, &faulty_opts).unwrap();
+        std::hint::black_box(tl.metrics.goodput_fraction);
+    });
+
     // DiComm collectives: 8-rank allreduce over 1M floats, flat ring vs
     // the two-level hierarchical schedule (2 nodes x 4 ranks). Link times
     // come from the Chip-B server spec via the DP-group topology (TP 2

@@ -122,6 +122,15 @@ impl Default for ReplanOptions {
     }
 }
 
+impl ReplanOptions {
+    /// Full-mode options: the pipeline may be reshaped freely. The result
+    /// is generally *not* swap-compatible with the incumbent, so callers
+    /// price it as a checkpoint restart (the fleet cascade's shrink rung).
+    pub fn full() -> ReplanOptions {
+        ReplanOptions { keep_pipeline: false, parallel: true }
+    }
+}
+
 /// What [`replan`] returns.
 #[derive(Clone, Debug)]
 pub struct ReplanOutcome {

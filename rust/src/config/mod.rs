@@ -121,6 +121,10 @@ pub struct FleetConfig {
     pub jobs: Option<usize>,
     /// Worker threads for the batched plan-pricing pass (0 = per core).
     pub workers: Option<usize>,
+    /// Cluster fault script: a JSON file path, a decimal generator seed,
+    /// or `pinned` (same grammar as `h2 fleet --faults`, which
+    /// overrides).
+    pub faults: Option<String>,
 }
 
 /// Partial overrides for [`SimOptions`]: only keys actually present in the
@@ -257,6 +261,7 @@ fn parse_fleet(v: &Value) -> Result<FleetConfig> {
         seed: v.opt("seed").map(|x| x.u64()).transpose()?,
         jobs: v.opt("jobs").map(|x| x.usize()).transpose()?,
         workers: v.opt("workers").map(|x| x.usize()).transpose()?,
+        faults: v.opt("faults").map(|x| x.str().map(str::to_string)).transpose()?,
     })
 }
 
@@ -519,18 +524,19 @@ mod tests {
     #[test]
     fn fleet_section_parses_and_is_optional() {
         let c = Config::parse(r#"{"fleet": {"policy": "priority", "seed": 42,
-            "jobs": 12, "workers": 4, "trace": "trace.json"}}"#).unwrap();
+            "jobs": 12, "workers": 4, "trace": "trace.json", "faults": "pinned"}}"#).unwrap();
         let f = c.fleet.unwrap();
         assert_eq!(f.policy, Some(crate::fleet::Policy::PriorityBackfill));
         assert_eq!(f.seed, Some(42));
         assert_eq!(f.jobs, Some(12));
         assert_eq!(f.workers, Some(4));
         assert_eq!(f.trace.as_deref(), Some("trace.json"));
+        assert_eq!(f.faults.as_deref(), Some("pinned"));
         // A partial section leaves the rest unset for the CLI defaults.
         let c = Config::parse(r#"{"fleet": {"policy": "fifo"}}"#).unwrap();
         let f = c.fleet.unwrap();
         assert_eq!(f.policy, Some(crate::fleet::Policy::Fifo));
-        assert!(f.seed.is_none() && f.trace.is_none());
+        assert!(f.seed.is_none() && f.trace.is_none() && f.faults.is_none());
         // Bad policy tokens fail loudly; no section at all is fine.
         assert!(Config::parse(r#"{"fleet": {"policy": "bogus"}}"#).is_err());
         assert!(Config::parse("{}").unwrap().fleet.is_none());

@@ -3,13 +3,23 @@
 //! Binary format (little-endian), one file per pipeline stage:
 //!
 //! ```text
-//! magic "H2CKPT01" | step u64 | n_tensors u64 |
+//! magic "H2CKPT02" | step u64 | n_tensors u64 |
 //!   per tensor: name_len u64, name bytes, rank u64, dims u64..., f32 data
+//! | fnv1a u64 over everything after the magic
 //! ```
 //!
 //! Params, Adam m and Adam v are stored as three named sections
 //! (`p.<name>`, `m.<name>`, `v.<name>`), so a checkpoint restores training
 //! exactly (bitwise) on the same artifact set.
+//!
+//! The trailing checksum (the crate-wide [`fnv1a`]) makes payload
+//! corruption — a flipped bit on disk, a torn write — a typed
+//! [`CheckpointError::ChecksumMismatch`] instead of a garbage restore or
+//! an incidental parse error. V1 checkpoints (`H2CKPT01`, no trailer)
+//! still load unchanged; everything saves as v2. The resume path treats
+//! a checksum failure like a missing file and falls back to the previous
+//! generation retained by `keep_last` (see
+//! [`crate::coordinator::train_virtual`]).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -17,8 +27,38 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{HostTensor, ParamMeta};
+use crate::util::hash::fnv1a;
 
-const MAGIC: &[u8; 8] = b"H2CKPT01";
+const MAGIC_V1: &[u8; 8] = b"H2CKPT01";
+const MAGIC: &[u8; 8] = b"H2CKPT02";
+
+/// A typed checkpoint-integrity failure, downcastable from the anyhow
+/// error chain so callers can tell corruption apart from layout
+/// mismatches or I/O errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The v2 trailer checksum did not match the payload: the file was
+    /// corrupted after it was written.
+    ChecksumMismatch {
+        /// Checksum stored in the file's trailer.
+        stored: u64,
+        /// Checksum recomputed over the payload.
+        computed: u64,
+    },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checkpoint payload corrupt: stored checksum {stored:#018x} != computed {computed:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// A stage's full training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -87,35 +127,57 @@ fn read_tensor(r: &mut impl Read) -> Result<(String, HostTensor)> {
     Ok((name, HostTensor::F32 { shape, data }))
 }
 
-/// Save one stage's state.
+/// Save one stage's state (always the checksummed v2 format). The file
+/// is assembled in memory and written in one call, so a crash mid-save
+/// leaves either the old file or a file whose trailer will fail
+/// verification — never a silently-half-written checkpoint that parses.
 pub fn save(path: impl AsRef<Path>, metas: &[ParamMeta], state: &StageState) -> Result<()> {
-    let mut w = std::io::BufWriter::new(
-        std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {:?}", path.as_ref()))?,
-    );
-    w.write_all(MAGIC)?;
-    write_u64(&mut w, state.step)?;
-    write_u64(&mut w, 3 * metas.len() as u64)?;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    write_u64(&mut buf, state.step)?;
+    write_u64(&mut buf, 3 * metas.len() as u64)?;
     for (section, tensors) in [("p", &state.params), ("m", &state.m), ("v", &state.v)] {
         anyhow::ensure!(tensors.len() == metas.len(), "tensor/meta arity mismatch");
         for (meta, t) in metas.iter().zip(tensors.iter()) {
-            write_tensor(&mut w, &format!("{section}.{}", meta.name), t)?;
+            write_tensor(&mut buf, &format!("{section}.{}", meta.name), t)?;
         }
     }
+    let sum = fnv1a(buf[MAGIC.len()..].iter().copied());
+    buf.extend_from_slice(&sum.to_le_bytes());
+    std::fs::write(path.as_ref(), &buf).with_context(|| format!("writing {:?}", path.as_ref()))?;
     Ok(())
 }
 
-/// Load one stage's state, validating against the artifact's param layout.
+/// Load one stage's state, validating against the artifact's param
+/// layout. V2 files verify their trailing checksum first (a mismatch is
+/// a typed [`CheckpointError::ChecksumMismatch`]); v1 files parse as
+/// before.
 pub fn load(path: impl AsRef<Path>, metas: &[ParamMeta]) -> Result<StageState> {
-    let mut r = std::io::BufReader::new(
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {:?}", path.as_ref()))?,
-    );
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    if bytes.len() < MAGIC.len() {
         bail!("not an H2 checkpoint (bad magic)");
     }
+    let (magic, rest) = bytes.split_at(MAGIC.len());
+    let body: &[u8] = if magic == MAGIC {
+        // V2: the last 8 bytes are the fnv1a of everything between the
+        // magic and the trailer.
+        if rest.len() < 8 {
+            bail!("corrupt checkpoint: v2 file too short for its checksum trailer");
+        }
+        let (payload, trailer) = rest.split_at(rest.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+        let computed = fnv1a(payload.iter().copied());
+        if stored != computed {
+            return Err(CheckpointError::ChecksumMismatch { stored, computed }.into());
+        }
+        payload
+    } else if magic == MAGIC_V1 {
+        rest
+    } else {
+        bail!("not an H2 checkpoint (bad magic)");
+    };
+    let mut r: &[u8] = body;
     let step = read_u64(&mut r)?;
     let n = read_u64(&mut r)? as usize;
     if n != 3 * metas.len() {
@@ -159,30 +221,68 @@ mod tests {
         d.join(name)
     }
 
-    #[test]
-    fn roundtrip_is_bitwise_exact() {
+    fn sample(step: u64, seed: u64) -> (Vec<ParamMeta>, StageState) {
         let metas = metas();
         let state = StageState {
-            step: 42,
-            params: init_params(&metas, 7),
-            m: init_params(&metas, 8),
+            step,
+            params: init_params(&metas, seed),
+            m: init_params(&metas, seed + 1),
             v: zeros_like(&metas),
         };
+        (metas, state)
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let (metas, state) = sample(42, 7);
         let p = tmp("roundtrip.ckpt");
         save(&p, &metas, &state).unwrap();
+        let loaded = load(&p, &metas).unwrap();
+        assert_eq!(loaded, state);
+        // And the file on disk really is v2 with a verifying trailer.
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], MAGIC);
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(stored, fnv1a(bytes[8..bytes.len() - 8].iter().copied()));
+    }
+
+    #[test]
+    fn payload_bit_flip_is_a_typed_checksum_mismatch() {
+        let (metas, state) = sample(9, 3);
+        let p = tmp("bitflip.ckpt");
+        save(&p, &metas, &state).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip one bit deep in the tensor payload: the shapes and names
+        // still parse, so only the checksum can catch this.
+        let i = bytes.len() / 2;
+        bytes[i] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p, &metas).unwrap_err();
+        let ck = err.downcast_ref::<CheckpointError>();
+        assert!(
+            matches!(ck, Some(CheckpointError::ChecksumMismatch { .. })),
+            "expected a typed checksum mismatch, got: {err}"
+        );
+    }
+
+    #[test]
+    fn v1_files_without_trailer_still_load() {
+        let (metas, state) = sample(17, 5);
+        let p = tmp("v1compat.ckpt");
+        save(&p, &metas, &state).unwrap();
+        // A v1 file is exactly a v2 file minus the trailer, with the old
+        // magic — the payload encoding never changed.
+        let bytes = std::fs::read(&p).unwrap();
+        let mut v1 = bytes[..bytes.len() - 8].to_vec();
+        v1[..8].copy_from_slice(MAGIC_V1);
+        std::fs::write(&p, &v1).unwrap();
         let loaded = load(&p, &metas).unwrap();
         assert_eq!(loaded, state);
     }
 
     #[test]
     fn wrong_layout_rejected() {
-        let metas = metas();
-        let state = StageState {
-            step: 1,
-            params: init_params(&metas, 1),
-            m: zeros_like(&metas),
-            v: zeros_like(&metas),
-        };
+        let (metas, state) = sample(1, 1);
         let p = tmp("layout.ckpt");
         save(&p, &metas, &state).unwrap();
         // Loading against a different layout must fail loudly.
@@ -203,13 +303,7 @@ mod tests {
 
     #[test]
     fn truncated_file_rejected() {
-        let metas = metas();
-        let state = StageState {
-            step: 3,
-            params: init_params(&metas, 2),
-            m: zeros_like(&metas),
-            v: zeros_like(&metas),
-        };
+        let (metas, state) = sample(3, 2);
         let p = tmp("trunc.ckpt");
         save(&p, &metas, &state).unwrap();
         let bytes = std::fs::read(&p).unwrap();

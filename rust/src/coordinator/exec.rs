@@ -134,6 +134,12 @@ pub struct VirtualReport {
     /// [`crate::elastic::StepMonitor`] compares against its predictions;
     /// a fault factor of k shows up as a ×k ratio here.
     pub stage_compute_seconds: Vec<Vec<f64>>,
+    /// DP-rank-0 full-step seconds per stage per executed step
+    /// (`[stage][step - start_step]`): compute plus the exposed DP-sync
+    /// slice — what a wall-clock step heartbeat would time. A
+    /// `NicDegrade` never touches compute, so this is the stream where
+    /// it becomes observable (the sync slice scales by the NIC factor).
+    pub stage_step_seconds: Vec<Vec<f64>>,
 }
 
 const DIR_FWD: u64 = 0;
@@ -222,6 +228,63 @@ fn gen_dir(dir: &std::path::Path, step: u64) -> PathBuf {
     dir.join(format!("step{step}"))
 }
 
+/// Resolve a resume directory to the newest usable checkpoint
+/// generation: one whose every stage file loads (checksum-verified, see
+/// [`checkpoint::CheckpointError`]) and agrees on the step. The flat
+/// per-stage files are probed first; if any is corrupt, missing, or
+/// inconsistent, the archived `step{N}/` generations are scanned
+/// newest-first. A bit-flipped latest checkpoint therefore degrades the
+/// resume to the previous generation retained by `keep_last` instead of
+/// aborting the run.
+pub(crate) fn resolve_resume(
+    dir: &std::path::Path,
+    s_n: usize,
+    metas: &[ParamMeta],
+) -> Result<(u64, PathBuf)> {
+    fn probe(dir: &std::path::Path, s_n: usize, metas: &[ParamMeta]) -> Option<u64> {
+        let mut step = None;
+        for s in 0..s_n {
+            let state = checkpoint::load(stage_ckpt_path(dir, s), metas).ok()?;
+            match step {
+                None => step = Some(state.step),
+                Some(prev) if prev != state.step => return None,
+                Some(_) => {}
+            }
+        }
+        step
+    }
+    if let Some(step) = probe(dir, s_n, metas) {
+        return Ok((step, dir.to_path_buf()));
+    }
+    let mut gens: Vec<u64> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            if let Some(step) = name
+                .to_str()
+                .and_then(|n| n.strip_prefix("step"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                gens.push(step);
+            }
+        }
+    }
+    gens.sort_unstable_by(|a, b| b.cmp(a));
+    for &step in &gens {
+        let gen = gen_dir(dir, step);
+        // A generation dir must agree with its own name — anything else
+        // is corruption, not a candidate.
+        if probe(&gen, s_n, metas) == Some(step) {
+            return Ok((step, gen));
+        }
+    }
+    bail!(
+        "no usable checkpoint under {dir:?}: the flat stage files and {} archived \
+         generation(s) all failed integrity or consistency checks",
+        gens.len()
+    )
+}
+
 /// Prune archived checkpoint generations down to the newest `keep_last`
 /// *complete* ones (a generation is complete when all `s_n` stage files
 /// exist). Incomplete generations are never touched — a concurrently
@@ -263,6 +326,9 @@ struct VShared {
     params: Mutex<Vec<Vec<f32>>>,
     /// compute[stage][step - start_step], dp rank 0's compute-only seconds.
     compute: Mutex<Vec<Vec<f64>>>,
+    /// step_secs[stage][step - start_step], dp rank 0's compute + exposed
+    /// DP-sync seconds (the wall-clock heartbeat stream).
+    step_secs: Mutex<Vec<Vec<f64>>>,
 }
 
 struct VCtx {
@@ -336,16 +402,18 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         _ => (opts.steps, None),
     };
 
-    // Resume: the leader reads stage 0's checkpoint to learn the start
-    // step; every worker re-validates its own stage file against it.
-    let start_step = match &opts.resume_from {
+    // Resume: the leader resolves the newest usable generation (falling
+    // back past corrupt flat files), then every worker loads + validates
+    // its own stage file from that resolved directory.
+    let resume = match &opts.resume_from {
         Some(dir) => {
-            let state = checkpoint::load(stage_ckpt_path(dir, 0), &chunk_metas(v))
-                .context("reading resume checkpoint for stage 0")?;
-            state.step as usize
+            let (step, from) = resolve_resume(dir, s_n, &chunk_metas(v))
+                .context("resolving resume checkpoint")?;
+            Some((step as usize, from))
         }
-        None => 0,
+        None => None,
     };
+    let start_step = resume.as_ref().map_or(0, |(step, _)| *step);
     ensure!(
         start_step < steps,
         "resume checkpoint is at step {start_step}, nothing left of a {steps}-step run",
@@ -380,6 +448,7 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         comm_ns: AtomicU64::new(0),
         params: Mutex::new(vec![Vec::new(); s_n]),
         compute: Mutex::new(vec![vec![0.0; executed]; s_n]),
+        step_secs: Mutex::new(vec![vec![0.0; executed]; s_n]),
     });
 
     // Hop latencies are charged per logical edge through
@@ -419,7 +488,7 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
                     .as_ref()
                     .map(|d| (d.clone(), opts.checkpoint_every)),
                 keep_last: opts.keep_last,
-                resume_from: opts.resume_from.clone(),
+                resume_from: resume.as_ref().map(|(_, from)| from.clone()),
                 faults: faults.clone(),
             };
             handles.push(std::thread::spawn(move || vworker(ctx, ep)));
@@ -444,6 +513,7 @@ pub fn train_virtual(plan: &ExecutionPlan, opts: &VirtualOptions) -> Result<Virt
         final_params: shared.params.lock().unwrap().clone(),
         halted_at,
         stage_compute_seconds: shared.compute.lock().unwrap().clone(),
+        stage_step_seconds: shared.step_secs.lock().unwrap().clone(),
     })
 }
 
@@ -602,8 +672,9 @@ fn vworker(ctx: VCtx, mut ep: Endpoint) -> Result<()> {
         ep.add_wire(sync);
         step_compute += update;
         if ctx.dp_rank == 0 {
-            ctx.shared.compute.lock().unwrap()[ctx.stage][step - ctx.start_step] =
-                step_compute;
+            let rel = step - ctx.start_step;
+            ctx.shared.compute.lock().unwrap()[ctx.stage][rel] = step_compute;
+            ctx.shared.step_secs.lock().unwrap()[ctx.stage][rel] = step_compute + sync;
         }
 
         // Adam update (gradient averaged over the global batch).
@@ -916,6 +987,49 @@ mod tests {
         .unwrap();
         for step in 1..=4u64 {
             assert!(gen_dir(&dir_all, step).exists(), "keep-all must keep step{step}");
+        }
+    }
+
+    #[test]
+    fn corrupt_flat_checkpoint_falls_back_to_previous_generation() {
+        let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+        let dir = std::env::temp_dir().join("h2_virt_ckpt_fallback");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 8, ..Default::default() },
+        )
+        .unwrap();
+        train_virtual(
+            &plan,
+            &VirtualOptions {
+                steps: 6,
+                checkpoint_dir: Some(dir.clone()),
+                checkpoint_every: 2,
+                keep_last: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Flip one payload byte in every step-6 copy of stage 0 — the
+        // flat file and the archived generation — so the only intact
+        // checkpoint is the step-4 generation kept by `keep_last`.
+        for p in [stage_ckpt_path(&dir, 0), stage_ckpt_path(&gen_dir(&dir, 6), 0)] {
+            let mut bytes = std::fs::read(&p).unwrap();
+            let i = bytes.len() - 16;
+            bytes[i] ^= 0xFF;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let resumed = train_virtual(
+            &plan,
+            &VirtualOptions { steps: 8, resume_from: Some(dir.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.start_step, 4, "must fall back to the step-4 generation");
+        assert_eq!(resumed.losses, full.losses[4..], "fallback resume drifted");
+        for (a, b) in resumed.final_params.iter().zip(&full.final_params) {
+            assert_eq!(a, b, "fallback final params drifted");
         }
     }
 

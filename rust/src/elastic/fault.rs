@@ -49,13 +49,58 @@ pub enum FaultKind {
 }
 
 impl FaultKind {
-    fn token(&self) -> &'static str {
+    /// Stable serialization token, shared by per-job [`FaultPlan`] JSON and
+    /// the fleet-level `ClusterFaultPlan` JSON (`crate::fleet`).
+    pub fn token(&self) -> &'static str {
         match self {
             FaultKind::ChipDeath { .. } => "chip-death",
             FaultKind::Slowdown { .. } => "slowdown",
             FaultKind::NicDegrade { .. } => "nic-degrade",
             FaultKind::Recover => "recover",
         }
+    }
+
+    /// Push the kind's payload fields (`nodes` / `factor`) onto a JSON
+    /// object under construction — the inverse of [`FaultKind::from_json`].
+    pub fn push_json_fields(&self, fields: &mut Vec<(&'static str, Value)>) {
+        match *self {
+            FaultKind::ChipDeath { nodes } => fields.push(("nodes", json::num(nodes as f64))),
+            FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
+                fields.push(("factor", json::num(factor)));
+            }
+            FaultKind::Recover => {}
+        }
+    }
+
+    /// Parse a kind from an event object carrying a `kind` token plus the
+    /// payload fields written by [`FaultKind::push_json_fields`].
+    pub fn from_json(e: &Value) -> Result<FaultKind> {
+        Ok(match e.get("kind")?.str()? {
+            "chip-death" => FaultKind::ChipDeath { nodes: e.get("nodes")?.usize()? },
+            "slowdown" => FaultKind::Slowdown { factor: e.get("factor")?.num()? },
+            "nic-degrade" => FaultKind::NicDegrade { factor: e.get("factor")?.num()? },
+            "recover" => FaultKind::Recover,
+            other => bail!("unknown fault kind `{other}`"),
+        })
+    }
+
+    /// Structural validation shared by both fault-plan layers: factors must
+    /// be positive finite, a death must kill at least one node.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
+                if !factor.is_finite() || factor <= 0.0 {
+                    bail!("fault factor {factor} is not positive finite");
+                }
+            }
+            FaultKind::ChipDeath { nodes } => {
+                if nodes == 0 {
+                    bail!("chip-death event kills zero nodes");
+                }
+            }
+            FaultKind::Recover => {}
+        }
+        Ok(())
     }
 }
 
@@ -165,19 +210,9 @@ impl FaultPlan {
                 bail!("fault event at step {} targets stage {} of a {s_n}-stage pipeline",
                       e.step, e.stage);
             }
-            match e.kind {
-                FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
-                    if !factor.is_finite() || factor <= 0.0 {
-                        bail!("fault factor {factor} at step {} is not positive finite", e.step);
-                    }
-                }
-                FaultKind::ChipDeath { nodes } => {
-                    if nodes == 0 {
-                        bail!("chip-death event at step {} kills zero nodes", e.step);
-                    }
-                }
-                FaultKind::Recover => {}
-            }
+            e.kind
+                .validate()
+                .map_err(|err| anyhow!("{err} (event at step {})", e.step))?;
         }
         Ok(())
     }
@@ -194,15 +229,7 @@ impl FaultPlan {
                     ("stage", json::num(e.stage as f64)),
                     ("kind", json::s(e.kind.token())),
                 ];
-                match e.kind {
-                    FaultKind::ChipDeath { nodes } => {
-                        fields.push(("nodes", json::num(nodes as f64)));
-                    }
-                    FaultKind::Slowdown { factor } | FaultKind::NicDegrade { factor } => {
-                        fields.push(("factor", json::num(factor)));
-                    }
-                    FaultKind::Recover => {}
-                }
+                e.kind.push_json_fields(&mut fields);
                 json::obj(fields)
             })
             .collect();
@@ -220,17 +247,10 @@ impl FaultPlan {
         };
         let mut events = Vec::new();
         for e in v.get("events")?.arr()? {
-            let kind = match e.get("kind")?.str()? {
-                "chip-death" => FaultKind::ChipDeath { nodes: e.get("nodes")?.usize()? },
-                "slowdown" => FaultKind::Slowdown { factor: e.get("factor")?.num()? },
-                "nic-degrade" => FaultKind::NicDegrade { factor: e.get("factor")?.num()? },
-                "recover" => FaultKind::Recover,
-                other => bail!("unknown fault kind `{other}`"),
-            };
             events.push(FaultEvent {
                 step: e.get("step")?.usize()?,
                 stage: e.get("stage")?.usize()?,
-                kind,
+                kind: FaultKind::from_json(e)?,
             });
         }
         Ok(FaultPlan { seed, events })

@@ -110,6 +110,14 @@ impl StepMonitor {
         self.expected.len()
     }
 
+    /// Predicted healthy compute seconds per stage — the baseline every
+    /// observation is compared against. The fleet layer uses this to
+    /// synthesize observations when it projects a cluster fault onto a
+    /// running job's monitor.
+    pub fn expected(&self) -> &[f64] {
+        &self.expected
+    }
+
     /// Feed one observation: `seconds` is the replica's compute time for
     /// this step, `None` a missed heartbeat. Returns the debounced event
     /// this observation fires, if any.

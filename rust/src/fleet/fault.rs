@@ -1,0 +1,394 @@
+//! Cluster-level fault domains: wall-clock fault scripts for the fleet.
+//!
+//! A [`ClusterFaultPlan`] is the fleet-scale sibling of the per-job
+//! [`crate::elastic::FaultPlan`]: the same [`FaultKind`] vocabulary
+//! (chip death, compute slowdown, NIC degradation, recovery), but keyed
+//! by `(chip kind, node, wall-clock seconds)` instead of
+//! `(step, stage)` — a cluster does not know which job's step it is
+//! breaking. [`crate::fleet::run`] projects each fault onto whichever
+//! job owns the struck node at that instant (or onto the free pool) and
+//! walks the graceful-degradation cascade; see the module docs of
+//! [`crate::fleet`].
+//!
+//! Plans are seedable ([`ClusterFaultPlan::generate`]), hand-authorable
+//! (JSON, same kind tokens as per-job fault files), and — for the pinned
+//! contrast scenario — derivable from a healthy timeline
+//! ([`ClusterFaultPlan::pinned_for`]), which places one survivable
+//! single-node death inside the first job's window and one unsurvivable
+//! whole-group death inside the second job's window.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::elastic::FaultKind;
+use crate::hetero::{ChipKind, Cluster};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+use super::sim::{FleetEventKind, FleetTimeline};
+
+/// One scheduled cluster fault: `kind` strikes node `node` of the
+/// cluster's `chip` group at wall-clock time `t_seconds`.
+///
+/// For [`FaultKind::ChipDeath`] the event kills `nodes` whole nodes
+/// starting at `node`; every other kind targets the single node `node`.
+/// A [`FaultKind::Recover`] on a dead node returns it to the free pool;
+/// on a degraded node it clears the degradation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterFault {
+    /// Wall-clock fleet time the fault strikes, seconds.
+    pub t_seconds: f64,
+    /// Chip group the struck node belongs to.
+    pub chip: ChipKind,
+    /// Node index within the chip group (whole-node granularity — chips
+    /// share fate with their node, as in the elastic layer).
+    pub node: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seedable, serializable cluster fault script.
+///
+/// Events are applied in `(t_seconds, chip, node)` order; the fleet loop
+/// sorts its working copy, so hand-written files need not be sorted.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterFaultPlan {
+    /// Seed the plan was generated from (informational for hand-written
+    /// and pinned plans).
+    pub seed: u64,
+    /// The fault script.
+    pub events: Vec<ClusterFault>,
+}
+
+impl ClusterFaultPlan {
+    /// A plan with no events (healthy cluster).
+    pub fn none() -> ClusterFaultPlan {
+        ClusterFaultPlan::default()
+    }
+
+    /// Generate a small random fault script over `horizon_seconds` of
+    /// fleet time: a few transient degradations (each paired with a
+    /// recover) plus one single-node death that recovers before the
+    /// horizon, so a capacity-blocked queue can always drain.
+    /// Deterministic in `seed`.
+    pub fn generate(seed: u64, cluster: &Cluster, horizon_seconds: f64) -> ClusterFaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC1F5_FA17_C1F5_FA17);
+        let groups = cluster.groups_by_memory_desc();
+        let horizon = if horizon_seconds.is_finite() && horizon_seconds > 1.0 {
+            horizon_seconds
+        } else {
+            1.0
+        };
+        let mut events = Vec::new();
+        let n = rng.usize(1, 4);
+        for _ in 0..n {
+            let g = groups[rng.usize(0, groups.len())];
+            let node = rng.usize(0, g.n_nodes());
+            let t = horizon * rng.usize(5, 70) as f64 / 100.0;
+            let factor = 1.0 + rng.usize(5, 30) as f64 / 10.0;
+            let kind = if rng.usize(0, 2) == 0 {
+                FaultKind::Slowdown { factor }
+            } else {
+                FaultKind::NicDegrade { factor }
+            };
+            events.push(ClusterFault { t_seconds: t, chip: g.spec.kind, node, kind });
+            events.push(ClusterFault {
+                t_seconds: t + horizon * 0.08,
+                chip: g.spec.kind,
+                node,
+                kind: FaultKind::Recover,
+            });
+        }
+        let g = groups[rng.usize(0, groups.len())];
+        let node = rng.usize(0, g.n_nodes());
+        let t = horizon * rng.usize(40, 75) as f64 / 100.0;
+        events.push(ClusterFault {
+            t_seconds: t,
+            chip: g.spec.kind,
+            node,
+            kind: FaultKind::ChipDeath { nodes: 1 },
+        });
+        events.push(ClusterFault {
+            t_seconds: t + horizon * 0.2,
+            chip: g.spec.kind,
+            node,
+            kind: FaultKind::Recover,
+        });
+        let mut plan = ClusterFaultPlan { seed, events };
+        plan.sort();
+        plan
+    }
+
+    /// The pinned contrast scenario, derived from a healthy run of the
+    /// pinned trace: one *survivable* single-node death inside job 0's
+    /// window (recovered one iteration later, so the cascade's in-place
+    /// replan is the right answer) and one *unsurvivable* whole-group
+    /// death of the smallest chip group inside job 1's window (recovered
+    /// four iterations later, so requeue-from-checkpoint is the only
+    /// answer). Fault times are placed off the healthy timeline's own
+    /// start/finish/iteration observations, so the scenario lands inside
+    /// both jobs' windows for any cluster the pinned trace fills.
+    pub fn pinned_for(cluster: &Cluster, healthy: &FleetTimeline) -> Result<ClusterFaultPlan> {
+        let window = |job: usize| -> Result<(f64, f64, f64)> {
+            let mut start_iter = None;
+            let mut finish = None;
+            for e in &healthy.events {
+                if e.job != job {
+                    continue;
+                }
+                match e.kind {
+                    FleetEventKind::Start { iteration_seconds, .. } if start_iter.is_none() => {
+                        start_iter = Some((e.t_seconds, iteration_seconds));
+                    }
+                    FleetEventKind::Finish => finish = Some(e.t_seconds),
+                    _ => {}
+                }
+            }
+            match (start_iter, finish) {
+                (Some((s, i)), Some(f)) if i > 0.0 && f > s => Ok((s, i, f)),
+                _ => bail!(
+                    "pinned fault plan needs job {job}'s start and finish in the healthy timeline"
+                ),
+            }
+        };
+        let (s0, i0, f0) = window(0)?;
+        let (s1, i1, f1) = window(1)?;
+        let groups = cluster.groups_by_memory_desc();
+        ensure!(!groups.is_empty(), "cannot author faults for an empty cluster");
+        let most = groups.iter().max_by_key(|g| g.n_nodes()).unwrap();
+        let few = groups.iter().min_by_key(|g| g.n_nodes()).unwrap();
+        ensure!(
+            most.n_nodes() >= 2,
+            "pinned fault plan needs a chip group with at least two nodes"
+        );
+        // Survivable death: one node of the largest group, ~10.5
+        // iterations before job 0's healthy finish (so the remaining work
+        // is long enough to make in-place recovery worth it), back one
+        // iteration later.
+        let t1 = (f0 - 10.5 * i0).max(s0 + 0.25 * i0);
+        let n1 = most.n_nodes() - 1;
+        // Unsurvivable death: the whole smallest group, half an iteration
+        // before job 1's healthy finish — rolled back to its checkpoint
+        // grid, requeued, and re-placed when the group recovers four
+        // iterations later.
+        let t2 = (f1 - 0.5 * i1).max(s1.max(t1 + 1.25 * i0) + 0.25 * i1);
+        let t3 = t2 + 4.0 * i1;
+        let mut events = vec![
+            ClusterFault {
+                t_seconds: t1,
+                chip: most.spec.kind,
+                node: n1,
+                kind: FaultKind::ChipDeath { nodes: 1 },
+            },
+            ClusterFault {
+                t_seconds: t1 + i0,
+                chip: most.spec.kind,
+                node: n1,
+                kind: FaultKind::Recover,
+            },
+            ClusterFault {
+                t_seconds: t2,
+                chip: few.spec.kind,
+                node: 0,
+                kind: FaultKind::ChipDeath { nodes: few.n_nodes() },
+            },
+        ];
+        for node in 0..few.n_nodes() {
+            events.push(ClusterFault {
+                t_seconds: t3,
+                chip: few.spec.kind,
+                node,
+                kind: FaultKind::Recover,
+            });
+        }
+        let mut plan = ClusterFaultPlan { seed: healthy.trace_seed, events };
+        plan.sort();
+        plan.validate(cluster)?;
+        Ok(plan)
+    }
+
+    /// Sort events into the fleet loop's application order:
+    /// `(t_seconds, chip, node)`, stable for ties.
+    pub fn sort(&mut self) {
+        self.events.sort_by(|a, b| {
+            a.t_seconds
+                .total_cmp(&b.t_seconds)
+                .then_with(|| a.chip.name().cmp(b.chip.name()))
+                .then_with(|| a.node.cmp(&b.node))
+        });
+    }
+
+    /// Structural validation against the cluster the plan will strike.
+    pub fn validate(&self, cluster: &Cluster) -> Result<()> {
+        for e in &self.events {
+            if !e.t_seconds.is_finite() || e.t_seconds < 0.0 {
+                bail!("cluster fault at t={} is not a finite non-negative time", e.t_seconds);
+            }
+            let group = cluster.group(e.chip).map_err(|err| {
+                anyhow!("cluster fault at t={} targets a missing group: {err}", e.t_seconds)
+            })?;
+            let n_nodes = group.n_nodes();
+            let span = match e.kind {
+                FaultKind::ChipDeath { nodes } => nodes,
+                _ => 1,
+            };
+            if e.node >= n_nodes || n_nodes - e.node < span {
+                bail!(
+                    "cluster fault at t={} targets nodes {}..{} of a {n_nodes}-node {} group",
+                    e.t_seconds,
+                    e.node,
+                    e.node + span,
+                    e.chip
+                );
+            }
+            e.kind
+                .validate()
+                .map_err(|err| anyhow!("{err} (cluster fault at t={})", e.t_seconds))?;
+        }
+        Ok(())
+    }
+
+    /// Serialize (seeds travel as decimal strings, like every other seed
+    /// in the repo, so full-range u64 values survive the f64 JSON number
+    /// space).
+    pub fn to_json(&self) -> Value {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("t_seconds", json::num(e.t_seconds)),
+                    ("chip", json::s(e.chip.name())),
+                    ("node", json::num(e.node as f64)),
+                    ("kind", json::s(e.kind.token())),
+                ];
+                e.kind.push_json_fields(&mut fields);
+                json::obj(fields)
+            })
+            .collect();
+        json::obj(vec![
+            ("seed", json::s(&self.seed.to_string())),
+            ("events", json::arr(events)),
+        ])
+    }
+
+    /// Parse a serialized cluster fault plan.
+    pub fn from_json(v: &Value) -> Result<ClusterFaultPlan> {
+        let seed = match v.get("seed")? {
+            Value::Str(s) => {
+                s.parse::<u64>().map_err(|e| anyhow!("bad cluster fault seed `{s}`: {e}"))?
+            }
+            other => other.u64()?,
+        };
+        let mut events = Vec::new();
+        for e in v.get("events")?.arr()? {
+            let name = e.get("chip")?.str()?;
+            let chip = ChipKind::parse(name)
+                .ok_or_else(|| anyhow!("unknown chip kind `{name}` in cluster fault plan"))?;
+            events.push(ClusterFault {
+                t_seconds: e.get("t_seconds")?.num()?,
+                chip,
+                node: e.get("node")?.usize()?,
+                kind: FaultKind::from_json(e)?,
+            });
+        }
+        Ok(ClusterFaultPlan { seed, events })
+    }
+
+    /// Load a cluster fault plan from a JSON file (the `h2 fleet
+    /// --faults <file>` path).
+    pub fn load(path: &str) -> Result<ClusterFaultPlan> {
+        ClusterFaultPlan::from_json(&Value::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::experiment;
+    use crate::util::prop;
+
+    fn lab() -> Cluster {
+        Cluster::new("lab", vec![(ChipKind::A, 64), (ChipKind::B, 64)])
+    }
+
+    fn sample() -> ClusterFaultPlan {
+        ClusterFaultPlan {
+            seed: u64::MAX - 3, // exercises the decimal-string seed path
+            events: vec![
+                ClusterFault {
+                    t_seconds: 10.0,
+                    chip: ChipKind::B,
+                    node: 7,
+                    kind: FaultKind::ChipDeath { nodes: 1 },
+                },
+                ClusterFault {
+                    t_seconds: 12.5,
+                    chip: ChipKind::A,
+                    node: 2,
+                    kind: FaultKind::Slowdown { factor: 2.0 },
+                },
+                ClusterFault {
+                    t_seconds: 20.0,
+                    chip: ChipKind::A,
+                    node: 2,
+                    kind: FaultKind::Recover,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let plan = sample();
+        let back = ClusterFaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        let text = plan.to_json().to_string_pretty();
+        let back = ClusterFaultPlan::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn validation_rejects_out_of_cluster_targets() {
+        let lab = lab();
+        assert!(sample().validate(&lab).is_ok());
+        let mut bad = sample();
+        bad.events[0].node = 8; // B has 64 / 8 = 8 nodes: 0..8
+        assert!(bad.validate(&lab).is_err());
+        let mut bad = sample();
+        bad.events[0].kind = FaultKind::ChipDeath { nodes: 9 };
+        bad.events[0].node = 0;
+        assert!(bad.validate(&lab).is_err(), "death span must fit the group");
+        let mut bad = sample();
+        bad.events[1].kind = FaultKind::Slowdown { factor: 0.0 };
+        assert!(bad.validate(&lab).is_err());
+        let mut bad = sample();
+        bad.events[0].chip = ChipKind::C;
+        assert!(bad.validate(&lab).is_err(), "lab has no C group");
+    }
+
+    #[test]
+    fn generated_plans_are_deterministic_valid_and_roundtrip() {
+        let mega = experiment("exp-mega").unwrap().cluster;
+        prop::check(50, |rng| {
+            let seed = rng.next_u64();
+            let horizon = 100.0 + rng.usize(0, 10_000) as f64;
+            let a = ClusterFaultPlan::generate(seed, &mega, horizon);
+            let b = ClusterFaultPlan::generate(seed, &mega, horizon);
+            prop::assert_prop(a == b, "generation must be deterministic in the seed")?;
+            a.validate(&mega).map_err(|e| format!("invalid: {e}"))?;
+            prop::assert_prop(
+                a.events
+                    .iter()
+                    .any(|e| matches!(e.kind, FaultKind::ChipDeath { .. })),
+                "generated plans include a death",
+            )?;
+            prop::assert_prop(
+                a.events.windows(2).all(|w| w[0].t_seconds <= w[1].t_seconds),
+                "generated plans are sorted by time",
+            )?;
+            let back = ClusterFaultPlan::from_json(&a.to_json())
+                .map_err(|e| format!("reparse failed: {e}"))?;
+            prop::assert_prop(a == back, "JSON round-trip must be lossless")
+        });
+    }
+}

@@ -208,6 +208,14 @@ impl JobTrace {
         JobTrace { seed: 0, jobs }
     }
 
+    /// A fault-script horizon for this trace: the last arrival plus a
+    /// generous training window. `h2 fleet --faults <seed>` generates
+    /// its [`crate::fleet::ClusterFaultPlan`] over this span so seeded
+    /// faults land while jobs are actually running.
+    pub fn horizon_seconds(&self) -> f64 {
+        self.jobs.iter().map(|j| j.arrival_step).max().unwrap_or(0) as f64 + 600.0
+    }
+
     /// Structural validation: unique ids, sorted arrivals, sane chip
     /// ranges, whole-sequence batches, non-zero step counts.
     pub fn validate(&self) -> Result<()> {

@@ -23,24 +23,31 @@
 //!
 //! * [`job`] — [`JobSpec`], and [`JobTrace`]: the serializable job queue
 //!   with a deterministic, seedable arrival-trace generator.
-//! * [`sched`] — the free pool, vendor-aware whole-node carving, the
-//!   HeteroAuto inner solver, and preempt-by-resize via
-//!   [`crate::auto::replan`].
-//! * [`sim`] — the fleet event loop, the batched plan-pricing pass, and
-//!   the machine-readable [`FleetTimeline`] + [`FleetMetrics`].
+//! * [`sched`] — the free pool (with its dead-chip ledger), vendor-aware
+//!   whole-node carving, the HeteroAuto inner solver, preempt-by-resize,
+//!   and the first two cascade rungs via [`crate::auto::replan`].
+//! * [`fault`] — [`ClusterFaultPlan`]: wall-clock cluster fault scripts
+//!   (seedable, hand-authorable JSON, and the pinned contrast scenario).
+//! * [`sim`] — the fleet event loop, the fault-projection node ledger,
+//!   the graceful-degradation cascade, the batched plan-pricing pass,
+//!   and the machine-readable [`FleetTimeline`] + [`FleetMetrics`]
+//!   (including the recovery ledger: goodput fraction, recomputed
+//!   steps, total recovery seconds).
 //!
-//! Everything is deterministic: same trace seed + policy ⇒ bit-identical
-//! [`FleetTimeline`], for any simulator worker count. The narrative
-//! guide (schema, policy semantics, metric definitions, a worked
-//! `h2 fleet` walkthrough) is `docs/fleet.md`.
+//! Everything is deterministic: same trace seed + fault plan + policy ⇒
+//! bit-identical [`FleetTimeline`], for any simulator worker count. The
+//! narrative guide (schema, policy semantics, fault semantics, metric
+//! definitions, a worked `h2 fleet` walkthrough) is `docs/fleet.md`.
 
+pub mod fault;
 pub mod job;
 pub mod sched;
 pub mod sim;
 
+pub use fault::{ClusterFault, ClusterFaultPlan};
 pub use job::{JobModel, JobSpec, JobTrace};
-pub use sched::{FreePool, PlaceOutcome, Placement, Policy, Scheduler, Shrink};
+pub use sched::{FreePool, PlaceOutcome, Placement, Policy, Recovery, Scheduler, Shrink};
 pub use sim::{
-    fleet_search_config, run, FleetEvent, FleetEventKind, FleetMetrics, FleetOptions,
-    FleetTimeline, JobOutcome,
+    fleet_search_config, run, FaultResponse, FleetEvent, FleetEventKind, FleetMetrics,
+    FleetOptions, FleetTimeline, JobOutcome, NO_JOB,
 };

@@ -62,6 +62,11 @@ impl Policy {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FreePool {
     free: Vec<(ChipKind, usize)>,
+    /// Chips retired by cluster faults, per kind. Dead capacity is *not*
+    /// free: [`FreePool::carve`] never sees it, and it only returns via
+    /// [`FreePool::recover`]. Zero entries are pruned so a fully-recovered
+    /// pool compares bit-for-bit equal to a never-faulted one.
+    dead: Vec<(ChipKind, usize)>,
 }
 
 impl FreePool {
@@ -73,12 +78,67 @@ impl FreePool {
                 .into_iter()
                 .map(|g| (g.spec.kind, g.n_chips))
                 .collect(),
+            dead: Vec::new(),
         }
     }
 
     /// Total idle chips.
     pub fn total(&self) -> usize {
         self.free.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Total chips retired by faults and not yet recovered.
+    pub fn dead_total(&self) -> usize {
+        self.dead.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Idle chips of one kind (0 for kinds the pool has never seen).
+    pub fn free_of(&self, kind: ChipKind) -> usize {
+        self.free.iter().find(|&&(k, _)| k == kind).map_or(0, |&(_, n)| n)
+    }
+
+    /// Retire `chips` *idle* chips of `kind`: they leave the free pool and
+    /// join the dead ledger. Panics on overdraw — the fleet loop only
+    /// retires chips its node ledger says are free.
+    pub fn retire(&mut self, kind: ChipKind, chips: usize) {
+        let slot = self
+            .free
+            .iter_mut()
+            .find(|(k, _)| *k == kind)
+            .unwrap_or_else(|| panic!("retiring {chips} chips of unknown kind {kind:?}"));
+        assert!(slot.1 >= chips, "retiring {chips} idle {kind:?} chips but only {} are free", slot.1);
+        slot.1 -= chips;
+        self.add_dead(kind, chips);
+    }
+
+    /// Retire `chips` chips of `kind` that a job currently holds: they
+    /// never pass through the free pool (the job sheds them directly), but
+    /// the dead ledger still has to know they exist so recovery can return
+    /// them and [`FreePool::dead_total`] stays honest.
+    pub fn retire_held(&mut self, kind: ChipKind, chips: usize) {
+        self.add_dead(kind, chips);
+    }
+
+    /// Return `chips` previously-retired chips of `kind` to the free pool.
+    /// Panics if the dead ledger holds fewer — recover events are
+    /// validated against what actually died.
+    pub fn recover(&mut self, kind: ChipKind, chips: usize) {
+        let slot = self
+            .dead
+            .iter_mut()
+            .find(|(k, _)| *k == kind)
+            .unwrap_or_else(|| panic!("recovering {chips} chips of {kind:?} but none are dead"));
+        assert!(slot.1 >= chips, "recovering {chips} dead {kind:?} chips but only {} died", slot.1);
+        slot.1 -= chips;
+        self.dead.retain(|&(_, n)| n > 0);
+        self.release(&[(kind, chips)]);
+    }
+
+    fn add_dead(&mut self, kind: ChipKind, chips: usize) {
+        match self.dead.iter_mut().find(|(k, _)| *k == kind) {
+            Some(slot) => slot.1 += chips,
+            None => self.dead.push((kind, chips)),
+        }
     }
 
     /// Carve a whole-node allocation of at least `min_chips` and at most
@@ -189,6 +249,41 @@ pub struct Shrink {
     pub idled_chips: usize,
 }
 
+/// A successful in-place recovery of a fault-struck running job — the
+/// first two rungs of the graceful-degradation cascade (the third,
+/// requeue-from-checkpoint, is the fleet loop's own move).
+#[derive(Clone, Debug)]
+pub enum Recovery {
+    /// Rung 1: a pipeline-preserving [`replan`] excluding the dead chips,
+    /// hot-swapped in place. No steps are lost; the job pays the elastic
+    /// recovery ledger (drain + detect + migrate).
+    InPlace {
+        /// The epoch-bumped survivor plan.
+        plan: ExecutionPlan,
+        /// Drain + detect + migrate seconds from [`RecoveryTimeline`].
+        recovery_seconds: f64,
+    },
+    /// Rung 2: a full-mode replan (pipeline reshaped) over the survivors.
+    /// The new pipeline is not swap-compatible, so the job restarts from
+    /// its last checkpoint: it pays drain + detect + restore here and
+    /// recomputes the steps since that checkpoint (charged by the caller).
+    Shrink {
+        /// The reshaped survivor plan.
+        plan: ExecutionPlan,
+        /// Drain + detect + restore seconds.
+        recovery_seconds: f64,
+    },
+}
+
+impl Recovery {
+    /// The survivor plan either rung produced.
+    pub fn plan(&self) -> &ExecutionPlan {
+        match self {
+            Recovery::InPlace { plan, .. } | Recovery::Shrink { plan, .. } => plan,
+        }
+    }
+}
+
 /// The placement engine: one policy, one inner-solver config, one warm
 /// [`ProfileCache`] shared by every placement and resize decision.
 #[derive(Debug, Default)]
@@ -272,6 +367,57 @@ impl Scheduler {
             idled_chips: outcome.idled_chips,
         })
     }
+
+    /// Walk the first two rungs of the fault cascade for a running job
+    /// that just lost `dead_chips` chips of `kind`:
+    ///
+    /// 1. pipeline-preserving replan, priced by the elastic
+    ///    [`RecoveryTimeline`] (drain + detect + migrate);
+    /// 2. full-mode replan over the survivors, priced as a
+    ///    checkpoint-restart (drain + detect + restore) — the caller
+    ///    charges the recomputed steps.
+    ///
+    /// `None` when neither rung produces a plan (e.g. the whole chip
+    /// group died) — the caller falls through to requeue-from-checkpoint.
+    /// `step_seconds` is the victim's per-step time when the fault hit
+    /// (the drain/detect basis); `debounce` is the monitor's window.
+    /// Rung 1 preserves the job's placement contract, so it always runs;
+    /// rung 2 reshapes the pipeline — effectively a new placement — and
+    /// only runs when `allow_shrink` (the caller checks the job's
+    /// `min_chips` against the survivors).
+    pub fn try_recover(
+        &self,
+        victim: &ExecutionPlan,
+        step_seconds: f64,
+        debounce: usize,
+        kind: ChipKind,
+        dead_chips: usize,
+        allow_shrink: bool,
+    ) -> Option<Recovery> {
+        let delta = ClusterDelta::exclude(kind, dead_chips);
+        if let Ok(outcome) = replan(victim, &delta, &self.cache, &ReplanOptions::default()) {
+            if outcome.changed {
+                if let Ok(tl) =
+                    RecoveryTimeline::new(victim, &outcome.plan, step_seconds, debounce, 0.0, 0.0)
+                {
+                    return Some(Recovery::InPlace {
+                        plan: outcome.plan,
+                        recovery_seconds: tl.recovery_seconds(),
+                    });
+                }
+            }
+        }
+        if !allow_shrink {
+            return None;
+        }
+        let outcome = replan(victim, &delta, &self.cache, &ReplanOptions::full()).ok()?;
+        if !outcome.changed {
+            return None;
+        }
+        let recovery_seconds = (1 + debounce) as f64 * step_seconds
+            + crate::elastic::restore_seconds(&outcome.plan);
+        Some(Recovery::Shrink { plan: outcome.plan, recovery_seconds })
+    }
 }
 
 #[cfg(test)]
@@ -314,5 +460,60 @@ mod tests {
         let pool = FreePool::new(&mega);
         assert!(pool.carve(mega.total_chips() + 64, mega.total_chips() + 64).is_none());
         assert!(pool.carve(mega.total_chips(), mega.total_chips()).is_some());
+    }
+
+    #[test]
+    fn carve_never_hands_out_dead_nodes() {
+        // The dead-node invariant: once the cascade retires nodes, no
+        // carve — any min/max, any order — can allocate a dead node's
+        // chips; and retire → recover round-trips the pool bit-for-bit,
+        // including carve behavior.
+        use crate::util::prop;
+        let mega = experiment("exp-mega").unwrap().cluster;
+        let total = mega.total_chips();
+        let groups = mega.groups_by_memory_desc();
+        prop::check(100, |rng| {
+            let mut pool = FreePool::new(&mega);
+            let before = pool.clone();
+            // Retire whole nodes of a random kind (possibly the entire
+            // group), as a node-death fault would.
+            let g = groups[rng.usize(0, groups.len())];
+            let node = g.spec.chips_per_node;
+            let dead_nodes = rng.usize(1, g.n_nodes() + 1);
+            let dead_chips = dead_nodes * node;
+            pool.retire(g.spec.kind, dead_chips);
+            prop::assert_prop(pool.dead_total() == dead_chips, "dead ledger must count the loss")?;
+            prop::assert_prop(
+                pool.total() + pool.dead_total() == total,
+                "free + dead must cover the cluster",
+            )?;
+            // No carve can see the dead capacity.
+            for _ in 0..4 {
+                let max = rng.usize(1, total + 1);
+                let min = rng.usize(1, max + 1);
+                if let Some(alloc) = pool.carve(min, max) {
+                    for &(kind, n) in &alloc {
+                        prop::assert_prop(
+                            n <= pool.free_of(kind),
+                            format!("carve of {n} {kind:?} chips exceeds the surviving pool"),
+                        )?;
+                    }
+                }
+            }
+            prop::assert_prop(
+                pool.carve(total, total).is_none(),
+                "a whole-cluster carve must fail while nodes are dead",
+            )?;
+            // Recovery restores the pool bit-for-bit — including what a
+            // subsequent carve returns.
+            pool.recover(g.spec.kind, dead_chips);
+            prop::assert_prop(pool == before, "retire → recover must round-trip the pool")?;
+            let max = rng.usize(1, total + 1);
+            let min = rng.usize(1, max + 1);
+            prop::assert_prop(
+                pool.carve(min, max) == before.carve(min, max),
+                "recovered pool must carve exactly like a never-faulted one",
+            )
+        });
     }
 }

@@ -1,18 +1,46 @@
-//! The fleet-level event loop, timeline, and metrics.
+//! The fleet-level event loop, timeline, metrics, and fault cascade.
 //!
-//! [`run`] drives a [`JobTrace`] through one cluster: arrivals and
-//! completions advance a modeled fleet clock, every decision point runs
-//! a placement round under the configured [`Policy`], and every plan the
-//! round produces (new placements and resized victims alike) is priced
-//! in a single batched pass over the simulator engine pool
-//! ([`crate::sim::simulate_plans`] semantics, chunked across a
-//! configurable worker count with a fixed reduction order, so
-//! workers = 1 ≡ workers = N bit for bit).
+//! [`run`] drives a [`JobTrace`] through one cluster: arrivals,
+//! completions, and cluster faults advance a modeled fleet clock, every
+//! decision point runs a placement round under the configured
+//! [`Policy`], and every plan the round produces (new placements and
+//! resized victims alike) is priced in a single batched pass over the
+//! simulator engine pool ([`crate::sim::simulate_plans`] semantics,
+//! chunked across a configurable worker count with a fixed reduction
+//! order, so workers = 1 ≡ workers = N bit for bit).
+//!
+//! # Fault domains and the graceful-degradation cascade
+//!
+//! A [`ClusterFaultPlan`] projects wall-clock faults onto whichever job
+//! owns the struck node at that instant (a [`NodeLedger`] tracks
+//! ownership at whole-node granularity). Each projected fault is also
+//! replayed through the victim's own [`StepMonitor`] — the timeline
+//! records whether the job's heartbeat telemetry *would have* detected
+//! it — and then the scheduler walks the cascade:
+//!
+//! 1. **in-place re-plan** (pipeline-preserving [`crate::auto::replan`]
+//!    plus hot-swap, priced by the elastic recovery ledger) — no steps
+//!    lost;
+//! 2. **shrink** (full-mode re-plan over the survivors, restart from the
+//!    last checkpoint on the smaller sub-cluster) — recomputed steps
+//!    charged;
+//! 3. **requeue-from-checkpoint** — the job re-enters the queue *keeping
+//!    its slot*, rolls back to its checkpoint grid, and re-places on the
+//!    surviving pool once its drain window passes;
+//! 4. **terminal reject** — only when the job is provably unplaceable:
+//!    nothing is running, the whole surviving cluster is idle, and no
+//!    future fault event can return capacity.
+//!
+//! Dead nodes leave the [`FreePool`] (vendor- and whole-node-aware) until
+//! a recover event returns them; degradations (slowdown / NIC) re-price
+//! the victim's iteration through the *same* fault-aware simulator the
+//! per-job layer uses, so fleet time and per-job time never disagree.
 //!
 //! The output is a machine-readable [`FleetTimeline`] — every event,
 //! per-job outcomes, and fleet metrics (makespan, p99 job wait,
-//! chip-hour utilization, preemption count). Same trace + same options ⇒
-//! bit-identical timeline JSON.
+//! chip-hour utilization, preemption count, plus the recovery ledger:
+//! goodput fraction, recomputed steps, total recovery seconds). Same
+//! trace + same fault plan + same options ⇒ bit-identical timeline JSON.
 
 use std::thread;
 
@@ -20,14 +48,20 @@ use anyhow::{bail, Result};
 
 use crate::auto::SearchConfig;
 use crate::costmodel::Schedule;
+use crate::elastic::{ElasticEvent, FaultEvent, FaultKind, FaultPlan, MonitorConfig, StepMonitor};
 use crate::hetero::{ChipKind, Cluster};
 use crate::plan::ExecutionPlan;
-use crate::sim::{simulate_plan, simulate_plans};
+use crate::sim::{simulate_plan, simulate_plan_with_faults_workers, simulate_plans};
 use crate::util::json::{self, Value};
 use crate::util::stats;
 
-use super::job::JobTrace;
-use super::sched::{FreePool, PlaceOutcome, Policy, Scheduler};
+use super::fault::{ClusterFault, ClusterFaultPlan};
+use super::job::{JobSpec, JobTrace};
+use super::sched::{FreePool, PlaceOutcome, Placement, Policy, Recovery, Scheduler};
+
+/// The `job` field of a [`FleetEvent`] that concerns no job — a fault
+/// that struck free or already-dead capacity. Serializes as `-1`.
+pub const NO_JOB: usize = usize::MAX;
 
 /// The inner-solver config the fleet uses by default: 1F1B pinned and no
 /// two-stage refinement — sub-clusters are small enough that the coarse
@@ -36,6 +70,37 @@ use super::sched::{FreePool, PlaceOutcome, Policy, Scheduler};
 /// comparable across jobs.
 pub fn fleet_search_config() -> SearchConfig {
     SearchConfig { two_stage: false, ..SearchConfig::pinned(Schedule::OneF1B) }
+}
+
+/// How the fleet reacts to a chip-death fault on a running job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultResponse {
+    /// Walk the graceful-degradation cascade: in-place re-plan, then
+    /// shrink, then requeue-from-checkpoint, then terminal reject.
+    #[default]
+    Cascade,
+    /// Requeue every victim from its last checkpoint — the
+    /// restart-every-victim baseline the cascade is measured against.
+    RestartAlways,
+}
+
+impl FaultResponse {
+    /// The wire/CLI token (`"cascade"` / `"restart"`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            FaultResponse::Cascade => "cascade",
+            FaultResponse::RestartAlways => "restart",
+        }
+    }
+
+    /// Parse a CLI/config token.
+    pub fn parse(text: &str) -> Result<FaultResponse> {
+        match text {
+            "cascade" => Ok(FaultResponse::Cascade),
+            "restart" | "restart-always" => Ok(FaultResponse::RestartAlways),
+            other => bail!("unknown fault response `{other}` (expected cascade or restart)"),
+        }
+    }
 }
 
 /// Knobs for [`run`].
@@ -50,11 +115,26 @@ pub struct FleetOptions {
     /// Inner HeteroAuto solver config (default:
     /// [`fleet_search_config`]).
     pub search: SearchConfig,
+    /// Cluster fault script to inject (`None` = healthy run).
+    pub faults: Option<ClusterFaultPlan>,
+    /// How chip-death faults on running jobs are handled.
+    pub response: FaultResponse,
+    /// Checkpoint cadence every job runs at, in steps — the rollback
+    /// grid for shrink and requeue recoveries (matches the per-job
+    /// `checkpoint_every` of the virtual coordinator).
+    pub checkpoint_every: u64,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        FleetOptions { policy: Policy::Fifo, workers: 0, search: fleet_search_config() }
+        FleetOptions {
+            policy: Policy::Fifo,
+            workers: 0,
+            search: fleet_search_config(),
+            faults: None,
+            response: FaultResponse::Cascade,
+            checkpoint_every: 5,
+        }
     }
 }
 
@@ -79,10 +159,57 @@ pub enum FleetEventKind {
         /// Hot-swap cost charged before the victim resumes.
         migrate_seconds: f64,
     },
+    /// A cluster fault (or recovery) struck — on a running job (`job` is
+    /// the victim) or on free/dead capacity (`job` is [`NO_JOB`]).
+    Fault {
+        /// Chip group of the struck node.
+        chip: ChipKind,
+        /// Node index within the group.
+        node: usize,
+        /// What happened to the node.
+        fault: FaultKind,
+        /// Whether the victim's own step monitor (heartbeats vs the
+        /// plan's predicted stage compute) would have flagged it —
+        /// telemetry only, the cascade always acts on ground truth.
+        detected: bool,
+    },
+    /// Cascade rung 1: the victim re-planned in place around dead chips
+    /// and hot-swapped; no steps lost.
+    Replan {
+        /// Chips the fault killed.
+        dead_chips: usize,
+        /// Per-step time on the surviving sub-cluster.
+        iteration_seconds: f64,
+        /// Drain + detect + migrate cost from the elastic recovery
+        /// ledger, charged before the job resumes.
+        recovery_seconds: f64,
+    },
+    /// Cascade rung 2: the victim's pipeline was reshaped over the
+    /// survivors and restarted from its last checkpoint.
+    FaultShrink {
+        /// Chips the fault killed.
+        dead_chips: usize,
+        /// Per-step time on the reshaped sub-cluster.
+        iteration_seconds: f64,
+        /// Drain + detect + restore cost charged before the job resumes.
+        recovery_seconds: f64,
+        /// Steps since the last checkpoint, recomputed at the new rate.
+        recomputed_steps: u64,
+    },
+    /// Cascade rung 3: the victim released its chips, rolled back to its
+    /// checkpoint grid, and re-entered the queue (keeping its slot).
+    Requeue {
+        /// Steps since the last checkpoint, to be recomputed once the
+        /// job re-places.
+        recomputed_steps: u64,
+        /// Drain window charged before the job becomes placeable again.
+        recovery_seconds: f64,
+    },
     /// The job finished its steps; its chips returned to the pool.
     Finish,
     /// The job can never run on this cluster (no feasible carve/strategy
-    /// even with the whole cluster idle) and left the queue.
+    /// even with every surviving chip idle and no recovery coming) and
+    /// left the queue.
     Reject,
 }
 
@@ -92,6 +219,10 @@ impl FleetEventKind {
             FleetEventKind::Arrive => "arrive",
             FleetEventKind::Start { .. } => "start",
             FleetEventKind::Resize { .. } => "resize",
+            FleetEventKind::Fault { .. } => "fault",
+            FleetEventKind::Replan { .. } => "replan",
+            FleetEventKind::FaultShrink { .. } => "fault-shrink",
+            FleetEventKind::Requeue { .. } => "requeue",
             FleetEventKind::Finish => "finish",
             FleetEventKind::Reject => "reject",
         }
@@ -103,7 +234,8 @@ impl FleetEventKind {
 pub struct FleetEvent {
     /// Fleet-clock time of the event, in modeled seconds.
     pub t_seconds: f64,
-    /// The job the event concerns.
+    /// The job the event concerns ([`NO_JOB`] for faults on unowned
+    /// capacity).
     pub job: usize,
     /// What happened.
     pub kind: FleetEventKind,
@@ -118,11 +250,12 @@ pub struct JobOutcome {
     pub priority: u8,
     /// Arrival time in fleet seconds.
     pub arrival_seconds: f64,
-    /// Queue wait (`start − arrival`), `None` for rejected jobs.
+    /// Queue wait (first `start − arrival`), `None` for rejected jobs.
     pub wait_seconds: Option<f64>,
     /// Completion time, `None` for rejected jobs.
     pub finish_seconds: Option<f64>,
-    /// Chips the job held at start (0 for rejected jobs).
+    /// Chips the job held at its most recent start (0 for rejected
+    /// jobs).
     pub chips: usize,
 }
 
@@ -137,7 +270,8 @@ pub struct FleetMetrics {
     pub rejected: usize,
     /// Successful preempt-by-resize operations.
     pub preemptions: usize,
-    /// Fleet-clock time of the last event (normally the last finish).
+    /// Fleet-clock time of the last non-fault event (normally the last
+    /// finish — trailing recover events do not stretch the window).
     pub makespan_seconds: f64,
     /// Mean queue wait over completed jobs.
     pub mean_wait_seconds: f64,
@@ -150,12 +284,27 @@ pub struct FleetMetrics {
     /// `chip_seconds / (total_chips × makespan)` — the chip-hour
     /// utilization of the whole fleet window.
     pub utilization: f64,
+    /// Fault events recorded in the timeline (including recoveries).
+    pub faults: usize,
+    /// Chips still dead when the run ended.
+    pub dead_chips: usize,
+    /// Steps recomputed after checkpoint rollbacks (shrink + requeue).
+    pub recomputed_steps: u64,
+    /// Total drain/detect/migrate/restore seconds charged by the
+    /// cascade.
+    pub recovery_seconds_total: f64,
+    /// `productive_chip_seconds / (total_chips × makespan)` — the
+    /// fraction of the fleet window spent computing steps that were
+    /// *kept* (each completed step credited at its job's healthy
+    /// iteration time × chips held; rolled-back steps are debited). On a
+    /// healthy run this equals `utilization` up to float noise.
+    pub goodput_fraction: f64,
 }
 
 /// The machine-readable record of one fleet run: every event, per-job
 /// outcomes, and the fleet metrics. Serializes deterministically —
 /// [`FleetTimeline::to_json_string`] is bit-identical across repeats and
-/// worker counts for the same trace + options.
+/// worker counts for the same trace + fault plan + options.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetTimeline {
     /// Policy the run used.
@@ -182,9 +331,10 @@ impl FleetTimeline {
             .events
             .iter()
             .map(|e| {
+                let job = if e.job == NO_JOB { -1.0 } else { e.job as f64 };
                 let mut fields = vec![
                     ("t_seconds", json::num(e.t_seconds)),
-                    ("job", json::num(e.job as f64)),
+                    ("job", json::num(job)),
                     ("kind", json::s(e.kind.token())),
                 ];
                 match e.kind {
@@ -196,6 +346,33 @@ impl FleetTimeline {
                         fields.push(("freed_chips", json::num(freed_chips as f64)));
                         fields.push(("iteration_seconds", json::num(iteration_seconds)));
                         fields.push(("migrate_seconds", json::num(migrate_seconds)));
+                    }
+                    FleetEventKind::Fault { chip, node, fault, detected } => {
+                        fields.push(("chip", json::s(chip.name())));
+                        fields.push(("node", json::num(node as f64)));
+                        fields.push(("fault", json::s(fault.token())));
+                        fault.push_json_fields(&mut fields);
+                        fields.push(("detected", Value::Bool(detected)));
+                    }
+                    FleetEventKind::Replan { dead_chips, iteration_seconds, recovery_seconds } => {
+                        fields.push(("dead_chips", json::num(dead_chips as f64)));
+                        fields.push(("iteration_seconds", json::num(iteration_seconds)));
+                        fields.push(("recovery_seconds", json::num(recovery_seconds)));
+                    }
+                    FleetEventKind::FaultShrink {
+                        dead_chips,
+                        iteration_seconds,
+                        recovery_seconds,
+                        recomputed_steps,
+                    } => {
+                        fields.push(("dead_chips", json::num(dead_chips as f64)));
+                        fields.push(("iteration_seconds", json::num(iteration_seconds)));
+                        fields.push(("recovery_seconds", json::num(recovery_seconds)));
+                        fields.push(("recomputed_steps", json::num(recomputed_steps as f64)));
+                    }
+                    FleetEventKind::Requeue { recomputed_steps, recovery_seconds } => {
+                        fields.push(("recomputed_steps", json::num(recomputed_steps as f64)));
+                        fields.push(("recovery_seconds", json::num(recovery_seconds)));
                     }
                     _ => {}
                 }
@@ -241,6 +418,11 @@ impl FleetTimeline {
                     ("p99_wait_seconds", json::num(m.p99_wait_seconds)),
                     ("chip_seconds", json::num(m.chip_seconds)),
                     ("utilization", json::num(m.utilization)),
+                    ("faults", json::num(m.faults as f64)),
+                    ("dead_chips", json::num(m.dead_chips as f64)),
+                    ("recomputed_steps", json::num(m.recomputed_steps as f64)),
+                    ("recovery_seconds_total", json::num(m.recovery_seconds_total)),
+                    ("goodput_fraction", json::num(m.goodput_fraction)),
                 ]),
             ),
         ])
@@ -293,6 +475,161 @@ fn price_plans(plans: &[&ExecutionPlan], workers: usize) -> Vec<f64> {
     out
 }
 
+/// The per-step iteration time of `plan` with the given degradations
+/// active — the *same* fault-aware simulator the per-job layer runs, one
+/// step, one worker, so fleet pricing and per-job pricing never
+/// disagree (and stay worker-count independent).
+fn degraded_iteration(plan: &ExecutionPlan, active: &[(ChipKind, usize, FaultEvent)]) -> Option<f64> {
+    let faults =
+        FaultPlan { seed: 0, events: active.iter().map(|&(_, _, e)| e).collect() };
+    let r = simulate_plan_with_faults_workers(plan, &faults, 1, 1).ok()?;
+    r.step_seconds.first().copied()
+}
+
+/// The first global pipeline-stage index hosted on chips of `kind`, or
+/// `None` when the plan does not place any stage on that kind (the fault
+/// then cannot touch this job's pipeline). Stage groups are walked in
+/// the plan's own (memory-descending) order, accumulating each group's
+/// `s_pp`.
+fn stage_of_kind(plan: &ExecutionPlan, kind: ChipKind) -> Option<usize> {
+    let mut stage = 0usize;
+    for (g, gp) in plan.stage_groups.iter().zip(&plan.strategy.plans) {
+        if g.spec.kind == kind && gp.s_pp > 0 {
+            return Some(stage);
+        }
+        stage += gp.s_pp;
+    }
+    None
+}
+
+/// Who holds one node of the cluster right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NodeOwner {
+    /// Idle, in the free pool.
+    Free,
+    /// Held by the job with this id.
+    Job(usize),
+    /// Retired by a chip-death fault, awaiting recovery.
+    Dead,
+}
+
+/// Whole-node ownership, per chip group — the projection table that maps
+/// a cluster fault at `(chip kind, node)` onto the job owning it (or
+/// onto the free pool). Kept exactly in sync with [`FreePool`]: free
+/// node counts equal the pool's free chips, dead node counts equal the
+/// pool's dead ledger.
+struct NodeLedger {
+    /// `(kind, chips per node, owners)` in memory-descending group
+    /// order.
+    groups: Vec<(ChipKind, usize, Vec<NodeOwner>)>,
+}
+
+impl NodeLedger {
+    fn new(cluster: &Cluster) -> NodeLedger {
+        NodeLedger {
+            groups: cluster
+                .groups_by_memory_desc()
+                .into_iter()
+                .map(|g| (g.spec.kind, g.spec.chips_per_node, vec![NodeOwner::Free; g.n_nodes()]))
+                .collect(),
+        }
+    }
+
+    fn entry(&mut self, kind: ChipKind) -> &mut Vec<NodeOwner> {
+        &mut self
+            .groups
+            .iter_mut()
+            .find(|(k, _, _)| *k == kind)
+            .unwrap_or_else(|| panic!("node ledger has no {kind:?} group"))
+            .2
+    }
+
+    /// Chips per node of `kind`.
+    fn cpn(&self, kind: ChipKind) -> usize {
+        self.groups
+            .iter()
+            .find(|(k, _, _)| *k == kind)
+            .unwrap_or_else(|| panic!("node ledger has no {kind:?} group"))
+            .1
+    }
+
+    fn owner(&self, kind: ChipKind, node: usize) -> NodeOwner {
+        self.groups
+            .iter()
+            .find(|(k, _, _)| *k == kind)
+            .unwrap_or_else(|| panic!("node ledger has no {kind:?} group"))
+            .2[node]
+    }
+
+    /// Hand `nodes` free nodes of `kind` to `job` — lowest free indices
+    /// first, mirroring the deterministic carve order.
+    fn assign(&mut self, kind: ChipKind, nodes: usize, job: usize) {
+        let owners = self.entry(kind);
+        let mut left = nodes;
+        for o in owners.iter_mut() {
+            if left == 0 {
+                break;
+            }
+            if *o == NodeOwner::Free {
+                *o = NodeOwner::Job(job);
+                left -= 1;
+            }
+        }
+        assert!(left == 0, "assigning {nodes} {kind:?} nodes but the ledger ran dry");
+    }
+
+    /// Release every node `job` still holds (completion or requeue).
+    fn free_all(&mut self, job: usize) {
+        for (_, _, owners) in &mut self.groups {
+            for o in owners.iter_mut() {
+                if *o == NodeOwner::Job(job) {
+                    *o = NodeOwner::Free;
+                }
+            }
+        }
+    }
+
+    /// Release `nodes` of `job`'s nodes of `kind` — highest indices
+    /// first (the mirror of [`NodeLedger::assign`], so shrink frees the
+    /// most-recently-granted nodes).
+    fn free_some(&mut self, kind: ChipKind, nodes: usize, job: usize) {
+        let owners = self.entry(kind);
+        let mut left = nodes;
+        for o in owners.iter_mut().rev() {
+            if left == 0 {
+                break;
+            }
+            if *o == NodeOwner::Job(job) {
+                *o = NodeOwner::Free;
+                left -= 1;
+            }
+        }
+        assert!(left == 0, "freeing {nodes} {kind:?} nodes of job {job} but it holds fewer");
+    }
+
+    /// Mark a node dead, returning who held it (a second strike on an
+    /// already-dead node returns [`NodeOwner::Dead`] and changes
+    /// nothing).
+    fn kill(&mut self, kind: ChipKind, node: usize) -> NodeOwner {
+        let owners = self.entry(kind);
+        let prev = owners[node];
+        owners[node] = NodeOwner::Dead;
+        prev
+    }
+
+    /// Return a dead node to the free state; `false` (and no change)
+    /// when the node was not dead.
+    fn revive(&mut self, kind: ChipKind, node: usize) -> bool {
+        let owners = self.entry(kind);
+        if owners[node] == NodeOwner::Dead {
+            owners[node] = NodeOwner::Free;
+            true
+        } else {
+            false
+        }
+    }
+}
+
 /// One running job's live state.
 struct Running {
     id: usize,
@@ -300,14 +637,42 @@ struct Running {
     ti: usize,
     priority: u8,
     alloc: Vec<(ChipKind, usize)>,
-    /// Chips currently held (allocation minus freed; includes idled).
+    /// Chips currently held (allocation minus freed/dead; includes
+    /// idled).
     held: usize,
     plan: ExecutionPlan,
+    /// The job's own heartbeat monitor — cluster faults are replayed
+    /// through it so the timeline records what telemetry would have
+    /// seen.
+    monitor: StepMonitor,
+    /// Effective per-step time (degraded when `active_faults` is
+    /// non-empty).
     iteration_seconds: f64,
-    /// Start of the current rate segment (placement, or post-resize).
+    /// Healthy per-step time of the current plan — the rate a kept step
+    /// is credited at in the goodput ledger.
+    healthy_iteration_seconds: f64,
+    /// Start of the current rate segment (placement, or
+    /// post-resize/recovery).
     seg_start: f64,
     steps_remaining: u64,
+    /// Steps completed since the job last (re-)placed — the checkpoint
+    /// rollback grid.
+    done_steps: u64,
+    /// Live degradations on nodes this job owns:
+    /// `(kind, node, projected per-job fault event)`.
+    active_faults: Vec<(ChipKind, usize, FaultEvent)>,
     finish: f64,
+}
+
+impl Running {
+    /// Record `n` chips of `kind` as no longer held after a resize or a
+    /// death.
+    fn shed(&mut self, kind: ChipKind, n: usize) {
+        if let Some(slot) = self.alloc.iter_mut().find(|(k, _)| *k == kind) {
+            slot.1 -= n.min(slot.1);
+        }
+        self.alloc.retain(|&(_, n)| n > 0);
+    }
 }
 
 /// A resize staged during a placement round, applied after pricing.
@@ -318,11 +683,604 @@ struct StagedResize {
     migrate_seconds: f64,
 }
 
-/// Run a job trace through the fleet scheduler on `cluster`.
+/// All mutable state of one fleet run, so the fault cascade and the
+/// placement round can share it without threading a dozen `&mut`
+/// parameters around.
+struct FleetState<'a> {
+    cluster: &'a Cluster,
+    /// Working copy of the trace's jobs — a requeue rewrites `steps` to
+    /// remaining + recomputed.
+    specs: Vec<JobSpec>,
+    policy: Policy,
+    workers: usize,
+    response: FaultResponse,
+    checkpoint_every: u64,
+    /// Monitor debounce window — also the drain charge (`1 + debounce`
+    /// steps) of a requeue.
+    debounce: usize,
+    sched: Scheduler,
+    pool: FreePool,
+    ledger: NodeLedger,
+    events: Vec<FleetEvent>,
+    running: Vec<Running>,
+    /// Indices into `specs` of queued jobs.
+    pending: Vec<usize>,
+    /// Per-job earliest re-placement time (requeued jobs drain first).
+    ready_at: Vec<f64>,
+    outcomes: Vec<JobOutcome>,
+    /// `(chips, t0, t1)` allocation segments for chip-second accounting.
+    segments: Vec<(usize, f64, f64)>,
+    preemptions: usize,
+    rejected: usize,
+    recovery_seconds_total: f64,
+    recomputed_steps_total: u64,
+    /// Kept-step chip-seconds: `+ done × healthy_iter × held` at each
+    /// segment close, `− recompute × healthy_iter × held` at each
+    /// rollback, `+ steps_remaining × healthy_iter × held` at each
+    /// finish.
+    productive_chip_seconds: f64,
+}
+
+impl FleetState<'_> {
+    fn monitor_cfg(&self) -> MonitorConfig {
+        MonitorConfig { debounce: self.debounce, ..MonitorConfig::default() }
+    }
+
+    /// Close the job's current rate segment at `t` (no earlier than its
+    /// own `seg_start` — a job mid-recovery resumes later): push the
+    /// chip-second segment, credit the whole steps it completed, and
+    /// return the close time. The caller must set the new `seg_start`.
+    fn close_segment(&mut self, ri: usize, t: f64) -> f64 {
+        let r = &mut self.running[ri];
+        let base = t.max(r.seg_start);
+        let done = if base > r.seg_start && r.iteration_seconds > 0.0 {
+            (((base - r.seg_start) / r.iteration_seconds).floor() as u64).min(r.steps_remaining)
+        } else {
+            0
+        };
+        self.segments.push((r.held, r.seg_start, base));
+        r.steps_remaining -= done;
+        r.done_steps += done;
+        self.productive_chip_seconds +=
+            done as f64 * r.healthy_iteration_seconds * r.held as f64;
+        base
+    }
+
+    /// Completions at exactly `t`, in job-id order.
+    fn complete_at(&mut self, t: f64) {
+        let mut done: Vec<usize> = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.finish == t)
+            .map(|(i, _)| i)
+            .collect();
+        done.sort_by_key(|&i| self.running[i].id);
+        for &i in &done {
+            let r = &self.running[i];
+            self.pool.release(&r.alloc);
+            self.ledger.free_all(r.id);
+            self.segments.push((r.held, r.seg_start, t));
+            // Credit the remaining steps directly: the final segment is
+            // steps_remaining × iteration by construction, and crediting
+            // the count (not the float quotient) keeps a healthy run's
+            // goodput equal to its utilization.
+            self.productive_chip_seconds +=
+                r.steps_remaining as f64 * r.healthy_iteration_seconds * r.held as f64;
+            self.outcomes[r.ti].finish_seconds = Some(t);
+            self.events.push(FleetEvent { t_seconds: t, job: r.id, kind: FleetEventKind::Finish });
+        }
+        // Remove highest index first so the remaining indices stay valid
+        // (the event order above is id order, which need not match).
+        done.sort_unstable_by(|a, b| b.cmp(a));
+        for i in done {
+            self.running.remove(i);
+        }
+    }
+
+    fn push_fault_event(&mut self, t: f64, job: usize, f: &ClusterFault, detected: bool) {
+        self.events.push(FleetEvent {
+            t_seconds: t,
+            job,
+            kind: FleetEventKind::Fault { chip: f.chip, node: f.node, fault: f.kind, detected },
+        });
+    }
+
+    /// Apply one cluster fault at `t`: kill/degrade/recover the node(s),
+    /// project onto the owning job, and walk the cascade for victims.
+    fn apply_fault(&mut self, t: f64, f: &ClusterFault) -> Result<()> {
+        match f.kind {
+            FaultKind::ChipDeath { nodes } => {
+                let cpn = self.ledger.cpn(f.chip);
+                // Kill every node in the span; aggregate per owner so a
+                // multi-node death cascades each victim exactly once.
+                let mut free_nodes = 0usize;
+                let mut victims: Vec<(usize, usize)> = Vec::new(); // (job id, nodes lost)
+                for node in f.node..f.node + nodes {
+                    match self.ledger.kill(f.chip, node) {
+                        NodeOwner::Free => free_nodes += 1,
+                        NodeOwner::Job(id) => match victims.iter_mut().find(|(j, _)| *j == id) {
+                            Some(v) => v.1 += 1,
+                            None => victims.push((id, 1)),
+                        },
+                        NodeOwner::Dead => {} // second strike: no-op
+                    }
+                }
+                if free_nodes > 0 {
+                    self.pool.retire(f.chip, free_nodes * cpn);
+                    self.push_fault_event(t, NO_JOB, f, false);
+                }
+                for (id, nodes_lost) in victims {
+                    // Look the victim up fresh: an earlier victim's
+                    // requeue shifts `running` indices.
+                    let ri = self
+                        .running
+                        .iter()
+                        .position(|r| r.id == id)
+                        .expect("ledger owner must be running");
+                    self.owner_death(t, ri, f, nodes_lost * cpn)?;
+                }
+            }
+            FaultKind::Slowdown { .. } | FaultKind::NicDegrade { .. } => {
+                match self.ledger.owner(f.chip, f.node) {
+                    NodeOwner::Job(id) => {
+                        let ri = self
+                            .running
+                            .iter()
+                            .position(|r| r.id == id)
+                            .expect("ledger owner must be running");
+                        self.owner_degrade(t, ri, f);
+                    }
+                    // Degrading idle or dead capacity changes nothing
+                    // until someone owns it — record it and move on.
+                    NodeOwner::Free | NodeOwner::Dead => self.push_fault_event(t, NO_JOB, f, false),
+                }
+            }
+            FaultKind::Recover => match self.ledger.owner(f.chip, f.node) {
+                NodeOwner::Dead => {
+                    let cpn = self.ledger.cpn(f.chip);
+                    self.ledger.revive(f.chip, f.node);
+                    // Recovered chips rejoin the *pool*, not the job that
+                    // lost them — it re-planned (or requeued) without
+                    // them.
+                    self.pool.recover(f.chip, cpn);
+                    self.push_fault_event(t, NO_JOB, f, false);
+                }
+                NodeOwner::Job(id) => {
+                    let ri = self
+                        .running
+                        .iter()
+                        .position(|r| r.id == id)
+                        .expect("ledger owner must be running");
+                    self.owner_recover(t, ri, f);
+                }
+                NodeOwner::Free => self.push_fault_event(t, NO_JOB, f, false),
+            },
+        }
+        Ok(())
+    }
+
+    /// A running job lost `dead_chips` chips of `f.chip`: synthesize the
+    /// missed heartbeats through its monitor, then walk the cascade —
+    /// in-place re-plan, shrink, or requeue.
+    fn owner_death(&mut self, t: f64, ri: usize, f: &ClusterFault, dead_chips: usize) -> Result<()> {
+        // The dead chips never pass through the free pool, but the dead
+        // ledger has to know they exist so recovery can return them.
+        self.pool.retire_held(f.chip, dead_chips);
+        let base = self.close_segment(ri, t);
+        let (detected, step_seconds, held_before, healthy_iter, id, ti);
+        {
+            let r = &mut self.running[ri];
+            let stage = stage_of_kind(&r.plan, f.chip);
+            let mut saw = false;
+            if let Some(stage) = stage {
+                for _ in 0..self.debounce {
+                    if let Some(ElasticEvent::Dead { .. }) = r.monitor.observe(stage, 0, None) {
+                        saw = true;
+                    }
+                }
+            }
+            detected = saw;
+            step_seconds = r.iteration_seconds;
+            held_before = r.held;
+            healthy_iter = r.healthy_iteration_seconds;
+            id = r.id;
+            ti = r.ti;
+            r.held -= dead_chips.min(r.held);
+            r.shed(f.chip, dead_chips);
+        }
+        self.push_fault_event(t, id, f, detected);
+
+        let survivors = held_before.saturating_sub(dead_chips);
+        // Rung 1 preserves the job's placement contract, so it is always
+        // allowed; rung 2 reshapes the pipeline — effectively a new
+        // placement — and must still satisfy the job's chip floor.
+        let allow_shrink = survivors >= self.specs[ti].min_chips;
+        let recovery = if self.response == FaultResponse::RestartAlways {
+            None
+        } else {
+            let r = &self.running[ri];
+            self.sched.try_recover(&r.plan, step_seconds, self.debounce, f.chip, dead_chips, allow_shrink)
+        };
+        match recovery {
+            Some(Recovery::InPlace { plan, recovery_seconds }) => {
+                let iter_new = simulate_plan(&plan).iteration_seconds;
+                let monitor = StepMonitor::for_plan_with(&plan, self.monitor_cfg())?;
+                let r = &mut self.running[ri];
+                r.plan = plan;
+                r.monitor = monitor;
+                r.active_faults.clear();
+                r.iteration_seconds = iter_new;
+                r.healthy_iteration_seconds = iter_new;
+                r.seg_start = base + recovery_seconds;
+                r.finish = r.seg_start + r.steps_remaining as f64 * iter_new;
+                self.recovery_seconds_total += recovery_seconds;
+                self.events.push(FleetEvent {
+                    t_seconds: t,
+                    job: id,
+                    kind: FleetEventKind::Replan {
+                        dead_chips,
+                        iteration_seconds: iter_new,
+                        recovery_seconds,
+                    },
+                });
+            }
+            Some(Recovery::Shrink { plan, recovery_seconds }) => {
+                let iter_new = simulate_plan(&plan).iteration_seconds;
+                let monitor = StepMonitor::for_plan_with(&plan, self.monitor_cfg())?;
+                let every = self.checkpoint_every.max(1);
+                let r = &mut self.running[ri];
+                // Restart from the last checkpoint: the steps past it are
+                // recomputed on the reshaped sub-cluster.
+                let ckpt = r.done_steps - r.done_steps % every;
+                let recompute = r.done_steps - ckpt;
+                r.done_steps = ckpt;
+                r.steps_remaining += recompute;
+                r.plan = plan;
+                r.monitor = monitor;
+                r.active_faults.clear();
+                r.iteration_seconds = iter_new;
+                r.healthy_iteration_seconds = iter_new;
+                r.seg_start = base + recovery_seconds;
+                r.finish = r.seg_start + r.steps_remaining as f64 * iter_new;
+                self.productive_chip_seconds -=
+                    recompute as f64 * healthy_iter * held_before as f64;
+                self.recomputed_steps_total += recompute;
+                self.recovery_seconds_total += recovery_seconds;
+                self.events.push(FleetEvent {
+                    t_seconds: t,
+                    job: id,
+                    kind: FleetEventKind::FaultShrink {
+                        dead_chips,
+                        iteration_seconds: iter_new,
+                        recovery_seconds,
+                        recomputed_steps: recompute,
+                    },
+                });
+            }
+            None => self.requeue(t, ri, held_before, step_seconds),
+        }
+        Ok(())
+    }
+
+    /// Cascade rung 3: release the survivors, roll back to the
+    /// checkpoint grid, and re-enter the queue keeping the original
+    /// arrival slot. The job becomes placeable after its drain window.
+    fn requeue(&mut self, t: f64, ri: usize, held_before: usize, step_seconds: f64) {
+        let r = self.running.remove(ri);
+        self.pool.release(&r.alloc);
+        self.ledger.free_all(r.id);
+        let every = self.checkpoint_every.max(1);
+        let ckpt = r.done_steps - r.done_steps % every;
+        let recompute = r.done_steps - ckpt;
+        self.productive_chip_seconds -=
+            recompute as f64 * r.healthy_iteration_seconds * held_before as f64;
+        self.recomputed_steps_total += recompute;
+        // The re-placed job runs its remaining steps plus the rollback.
+        self.specs[r.ti].steps = r.steps_remaining + recompute;
+        let recovery_seconds = (1 + self.debounce) as f64 * step_seconds;
+        self.recovery_seconds_total += recovery_seconds;
+        self.ready_at[r.ti] = t + recovery_seconds;
+        self.pending.push(r.ti);
+        self.events.push(FleetEvent {
+            t_seconds: t,
+            job: r.id,
+            kind: FleetEventKind::Requeue { recomputed_steps: recompute, recovery_seconds },
+        });
+    }
+
+    /// A slowdown or NIC degradation landed on a node a running job
+    /// owns: re-price its iteration through the fault-aware simulator
+    /// and replay the anomaly through its monitor.
+    fn owner_degrade(&mut self, t: f64, ri: usize, f: &ClusterFault) {
+        let Some(stage) = stage_of_kind(&self.running[ri].plan, f.chip) else {
+            // The job hosts no pipeline stage on this chip kind; nothing
+            // it runs gets slower.
+            let id = self.running[ri].id;
+            self.push_fault_event(t, id, f, false);
+            return;
+        };
+        let base = self.close_segment(ri, t);
+        let (id, detected);
+        {
+            let r = &mut self.running[ri];
+            r.active_faults.push((f.chip, f.node, FaultEvent { step: 0, stage, kind: f.kind }));
+            let iter_new =
+                degraded_iteration(&r.plan, &r.active_faults).unwrap_or(r.iteration_seconds);
+            let healthy = r.healthy_iteration_seconds;
+            // What the heartbeat sees: a compute slowdown inflates the
+            // stage's compute observation by its factor; a NIC fault only
+            // shows up as the whole step stretching — compute heartbeats
+            // alone usually cannot see it (the honest gap that motivates
+            // per-stage step-time telemetry).
+            let obs_ratio = match f.kind {
+                FaultKind::Slowdown { factor } => factor,
+                _ => {
+                    if healthy > 0.0 {
+                        iter_new / healthy
+                    } else {
+                        1.0
+                    }
+                }
+            };
+            let mut saw = false;
+            for _ in 0..self.debounce {
+                let expected = r.monitor.expected()[stage];
+                if let Some(ElasticEvent::Straggler { .. }) =
+                    r.monitor.observe(stage, 0, Some(expected * obs_ratio))
+                {
+                    saw = true;
+                }
+            }
+            detected = saw;
+            r.iteration_seconds = iter_new;
+            r.seg_start = base;
+            r.finish = base + r.steps_remaining as f64 * iter_new;
+            id = r.id;
+        }
+        self.push_fault_event(t, id, f, detected);
+    }
+
+    /// A recover event landed on a node a running job owns: clear the
+    /// matching degradation (if any) and re-price.
+    fn owner_recover(&mut self, t: f64, ri: usize, f: &ClusterFault) {
+        let had = self.running[ri]
+            .active_faults
+            .iter()
+            .any(|&(k, n, _)| k == f.chip && n == f.node);
+        if !had {
+            // Nothing to clear (e.g. the degradation was wiped by a
+            // re-plan) — record and move on.
+            let id = self.running[ri].id;
+            self.push_fault_event(t, id, f, false);
+            return;
+        }
+        let base = self.close_segment(ri, t);
+        let (id, detected);
+        {
+            let r = &mut self.running[ri];
+            r.active_faults.retain(|&(k, n, _)| !(k == f.chip && n == f.node));
+            let iter_new = if r.active_faults.is_empty() {
+                r.healthy_iteration_seconds
+            } else {
+                degraded_iteration(&r.plan, &r.active_faults)
+                    .unwrap_or(r.healthy_iteration_seconds)
+            };
+            let stage = stage_of_kind(&r.plan, f.chip);
+            let mut saw = false;
+            if let Some(stage) = stage {
+                for _ in 0..self.debounce {
+                    let expected = r.monitor.expected()[stage];
+                    if let Some(ElasticEvent::Recovered { .. }) =
+                        r.monitor.observe(stage, 0, Some(expected))
+                    {
+                        saw = true;
+                    }
+                }
+            }
+            detected = saw;
+            r.iteration_seconds = iter_new;
+            r.seg_start = base;
+            r.finish = base + r.steps_remaining as f64 * iter_new;
+            id = r.id;
+        }
+        self.push_fault_event(t, id, f, detected);
+    }
+
+    fn reject(&mut self, pi: usize, t: f64) {
+        self.pending.retain(|&x| x != pi);
+        self.events.push(FleetEvent {
+            t_seconds: t,
+            job: self.specs[pi].id,
+            kind: FleetEventKind::Reject,
+        });
+        self.rejected += 1;
+    }
+
+    /// One placement round at `t` under the configured policy.
+    /// `more_faults` gates the terminal reject: while fault events
+    /// remain, dead capacity may still recover, so nothing is provably
+    /// unplaceable.
+    fn placement_round(&mut self, t: f64, more_faults: bool) -> Result<()> {
+        let order = queue_order(self.policy, &self.specs, &self.pending);
+        let mut placed: Vec<(usize, Placement)> = Vec::new();
+        let mut resizes: Vec<StagedResize> = Vec::new();
+        for &pi in &order {
+            if self.ready_at[pi] > t {
+                // A requeued job still draining holds its queue slot:
+                // under FIFO it blocks the head of the line (no
+                // queue-jumping past a fault victim), under priority the
+                // round just skips it.
+                if self.policy == Policy::Fifo {
+                    break;
+                }
+                continue;
+            }
+            let job = self.specs[pi].clone();
+            let mut outcome = self.sched.try_place(&job, &mut self.pool);
+            if matches!(outcome, PlaceOutcome::NoCapacity) && self.policy == Policy::PriorityBackfill
+            {
+                // Preempt-by-resize: shrink strictly-lower-priority
+                // running jobs (lowest priority first, latest start /
+                // highest id breaking ties) until the job fits.
+                let mut victims: Vec<usize> = (0..self.running.len())
+                    .filter(|&i| self.running[i].priority < job.priority)
+                    .collect();
+                victims.sort_by_key(|&i| {
+                    (self.running[i].priority, u64::MAX - self.running[i].id as u64)
+                });
+                for vi in victims {
+                    let need = job.min_chips.saturating_sub(self.pool.total());
+                    if need == 0 {
+                        break;
+                    }
+                    if resizes.iter().any(|s| s.running_idx == vi) {
+                        continue; // one shrink per victim per round
+                    }
+                    let shrink = {
+                        let v = &self.running[vi];
+                        self.sched.try_shrink(&v.plan, v.iteration_seconds, need)
+                    };
+                    if let Some(shrink) = shrink {
+                        self.pool.release(&shrink.freed);
+                        let vid = self.running[vi].id;
+                        for &(kind, n) in &shrink.freed {
+                            let nodes = n / self.ledger.cpn(kind);
+                            self.ledger.free_some(kind, nodes, vid);
+                        }
+                        self.preemptions += 1;
+                        resizes.push(StagedResize {
+                            running_idx: vi,
+                            plan: shrink.plan,
+                            freed: shrink.freed,
+                            migrate_seconds: shrink.migrate_seconds,
+                        });
+                    }
+                }
+                if job.min_chips <= self.pool.total() {
+                    outcome = self.sched.try_place(&job, &mut self.pool);
+                }
+            }
+            match outcome {
+                PlaceOutcome::Placed(p) => placed.push((pi, p)),
+                PlaceOutcome::NoCapacity | PlaceOutcome::SearchFailed(_) => {
+                    let idle = self.running.is_empty()
+                        && placed.is_empty()
+                        && self.pool.total() + self.pool.dead_total()
+                            == self.cluster.total_chips();
+                    if idle && !more_faults {
+                        // Every surviving chip is idle, none will ever
+                        // come back, and the job still cannot place:
+                        // terminal.
+                        self.reject(pi, t);
+                    } else if self.policy == Policy::Fifo {
+                        break; // head-of-line blocking
+                    }
+                }
+            }
+        }
+
+        // Price every plan this round produced in one batched pass.
+        let mut plan_refs: Vec<&ExecutionPlan> = placed.iter().map(|(_, p)| &p.plan).collect();
+        plan_refs.extend(resizes.iter().map(|s| &s.plan));
+        let prices = price_plans(&plan_refs, self.workers);
+        let (start_prices, resize_prices) = prices.split_at(placed.len());
+
+        // Apply resizes (victims keep running at their new rate after
+        // the migration penalty; the partially-done step restarts).
+        for (s, &iter_new) in resizes.iter().zip(resize_prices) {
+            let base = self.close_segment(s.running_idx, t);
+            let monitor = StepMonitor::for_plan_with(&s.plan, self.monitor_cfg())?;
+            let freed: usize = s.freed.iter().map(|&(_, n)| n).sum();
+            // Keep only degradations on nodes the victim still owns,
+            // re-projected onto the new plan's stages.
+            let vid = self.running[s.running_idx].id;
+            let mut kept: Vec<(ChipKind, usize, FaultEvent)> = Vec::new();
+            for &(kind, node, ev) in &self.running[s.running_idx].active_faults {
+                if self.ledger.owner(kind, node) == NodeOwner::Job(vid) {
+                    if let Some(stage) = stage_of_kind(&s.plan, kind) {
+                        kept.push((kind, node, FaultEvent { step: 0, stage, kind: ev.kind }));
+                    }
+                }
+            }
+            let iter_eff = if kept.is_empty() {
+                iter_new
+            } else {
+                degraded_iteration(&s.plan, &kept).unwrap_or(iter_new)
+            };
+            let r = &mut self.running[s.running_idx];
+            r.held -= freed;
+            for &(kind, n) in &s.freed {
+                r.shed(kind, n);
+            }
+            r.plan = s.plan.clone();
+            r.monitor = monitor;
+            r.active_faults = kept;
+            r.iteration_seconds = iter_eff;
+            r.healthy_iteration_seconds = iter_new;
+            r.seg_start = base + s.migrate_seconds;
+            r.finish = r.seg_start + r.steps_remaining as f64 * iter_eff;
+            self.events.push(FleetEvent {
+                t_seconds: t,
+                job: r.id,
+                kind: FleetEventKind::Resize {
+                    freed_chips: freed,
+                    iteration_seconds: iter_eff,
+                    migrate_seconds: s.migrate_seconds,
+                },
+            });
+        }
+
+        // Apply placements.
+        for ((pi, p), &iter) in placed.iter().zip(start_prices) {
+            let pi = *pi;
+            let (id, priority, steps, arrival) = {
+                let job = &self.specs[pi];
+                (job.id, job.priority, job.steps, job.arrival_step as f64)
+            };
+            self.pending.retain(|&x| x != pi);
+            if self.outcomes[pi].wait_seconds.is_none() {
+                // A requeued job keeps its original queue wait.
+                self.outcomes[pi].wait_seconds = Some(t - arrival);
+            }
+            self.outcomes[pi].chips = p.chips;
+            for &(kind, n) in &p.alloc {
+                let nodes = n / self.ledger.cpn(kind);
+                self.ledger.assign(kind, nodes, id);
+            }
+            let monitor = StepMonitor::for_plan_with(&p.plan, self.monitor_cfg())?;
+            self.running.push(Running {
+                id,
+                ti: pi,
+                priority,
+                alloc: p.alloc.clone(),
+                held: p.chips,
+                plan: p.plan.clone(),
+                monitor,
+                iteration_seconds: iter,
+                healthy_iteration_seconds: iter,
+                seg_start: t,
+                steps_remaining: steps,
+                done_steps: 0,
+                active_faults: Vec::new(),
+                finish: t + steps as f64 * iter,
+            });
+            self.events.push(FleetEvent {
+                t_seconds: t,
+                job: id,
+                kind: FleetEventKind::Start { chips: p.chips, iteration_seconds: iter },
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Run a job trace through the fleet scheduler on `cluster`, injecting
+/// the cluster fault script from `opts.faults` (if any).
 ///
-/// Deterministic: same `cluster` + `trace` + `opts.policy` +
-/// `opts.search` ⇒ bit-identical [`FleetTimeline`], for any
-/// `opts.workers`.
+/// Deterministic: same `cluster` + `trace` + fault plan + `opts.policy`
+/// + `opts.search` + `opts.response` ⇒ bit-identical [`FleetTimeline`],
+/// for any `opts.workers`.
 pub fn run(cluster: &Cluster, trace: &JobTrace, opts: &FleetOptions) -> Result<FleetTimeline> {
     trace.validate()?;
     for j in &trace.jobs {
@@ -335,64 +1293,91 @@ pub fn run(cluster: &Cluster, trace: &JobTrace, opts: &FleetOptions) -> Result<F
             );
         }
     }
-    let sched = Scheduler::new(opts.policy, opts.search.clone());
-    let mut pool = FreePool::new(cluster);
-    let mut events: Vec<FleetEvent> = Vec::new();
-    let mut running: Vec<Running> = Vec::new();
-    let mut pending: Vec<usize> = Vec::new(); // indices into trace.jobs
+    let faults = match &opts.faults {
+        Some(f) => {
+            f.validate(cluster)?;
+            let mut f = f.clone();
+            f.sort();
+            f
+        }
+        None => ClusterFaultPlan::none(),
+    };
+    let n_jobs = trace.jobs.len();
+    let mut st = FleetState {
+        cluster,
+        specs: trace.jobs.clone(),
+        policy: opts.policy,
+        workers: opts.workers,
+        response: opts.response,
+        checkpoint_every: opts.checkpoint_every,
+        debounce: MonitorConfig::default().debounce,
+        sched: Scheduler::new(opts.policy, opts.search.clone()),
+        pool: FreePool::new(cluster),
+        ledger: NodeLedger::new(cluster),
+        events: Vec::new(),
+        running: Vec::new(),
+        pending: Vec::new(),
+        ready_at: vec![0.0; n_jobs],
+        outcomes: trace
+            .jobs
+            .iter()
+            .map(|j| JobOutcome {
+                id: j.id,
+                priority: j.priority,
+                arrival_seconds: j.arrival_step as f64,
+                wait_seconds: None,
+                finish_seconds: None,
+                chips: 0,
+            })
+            .collect(),
+        segments: Vec::new(),
+        preemptions: 0,
+        rejected: 0,
+        recovery_seconds_total: 0.0,
+        recomputed_steps_total: 0,
+        productive_chip_seconds: 0.0,
+    };
     let mut next_arrival = 0usize;
-    let mut outcomes: Vec<JobOutcome> = trace
-        .jobs
-        .iter()
-        .map(|j| JobOutcome {
-            id: j.id,
-            priority: j.priority,
-            arrival_seconds: j.arrival_step as f64,
-            wait_seconds: None,
-            finish_seconds: None,
-            chips: 0,
-        })
-        .collect();
-    let mut segments: Vec<(usize, f64, f64)> = Vec::new(); // (chips, t0, t1)
-    let mut preemptions = 0usize;
-    let mut rejected = 0usize;
+    let mut next_fault = 0usize;
+    // Last processed decision point — requeued jobs whose ready time
+    // already passed do not create new decision points.
+    let mut now = -1.0f64;
 
     loop {
-        // Next decision point: the earliest running finish or the next
-        // arrival, whichever is sooner (finishes win ties so freed chips
-        // are visible to jobs arriving at the same instant).
+        // Next decision point: the earliest of the next arrival, the
+        // earliest running finish, the next cluster fault, and the
+        // earliest pending-job ready time still in the future.
         let arrival_t = trace.jobs.get(next_arrival).map(|j| j.arrival_step as f64);
-        let finish_t = running
+        let finish_t = st
+            .running
             .iter()
             .map(|r| r.finish)
             .min_by(|a, b| a.partial_cmp(b).expect("finish times are finite"));
-        let t = match (arrival_t, finish_t) {
-            (Some(a), Some(f)) => a.min(f),
-            (Some(a), None) => a,
-            (None, Some(f)) => f,
-            (None, None) => break,
-        };
-
-        // Completions at exactly t, in job-id order.
-        let mut done: Vec<usize> = running
+        let fault_t = faults.events.get(next_fault).map(|e| e.t_seconds);
+        let ready_t = st
+            .pending
             .iter()
-            .enumerate()
-            .filter(|(_, r)| r.finish == t)
-            .map(|(i, _)| i)
-            .collect();
-        done.sort_by_key(|&i| running[i].id);
-        for &i in &done {
-            let r = &running[i];
-            pool.release(&r.alloc);
-            segments.push((r.held, r.seg_start, t));
-            outcomes[r.ti].finish_seconds = Some(t);
-            events.push(FleetEvent { t_seconds: t, job: r.id, kind: FleetEventKind::Finish });
+            .map(|&pi| st.ready_at[pi])
+            .filter(|&r| r > now)
+            .min_by(|a, b| a.partial_cmp(b).expect("ready times are finite"));
+        let mut t = f64::INFINITY;
+        for c in [arrival_t, finish_t, fault_t, ready_t].into_iter().flatten() {
+            t = t.min(c);
         }
-        // Remove highest index first so the remaining indices stay valid
-        // (the event order above is id order, which need not match).
-        done.sort_unstable_by(|a, b| b.cmp(a));
-        for i in done {
-            running.remove(i);
+        if !t.is_finite() {
+            break;
+        }
+        now = t;
+
+        // Completions at exactly t first, so freed chips are visible to
+        // everything else at the same instant.
+        st.complete_at(t);
+
+        // Cluster faults due at t, in script order.
+        while next_fault < faults.events.len() && faults.events[next_fault].t_seconds <= t {
+            let f = faults.events[next_fault];
+            st.apply_fault(t, &f)?;
+            next_fault += 1;
         }
 
         // Arrivals at exactly t, trace order.
@@ -400,206 +1385,112 @@ pub fn run(cluster: &Cluster, trace: &JobTrace, opts: &FleetOptions) -> Result<F
             if j.arrival_step as f64 > t {
                 break;
             }
-            pending.push(next_arrival);
-            events.push(FleetEvent { t_seconds: t, job: j.id, kind: FleetEventKind::Arrive });
+            st.pending.push(next_arrival);
+            st.events.push(FleetEvent { t_seconds: t, job: j.id, kind: FleetEventKind::Arrive });
             next_arrival += 1;
         }
 
-        // Placement round at t.
-        let order = queue_order(opts.policy, trace, &pending);
-        let mut placed: Vec<(usize, super::sched::Placement)> = Vec::new();
-        let mut resizes: Vec<StagedResize> = Vec::new();
-        for &pi in &order {
-            let job = &trace.jobs[pi];
-            let mut outcome = sched.try_place(job, &mut pool);
-            if matches!(outcome, PlaceOutcome::NoCapacity)
-                && opts.policy == Policy::PriorityBackfill
-            {
-                // Preempt-by-resize: shrink strictly-lower-priority
-                // running jobs (lowest priority first, latest start /
-                // highest id breaking ties) until the job fits.
-                let mut victims: Vec<usize> = (0..running.len())
-                    .filter(|&i| running[i].priority < job.priority)
-                    .collect();
-                victims.sort_by_key(|&i| {
-                    (running[i].priority, u64::MAX - running[i].id as u64)
-                });
-                for vi in victims {
-                    let need = job.min_chips.saturating_sub(pool.total());
-                    if need == 0 {
-                        break;
-                    }
-                    let already = resizes.iter().any(|s| s.running_idx == vi);
-                    if already {
-                        continue; // one shrink per victim per round
-                    }
-                    let v = &running[vi];
-                    if let Some(shrink) =
-                        sched.try_shrink(&v.plan, v.iteration_seconds, need)
-                    {
-                        pool.release(&shrink.freed);
-                        preemptions += 1;
-                        resizes.push(StagedResize {
-                            running_idx: vi,
-                            plan: shrink.plan,
-                            freed: shrink.freed,
-                            migrate_seconds: shrink.migrate_seconds,
-                        });
-                    }
-                }
-                if job.min_chips <= pool.total() {
-                    outcome = sched.try_place(job, &mut pool);
-                }
-            }
-            match outcome {
-                PlaceOutcome::Placed(p) => placed.push((pi, p)),
-                PlaceOutcome::NoCapacity => {
-                    if running.is_empty() && placed.is_empty() && pool.total() == cluster.total_chips()
-                    {
-                        // Idle cluster and still no carve: terminal.
-                        reject(job.id, t, &mut pending, pi, &mut events, &mut rejected);
-                    } else if opts.policy == Policy::Fifo {
-                        break; // head-of-line blocking
-                    }
-                }
-                PlaceOutcome::SearchFailed(_) => {
-                    if running.is_empty() && placed.is_empty() && pool.total() == cluster.total_chips()
-                    {
-                        reject(job.id, t, &mut pending, pi, &mut events, &mut rejected);
-                    } else if opts.policy == Policy::Fifo {
-                        break;
-                    }
-                }
-            }
-        }
-
-        // Price every plan this round produced in one batched pass.
-        let mut plan_refs: Vec<&ExecutionPlan> = placed.iter().map(|(_, p)| &p.plan).collect();
-        plan_refs.extend(resizes.iter().map(|s| &s.plan));
-        let prices = price_plans(&plan_refs, opts.workers);
-        let (start_prices, resize_prices) = prices.split_at(placed.len());
-
-        // Apply resizes (victims keep running at their new rate after
-        // the migration penalty; the partially-done step restarts).
-        for (s, &iter_new) in resizes.iter().zip(resize_prices) {
-            let r = &mut running[s.running_idx];
-            let freed: usize = s.freed.iter().map(|&(_, n)| n).sum();
-            let base = t.max(r.seg_start); // a victim mid-migration resumes later
-            let done = if base > r.seg_start && r.iteration_seconds > 0.0 {
-                (((base - r.seg_start) / r.iteration_seconds).floor() as u64)
-                    .min(r.steps_remaining)
-            } else {
-                0
-            };
-            segments.push((r.held, r.seg_start, base));
-            r.steps_remaining -= done;
-            r.held -= freed;
-            r.plan = s.plan.clone();
-            r.iteration_seconds = iter_new;
-            r.seg_start = base + s.migrate_seconds;
-            r.finish = r.seg_start + r.steps_remaining as f64 * iter_new;
-            for &(kind, n) in &s.freed {
-                r.shed(kind, n);
-            }
-            events.push(FleetEvent {
-                t_seconds: t,
-                job: r.id,
-                kind: FleetEventKind::Resize {
-                    freed_chips: freed,
-                    iteration_seconds: iter_new,
-                    migrate_seconds: s.migrate_seconds,
-                },
-            });
-        }
-
-        // Apply placements.
-        for ((pi, p), &iter) in placed.iter().zip(start_prices) {
-            let job = &trace.jobs[*pi];
-            pending.retain(|&x| x != *pi);
-            outcomes[*pi].wait_seconds = Some(t - job.arrival_step as f64);
-            outcomes[*pi].chips = p.chips;
-            running.push(Running {
-                id: job.id,
-                ti: *pi,
-                priority: job.priority,
-                alloc: p.alloc.clone(),
-                held: p.chips,
-                plan: p.plan.clone(),
-                iteration_seconds: iter,
-                seg_start: t,
-                steps_remaining: job.steps,
-                finish: t + job.steps as f64 * iter,
-            });
-            events.push(FleetEvent {
-                t_seconds: t,
-                job: job.id,
-                kind: FleetEventKind::Start { chips: p.chips, iteration_seconds: iter },
-            });
-        }
+        st.placement_round(t, next_fault < faults.events.len())?;
     }
 
-    // Metrics.
-    let makespan = events.last().map(|e| e.t_seconds).unwrap_or(0.0);
-    let mut waits: Vec<f64> = outcomes.iter().filter_map(|o| o.wait_seconds).collect();
+    // Metrics. Makespan is the last *non-fault* event: trailing recover
+    // events on an already-drained fleet do not stretch the window the
+    // utilization and goodput denominators are measured over.
+    let makespan = st
+        .events
+        .iter()
+        .rev()
+        .find(|e| !matches!(e.kind, FleetEventKind::Fault { .. }))
+        .map(|e| e.t_seconds)
+        .unwrap_or(0.0);
+    let mut waits: Vec<f64> = st.outcomes.iter().filter_map(|o| o.wait_seconds).collect();
     waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let chip_seconds: f64 = segments.iter().map(|&(c, t0, t1)| c as f64 * (t1 - t0)).sum();
+    let chip_seconds: f64 = st.segments.iter().map(|&(c, t0, t1)| c as f64 * (t1 - t0)).sum();
     let denom = cluster.total_chips() as f64 * makespan;
     let metrics = FleetMetrics {
         jobs: trace.jobs.len(),
-        completed: outcomes.iter().filter(|o| o.finish_seconds.is_some()).count(),
-        rejected,
-        preemptions,
+        completed: st.outcomes.iter().filter(|o| o.finish_seconds.is_some()).count(),
+        rejected: st.rejected,
+        preemptions: st.preemptions,
         makespan_seconds: makespan,
         mean_wait_seconds: if waits.is_empty() { 0.0 } else { stats::mean(&waits) },
         p99_wait_seconds: if waits.is_empty() { 0.0 } else { stats::percentile(&waits, 0.99) },
         chip_seconds,
         utilization: if denom > 0.0 { chip_seconds / denom } else { 0.0 },
+        faults: st
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FleetEventKind::Fault { .. }))
+            .count(),
+        dead_chips: st.pool.dead_total(),
+        recomputed_steps: st.recomputed_steps_total,
+        recovery_seconds_total: st.recovery_seconds_total,
+        goodput_fraction: if denom > 0.0 { st.productive_chip_seconds / denom } else { 0.0 },
     };
     Ok(FleetTimeline {
         policy: opts.policy,
         trace_seed: trace.seed,
         cluster: cluster.name.clone(),
         total_chips: cluster.total_chips(),
-        events,
-        jobs: outcomes,
+        events: st.events,
+        jobs: st.outcomes,
         metrics,
     })
 }
 
-impl Running {
-    /// Record `n` chips of `kind` as no longer held after a resize.
-    fn shed(&mut self, kind: ChipKind, n: usize) {
-        if let Some(slot) = self.alloc.iter_mut().find(|(k, _)| *k == kind) {
-            slot.1 -= n.min(slot.1);
-        }
-        self.alloc.retain(|&(_, n)| n > 0);
-    }
-}
-
 /// Queue order for one placement round, per policy. FIFO is
 /// `(arrival, id)`; priority-with-backfill is
-/// `(priority desc, arrival, id)`.
-fn queue_order(policy: Policy, trace: &JobTrace, pending: &[usize]) -> Vec<usize> {
+/// `(priority desc, arrival, id)`. Requeued jobs keep their original
+/// arrival, so they keep their slot.
+fn queue_order(policy: Policy, specs: &[JobSpec], pending: &[usize]) -> Vec<usize> {
     let mut order = pending.to_vec();
     match policy {
-        Policy::Fifo => order.sort_by_key(|&i| (trace.jobs[i].arrival_step, trace.jobs[i].id)),
+        Policy::Fifo => order.sort_by_key(|&i| (specs[i].arrival_step, specs[i].id)),
         Policy::PriorityBackfill => order.sort_by_key(|&i| {
-            let j = &trace.jobs[i];
+            let j = &specs[i];
             (u8::MAX - j.priority, j.arrival_step, j.id)
         }),
     }
     order
 }
 
-fn reject(
-    job_id: usize,
-    t: f64,
-    pending: &mut Vec<usize>,
-    pi: usize,
-    events: &mut Vec<FleetEvent>,
-    rejected: &mut usize,
-) {
-    pending.retain(|&x| x != pi);
-    events.push(FleetEvent { t_seconds: t, job: job_id, kind: FleetEventKind::Reject });
-    *rejected += 1;
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_response_tokens_roundtrip() {
+        for r in [FaultResponse::Cascade, FaultResponse::RestartAlways] {
+            assert_eq!(FaultResponse::parse(r.token()).unwrap(), r);
+        }
+        assert_eq!(FaultResponse::parse("restart-always").unwrap(), FaultResponse::RestartAlways);
+        assert!(FaultResponse::parse("panic").is_err());
+    }
+
+    #[test]
+    fn node_ledger_tracks_ownership_death_and_revival() {
+        let cluster = Cluster::new("lab", vec![(ChipKind::A, 64), (ChipKind::B, 64)]);
+        let mut l = NodeLedger::new(&cluster);
+        assert_eq!(l.cpn(ChipKind::A), 16, "A nodes are 16 chips");
+        assert_eq!(l.cpn(ChipKind::B), 8, "B nodes are 8 chips");
+        l.assign(ChipKind::B, 3, 7);
+        assert_eq!(l.owner(ChipKind::B, 0), NodeOwner::Job(7), "lowest free indices first");
+        assert_eq!(l.owner(ChipKind::B, 2), NodeOwner::Job(7));
+        assert_eq!(l.owner(ChipKind::B, 3), NodeOwner::Free);
+        // Kill an owned node and a free node; a second strike is a no-op.
+        assert_eq!(l.kill(ChipKind::B, 1), NodeOwner::Job(7));
+        assert_eq!(l.kill(ChipKind::B, 5), NodeOwner::Free);
+        assert_eq!(l.kill(ChipKind::B, 5), NodeOwner::Dead);
+        // Shrink frees the highest-index held node.
+        l.free_some(ChipKind::B, 1, 7);
+        assert_eq!(l.owner(ChipKind::B, 2), NodeOwner::Free);
+        assert_eq!(l.owner(ChipKind::B, 0), NodeOwner::Job(7));
+        // A full release leaves dead nodes dead.
+        l.free_all(7);
+        assert_eq!(l.owner(ChipKind::B, 0), NodeOwner::Free);
+        assert_eq!(l.owner(ChipKind::B, 1), NodeOwner::Dead, "death survives a release");
+        assert!(l.revive(ChipKind::B, 1));
+        assert_eq!(l.owner(ChipKind::B, 1), NodeOwner::Free);
+        assert!(!l.revive(ChipKind::B, 1), "revive only acts on dead nodes");
+    }
 }

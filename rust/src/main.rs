@@ -30,7 +30,7 @@ use h2::costmodel::{
     profile_layer, tgs, uniform_1f1b, ModelShape, ProfileCache, Schedule, H2_100B, H2_MOE,
 };
 use h2::elastic::FaultPlan;
-use h2::fleet::{fleet_search_config, FleetOptions, JobTrace, Policy};
+use h2::fleet::{fleet_search_config, ClusterFaultPlan, FaultResponse, FleetOptions, JobTrace, Policy};
 use h2::hetero::{experiment, spec, ChipKind, Cluster};
 use h2::plan::{render_errors, ExecutionPlan};
 use h2::precision::check_alignment;
@@ -100,6 +100,8 @@ fn print_help() {
     println!("  profile     [--chip A] [--dp 4]");
     println!("  fleet       --exp exp-mega --trace <json|seed|pinned> [--policy fifo|priority]");
     println!("              [--jobs 12] [--workers N] [--schedule 1f1b|...] [--sequential]");
+    println!("              [--faults <json|seed|pinned>]  cluster fault script");
+    println!("              [--fault-response cascade|restart] [--ckpt-every 5]");
     println!("              [--emit-trace trace.json] [--out timeline.json]");
     println!("  report      table6 | fig11 | elastic | fleet [--exp exp-mega]");
 }
@@ -775,7 +777,31 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         search.parallel = false;
     }
     let workers = args.usize_or("workers", fleet_cfg.workers.unwrap_or(0))?;
-    let opts = FleetOptions { policy, workers, search };
+    let response = match args.get("fault-response") {
+        Some(tok) => FaultResponse::parse(tok)?,
+        None => FaultResponse::default(),
+    };
+    let checkpoint_every = args.usize_or("ckpt-every", 5)? as u64;
+    let base = FleetOptions { policy, workers, search, faults: None, response, checkpoint_every };
+    // `--faults` takes a JSON fault-plan file, a decimal seed for the
+    // generator, or `pinned` for the contrast scenario derived from a
+    // healthy run of the same trace.
+    let faults_tok = args.get("faults").map(str::to_string).or_else(|| fleet_cfg.faults.clone());
+    let opts = match faults_tok.as_deref() {
+        Some("pinned") => {
+            let healthy = h2::fleet::run(&cluster, &trace, &base)?;
+            let plan = ClusterFaultPlan::pinned_for(&cluster, &healthy)?;
+            FleetOptions { faults: Some(plan), ..base }
+        }
+        Some(tok) => {
+            let plan = match tok.parse::<u64>() {
+                Ok(seed) => ClusterFaultPlan::generate(seed, &cluster, trace.horizon_seconds()),
+                Err(_) => ClusterFaultPlan::load(tok)?,
+            };
+            FleetOptions { faults: Some(plan), ..base }
+        }
+        None => base,
+    };
     let timeline = h2::fleet::run(&cluster, &trace, &opts)?;
 
     let mut t = Table::new(&["job", "prio", "arrival", "wait", "finish", "chips"])
@@ -804,6 +830,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fmt_duration(m.makespan_seconds), fmt_duration(m.p99_wait_seconds),
         100.0 * m.utilization
     );
+    if opts.faults.is_some() {
+        println!(
+            "{} fault events ({} response); {} chips still dead, {} steps recomputed, \
+             recovery {} total, goodput {:.1}%",
+            m.faults, opts.response.token(), m.dead_chips, m.recomputed_steps,
+            fmt_duration(m.recovery_seconds_total), 100.0 * m.goodput_fraction
+        );
+    }
     if let Some(path) = args.get("out") {
         timeline.save(path)?;
         println!("timeline written to {path}");
@@ -818,6 +852,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("fleet_mean_wait_seconds {:.17e}", m.mean_wait_seconds);
     println!("fleet_p99_wait_seconds {:.17e}", m.p99_wait_seconds);
     println!("fleet_utilization {:.17e}", m.utilization);
+    println!("fleet_faults {}", m.faults);
+    println!("fleet_dead_chips {}", m.dead_chips);
+    println!("fleet_recomputed_steps {}", m.recomputed_steps);
+    println!("fleet_recovery_seconds {:.17e}", m.recovery_seconds_total);
+    println!("fleet_goodput {:.17e}", m.goodput_fraction);
     Ok(())
 }
 
@@ -891,7 +930,8 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         "fleet" => {
             let exp_name = args.str_or("exp", "exp-mega");
-            let rows = h2::report::fleet_metrics(&exp_name, args.usize_or("workers", 0)?)?;
+            let workers = args.usize_or("workers", 0)?;
+            let rows = h2::report::fleet_metrics(&exp_name, workers)?;
             let mut t = Table::new(&["policy", "completed", "rejected", "preempt",
                                      "makespan", "mean wait", "p99 wait", "util"])
                 .with_title(&format!("Fleet policies on `{exp_name}` — pinned trace"));
@@ -906,6 +946,25 @@ fn cmd_report(args: &Args) -> Result<()> {
                     fmt_duration(m.mean_wait_seconds),
                     fmt_duration(m.p99_wait_seconds),
                     format!("{:.1}%", 100.0 * m.utilization),
+                ]);
+            }
+            t.print();
+            let rows = h2::report::fleet_fault_metrics(&exp_name, workers)?;
+            let mut t = Table::new(&["run", "completed", "makespan", "recomputed",
+                                     "recovery", "util", "goodput"])
+                .with_title(&format!(
+                    "Fleet faults on `{exp_name}` — pinned fault plan, FIFO, ckpt every 10"
+                ));
+            for row in &rows {
+                let m = &row.metrics;
+                t.row(vec![
+                    row.label.to_string(),
+                    format!("{}/{}", m.completed, m.jobs),
+                    fmt_duration(m.makespan_seconds),
+                    m.recomputed_steps.to_string(),
+                    fmt_duration(m.recovery_seconds_total),
+                    format!("{:.1}%", 100.0 * m.utilization),
+                    format!("{:.1}%", 100.0 * m.goodput_fraction),
                 ]);
             }
             t.print();

@@ -422,14 +422,54 @@ pub struct FleetPolicyRow {
 /// relationship the comparison exists to show: priority-with-backfill
 /// beats FIFO on p99 job wait.
 pub fn fleet_metrics(exp_name: &str, workers: usize) -> Result<Vec<FleetPolicyRow>> {
-    use crate::fleet::{fleet_search_config, run, FleetOptions, JobTrace, Policy};
+    use crate::fleet::{run, FleetOptions, JobTrace, Policy};
     let exp = experiment(exp_name)?;
     let trace = JobTrace::pinned(exp.cluster.total_chips());
     let mut rows = Vec::new();
     for policy in [Policy::Fifo, Policy::PriorityBackfill] {
-        let opts = FleetOptions { policy, workers, search: fleet_search_config() };
+        let opts = FleetOptions { policy, workers, ..FleetOptions::default() };
         let timeline = run(&exp.cluster, &trace, &opts)?;
         rows.push(FleetPolicyRow { policy, metrics: timeline.metrics });
+    }
+    Ok(rows)
+}
+
+/// One labeled fleet run in the faulty-vs-healthy comparison behind
+/// `h2 report fleet` (and EXPERIMENTS.md §Fleet-faults).
+#[derive(Clone, Debug)]
+pub struct FleetFaultRow {
+    /// Which run this is: `healthy`, `cascade`, or `restart`.
+    pub label: &'static str,
+    /// The fleet metrics the run produced.
+    pub metrics: crate::fleet::FleetMetrics,
+}
+
+/// Run the pinned fleet trace on `exp_name` healthy, then under the
+/// pinned cluster fault plan with the graceful-degradation cascade, then
+/// under the same faults with the restart-every-victim baseline — the
+/// side-by-side that shows what the cascade buys. Deterministic for any
+/// `workers`. The contrast uses a 10-step checkpoint grid so the
+/// requeued job has real recompute to pay.
+pub fn fleet_fault_metrics(exp_name: &str, workers: usize) -> Result<Vec<FleetFaultRow>> {
+    use crate::fleet::{run, ClusterFaultPlan, FaultResponse, FleetOptions, JobTrace, Policy};
+    let exp = experiment(exp_name)?;
+    let trace = JobTrace::pinned(exp.cluster.total_chips());
+    let base = FleetOptions {
+        policy: Policy::Fifo,
+        workers,
+        checkpoint_every: 10,
+        ..FleetOptions::default()
+    };
+    let healthy = run(&exp.cluster, &trace, &base)?;
+    let faults = ClusterFaultPlan::pinned_for(&exp.cluster, &healthy)?;
+    let mut rows = vec![FleetFaultRow { label: "healthy", metrics: healthy.metrics }];
+    for (label, response) in
+        [("cascade", FaultResponse::Cascade), ("restart", FaultResponse::RestartAlways)]
+    {
+        let opts =
+            FleetOptions { faults: Some(faults.clone()), response, ..base.clone() };
+        let timeline = run(&exp.cluster, &trace, &opts)?;
+        rows.push(FleetFaultRow { label, metrics: timeline.metrics });
     }
     Ok(rows)
 }

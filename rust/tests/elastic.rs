@@ -208,3 +208,138 @@ fn kill_a_chip_at_step_n_recovers_bit_identically_and_beats_restart() {
         );
     }
 }
+
+/// A transient slowdown that heals before the reaction grace window
+/// closes must cancel the pending re-plan: the `Recovered` event is the
+/// cancellation signal, driven end-to-end through `train_virtual`'s
+/// heartbeat stream rather than hand-fed observations.
+#[test]
+fn recovered_event_cancels_a_pending_straggler_reaction() {
+    let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+    let cfg = MonitorConfig::default();
+    // Stage 1 runs 2x slow on steps 1..3, then heals. 2.0 clears the
+    // default 1.3 straggler threshold with margin.
+    let faults = FaultPlan {
+        seed: 7,
+        events: vec![
+            FaultEvent { step: 1, stage: 1, kind: FaultKind::Slowdown { factor: 2.0 } },
+            FaultEvent { step: 3, stage: 1, kind: FaultKind::Recover },
+        ],
+    };
+    let r = train_virtual(
+        &plan,
+        &VirtualOptions { steps: STEPS, faults: Some(faults), ..Default::default() },
+    )
+    .unwrap();
+
+    // Reaction policy under test: a Straggler arms a re-plan after a
+    // grace window of debounce + 1 further steps; a Recovered event that
+    // arrives first cancels it.
+    let mut monitor = StepMonitor::for_plan(&plan).unwrap();
+    let mut pending_replan_at: Option<usize> = None;
+    let mut straggler_step = None;
+    let mut recovered_step = None;
+    let mut replans = 0usize;
+    for step in 0..STEPS {
+        if pending_replan_at == Some(step) {
+            replans += 1;
+            pending_replan_at = None;
+        }
+        for stage in 0..monitor.stages() {
+            let obs = r.stage_compute_seconds[stage][step];
+            match monitor.observe(stage, 0, Some(obs)) {
+                Some(ElasticEvent::Straggler { stage: s, .. }) => {
+                    assert_eq!(s, 1, "only the faulty stage may straggle");
+                    straggler_step = Some(step);
+                    pending_replan_at = Some(step + cfg.debounce + 1);
+                }
+                Some(ElasticEvent::Recovered { stage: s, .. }) => {
+                    assert_eq!(s, 1);
+                    recovered_step = Some(step);
+                    pending_replan_at = None;
+                }
+                Some(other) => panic!("unexpected event at step {step}: {other:?}"),
+                None => {}
+            }
+        }
+    }
+    // Slow steps 1, 2 → Straggler fires at step 2 (debounce 2); healthy
+    // steps 3, 4 → Recovered at step 4, one step before the armed
+    // re-plan at step 5 would have triggered.
+    assert_eq!(straggler_step, Some(1 + cfg.debounce - 1));
+    assert_eq!(recovered_step, Some(3 + cfg.debounce - 1));
+    assert_eq!(replans, 0, "the healed straggler must not trigger a re-plan");
+    assert_eq!(pending_replan_at, None);
+}
+
+/// A NIC degradation is invisible in the compute heartbeat (the honest
+/// monitoring gap) but observable in the full-step stream — and the
+/// straggler debounce boundary is exact on that stream.
+#[test]
+fn nic_degrade_is_observed_at_exactly_the_debounce_boundary() {
+    const RUN: usize = 4;
+    let plan = fixture(Schedule::OneF1B, CommAlgo::Ring);
+    let healthy =
+        train_virtual(&plan, &VirtualOptions { steps: RUN, ..Default::default() }).unwrap();
+    let faults = FaultPlan {
+        seed: 8,
+        events: vec![FaultEvent {
+            step: 0,
+            stage: 1,
+            kind: FaultKind::NicDegrade { factor: 3.0 },
+        }],
+    };
+    let degraded = train_virtual(
+        &plan,
+        &VirtualOptions { steps: RUN, faults: Some(faults), ..Default::default() },
+    )
+    .unwrap();
+
+    // Compute is untouched — bitwise — so a compute-fed monitor is blind.
+    assert_eq!(degraded.stage_compute_seconds, healthy.stage_compute_seconds);
+    let mut blind = StepMonitor::for_plan(&plan).unwrap();
+    for step in 0..RUN {
+        for stage in 0..blind.stages() {
+            let obs = degraded.stage_compute_seconds[stage][step];
+            assert_eq!(blind.observe(stage, 0, Some(obs)), None, "compute stream must be silent");
+        }
+    }
+
+    // The full-step stream sees it: stage 1's exposed DP-sync slice is
+    // 3x, stage 0's is untouched (bitwise).
+    assert_eq!(degraded.stage_step_seconds[0], healthy.stage_step_seconds[0]);
+    let ratio = degraded.stage_step_seconds[1][0] / healthy.stage_step_seconds[1][0];
+    assert!(ratio > 1.0, "NIC degradation must stretch the full step: ratio {ratio}");
+
+    // A monitor whose baseline is the healthy full-step time and whose
+    // threshold sits just under the observed ratio fires on exactly the
+    // debounce-th observation — and just above it, never.
+    let expected: Vec<f64> =
+        (0..2).map(|stage| healthy.stage_step_seconds[stage][0]).collect();
+    let debounce = 2;
+    let mut armed = StepMonitor::new(
+        expected.clone(),
+        1,
+        MonitorConfig { straggler_factor: ratio * 0.999, debounce },
+    );
+    let mut fired_at = None;
+    for step in 0..RUN {
+        let e = armed.observe(1, 0, Some(degraded.stage_step_seconds[1][step]));
+        if let Some(ev) = e {
+            assert!(matches!(ev, ElasticEvent::Straggler { stage: 1, dp_rank: 0, .. }), "{ev:?}");
+            assert_eq!(fired_at, None, "must fire exactly once");
+            fired_at = Some(step);
+        }
+    }
+    assert_eq!(fired_at, Some(debounce - 1), "fires on the debounce-th observation");
+
+    let mut above = StepMonitor::new(
+        expected,
+        1,
+        MonitorConfig { straggler_factor: ratio * 1.001, debounce },
+    );
+    for step in 0..RUN {
+        let e = above.observe(1, 0, Some(degraded.stage_step_seconds[1][step]));
+        assert_eq!(e, None, "a threshold above the ratio must stay silent");
+    }
+}

@@ -8,8 +8,8 @@ use std::path::PathBuf;
 use std::process::Command;
 
 use h2::fleet::{
-    fleet_search_config, run, FleetEventKind, FleetOptions, FleetTimeline, FreePool, JobModel,
-    JobSpec, JobTrace, PlaceOutcome, Policy, Scheduler,
+    fleet_search_config, run, ClusterFaultPlan, FaultResponse, FleetEventKind, FleetOptions,
+    FleetTimeline, FreePool, JobModel, JobSpec, JobTrace, PlaceOutcome, Policy, Scheduler,
 };
 use h2::hetero::{spec, ChipKind, Cluster};
 
@@ -159,6 +159,137 @@ fn failed_preemption_shrink_leaves_the_free_pool_untouched() {
     assert_eq!(pool, FreePool::new(&cluster));
 }
 
+// ---------------------------------------------------------------------
+// Cluster faults: the graceful-degradation cascade end to end.
+
+#[test]
+fn cluster_faults_cascade_recovers_in_place_requeues_and_beats_restart() {
+    let cluster = lab();
+    let trace = JobTrace::pinned(cluster.total_chips());
+    // A 10-step checkpoint grid gives the requeued job real recompute to
+    // pay, so the cascade-vs-restart contrast has room to show.
+    let base = FleetOptions {
+        policy: Policy::Fifo,
+        workers: 1,
+        checkpoint_every: 10,
+        ..FleetOptions::default()
+    };
+    let healthy = run(&cluster, &trace, &base).expect("healthy run");
+    assert_eq!(healthy.metrics.completed, trace.jobs.len());
+    assert_eq!(healthy.metrics.faults, 0);
+    assert_eq!(healthy.metrics.recomputed_steps, 0);
+    // A healthy run wastes nothing: goodput equals utilization (up to fp
+    // accumulation order).
+    assert!(
+        (healthy.metrics.goodput_fraction - healthy.metrics.utilization).abs() < 1e-9,
+        "healthy goodput {} != utilization {}",
+        healthy.metrics.goodput_fraction,
+        healthy.metrics.utilization
+    );
+
+    let faults = ClusterFaultPlan::pinned_for(&cluster, &healthy).expect("pinned fault plan");
+    let cascade_opts = FleetOptions { faults: Some(faults.clone()), ..base.clone() };
+    let cascade = run(&cluster, &trace, &cascade_opts).expect("cascade run");
+
+    // Every job still completes under the cascade...
+    assert_eq!(cascade.metrics.completed, trace.jobs.len(), "{:?}", cascade.metrics);
+    assert_eq!(cascade.metrics.rejected, 0);
+    assert!(cascade.metrics.faults > 0);
+    assert!(cascade.metrics.recovery_seconds_total > 0.0);
+    assert!(cascade.metrics.goodput_fraction > 0.0);
+    assert!(
+        cascade.metrics.goodput_fraction < cascade.metrics.utilization,
+        "faulty goodput must fall below utilization"
+    );
+
+    // ...but along the two distinct cascade paths the pinned plan was
+    // authored for: job 0 loses one node and recovers *in place* (replan
+    // or fault-shrink, never a requeue); job 1 loses a whole chip group
+    // and can only requeue from its checkpoint.
+    let job0: Vec<_> = cascade.events.iter().filter(|e| e.job == 0).collect();
+    assert!(
+        job0.iter().any(|e| matches!(
+            e.kind,
+            FleetEventKind::Replan { .. } | FleetEventKind::FaultShrink { .. }
+        )),
+        "job 0 must recover in place: {job0:?}"
+    );
+    assert!(
+        !job0.iter().any(|e| matches!(e.kind, FleetEventKind::Requeue { .. })),
+        "job 0 must not requeue: {job0:?}"
+    );
+    let job1: Vec<_> = cascade.events.iter().filter(|e| e.job == 1).collect();
+    assert!(
+        job1.iter().any(|e| matches!(e.kind, FleetEventKind::Requeue { .. })),
+        "job 1 must requeue from checkpoint: {job1:?}"
+    );
+    assert!(cascade.metrics.recomputed_steps > 0, "the requeue rolls back steps");
+
+    // Determinism: bit-identical timelines across repeats and worker
+    // counts, faults included.
+    let again = run(&cluster, &trace, &cascade_opts).expect("repeat");
+    assert_eq!(cascade.to_json_string(), again.to_json_string(), "repeat determinism");
+    let wide = run(
+        &cluster,
+        &trace,
+        &FleetOptions { workers: 4, ..cascade_opts.clone() },
+    )
+    .expect("4-worker run");
+    assert_eq!(cascade.to_json_string(), wide.to_json_string(), "worker-count invariance");
+
+    // The cascade must beat the restart-every-victim baseline by a real
+    // margin on goodput and finish sooner: that gap is what the in-place
+    // rungs exist to buy.
+    let restart = run(
+        &cluster,
+        &trace,
+        &FleetOptions {
+            faults: Some(faults),
+            response: FaultResponse::RestartAlways,
+            ..base
+        },
+    )
+    .expect("restart baseline");
+    assert_eq!(restart.metrics.completed, trace.jobs.len(), "{:?}", restart.metrics);
+    assert!(
+        cascade.metrics.goodput_fraction >= restart.metrics.goodput_fraction + 0.02,
+        "cascade goodput {} must beat restart goodput {} by ≥ 0.02",
+        cascade.metrics.goodput_fraction,
+        restart.metrics.goodput_fraction
+    );
+    assert!(
+        cascade.metrics.makespan_seconds < restart.metrics.makespan_seconds,
+        "cascade makespan {} must beat restart makespan {}",
+        cascade.metrics.makespan_seconds,
+        restart.metrics.makespan_seconds
+    );
+    assert!(
+        restart.metrics.recomputed_steps > cascade.metrics.recomputed_steps,
+        "restarting every victim must recompute more: restart {} vs cascade {}",
+        restart.metrics.recomputed_steps,
+        cascade.metrics.recomputed_steps
+    );
+}
+
+#[test]
+fn generated_cluster_faults_run_deterministically() {
+    // The seeded generator path end to end: degradations, one node
+    // death, recoveries — same seed, same timeline, and dead capacity
+    // returns to the pool on recovery.
+    let cluster = Cluster::new("solo", vec![(ChipKind::A, 64)]);
+    let trace = JobTrace::generate(7, 5, cluster.total_chips());
+    let faults = ClusterFaultPlan::generate(11, &cluster, trace.horizon_seconds());
+    let opts = FleetOptions { faults: Some(faults), workers: 1, ..FleetOptions::default() };
+    let a = run(&cluster, &trace, &opts).expect("faulty generated run");
+    let b = run(&cluster, &trace, &opts).expect("repeat");
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    assert!(a.metrics.faults > 0);
+    assert_eq!(
+        a.metrics.dead_chips, 0,
+        "the generated plan recovers its one death before the horizon"
+    );
+}
+
 #[test]
 fn oversized_jobs_are_rejected_up_front() {
     let cluster = Cluster::new("solo", vec![(ChipKind::A, 64)]);
@@ -243,4 +374,41 @@ fn fleet_cli_round_trips_a_trace_file() {
         .output()
         .unwrap();
     assert!(!out.status.success(), "bad --policy must be rejected");
+}
+
+#[test]
+fn fleet_cli_faulty_timelines_are_byte_identical_across_repeats() {
+    let dir = tmp_dir("faults");
+    let out_a = dir.join("a.json");
+    let out_a = out_a.to_str().unwrap();
+    let out_b = dir.join("b.json");
+    let out_b = out_b.to_str().unwrap();
+
+    // `--faults pinned` derives the fault plan from a silent healthy
+    // prerun of the same trace — the whole pipeline must be a pure
+    // function of (cluster, trace, flags).
+    let args = [
+        "fleet", "--cluster", "A=64,B=64", "--trace", "pinned",
+        "--faults", "pinned", "--ckpt-every", "10",
+    ];
+    let stdout = run_ok(h2_bin().args(args).args(["--out", out_a]));
+    assert_ne!(parse_line(&stdout, "fleet_faults "), "0");
+    let goodput = parse_line(&stdout, "fleet_goodput ").to_string();
+    let recovery = parse_line(&stdout, "fleet_recovery_seconds ").to_string();
+
+    let stdout = run_ok(h2_bin().args(args).args(["--out", out_b]));
+    assert_eq!(parse_line(&stdout, "fleet_goodput "), goodput);
+    assert_eq!(parse_line(&stdout, "fleet_recovery_seconds "), recovery);
+    let a = std::fs::read_to_string(out_a).unwrap();
+    let b = std::fs::read_to_string(out_b).unwrap();
+    assert_eq!(a, b, "faulty timeline files must be byte-identical");
+    assert!(a.contains("\"fault\""), "timeline must carry fault events");
+
+    // The restart baseline is a different, valid run of the same faults.
+    let stdout = run_ok(h2_bin().args(args).args(["--fault-response", "restart"]));
+    assert_ne!(parse_line(&stdout, "fleet_goodput "), goodput, "responses must differ");
+
+    // A bogus response token fails loudly.
+    let out = h2_bin().args(args).args(["--fault-response", "bogus"]).output().unwrap();
+    assert!(!out.status.success(), "bad --fault-response must be rejected");
 }
